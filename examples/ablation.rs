@@ -1,0 +1,40 @@
+//! Ablation driver (Tables I, II, III): baseline -> conversion -> naive
+//! fusion -> RCNet -> quantization, for YOLOv2 / DeepLabv3 / VGG16.
+//!
+//!     cargo run --release --example ablation -- --net yolov2|deeplabv3|vgg16
+
+use rcnet_dla::model::Network;
+use rcnet_dla::report::tables::TableBuilder;
+use rcnet_dla::report::ablation::{ablation_rows, AblationTask};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let net = args
+        .iter()
+        .position(|a| a == "--net")
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+        .unwrap_or("yolov2");
+    let task = match net {
+        "deeplabv3" => AblationTask::DeepLabV3,
+        "vgg16" => AblationTask::Vgg16,
+        _ => AblationTask::Yolov2,
+    };
+    let rows = ablation_rows(task);
+    let mut t = TableBuilder::new(&format!("{} ablation ({})", task.name(), task.setting()))
+        .header(&["variant", "acc (proxy)", "GFLOPs", "params (M)", "feat I/O (MB)", "groups"]);
+    for r in rows {
+        t.row(vec![
+            r.variant,
+            format!("{:.1}", r.accuracy),
+            format!("{:.2}", r.gflops),
+            format!("{:.3}", r.params_m),
+            format!("{:.2}", r.feat_io_mb),
+            r.groups.map_or("-".into(), |g| g.to_string()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("paper rows — see EXPERIMENTS.md for side-by-side and the accuracy-proxy definition");
+    let _unused: Option<Network> = None;
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): streams synthetic HD-style
+//! traffic scenes through the *real* three-layer stack — rust coordinator
+//! -> PJRT-compiled fusion-group executables (Pallas kernels inside) ->
+//! decode/NMS/mAP — while the DLA cycle model reports what the same
+//! frames cost on the chip at the paper's true HD resolution.
+//!
+//! Requires `make artifacts` (and ideally `make train` first so the
+//! detector actually detects).
+//!
+//!     cargo run --release --example e2e_detection -- [frames] [--fps 30]
+
+use rcnet_dla::config::ChipConfig;
+use rcnet_dla::coordinator::{run_with_runtime, PipelineConfig};
+use rcnet_dla::dla::simulate_fused;
+use rcnet_dla::energy::{dram_energy_mj, ChipPowerModel};
+use rcnet_dla::report::spec::spec_to_network;
+use rcnet_dla::runtime::Runtime;
+use rcnet_dla::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let frames: usize = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(24);
+    let paced = args.iter().any(|a| a == "--fps");
+
+    println!("== loading artifacts ==");
+    let rt = Runtime::load("artifacts/manifest.json")?;
+    println!(
+        "platform {}, {} fusion groups, input {}x{}, weights: {}",
+        rt.platform(),
+        rt.groups.len(),
+        rt.manifest.input_hw.1,
+        rt.manifest.input_hw.0,
+        if rt.manifest.trained { "trained" } else { "RANDOM (run `make train`)" }
+    );
+
+    let cfg = PipelineConfig {
+        frames,
+        target_fps: if paced { Some(30.0) } else { None },
+        ..Default::default()
+    };
+    println!("\n== running {} frames through PJRT ==", frames);
+    let report = run_with_runtime(&rt, &cfg)?;
+    println!("{report}");
+
+    // The chip-side story for the same network at true HD.
+    println!("\n== DLA cycle/traffic model at 1280x720 @ 30FPS ==");
+    let spec_txt = std::fs::read_to_string("artifacts/model_spec.json")?;
+    let spec = Json::parse(&spec_txt).map_err(|e| anyhow::anyhow!(e))?;
+    let (net, groups) = spec_to_network(&spec)?;
+    let chip = ChipConfig::paper_chip();
+    let (sim, _) = simulate_fused(&net, &groups, (720, 1280), &chip)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let traffic = sim.total_dram_bytes() as f64 * 30.0;
+    println!(
+        "chip latency {:.1} ms/frame ({:.1} FPS), PE util {:.0}%",
+        sim.latency_ms(),
+        sim.fps(),
+        100.0 * sim.mean_utilization(&chip)
+    );
+    println!(
+        "external traffic {:.0} MB/s (paper: 585), DRAM energy {:.0} mJ/s (paper: 327.6)",
+        traffic / 1e6,
+        dram_energy_mj(traffic as u64)
+    );
+    let power = ChipPowerModel::calibrated(sim.events_per_second(30.0))
+        .power(sim.events_per_second(30.0));
+    println!(
+        "core power model: {:.0} mW (mem {:.0}%, comb {:.0}%, reg {:.0}%, pads {:.0}%, clk {:.0}%)",
+        power.total_mw(),
+        100.0 * power.fractions()[0],
+        100.0 * power.fractions()[1],
+        100.0 * power.fractions()[2],
+        100.0 * power.fractions()[3],
+        100.0 * power.fractions()[4],
+    );
+    Ok(())
+}

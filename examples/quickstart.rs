@@ -1,0 +1,84 @@
+//! Quickstart: run the RCNet pipeline end-to-end *analytically* — no
+//! artifacts needed. Morphs YOLOv2 into the fusion-ready RC-YOLOv2,
+//! partitions it into fusion groups under the 96 KB weight buffer, and
+//! prints the paper's headline numbers (traffic reduction, DRAM energy,
+//! latency) from the counted models.
+//!
+//!     cargo run --release --example quickstart
+
+use rcnet_dla::config::{ChipConfig, Workload};
+use rcnet_dla::dla::{simulate_fused, simulate_layer_by_layer};
+use rcnet_dla::energy::dram_energy_mj;
+use rcnet_dla::fusion::{rcnet, validate_groups, FusionConfig, GammaSet, RcnetOptions};
+use rcnet_dla::model::zoo;
+use rcnet_dla::traffic::TrafficModel;
+use rcnet_dla::util::fmt_rate;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Baseline + lightweight conversion (§II-B).
+    let base = zoo::yolov2(3, 5);
+    let converted = zoo::yolov2_converted(3, 5);
+    println!(
+        "YOLOv2: {:.2}M params -> converted: {:.2}M params",
+        base.params() as f64 / 1e6,
+        converted.params() as f64 / 1e6
+    );
+
+    // 2. RCNet (Algorithm 1): morph to fit the 96 KB weight buffer.
+    let cfg = FusionConfig::paper_default();
+    let gammas = GammaSet::synthetic(&converted, 7);
+    let out = rcnet(
+        &converted,
+        &gammas,
+        &cfg,
+        &RcnetOptions { target_params: Some(1_020_000), ..Default::default() },
+    );
+    println!(
+        "RC-YOLOv2: {:.3}M params in {} fusion groups ({} channels pruned)",
+        out.params_after as f64 / 1e6,
+        out.groups.len(),
+        out.pruned_channels
+    );
+    let violations = validate_groups(&out.network, &out.groups, &cfg);
+    assert!(violations.is_empty(), "guideline violations: {violations:?}");
+
+    // 3. Traffic + energy at the paper's operating point (Table IV).
+    let wl = Workload::HD30;
+    let tm = TrafficModel::paper_chip();
+    let (lbl, fus) = tm.compare(&out.network, &out.groups, wl.hw, wl.fps);
+    println!("\n-- Table IV analog (1280x720 @ 30FPS) --");
+    println!(
+        "layer-by-layer: {}  ({:.0} mJ DRAM/s)",
+        fmt_rate(lbl.total_mb_s() * 1e6),
+        dram_energy_mj((lbl.total_mb_s() * 1e6) as u64)
+    );
+    println!(
+        "group-fused:    {}  ({:.0} mJ DRAM/s)",
+        fmt_rate(fus.total_mb_s() * 1e6),
+        dram_energy_mj((fus.total_mb_s() * 1e6) as u64)
+    );
+    println!(
+        "reduction: {:.1}x (paper: 7.9x, 4656 -> 585 MB/s)",
+        lbl.total_mb_s() / fus.total_mb_s()
+    );
+
+    // 4. Latency (the 30 FPS real-time claim).
+    let chip = ChipConfig::paper_chip();
+    let lbl_sim = simulate_layer_by_layer(&out.network, wl.hw, &chip);
+    let (fus_sim, _) = simulate_fused(&out.network, &out.groups, wl.hw, &chip)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    println!("\n-- DLA cycle model --");
+    println!(
+        "layer-by-layer: {:.1} ms/frame ({:.1} FPS)",
+        lbl_sim.latency_ms(),
+        lbl_sim.fps()
+    );
+    println!(
+        "group-fused:    {:.1} ms/frame ({:.1} FPS, PE util {:.0}%)",
+        fus_sim.latency_ms(),
+        fus_sim.fps(),
+        100.0 * fus_sim.mean_utilization(&chip)
+    );
+    println!("\nNext: `make artifacts` then `cargo run --release --example e2e_detection`");
+    Ok(())
+}

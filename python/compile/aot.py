@@ -1,0 +1,124 @@
+"""AOT lowering: per-fusion-group JAX functions (Pallas kernels inside)
+-> HLO TEXT artifacts + manifest.json for the rust runtime.
+
+HLO *text* is the interchange format, NOT `lowered.compiler_ir("hlo")
+.serialize()`: jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids that the rust side's xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md). Lowered with
+return_tuple=True, so the rust side unwraps with `to_tuple1()`.
+
+Weights are baked into the HLO as constants (the chip analog: the fusion
+group's weights are resident in the 96 KB weight buffer for the whole
+frame; the rust request path only streams feature tiles).
+
+Usage: python -m compile.aot --spec ../artifacts/model_spec.json \
+          --out-dir ../artifacts [--weights ../artifacts/weights.npz]
+          [--quantize]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import group_forward
+from .params import fake_quantize, init_params, load_params
+from .spec import load_spec
+from . import detect as DET
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default printer elides large constants as `{...}`,
+    # which the rust-side text parser fills with zeros — the baked
+    # weights would silently vanish. Print them in full.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # The rust side's older HLO parser (xla_extension 0.5.1) rejects newer
+    # metadata attributes (source_end_line etc.) — strip metadata.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def lower_group(spec, group, params, use_pallas=True):
+    h, w, c = group.in_shape
+
+    def fn(x):
+        return (group_forward(spec, group, params, x, use_pallas=use_pallas),)
+
+    x_spec = jax.ShapeDtypeStruct((h, w, c), jnp.float32)
+    return jax.jit(fn).lower(x_spec)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", default="../artifacts/model_spec.json")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--weights", default=None)
+    ap.add_argument("--quantize", action="store_true")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the jnp reference path instead of the Pallas kernels")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    spec = load_spec(args.spec)
+
+    weights_path = args.weights
+    if weights_path is None:
+        cand = out_dir / "weights.npz"
+        weights_path = str(cand) if cand.exists() else None
+    if weights_path:
+        params = load_params(weights_path)
+        trained = True
+        print(f"using trained weights from {weights_path}")
+    else:
+        params = init_params(spec, seed=0)
+        trained = False
+        print("using random-init weights (run compile.train for trained ones)")
+    if args.quantize:
+        params = fake_quantize(params, bits=8)
+
+    groups_meta = []
+    for g in spec.groups:
+        lowered = lower_group(spec, g, params, use_pallas=not args.no_pallas)
+        text = to_hlo_text(lowered)
+        fname = f"group_{g.id:02d}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        print(f"  {fname}: in {g.in_shape} out {g.out_shape} ({len(text)} chars)")
+        groups_meta.append(
+            {
+                "id": g.id,
+                "file": fname,
+                "in_shape": list(g.in_shape),
+                "out_shape": list(g.out_shape),
+                "tiles": g.tiles,
+                "tile_h": g.tile_h,
+            }
+        )
+
+    manifest = {
+        "name": spec.name,
+        "input_hw": list(spec.input_hw),
+        "classes": spec.classes,
+        "anchors": DET.ANCHORS,
+        "groups": groups_meta,
+        "trained": trained,
+        "quantized": bool(args.quantize),
+        "pallas": not args.no_pallas,
+        "spec": str(Path(args.spec).name),
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {out_dir / 'manifest.json'} ({len(groups_meta)} groups)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Synthetic HD traffic-scene generator — the IVS_3cls stand-in.
+
+The paper's HD dataset (IVS_3cls: road-traffic objects in 3 classes) is
+not public; this generator renders deterministic scenes of 3 geometric
+object classes on textured backgrounds. The *same* generator exists in
+rust (`rust/src/data/synthetic.rs`), driven by the same SplitMix64 stream
+in the same draw order, so the build-time trainer (python) and the
+serving/eval pipeline (rust) see identical scenes for a given seed —
+pytest and cargo test both pin golden values.
+
+Classes: 0 = box (car-like), 1 = disc (sign-like), 2 = wedge
+(pedestrian-like). Images are float32 HWC in [0, 1].
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Bit-exact mirror of rust `util::rng::Rng`."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+    def range(self, lo: int, hi: int) -> int:
+        return lo + self.next_u64() % (hi - lo)
+
+    def uniform(self, lo: float, hi: float) -> float:
+        return lo + self.f64() * (hi - lo)
+
+
+@dataclass
+class SceneObject:
+    cls: int
+    cx: float  # normalized center x
+    cy: float
+    w: float  # normalized width
+    h: float
+    shade: float
+
+
+def scene_objects(seed: int, max_objects: int = 6) -> list:
+    """Draw the scene parameter list — MUST stay in lockstep with
+    rust `data::synthetic::scene_objects`."""
+    rng = SplitMix64(seed)
+    n = 1 + rng.range(0, max_objects)
+    objs = []
+    for _ in range(n):
+        cls = rng.range(0, 3)
+        cx = rng.uniform(0.1, 0.9)
+        cy = rng.uniform(0.15, 0.85)
+        w = rng.uniform(0.06, 0.28)
+        h = rng.uniform(0.06, 0.28)
+        shade = rng.uniform(0.45, 1.0)
+        objs.append(SceneObject(int(cls), cx, cy, w, h, shade))
+    return objs
+
+
+def render(seed: int, h: int, w: int, max_objects: int = 6) -> tuple:
+    """Render (image (h, w, 3) float32, objects). Integer-arithmetic
+    texture so rust reproduces pixels exactly."""
+    objs = scene_objects(seed, max_objects)
+    ys, xs = np.mgrid[0:h, 0:w]
+    tex = ((xs * 7 + ys * 13) % 32).astype(np.float32) / 255.0
+    base = 0.25 + 0.5 * ((seed >> 8) % 64) / 64.0
+    img = np.stack([tex + base * 0.5, tex + base * 0.4, tex + base * 0.3], axis=-1)
+    for o in objs:
+        x0 = int((o.cx - o.w / 2) * w)
+        x1 = int((o.cx + o.w / 2) * w)
+        y0 = int((o.cy - o.h / 2) * h)
+        y1 = int((o.cy + o.h / 2) * h)
+        x0, x1 = max(x0, 0), min(x1, w - 1)
+        y0, y1 = max(y0, 0), min(y1, h - 1)
+        if x1 <= x0 or y1 <= y0:
+            continue
+        yy, xx = np.mgrid[y0 : y1 + 1, x0 : x1 + 1]
+        if o.cls == 0:  # box
+            mask = np.ones_like(yy, dtype=bool)
+        elif o.cls == 1:  # disc
+            cx_px, cy_px = (x0 + x1) / 2.0, (y0 + y1) / 2.0
+            rx, ry = max((x1 - x0) / 2.0, 1.0), max((y1 - y0) / 2.0, 1.0)
+            mask = ((xx - cx_px) / rx) ** 2 + ((yy - cy_px) / ry) ** 2 <= 1.0
+        else:  # wedge
+            fy = (yy - y0) / max(y1 - y0, 1)
+            cx_px = (x0 + x1) / 2.0
+            half = (x1 - x0) / 2.0
+            mask = np.abs(xx - cx_px) <= fy * half
+        # Class-coded dominant channel.
+        color = np.zeros(3, np.float32)
+        color[o.cls] = o.shade
+        color[(o.cls + 1) % 3] = o.shade * 0.25
+        region = img[y0 : y1 + 1, x0 : x1 + 1, :]
+        region[mask] = color
+    return np.clip(img, 0.0, 1.0).astype(np.float32), objs

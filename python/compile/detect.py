@@ -1,0 +1,53 @@
+"""YOLO-lite detection head semantics shared by the trainer (python) and
+the serving decoder (rust `detect::decode` mirrors `decode_cell`).
+
+Head output: (gh, gw, A*(5+C)) — per anchor: [tx, ty, tw, th, to,
+class logits...]. Box decode:
+  cx = (col + sigmoid(tx)) / gw          bw = anchor_w * exp(clip(tw))
+  cy = (row + sigmoid(ty)) / gh          bh = anchor_h * exp(clip(th))
+  objectness = sigmoid(to)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Normalized anchor sizes (w, h) — fixed, shared with rust detect::anchors.
+ANCHORS = [
+    (0.08, 0.10),
+    (0.18, 0.20),
+    (0.32, 0.32),
+    (0.45, 0.28),
+    (0.28, 0.45),
+]
+
+
+def best_anchor(w: float, h: float) -> int:
+    """Anchor with the closest size (L2 in wh space) — assignment rule,
+    identical in rust."""
+    d = [(w - aw) ** 2 + (h - ah) ** 2 for aw, ah in ANCHORS]
+    return int(np.argmin(d))
+
+
+def build_targets(objs, gh: int, gw: int, classes: int) -> tuple:
+    """Dense YOLO targets for one image.
+
+    Returns (tgt (gh, gw, A, 5+C), mask (gh, gw, A)) where tgt rows are
+    [tx*, ty*, log(w/aw), log(h/ah), 1, onehot...] for responsible cells.
+    """
+    a = len(ANCHORS)
+    tgt = np.zeros((gh, gw, a, 5 + classes), np.float32)
+    mask = np.zeros((gh, gw, a), np.float32)
+    for o in objs:
+        col = min(int(o.cx * gw), gw - 1)
+        row = min(int(o.cy * gh), gh - 1)
+        k = best_anchor(o.w, o.h)
+        aw, ah = ANCHORS[k]
+        tgt[row, col, k, 0] = o.cx * gw - col
+        tgt[row, col, k, 1] = o.cy * gh - row
+        tgt[row, col, k, 2] = np.log(max(o.w, 1e-3) / aw)
+        tgt[row, col, k, 3] = np.log(max(o.h, 1e-3) / ah)
+        tgt[row, col, k, 4] = 1.0
+        tgt[row, col, k, 5 + o.cls] = 1.0
+        mask[row, col, k] = 1.0
+    return tgt, mask

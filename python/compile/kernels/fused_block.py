@@ -1,0 +1,189 @@
+"""L1 — Pallas kernels for the chip's compute hot-spots.
+
+The chip executes a fusion group layer-by-layer out of its 2 x 192 KB
+unified ping-pong buffer; the TPU analog (DESIGN.md §Hardware-Adaptation)
+keeps a tile and its intermediate maps VMEM-resident inside one
+`pallas_call`. The headline kernel, :func:`fused_block`, computes the
+paper's proposed block (Fig. 1b) — depthwise 3x3 + BN + ReLU6, then
+pointwise 1x1 + BN, then the Fig. 8 residual — with the depthwise
+intermediate never leaving the kernel (= never leaving VMEM), exactly the
+traffic-avoidance the unified buffer provides in silicon.
+
+The pointwise stage is a `jnp.dot` so it lowers onto the MXU; the
+depthwise stage is shifted-slice VPU arithmetic.
+
+All kernels run with ``interpret=True``: the image's CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret-mode lowers to plain
+HLO that the rust runtime executes (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _act_inside(x, act: str):
+    if act == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "leaky":
+        return jnp.where(x > 0, x, 0.1 * x)
+    return x
+
+
+def _dw3x3_body(xp, w, scale, shift, act, stride, out_h=None, out_w=None):
+    """Shared depthwise arithmetic on an already-padded tile xp
+    (H+2, W+2, C) -> (out_h, out_w, C)."""
+    c = xp.shape[-1]
+    h = xp.shape[0] - 2
+    w_ = xp.shape[1] - 2
+    acc = jnp.zeros((h, w_, c), dtype=jnp.float32)
+    for i in range(3):
+        for j in range(3):
+            acc = acc + xp[i : i + h, j : j + w_, :] * w[i, j, :]
+    if stride > 1:
+        acc = acc[::stride, ::stride, :]
+    return _act_inside(acc * scale + shift, act)
+
+
+def dw3x3(x, w, scale, shift, act="relu6", stride=1):
+    """Depthwise 3x3 (SAME) as a standalone Pallas kernel."""
+    h, w_, c = x.shape
+    oh, ow = -(-h // stride), -(-w_ // stride)
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+
+    def kernel(x_ref, w_ref, s_ref, b_ref, o_ref):
+        o_ref[...] = _dw3x3_body(
+            x_ref[...], w_ref[...], s_ref[...], b_ref[...], act, stride, oh, ow
+        )
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((oh, ow, c), jnp.float32),
+        interpret=INTERPRET,
+    )(xp, w, scale, shift)
+
+
+def pw(x, w, scale, shift, act="none"):
+    """Pointwise 1x1 as a Pallas kernel; the matmul maps onto the MXU."""
+    h, w_, c_in = x.shape
+    c_out = w.shape[1]
+
+    def kernel(x_ref, w_ref, s_ref, b_ref, o_ref):
+        xm = x_ref[...].reshape(h * w_, c_in)
+        out = jnp.dot(xm, w_ref[...], preferred_element_type=jnp.float32)
+        out = out.reshape(h, w_, c_out) * s_ref[...] + b_ref[...]
+        o_ref[...] = _act_inside(out, act)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w_, c_out), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w, scale, shift)
+
+
+def conv3x3(x, w, scale, shift, act="relu6", stride=1):
+    """Dense 3x3 (SAME) — the first layer (C_in = 3). Implemented as nine
+    shifted MXU matmuls accumulated in VMEM."""
+    h, w_, c_in = x.shape
+    c_out = w.shape[-1]
+    oh, ow = -(-h // stride), -(-w_ // stride)
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+
+    def kernel(x_ref, w_ref, s_ref, b_ref, o_ref):
+        xpad = x_ref[...]
+        acc = jnp.zeros((h * w_, c_out), dtype=jnp.float32)
+        for i in range(3):
+            for j in range(3):
+                sl = xpad[i : i + h, j : j + w_, :].reshape(h * w_, c_in)
+                acc = acc + jnp.dot(
+                    sl, w_ref[i, j], preferred_element_type=jnp.float32
+                )
+        out = acc.reshape(h, w_, c_out)
+        if stride > 1:
+            out = out[::stride, ::stride, :]
+        out = out * s_ref[...] + b_ref[...]
+        o_ref[...] = _act_inside(out, act)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((oh, ow, c_out), jnp.float32),
+        interpret=INTERPRET,
+    )(xp, w, scale, shift)
+
+
+def maxpool2x2(x):
+    """2x2/2 max pool (ceil semantics) in the store path, like the chip's
+    pooling epilogue."""
+    h, w_, c = x.shape
+    ph, pw_ = (-h) % 2, (-w_) % 2
+    oh, ow = (h + ph) // 2, (w_ + pw_) // 2
+    xp = jnp.pad(x, ((0, ph), (0, pw_), (0, 0)), constant_values=-jnp.inf)
+
+    def kernel(x_ref, o_ref):
+        v = x_ref[...]
+        o_ref[...] = jnp.maximum(
+            jnp.maximum(v[0::2, 0::2, :], v[1::2, 0::2, :]),
+            jnp.maximum(v[0::2, 1::2, :], v[1::2, 1::2, :]),
+        )
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((oh, ow, c), jnp.float32),
+        interpret=INTERPRET,
+    )(xp)
+
+
+def _residual_inside(skip, out):
+    """Fig. 8 rules, traced inside the kernel (static channel counts)."""
+    cs, co = skip.shape[-1], out.shape[-1]
+    add = min(cs, co)
+    summed = out[..., :add] + skip[..., :add]
+    if co > add:
+        return jnp.concatenate([summed, out[..., add:]], axis=-1)
+    return summed
+
+
+def fused_block(x, wd, sd, bd, wp, sp, bp, with_skip=False, stride=1):
+    """The proposed block (Fig. 1b) in ONE pallas_call: dw3x3+BN+ReLU6 ->
+    pw1x1+BN (+ Fig. 8 residual with the block input). The depthwise
+    intermediate lives only in kernel scope (VMEM) — the software twin of
+    the unified-buffer fusion that keeps it out of DRAM on the chip."""
+    h, w_, c_in = x.shape
+    c_out = wp.shape[1]
+    oh, ow = -(-h // stride), -(-w_ // stride)
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+
+    def kernel(x_ref, wd_ref, sd_ref, bd_ref, wp_ref, sp_ref, bp_ref, o_ref):
+        xpad = x_ref[...]
+        mid = _dw3x3_body(
+            xpad, wd_ref[...], sd_ref[...], bd_ref[...], "relu6", stride, oh, ow
+        )
+        out = jnp.dot(
+            mid.reshape(oh * ow, c_in), wp_ref[...], preferred_element_type=jnp.float32
+        ).reshape(oh, ow, c_out)
+        out = out * sp_ref[...] + bp_ref[...]
+        if with_skip:
+            skip = xpad[1:-1, 1:-1, :]
+            if stride > 1:
+                skip = skip[::stride, ::stride, :]
+            out = _residual_inside(skip, out)
+        o_ref[...] = out
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((oh, ow, c_out), jnp.float32),
+        interpret=INTERPRET,
+    )(xp, wd, sd, bd, wp, sp, bp)
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def _noop(x, act="none"):  # pragma: no cover - convenience for debugging
+    return _act_inside(x, act)

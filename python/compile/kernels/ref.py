@@ -1,0 +1,93 @@
+"""Pure-jnp correctness oracle for every L1 Pallas kernel.
+
+Implemented with `jax.lax` convolution/reduction primitives — a genuinely
+independent code path from the Pallas kernels (which are hand-written
+shifted-slice arithmetic), so agreement is a meaningful check.
+
+All tensors are HWC (unbatched); weights are:
+  dw:   (3, 3, C)
+  pw:   (C_in, C_out)
+  conv: (k, k, C_in, C_out)
+BN is pre-folded into (scale, shift) applied after the conv.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(x, act: str):
+    if act == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "leaky":
+        return jnp.where(x > 0, x, 0.1 * x)
+    return x
+
+
+def dw3x3_ref(x, w, scale, shift, act="relu6", stride=1):
+    """Depthwise 3x3, SAME padding. x: (H, W, C), w: (3, 3, C)."""
+    c = x.shape[-1]
+    lhs = x[None].transpose(0, 3, 1, 2)  # NCHW
+    rhs = w.transpose(2, 0, 1)[:, None]  # (C, 1, 3, 3) OIHW
+    out = jax.lax.conv_general_dilated(
+        lhs,
+        rhs,
+        window_strides=(stride, stride),
+        padding=[(1, 1), (1, 1)],  # explicit: centers at 0, s, 2s, ...
+        feature_group_count=c,
+    )
+    out = out[0].transpose(1, 2, 0)
+    return _act(out * scale + shift, act)
+
+
+def pw_ref(x, w, scale, shift, act="none"):
+    """Pointwise 1x1. x: (H, W, C_in), w: (C_in, C_out)."""
+    out = jnp.einsum("hwc,cd->hwd", x, w)
+    return _act(out * scale + shift, act)
+
+
+def conv3x3_ref(x, w, scale, shift, act="relu6", stride=1):
+    """Dense kxk conv, SAME padding. w: (k, k, C_in, C_out)."""
+    lhs = x[None].transpose(0, 3, 1, 2)
+    rhs = w.transpose(3, 2, 0, 1)  # OIHW
+    pad = (w.shape[0] - 1) // 2
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs, window_strides=(stride, stride), padding=[(pad, pad), (pad, pad)]
+    )
+    out = out[0].transpose(1, 2, 0)
+    return _act(out * scale + shift, act)
+
+
+def maxpool2x2_ref(x):
+    """2x2/2 max pool with ceil semantics (odd edges padded -inf)."""
+    h, w, c = x.shape
+    ph, pw_ = (-h) % 2, (-w) % 2
+    x = jnp.pad(x, ((0, ph), (0, pw_), (0, 0)), constant_values=-jnp.inf)
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (2, 2, 1), (2, 2, 1), "VALID"
+    )
+
+
+def residual_apply_ref(skip, conv_out):
+    """Fig. 8 channel-mismatch residual add (mirrors rust
+    fusion::residual::plan): add over min(c_skip, c_out); extra conv
+    channels pass through; extra skip channels are dropped."""
+    cs, co = skip.shape[-1], conv_out.shape[-1]
+    add = min(cs, co)
+    summed = conv_out[..., :add] + skip[..., :add]
+    if co > add:
+        return jnp.concatenate([summed, conv_out[..., add:]], axis=-1)
+    return summed
+
+
+def fused_block_ref(x, wd, sd, bd, wp, sp, bp, skip=None, stride=1):
+    """The proposed block (Fig. 1b): dw3x3+BN+ReLU6 -> pw1x1+BN
+    (+ Fig. 8 residual)."""
+    mid = dw3x3_ref(x, wd, sd, bd, act="relu6", stride=stride)
+    out = pw_ref(mid, wp, sp, bp, act="none")
+    if skip is not None:
+        out = residual_apply_ref(skip, out)
+    return out

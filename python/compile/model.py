@@ -1,0 +1,110 @@
+"""L2 — the RC-YOLOv2 forward graph in JAX, built from the rust-emitted
+model spec and calling the L1 Pallas kernels.
+
+`group_forward` executes one fusion group — the unit the rust coordinator
+executes per PJRT call. Adjacent dw+pw pairs (the paper's proposed block,
+Fig. 1b) collapse into the single `fused_block` Pallas kernel so the
+depthwise intermediate stays VMEM-resident, mirroring the chip's unified
+buffer. `full_forward` chains all groups (used for training and as the
+integration oracle).
+
+Set ``use_pallas=False`` to run the pure-jnp reference implementations —
+mathematically identical (pytest asserts it), and much faster for the
+build-time training loop.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import fused_block as K
+from .kernels import ref as R
+
+
+def _is_block_pair(spec, layers, gstart, idx):
+    """dw at idx followed by pw, both inside the group slice."""
+    if idx + 1 >= len(layers):
+        return False
+    a, b = layers[idx], layers[idx + 1]
+    if a.kind != "dw" or b.kind != "pw" or b.s != 1:
+        return False
+    # A residual span must cover exactly this pair (or not touch it).
+    gi = gstart + idx
+    for sp in spec.spans:
+        if sp.kind != "residual":
+            continue
+        covers_a = sp.start <= gi <= sp.end
+        covers_b = sp.start <= gi + 1 <= sp.end
+        if covers_a != covers_b:
+            return False
+        if covers_a and (sp.start != gi or sp.end != gi + 1):
+            return False
+    return True
+
+
+def _pair_has_skip(spec, gi):
+    return any(
+        sp.kind == "residual" and sp.start == gi and sp.end == gi + 1
+        for sp in spec.spans
+    )
+
+
+def group_forward(spec, group, params, x, use_pallas=True):
+    """Run fusion group `group` on input tile `x` (H, W, C_in)."""
+    layers = spec.group_layers(group)
+    i = 0
+    while i < len(layers):
+        l = layers[i]
+        gi = group.start + i
+        p = params.get(l.name)
+        if l.kind == "dw" and _is_block_pair(spec, layers, group.start, i):
+            nxt = layers[i + 1]
+            pn = params[nxt.name]
+            skip = _pair_has_skip(spec, gi)
+            if use_pallas:
+                x = K.fused_block(
+                    x, p["w"], p["scale"], p["shift"],
+                    pn["w"], pn["scale"], pn["shift"],
+                    with_skip=skip, stride=l.s,
+                )
+            else:
+                x = R.fused_block_ref(
+                    x, p["w"], p["scale"], p["shift"],
+                    pn["w"], pn["scale"], pn["shift"],
+                    skip=x if skip else None, stride=l.s,
+                )
+            i += 2
+            continue
+        if l.kind == "dw":
+            f = K.dw3x3 if use_pallas else R.dw3x3_ref
+            x = f(x, p["w"], p["scale"], p["shift"], act=l.act, stride=l.s)
+        elif l.kind == "pw":
+            f = K.pw if use_pallas else R.pw_ref
+            x = f(x, p["w"], p["scale"], p["shift"], act=l.act)
+        elif l.kind == "conv":
+            if l.k == 1:
+                f = K.pw if use_pallas else R.pw_ref
+                w = p["w"][0, 0] if p["w"].ndim == 4 else p["w"]
+                x = f(x, w, p["scale"], p["shift"], act=l.act)
+            else:
+                f = K.conv3x3 if use_pallas else R.conv3x3_ref
+                x = f(x, p["w"], p["scale"], p["shift"], act=l.act, stride=l.s)
+        elif l.kind == "maxpool":
+            f = K.maxpool2x2 if use_pallas else R.maxpool2x2_ref
+            x = f(x)
+        elif l.kind == "dense":
+            x = R.pw_ref(x, p["w"], p["scale"], p["shift"], act=l.act)
+        elif l.kind == "gap":
+            x = jnp.mean(x, axis=(0, 1), keepdims=True)
+        else:
+            raise NotImplementedError(f"layer kind {l.kind} in lowered path")
+        i += 1
+    return x
+
+
+def full_forward(spec, params, x, use_pallas=False):
+    """All groups back-to-back. Training uses the ref path
+    (use_pallas=False) for speed; pytest asserts both paths agree."""
+    for g in spec.groups:
+        x = group_forward(spec, g, params, x, use_pallas=use_pallas)
+    return x

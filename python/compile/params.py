@@ -1,0 +1,76 @@
+"""Parameter store: init, save/load, fake-quantization.
+
+Parameters are keyed by layer name. BN is kept pre-folded as (scale,
+shift) — the chip folds BN into the convolution epilogue the same way
+(§IV-C: "the processing of BN and ReLU6" happens in the accumulator's
+output path).
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+
+def _seed_for(name: str, seed: int) -> int:
+    h = hashlib.sha256(f"{seed}:{name}".encode()).digest()
+    return int.from_bytes(h[:8], "little")
+
+
+def init_layer(layer, seed: int) -> dict:
+    """He-normal init for a LayerSpec; returns {} for weightless layers."""
+    rng = np.random.default_rng(_seed_for(layer.name, seed))
+    c_in, c_out, k = layer.c_in, layer.c_out, layer.k
+    if layer.kind == "conv":
+        fan = k * k * c_in
+        w = rng.normal(0, np.sqrt(2.0 / fan), size=(k, k, c_in, c_out))
+    elif layer.kind == "dw":
+        fan = k * k
+        w = rng.normal(0, np.sqrt(2.0 / fan), size=(k, k, c_in))
+    elif layer.kind in ("pw", "dense"):
+        fan = c_in
+        w = rng.normal(0, np.sqrt(2.0 / fan), size=(c_in, c_out))
+    else:
+        return {}
+    return {
+        "w": w.astype(np.float32),
+        "scale": np.ones(c_out, np.float32),
+        "shift": np.zeros(c_out, np.float32),
+    }
+
+
+def init_params(spec, seed: int = 0) -> dict:
+    return {l.name: init_layer(l, seed) for l in spec.layers if l.kind in ("conv", "dw", "pw", "dense")}
+
+
+def save_params(params: dict, path) -> None:
+    flat = {}
+    for name, p in params.items():
+        for k, v in p.items():
+            flat[f"{name}/{k}"] = v
+    np.savez(path, **flat)
+
+
+def load_params(path) -> dict:
+    flat = np.load(path)
+    out: dict = {}
+    for key in flat.files:
+        name, k = key.rsplit("/", 1)
+        out.setdefault(name, {})[k] = flat[key]
+    return out
+
+
+def fake_quantize(params: dict, bits: int = 8) -> dict:
+    """Symmetric per-tensor weight quantization (Table I-III's last
+    column): quantize to `bits` and dequantize, so the lowered HLO carries
+    int8-representable weights."""
+    qmax = float(2 ** (bits - 1) - 1)
+    out = {}
+    for name, p in params.items():
+        q = dict(p)
+        w = p["w"]
+        scale = max(float(np.max(np.abs(w))), 1e-8) / qmax
+        q["w"] = (np.round(w / scale).clip(-qmax, qmax) * scale).astype(np.float32)
+        out[name] = q
+    return out

@@ -1,0 +1,93 @@
+"""Gamma trainer — §II-C eq. (6)/(7): pruning-from-scratch [30].
+
+All convolution weights are FROZEN at random init; only the per-channel
+BN scale factors gamma are trained, with an L1 penalty weighted by each
+layer's weight size S_l (eq. 4's size-aware regularization). The trained
+gammas land in ``artifacts/gammas.json``; `rcnet-dla emit-spec --gammas`
+then uses them instead of the synthetic saliency proxy, closing the loop
+of Algorithm 1 across the rust/python boundary.
+
+Usage: python -m compile.rcnet --spec ../artifacts/model_spec.json \
+          --out ../artifacts/gammas.json --steps 60
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import detect as DET
+from .model import full_forward
+from .params import init_params
+from .spec import load_spec
+from .train import TRAIN_HW, make_batch, yolo_loss
+
+
+def train_gammas(spec_path, out_path, steps=60, batch=2, lr=5e-2, lam=1e-4, seed=0):
+    spec = load_spec(spec_path)
+    frozen = init_params(spec, seed=seed)
+    names = [l.name for l in spec.layers if l.kind in ("conv", "dw", "pw") and l.bn]
+    sizes = {
+        l.name: float(l.k * l.k * l.c_in * (1 if l.kind == "dw" else l.c_out))
+        for l in spec.layers
+        if l.name in set(names)
+    }
+    mean_size = np.mean(list(sizes.values()))
+    gammas = {n: jnp.ones(frozen[n]["scale"].shape, jnp.float32) for n in names}
+
+    def with_gammas(g):
+        p = {k: dict(v) for k, v in frozen.items()}
+        for n in names:
+            p[n]["scale"] = g[n]
+        return p
+
+    def loss_fn(g, imgs, tgts, masks):
+        p = with_gammas(g)
+        task = jnp.mean(
+            jax.vmap(lambda i, t, m: yolo_loss(spec, p, i, t, m))(imgs, tgts, masks)
+        )
+        # eq. (4): L1 on gamma, weighted by the layer's weight size so
+        # pruning pressure tracks bytes freed, not just channel count.
+        reg = sum(
+            (sizes[n] / mean_size) * jnp.sum(jnp.abs(g[n])) for n in names
+        )
+        return task + lam * reg
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    for step in range(steps):
+        seeds = [seed * 7_654_321 + step * batch + i for i in range(batch)]
+        imgs, tgts, masks = make_batch(seeds, spec, TRAIN_HW)
+        loss, grads = grad_fn(gammas, imgs, tgts, masks)
+        gammas = {n: gammas[n] - lr * grads[n] for n in names}
+        if step % 10 == 0 or step == steps - 1:
+            print(f"gamma step {step:3d} loss {float(loss):8.4f}", flush=True)
+
+    out = {
+        "gammas": [
+            {"layer": n, "values": [float(abs(x)) for x in np.asarray(gammas[n])]}
+            for n in names
+        ]
+    }
+    with open(out_path, "w") as f:
+        json.dump(out, f)
+    print(f"saved {out_path} ({len(names)} layers)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", default="../artifacts/model_spec.json")
+    ap.add_argument("--out", default="../artifacts/gammas.json")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--lam", type=float, default=1e-4)
+    args = ap.parse_args()
+    train_gammas(args.spec, args.out, steps=args.steps, batch=args.batch, lam=args.lam)
+
+
+if __name__ == "__main__":
+    main()

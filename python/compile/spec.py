@@ -1,0 +1,110 @@
+"""Model-spec loader.
+
+The rust fusion engine (L3) is the source of truth for the network
+structure: `rcnet-dla emit-spec` runs the full RCNet pipeline (conversion,
+group partition, gamma pruning, tile planning) and writes
+``artifacts/model_spec.json``. This module loads that spec into light
+dataclasses consumed by the L2 model builder and the AOT lowerer.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Optional
+
+
+@dataclass
+class LayerSpec:
+    name: str
+    kind: str  # conv | dw | pw | maxpool | gap | dense | reorg | concat | upsample
+    k: int
+    s: int
+    d: int
+    c_in: int
+    c_out: int
+    bn: bool
+    act: str  # none | relu6 | leaky | relu
+    branch_from: Optional[int]
+
+
+@dataclass
+class SpanSpec:
+    kind: str  # residual | concat
+    start: int
+    end: int
+
+
+@dataclass
+class GroupSpec:
+    id: int
+    start: int
+    end: int
+    tile_h: Optional[int]
+    tiles: Optional[int]
+    in_shape: tuple  # (h, w, c)
+    out_shape: tuple
+
+
+@dataclass
+class ModelSpec:
+    name: str
+    input_hw: tuple
+    c_in: int
+    classes: int
+    anchors: int
+    layers: list = field(default_factory=list)
+    spans: list = field(default_factory=list)
+    groups: list = field(default_factory=list)
+
+    def residual_span_ending_at(self, i: int) -> Optional[SpanSpec]:
+        for sp in self.spans:
+            if sp.kind == "residual" and sp.end == i:
+                return sp
+        return None
+
+    def group_layers(self, g: GroupSpec) -> list:
+        return self.layers[g.start : g.end + 1]
+
+
+def load_spec(path) -> ModelSpec:
+    raw = json.loads(Path(path).read_text())
+    layers = [
+        LayerSpec(
+            name=l["name"],
+            kind=l["kind"],
+            k=int(l["k"]),
+            s=int(l["s"]),
+            d=int(l["d"]),
+            c_in=int(l["c_in"]),
+            c_out=int(l["c_out"]),
+            bn=bool(l["bn"]),
+            act=l["act"],
+            branch_from=l["branch_from"],
+        )
+        for l in raw["layers"]
+    ]
+    spans = [SpanSpec(sp["kind"], int(sp["start"]), int(sp["end"])) for sp in raw["spans"]]
+    groups = [
+        GroupSpec(
+            id=int(g["id"]),
+            start=int(g["start"]),
+            end=int(g["end"]),
+            tile_h=None if g["tile_h"] is None else int(g["tile_h"]),
+            tiles=None if g["tiles"] is None else int(g["tiles"]),
+            in_shape=tuple(int(x) for x in g["in_shape"]),
+            out_shape=tuple(int(x) for x in g["out_shape"]),
+        )
+        for g in raw["groups"]
+    ]
+    return ModelSpec(
+        name=raw["name"],
+        input_hw=tuple(int(x) for x in raw["input_hw"]),
+        c_in=int(raw["c_in"]),
+        classes=int(raw["classes"]),
+        anchors=int(raw["anchors"]),
+        layers=layers,
+        spans=spans,
+        groups=groups,
+    )

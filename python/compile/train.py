@@ -1,0 +1,135 @@
+"""Build-time trainer: a few hundred steps of the RC-YOLOv2 detector on
+the synthetic 3-class scenes (EXPERIMENTS.md records the loss curve).
+
+Runs the *reference* forward (pure jnp — bit-compatible with the Pallas
+kernels per pytest) because interpret-mode Pallas is orders of magnitude
+slower; the trained weights are then baked into the Pallas-lowered HLO by
+aot.py.
+
+Usage: python -m compile.train --spec ../artifacts/model_spec.json \
+          --out ../artifacts/weights.npz --steps 200
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import detect as DET
+from .model import full_forward
+from .params import init_params, save_params
+from .spec import load_spec
+
+TRAIN_HW = (96, 160)  # fully-convolutional: train small, deploy larger
+
+
+def yolo_loss(spec, params, img, tgt, mask):
+    out = full_forward(spec, params, img, use_pallas=False)
+    gh, gw = out.shape[0], out.shape[1]
+    a = len(DET.ANCHORS)
+    c = spec.classes
+    out = out.reshape(gh, gw, a, 5 + c)
+    txy = jax.nn.sigmoid(out[..., 0:2])
+    twh = out[..., 2:4]  # unclipped in the loss: clip() zeroes gradients
+    tobj = out[..., 4]
+    tcls = out[..., 5:]
+
+    m = mask[..., None]
+    loss_xy = jnp.sum(m * (txy - tgt[..., 0:2]) ** 2)
+    loss_wh = jnp.sum(m * (twh - tgt[..., 2:4]) ** 2)
+    obj_bce = jnp.maximum(tobj, 0) - tobj * tgt[..., 4] + jnp.log1p(jnp.exp(-jnp.abs(tobj)))
+    logp = jax.nn.log_softmax(tcls, axis=-1)
+    loss_cls = -jnp.sum(m * tgt[..., 5:] * logp)
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    matched = (5.0 * loss_xy + 2.0 * loss_wh + loss_cls + 5.0 * jnp.sum(mask * obj_bce)) / n
+    # Strong no-object pressure: false positives dominate the anchor grid
+    # (75 anchors vs ~3 objects), so the mean no-object BCE carries a 4x
+    # weight — the YOLO noobj/obj balance adapted to the tiny grid.
+    noobj = 4.0 * jnp.sum((1.0 - mask) * obj_bce) / (gh * gw * a)
+    return matched + noobj
+
+
+def make_batch(seeds, spec, hw):
+    gh, gw = hw[0] // 32, hw[1] // 32
+    imgs, tgts, masks = [], [], []
+    for s in seeds:
+        img, objs = D.render(s, hw[0], hw[1])
+        tgt, mask = DET.build_targets(objs, gh, gw, spec.classes)
+        imgs.append(img)
+        tgts.append(tgt)
+        masks.append(mask)
+    return (
+        jnp.array(np.stack(imgs)),
+        jnp.array(np.stack(tgts)),
+        jnp.array(np.stack(masks)),
+    )
+
+
+def train(spec_path, out_path, steps=200, batch=4, lr=1e-3, seed=0, log_path=None):
+    spec = load_spec(spec_path)
+    params = init_params(spec, seed=seed)
+    # Trainables as a flat pytree.
+    tree = {k: dict(v) for k, v in params.items()}
+
+    def batched_loss(tree, imgs, tgts, masks):
+        losses = jax.vmap(lambda i, t, m: yolo_loss(spec, tree, i, t, m))(imgs, tgts, masks)
+        return jnp.mean(losses)
+
+    grad_fn = jax.jit(jax.value_and_grad(batched_loss))
+
+    # Hand-rolled Adam (no optax in the image).
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    m = [jnp.zeros_like(x) for x in flat]
+    v = [jnp.zeros_like(x) for x in flat]
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    log = []
+    t0 = time.time()
+    for step in range(steps):
+        seeds = [seed * 1_000_003 + step * batch + i for i in range(batch)]
+        imgs, tgts, masks = make_batch(seeds, spec, TRAIN_HW)
+        loss, grads = grad_fn(treedef.unflatten(flat), imgs, tgts, masks)
+        gflat, _ = jax.tree_util.tree_flatten(grads)
+        lr_t = lr * (1.0 + np.cos(np.pi * step / max(steps, 1))) / 2.0 + 1e-5
+        new = []
+        for i, (x, g) in enumerate(zip(flat, gflat)):
+            m[i] = b1 * m[i] + (1 - b1) * g
+            v[i] = b2 * v[i] + (1 - b2) * g * g
+            mh = m[i] / (1 - b1 ** (step + 1))
+            vh = v[i] / (1 - b2 ** (step + 1))
+            new.append(x - lr_t * mh / (jnp.sqrt(vh) + eps))
+        flat = new
+        log.append(float(loss))
+        if step % 10 == 0 or step == steps - 1:
+            print(f"step {step:4d} loss {float(loss):8.4f} ({time.time()-t0:5.1f}s)", flush=True)
+
+    trained = treedef.unflatten(flat)
+    trained = {k: {kk: np.asarray(vv, np.float32) for kk, vv in p.items()} for k, p in trained.items()}
+    save_params(trained, out_path)
+    if log_path:
+        Path(log_path).write_text(json.dumps({"loss": log, "steps": steps, "batch": batch}))
+    print(f"saved {out_path} (final loss {log[-1]:.4f}, first {log[0]:.4f})")
+    return log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", default="../artifacts/model_spec.json")
+    ap.add_argument("--out", default="../artifacts/weights.npz")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--log", default="../artifacts/train_log.json")
+    args = ap.parse_args()
+    train(args.spec, args.out, steps=args.steps, batch=args.batch, lr=args.lr, log_path=args.log)
+
+
+if __name__ == "__main__":
+    main()

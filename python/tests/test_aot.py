@@ -1,0 +1,44 @@
+"""AOT lowering smoke: one group lowers to non-trivial HLO text, and the
+manifest round-trips through the rust-side conventions."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from compile.aot import lower_group, to_hlo_text
+from compile.params import init_params
+from compile.spec import load_spec
+
+ART = Path(__file__).resolve().parents[2] / "artifacts"
+SPEC = ART / "model_spec.json"
+
+needs_spec = pytest.mark.skipif(not SPEC.exists(), reason="run `make spec` first")
+
+
+@needs_spec
+def test_lower_smallest_group_to_hlo_text():
+    spec = load_spec(SPEC)
+    params = init_params(spec, seed=0)
+    g = min(spec.groups, key=lambda g: g.in_shape[0] * g.in_shape[1] * g.in_shape[2])
+    lowered = lower_group(spec, g, params, use_pallas=True)
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+    # No Mosaic custom-calls (interpret mode lowers to plain HLO).
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+
+@needs_spec
+def test_manifest_consistency_when_built():
+    mpath = ART / "manifest.json"
+    if not mpath.exists():
+        pytest.skip("run `make artifacts` first")
+    m = json.loads(mpath.read_text())
+    spec = load_spec(SPEC)
+    assert m["classes"] == spec.classes
+    assert len(m["groups"]) == len(spec.groups)
+    for gm, gs in zip(m["groups"], spec.groups):
+        assert tuple(gm["in_shape"]) == gs.in_shape
+        assert tuple(gm["out_shape"]) == gs.out_shape
+        assert (ART / gm["file"]).exists()

@@ -1,0 +1,47 @@
+"""Cross-language parity of the synthetic dataset generator."""
+
+import numpy as np
+
+from compile.data import SplitMix64, render, scene_objects
+
+
+def test_splitmix_golden():
+    # Same golden values as rust util::rng::tests::splitmix_golden.
+    r = SplitMix64(0)
+    assert r.next_u64() == 0xE220A8397B1DCDAF
+    assert r.next_u64() == 0x6E789E6AA1B965F4
+    assert r.next_u64() == 0x06C45D188009454F
+
+
+def test_scene_objects_deterministic():
+    a = scene_objects(42)
+    b = scene_objects(42)
+    assert a == b
+    assert scene_objects(43) != a
+
+
+def test_scene_objects_bounds():
+    for seed in range(50):
+        for o in scene_objects(seed):
+            assert 0 <= o.cls < 3
+            assert 0.1 <= o.cx <= 0.9
+            assert 0.15 <= o.cy <= 0.85
+            assert 0.06 <= o.w <= 0.28
+            assert 0.45 <= o.shade <= 1.0
+
+
+def test_render_shape_and_range():
+    img, objs = render(7, 48, 64)
+    assert img.shape == (48, 64, 3)
+    assert img.dtype == np.float32
+    assert img.min() >= 0.0 and img.max() <= 1.0
+    assert len(objs) >= 1
+
+
+def test_render_objects_visible():
+    # An object's dominant channel should exceed background at its center.
+    img, objs = render(11, 96, 128)
+    o = objs[0]
+    y, x = int(o.cy * 96), int(o.cx * 128)
+    if o.cls == 0:  # box: center always inside
+        assert img[y, x, o.cls] > 0.4

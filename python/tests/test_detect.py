@@ -1,0 +1,43 @@
+"""Detection target construction properties."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.data import SceneObject
+from compile.detect import ANCHORS, best_anchor, build_targets
+
+
+def test_best_anchor_identity():
+    for i, (w, h) in enumerate(ANCHORS):
+        assert best_anchor(w, h) == i
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.floats(min_value=0.1, max_value=0.9),
+    st.floats(min_value=0.15, max_value=0.85),
+    st.floats(min_value=0.06, max_value=0.28),
+    st.floats(min_value=0.06, max_value=0.28),
+    st.integers(min_value=0, max_value=2),
+)
+def test_build_targets_places_object(cx, cy, w, h, cls):
+    o = SceneObject(cls, cx, cy, w, h, 0.9)
+    tgt, mask = build_targets([o], 6, 10, 3)
+    assert mask.sum() == 1.0
+    row, col = int(cy * 6), int(cx * 10)
+    row, col = min(row, 5), min(col, 9)
+    k = best_anchor(w, h)
+    assert mask[row, col, k] == 1.0
+    assert tgt[row, col, k, 4] == 1.0
+    assert tgt[row, col, k, 5 + cls] == 1.0
+    # Offsets inside the cell.
+    assert 0.0 <= tgt[row, col, k, 0] <= 1.0
+    assert 0.0 <= tgt[row, col, k, 1] <= 1.0
+
+
+def test_collision_keeps_single_assignment():
+    a = SceneObject(0, 0.5, 0.5, 0.1, 0.1, 0.9)
+    b = SceneObject(1, 0.5, 0.5, 0.1, 0.1, 0.9)  # same cell, same anchor
+    tgt, mask = build_targets([a, b], 6, 10, 3)
+    assert mask.sum() == 1.0  # later object overwrites
+    assert tgt[..., 5 + 1].sum() == 1.0

@@ -1,0 +1,124 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle — the core
+numeric signal of the build path. Hypothesis sweeps shapes/strides."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_block as K
+from compile.kernels import ref as R
+
+RNG = np.random.default_rng(0)
+
+
+def arr(*shape):
+    return jnp.array(RNG.normal(size=shape), dtype=jnp.float32)
+
+
+shapes = st.tuples(
+    st.integers(min_value=3, max_value=14),  # h
+    st.integers(min_value=3, max_value=14),  # w
+    st.integers(min_value=1, max_value=12),  # c
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shapes, st.sampled_from([1, 2]), st.sampled_from(["relu6", "none", "leaky"]))
+def test_dw3x3_matches_ref(shape, stride, act):
+    h, w, c = shape
+    x, wd = arr(h, w, c), arr(3, 3, c)
+    s, b = arr(c), arr(c)
+    got = K.dw3x3(x, wd, s, b, act=act, stride=stride)
+    want = R.dw3x3_ref(x, wd, s, b, act=act, stride=stride)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shapes, st.integers(min_value=1, max_value=16))
+def test_pw_matches_ref(shape, c_out):
+    h, w, c = shape
+    x, wp = arr(h, w, c), arr(c, c_out)
+    s, b = arr(c_out), arr(c_out)
+    got = K.pw(x, wp, s, b, act="relu6")
+    want = R.pw_ref(x, wp, s, b, act="relu6")
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shapes, st.integers(min_value=1, max_value=10), st.sampled_from([1, 2]))
+def test_fused_block_matches_ref(shape, c_out, stride):
+    h, w, c = shape
+    x, wd, wp = arr(h, w, c), arr(3, 3, c), arr(c, c_out)
+    sd, bd, sp, bp = arr(c), arr(c), arr(c_out), arr(c_out)
+    got = K.fused_block(x, wd, sd, bd, wp, sp, bp, stride=stride)
+    want = R.fused_block_ref(x, wd, sd, bd, wp, sp, bp, stride=stride)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=1, max_value=10), st.integers(min_value=1, max_value=10))
+def test_fused_block_residual_fig8(c_in, c_out):
+    # Fig. 8 channel-mismatch rules, both directions.
+    x, wd, wp = arr(8, 8, c_in), arr(3, 3, c_in), arr(c_in, c_out)
+    sd, bd, sp, bp = arr(c_in), arr(c_in), arr(c_out), arr(c_out)
+    got = K.fused_block(x, wd, sd, bd, wp, sp, bp, with_skip=True)
+    want = R.fused_block_ref(x, wd, sd, bd, wp, sp, bp, skip=x)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shapes)
+def test_maxpool_matches_ref(shape):
+    h, w, c = shape
+    x = arr(h, w, c)
+    got = K.maxpool2x2(x)
+    want = R.maxpool2x2_ref(x)
+    assert got.shape == ((h + 1) // 2, (w + 1) // 2, c)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(min_value=4, max_value=12),
+    st.integers(min_value=4, max_value=12),
+    st.integers(min_value=1, max_value=8),
+    st.sampled_from([1, 2]),
+)
+def test_conv3x3_matches_ref(h, w, c_out, stride):
+    x, wc = arr(h, w, 3), arr(3, 3, 3, c_out)
+    s, b = arr(c_out), arr(c_out)
+    got = K.conv3x3(x, wc, s, b, stride=stride)
+    want = R.conv3x3_ref(x, wc, s, b, stride=stride)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_residual_apply_matches_rust_plan():
+    # Golden cases shared with rust fusion::residual tests.
+    skip = jnp.ones((2, 2, 3))
+    conv = jnp.full((2, 2, 2), 10.0)
+    out = R.residual_apply_ref(skip, conv)  # drop 1 skip channel
+    assert out.shape == (2, 2, 2)
+    assert float(out[0, 0, 0]) == 11.0
+    out = R.residual_apply_ref(conv, skip * 3)  # 1 passthrough channel
+    assert out.shape == (2, 2, 3)
+    assert float(out[0, 0, 2]) == 3.0
+
+
+def test_relu6_saturates():
+    x = jnp.array([[[-1.0, 3.0, 9.0]]])
+    w = jnp.zeros((3, 3, 3)).at[1, 1].set(1.0)
+    out = K.dw3x3(x, w, jnp.ones(3), jnp.zeros(3), act="relu6")
+    np.testing.assert_allclose(out[0, 0], [0.0, 3.0, 6.0])
+
+
+@pytest.mark.parametrize("bits,max_err", [(8, 0.02), (4, 0.3)])
+def test_fake_quantize_error_bounded(bits, max_err):
+    from compile.params import fake_quantize
+
+    p = {"l": {"w": RNG.normal(size=(64, 64)).astype(np.float32),
+               "scale": np.ones(64, np.float32),
+               "shift": np.zeros(64, np.float32)}}
+    q = fake_quantize(p, bits=bits)
+    err = np.abs(q["l"]["w"] - p["l"]["w"]).max()
+    assert err <= max_err, err

@@ -1,0 +1,34 @@
+//! Shared helpers for the bench harness (plain `harness = false`
+//! binaries — the offline vendor set has no criterion; this provides the
+//! timing loop and the paper-vs-measured framing).
+
+use std::time::Instant;
+
+/// Time `f` over `iters` iterations after one warmup; prints mean time.
+pub fn time_it<F: FnMut()>(name: &str, iters: u32, mut f: F) {
+    f(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let unit = if per >= 1.0 {
+        format!("{per:.2} s")
+    } else if per >= 1e-3 {
+        format!("{:.2} ms", per * 1e3)
+    } else {
+        format!("{:.1} us", per * 1e6)
+    };
+    println!("[bench] {name}: {unit}/iter ({iters} iters)");
+}
+
+/// Print a paper-vs-measured comparison line.
+pub fn compare(metric: &str, paper: f64, measured: f64, unit: &str) {
+    let ratio = if paper != 0.0 { measured / paper } else { f64::NAN };
+    println!(
+        "  {metric:<38} paper {paper:>10.2} {unit:<6} measured {measured:>10.2} {unit:<6} (x{ratio:.2})"
+    );
+}
+
+#[allow(dead_code)]
+fn main() {}

@@ -1,0 +1,34 @@
+//! Fig. 10 — RC-YOLOv2 for different final model sizes under a 100 KB
+//! weight buffer: "the network can be reduced to about 1M within 3% mAP
+//! drop".
+
+#[path = "common.rs"]
+mod common;
+
+use rcnet_dla::report::sweep::size_sweep;
+use rcnet_dla::report::tables::TableBuilder;
+
+fn main() {
+    let targets = [800_000u64, 1_000_000, 1_500_000, 2_000_000, 3_000_000];
+    let pts = size_sweep(&targets, (720, 1280));
+    let mut t = TableBuilder::new("Fig. 10 — final model size sweep (B = 100 KB)")
+        .header(&["target", "params", "groups", "feat I/O (MB/f)", "acc proxy"]);
+    for p in &pts {
+        t.row(vec![
+            format!("{:.1}M", p.target_params as f64 / 1e6),
+            format!("{:.2}M", p.params_m),
+            format!("{}", p.groups),
+            format!("{:.2}", p.feat_io_mb),
+            format!("{:.1}", p.accuracy_proxy),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("paper: mAP degrades gracefully down to ~1M, then sharply;");
+    println!("       feature I/O shrinks with model size (fewer/narrower boundaries)");
+    let acc_3m = pts.last().unwrap().accuracy_proxy;
+    let acc_1m = pts[1].accuracy_proxy;
+    common::compare("acc drop 3M -> 1M (paper: within ~3)", 3.0, acc_3m - acc_1m, "pts");
+    common::time_it("one sweep point", 3, || {
+        let _ = size_sweep(&[1_000_000], (720, 1280));
+    });
+}

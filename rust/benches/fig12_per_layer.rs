@@ -1,0 +1,60 @@
+//! Fig. 12 — per-layer channel counts and external data volume for
+//! RC-YOLOv2 at 1280x720, with fusion-group boundaries, plus the
+//! per-layer traffic reduction vs layer-by-layer (paper: 37%–99%).
+
+#[path = "common.rs"]
+mod common;
+
+use rcnet_dla::fusion::{rcnet, FusionConfig, GammaSet, RcnetOptions};
+use rcnet_dla::model::zoo;
+use rcnet_dla::report::tables::TableBuilder;
+use rcnet_dla::traffic::TrafficModel;
+
+fn main() {
+    let converted = zoo::yolov2_converted(3, 5);
+    let gammas = GammaSet::synthetic(&converted, 7);
+    let out = rcnet(
+        &converted,
+        &gammas,
+        &FusionConfig::paper_default(),
+        &RcnetOptions { target_params: Some(1_020_000), ..Default::default() },
+    );
+    let tm = TrafficModel::paper_chip();
+    let hw = (720, 1280);
+    let lbl = tm.layer_by_layer(&out.network, hw);
+    let fus = tm.fused(&out.network, &out.groups, hw);
+
+    let mut t = TableBuilder::new("Fig. 12 — per-layer external data (RC-YOLOv2 @ 1280x720)")
+        .header(&["layer", "c_out", "lbl KB", "fused KB", "reduction", "group"]);
+    let mut reductions = Vec::new();
+    for (i, (l, f)) in lbl.per_layer.iter().zip(&fus.per_layer).enumerate() {
+        let g = out.groups.iter().position(|g| g.contains(i)).unwrap();
+        let boundary = out.groups[g].end == i;
+        let red = if l.total() > 0 {
+            1.0 - f.total() as f64 / l.total() as f64
+        } else {
+            0.0
+        };
+        if l.total() > 0 {
+            reductions.push(red);
+        }
+        t.row(vec![
+            format!("{}{}", l.name, if boundary { " |--" } else { "" }),
+            format!("{}", l.c_out),
+            format!("{:.0}", l.total() as f64 / 1e3),
+            format!("{:.0}", f.total() as f64 / 1e3),
+            format!("{:.0}%", red * 100.0),
+            format!("g{g}"),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let min_r = reductions.iter().cloned().fold(f64::MAX, f64::min);
+    let max_r = reductions.iter().cloned().fold(f64::MIN, f64::max);
+    println!("paper: per-layer reduction range 37% - 99%");
+    common::compare("min per-layer reduction", 37.0, min_r * 100.0, "%");
+    common::compare("max per-layer reduction", 99.0, max_r * 100.0, "%");
+    common::time_it("per-layer traffic series", 100, || {
+        let _ = tm.fused(&out.network, &out.groups, hw);
+    });
+}

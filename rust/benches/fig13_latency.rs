@@ -1,0 +1,38 @@
+//! Fig. 13 — latency and memory bandwidth vs weight buffer size on FULL
+//! HD (1920x1080), two 192 KB unified buffers: bandwidth falls ~38% from
+//! 50 KB to 200 KB and saturates by ~300 KB.
+
+#[path = "common.rs"]
+mod common;
+
+use rcnet_dla::report::sweep::buffer_sweep;
+use rcnet_dla::report::tables::TableBuilder;
+
+fn main() {
+    let buffers = [50u64, 100, 150, 200, 300, 400];
+    let pts = buffer_sweep(&buffers, 1_020_000, (1080, 1920));
+    let mut t = TableBuilder::new("Fig. 13 — buffer size vs latency/bandwidth (1920x1080)")
+        .header(&["B (KB)", "groups", "latency (ms)", "FPS", "bandwidth (MB/s)"]);
+    for p in &pts {
+        t.row(vec![
+            format!("{}", p.buffer_kb),
+            format!("{}", p.groups),
+            format!("{:.1}", p.latency_ms),
+            format!("{:.1}", p.fps),
+            format!("{:.0}", p.bandwidth_mb_s),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let bw50 = pts[0].bandwidth_mb_s;
+    let bw200 = pts[3].bandwidth_mb_s;
+    let bw300 = pts[4].bandwidth_mb_s;
+    let bw400 = pts[5].bandwidth_mb_s;
+    println!("paper: 'reducing 38% bandwidth from 50 KB to 200 KB'");
+    common::compare("bandwidth reduction 50->200KB", 38.0, (1.0 - bw200 / bw50) * 100.0, "%");
+    println!("paper: 'the reduction is saturated for 300 KB buffer size'");
+    common::compare("extra reduction 300->400KB (~0)", 0.0, (1.0 - bw400 / bw300) * 100.0, "%");
+    common::time_it("one full-HD sweep point", 3, || {
+        let _ = buffer_sweep(&[200], 1_020_000, (1080, 1920));
+    });
+}

@@ -1,0 +1,64 @@
+//! Fig. 14 — chip power breakdown. The per-event energy model is
+//! calibrated at the chip's design point; this bench verifies the
+//! breakdown reproduces Fig. 14 at HD30 and shows how it shifts under a
+//! layer-by-layer schedule (pads/DRAM share balloons — the motivation).
+
+#[path = "common.rs"]
+mod common;
+
+use rcnet_dla::config::ChipConfig;
+use rcnet_dla::dla::{simulate_fused, simulate_layer_by_layer};
+use rcnet_dla::energy::{ChipPowerModel, FIG14_FRACTIONS};
+use rcnet_dla::fusion::{rcnet, FusionConfig, GammaSet, RcnetOptions};
+use rcnet_dla::model::zoo;
+use rcnet_dla::report::tables::TableBuilder;
+
+fn main() {
+    let chip = ChipConfig::paper_chip();
+    let converted = zoo::yolov2_converted(3, 5);
+    let gammas = GammaSet::synthetic(&converted, 7);
+    let out = rcnet(
+        &converted,
+        &gammas,
+        &FusionConfig::paper_default(),
+        &RcnetOptions { target_params: Some(1_020_000), ..Default::default() },
+    );
+    let (fus, _) = simulate_fused(&out.network, &out.groups, (720, 1280), &chip).unwrap();
+    let lbl = simulate_layer_by_layer(&out.network, (720, 1280), &chip);
+
+    let ev_fused = fus.events_per_second(30.0);
+    let model = ChipPowerModel::calibrated(ev_fused);
+    let p_fused = model.power(ev_fused);
+    let p_lbl = model.power(lbl.events_per_second(30.0));
+
+    let labels = ["memory", "combinational", "register", "I/O pads", "clock"];
+    let mut t = TableBuilder::new("Fig. 14 — power breakdown @ HD30")
+        .header(&["component", "paper %", "fused %", "fused mW", "layer-by-layer %"]);
+    let ff = p_fused.fractions();
+    let fl = p_lbl.fractions();
+    let mw = [
+        p_fused.memory_mw,
+        p_fused.combinational_mw,
+        p_fused.register_mw,
+        p_fused.pads_mw,
+        p_fused.clock_mw,
+    ];
+    for i in 0..5 {
+        t.row(vec![
+            labels[i].into(),
+            format!("{:.1}%", FIG14_FRACTIONS[i] * 100.0),
+            format!("{:.1}%", ff[i] * 100.0),
+            format!("{:.0}", mw[i]),
+            format!("{:.1}%", fl[i] * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+    common::compare("total core power (fused)", 692.3, p_fused.total_mw(), "mW");
+    println!(
+        "layer-by-layer pads power {:.0} mW vs fused {:.0} mW — the external-traffic win",
+        p_lbl.pads_mw, p_fused.pads_mw
+    );
+    common::time_it("power model eval", 1000, || {
+        let _ = model.power(ev_fused);
+    });
+}

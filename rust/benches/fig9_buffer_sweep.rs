@@ -1,0 +1,45 @@
+//! Fig. 9 — RC-YOLOv2 under different weight buffer sizes (~1M params):
+//! feature I/O rises as the buffer shrinks; accuracy drops sharply below
+//! 100 KB.
+
+#[path = "common.rs"]
+mod common;
+
+use rcnet_dla::report::sweep::buffer_sweep;
+use rcnet_dla::report::tables::TableBuilder;
+
+fn main() {
+    let buffers = [50u64, 75, 100, 150, 200];
+    let pts = buffer_sweep(&buffers, 1_020_000, (720, 1280));
+    let mut t = TableBuilder::new("Fig. 9 — weight buffer size sweep (HD, ~1M params)")
+        .header(&["B (KB)", "params", "groups", "feat I/O (MB/f)", "acc proxy"]);
+    for p in &pts {
+        t.row(vec![
+            format!("{}", p.buffer_kb),
+            format!("{:.2}M", p.params_m),
+            format!("{}", p.groups),
+            format!("{:.2}", p.feat_io_mb),
+            format!("{:.1}", p.accuracy_proxy),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("paper trends:");
+    println!("  'Feature I/O goes higher with a smaller buffer size'");
+    common::compare(
+        "feat I/O ratio 50KB / 200KB (>1)",
+        1.6, // read off the paper's figure, approximate
+        pts[0].feat_io_mb / pts[4].feat_io_mb,
+        "",
+    );
+    println!("  'under 100 KB, the mAP drop will be significant'");
+    common::compare(
+        "acc drop 100KB -> 50KB",
+        3.0, // approximate from the figure
+        pts[2].accuracy_proxy - pts[0].accuracy_proxy,
+        "pts",
+    );
+    common::time_it("one sweep point (full RCNet rerun)", 3, || {
+        let _ = buffer_sweep(&[100], 1_020_000, (720, 1280));
+    });
+}

@@ -1,0 +1,44 @@
+//! Table I — RC-YOLOv2 ablation on the HD traffic dataset (IVS_3cls
+//! stand-in), 1920x960, 100 KB weight buffer.
+
+#[path = "common.rs"]
+mod common;
+
+use rcnet_dla::report::ablation::{ablation_rows, AblationTask};
+use rcnet_dla::report::tables::TableBuilder;
+
+// Paper Table I rows: (variant, mAP, GFLOPs, params M, feature I/O MB).
+const PAPER: [(&str, f64, f64, f64, f64); 5] = [
+    ("baseline", 88.2, 625.0, 55.66, 131.62),
+    ("conversion", 84.3, 80.2, 3.8, 130.65),
+    ("naive fusion", 84.3, 80.2, 3.8, 80.45),
+    ("rcnet", 80.81, 38.69, 1.76, 21.55),
+    ("rcnet+int8", 80.02, 38.69, 1.76, 21.55),
+];
+
+fn main() {
+    let rows = ablation_rows(AblationTask::Yolov2);
+    let mut t = TableBuilder::new("Table I — RC-YOLOv2 ablation (IVS stand-in, 1920x960, B=100KB)")
+        .header(&["variant", "acc paper", "acc proxy", "GFLOPs paper", "GFLOPs", "params paper", "params", "featIO paper", "featIO"]);
+    for (r, p) in rows.iter().zip(PAPER.iter()) {
+        t.row(vec![
+            r.variant.clone(),
+            format!("{:.1}", p.1),
+            format!("{:.1}", r.accuracy),
+            format!("{:.1}", p.2),
+            format!("{:.1}", r.gflops),
+            format!("{:.2}M", p.3),
+            format!("{:.2}M", r.params_m),
+            format!("{:.1}MB", p.4),
+            format!("{:.1}MB", r.feat_io_mb),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("shape checks:");
+    common::compare("RCNet/naive feature-I/O ratio", PAPER[3].4 / PAPER[2].4, rows[3].feat_io_mb / rows[2].feat_io_mb, "");
+    common::compare("conversion FLOPs shrink", PAPER[0].2 / PAPER[1].2, rows[0].gflops / rows[1].gflops, "x");
+    common::compare("RCNet params shrink vs conv", PAPER[1].3 / PAPER[3].3, rows[1].params_m / rows[3].params_m, "x");
+    common::time_it("full Table I pipeline (conversion+partition+rcnet)", 3, || {
+        let _ = ablation_rows(AblationTask::Yolov2);
+    });
+}

@@ -1,0 +1,41 @@
+//! Table II — DeepLabv3 ablation (PASCAL VOC 2012 setting), 100 KB buffer.
+
+#[path = "common.rs"]
+mod common;
+
+use rcnet_dla::report::ablation::{ablation_rows, AblationTask};
+use rcnet_dla::report::tables::TableBuilder;
+
+// Paper Table II: (variant, mIOU, GFLOPs, params M, feature I/O MB).
+const PAPER: [(&str, f64, f64, f64, f64); 5] = [
+    ("baseline", 70.5, 51.29, 39.64, 52.0),
+    ("conversion", 68.8, 23.28, 9.11, 50.2),
+    ("naive fusion", 68.8, 23.28, 9.11, 27.31),
+    ("rcnet", 67.1, 4.86, 2.2, 6.36),
+    ("rcnet+int8", 65.9, 4.86, 2.2, 6.36),
+];
+
+fn main() {
+    let rows = ablation_rows(AblationTask::DeepLabV3);
+    let mut t = TableBuilder::new("Table II — DeepLabv3 ablation (513x513, B=100KB)")
+        .header(&["variant", "acc paper", "acc proxy", "GFLOPs paper", "GFLOPs", "params paper", "params", "featIO paper", "featIO"]);
+    for (r, p) in rows.iter().zip(PAPER.iter()) {
+        t.row(vec![
+            r.variant.clone(),
+            format!("{:.1}", p.1),
+            format!("{:.1}", r.accuracy),
+            format!("{:.1}", p.2),
+            format!("{:.1}", r.gflops),
+            format!("{:.2}M", p.3),
+            format!("{:.2}M", r.params_m),
+            format!("{:.1}MB", p.4),
+            format!("{:.1}MB", r.feat_io_mb),
+        ]);
+    }
+    println!("{}", t.render());
+    common::compare("RCNet/naive feature-I/O ratio", PAPER[3].4 / PAPER[2].4, rows[3].feat_io_mb / rows[2].feat_io_mb, "");
+    common::compare("conversion params shrink", PAPER[0].3 / PAPER[1].3, rows[0].params_m / rows[1].params_m, "x");
+    common::time_it("full Table II pipeline", 3, || {
+        let _ = ablation_rows(AblationTask::DeepLabV3);
+    });
+}

@@ -1,0 +1,42 @@
+//! Table III — VGG16 ablation (ImageNet setting), 200 KB buffer.
+
+#[path = "common.rs"]
+mod common;
+
+use rcnet_dla::report::ablation::{ablation_rows, AblationTask};
+use rcnet_dla::report::tables::TableBuilder;
+
+// Paper Table III: (variant, Top-5, GFLOPs, params M, feature I/O MB).
+const PAPER: [(&str, f64, f64, f64, f64); 5] = [
+    ("baseline", 92.5, 30.74, 15.23, 48.6),
+    ("conversion", 90.2, 5.42, 4.45, 48.25),
+    ("naive fusion", 90.2, 5.42, 4.45, 16.32),
+    ("rcnet", 89.7, 3.89, 2.53, 7.68),
+    ("rcnet+int8", 89.5, 3.89, 2.53, 7.68),
+];
+
+fn main() {
+    let rows = ablation_rows(AblationTask::Vgg16);
+    let mut t = TableBuilder::new("Table III — VGG16 ablation (224x224, B=200KB)")
+        .header(&["variant", "acc paper", "acc proxy", "GFLOPs paper", "GFLOPs", "params paper", "params", "featIO paper", "featIO"]);
+    for (r, p) in rows.iter().zip(PAPER.iter()) {
+        t.row(vec![
+            r.variant.clone(),
+            format!("{:.1}", p.1),
+            format!("{:.1}", r.accuracy),
+            format!("{:.1}", p.2),
+            format!("{:.1}", r.gflops),
+            format!("{:.2}M", p.3),
+            format!("{:.2}M", r.params_m),
+            format!("{:.1}MB", p.4),
+            format!("{:.1}MB", r.feat_io_mb),
+        ]);
+    }
+    println!("{}", t.render());
+    common::compare("baseline params", PAPER[0].3, rows[0].params_m, "M");
+    common::compare("baseline GFLOPs", PAPER[0].2, rows[0].gflops, "G");
+    common::compare("RCNet/naive feature-I/O ratio", PAPER[3].4 / PAPER[2].4, rows[3].feat_io_mb / rows[2].feat_io_mb, "");
+    common::time_it("full Table III pipeline", 3, || {
+        let _ = ablation_rows(AblationTask::Vgg16);
+    });
+}

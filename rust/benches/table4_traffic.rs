@@ -1,0 +1,66 @@
+//! Table IV — memory traffic and DRAM energy at 30 FPS, 416x416 and
+//! 1280x720 (70 pJ/bit DDR3).
+
+#[path = "common.rs"]
+mod common;
+
+use rcnet_dla::fusion::{rcnet, FusionConfig, GammaSet, RcnetOptions};
+use rcnet_dla::model::zoo;
+use rcnet_dla::report::tables::TableBuilder;
+use rcnet_dla::traffic::TrafficModel;
+
+// Paper Table IV: (input, orig MB/s, prop MB/s, orig mJ, prop mJ, savings).
+const PAPER: [(&str, f64, f64, f64, f64, f64); 2] = [
+    ("416x416", 903.0, 137.0, 506.0, 77.0, 0.85),
+    ("1280x720", 4656.0, 585.0, 2607.0, 328.0, 0.87),
+];
+
+fn main() {
+    let converted = zoo::yolov2_converted(3, 5);
+    let gammas = GammaSet::synthetic(&converted, 7);
+    let cfg = FusionConfig::paper_default();
+    let out = rcnet(
+        &converted,
+        &gammas,
+        &cfg,
+        &RcnetOptions { target_params: Some(1_020_000), ..Default::default() },
+    );
+    let tm = TrafficModel::paper_chip();
+
+    let mut t = TableBuilder::new("Table IV — traffic & DRAM energy @30FPS (RC-YOLOv2)")
+        .header(&["input", "orig MB/s", "prop MB/s", "orig mJ", "prop mJ", "savings", "reduction"]);
+    let mut measured = Vec::new();
+    for (name, hw) in [("416x416", (416u32, 416u32)), ("1280x720", (720, 1280))] {
+        let (lbl, fus) = tm.compare(&out.network, &out.groups, hw, 30.0);
+        let orig_mj = lbl.dram_energy_mj(70.0);
+        let prop_mj = fus.dram_energy_mj(70.0);
+        let savings = 1.0 - fus.total_mb_s() / lbl.total_mb_s();
+        t.row(vec![
+            name.into(),
+            format!("{:.0}", lbl.total_mb_s()),
+            format!("{:.0}", fus.total_mb_s()),
+            format!("{:.0}", orig_mj),
+            format!("{:.0}", prop_mj),
+            format!("{:.0}%", savings * 100.0),
+            format!("{:.1}x", lbl.total_mb_s() / fus.total_mb_s()),
+        ]);
+        measured.push((lbl.total_mb_s(), fus.total_mb_s(), savings));
+    }
+    println!("{}", t.render());
+
+    println!("paper-vs-measured:");
+    for (i, p) in PAPER.iter().enumerate() {
+        common::compare(&format!("{} original traffic", p.0), p.1, measured[i].0, "MB/s");
+        common::compare(&format!("{} proposed traffic", p.0), p.2, measured[i].1, "MB/s");
+        common::compare(&format!("{} savings", p.0), p.5 * 100.0, measured[i].2 * 100.0, "%");
+    }
+    println!("\nheadline: paper 7.9x at HD; measured {:.1}x", measured[1].0 / measured[1].1);
+    println!("larger inputs benefit more: 416 {:.1}x < HD {:.1}x (paper: 6.5x < 7.9x)",
+        measured[0].0 / measured[0].1, measured[1].0 / measured[1].1);
+
+    common::time_it("traffic model (both schedules, both resolutions)", 50, || {
+        for hw in [(416, 416), (720, 1280)] {
+            let _ = tm.compare(&out.network, &out.groups, hw, 30.0);
+        }
+    });
+}

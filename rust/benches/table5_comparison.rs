@@ -1,0 +1,78 @@
+//! Table V — cross-design comparison. Our design point is *computed*
+//! (peak GOPS from the PE array, power from the calibrated model at the
+//! simulated HD30 workload); the other rows are the published numbers.
+
+#[path = "common.rs"]
+mod common;
+
+use rcnet_dla::config::ChipConfig;
+use rcnet_dla::dla::simulate_fused;
+use rcnet_dla::energy::{ChipPowerModel, ChipSummary};
+use rcnet_dla::fusion::{rcnet, FusionConfig, GammaSet, RcnetOptions};
+use rcnet_dla::model::zoo;
+use rcnet_dla::report::tables::TableBuilder;
+
+// Published rows (Table V): name, tech nm, peak GOPS, power mW, TOPS/W,
+// GOPS/mm2, fusion?
+const OTHERS: [(&str, u32, f64, f64, f64, f64, bool); 6] = [
+    ("Eyeriss [3]", 65, 67.2, 278.0, 0.241, 5.485, false),
+    ("Eyeriss v2 [14]", 65, 153.6, 460.5, 0.333, f64::NAN, false),
+    ("Envision [11]", 28, 408.0, 300.0, 10.0, 218.0, false),
+    ("Lin et al. [22]", 7, 3604.0, 1053.0, 6.83, 1185.0, true),
+    ("SRNPU [23]", 65, 232.1, 211.0, 1.1, 14.5, true),
+    ("THINKER [12]", 65, 409.6, 386.0, 1.06, 28.36, false),
+];
+
+fn main() {
+    let chip = ChipConfig::paper_chip();
+    let summary = ChipSummary::paper_chip();
+
+    // Simulated design point at HD30 for the measured power column.
+    let converted = zoo::yolov2_converted(3, 5);
+    let gammas = GammaSet::synthetic(&converted, 7);
+    let out = rcnet(
+        &converted,
+        &gammas,
+        &FusionConfig::paper_default(),
+        &RcnetOptions { target_params: Some(1_020_000), ..Default::default() },
+    );
+    let (sim, _) = simulate_fused(&out.network, &out.groups, (720, 1280), &chip).unwrap();
+    let ev = sim.events_per_second(30.0);
+    let power = ChipPowerModel::calibrated(ev).power(ev);
+
+    let mut t = TableBuilder::new("Table V — design comparison").header(&[
+        "design", "tech", "peak GOPS", "power mW", "TOPS/W", "GOPS/mm2", "fusion",
+    ]);
+    t.row(vec![
+        "This work (simulated)".into(),
+        "40nm".into(),
+        format!("{:.1}", chip.peak_gops()),
+        format!("{:.1}", power.total_mw()),
+        format!("{:.2}", chip.peak_gops() / power.total_mw()),
+        format!("{:.1}", summary.gops_per_mm2()),
+        "Y".into(),
+    ]);
+    for o in OTHERS {
+        t.row(vec![
+            o.0.into(),
+            format!("{}nm", o.1),
+            format!("{:.1}", o.2),
+            format!("{:.1}", o.3),
+            format!("{:.2}", o.4),
+            if o.5.is_nan() { "-".into() } else { format!("{:.1}", o.5) },
+            if o.6 { "Y".into() } else { "-".into() },
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("Fig. 11 design point checks:");
+    common::compare("peak throughput", 460.8, chip.peak_gops(), "GOPS");
+    common::compare("core power at HD30", 692.3, power.total_mw(), "mW");
+    common::compare("power efficiency", 0.66, chip.peak_gops() / power.total_mw(), "TOPS/W");
+    common::compare("area efficiency", 101.05, summary.gops_per_mm2(), "GOPS/mm2");
+    common::compare("total SRAM", 480.0, chip.total_sram_bytes() as f64 / 1024.0, "KB");
+
+    common::time_it("HD30 cycle simulation", 20, || {
+        let _ = simulate_fused(&out.network, &out.groups, (720, 1280), &chip).unwrap();
+    });
+}

@@ -1,0 +1,130 @@
+//! Chip and system configuration.
+
+use crate::model::Precision;
+use crate::util::kb;
+
+/// Hardware design point of the DLA. Defaults reproduce the fabricated
+/// chip (Fig. 11): TSMC 40 nm, 300 MHz, 768 MACs in 8 PE blocks of 32x3,
+/// 96 KB weight buffer, 2 x 192 KB unified (ping-pong) feature buffer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChipConfig {
+    /// Number of PE blocks (8 on the chip).
+    pub pe_blocks: u32,
+    /// Feature inputs broadcast per PE block (n = 32).
+    pub pe_inputs: u32,
+    /// Weight inputs broadcast per PE block (3, optimized for 3x3 convs).
+    pub pe_weights: u32,
+    /// Core clock in Hz (300 MHz).
+    pub clock_hz: f64,
+    /// Weight buffer capacity in bytes (96 KB).
+    pub weight_buffer_bytes: u64,
+    /// One half of the unified ping-pong feature buffer, bytes (192 KB).
+    pub unified_half_bytes: u64,
+    /// Number of SRAM banks in each unified-buffer half (8: the
+    /// write-masking transpose scatters one output vector across banks).
+    pub banks: u32,
+    /// Deployment precision.
+    pub precision: Precision,
+}
+
+impl ChipConfig {
+    /// The fabricated chip's design point.
+    pub fn paper_chip() -> Self {
+        ChipConfig {
+            pe_blocks: 8,
+            pe_inputs: 32,
+            pe_weights: 3,
+            clock_hz: 300e6,
+            weight_buffer_bytes: kb(96),
+            unified_half_bytes: kb(192),
+            banks: 8,
+            precision: Precision::INT8,
+        }
+    }
+
+    /// The prior design [5] (VWA) with the same PE count but layer-by-layer
+    /// scheduling — the paper's "Original" comparison column in Table IV.
+    pub fn prior_design() -> Self {
+        // Same compute fabric; the difference is scheduling (no group
+        // fusion), which lives in the traffic/simulator modules, not here.
+        Self::paper_chip()
+    }
+
+    /// Total MAC units.
+    pub fn total_macs(&self) -> u32 {
+        self.pe_blocks * self.pe_inputs * self.pe_weights
+    }
+
+    /// Peak throughput in GOPS (1 MAC = 2 ops).
+    pub fn peak_gops(&self) -> f64 {
+        self.total_macs() as f64 * 2.0 * self.clock_hz / 1e9
+    }
+
+    /// Total on-chip SRAM (weight + both unified halves) in bytes.
+    /// The chip reports 480 KB = 96 + 2 x 192.
+    pub fn total_sram_bytes(&self) -> u64 {
+        self.weight_buffer_bytes + 2 * self.unified_half_bytes
+    }
+
+    /// With a different weight buffer (for Fig. 9 / Fig. 13 sweeps).
+    pub fn with_weight_buffer(mut self, bytes: u64) -> Self {
+        self.weight_buffer_bytes = bytes;
+        self
+    }
+
+    /// With a different unified-buffer half size.
+    pub fn with_unified_half(mut self, bytes: u64) -> Self {
+        self.unified_half_bytes = bytes;
+        self
+    }
+}
+
+impl Default for ChipConfig {
+    fn default() -> Self {
+        Self::paper_chip()
+    }
+}
+
+/// Frame-rate / resolution operating points used throughout the paper.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Workload {
+    /// Input resolution (height, width).
+    pub hw: (u32, u32),
+    pub fps: f64,
+}
+
+impl Workload {
+    pub const HD30: Workload = Workload {
+        hw: (720, 1280),
+        fps: 30.0,
+    };
+    pub const FULLHD20: Workload = Workload {
+        hw: (1080, 1920),
+        fps: 20.0,
+    };
+    pub const VOC30: Workload = Workload {
+        hw: (416, 416),
+        fps: 30.0,
+    };
+    pub const IVS: Workload = Workload {
+        hw: (960, 1920),
+        fps: 30.0,
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_chip_peaks_at_460_gops() {
+        let c = ChipConfig::paper_chip();
+        assert_eq!(c.total_macs(), 768);
+        assert!((c.peak_gops() - 460.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sram_totals_480kb() {
+        assert_eq!(ChipConfig::paper_chip().total_sram_bytes(), kb(480));
+    }
+}

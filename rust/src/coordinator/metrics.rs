@@ -1,0 +1,79 @@
+//! Latency / throughput accounting for the frame pipeline.
+
+use std::time::Duration;
+
+use crate::util::{mean, percentile};
+
+/// Rolling metrics over a run.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    /// Per-frame end-to-end latency (ms): render handoff -> detections.
+    pub latency_ms: Vec<f64>,
+    /// Per-group execution time (ms), summed over frames.
+    pub group_ms: Vec<f64>,
+    /// Frames that missed the real-time deadline.
+    pub deadline_misses: usize,
+    pub frames: usize,
+}
+
+impl Metrics {
+    pub fn record_frame(&mut self, latency: Duration, deadline: Option<Duration>) {
+        let ms = latency.as_secs_f64() * 1e3;
+        self.latency_ms.push(ms);
+        self.frames += 1;
+        if let Some(d) = deadline {
+            if latency > d {
+                self.deadline_misses += 1;
+            }
+        }
+    }
+
+    pub fn record_group(&mut self, gi: usize, t: Duration) {
+        if self.group_ms.len() <= gi {
+            self.group_ms.resize(gi + 1, 0.0);
+        }
+        self.group_ms[gi] += t.as_secs_f64() * 1e3;
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        mean(&self.latency_ms)
+    }
+
+    pub fn p99_latency_ms(&self) -> f64 {
+        percentile(&self.latency_ms, 99.0)
+    }
+
+    pub fn fps(&self) -> f64 {
+        let m = self.mean_latency_ms();
+        if m <= 0.0 {
+            0.0
+        } else {
+            1e3 / m
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_aggregates() {
+        let mut m = Metrics::default();
+        m.record_frame(Duration::from_millis(10), Some(Duration::from_millis(33)));
+        m.record_frame(Duration::from_millis(50), Some(Duration::from_millis(33)));
+        assert_eq!(m.frames, 2);
+        assert_eq!(m.deadline_misses, 1);
+        assert!((m.mean_latency_ms() - 30.0).abs() < 0.5);
+        assert!(m.fps() > 30.0);
+    }
+
+    #[test]
+    fn group_accumulation() {
+        let mut m = Metrics::default();
+        m.record_group(2, Duration::from_millis(5));
+        m.record_group(2, Duration::from_millis(5));
+        assert_eq!(m.group_ms.len(), 3);
+        assert!((m.group_ms[2] - 10.0).abs() < 0.5);
+    }
+}

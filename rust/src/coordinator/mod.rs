@@ -1,0 +1,14 @@
+//! L3 coordinator — the request-path frame pipeline.
+//!
+//! A producer thread renders (or ingests) frames; the executor drives the
+//! per-fusion-group PJRT executables exactly the way the chip's
+//! controller walks fusion groups through the unified buffer; detection
+//! decode + NMS + metrics run inline. A real-time pacer enforces the
+//! target frame interval and reports deadline misses — the software
+//! analog of the chip's 30 FPS claim.
+
+mod metrics;
+mod pipeline;
+
+pub use metrics::Metrics;
+pub use pipeline::{run_pipeline, run_with_runtime, PipelineConfig, PipelineReport};

@@ -1,0 +1,170 @@
+//! The frame pipeline: synthetic camera -> PJRT fusion groups ->
+//! decode/NMS -> metrics + mAP.
+
+use std::fmt;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::data;
+use crate::detect::map::{GroundTruth, TaggedDetection};
+use crate::detect::{decode, mean_average_precision, nms, BBox};
+use crate::runtime::Runtime;
+
+use super::Metrics;
+
+/// Pipeline knobs.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub frames: usize,
+    /// Real-time pacing target; None = run as fast as possible.
+    pub target_fps: Option<f64>,
+    pub conf_threshold: f32,
+    pub nms_iou: f32,
+    pub seed: u64,
+    pub max_objects: u32,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            frames: 16,
+            target_fps: None,
+            conf_threshold: 0.25,
+            nms_iou: 0.45,
+            seed: 10_000_000, // disjoint from the training seed range
+            max_objects: 6,
+        }
+    }
+}
+
+/// Result of a pipeline run.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    pub frames: usize,
+    pub mean_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    pub fps: f64,
+    pub deadline_misses: usize,
+    pub map_50: f32,
+    /// mAP at the looser IoU 0.3 — reported alongside 0.5 because the
+    /// build-time training budget (a few hundred steps) leaves box
+    /// regression coarse; objectness/classification quality shows here.
+    pub map_30: f32,
+    pub detections: usize,
+    pub trained: bool,
+    pub input_hw: (usize, usize),
+}
+
+impl fmt::Display for PipelineReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "pipeline: {} frames @ {}x{} ({} weights)",
+            self.frames,
+            self.input_hw.1,
+            self.input_hw.0,
+            if self.trained { "trained" } else { "random" }
+        )?;
+        writeln!(
+            f,
+            "latency: mean {:.1} ms  p99 {:.1} ms  ({:.1} FPS, {} deadline misses)",
+            self.mean_latency_ms, self.p99_latency_ms, self.fps, self.deadline_misses
+        )?;
+        write!(
+            f,
+            "detections: {}  mAP@0.5: {:.3}  mAP@0.3: {:.3}",
+            self.detections, self.map_50, self.map_30
+        )
+    }
+}
+
+/// Run the full pipeline against the artifacts at `manifest_path`.
+pub fn run_pipeline(
+    manifest_path: &str,
+    frames: usize,
+    cfg: Option<PipelineConfig>,
+) -> Result<PipelineReport> {
+    let mut cfg = cfg.unwrap_or_default();
+    cfg.frames = frames;
+    let rt = Runtime::load(manifest_path)?;
+    run_with_runtime(&rt, &cfg)
+}
+
+/// Run against an already-loaded runtime (reused by the e2e example and
+/// the integration tests to avoid recompiling executables).
+pub fn run_with_runtime(rt: &Runtime, cfg: &PipelineConfig) -> Result<PipelineReport> {
+    let (h, w) = rt.manifest.input_hw;
+    let classes = rt.manifest.classes;
+    let deadline = cfg.target_fps.map(|f| Duration::from_secs_f64(1.0 / f));
+
+    // Producer thread: renders frames ahead of the executor (bounded
+    // queue = backpressure, like the chip's frame FIFO).
+    let (tx, rx) = mpsc::sync_channel::<(usize, data::Scene)>(2);
+    let seed0 = cfg.seed;
+    let max_objects = cfg.max_objects;
+    let n_frames = cfg.frames;
+    let producer = std::thread::spawn(move || {
+        for i in 0..n_frames {
+            let scene = data::render(seed0 + i as u64, h, w, max_objects);
+            if tx.send((i, scene)).is_err() {
+                break;
+            }
+        }
+    });
+
+    let mut metrics = Metrics::default();
+    let mut all_dets: Vec<TaggedDetection> = Vec::new();
+    let mut all_gts: Vec<GroundTruth> = Vec::new();
+    let mut next_tick = Instant::now();
+
+    while let Ok((i, scene)) = rx.recv() {
+        if let Some(d) = deadline {
+            // Real-time pacing: start each frame on its tick.
+            let now = Instant::now();
+            if now < next_tick {
+                std::thread::sleep(next_tick - now);
+            }
+            next_tick += d;
+        }
+        let t0 = Instant::now();
+        // Walk fusion groups exactly like the chip controller.
+        let mut x = scene.image.clone();
+        for (gi, g) in rt.groups.iter().enumerate() {
+            let tg = Instant::now();
+            x = g.execute(&x)?;
+            metrics.record_group(gi, tg.elapsed());
+        }
+        let (gh, gw, _) = rt.groups.last().unwrap().meta.out_shape;
+        let dets = nms(decode(&x, gh, gw, classes, cfg.conf_threshold), cfg.nms_iou);
+        metrics.record_frame(t0.elapsed(), deadline);
+
+        for d in dets {
+            all_dets.push(TaggedDetection { image: i, det: d });
+        }
+        for o in &scene.objects {
+            all_gts.push(GroundTruth {
+                image: i,
+                class: o.class,
+                bbox: BBox { cx: o.cx, cy: o.cy, w: o.w, h: o.h },
+            });
+        }
+    }
+    producer.join().ok();
+
+    let map_50 = mean_average_precision(&all_dets, &all_gts, classes, 0.5);
+    let map_30 = mean_average_precision(&all_dets, &all_gts, classes, 0.3);
+    Ok(PipelineReport {
+        frames: metrics.frames,
+        mean_latency_ms: metrics.mean_latency_ms(),
+        p99_latency_ms: metrics.p99_latency_ms(),
+        fps: metrics.fps(),
+        deadline_misses: metrics.deadline_misses,
+        map_50,
+        map_30,
+        detections: all_dets.len(),
+        trained: rt.manifest.trained,
+        input_hw: rt.manifest.input_hw,
+    })
+}

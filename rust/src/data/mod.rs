@@ -1,0 +1,5 @@
+//! Synthetic HD traffic-scene dataset (the IVS_3cls stand-in).
+
+mod synthetic;
+
+pub use synthetic::{render, scene_objects, Scene, SceneObject};

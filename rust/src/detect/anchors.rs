@@ -1,0 +1,42 @@
+//! Anchor set — MUST match `python/compile/detect.py` (the trainer
+//! assigns targets with the same table and rule).
+
+/// Normalized (w, h) anchor sizes.
+pub const ANCHORS: [(f32, f32); 5] = [
+    (0.08, 0.10),
+    (0.18, 0.20),
+    (0.32, 0.32),
+    (0.45, 0.28),
+    (0.28, 0.45),
+];
+
+/// Anchor with the closest size (L2 in wh space).
+pub fn best_anchor(w: f32, h: f32) -> usize {
+    let mut best = 0;
+    let mut bd = f32::MAX;
+    for (i, (aw, ah)) in ANCHORS.iter().enumerate() {
+        let d = (w - aw).powi(2) + (h - ah).powi(2);
+        if d < bd {
+            bd = d;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_sizes_pick_themselves() {
+        for (i, (w, h)) in ANCHORS.iter().enumerate() {
+            assert_eq!(best_anchor(*w, *h), i);
+        }
+    }
+
+    #[test]
+    fn small_box_picks_small_anchor() {
+        assert_eq!(best_anchor(0.05, 0.08), 0);
+    }
+}

@@ -1,0 +1,114 @@
+//! Head-tensor decode — mirrors `python/compile/detect.py` semantics:
+//! per cell (row, col) and anchor a, the head emits
+//! `[tx, ty, tw, th, to, class logits...]`:
+//!   cx = (col + sigmoid(tx)) / gw,  bw = anchor_w * exp(clip(tw, ±4))
+//!   objectness = sigmoid(to),       class = argmax softmax(logits)
+
+use super::anchors::ANCHORS;
+use super::BBox;
+
+/// One decoded detection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Detection {
+    pub bbox: BBox,
+    pub class: usize,
+    pub score: f32,
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Decode a raw head tensor (row-major `(gh, gw, A*(5+classes))` f32)
+/// into detections above `conf_threshold`.
+pub fn decode(
+    head: &[f32],
+    gh: usize,
+    gw: usize,
+    classes: usize,
+    conf_threshold: f32,
+) -> Vec<Detection> {
+    let a = ANCHORS.len();
+    let stride_cell = a * (5 + classes);
+    debug_assert_eq!(head.len(), gh * gw * stride_cell);
+    let mut out = Vec::new();
+    for row in 0..gh {
+        for col in 0..gw {
+            let base_cell = (row * gw + col) * stride_cell;
+            for k in 0..a {
+                let b = base_cell + k * (5 + classes);
+                let (tx, ty, tw, th, to) = (head[b], head[b + 1], head[b + 2], head[b + 3], head[b + 4]);
+                let obj = sigmoid(to);
+                if obj < conf_threshold {
+                    continue;
+                }
+                // Class via softmax argmax; score = obj * p(class).
+                let logits = &head[b + 5..b + 5 + classes];
+                let max_l = logits.iter().cloned().fold(f32::MIN, f32::max);
+                let exps: Vec<f32> = logits.iter().map(|l| (l - max_l).exp()).collect();
+                let sum: f32 = exps.iter().sum();
+                let (class, p) = exps
+                    .iter()
+                    .enumerate()
+                    .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                    .map(|(i, e)| (i, e / sum))
+                    .unwrap();
+                let score = obj * p;
+                if score < conf_threshold {
+                    continue;
+                }
+                let (aw, ah) = ANCHORS[k];
+                out.push(Detection {
+                    bbox: BBox {
+                        cx: (col as f32 + sigmoid(tx)) / gw as f32,
+                        cy: (row as f32 + sigmoid(ty)) / gh as f32,
+                        w: aw * tw.clamp(-4.0, 4.0).exp(),
+                        h: ah * th.clamp(-4.0, 4.0).exp(),
+                    },
+                    class,
+                    score,
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn head_with_one_box(gh: usize, gw: usize, classes: usize) -> Vec<f32> {
+        let a = ANCHORS.len();
+        let mut head = vec![-10.0f32; gh * gw * a * (5 + classes)];
+        // Activate cell (1, 2), anchor 1, class 2.
+        let b = ((1 * gw + 2) * a + 1) * (5 + classes);
+        head[b] = 0.0; // tx -> 0.5
+        head[b + 1] = 0.0;
+        head[b + 2] = 0.0; // tw -> anchor size
+        head[b + 3] = 0.0;
+        head[b + 4] = 8.0; // high objectness
+        head[b + 5 + 2] = 6.0;
+        head
+    }
+
+    #[test]
+    fn decodes_single_box() {
+        let (gh, gw, classes) = (4, 6, 3);
+        let dets = decode(&head_with_one_box(gh, gw, classes), gh, gw, classes, 0.5);
+        assert_eq!(dets.len(), 1);
+        let d = &dets[0];
+        assert_eq!(d.class, 2);
+        assert!((d.bbox.cx - 2.5 / 6.0).abs() < 1e-6);
+        assert!((d.bbox.cy - 1.5 / 4.0).abs() < 1e-6);
+        assert!((d.bbox.w - ANCHORS[1].0).abs() < 1e-6);
+        assert!(d.score > 0.9);
+    }
+
+    #[test]
+    fn threshold_filters() {
+        let (gh, gw, classes) = (4, 6, 3);
+        let dets = decode(&head_with_one_box(gh, gw, classes), gh, gw, classes, 0.9999);
+        assert!(dets.is_empty());
+    }
+}

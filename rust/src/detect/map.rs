@@ -1,0 +1,162 @@
+//! VOC-style mean average precision (the paper's accuracy metric).
+//!
+//! 11-point interpolated AP at IoU 0.5 (the PASCAL VOC 2007 protocol the
+//! paper evaluates with), averaged over classes.
+
+use super::{BBox, Detection};
+
+/// A ground-truth box with its class and image id.
+#[derive(Debug, Clone, Copy)]
+pub struct GroundTruth {
+    pub image: usize,
+    pub class: usize,
+    pub bbox: BBox,
+}
+
+/// Detection tagged with its image id.
+#[derive(Debug, Clone)]
+pub struct TaggedDetection {
+    pub image: usize,
+    pub det: Detection,
+}
+
+/// 11-point interpolated AP for one class.
+pub fn average_precision(
+    dets: &[TaggedDetection],
+    gts: &[GroundTruth],
+    class: usize,
+    iou_thr: f32,
+) -> f32 {
+    let gt: Vec<&GroundTruth> = gts.iter().filter(|g| g.class == class).collect();
+    if gt.is_empty() {
+        return 0.0;
+    }
+    let mut ds: Vec<&TaggedDetection> =
+        dets.iter().filter(|d| d.det.class == class).collect();
+    ds.sort_by(|a, b| b.det.score.partial_cmp(&a.det.score).unwrap());
+
+    let mut matched = vec![false; gt.len()];
+    let mut tp = Vec::with_capacity(ds.len());
+    for d in &ds {
+        // Best unmatched GT in the same image.
+        let mut best: Option<(usize, f32)> = None;
+        for (gi, g) in gt.iter().enumerate() {
+            if g.image != d.image || matched[gi] {
+                continue;
+            }
+            let iou = g.bbox.iou(&d.det.bbox);
+            if iou >= iou_thr && best.map_or(true, |(_, b)| iou > b) {
+                best = Some((gi, iou));
+            }
+        }
+        match best {
+            Some((gi, _)) => {
+                matched[gi] = true;
+                tp.push(true);
+            }
+            None => tp.push(false),
+        }
+    }
+
+    // Precision-recall curve.
+    let mut cum_tp = 0usize;
+    let mut prec = Vec::with_capacity(tp.len());
+    let mut rec = Vec::with_capacity(tp.len());
+    for (i, &t) in tp.iter().enumerate() {
+        if t {
+            cum_tp += 1;
+        }
+        prec.push(cum_tp as f32 / (i + 1) as f32);
+        rec.push(cum_tp as f32 / gt.len() as f32);
+    }
+
+    // 11-point interpolation.
+    let mut ap = 0.0;
+    for k in 0..=10 {
+        let r = k as f32 / 10.0;
+        let p = prec
+            .iter()
+            .zip(&rec)
+            .filter(|(_, &rr)| rr >= r)
+            .map(|(&pp, _)| pp)
+            .fold(0.0f32, f32::max);
+        ap += p / 11.0;
+    }
+    ap
+}
+
+/// mAP over `classes`.
+pub fn mean_average_precision(
+    dets: &[TaggedDetection],
+    gts: &[GroundTruth],
+    classes: usize,
+    iou_thr: f32,
+) -> f32 {
+    if classes == 0 {
+        return 0.0;
+    }
+    (0..classes)
+        .map(|c| average_precision(dets, gts, c, iou_thr))
+        .sum::<f32>()
+        / classes as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gt(image: usize, class: usize, cx: f32) -> GroundTruth {
+        GroundTruth { image, class, bbox: BBox { cx, cy: 0.5, w: 0.2, h: 0.2 } }
+    }
+
+    fn det(image: usize, class: usize, cx: f32, score: f32) -> TaggedDetection {
+        TaggedDetection {
+            image,
+            det: Detection { bbox: BBox { cx, cy: 0.5, w: 0.2, h: 0.2 }, class, score },
+        }
+    }
+
+    #[test]
+    fn perfect_detections_ap_1() {
+        let gts = vec![gt(0, 0, 0.3), gt(0, 0, 0.7), gt(1, 0, 0.5)];
+        let dets = vec![det(0, 0, 0.3, 0.9), det(0, 0, 0.7, 0.8), det(1, 0, 0.5, 0.95)];
+        let ap = average_precision(&dets, &gts, 0, 0.5);
+        assert!((ap - 1.0).abs() < 1e-5, "{ap}");
+    }
+
+    #[test]
+    fn misses_reduce_ap() {
+        let gts = vec![gt(0, 0, 0.3), gt(0, 0, 0.7)];
+        let dets = vec![det(0, 0, 0.3, 0.9)];
+        let ap = average_precision(&dets, &gts, 0, 0.5);
+        assert!(ap < 0.6, "{ap}");
+        assert!(ap > 0.3, "{ap}");
+    }
+
+    #[test]
+    fn false_positives_reduce_ap() {
+        let gts = vec![gt(0, 0, 0.3)];
+        let dets = vec![
+            det(0, 0, 0.9, 0.99), // FP ranked first
+            det(0, 0, 0.3, 0.5),
+        ];
+        let ap = average_precision(&dets, &gts, 0, 0.5);
+        assert!(ap < 0.75, "{ap}");
+    }
+
+    #[test]
+    fn duplicate_detection_counts_once() {
+        let gts = vec![gt(0, 0, 0.3)];
+        let dets = vec![det(0, 0, 0.3, 0.9), det(0, 0, 0.31, 0.85)];
+        let ap = average_precision(&dets, &gts, 0, 0.5);
+        assert!(ap <= 1.0001 && ap > 0.9, "{ap}"); // 11-pt interp: max-precision at recall>=r
+    }
+
+    #[test]
+    fn map_averages_classes() {
+        let gts = vec![gt(0, 0, 0.3), gt(0, 1, 0.7)];
+        let dets = vec![det(0, 0, 0.3, 0.9)]; // only class 0 detected
+        let m = mean_average_precision(&dets, &gts, 2, 0.5);
+        assert!((m - 0.5).abs() < 0.05, "{m}");
+    }
+}

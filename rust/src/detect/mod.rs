@@ -1,0 +1,81 @@
+//! Detection post-processing: anchor decode, NMS, VOC mAP.
+//!
+//! Runs entirely in rust on the request path (the chip does the same in
+//! its host software — the DLA emits the raw head tensor).
+
+pub mod anchors;
+pub mod decode;
+pub mod map;
+pub mod nms;
+
+pub use anchors::{best_anchor, ANCHORS};
+pub use decode::{decode, Detection};
+pub use map::{average_precision, mean_average_precision, GroundTruth};
+pub use nms::nms;
+
+/// An axis-aligned box, normalized to [0,1] image coordinates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BBox {
+    pub cx: f32,
+    pub cy: f32,
+    pub w: f32,
+    pub h: f32,
+}
+
+impl BBox {
+    pub fn x0(&self) -> f32 {
+        self.cx - self.w / 2.0
+    }
+    pub fn y0(&self) -> f32 {
+        self.cy - self.h / 2.0
+    }
+    pub fn x1(&self) -> f32 {
+        self.cx + self.w / 2.0
+    }
+    pub fn y1(&self) -> f32 {
+        self.cy + self.h / 2.0
+    }
+
+    pub fn area(&self) -> f32 {
+        self.w.max(0.0) * self.h.max(0.0)
+    }
+
+    /// Intersection-over-union.
+    pub fn iou(&self, o: &BBox) -> f32 {
+        let ix = (self.x1().min(o.x1()) - self.x0().max(o.x0())).max(0.0);
+        let iy = (self.y1().min(o.y1()) - self.y0().max(o.y0())).max(0.0);
+        let inter = ix * iy;
+        let union = self.area() + o.area() - inter;
+        if union <= 0.0 {
+            0.0
+        } else {
+            inter / union
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iou_identity() {
+        let b = BBox { cx: 0.5, cy: 0.5, w: 0.2, h: 0.2 };
+        assert!((b.iou(&b) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iou_disjoint() {
+        let a = BBox { cx: 0.2, cy: 0.2, w: 0.1, h: 0.1 };
+        let b = BBox { cx: 0.8, cy: 0.8, w: 0.1, h: 0.1 };
+        assert_eq!(a.iou(&b), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        let a = BBox { cx: 0.5, cy: 0.5, w: 0.2, h: 0.2 };
+        let b = BBox { cx: 0.6, cy: 0.5, w: 0.2, h: 0.2 };
+        // Intersection 0.1x0.2, union 0.04+0.04-0.02.
+        assert!((a.iou(&b) - (0.02 / 0.06)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,55 @@
+//! Per-class greedy non-maximum suppression.
+
+use super::Detection;
+
+/// Suppress detections overlapping a higher-scoring detection of the
+/// same class by more than `iou_threshold`. Returns survivors sorted by
+/// descending score.
+pub fn nms(mut dets: Vec<Detection>, iou_threshold: f32) -> Vec<Detection> {
+    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    let mut keep: Vec<Detection> = Vec::with_capacity(dets.len());
+    for d in dets {
+        let suppressed = keep
+            .iter()
+            .any(|k| k.class == d.class && k.bbox.iou(&d.bbox) > iou_threshold);
+        if !suppressed {
+            keep.push(d);
+        }
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detect::BBox;
+
+    fn det(cx: f32, score: f32, class: usize) -> Detection {
+        Detection { bbox: BBox { cx, cy: 0.5, w: 0.2, h: 0.2 }, class, score }
+    }
+
+    #[test]
+    fn suppresses_overlapping_same_class() {
+        let kept = nms(vec![det(0.50, 0.9, 0), det(0.52, 0.8, 0)], 0.5);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].score, 0.9);
+    }
+
+    #[test]
+    fn keeps_different_classes() {
+        let kept = nms(vec![det(0.50, 0.9, 0), det(0.52, 0.8, 1)], 0.5);
+        assert_eq!(kept.len(), 2);
+    }
+
+    #[test]
+    fn keeps_distant_boxes() {
+        let kept = nms(vec![det(0.2, 0.9, 0), det(0.8, 0.8, 0)], 0.5);
+        assert_eq!(kept.len(), 2);
+    }
+
+    #[test]
+    fn sorted_by_score() {
+        let kept = nms(vec![det(0.2, 0.5, 0), det(0.8, 0.9, 0)], 0.5);
+        assert!(kept[0].score >= kept[1].score);
+    }
+}

@@ -1,0 +1,155 @@
+//! The unified buffer half with SRAM byte-write-masking (Fig. 6).
+//!
+//! Problem (§III-B): within a fusion group the input buffer is addressed
+//! along the *spatial* dimension (a convolution consumes, per read, the
+//! channel vector of one pixel) while the accumulator emits results along
+//! the *channel* dimension (one output channel across a vector of pixels).
+//! Storing outputs naively would force a transpose pass before the next
+//! layer could stream them back in.
+//!
+//! Solution: the buffer is split into 8 banks; pixel `p` lives in bank
+//! `p % 8`, its channels packed contiguously. A channel-major output
+//! vector (channel `c` of pixels `p..p+8`) touches all 8 banks at the
+//! same byte offset, so the SRAM's byte-write-mask commits all 8 values
+//! in a single masked write per bank — the transpose costs zero extra
+//! cycles, and the next layer's spatial-major reads are bank-aligned.
+
+/// One half of the unified ping-pong buffer.
+#[derive(Debug, Clone)]
+pub struct UnifiedBufferHalf {
+    banks: usize,
+    /// Per-bank byte storage.
+    data: Vec<Vec<u8>>,
+    /// Channels per pixel currently configured (word layout).
+    channels: usize,
+    /// Masked-write cycles performed.
+    pub write_cycles: u64,
+    /// Read cycles performed.
+    pub read_cycles: u64,
+}
+
+impl UnifiedBufferHalf {
+    /// Create a half with `banks` banks of `bank_bytes` each, laid out for
+    /// `channels` channels per pixel.
+    pub fn new(banks: usize, bank_bytes: usize, channels: usize) -> Self {
+        UnifiedBufferHalf {
+            banks,
+            data: vec![vec![0u8; bank_bytes]; banks],
+            channels,
+            write_cycles: 0,
+            read_cycles: 0,
+        }
+    }
+
+    /// The chip's 192 KB half: 8 banks x 24 KB.
+    pub fn paper_half(channels: usize) -> Self {
+        Self::new(8, 24 * 1024, channels)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.banks * self.data[0].len()
+    }
+
+    /// Max pixels storable at the configured channel count.
+    pub fn max_pixels(&self) -> usize {
+        (self.data[0].len() / self.channels) * self.banks
+    }
+
+    fn addr(&self, pixel: usize, ch: usize) -> (usize, usize) {
+        let bank = pixel % self.banks;
+        let slot = pixel / self.banks;
+        (bank, slot * self.channels + ch)
+    }
+
+    /// Spatial-major read: the full channel vector of one pixel (what the
+    /// PE array consumes). One bank burst -> one read cycle.
+    pub fn read_pixel(&mut self, pixel: usize) -> Vec<u8> {
+        self.read_cycles += 1;
+        (0..self.channels).map(|c| {
+            let (b, o) = self.addr(pixel, c);
+            self.data[b][o]
+        }).collect()
+    }
+
+    /// Channel-major masked write: value of channel `ch` for `banks`
+    /// consecutive pixels starting at `px_base` (what the accumulator
+    /// emits). Touches every bank once at one offset -> one write cycle,
+    /// byte mask enabled (Fig. 6c).
+    pub fn write_channel_vector(&mut self, px_base: usize, ch: usize, vals: &[u8]) {
+        assert!(vals.len() <= self.banks);
+        assert_eq!(px_base % self.banks, 0, "vector writes are bank-aligned");
+        self.write_cycles += 1;
+        for (i, &v) in vals.iter().enumerate() {
+            let (b, o) = self.addr(px_base + i, ch);
+            self.data[b][o] = v;
+        }
+    }
+
+    /// Plain spatial-major write (used when loading a group input tile
+    /// from DRAM, which already arrives pixel-major).
+    pub fn write_pixel(&mut self, pixel: usize, vals: &[u8]) {
+        assert_eq!(vals.len(), self.channels);
+        self.write_cycles += 1;
+        for (c, &v) in vals.iter().enumerate() {
+            let (b, o) = self.addr(pixel, c);
+            self.data[b][o] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_roundtrip() {
+        // Accumulator emits channel-major; reader sees pixel-major.
+        let mut buf = UnifiedBufferHalf::new(8, 1024, 4);
+        // 8 pixels x 4 channels, value = 10*pixel + channel.
+        for ch in 0..4 {
+            let vals: Vec<u8> = (0..8).map(|p| (10 * p + ch) as u8).collect();
+            buf.write_channel_vector(0, ch, &vals);
+        }
+        for p in 0..8 {
+            let px = buf.read_pixel(p);
+            assert_eq!(px, vec![(10 * p) as u8, (10 * p + 1) as u8, (10 * p + 2) as u8, (10 * p + 3) as u8]);
+        }
+    }
+
+    #[test]
+    fn one_cycle_per_masked_write() {
+        let mut buf = UnifiedBufferHalf::new(8, 1024, 8);
+        for ch in 0..8 {
+            buf.write_channel_vector(0, ch, &[ch as u8; 8]);
+        }
+        // 8 channel vectors = 8 cycles for a full 8x8 block — the "no
+        // extra overhead" claim of §III-B (naive layout would need an
+        // extra transpose pass).
+        assert_eq!(buf.write_cycles, 8);
+    }
+
+    #[test]
+    fn capacity_and_pixels() {
+        let half = UnifiedBufferHalf::paper_half(64);
+        assert_eq!(half.capacity(), 192 * 1024);
+        assert_eq!(half.max_pixels(), 192 * 1024 / 64);
+    }
+
+    #[test]
+    fn pixels_stripe_across_banks() {
+        let mut buf = UnifiedBufferHalf::new(8, 64, 2);
+        for p in 0..16 {
+            buf.write_pixel(p, &[p as u8, (p + 100) as u8]);
+        }
+        for p in 0..16 {
+            assert_eq!(buf.read_pixel(p), vec![p as u8, (p + 100) as u8]);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn misaligned_vector_write_panics() {
+        let mut buf = UnifiedBufferHalf::new(8, 64, 2);
+        buf.write_channel_vector(3, 0, &[0; 8]);
+    }
+}

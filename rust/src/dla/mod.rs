@@ -1,0 +1,38 @@
+//! Cycle-approximate simulator of the DLA (§III, Fig. 5).
+//!
+//! The fabricated chip is a systolic-array DLA with tile-based scheduling:
+//! 8 PE blocks of 32x3 MACs, a 96 KB weight buffer, and a 2 x 192 KB
+//! unified ping-pong feature buffer whose SRAM byte-write-masking
+//! implements the transposed addressing of Fig. 6. We model it at event
+//! granularity — every quantity the paper reports (latency, utilization,
+//! SRAM/DRAM traffic, energy breakdown) is a *count* over the same events
+//! the RTL would execute, which is what makes the reproduction meaningful
+//! without the silicon.
+//!
+//! * [`pe`] — per-layer compute-cycle model of the MAC array.
+//! * [`buffer`] — the banked unified buffer with write-masking transpose.
+//! * [`schedule`] — layer-by-layer vs group-fused frame schedules.
+
+pub mod buffer;
+pub mod pe;
+pub mod schedule;
+
+pub use buffer::UnifiedBufferHalf;
+pub use pe::{layer_compute_cycles, layer_sram_bytes, LayerPeStats};
+pub use schedule::{simulate_fused, simulate_layer_by_layer, FrameSim, GroupSim, LayerSim};
+
+/// DDR3 peak bandwidth the paper assumes available (12.8 GB/s).
+pub const DDR3_BYTES_PER_S: f64 = 12.8e9;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+
+    #[test]
+    fn dram_bytes_per_cycle() {
+        let chip = ChipConfig::paper_chip();
+        let bpc = DDR3_BYTES_PER_S / chip.clock_hz;
+        assert!((bpc - 42.666).abs() < 0.01);
+    }
+}

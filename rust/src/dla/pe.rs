@@ -1,0 +1,171 @@
+//! Compute-cycle model of the PE array.
+//!
+//! One PE block is an `n x 3` MAC array (n = 32): n feature inputs
+//! broadcast horizontally, 3 weights broadcast vertically ("to optimize
+//! for 3x3 convolutions"), products summed diagonally into the
+//! accumulator. Eight blocks run in parallel.
+//!
+//! Mapping (vectorwise, after the VWA prior design [5]):
+//! * the 32 lanes cover 32 horizontally-adjacent output pixels;
+//! * the 3 weight lanes cover one kernel row of a 3x3 (so a 3x3 kernel
+//!   takes 3 cycles per input channel), or 3 output channels for a 1x1;
+//! * the 8 blocks cover 8 output channels (dense/depthwise 3x3) or 24
+//!   (1x1).
+//!
+//! Utilization losses therefore appear exactly where the paper says they
+//! do: output widths not a multiple of 32 (small maps after many pools —
+//! guideline 2), channel counts not a multiple of the block fan-out, and
+//! the 3-channel first layer (guideline 1).
+
+use crate::config::ChipConfig;
+use crate::model::{Layer, LayerKind, LayerShape};
+
+/// Compute statistics of one layer on the PE array.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerPeStats {
+    pub macs: u64,
+    pub compute_cycles: u64,
+    /// macs / (cycles * total_macs) — fraction of peak.
+    pub utilization: f64,
+}
+
+/// Cycles to compute `layer` for an output tile of `out_h` rows and
+/// `out_w` columns (full layer: pass the full output shape).
+pub fn tile_compute_cycles(layer: &Layer, out_h: u32, out_w: u32, chip: &ChipConfig) -> u64 {
+    let n = chip.pe_inputs as u64; // 32 lanes
+    let blocks = chip.pe_blocks as u64; // 8
+    let wl = chip.pe_weights as u64; // 3 weight lanes
+    let px_groups = (out_w as u64).div_ceil(n) * out_h as u64;
+    let c_in = layer.c_in as u64;
+    let c_out = layer.c_out as u64;
+    match layer.kind {
+        LayerKind::Conv { k, .. } => {
+            // 3 weight-lane cycles cover one kernel row; blocks fan out
+            // over output channels.
+            let k = k as u64;
+            px_groups * c_in * k * k.div_ceil(wl) * c_out.div_ceil(blocks)
+        }
+        LayerKind::DwConv { k, .. } => {
+            let k = k as u64;
+            px_groups * k * k.div_ceil(wl) * c_in.div_ceil(blocks)
+        }
+        LayerKind::PwConv { .. } | LayerKind::Dense => {
+            // 1x1: the 3 weight lanes fan out over output channels too.
+            px_groups * c_in * c_out.div_ceil(wl * blocks)
+        }
+        // Pool / reorg / concat / upsample run in the write path.
+        _ => 0,
+    }
+}
+
+/// Full-layer compute stats at shape `s`.
+pub fn layer_compute_cycles(layer: &Layer, s: &LayerShape, chip: &ChipConfig) -> LayerPeStats {
+    let macs = layer.macs_per_out_px() * s.out_px();
+    let cycles = tile_compute_cycles(layer, s.h_out, s.w_out, chip);
+    let peak = chip.total_macs() as u64;
+    let utilization = if cycles == 0 {
+        0.0
+    } else {
+        macs as f64 / (cycles as f64 * peak as f64)
+    };
+    LayerPeStats { macs, compute_cycles: cycles, utilization }
+}
+
+/// On-chip SRAM bytes a layer moves (unified buffer feature reads/writes
+/// plus weight-buffer fetches, amortized across the 32-lane broadcast).
+pub fn layer_sram_bytes(layer: &Layer, s: &LayerShape, chip: &ChipConfig) -> u64 {
+    let (r, w, wb) = layer_sram_components(layer, s, chip);
+    r + w + wb
+}
+
+/// SRAM traffic split by port: (unified-buffer reads, unified-buffer
+/// writes, weight-buffer reads). The three SRAMs have independent ports,
+/// so the streaming bound is their max, not their sum.
+pub fn layer_sram_components(layer: &Layer, s: &LayerShape, chip: &ChipConfig) -> (u64, u64, u64) {
+    let act = chip.precision.act_bytes;
+    let reads = s.in_px() * layer.c_in as u64 * act;
+    let writes = s.out_px() * layer.c_out as u64 * act;
+    let macs = layer.macs_per_out_px() * s.out_px();
+    // One weight byte fetched per 32-lane MAC row per cycle:
+    // macs / pe_inputs fetches of `weight_bytes` each.
+    let weights = macs / chip.pe_inputs as u64 * chip.precision.weight_bytes;
+    (reads, writes, weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Act;
+
+    fn chip() -> ChipConfig {
+        ChipConfig::paper_chip()
+    }
+
+    fn shape(h: u32, w: u32) -> LayerShape {
+        LayerShape { h_in: h, w_in: w, h_out: h, w_out: w }
+    }
+
+    #[test]
+    fn dense_3x3_hits_peak_on_aligned_shapes() {
+        // 64 wide (2x32), c_in 16, c_out 8k-aligned: full utilization.
+        let l = Layer::conv("c", 16, 64, 3, 1, Act::Relu6);
+        let st = layer_compute_cycles(&l, &shape(8, 64), &chip());
+        assert!((st.utilization - 1.0).abs() < 1e-9, "{st:?}");
+    }
+
+    #[test]
+    fn pw_hits_peak_when_cout_is_24_aligned() {
+        let l = Layer::pw("p", 32, 48, Act::None);
+        let st = layer_compute_cycles(&l, &shape(8, 64), &chip());
+        assert!((st.utilization - 1.0).abs() < 1e-9, "{st:?}");
+    }
+
+    #[test]
+    fn narrow_maps_lose_utilization() {
+        // 40-wide output: ceil(40/32) = 2 groups for 40 px -> 62.5%.
+        let l = Layer::conv("c", 16, 64, 3, 1, Act::Relu6);
+        let st = layer_compute_cycles(&l, &shape(8, 40), &chip());
+        assert!((st.utilization - 40.0 / 64.0).abs() < 1e-9, "{st:?}");
+    }
+
+    #[test]
+    fn misaligned_channels_lose_utilization() {
+        // c_out = 9 on 8 blocks -> 9/16 of peak for dense conv.
+        let l = Layer::conv("c", 16, 9, 3, 1, Act::Relu6);
+        let st = layer_compute_cycles(&l, &shape(8, 64), &chip());
+        assert!(st.utilization < 0.6, "{st:?}");
+    }
+
+    #[test]
+    fn five_by_five_kernel_pads_weight_lanes() {
+        // k=5: 5 rows x ceil(5/3)=2 lane-cycles -> 5*6=30 lane-rows for 25
+        // weights -> 25/30 utilization.
+        let l = Layer::conv("c", 16, 64, 5, 1, Act::Relu6);
+        let st = layer_compute_cycles(&l, &shape(8, 64), &chip());
+        assert!((st.utilization - 25.0 / 30.0).abs() < 1e-9, "{st:?}");
+    }
+
+    #[test]
+    fn dw_compute_cycles_scale_with_channels_not_squared() {
+        let l8 = Layer::dw("d", 8, 1, Act::Relu6);
+        let l16 = Layer::dw("d", 16, 1, Act::Relu6);
+        let c8 = layer_compute_cycles(&l8, &shape(8, 64), &chip()).compute_cycles;
+        let c16 = layer_compute_cycles(&l16, &shape(8, 64), &chip()).compute_cycles;
+        assert_eq!(c16, 2 * c8);
+    }
+
+    #[test]
+    fn pool_has_no_compute_cycles() {
+        let l = Layer::maxpool("m", 32, 2, 2);
+        let st = layer_compute_cycles(&l, &shape(8, 64), &chip());
+        assert_eq!(st.compute_cycles, 0);
+    }
+
+    #[test]
+    fn sram_bytes_cover_features_and_weights() {
+        let l = Layer::pw("p", 32, 32, Act::None);
+        let b = layer_sram_bytes(&l, &shape(8, 32), &chip());
+        let feat = 8 * 32 * 32 * 2; // in + out
+        assert!(b > feat as u64);
+    }
+}

@@ -1,0 +1,316 @@
+//! Frame schedules: layer-by-layer (prior design [5]) vs group-fused
+//! (this chip). Produces latency, utilization, SRAM/DRAM byte counts —
+//! the inputs of Fig. 13 (latency/bandwidth vs buffer size) and the
+//! energy model's event counts.
+//!
+//! Timing model per scheduled step: compute and DMA overlap (double
+//! buffering), SRAM port pressure bounds the streaming rate, so
+//! `cycles = max(compute, sram_port, dram)` + a per-step pipeline-fill
+//! overhead. DRAM transfers at DDR3 peak 12.8 GB/s.
+
+use crate::config::ChipConfig;
+use crate::energy::ExecutionEvents;
+use crate::fusion::FusionGroup;
+use crate::model::Network;
+use crate::tile::{plan_group, GroupTiling, TileError};
+use crate::traffic::TrafficModel;
+
+use super::pe::{layer_compute_cycles, layer_sram_bytes, layer_sram_components};
+use super::DDR3_BYTES_PER_S;
+
+/// Pipeline fill/drain overhead charged once per scheduled step (layer or
+/// per-group tile pass) — accumulator depth + controller handoff.
+const STEP_OVERHEAD_CYCLES: u64 = 64;
+
+/// Per-layer simulation record.
+#[derive(Debug, Clone)]
+pub struct LayerSim {
+    pub name: String,
+    pub cycles: u64,
+    pub macs: u64,
+    pub utilization: f64,
+    pub sram_bytes: u64,
+    pub dram_bytes: u64,
+}
+
+/// Per-group simulation record (fused schedule).
+#[derive(Debug, Clone)]
+pub struct GroupSim {
+    pub group: FusionGroup,
+    pub tiling: GroupTiling,
+    pub cycles: u64,
+    pub macs: u64,
+    pub sram_bytes: u64,
+    pub dram_bytes: u64,
+}
+
+/// Whole-frame simulation result.
+#[derive(Debug, Clone)]
+pub struct FrameSim {
+    pub layers: Vec<LayerSim>,
+    pub total_cycles: u64,
+    pub clock_hz: f64,
+}
+
+impl FrameSim {
+    pub fn latency_ms(&self) -> f64 {
+        self.total_cycles as f64 / self.clock_hz * 1e3
+    }
+    pub fn fps(&self) -> f64 {
+        1e3 / self.latency_ms()
+    }
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+    pub fn total_sram_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.sram_bytes).sum()
+    }
+    pub fn total_dram_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.dram_bytes).sum()
+    }
+    /// Average PE utilization over the frame.
+    pub fn mean_utilization(&self, chip: &ChipConfig) -> f64 {
+        self.total_macs() as f64 / (self.total_cycles as f64 * chip.total_macs() as f64)
+    }
+    /// Event rates for the power model, at a given frame rate.
+    pub fn events_per_second(&self, fps: f64) -> ExecutionEvents {
+        ExecutionEvents {
+            macs: self.total_macs() as f64 * fps,
+            sram_bytes: self.total_sram_bytes() as f64 * fps,
+            pad_bytes: self.total_dram_bytes() as f64 * fps,
+        }
+    }
+}
+
+fn dram_cycles(bytes: u64, chip: &ChipConfig) -> u64 {
+    (bytes as f64 / (DDR3_BYTES_PER_S / chip.clock_hz)).ceil() as u64
+}
+
+fn sram_port_cycles(bytes: u64, chip: &ChipConfig) -> u64 {
+    // banks x 8-byte words per cycle.
+    let port = chip.banks as u64 * 8;
+    bytes.div_ceil(port)
+}
+
+/// Layer-by-layer schedule: every layer streams its input from DRAM and
+/// its output back; weights stream once per layer.
+pub fn simulate_layer_by_layer(net: &Network, hw: (u32, u32), chip: &ChipConfig) -> FrameSim {
+    let shapes = net.shapes(hw);
+    let traffic = TrafficModel::new(*chip).layer_by_layer(net, hw);
+    let mut layers = Vec::with_capacity(net.layers.len());
+    let mut total = 0u64;
+    for (i, l) in net.layers.iter().enumerate() {
+        let pe = layer_compute_cycles(l, &shapes[i], chip);
+        let sram = layer_sram_bytes(l, &shapes[i], chip);
+        let (r, w, wb) = layer_sram_components(l, &shapes[i], chip);
+        let dram = traffic.per_layer[i].total();
+        let cycles = pe
+            .compute_cycles
+            .max(sram_port_cycles(r, chip))
+            .max(sram_port_cycles(w, chip))
+            .max(sram_port_cycles(wb, chip))
+            .max(dram_cycles(dram, chip))
+            + if l.is_epilogue() { 0 } else { STEP_OVERHEAD_CYCLES };
+        total += cycles;
+        layers.push(LayerSim {
+            name: l.name.clone(),
+            cycles,
+            macs: pe.macs,
+            utilization: pe.utilization,
+            sram_bytes: sram,
+            dram_bytes: dram,
+        });
+    }
+    FrameSim { layers, total_cycles: total, clock_hz: chip.clock_hz }
+}
+
+/// Group-fused schedule: per group, per tile, layer-by-layer *inside the
+/// unified buffer*; DRAM moves only the group's input/output tiles and
+/// the group weights (once per frame).
+pub fn simulate_fused(
+    net: &Network,
+    groups: &[FusionGroup],
+    hw: (u32, u32),
+    chip: &ChipConfig,
+) -> Result<(FrameSim, Vec<GroupSim>), TileError> {
+    let shapes = net.shapes(hw);
+    let traffic = TrafficModel::new(*chip).fused(net, groups, hw);
+    let mut layers: Vec<LayerSim> = Vec::with_capacity(net.layers.len());
+    let mut group_sims = Vec::with_capacity(groups.len());
+    let mut total = 0u64;
+
+    for g in groups {
+        let tiling = plan_group(net, g, hw, chip)?;
+        let tiles = tiling.tiles as u64;
+        let mut g_cycles = 0u64;
+        let mut g_macs = 0u64;
+        let mut g_sram = 0u64;
+        let mut g_dram = 0u64;
+
+        // Weight load for the whole group, once per frame (fits B).
+        let w_bytes: u64 = g.weight_bytes(net, chip.precision);
+        g_cycles += dram_cycles(w_bytes, chip);
+        g_dram += w_bytes;
+
+        for i in g.layer_range() {
+            let l = &net.layers[i];
+            let s = shapes[i];
+            // Per-tile output rows (boundary extension keeps tiles
+            // independent; the last tile may be short — we charge the
+            // full-tile cost for it, matching the chip's padding).
+            let f_out = (shapes[g.start].h_in.max(1) / s.h_out.max(1)).max(1);
+            let tile_rows_out = (tiling.tile_h.div_ceil(f_out)).min(s.h_out).max(1);
+            let pe_tile = super::pe::tile_compute_cycles(l, tile_rows_out, s.w_out, chip);
+            // SRAM movement for the full layer (all tiles) — unified
+            // buffer reads/writes + weight fetches.
+            let sram_full = layer_sram_bytes(l, &s, chip);
+            let (r, w, wb) = layer_sram_components(l, &s, chip);
+            let dram_l = traffic.per_layer[i].feat_in_bytes + traffic.per_layer[i].feat_out_bytes;
+            let compute_all_tiles = pe_tile * tiles;
+            let cycles = compute_all_tiles
+                .max(sram_port_cycles(r, chip))
+                .max(sram_port_cycles(w, chip))
+                .max(sram_port_cycles(wb, chip))
+                .max(dram_cycles(dram_l, chip))
+                + if l.is_epilogue() { 0 } else { STEP_OVERHEAD_CYCLES * tiles };
+            let macs = l.macs_per_out_px() * s.out_px();
+            layers.push(LayerSim {
+                name: l.name.clone(),
+                cycles,
+                macs,
+                utilization: if cycles == 0 { 0.0 } else { macs as f64 / (cycles as f64 * chip.total_macs() as f64) },
+                sram_bytes: sram_full,
+                dram_bytes: dram_l,
+            });
+            g_cycles += cycles;
+            g_macs += macs;
+            g_sram += sram_full;
+            g_dram += dram_l;
+        }
+        total += g_cycles;
+        group_sims.push(GroupSim {
+            group: g.clone(),
+            tiling,
+            cycles: g_cycles,
+            macs: g_macs,
+            sram_bytes: g_sram,
+            dram_bytes: g_dram,
+        });
+    }
+    // Account group weight loads in the layer list? They are already in
+    // the group records; attach them to the first layer of each group for
+    // the per-layer DRAM view.
+    for gs in &group_sims {
+        let w = gs.group.weight_bytes(net, chip.precision);
+        if let Some(l) = layers.get_mut(gs.group.start) {
+            l.dram_bytes += w;
+        }
+    }
+    Ok((FrameSim { layers, total_cycles: total, clock_hz: chip.clock_hz }, group_sims))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::{rcnet, FusionConfig, GammaSet, RcnetOptions};
+    use crate::model::zoo::yolov2_converted;
+    use crate::util::kb;
+
+    fn rc_yolo() -> (Network, Vec<FusionGroup>) {
+        let net = yolov2_converted(3, 5);
+        let g = GammaSet::synthetic(&net, 7);
+        let out = rcnet(
+            &net,
+            &g,
+            &FusionConfig::paper_default(),
+            &RcnetOptions { target_params: Some(1_020_000), ..Default::default() },
+        );
+        (out.network, out.groups)
+    }
+
+    #[test]
+    fn fused_is_faster_than_layer_by_layer() {
+        let (net, groups) = rc_yolo();
+        let chip = ChipConfig::paper_chip();
+        let lbl = simulate_layer_by_layer(&net, (720, 1280), &chip);
+        let (fus, _) = simulate_fused(&net, &groups, (720, 1280), &chip).unwrap();
+        // With the block-unit DRAM convention both schedules are compute-
+        // bound on this model; fusion's win is traffic/energy (the
+        // paper's framing: same PE count, 7.9x DRAM energy saving).
+        // Fused must never be meaningfully slower, and must move far
+        // fewer DRAM bytes.
+        assert!(
+            (fus.total_cycles as f64) < lbl.total_cycles as f64 * 1.02,
+            "fused {} !<= lbl {}",
+            fus.total_cycles,
+            lbl.total_cycles
+        );
+        assert!(fus.total_dram_bytes() * 3 < lbl.total_dram_bytes());
+    }
+
+    #[test]
+    fn hd_realtime_regime() {
+        // The chip runs 1280x720 at 30 FPS; our counted model must land in
+        // the same regime (>= 20 FPS) for the derived ~1M-param model.
+        let (net, groups) = rc_yolo();
+        let chip = ChipConfig::paper_chip();
+        let (fus, _) = simulate_fused(&net, &groups, (720, 1280), &chip).unwrap();
+        assert!(fus.fps() > 20.0, "fps {}", fus.fps());
+        assert!(fus.fps() < 200.0, "fps implausibly high {}", fus.fps());
+    }
+
+    #[test]
+    fn dram_bytes_match_traffic_model() {
+        let (net, groups) = rc_yolo();
+        let chip = ChipConfig::paper_chip();
+        let (fus, _) = simulate_fused(&net, &groups, (720, 1280), &chip).unwrap();
+        let tm = TrafficModel::new(chip).fused(&net, &groups, (720, 1280));
+        assert_eq!(fus.total_dram_bytes(), tm.total_bytes());
+        let lbl = simulate_layer_by_layer(&net, (720, 1280), &chip);
+        let tl = TrafficModel::new(chip).layer_by_layer(&net, (720, 1280));
+        assert_eq!(lbl.total_dram_bytes(), tl.total_bytes());
+    }
+
+    #[test]
+    fn macs_identical_across_schedules() {
+        let (net, groups) = rc_yolo();
+        let chip = ChipConfig::paper_chip();
+        let lbl = simulate_layer_by_layer(&net, (720, 1280), &chip);
+        let (fus, _) = simulate_fused(&net, &groups, (720, 1280), &chip).unwrap();
+        assert_eq!(lbl.total_macs(), fus.total_macs());
+        assert_eq!(lbl.total_macs(), net.macs((720, 1280)));
+    }
+
+    #[test]
+    fn bigger_weight_buffer_not_slower() {
+        // Fig. 13: latency decreases (or saturates) with buffer size.
+        let net = yolov2_converted(3, 5);
+        let gam = GammaSet::synthetic(&net, 7);
+        let mut lat = Vec::new();
+        for b in [50u64, 100, 200, 300] {
+            let cfg = FusionConfig::paper_default().with_buffer(kb(b));
+            let out = rcnet(
+                &net,
+                &gam,
+                &cfg,
+                &RcnetOptions { target_params: Some(1_020_000), ..Default::default() },
+            );
+            let chip = ChipConfig::paper_chip().with_weight_buffer(kb(b));
+            let (fus, _) = simulate_fused(&out.network, &out.groups, (1080, 1920), &chip).unwrap();
+            lat.push(fus.latency_ms());
+        }
+        assert!(
+            lat[0] >= lat[3] * 0.95,
+            "latency should not grow with buffer: {lat:?}"
+        );
+    }
+
+    #[test]
+    fn utilization_sane() {
+        let (net, groups) = rc_yolo();
+        let chip = ChipConfig::paper_chip();
+        let (fus, _) = simulate_fused(&net, &groups, (720, 1280), &chip).unwrap();
+        let u = fus.mean_utilization(&chip);
+        assert!(u > 0.05 && u <= 1.0, "utilization {u}");
+    }
+}

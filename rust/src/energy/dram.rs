@@ -1,0 +1,31 @@
+//! External DRAM energy: the paper's Table IV model — DDR3 at 70 pJ/bit.
+
+/// Table IV's assumption: "DDR3 DRAM energy consumption 70 pJ/bit".
+pub const DRAM_PJ_PER_BIT: f64 = 70.0;
+
+/// Energy (mJ) to move `bytes` across the DRAM interface.
+pub fn dram_energy_mj(bytes: u64) -> f64 {
+    bytes as f64 * 8.0 * DRAM_PJ_PER_BIT * 1e-12 * 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_rows() {
+        // Original HD: 4656 MB/s -> 2607 mJ/s. Proposed: 585 -> 327.6.
+        assert!((dram_energy_mj(4_656_000_000) - 2607.4).abs() < 1.0);
+        assert!((dram_energy_mj(585_000_000) - 327.6).abs() < 0.5);
+        // 416x416 rows: 903 -> 506, 137 -> 77.
+        assert!((dram_energy_mj(903_000_000) - 505.7).abs() < 1.0);
+        assert!((dram_energy_mj(137_000_000) - 76.7).abs() < 0.5);
+    }
+
+    #[test]
+    fn savings_factor() {
+        let orig = dram_energy_mj(4_656_000_000);
+        let prop = dram_energy_mj(585_000_000);
+        assert!((orig / prop - 7.96).abs() < 0.05); // the paper's 7.9x
+    }
+}

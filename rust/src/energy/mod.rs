@@ -1,0 +1,196 @@
+//! Energy & power models.
+//!
+//! Two independent models, matching how the paper reports energy:
+//!
+//! * [`dram`] — external DRAM access energy at 70 pJ/bit (Table IV).
+//! * [`ChipPowerModel`] — core power split into the Fig. 14 components
+//!   (memory 51%, combinational 19.5%, register 13.7%, I/O pads 13.4%,
+//!   clock 2.2% of 692.3 mW at the chip's design point). Per-event
+//!   energies are *calibrated once* at the design point and then applied
+//!   to counted events of any other configuration, so sweeps (Fig. 13,
+//!   ablations) shift the breakdown mechanistically.
+
+pub mod dram;
+
+pub use dram::{dram_energy_mj, DRAM_PJ_PER_BIT};
+
+/// Counted activity of one second of execution (from the DLA simulator or
+/// the analytic traffic model).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ExecutionEvents {
+    /// Multiply-accumulate operations.
+    pub macs: f64,
+    /// On-chip SRAM bytes moved (unified buffer + weight buffer, R+W).
+    pub sram_bytes: f64,
+    /// External (pad) bytes moved — DRAM traffic.
+    pub pad_bytes: f64,
+}
+
+impl ExecutionEvents {
+    pub fn scale(&self, k: f64) -> Self {
+        ExecutionEvents {
+            macs: self.macs * k,
+            sram_bytes: self.sram_bytes * k,
+            pad_bytes: self.pad_bytes * k,
+        }
+    }
+}
+
+/// Fig. 14 power split (mW).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerBreakdown {
+    pub memory_mw: f64,
+    pub combinational_mw: f64,
+    pub register_mw: f64,
+    pub pads_mw: f64,
+    pub clock_mw: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total_mw(&self) -> f64 {
+        self.memory_mw + self.combinational_mw + self.register_mw + self.pads_mw + self.clock_mw
+    }
+
+    /// Fractions in Fig. 14 order (memory, comb, reg, pads, clock).
+    pub fn fractions(&self) -> [f64; 5] {
+        let t = self.total_mw();
+        [
+            self.memory_mw / t,
+            self.combinational_mw / t,
+            self.register_mw / t,
+            self.pads_mw / t,
+            self.clock_mw / t,
+        ]
+    }
+}
+
+/// The measured chip numbers used for calibration (Fig. 11 / Fig. 14).
+pub const CHIP_CORE_POWER_MW: f64 = 692.3;
+pub const FIG14_FRACTIONS: [f64; 5] = [0.51, 0.195, 0.137, 0.134, 0.022];
+
+/// Per-event energy model calibrated at a design point.
+#[derive(Debug, Clone, Copy)]
+pub struct ChipPowerModel {
+    /// pJ per MAC (combinational).
+    pub pj_per_mac_comb: f64,
+    /// pJ per MAC attributed to pipeline registers.
+    pub pj_per_mac_reg: f64,
+    /// pJ per on-chip SRAM byte.
+    pub pj_per_sram_byte: f64,
+    /// pJ per external pad byte.
+    pub pj_per_pad_byte: f64,
+    /// Fixed clock-network power (mW) — scales with clock, not activity.
+    pub clock_mw: f64,
+}
+
+impl ChipPowerModel {
+    /// Calibrate per-event energies so that `events` (one second of the
+    /// chip's design-point workload) reproduces the measured 692.3 mW with
+    /// the Fig. 14 split.
+    pub fn calibrated(events: ExecutionEvents) -> Self {
+        let p = CHIP_CORE_POWER_MW;
+        // Fig. 14's published percentages round to 99.8%; renormalize so
+        // the calibration reproduces the measured total exactly.
+        let sum: f64 = FIG14_FRACTIONS.iter().sum();
+        let [f_mem, f_comb, f_reg, f_pad, f_clk] =
+            FIG14_FRACTIONS.map(|f| f / sum);
+        // mW = pJ/event * events/s * 1e-9
+        ChipPowerModel {
+            pj_per_mac_comb: f_comb * p / (events.macs * 1e-9),
+            pj_per_mac_reg: f_reg * p / (events.macs * 1e-9),
+            pj_per_sram_byte: f_mem * p / (events.sram_bytes * 1e-9),
+            pj_per_pad_byte: f_pad * p / (events.pad_bytes * 1e-9),
+            clock_mw: f_clk * p,
+        }
+    }
+
+    /// Power for a counted second of activity.
+    pub fn power(&self, events: ExecutionEvents) -> PowerBreakdown {
+        PowerBreakdown {
+            memory_mw: self.pj_per_sram_byte * events.sram_bytes * 1e-9,
+            combinational_mw: self.pj_per_mac_comb * events.macs * 1e-9,
+            register_mw: self.pj_per_mac_reg * events.macs * 1e-9,
+            pads_mw: self.pj_per_pad_byte * events.pad_bytes * 1e-9,
+            clock_mw: self.clock_mw,
+        }
+    }
+
+    /// Core energy (mJ) for `seconds` of the given per-second activity.
+    pub fn energy_mj(&self, events: ExecutionEvents, seconds: f64) -> f64 {
+        self.power(events).total_mw() * seconds
+    }
+}
+
+/// Efficiency figures for Table V / Fig. 11.
+#[derive(Debug, Clone, Copy)]
+pub struct ChipSummary {
+    pub peak_gops: f64,
+    pub core_power_mw: f64,
+    pub area_mm2: f64,
+    pub sram_kb: u64,
+}
+
+impl ChipSummary {
+    /// The fabricated chip (Fig. 11): 4.56 mm^2, 480 KB SRAM.
+    pub fn paper_chip() -> Self {
+        ChipSummary { peak_gops: 460.8, core_power_mw: 692.3, area_mm2: 4.56, sram_kb: 480 }
+    }
+
+    pub fn tops_per_w(&self) -> f64 {
+        self.peak_gops / self.core_power_mw
+    }
+
+    pub fn gops_per_mm2(&self) -> f64 {
+        self.peak_gops / self.area_mm2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn design_point() -> ExecutionEvents {
+        // Representative HD30 rates (exact values come from the simulator;
+        // the calibration is exact for whatever is passed in).
+        ExecutionEvents { macs: 230e9, sram_bytes: 60e9, pad_bytes: 585e6 }
+    }
+
+    #[test]
+    fn calibration_roundtrips() {
+        let ev = design_point();
+        let m = ChipPowerModel::calibrated(ev);
+        let p = m.power(ev);
+        assert!((p.total_mw() - CHIP_CORE_POWER_MW).abs() < 1e-6);
+        let f = p.fractions();
+        let sum: f64 = FIG14_FRACTIONS.iter().sum();
+        for (a, b) in f.iter().zip(FIG14_FRACTIONS.iter()) {
+            assert!((a - b / sum).abs() < 1e-9, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn less_traffic_less_pad_power() {
+        let ev = design_point();
+        let m = ChipPowerModel::calibrated(ev);
+        let mut quieter = ev;
+        quieter.pad_bytes /= 8.0;
+        let p = m.power(quieter);
+        assert!(p.pads_mw < m.power(ev).pads_mw / 7.0);
+        assert!(p.total_mw() < CHIP_CORE_POWER_MW);
+    }
+
+    #[test]
+    fn chip_summary_matches_fig11() {
+        let s = ChipSummary::paper_chip();
+        assert!((s.tops_per_w() - 0.6656).abs() < 0.01); // ~0.66 TOPS/W
+        assert!((s.gops_per_mm2() - 101.05).abs() < 1.0);
+    }
+
+    #[test]
+    fn energy_scales_with_time() {
+        let ev = design_point();
+        let m = ChipPowerModel::calibrated(ev);
+        assert!((m.energy_mj(ev, 1.0) - 692.3).abs() < 1e-6);
+        assert!((m.energy_mj(ev, 2.0) - 2.0 * 692.3).abs() < 1e-6);
+    }
+}

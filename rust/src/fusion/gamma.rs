@@ -1,0 +1,160 @@
+//! BN scale-factor (gamma) saliencies driving channel pruning (§II-C eq. 7).
+//!
+//! The paper trains gammas with L1 regularization under *frozen random
+//! weights* (pruning-from-scratch [30]) and prunes the smallest. Two
+//! sources are supported here:
+//!
+//! * [`GammaSet::synthetic`] — a deterministic saliency proxy used by the
+//!   analytic pipeline (sweeps, tables): reproducible, matches the
+//!   qualitative structure of trained gammas (heavy-tailed, layer-scaled).
+//! * [`GammaSet::from_artifact`] — gammas trained by
+//!   `python/compile/rcnet.py` (L1-regularized, frozen weights) and
+//!   exported into `artifacts/gammas.json`.
+
+use crate::model::Network;
+use crate::util::Rng;
+
+/// Per-layer, per-output-channel saliencies, index-aligned with
+/// `net.layers`. Non-weighted layers get empty vectors.
+#[derive(Debug, Clone)]
+pub struct GammaSet {
+    pub per_layer: Vec<Vec<f32>>,
+}
+
+impl GammaSet {
+    /// Deterministic synthetic gammas: |N(0,1)| draws scaled per layer, so
+    /// channel importance is heavy-tailed like L1-trained BN gammas.
+    pub fn synthetic(net: &Network, seed: u64) -> Self {
+        let mut per_layer = Vec::with_capacity(net.layers.len());
+        for (i, l) in net.layers.iter().enumerate() {
+            if l.is_weighted() && l.bn {
+                let mut rng = Rng::new(seed ^ ((i as u64 + 1) * 0x9E37_79B9));
+                let v: Vec<f32> = (0..l.c_out)
+                    .map(|_| (rng.normal().abs() as f32).max(1e-4))
+                    .collect();
+                per_layer.push(v);
+            } else {
+                per_layer.push(Vec::new());
+            }
+        }
+        GammaSet { per_layer }
+    }
+
+    /// Load gammas exported by the build-time trainer. The artifact maps
+    /// layer names to gamma vectors; layers not present fall back to the
+    /// synthetic proxy (same seed convention as [`GammaSet::synthetic`]).
+    pub fn from_artifact(net: &Network, named: &[(String, Vec<f32>)], seed: u64) -> Self {
+        let mut g = Self::synthetic(net, seed);
+        for (name, v) in named {
+            if let Some(i) = net.layers.iter().position(|l| &l.name == name) {
+                if net.layers[i].is_weighted() && net.layers[i].bn {
+                    let mut v = v.clone();
+                    v.resize(net.layers[i].c_out as usize, 1e-4);
+                    g.per_layer[i] = v;
+                }
+            }
+        }
+        g
+    }
+
+    /// Remove the gamma entry for channel `ch` of layer `i` (after pruning).
+    pub fn remove_channel(&mut self, i: usize, ch: usize) {
+        if ch < self.per_layer[i].len() {
+            self.per_layer[i].remove(ch);
+        }
+    }
+
+    /// Resize layer `i` to `c` channels (after uniform rescaling):
+    /// keeps the `c` largest saliencies, padding with fresh draws if grown.
+    pub fn resize_layer(&mut self, i: usize, c: usize, seed: u64) {
+        let v = &mut self.per_layer[i];
+        if v.len() > c {
+            let mut idx: Vec<usize> = (0..v.len()).collect();
+            idx.sort_by(|&a, &b| v[b].partial_cmp(&v[a]).unwrap());
+            idx.truncate(c);
+            idx.sort_unstable();
+            *v = idx.iter().map(|&j| v[j]).collect();
+        } else {
+            let mut rng = Rng::new(seed ^ ((i as u64 + 1) * 0x51_7C_C1)); // fresh draws
+            while v.len() < c {
+                v.push((rng.normal().abs() as f32).max(1e-4));
+            }
+        }
+    }
+
+    /// Index of the minimum-gamma channel of layer `i`, if any.
+    pub fn min_channel(&self, i: usize) -> Option<(usize, f32)> {
+        self.per_layer[i]
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(c, &g)| (c, g))
+    }
+
+    /// Consistency check against the network's channel counts.
+    pub fn check(&self, net: &Network) -> bool {
+        self.per_layer.len() == net.layers.len()
+            && net.layers.iter().zip(&self.per_layer).all(|(l, v)| {
+                if l.is_weighted() && l.bn {
+                    v.len() == l.c_out as usize
+                } else {
+                    v.is_empty()
+                }
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::yolov2_converted;
+
+    #[test]
+    fn synthetic_aligned_with_network() {
+        let net = yolov2_converted(3, 5);
+        let g = GammaSet::synthetic(&net, 7);
+        assert!(g.check(&net));
+    }
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        let net = yolov2_converted(3, 5);
+        let a = GammaSet::synthetic(&net, 7);
+        let b = GammaSet::synthetic(&net, 7);
+        assert_eq!(a.per_layer, b.per_layer);
+        let c = GammaSet::synthetic(&net, 8);
+        assert_ne!(a.per_layer, c.per_layer);
+    }
+
+    #[test]
+    fn min_channel_finds_minimum() {
+        let net = yolov2_converted(3, 5);
+        let g = GammaSet::synthetic(&net, 7);
+        let i = net.layers.iter().position(|l| l.is_weighted() && l.bn).unwrap();
+        let (c, v) = g.min_channel(i).unwrap();
+        assert!(g.per_layer[i].iter().all(|&x| x >= v));
+        assert_eq!(g.per_layer[i][c], v);
+    }
+
+    #[test]
+    fn artifact_overrides_named_layers() {
+        let net = yolov2_converted(3, 5);
+        let name = net.layers[0].name.clone();
+        let c0 = net.layers[0].c_out as usize;
+        let named = vec![(name, vec![0.5f32; c0])];
+        let g = GammaSet::from_artifact(&net, &named, 7);
+        assert!(g.per_layer[0].iter().all(|&x| x == 0.5));
+        assert!(g.check(&net));
+    }
+
+    #[test]
+    fn resize_keeps_largest() {
+        let net = yolov2_converted(3, 5);
+        let mut g = GammaSet::synthetic(&net, 7);
+        let i = net.layers.iter().position(|l| l.is_weighted() && l.bn).unwrap();
+        let max = g.per_layer[i].iter().cloned().fold(0.0f32, f32::max);
+        g.resize_layer(i, 4, 7);
+        assert_eq!(g.per_layer[i].len(), 4);
+        assert!(g.per_layer[i].contains(&max));
+    }
+}

@@ -1,0 +1,132 @@
+//! Validation of fusion partitions against the paper's hardware-oriented
+//! guidelines (§II-C3) and physical constraints. Used by tests, the
+//! report harness, and as a debugging aid when morphing new models.
+
+use crate::model::{Network, SpanKind};
+
+use super::{FusionConfig, FusionGroup};
+
+/// A violated constraint.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Violation {
+    /// Group weights exceed the physical weight buffer.
+    OverBudget { group: usize, bytes: u64, budget: u64 },
+    /// Guideline 2: more than `max_downsampling` downsampling layers.
+    TooManyDownsampling { group: usize, count: u32 },
+    /// Guideline 3: a residual block crosses a group boundary.
+    ResidualSplit { span_start: usize, span_end: usize },
+    /// Groups do not tile the layer list exactly.
+    NotContiguous { group: usize },
+    /// Guideline 1: the first layer is not fused with anything (its
+    /// 3-channel input under-utilizes the PEs when run alone).
+    FirstLayerAlone,
+}
+
+/// Check `groups` against the configuration and guidelines.
+pub fn validate_groups(net: &Network, groups: &[FusionGroup], cfg: &FusionConfig) -> Vec<Violation> {
+    let mut v = Vec::new();
+
+    // Coverage / contiguity.
+    let mut expect = 0usize;
+    for (gi, g) in groups.iter().enumerate() {
+        if g.start != expect || g.end < g.start {
+            v.push(Violation::NotContiguous { group: gi });
+        }
+        expect = g.end + 1;
+    }
+    if expect != net.layers.len() && !groups.is_empty() {
+        v.push(Violation::NotContiguous { group: groups.len() - 1 });
+    }
+
+    // Budget.
+    for (gi, g) in groups.iter().enumerate() {
+        let w = g.weight_bytes(net, cfg.precision);
+        if w > cfg.weight_buffer_bytes {
+            v.push(Violation::OverBudget { group: gi, bytes: w, budget: cfg.weight_buffer_bytes });
+        }
+    }
+
+    // Guideline 2 (first-layer exemption honoured).
+    for (gi, g) in groups.iter().enumerate() {
+        let mut ds = 0;
+        for i in g.layer_range() {
+            if cfg.first_layer_exempt && i == 0 {
+                continue;
+            }
+            if net.layers[i].is_downsampling() {
+                ds += 1;
+            }
+        }
+        if ds > cfg.max_downsampling {
+            v.push(Violation::TooManyDownsampling { group: gi, count: ds });
+        }
+    }
+
+    // Guideline 3.
+    for sp in net.spans.iter().filter(|s| s.kind == SpanKind::Residual) {
+        let a = groups.iter().position(|g| g.contains(sp.start));
+        let b = groups.iter().position(|g| g.contains(sp.end));
+        if a != b {
+            v.push(Violation::ResidualSplit { span_start: sp.start, span_end: sp.end });
+        }
+    }
+
+    // Guideline 1.
+    if let Some(g0) = groups.first() {
+        if g0.len() == 1 && net.layers.len() > 1 {
+            v.push(Violation::FirstLayerAlone);
+        }
+    }
+
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::{partition, GammaSet, RcnetOptions};
+    use crate::model::zoo::yolov2_converted;
+    use crate::util::kb;
+
+    #[test]
+    fn partition_passes_all_guidelines_except_budget() {
+        // Before pruning, groups may exceed B (slack) but must satisfy
+        // structure guidelines.
+        let net = yolov2_converted(3, 5);
+        let cfg = FusionConfig::paper_default();
+        let groups = partition(&net, &cfg);
+        let v = validate_groups(&net, &groups, &cfg);
+        assert!(
+            v.iter().all(|x| matches!(x, Violation::OverBudget { .. })),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn rcnet_output_passes_everything() {
+        let net = yolov2_converted(3, 5);
+        let g = GammaSet::synthetic(&net, 7);
+        let cfg = FusionConfig::paper_default().with_buffer(kb(96));
+        let out = crate::fusion::rcnet(&net, &g, &cfg, &RcnetOptions::default());
+        let v = validate_groups(&out.network, &out.groups, &cfg);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn detects_split_residual() {
+        let net = yolov2_converted(3, 5);
+        let cfg = FusionConfig::paper_default();
+        let sp = net
+            .spans
+            .iter()
+            .find(|s| s.kind == SpanKind::Residual)
+            .unwrap();
+        // Force a boundary inside the span.
+        let groups = vec![
+            FusionGroup { start: 0, end: sp.start },
+            FusionGroup { start: sp.start + 1, end: net.layers.len() - 1 },
+        ];
+        let v = validate_groups(&net, &groups, &cfg);
+        assert!(v.iter().any(|x| matches!(x, Violation::ResidualSplit { .. })));
+    }
+}

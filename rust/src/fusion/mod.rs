@@ -1,0 +1,134 @@
+//! RCNet fusion engine — the paper's §II contribution.
+//!
+//! Pipeline: [`partition`] greedily groups layers under the weight-buffer
+//! constraint with the hardware-oriented guidelines (§II-C3), then
+//! [`rcnet`] (Algorithm 1) iteratively prunes channels by BN-gamma
+//! saliency until every group's weights fit the buffer. [`residual`]
+//! implements the Fig. 8 channel-mismatch rules that make pruned residual
+//! blocks executable.
+
+mod gamma;
+mod guidelines;
+mod partition;
+pub mod pruning;
+mod rcnet;
+pub mod residual;
+
+pub use gamma::GammaSet;
+pub use guidelines::{validate_groups, Violation};
+pub use partition::{naive_partition, partition};
+pub use rcnet::{rcnet, uniform_scale_to_params, RcnetOptions, RcnetOutcome};
+
+use crate::model::{Network, Precision};
+use crate::util::kb;
+
+/// Configuration of the fusion engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FusionConfig {
+    /// Weight buffer size `B` in bytes (96 KB on the chip).
+    pub weight_buffer_bytes: u64,
+    /// Transient slack `m` allowed during group formation (Algorithm 1
+    /// step 2 admits groups up to `(1+m)·B`; pruning then brings them
+    /// back under `B`). Paper uses m = 50%.
+    pub slack: f64,
+    /// Guideline 2: at most this many downsampling layers per group.
+    pub max_downsampling: u32,
+    /// Guideline 1: fuse the first (3-channel) layer with its group and
+    /// ignore its downsampling when counting.
+    pub first_layer_exempt: bool,
+    /// Deployment precision (weight bytes per parameter).
+    pub precision: Precision,
+}
+
+impl FusionConfig {
+    /// The chip's configuration: B = 96 KB, m = 50%, <=2 downsampling.
+    pub fn paper_default() -> Self {
+        FusionConfig {
+            weight_buffer_bytes: kb(96),
+            slack: 0.5,
+            max_downsampling: 2,
+            first_layer_exempt: true,
+            precision: Precision::INT8,
+        }
+    }
+
+    /// The ablation tables' 100 KB setting.
+    pub fn with_buffer(mut self, bytes: u64) -> Self {
+        self.weight_buffer_bytes = bytes;
+        self
+    }
+
+    /// Group-formation budget `(1+m)·B`.
+    pub fn grouping_budget(&self) -> u64 {
+        (self.weight_buffer_bytes as f64 * (1.0 + self.slack)) as u64
+    }
+}
+
+impl Default for FusionConfig {
+    fn default() -> Self {
+        Self::paper_default()
+    }
+}
+
+/// A fusion group: a contiguous, inclusive range of layer indices executed
+/// back-to-back from the unified buffer; only the group input and output
+/// feature maps touch DRAM.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FusionGroup {
+    /// First layer index (inclusive).
+    pub start: usize,
+    /// Last layer index (inclusive).
+    pub end: usize,
+}
+
+impl FusionGroup {
+    pub fn len(&self) -> usize {
+        self.end - self.start + 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // a group always holds >= 1 layer
+    }
+
+    pub fn contains(&self, i: usize) -> bool {
+        self.start <= i && i <= self.end
+    }
+
+    pub fn layer_range(&self) -> std::ops::RangeInclusive<usize> {
+        self.start..=self.end
+    }
+
+    /// Total weight bytes of the group's layers.
+    pub fn weight_bytes(&self, net: &Network, prec: Precision) -> u64 {
+        net.layers[self.start..=self.end]
+            .iter()
+            .map(|l| l.params() * prec.weight_bytes)
+            .sum()
+    }
+
+    /// Number of downsampling layers in the group.
+    pub fn downsampling(&self, net: &Network) -> u32 {
+        net.layers[self.start..=self.end]
+            .iter()
+            .filter(|l| l.is_downsampling())
+            .count() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grouping_budget_has_slack() {
+        let cfg = FusionConfig::paper_default();
+        assert_eq!(cfg.grouping_budget(), (kb(96) as f64 * 1.5) as u64);
+    }
+
+    #[test]
+    fn group_len() {
+        let g = FusionGroup { start: 2, end: 5 };
+        assert_eq!(g.len(), 4);
+        assert!(g.contains(2) && g.contains(5) && !g.contains(6));
+    }
+}

@@ -1,0 +1,255 @@
+//! Fusion-group partitioning (Algorithm 1 step 2 + §II-C3 guidelines).
+//!
+//! The strategy is the paper's: scan from input to output, accumulating
+//! layers into the current group while (a) total weight size stays within
+//! the grouping budget `(1+m)·B`, (b) the group has at most two
+//! downsampling layers (guideline 2, first group exempting the first
+//! layer's own downsampling — guideline 1), and (c) residual blocks are
+//! never split (guideline 3): the atomic unit of partitioning is a
+//! residual span, not a layer.
+
+use crate::model::{Network, SpanKind};
+
+use super::{FusionConfig, FusionGroup};
+
+/// An atomic partitioning unit: either a single layer or a whole residual
+/// block (with its trailing epilogue layers).
+#[derive(Debug, Clone, Copy)]
+struct Unit {
+    start: usize,
+    end: usize,
+}
+
+/// Build atomic units: residual spans are merged into one unit; all other
+/// layers are singleton units. Epilogue (pool) layers attach to the unit
+/// of the layer they follow, since they execute as that layer's epilogue.
+fn units(net: &Network) -> Vec<Unit> {
+    let n = net.layers.len();
+    // Map each layer to the residual span it belongs to, if any.
+    let mut span_of = vec![None; n];
+    for sp in net.spans.iter().filter(|s| s.kind == SpanKind::Residual) {
+        for i in sp.start..=sp.end {
+            // Nested/overlapping spans: keep the widest.
+            let cur: Option<(usize, usize)> = span_of[i];
+            let cand = (sp.start, sp.end);
+            span_of[i] = Some(match cur {
+                Some(c) if c.1 - c.0 >= cand.1 - cand.0 => c,
+                _ => cand,
+            });
+        }
+    }
+    let mut out: Vec<Unit> = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let (start, mut end) = match span_of[i] {
+            Some((s, e)) => (s, e),
+            None => (i, i),
+        };
+        // Attach trailing epilogue layers (pooling after a block).
+        while end + 1 < n && net.layers[end + 1].is_epilogue() && span_of[end + 1].is_none() {
+            end += 1;
+        }
+        out.push(Unit { start, end });
+        i = end + 1;
+    }
+    out
+}
+
+/// Weight bytes of a layer range.
+fn range_weight(net: &Network, cfg: &FusionConfig, start: usize, end: usize) -> u64 {
+    net.layers[start..=end]
+        .iter()
+        .map(|l| l.params() * cfg.precision.weight_bytes)
+        .sum()
+}
+
+/// Downsampling layers in a range, honouring the first-layer exemption.
+fn range_downsampling(net: &Network, cfg: &FusionConfig, start: usize, end: usize) -> u32 {
+    net.layers[start..=end]
+        .iter()
+        .enumerate()
+        .filter(|(off, l)| {
+            let idx = start + off;
+            if cfg.first_layer_exempt && idx == 0 {
+                return false; // guideline 1: ignore first layer downsampling
+            }
+            l.is_downsampling()
+        })
+        .count() as u32
+}
+
+/// Greedy partition under the grouping budget `(1+m)·B` — the paper's
+/// step 2. Groups produced here may exceed `B` (by at most the slack);
+/// [`super::rcnet`] prunes them back under `B`.
+pub fn partition(net: &Network, cfg: &FusionConfig) -> Vec<FusionGroup> {
+    partition_with_budget(net, cfg, cfg.grouping_budget())
+}
+
+/// Naive fusion (the tables' "Naive Fusion?" row): fuse while the *strict*
+/// buffer size `B` holds, no pruning, no slack. Fuses only a small
+/// fraction of layers on an unpruned model.
+pub fn naive_partition(net: &Network, cfg: &FusionConfig) -> Vec<FusionGroup> {
+    partition_with_budget(net, cfg, cfg.weight_buffer_bytes)
+}
+
+fn partition_with_budget(net: &Network, cfg: &FusionConfig, budget: u64) -> Vec<FusionGroup> {
+    let units = units(net);
+    let mut groups: Vec<FusionGroup> = Vec::new();
+    let mut cur: Option<FusionGroup> = None;
+
+    let mut k = 0usize;
+    while k < units.len() {
+        let u = units[k];
+        let u_w = range_weight(net, cfg, u.start, u.end);
+        match cur.take() {
+            None => {
+                cur = Some(FusionGroup { start: u.start, end: u.end });
+                k += 1;
+            }
+            Some(g) => {
+                let merged_w = range_weight(net, cfg, g.start, u.end);
+                let merged_ds = range_downsampling(net, cfg, g.start, u.end);
+                // "If the size of a layer exceeds the available weight
+                // buffer, the fused group ends at its previous layer and a
+                // new group starts from this layer."
+                let fits = merged_w <= budget && u_w <= budget;
+                let ds_ok = merged_ds <= cfg.max_downsampling;
+                if fits && ds_ok {
+                    cur = Some(FusionGroup { start: g.start, end: u.end });
+                    k += 1;
+                } else {
+                    // Close the group — preferentially right after the last
+                    // downsampling layer inside it, so the group-boundary
+                    // feature map crossing DRAM is the *pooled* (4x
+                    // smaller) one. This matches Fig. 12: "the groups of
+                    // fused layers ... are usually at the pooling layer".
+                    let mut cut = g.end;
+                    for i in (g.start..=g.end).rev() {
+                        if net.layers[i].is_downsampling() && i != g.end {
+                            // Never cut inside a residual span.
+                            let in_span = net.spans.iter().any(|sp| {
+                                sp.kind == SpanKind::Residual && sp.start <= i && i < sp.end
+                            });
+                            if !in_span {
+                                cut = i;
+                                break;
+                            }
+                        }
+                    }
+                    groups.push(FusionGroup { start: g.start, end: cut });
+                    if cut < g.end {
+                        // Re-open with the tail of the old group; re-try
+                        // this same unit against the reopened group.
+                        cur = Some(FusionGroup { start: cut + 1, end: g.end });
+                    } else {
+                        cur = Some(FusionGroup { start: u.start, end: u.end });
+                        k += 1;
+                    }
+                }
+            }
+        }
+    }
+    if let Some(g) = cur {
+        groups.push(g);
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{yolov2_converted, vgg16};
+    use crate::model::{Act, Layer, Network, Precision, SpanKind};
+    use crate::util::kb;
+
+    fn cfg(buf_kb: u64) -> FusionConfig {
+        FusionConfig::paper_default().with_buffer(kb(buf_kb))
+    }
+
+    #[test]
+    fn groups_cover_all_layers_exactly_once() {
+        let net = yolov2_converted(3, 5);
+        let groups = partition(&net, &cfg(96));
+        let mut covered = vec![false; net.layers.len()];
+        for g in &groups {
+            for i in g.layer_range() {
+                assert!(!covered[i], "layer {i} in two groups");
+                covered[i] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "uncovered layers");
+        // Groups are in order and contiguous.
+        for w in groups.windows(2) {
+            assert_eq!(w[0].end + 1, w[1].start);
+        }
+    }
+
+    #[test]
+    fn residual_blocks_not_split() {
+        let net = yolov2_converted(3, 5);
+        let groups = partition(&net, &cfg(96));
+        for sp in net.spans.iter().filter(|s| s.kind == SpanKind::Residual) {
+            let g_start = groups.iter().position(|g| g.contains(sp.start)).unwrap();
+            let g_end = groups.iter().position(|g| g.contains(sp.end)).unwrap();
+            assert_eq!(g_start, g_end, "residual span {sp:?} split across groups");
+        }
+    }
+
+    #[test]
+    fn downsampling_bounded() {
+        let net = yolov2_converted(3, 5);
+        let groups = partition(&net, &cfg(96));
+        for (gi, g) in groups.iter().enumerate() {
+            let ds = super::range_downsampling(&net, &cfg(96), g.start, g.end);
+            assert!(ds <= 2, "group {gi} has {ds} downsampling layers");
+        }
+    }
+
+    #[test]
+    fn naive_fuses_less_than_slack_partition() {
+        let net = yolov2_converted(3, 5);
+        let naive = naive_partition(&net, &cfg(100));
+        let slacked = partition(&net, &cfg(100));
+        assert!(naive.len() >= slacked.len());
+    }
+
+    #[test]
+    fn oversized_layer_becomes_singleton() {
+        let mut n = Network::new("t", (32, 32), 8);
+        n.push(Layer::pw("small", 8, 8, Act::Relu6));
+        n.push(Layer::pw("huge", 8, 40000, Act::Relu6)); // > any budget
+        n.push(Layer::pw("small2", 40000, 8, Act::Relu6));
+        let groups = partition(&n, &cfg(96));
+        // huge exceeds the budget on its own -> its own group boundary.
+        assert!(groups.len() >= 2);
+        let huge_group = groups.iter().find(|g| g.contains(1)).unwrap();
+        assert_eq!(huge_group.start, 1);
+    }
+
+    #[test]
+    fn vgg_unpruned_mostly_layer_by_layer() {
+        // 15M-param VGG16 under a 100 KB budget degenerates to near
+        // layer-by-layer ("naive fusion only fuses a small fraction").
+        let net = vgg16(1000);
+        let groups = naive_partition(&net, &cfg(100));
+        assert!(groups.len() as f64 >= net.weighted_layers() as f64 * 0.4);
+    }
+
+    #[test]
+    fn first_group_contains_first_conv_and_pool() {
+        let net = yolov2_converted(3, 5);
+        let groups = partition(&net, &cfg(96));
+        // Guideline 1: conv1 + pool1 + following blocks in group 1.
+        assert!(groups[0].len() > 2, "first group too small: {:?}", groups[0]);
+    }
+
+    #[test]
+    fn precision_matters() {
+        let net = yolov2_converted(3, 5);
+        let mut c = cfg(96);
+        c.precision = Precision::FP32;
+        let g8 = partition(&net, &cfg(96));
+        let g32 = partition(&net, &c);
+        assert!(g32.len() >= g8.len(), "fp32 should fuse fewer layers");
+    }
+}

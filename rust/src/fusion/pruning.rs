@@ -1,0 +1,227 @@
+//! Channel-pruning mechanics: removing an output channel of a layer and
+//! propagating the change through every consumer of that layer's output
+//! (sequential successor, branch edges, concat spans, and channel-tied
+//! operators like depthwise convolutions and pooling).
+
+use crate::model::{LayerKind, Network, SpanKind};
+
+use super::GammaSet;
+
+/// Layers whose output channel count is *tied* to their input channel
+/// count (pruning their input prunes their output too).
+fn channel_tied(kind: LayerKind) -> bool {
+    matches!(
+        kind,
+        LayerKind::DwConv { .. }
+            | LayerKind::MaxPool { .. }
+            | LayerKind::GlobalAvgPool
+            | LayerKind::Concat
+            | LayerKind::Upsample { .. }
+    )
+}
+
+/// Direct consumers of layer `i`'s output.
+pub fn consumers(net: &Network, i: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if i + 1 < net.layers.len() && net.layers[i + 1].branch_from.is_none() {
+        out.push(i + 1);
+    }
+    for (j, l) in net.layers.iter().enumerate() {
+        if l.branch_from == Some(i) {
+            out.push(j);
+        }
+    }
+    for sp in net.spans.iter().filter(|s| s.kind == SpanKind::Concat) {
+        if sp.start == i {
+            out.push(sp.end);
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Is layer `i` prunable: carries weights, has BN gammas, is not the
+/// network output, is not channel-tied (depthwise channels follow their
+/// producer), and stays above `min_channels`?
+pub fn prunable(net: &Network, i: usize, min_channels: u32) -> bool {
+    let l = &net.layers[i];
+    l.is_weighted()
+        && l.bn
+        && !channel_tied(l.kind)
+        && i + 1 < net.layers.len()
+        && l.c_out > min_channels
+}
+
+/// Remove output channel `ch` from layer `i`, propagating through tied
+/// consumers. `gammas` is kept index-aligned. Returns the number of layers
+/// whose channel counts changed.
+pub fn prune_output_channel(
+    net: &mut Network,
+    gammas: &mut GammaSet,
+    i: usize,
+    ch: usize,
+) -> usize {
+    debug_assert!(net.layers[i].c_out > 1);
+    net.layers[i].c_out -= 1;
+    gammas.remove_channel(i, ch);
+    let mut changed = 1;
+    // Propagate c_in reduction through consumers; tied ops also lose an
+    // output channel and recurse.
+    let mut stack = consumers(net, i);
+    let mut visited = vec![false; net.layers.len()];
+    while let Some(j) = stack.pop() {
+        if visited[j] {
+            continue;
+        }
+        visited[j] = true;
+        let l = &mut net.layers[j];
+        l.c_in = l.c_in.saturating_sub(1);
+        changed += 1;
+        if channel_tied(l.kind) {
+            l.c_out = l.c_out.saturating_sub(1);
+            // Tied op loses an output channel too: its gammas (if any)
+            // shrink, and its consumers must shrink.
+            if !gammas.per_layer[j].is_empty() {
+                let (c, _) = gammas.min_channel(j).unwrap_or((0, 0.0));
+                gammas.remove_channel(j, c);
+            }
+            stack.extend(consumers(net, j));
+        }
+    }
+    changed
+}
+
+/// Set layer `i`'s output channels to an absolute value (uniform width
+/// scaling, Algorithm 1 step 5), propagating like pruning. `seed` is used
+/// to regenerate gammas (pruning-from-scratch retrains them anyway).
+pub fn set_output_channels(net: &mut Network, i: usize, new_c: u32, gammas: &mut GammaSet, seed: u64) {
+    let old = net.layers[i].c_out;
+    if old == new_c {
+        return;
+    }
+    net.layers[i].c_out = new_c;
+    gammas.resize_layer(i, new_c as usize, seed);
+    let mut stack = consumers(net, i);
+    let mut visited = vec![false; net.layers.len()];
+    while let Some(j) = stack.pop() {
+        if visited[j] {
+            continue;
+        }
+        visited[j] = true;
+        let delta = new_c as i64 - old as i64;
+        let l = &mut net.layers[j];
+        l.c_in = (l.c_in as i64 + delta).max(1) as u32;
+        if channel_tied(l.kind) {
+            l.c_out = (l.c_out as i64 + delta).max(1) as u32;
+            let c = l.c_out as usize;
+            let has_g = !gammas.per_layer[j].is_empty();
+            if has_g {
+                gammas.resize_layer(j, c, seed);
+            }
+            stack.extend(consumers(net, j));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::yolov2_converted;
+    use crate::model::{Act, Layer, Network};
+
+    fn block_net() -> Network {
+        let mut n = Network::new("t", (16, 16), 3);
+        n.push(Layer::conv("c1", 3, 16, 3, 1, Act::Relu6));
+        n.push(Layer::dw("d1", 16, 1, Act::Relu6));
+        n.push(Layer::pw("p1", 16, 24, Act::None));
+        n.push(Layer::dw("d2", 24, 1, Act::Relu6));
+        n.push(Layer::pw("p2", 24, 32, Act::None));
+        n
+    }
+
+    #[test]
+    fn consumers_sequential() {
+        let n = block_net();
+        assert_eq!(consumers(&n, 0), vec![1]);
+        assert_eq!(consumers(&n, 4), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn prune_propagates_through_dw() {
+        let mut n = block_net();
+        let mut g = GammaSet::synthetic(&n, 1);
+        // Prune c1 (16 -> 15): d1 is tied (c 15), p1 c_in 15.
+        prune_output_channel(&mut n, &mut g, 0, 0);
+        assert_eq!(n.layers[0].c_out, 15);
+        assert_eq!(n.layers[1].c_in, 15);
+        assert_eq!(n.layers[1].c_out, 15);
+        assert_eq!(n.layers[2].c_in, 15);
+        assert_eq!(n.layers[2].c_out, 24); // pw output untouched
+        assert!(n.check_consistency().is_empty(), "{:?}", n.check_consistency());
+        assert!(g.check(&n));
+    }
+
+    #[test]
+    fn prune_reduces_params() {
+        let mut n = block_net();
+        let mut g = GammaSet::synthetic(&n, 1);
+        let before = n.params();
+        prune_output_channel(&mut n, &mut g, 2, 3);
+        assert!(n.params() < before);
+        assert!(n.check_consistency().is_empty());
+    }
+
+    #[test]
+    fn dw_is_not_directly_prunable() {
+        let n = block_net();
+        assert!(!prunable(&n, 1, 4));
+        assert!(prunable(&n, 0, 4));
+        assert!(prunable(&n, 2, 4));
+        // Last layer is never prunable.
+        assert!(!prunable(&n, 4, 4));
+    }
+
+    #[test]
+    fn min_channels_respected() {
+        let n = block_net();
+        assert!(!prunable(&n, 0, 16));
+        assert!(prunable(&n, 0, 15));
+    }
+
+    #[test]
+    fn set_output_channels_consistent() {
+        let mut n = block_net();
+        let mut g = GammaSet::synthetic(&n, 1);
+        set_output_channels(&mut n, 2, 12, &mut g, 1);
+        assert_eq!(n.layers[2].c_out, 12);
+        assert_eq!(n.layers[3].c_in, 12);
+        assert_eq!(n.layers[3].c_out, 12);
+        assert_eq!(n.layers[4].c_in, 12);
+        assert!(n.check_consistency().is_empty(), "{:?}", n.check_consistency());
+        assert!(g.check(&n));
+    }
+
+    #[test]
+    fn repeated_pruning_keeps_full_net_consistent() {
+        let mut n = yolov2_converted(3, 5);
+        let mut g = GammaSet::synthetic(&n, 3);
+        for _ in 0..200 {
+            // Prune the globally smallest gamma among prunable layers.
+            let mut best: Option<(usize, usize, f32)> = None;
+            for i in 0..n.layers.len() {
+                if prunable(&n, i, 8) {
+                    if let Some((c, v)) = g.min_channel(i) {
+                        if best.map_or(true, |b| v < b.2) {
+                            best = Some((i, c, v));
+                        }
+                    }
+                }
+            }
+            let (i, c, _) = best.expect("nothing prunable");
+            prune_output_channel(&mut n, &mut g, i, c);
+        }
+        assert!(n.check_consistency().is_empty(), "{:?}", n.check_consistency());
+        assert!(g.check(&n));
+    }
+}

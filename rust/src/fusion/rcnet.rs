@@ -1,0 +1,467 @@
+//! RCNet — Algorithm 1: resource-constrained network fusion and pruning.
+//!
+//! Iteratively: (1) partition into fusion groups under the slack budget
+//! `(1+m)·B`; (2) prune the smallest-gamma channels inside every
+//! over-budget group until its weights fit `B`; (3) during the first
+//! iterations, uniformly scale the network back to its original size so
+//! the final structure is not bounded by the original shape; repeat.
+//! Finally, optionally prune to a global parameter target (Fig. 10's
+//! "final model size") and emit the deployment partition (strict `B`).
+
+use crate::model::{Network, Precision};
+
+use super::pruning::{prunable, prune_output_channel, set_output_channels};
+use super::{naive_partition, partition, FusionConfig, FusionGroup, GammaSet};
+
+/// Knobs for [`rcnet`].
+#[derive(Debug, Clone, Copy)]
+pub struct RcnetOptions {
+    /// Number of partition+prune iterations (paper: "one or two times").
+    pub iterations: usize,
+    /// Uniformly rescale back to the original parameter count during the
+    /// first `rescale_first_iters` iterations (Algorithm 1 step 5).
+    pub rescale_first_iters: usize,
+    /// Optional global parameter target (Fig. 10 sweeps; paper picks 1M).
+    pub target_params: Option<u64>,
+    /// Scale widths *up* to the target when the fit equilibrium lands
+    /// below it (Fig. 10's larger-model points). Off by default: the
+    /// deployment flow takes the equilibrium model.
+    pub scale_up_to_target: bool,
+    /// Never prune a layer below this channel count.
+    pub min_channels: u32,
+    /// MAC-aware global pruning: weight channel saliency by the inverse
+    /// of its MAC cost, so high-resolution layers shed channels first.
+    /// This is the hardware-friendly co-design the paper's guidelines
+    /// drive at — the weight budget alone would leave the (cheap in
+    /// bytes, expensive in cycles) early layers untouched and miss the
+    /// 30 FPS target.
+    pub mac_aware: bool,
+    /// Energy-width pruning: after the fit iterations, thin every layer
+    /// whose per-channel cost (MACs + boundary-DRAM energy equivalents)
+    /// exceeds the network mean, down to a width fraction
+    /// `(mean_cost / cost)^0.5` (never below `energy_width_floor` of the
+    /// current width, nor below `min_channels`). This reproduces the
+    /// network-wide thinning the paper's L1-trained gammas produce —
+    /// without it, under-budget early groups never thin and their huge
+    /// high-resolution boundary maps dominate traffic. `false` disables.
+    pub energy_width: bool,
+    /// Lower bound on the keep-fraction of the energy-width rule.
+    pub energy_width_floor: f64,
+    /// Weight of group-boundary DRAM bytes in the channel cost, in
+    /// MAC-equivalents per byte. A DRAM byte costs ~560 pJ (70 pJ/bit)
+    /// vs a fraction of a pJ per MAC, so boundary channels are far more
+    /// expensive than their MACs suggest; this is what thins the
+    /// high-resolution group boundaries the way the paper's Fig. 12
+    /// profile shows. 0 disables.
+    pub traffic_mac_equiv: f64,
+    /// Seed for the synthetic-gamma regeneration after rescaling.
+    pub seed: u64,
+}
+
+impl Default for RcnetOptions {
+    fn default() -> Self {
+        RcnetOptions {
+            iterations: 2,
+            rescale_first_iters: 1,
+            target_params: None,
+            scale_up_to_target: false,
+            mac_aware: true,
+            energy_width: true,
+            energy_width_floor: 0.25,
+            traffic_mac_equiv: 1200.0,
+            min_channels: 8,
+            seed: 0x5C4E7,
+        }
+    }
+}
+
+/// Result of the RCNet procedure.
+#[derive(Debug, Clone)]
+pub struct RcnetOutcome {
+    /// The morphed network (RC-YOLOv2 when fed the converted YOLOv2).
+    pub network: Network,
+    /// Deployment fusion groups — every group's weights fit `B` strictly.
+    pub groups: Vec<FusionGroup>,
+    pub params_before: u64,
+    pub params_after: u64,
+    pub pruned_channels: usize,
+    pub iterations_run: usize,
+}
+
+/// Prune min-saliency channels inside `group` until its weights fit
+/// `budget`. Saliency is gamma normalized per layer (so one layer's scale
+/// does not monopolize pruning) divided by the per-channel cost when
+/// provided, so boundary/high-res channels are preferentially removed —
+/// the hardware-friendly pressure of the paper's guidelines.
+fn prune_group_to_fit(
+    net: &mut Network,
+    gammas: &mut GammaSet,
+    group: &FusionGroup,
+    budget: u64,
+    prec: Precision,
+    min_channels: u32,
+    costs: Option<&[f64]>,
+) -> usize {
+    let mut pruned = 0;
+    let mean_cost = costs.map(|c| {
+        let pos: Vec<f64> = c.iter().copied().filter(|&x| x > 0.0).collect();
+        pos.iter().sum::<f64>() / pos.len().max(1) as f64
+    });
+    loop {
+        let w = group.weight_bytes(net, prec);
+        if w <= budget {
+            return pruned;
+        }
+        let mut best: Option<(usize, usize, f64)> = None;
+        for i in group.layer_range() {
+            if !prunable(net, i, min_channels) {
+                continue;
+            }
+            let max_g = gammas.per_layer[i].iter().cloned().fold(f32::MIN, f32::max);
+            if let Some((c, v)) = gammas.min_channel(i) {
+                let mut score = (v / max_g.max(1e-6)) as f64;
+                if let (Some(costs), Some(mc)) = (costs, mean_cost) {
+                    score *= mc / costs[i].max(mc * 1e-3);
+                }
+                if best.map_or(true, |b| score < b.2) {
+                    best = Some((i, c, score));
+                }
+            }
+        }
+        match best {
+            Some((i, c, _)) => {
+                prune_output_channel(net, gammas, i, c);
+                pruned += 1;
+            }
+            None => return pruned, // nothing left to prune in this group
+        }
+    }
+}
+
+/// Uniformly scale the network's internal widths so total params approach
+/// `target` (Algorithm 1 step 5). Head/output layers keep their channel
+/// counts. Binary-search a width multiplier.
+pub fn uniform_scale_to_params(
+    net: &mut Network,
+    gammas: &mut GammaSet,
+    target: u64,
+    min_channels: u32,
+    seed: u64,
+) {
+    let scalable: Vec<usize> = (0..net.layers.len())
+        .filter(|&i| prunable(net, i, 1))
+        .collect();
+    if scalable.is_empty() {
+        return;
+    }
+    let base: Vec<u32> = scalable.iter().map(|&i| net.layers[i].c_out).collect();
+    let (mut lo, mut hi) = (0.25f64, 4.0f64);
+    for _ in 0..24 {
+        let mid = 0.5 * (lo + hi);
+        let mut trial = net.clone();
+        let mut tg = gammas.clone();
+        for (k, &i) in scalable.iter().enumerate() {
+            let c = ((base[k] as f64 * mid).round() as u32).max(min_channels);
+            set_output_channels(&mut trial, i, c, &mut tg, seed);
+        }
+        if trial.params() > target {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    for (k, &i) in scalable.iter().enumerate() {
+        let c = ((base[k] as f64 * lo).round() as u32).max(min_channels);
+        set_output_channels(net, i, c, gammas, seed);
+    }
+}
+
+/// Marginal MAC cost of removing one output channel of each layer
+/// (direct term plus the savings in every consumer whose input shrinks).
+fn channel_mac_cost(net: &Network, hw: (u32, u32)) -> Vec<f64> {
+    let shapes = net.shapes(hw);
+    let mut cost = vec![0f64; net.layers.len()];
+    for i in 0..net.layers.len() {
+        let l = &net.layers[i];
+        if !l.is_weighted() {
+            continue;
+        }
+        // Direct: MACs of this layer per output channel.
+        let direct = l.macs_per_out_px() as f64 / l.c_out.max(1) as f64
+            * shapes[i].out_px() as f64;
+        // Indirect: consumers' MACs per input channel.
+        let mut indirect = 0f64;
+        for j in crate::fusion::pruning::consumers(net, i) {
+            let cl = &net.layers[j];
+            if cl.is_weighted() {
+                indirect += cl.macs_per_out_px() as f64 / cl.c_in.max(1) as f64
+                    * shapes[j].out_px() as f64;
+            }
+        }
+        cost[i] = direct + indirect;
+    }
+    cost
+}
+
+/// Total per-channel cost: MACs plus (weighted) group-boundary DRAM
+/// bytes under the network's current deployment partition.
+fn channel_total_cost(net: &Network, cfg: &FusionConfig, opts: &RcnetOptions) -> Vec<f64> {
+    let hw = net.input_hw;
+    let mut costs = channel_mac_cost(net, hw);
+    if opts.traffic_mac_equiv > 0.0 {
+        let shapes = net.shapes(hw);
+        let groups = naive_partition(net, cfg);
+        for g in &groups[..groups.len().saturating_sub(1)] {
+            // The boundary map is the group's last layer's output; its
+            // channel count is set by the last *weighted* producer.
+            let mut i = g.end;
+            while i > g.start && !net.layers[i].is_weighted() {
+                i -= 1;
+            }
+            // Written once, read once by the next group.
+            let bytes_per_ch = 2.0 * shapes[g.end].out_px() as f64
+                * cfg.precision.act_bytes as f64;
+            costs[i] += opts.traffic_mac_equiv * bytes_per_ch;
+        }
+    }
+    costs
+}
+
+/// Run Algorithm 1. `net` should be fusion-ready (post §II-B conversion).
+pub fn rcnet(
+    net: &Network,
+    gammas: &GammaSet,
+    cfg: &FusionConfig,
+    opts: &RcnetOptions,
+) -> RcnetOutcome {
+    let mut cur = net.clone();
+    let mut g = gammas.clone();
+    let params_before = cur.params();
+    let mut pruned_channels = 0;
+    let mut iterations_run = 0;
+
+    for iter in 0..opts.iterations {
+        iterations_run += 1;
+        // Step 2: group partition under the slack budget (1+m)B.
+        let groups = partition(&cur, cfg);
+        // Steps 3-4: slim every group to fit B (cost-aware).
+        let costs = channel_total_cost(&cur, cfg, opts);
+        for group in &groups {
+            pruned_channels += prune_group_to_fit(
+                &mut cur,
+                &mut g,
+                group,
+                cfg.weight_buffer_bytes,
+                cfg.precision,
+                opts.min_channels,
+                Some(&costs),
+            );
+        }
+        // Step 5: early iterations scale back to the original size so the
+        // structure can keep morphing.
+        if iter < opts.rescale_first_iters && iter + 1 < opts.iterations {
+            uniform_scale_to_params(&mut cur, &mut g, params_before, opts.min_channels, opts.seed);
+        }
+    }
+
+    // Energy-width phase: thin expensive (high-res / boundary) layers to
+    // their cost-scaled width budget.
+    if opts.energy_width {
+        let costs = channel_total_cost(&cur, cfg, opts);
+        let pos: Vec<f64> = costs.iter().copied().filter(|&x| x > 0.0).collect();
+        let mean_cost = pos.iter().sum::<f64>() / pos.len().max(1) as f64;
+        for i in 0..cur.layers.len() {
+            let cost = costs[i];
+            if cost <= mean_cost {
+                continue;
+            }
+            let keep = (mean_cost / cost).sqrt().max(opts.energy_width_floor);
+            let target_c = ((cur.layers[i].c_out as f64 * keep).round() as u32)
+                .max(opts.min_channels);
+            while cur.layers[i].c_out > target_c && prunable(&cur, i, opts.min_channels) {
+                match g.min_channel(i) {
+                    Some((c, _)) => {
+                        prune_output_channel(&mut cur, &mut g, i, c);
+                        pruned_channels += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+    }
+
+    // Global phase: prune down to the optional parameter target (Fig. 10
+    // sweeps); then re-fit groups.
+    {
+        let target = opts.target_params.unwrap_or(u64::MAX);
+        let mut guard = 1_000_000;
+        let mut costs = channel_total_cost(&cur, cfg, opts);
+        let mut since_recost = 0usize;
+        loop {
+            if guard == 0 {
+                break;
+            }
+            guard -= 1;
+            if since_recost >= 32 {
+                costs = channel_total_cost(&cur, cfg, opts);
+                since_recost = 0;
+            }
+            since_recost += 1;
+            let mean_cost = costs.iter().copied().filter(|&c| c > 0.0).sum::<f64>()
+                / costs.iter().filter(|&&c| c > 0.0).count().max(1) as f64;
+            let mut best: Option<(usize, usize, f64)> = None;
+            for i in 0..cur.layers.len() {
+                if !prunable(&cur, i, opts.min_channels) {
+                    continue;
+                }
+                let max_g = g.per_layer[i].iter().cloned().fold(f32::MIN, f32::max);
+                if let Some((c, v)) = g.min_channel(i) {
+                    let mut score = (v / max_g.max(1e-6)) as f64;
+                    if opts.mac_aware {
+                        // Importance per unit of MAC savings.
+                        score *= mean_cost / costs[i].max(mean_cost * 1e-3);
+                    }
+                    if best.map_or(true, |b| score < b.2) {
+                        best = Some((i, c, score));
+                    }
+                }
+            }
+            if cur.params() <= target {
+                break;
+            }
+            match best {
+                Some((i, c, _)) => {
+                    prune_output_channel(&mut cur, &mut g, i, c);
+                    pruned_channels += 1;
+                }
+                None => break,
+            }
+        }
+        // Fig. 10 semantics: a *larger* target than the fit equilibrium
+        // means a wider network split into more groups — scale widths up
+        // to the target (step 5's uniform scaling, applied at the end);
+        // the strict-B deployment partition then simply forms more
+        // groups, no pruning required.
+        if opts.scale_up_to_target
+            && opts.target_params.is_some()
+            && (cur.params() as f64) < target as f64 * 0.9
+        {
+            uniform_scale_to_params(&mut cur, &mut g, target, opts.min_channels, opts.seed);
+        }
+        // Groups may have shrunk below budget; one more fit pass.
+        let groups = partition(&cur, cfg);
+        let costs = channel_total_cost(&cur, cfg, opts);
+        for group in &groups {
+            pruned_channels += prune_group_to_fit(
+                &mut cur,
+                &mut g,
+                group,
+                cfg.weight_buffer_bytes,
+                cfg.precision,
+                opts.min_channels,
+                Some(&costs),
+            );
+        }
+    }
+
+    // Deployment partition: strict B so every group's weights fit the
+    // physical buffer.
+    let groups = naive_partition(&cur, cfg);
+    let params_after = cur.params();
+    cur.name = format!("{}-rcnet", net.name);
+    RcnetOutcome {
+        network: cur,
+        groups,
+        params_before,
+        params_after,
+        pruned_channels,
+        iterations_run,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::yolov2_converted;
+    use crate::util::kb;
+
+    fn run(buf_kb: u64, target: Option<u64>) -> RcnetOutcome {
+        let net = yolov2_converted(3, 5);
+        let g = GammaSet::synthetic(&net, 7);
+        let cfg = FusionConfig::paper_default().with_buffer(kb(buf_kb));
+        rcnet(
+            &net,
+            &g,
+            &cfg,
+            &RcnetOptions {
+                target_params: target,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn all_groups_fit_buffer() {
+        let out = run(96, None);
+        let cfg = FusionConfig::paper_default();
+        for (gi, g) in out.groups.iter().enumerate() {
+            let w = g.weight_bytes(&out.network, cfg.precision);
+            assert!(
+                w <= cfg.weight_buffer_bytes,
+                "group {gi} ({}..{}) = {w} bytes > B",
+                g.start,
+                g.end
+            );
+        }
+    }
+
+    #[test]
+    fn network_stays_consistent() {
+        let out = run(96, None);
+        let errs = out.network.check_consistency();
+        assert!(errs.is_empty(), "{errs:?}");
+    }
+
+    #[test]
+    fn reaches_paper_model_size() {
+        // Paper: 1.014M params under 96 KB for the HD detector.
+        let out = run(96, Some(1_020_000));
+        let m = out.params_after as f64 / 1e6;
+        assert!(m <= 1.05, "params {m}M");
+        assert!(m >= 0.5, "over-pruned: {m}M");
+        let errs = out.network.check_consistency();
+        assert!(errs.is_empty(), "{errs:?}");
+    }
+
+    #[test]
+    fn fuses_more_than_naive() {
+        let net = yolov2_converted(3, 5);
+        let cfg = FusionConfig::paper_default().with_buffer(kb(100));
+        let naive = naive_partition(&net, &cfg).len();
+        let out = run(100, Some(1_760_000)); // Table I RCNet row: 1.76M
+        assert!(
+            out.groups.len() < naive,
+            "rcnet groups {} !< naive {naive}",
+            out.groups.len()
+        );
+    }
+
+    #[test]
+    fn smaller_buffer_more_groups() {
+        let g50 = run(50, Some(1_000_000)).groups.len();
+        let g200 = run(200, Some(1_000_000)).groups.len();
+        assert!(g50 >= g200, "B=50KB: {g50} groups, B=200KB: {g200}");
+    }
+
+    #[test]
+    fn uniform_scale_hits_target() {
+        let mut net = yolov2_converted(3, 5);
+        let mut g = GammaSet::synthetic(&net, 7);
+        let target = (net.params() as f64 * 0.6) as u64;
+        uniform_scale_to_params(&mut net, &mut g, target, 8, 7);
+        let p = net.params();
+        assert!((p as f64) < target as f64 * 1.05, "{p} vs {target}");
+        assert!((p as f64) > target as f64 * 0.6, "{p} vs {target}");
+        assert!(net.check_consistency().is_empty());
+    }
+}

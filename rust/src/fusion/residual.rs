@@ -1,0 +1,97 @@
+//! Fig. 8 — residual summation with mismatched channel counts after
+//! RCNet pruning.
+//!
+//! Priority goes to the 1x1 convolution's output channels: (a) when the
+//! block input (skip) has *more* channels than the conv output, the extra
+//! skip channels are discarded; (b) when it has *fewer*, the extra conv
+//! outputs bypass the add and are emitted directly. Both the rust DLA
+//! simulator and the L2 JAX model (python/compile/model.py) implement this
+//! plan — the python side mirrors `plan()` one-for-one.
+
+/// How to execute `skip (c_skip channels) + conv (c_out channels)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResidualPlan {
+    /// Channels actually summed: `min(c_skip, c_out)`.
+    pub add_channels: u32,
+    /// Conv output channels emitted without addition (Fig. 8b).
+    pub passthrough_channels: u32,
+    /// Skip channels discarded (Fig. 8a).
+    pub dropped_skip_channels: u32,
+    /// Output channel count (always `c_out`: conv priority).
+    pub c_result: u32,
+}
+
+/// Build the Fig. 8 execution plan.
+pub fn plan(c_skip: u32, c_out: u32) -> ResidualPlan {
+    let add = c_skip.min(c_out);
+    ResidualPlan {
+        add_channels: add,
+        passthrough_channels: c_out - add,
+        dropped_skip_channels: c_skip - add,
+        c_result: c_out,
+    }
+}
+
+/// Apply the plan to concrete feature vectors (used by the scalar
+/// reference path in the simulator and in tests; hot paths use PJRT).
+/// `skip` and `conv` are channel-major slices of equal spatial size.
+pub fn apply(skip: &[f32], conv: &[f32], c_skip: u32, c_out: u32, px: usize) -> Vec<f32> {
+    let p = plan(c_skip, c_out);
+    let mut out = vec![0f32; c_out as usize * px];
+    for c in 0..c_out as usize {
+        for i in 0..px {
+            let conv_v = conv[c * px + i];
+            out[c * px + i] = if (c as u32) < p.add_channels {
+                conv_v + skip[c * px + i]
+            } else {
+                conv_v // Fig. 8b passthrough
+            };
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matched_channels_all_add() {
+        let p = plan(64, 64);
+        assert_eq!(p.add_channels, 64);
+        assert_eq!(p.passthrough_channels, 0);
+        assert_eq!(p.dropped_skip_channels, 0);
+    }
+
+    #[test]
+    fn fig8a_skip_larger() {
+        // Block input 48ch, conv output 40ch: drop 8 skip channels.
+        let p = plan(48, 40);
+        assert_eq!(p.add_channels, 40);
+        assert_eq!(p.dropped_skip_channels, 8);
+        assert_eq!(p.passthrough_channels, 0);
+        assert_eq!(p.c_result, 40);
+    }
+
+    #[test]
+    fn fig8b_conv_larger() {
+        // Block input 40ch, conv output 48ch: 8 conv channels bypass.
+        let p = plan(40, 48);
+        assert_eq!(p.add_channels, 40);
+        assert_eq!(p.passthrough_channels, 8);
+        assert_eq!(p.dropped_skip_channels, 0);
+        assert_eq!(p.c_result, 48);
+    }
+
+    #[test]
+    fn apply_matches_plan() {
+        // 2 px, skip 3ch, conv 2ch -> add on 2, drop 1 skip channel.
+        let skip = vec![1., 1., 2., 2., 3., 3.];
+        let conv = vec![10., 10., 20., 20.];
+        let out = apply(&skip, &conv, 3, 2, 2);
+        assert_eq!(out, vec![11., 11., 22., 22.]);
+        // conv 3ch, skip 2ch -> third channel passes through.
+        let out = apply(&conv[..4].to_vec(), &skip, 2, 3, 2);
+        assert_eq!(out, vec![11., 11., 22., 22., 3., 3.]);
+    }
+}

@@ -1,0 +1,55 @@
+//! # rcnet-dla
+//!
+//! Reproduction of *"A Real-Time 1280x720 Object Detection Chip With
+//! 585 MB/s Memory Traffic"* (IEEE TVLSI 2022, DOI 10.1109/TVLSI.2022.3149768).
+//!
+//! The paper co-designs a low-memory-traffic deep-learning accelerator (DLA)
+//! with a model-morphing pipeline (**RCNet**: resource-constrained network
+//! fusion and pruning) so that entire *fusion groups* of layers execute from
+//! on-chip buffers, touching external DRAM only at group boundaries.
+//!
+//! This crate is the request-path half of a three-layer stack:
+//!
+//! * **L3 (this crate)** — coordinator, DLA cycle/traffic/energy simulator,
+//!   RCNet fusion engine, detection post-processing, synthetic HD dataset,
+//!   PJRT runtime that executes AOT-compiled fusion-group HLO.
+//! * **L2 (`python/compile/model.py`)** — RC-YOLOv2 forward in JAX, lowered
+//!   once to HLO text per fusion group (`make artifacts`).
+//! * **L1 (`python/compile/kernels/`)** — Pallas fused-block tile kernels
+//!   (depthwise 3x3 + pointwise 1x1 + BN + ReLU6), interpret mode.
+//!
+//! Python never runs on the request path.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use rcnet_dla::model::zoo;
+//! use rcnet_dla::fusion::{FusionConfig, partition};
+//! use rcnet_dla::traffic::TrafficModel;
+//!
+//! let net = zoo::yolov2_converted(20, 5);
+//! let cfg = FusionConfig::paper_default(); // 96 KB weight buffer, m = 50%
+//! let groups = partition(&net, &cfg);
+//! let traffic = TrafficModel::paper_chip().fused(&net, &groups, (720, 1280));
+//! println!("external traffic: {:.1} MB/frame", traffic.total_bytes() as f64 / 1e6);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod detect;
+pub mod dla;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod energy;
+pub mod fusion;
+pub mod tile;
+pub mod traffic;
+pub mod model;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+pub use report::cli::cli_main;

@@ -1,0 +1,5 @@
+//! CLI entrypoint — see `rcnet-dla --help`.
+
+fn main() -> anyhow::Result<()> {
+    rcnet_dla::cli_main()
+}

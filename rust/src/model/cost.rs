@@ -1,0 +1,190 @@
+//! Exact per-layer and whole-network cost accounting (params, MACs, bytes).
+//!
+//! These are the quantities the paper's Tables I–IV report: "Model size
+//! (M)", "FLOPs (G)" and "Feature I/O (MB)". Feature I/O here is the
+//! *layer-by-layer* DRAM traffic of feature maps: each non-epilogue layer
+//! reads its input from DRAM and writes its output back (§I: "All these
+//! layer-by-layer DLAs have to save per layer output to the external DRAM
+//! and load it back for next layer processing"). Pooling executes as the
+//! preceding convolution's epilogue and moves no DRAM data of its own.
+
+use super::layer::LayerKind;
+use super::network::{Network, SpanKind};
+use super::Precision;
+
+/// Cost of one layer at a concrete resolution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerCost {
+    pub params: u64,
+    pub macs: u64,
+    /// Feature bytes read from DRAM in layer-by-layer execution.
+    pub feat_in_bytes: u64,
+    /// Feature bytes written to DRAM in layer-by-layer execution.
+    pub feat_out_bytes: u64,
+    /// Weight bytes (loaded once per frame in layer-by-layer execution,
+    /// assuming the per-layer weights fit the weight buffer).
+    pub weight_bytes: u64,
+}
+
+impl LayerCost {
+    pub fn feat_io(&self) -> u64 {
+        self.feat_in_bytes + self.feat_out_bytes
+    }
+}
+
+/// Whole-network cost summary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkCost {
+    pub params: u64,
+    pub macs: u64,
+    pub feat_io_bytes: u64,
+    pub weight_bytes: u64,
+}
+
+impl NetworkCost {
+    pub fn flops(&self) -> u64 {
+        2 * self.macs
+    }
+    pub fn gflops(&self) -> f64 {
+        self.flops() as f64 / 1e9
+    }
+    pub fn params_m(&self) -> f64 {
+        self.params as f64 / 1e6
+    }
+    pub fn feat_io_mb(&self) -> f64 {
+        self.feat_io_bytes as f64 / 1e6
+    }
+    /// Total layer-by-layer DRAM traffic per frame (features + weights).
+    pub fn total_traffic_bytes(&self) -> u64 {
+        self.feat_io_bytes + self.weight_bytes
+    }
+}
+
+/// Per-layer costs for `net` at resolution `hw`.
+pub fn layer_costs(net: &Network, hw: (u32, u32), prec: Precision) -> Vec<LayerCost> {
+    let shapes = net.shapes(hw);
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let s = shapes[i];
+            // Epilogue layers (pool) run inside the preceding conv's pass.
+            let (fin, fout) = if l.is_epilogue() {
+                (0, 0)
+            } else {
+                let mut fin = s.in_px() * l.c_in as u64 * prec.act_bytes;
+                // A concat reads the skip operand too — but c_in already
+                // includes the concatenated channels, so `fin` covers it.
+                // Residual adds re-read the skip input at the end layer.
+                if net
+                    .spans
+                    .iter()
+                    .any(|sp| sp.kind == SpanKind::Residual && sp.end == i)
+                {
+                    let start = net
+                        .spans
+                        .iter()
+                        .find(|sp| sp.kind == SpanKind::Residual && sp.end == i)
+                        .unwrap()
+                        .start;
+                    let skip_c = net.layers[start].c_in as u64;
+                    fin += shapes[start].in_px() * skip_c * prec.act_bytes;
+                }
+                let fout = s.out_px() * l.c_out as u64 * prec.act_bytes;
+                (fin, fout)
+            };
+            // Reorg/concat/upsample move data but are folded into the
+            // adjacent convs' reads on the chip: Reorg and Upsample are
+            // address-generator tricks, Concat is a second read stream.
+            let (mut fin, mut fout) = match l.kind {
+                LayerKind::Reorg { .. } | LayerKind::Upsample { .. } | LayerKind::Concat => (0, 0),
+                _ => (fin, fout),
+            };
+            // Block-level execution unit: a depthwise conv fused with the
+            // following pointwise (Fig. 1b) keeps its intermediate on
+            // chip even under layer-by-layer scheduling — the PE array
+            // executes the pair as one op, so the dw output never
+            // round-trips DRAM.
+            if matches!(l.kind, LayerKind::DwConv { .. })
+                && matches!(net.layers.get(i + 1).map(|n| (n.kind, n.branch_from)),
+                            Some((LayerKind::PwConv { .. }, None)))
+            {
+                fout = 0;
+            }
+            if matches!(l.kind, LayerKind::PwConv { .. })
+                && l.branch_from.is_none()
+                && i > 0
+                && matches!(net.layers[i - 1].kind, LayerKind::DwConv { .. })
+            {
+                // Keep any residual skip re-read charged above.
+                let skip = fin.saturating_sub(s.in_px() * l.c_in as u64 * prec.act_bytes);
+                fin = skip;
+            }
+            LayerCost {
+                params: l.params(),
+                macs: l.macs_per_out_px() * s.out_px(),
+                feat_in_bytes: fin,
+                feat_out_bytes: fout,
+                weight_bytes: l.params() * prec.weight_bytes,
+            }
+        })
+        .collect()
+}
+
+/// Whole-network cost at resolution `hw`.
+pub fn network_cost(net: &Network, hw: (u32, u32), prec: Precision) -> NetworkCost {
+    let per = layer_costs(net, hw, prec);
+    NetworkCost {
+        params: per.iter().map(|c| c.params).sum(),
+        macs: per.iter().map(|c| c.macs).sum(),
+        feat_io_bytes: per.iter().map(|c| c.feat_io()).sum(),
+        weight_bytes: per.iter().map(|c| c.weight_bytes).sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Act, Layer};
+
+    #[test]
+    fn single_conv_io() {
+        let mut n = Network::new("t", (10, 10), 3);
+        n.push(Layer::conv("c", 3, 8, 3, 1, Act::Relu));
+        let c = network_cost(&n, (10, 10), Precision::INT8);
+        assert_eq!(c.feat_io_bytes, 10 * 10 * 3 + 10 * 10 * 8);
+        assert_eq!(c.weight_bytes, (9 * 3 * 8 + 16) as u64);
+    }
+
+    #[test]
+    fn pool_is_free() {
+        let mut n = Network::new("t", (10, 10), 3);
+        n.push(Layer::conv("c", 3, 8, 3, 1, Act::Relu));
+        n.push(Layer::maxpool("p", 8, 2, 2));
+        let per = layer_costs(&n, (10, 10), Precision::INT8);
+        assert_eq!(per[1].feat_io(), 0);
+        assert_eq!(per[1].macs, 0);
+    }
+
+    #[test]
+    fn residual_end_rereads_skip() {
+        let mut n = Network::new("t", (8, 8), 4);
+        let a = n.push(Layer::dw("d", 4, 1, Act::Relu6));
+        let b = n.push(Layer::pw("p", 4, 4, Act::None));
+        n.add_span(SpanKind::Residual, a, b);
+        let per = layer_costs(&n, (8, 8), Precision::INT8);
+        // Block convention: the pw reads the dw intermediate on-chip;
+        // only the 8*8*4 residual skip crosses DRAM.
+        assert_eq!(per[1].feat_in_bytes, 8 * 8 * 4);
+        assert_eq!(per[0].feat_out_bytes, 0);
+    }
+
+    #[test]
+    fn fp32_scales_bytes() {
+        let mut n = Network::new("t", (4, 4), 2);
+        n.push(Layer::pw("p", 2, 2, Act::None));
+        let i8c = network_cost(&n, (4, 4), Precision::INT8);
+        let f32c = network_cost(&n, (4, 4), Precision::FP32);
+        assert_eq!(f32c.feat_io_bytes, 4 * i8c.feat_io_bytes);
+    }
+}

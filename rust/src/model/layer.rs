@@ -1,0 +1,253 @@
+//! Layer primitives.
+
+/// Activation applied after a layer (and after BN when present).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    /// No activation (e.g. the pointwise projection in a MobileNetv2-style
+    /// block, or the detection head).
+    None,
+    /// ReLU6 — what the chip's post-processing datapath implements (§IV-C:
+    /// "the processing of BN and ReLU6").
+    Relu6,
+    /// Leaky ReLU (0.1) — original YOLOv2 backbone.
+    Leaky,
+    /// Plain ReLU (VGG16, ResNet).
+    Relu,
+}
+
+/// The operator of a layer. Spatial padding is always "same" unless the
+/// operator reduces resolution via its stride.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Dense convolution `k x k`, stride `s`, dilation `d` (atrous; `d = 1`
+    /// for ordinary convs — DeepLabv3's ASPP uses `d > 1`).
+    Conv { k: u32, s: u32, d: u32 },
+    /// Depthwise convolution `k x k`, stride `s`. `c_out == c_in`.
+    DwConv { k: u32, s: u32 },
+    /// Pointwise (1x1) convolution, stride `s`.
+    PwConv { s: u32 },
+    /// Max pooling `k x k`, stride `s`. On the chip, pooling executes as an
+    /// epilogue of the preceding convolution inside the unified buffer, so
+    /// it moves no DRAM data of its own.
+    MaxPool { k: u32, s: u32 },
+    /// Global average pool to 1x1 (classifier heads).
+    GlobalAvgPool,
+    /// Fully-connected layer, modelled as a 1x1 conv over a 1x1 map.
+    Dense,
+    /// YOLOv2 space-to-depth passthrough: `s^2 x` channels, `1/s` spatial.
+    Reorg { s: u32 },
+    /// Channel concatenation with the *output* of an earlier layer
+    /// (YOLOv2 route). `from` is resolved by the owning [`super::Network`]
+    /// via a [`super::Span`] of kind `Concat`.
+    Concat,
+    /// Nearest-neighbour upsample by `factor` (DeepLabv3 decoder).
+    Upsample { factor: u32 },
+}
+
+/// One layer of the flat network: operator + channel counts + epilogue.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    /// Human-readable name, unique within a network (e.g. `"g3.b1.dw"`).
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input channels (for `Concat` this is the *combined* channel count).
+    pub c_in: u32,
+    /// Output channels.
+    pub c_out: u32,
+    /// Whether a BatchNorm (with learnable scale gamma) follows — the gamma
+    /// is what RCNet's L1-regularized pruning acts on (§II-C eq. 2).
+    pub bn: bool,
+    pub act: Act,
+    /// If `Some(i)`, this layer reads the *output of layer i* instead of the
+    /// previous layer (a branch: YOLOv2 passthrough squeeze, ResNet
+    /// projection shortcuts). `None` = ordinary sequential input.
+    pub branch_from: Option<usize>,
+}
+
+impl Layer {
+    pub fn conv(name: &str, c_in: u32, c_out: u32, k: u32, s: u32, act: Act) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Conv { k, s, d: 1 },
+            c_in,
+            c_out,
+            bn: true,
+            act,
+            branch_from: None,
+        }
+    }
+
+    pub fn atrous(name: &str, c_in: u32, c_out: u32, k: u32, d: u32, act: Act) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Conv { k, s: 1, d },
+            c_in,
+            c_out,
+            bn: true,
+            act,
+            branch_from: None,
+        }
+    }
+
+    pub fn dw(name: &str, c: u32, s: u32, act: Act) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::DwConv { k: 3, s },
+            c_in: c,
+            c_out: c,
+            bn: true,
+            act,
+            branch_from: None,
+        }
+    }
+
+    pub fn pw(name: &str, c_in: u32, c_out: u32, act: Act) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::PwConv { s: 1 },
+            c_in,
+            c_out,
+            bn: true,
+            act,
+            branch_from: None,
+        }
+    }
+
+    pub fn maxpool(name: &str, c: u32, k: u32, s: u32) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::MaxPool { k, s },
+            c_in: c,
+            c_out: c,
+            bn: false,
+            act: Act::None,
+            branch_from: None,
+        }
+    }
+
+    /// Detection / classifier head conv: no BN, linear output.
+    pub fn head(name: &str, c_in: u32, c_out: u32, k: u32) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Conv { k, s: 1, d: 1 },
+            c_in,
+            c_out,
+            bn: false,
+            act: Act::None,
+            branch_from: None,
+        }
+    }
+
+    /// Read this layer's input from layer `i`'s output instead of the
+    /// previous layer (branch edge).
+    pub fn with_branch(mut self, i: usize) -> Self {
+        self.branch_from = Some(i);
+        self
+    }
+
+    /// Number of weight parameters (convolution weights + BN scale/shift).
+    pub fn params(&self) -> u64 {
+        let w = match self.kind {
+            LayerKind::Conv { k, .. } => (k as u64).pow(2) * self.c_in as u64 * self.c_out as u64,
+            LayerKind::DwConv { k, .. } => (k as u64).pow(2) * self.c_in as u64,
+            LayerKind::PwConv { .. } => self.c_in as u64 * self.c_out as u64,
+            LayerKind::Dense => self.c_in as u64 * self.c_out as u64,
+            LayerKind::MaxPool { .. }
+            | LayerKind::GlobalAvgPool
+            | LayerKind::Reorg { .. }
+            | LayerKind::Concat
+            | LayerKind::Upsample { .. } => 0,
+        };
+        let bn = if self.bn { 2 * self.c_out as u64 } else { 0 };
+        w + bn
+    }
+
+    /// MAC count per output pixel.
+    pub fn macs_per_out_px(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { k, .. } => (k as u64).pow(2) * self.c_in as u64 * self.c_out as u64,
+            LayerKind::DwConv { k, .. } => (k as u64).pow(2) * self.c_in as u64,
+            LayerKind::PwConv { .. } => self.c_in as u64 * self.c_out as u64,
+            LayerKind::Dense => self.c_in as u64 * self.c_out as u64,
+            _ => 0,
+        }
+    }
+
+    /// True if this layer halves (or more) the spatial resolution.
+    pub fn is_downsampling(&self) -> bool {
+        self.stride() > 1
+    }
+
+    /// Spatial stride of the operator.
+    pub fn stride(&self) -> u32 {
+        match self.kind {
+            LayerKind::Conv { s, .. } => s,
+            LayerKind::DwConv { s, .. } => s,
+            LayerKind::PwConv { s } => s,
+            LayerKind::MaxPool { s, .. } => s,
+            LayerKind::Reorg { s } => s,
+            LayerKind::GlobalAvgPool => 1,
+            LayerKind::Dense | LayerKind::Concat => 1,
+            LayerKind::Upsample { .. } => 1,
+        }
+    }
+
+    /// True for layers that carry convolution weights (prunable channels).
+    pub fn is_weighted(&self) -> bool {
+        matches!(
+            self.kind,
+            LayerKind::Conv { .. }
+                | LayerKind::DwConv { .. }
+                | LayerKind::PwConv { .. }
+                | LayerKind::Dense
+        )
+    }
+
+    /// True for pooling-style layers that fuse into the preceding conv's
+    /// epilogue on the chip (no separate DRAM pass).
+    pub fn is_epilogue(&self) -> bool {
+        matches!(
+            self.kind,
+            LayerKind::MaxPool { .. } | LayerKind::GlobalAvgPool
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_params_counts_kernel_and_bn() {
+        let l = Layer::conv("c", 3, 32, 3, 1, Act::Leaky);
+        assert_eq!(l.params(), 9 * 3 * 32 + 2 * 32);
+    }
+
+    #[test]
+    fn dw_params_independent_of_cout() {
+        let l = Layer::dw("d", 64, 1, Act::Relu6);
+        assert_eq!(l.params(), 9 * 64 + 2 * 64);
+        assert_eq!(l.c_out, 64);
+    }
+
+    #[test]
+    fn pw_macs_per_px() {
+        let l = Layer::pw("p", 16, 24, Act::None);
+        assert_eq!(l.macs_per_out_px(), 16 * 24);
+    }
+
+    #[test]
+    fn pool_has_no_params_and_is_epilogue() {
+        let l = Layer::maxpool("m", 32, 2, 2);
+        assert_eq!(l.params(), 0);
+        assert!(l.is_epilogue());
+        assert!(l.is_downsampling());
+    }
+
+    #[test]
+    fn strides() {
+        assert_eq!(Layer::conv("c", 3, 8, 3, 2, Act::Relu).stride(), 2);
+        assert_eq!(Layer::dw("d", 8, 2, Act::Relu6).stride(), 2);
+        assert!(!Layer::pw("p", 8, 8, Act::None).is_downsampling());
+    }
+}

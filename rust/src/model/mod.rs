@@ -1,0 +1,48 @@
+//! Network intermediate representation.
+//!
+//! The paper reasons about networks as a *flat sequence of layers* with
+//! residual/bypass spans annotated on top (Fig. 7, Fig. 12): fusion groups
+//! are contiguous runs of layers, and a residual block constrains the
+//! partition (guideline 3: "a residual block shall be in the same group").
+//! This module mirrors that view: [`Network`] is a `Vec<Layer>` plus
+//! [`Span`]s, with exact shape/parameter/MAC/traffic accounting used by the
+//! fusion engine, the traffic model, and the DLA simulator.
+
+mod cost;
+mod layer;
+mod network;
+pub mod zoo;
+
+pub use cost::{layer_costs, network_cost, LayerCost, NetworkCost};
+pub use layer::{Act, Layer, LayerKind};
+pub use network::{LayerShape, Network, Span, SpanKind};
+
+/// Bytes used per weight / activation element. The chip runs 8-bit
+/// fixed-point features and weights with 24-bit accumulators (Table V,
+/// "Precision 8,24 FXP"), so both are 1 byte on the wire and in buffers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Precision {
+    /// Bytes per activation element in DRAM / feature buffers.
+    pub act_bytes: u64,
+    /// Bytes per weight element in DRAM / the weight buffer.
+    pub weight_bytes: u64,
+}
+
+impl Precision {
+    /// The chip's deployment precision: 8-bit activations and weights.
+    pub const INT8: Precision = Precision {
+        act_bytes: 1,
+        weight_bytes: 1,
+    };
+    /// FP32 (used only for reference/debug accounting).
+    pub const FP32: Precision = Precision {
+        act_bytes: 4,
+        weight_bytes: 4,
+    };
+}
+
+impl Default for Precision {
+    fn default() -> Self {
+        Precision::INT8
+    }
+}

@@ -1,0 +1,300 @@
+//! Flat network graph: a layer sequence plus residual/concat spans.
+
+use super::layer::{Layer, LayerKind};
+
+/// Non-sequential edge over the flat layer list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Residual add: the *input* of layer `start` is added to the *output*
+    /// of layer `end` (MobileNetv2-style skip, Fig. 1). When channel counts
+    /// disagree after pruning, the chip applies the Fig. 8 rules (truncate
+    /// or pass-through extra channels) — see [`crate::fusion::residual`].
+    Residual,
+    /// Concat: the *output* of layer `start` is concatenated onto the input
+    /// of layer `end` (YOLOv2 passthrough route).
+    Concat,
+}
+
+/// Inclusive span `[start, end]` over layer indices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// Per-layer spatial shapes for a given network input resolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerShape {
+    pub h_in: u32,
+    pub w_in: u32,
+    pub h_out: u32,
+    pub w_out: u32,
+}
+
+impl LayerShape {
+    pub fn in_px(&self) -> u64 {
+        self.h_in as u64 * self.w_in as u64
+    }
+    pub fn out_px(&self) -> u64 {
+        self.h_out as u64 * self.w_out as u64
+    }
+}
+
+/// A network: input descriptor, flat layer list, span annotations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Network {
+    pub name: String,
+    /// Input (height, width, channels). Height/width are the *nominal*
+    /// resolution; all cost queries take an explicit resolution so one
+    /// topology serves 416x416 / 1280x720 / 1920x1080 analyses.
+    pub input_hw: (u32, u32),
+    pub c_in: u32,
+    pub layers: Vec<Layer>,
+    pub spans: Vec<Span>,
+}
+
+impl Network {
+    pub fn new(name: &str, input_hw: (u32, u32), c_in: u32) -> Self {
+        Network {
+            name: name.into(),
+            input_hw,
+            c_in,
+            layers: Vec::new(),
+            spans: Vec::new(),
+        }
+    }
+
+    /// Append a layer, returning its index.
+    pub fn push(&mut self, layer: Layer) -> usize {
+        self.layers.push(layer);
+        self.layers.len() - 1
+    }
+
+    pub fn add_span(&mut self, kind: SpanKind, start: usize, end: usize) {
+        debug_assert!(start <= end && end < self.layers.len());
+        self.spans.push(Span { kind, start, end });
+    }
+
+    /// Infer per-layer spatial shapes for input `(h, w)`, ceil-div "same"
+    /// semantics. `branch_from` layers take their input shape from the
+    /// referenced layer's output.
+    pub fn shapes(&self, hw: (u32, u32)) -> Vec<LayerShape> {
+        let (mut h, mut w) = hw;
+        let mut out: Vec<LayerShape> = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            if let Some(src) = l.branch_from {
+                h = out[src].h_out;
+                w = out[src].w_out;
+            }
+            let (h_in, w_in) = (h, w);
+            match l.kind {
+                LayerKind::GlobalAvgPool | LayerKind::Dense => {
+                    if matches!(l.kind, LayerKind::GlobalAvgPool) {
+                        h = 1;
+                        w = 1;
+                    }
+                }
+                LayerKind::Upsample { factor } => {
+                    h *= factor;
+                    w *= factor;
+                }
+                _ => {
+                    let s = l.stride();
+                    h = h.div_ceil(s);
+                    w = w.div_ceil(s);
+                }
+            }
+            out.push(LayerShape {
+                h_in,
+                w_in,
+                h_out: h,
+                w_out: w,
+            });
+        }
+        out
+    }
+
+    /// Validate channel continuity: each layer's `c_in` must match the
+    /// previous layer's `c_out` (plus concat contributions). Returns a list
+    /// of human-readable violations (empty == consistent).
+    pub fn check_consistency(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        let mut prev_c = self.c_in;
+        for (i, l) in self.layers.iter().enumerate() {
+            let mut expect = prev_c;
+            if let Some(src) = l.branch_from {
+                if src >= i {
+                    errs.push(format!(
+                        "layer {i} ({}): branch_from {src} not earlier",
+                        l.name
+                    ));
+                    continue;
+                }
+                expect = self.layers[src].c_out;
+            }
+            if matches!(l.kind, LayerKind::Concat) {
+                if let Some(sp) = self
+                    .spans
+                    .iter()
+                    .find(|s| s.kind == SpanKind::Concat && s.end == i)
+                {
+                    expect = expect + self.layers[sp.start].c_out;
+                } else {
+                    errs.push(format!("layer {i} ({}) is Concat without a span", l.name));
+                }
+            }
+            if l.c_in != expect {
+                errs.push(format!(
+                    "layer {i} ({}): c_in {} != expected {}",
+                    l.name, l.c_in, expect
+                ));
+            }
+            match l.kind {
+                LayerKind::DwConv { .. } | LayerKind::MaxPool { .. } | LayerKind::GlobalAvgPool => {
+                    if l.c_out != l.c_in {
+                        errs.push(format!(
+                            "layer {i} ({}): channel-preserving op with c_out {} != c_in {}",
+                            l.name, l.c_out, l.c_in
+                        ));
+                    }
+                }
+                LayerKind::Reorg { s } => {
+                    if l.c_out != l.c_in * s * s {
+                        errs.push(format!("layer {i} ({}): reorg c_out mismatch", l.name));
+                    }
+                }
+                _ => {}
+            }
+            prev_c = l.c_out;
+        }
+        for sp in &self.spans {
+            if sp.end >= self.layers.len() || sp.start > sp.end {
+                errs.push(format!("span {sp:?} out of range"));
+            }
+        }
+        errs
+    }
+
+    /// Total parameter count.
+    pub fn params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    /// Total MACs for input `(h, w)`.
+    pub fn macs(&self, hw: (u32, u32)) -> u64 {
+        self.shapes(hw)
+            .iter()
+            .zip(&self.layers)
+            .map(|(s, l)| l.macs_per_out_px() * s.out_px())
+            .sum()
+    }
+
+    /// FLOPs = 2 x MACs (the paper's GOPS convention, Table V note a).
+    pub fn flops(&self, hw: (u32, u32)) -> u64 {
+        2 * self.macs(hw)
+    }
+
+    /// Residual span covering layer `i`, if any.
+    pub fn residual_span_of(&self, i: usize) -> Option<Span> {
+        self.spans
+            .iter()
+            .copied()
+            .find(|s| s.kind == SpanKind::Residual && s.start <= i && i <= s.end)
+    }
+
+    /// Indices of layers that start a residual block.
+    pub fn residual_starts(&self) -> Vec<usize> {
+        self.spans
+            .iter()
+            .filter(|s| s.kind == SpanKind::Residual)
+            .map(|s| s.start)
+            .collect()
+    }
+
+    /// Number of weighted (prunable) layers.
+    pub fn weighted_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.is_weighted()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Act;
+
+    fn tiny() -> Network {
+        let mut n = Network::new("tiny", (32, 32), 3);
+        n.push(Layer::conv("c1", 3, 8, 3, 1, Act::Relu6));
+        n.push(Layer::maxpool("p1", 8, 2, 2));
+        let a = n.push(Layer::dw("d1", 8, 1, Act::Relu6));
+        let b = n.push(Layer::pw("p2", 8, 8, Act::None));
+        n.add_span(SpanKind::Residual, a, b);
+        n
+    }
+
+    #[test]
+    fn shapes_halve_at_pool() {
+        let n = tiny();
+        let s = n.shapes((32, 32));
+        assert_eq!(s[0].h_out, 32);
+        assert_eq!(s[1].h_out, 16);
+        assert_eq!(s[3].h_out, 16);
+    }
+
+    #[test]
+    fn shapes_ceil_div_on_odd() {
+        let n = tiny();
+        let s = n.shapes((33, 33));
+        assert_eq!(s[1].h_out, 17); // ceil(33/2)
+    }
+
+    #[test]
+    fn consistency_clean() {
+        assert!(tiny().check_consistency().is_empty());
+    }
+
+    #[test]
+    fn consistency_catches_channel_break() {
+        let mut n = tiny();
+        n.layers[2].c_in = 16;
+        assert!(!n.check_consistency().is_empty());
+    }
+
+    #[test]
+    fn macs_and_params() {
+        let n = tiny();
+        // c1: 9*3*8 MACs/px * 32*32 px
+        let c1 = 9 * 3 * 8 * 32 * 32;
+        // d1: 9*8 * 16*16 ; p2: 8*8 * 16*16
+        let d1 = 9 * 8 * 16 * 16;
+        let p2 = 8 * 8 * 16 * 16;
+        assert_eq!(n.macs((32, 32)), c1 + d1 + p2);
+        assert_eq!(n.flops((32, 32)), 2 * (c1 + d1 + p2));
+    }
+
+    #[test]
+    fn residual_span_lookup() {
+        let n = tiny();
+        assert!(n.residual_span_of(2).is_some());
+        assert!(n.residual_span_of(3).is_some());
+        assert!(n.residual_span_of(1).is_none());
+    }
+
+    #[test]
+    fn reorg_consistency() {
+        let mut n = Network::new("r", (8, 8), 4);
+        n.push(Layer {
+            name: "reorg".into(),
+            kind: LayerKind::Reorg { s: 2 },
+            c_in: 4,
+            c_out: 16,
+            bn: false,
+            act: Act::None,
+            branch_from: None,
+        });
+        assert!(n.check_consistency().is_empty());
+        let s = n.shapes((8, 8));
+        assert_eq!((s[0].h_out, s[0].w_out), (4, 4));
+    }
+}

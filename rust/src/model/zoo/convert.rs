@@ -1,0 +1,129 @@
+//! Generic lightweight model conversion (§II-B): rewrite any network into
+//! a fusion-ready one by replacing dense 3x3 convolutions with the proposed
+//! dw3x3 + pw1x1 block (Fig. 1b). 1x1 convs, pools, heads pass through.
+//!
+//! The paper notes "other model compression approaches can also be applied"
+//! and "this step can be skipped if the input model is near fusion-ready" —
+//! [`convert_lightweight`] is the default mechanism; the zoo also ships
+//! hand-tuned converted variants matching the paper's reported sizes.
+
+use crate::model::{Act, Layer, LayerKind, Network, Span, SpanKind};
+
+/// Rewrite `net` into a fusion-ready network. Dense `k>=3` convs (except
+/// the first weighted layer and no-BN head layers) become dw+pw blocks;
+/// residual/concat spans are remapped onto the new layer indices.
+pub fn convert_lightweight(net: &Network) -> Network {
+    let mut out = Network::new(&format!("{}-lc", net.name), net.input_hw, net.c_in);
+    // old layer index -> (first new index, last new index)
+    let mut index_map: Vec<(usize, usize)> = Vec::with_capacity(net.layers.len());
+    let mut seen_weighted = false;
+
+    for l in &net.layers {
+        let is_first_weighted = l.is_weighted() && !seen_weighted;
+        if l.is_weighted() {
+            seen_weighted = true;
+        }
+        let convertible =
+            matches!(l.kind, LayerKind::Conv { k, .. } if k >= 3) && !is_first_weighted && l.bn; // no-BN heads stay dense
+                                                                                                 // Branch edges must be remapped onto the new layer indices.
+        let bf = l.branch_from.map(|i| index_map[i].1);
+        if convertible {
+            let (k, s) = match l.kind {
+                LayerKind::Conv { k, s, .. } => (k, s),
+                _ => unreachable!(),
+            };
+            let a = out.push(Layer {
+                name: format!("{}.dw", l.name),
+                kind: LayerKind::DwConv { k, s },
+                c_in: l.c_in,
+                c_out: l.c_in,
+                bn: true,
+                act: Act::Relu6,
+                branch_from: bf,
+            });
+            let b = out.push(Layer {
+                name: format!("{}.pw", l.name),
+                kind: LayerKind::PwConv { s: 1 },
+                c_in: l.c_in,
+                c_out: l.c_out,
+                bn: true,
+                act: Act::None,
+                branch_from: None,
+            });
+            if s == 1 && l.c_in == l.c_out {
+                out.add_span(SpanKind::Residual, a, b);
+            }
+            index_map.push((a, b));
+        } else {
+            let mut nl = l.clone();
+            nl.branch_from = bf;
+            let i = out.push(nl);
+            index_map.push((i, i));
+        }
+    }
+
+    for sp in &net.spans {
+        out.spans.push(Span {
+            kind: sp.kind,
+            start: index_map[sp.start].0,
+            end: index_map[sp.end].1,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{vgg16, yolov2};
+
+    #[test]
+    fn converts_vgg_to_blocks() {
+        let v = vgg16(1000);
+        let c = convert_lightweight(&v);
+        assert!(
+            c.check_consistency().is_empty(),
+            "{:?}",
+            c.check_consistency()
+        );
+        assert!(c.params() * 4 < v.params());
+        // 12 of 13 convs converted (first stays dense) -> +12 layers.
+        assert_eq!(c.layers.len(), v.layers.len() + 12);
+    }
+
+    #[test]
+    fn first_layer_stays_dense() {
+        let c = convert_lightweight(&vgg16(10));
+        assert!(matches!(c.layers[0].kind, LayerKind::Conv { .. }));
+    }
+
+    #[test]
+    fn spans_remap() {
+        let y = yolov2(20, 5);
+        let c = convert_lightweight(&y);
+        assert!(
+            c.check_consistency().is_empty(),
+            "{:?}",
+            c.check_consistency()
+        );
+        assert_eq!(
+            c.spans
+                .iter()
+                .filter(|s| s.kind == SpanKind::Concat)
+                .count(),
+            y.spans
+                .iter()
+                .filter(|s| s.kind == SpanKind::Concat)
+                .count()
+        );
+    }
+
+    #[test]
+    fn head_stays_dense() {
+        let y = yolov2(20, 5);
+        let c = convert_lightweight(&y);
+        let head = c.layers.last().unwrap();
+        assert!(matches!(head.kind, LayerKind::Conv { k: 1, .. }));
+        assert_eq!(head.c_out, 125);
+    }
+}

@@ -1,0 +1,178 @@
+//! DeepLabv3 (Table II ablation, PASCAL VOC 2012 segmentation, 100 KB
+//! buffer): ResNet-50 backbone (output stride 16) + ASPP + classifier.
+
+use crate::model::{Act, Layer, LayerKind, Network, SpanKind};
+
+use super::proposed_block;
+
+/// Append a ResNet bottleneck: 1x1 reduce -> 3x3 (stride/dilation) -> 1x1
+/// expand, residual skip; a 1x1 projection shortcut when shape changes.
+fn bottleneck(n: &mut Network, name: &str, c_in: u32, c_mid: u32, c_out: u32, s: u32, d: u32) {
+    let block_input = n.layers.len().checked_sub(1);
+    let a = n.push(Layer::pw(&format!("{name}.red"), c_in, c_mid, Act::Relu));
+    n.push(Layer {
+        name: format!("{name}.mid"),
+        kind: LayerKind::Conv { k: 3, s, d },
+        c_in: c_mid,
+        c_out: c_mid,
+        bn: true,
+        act: Act::Relu,
+        branch_from: None,
+    });
+    let b = n.push(Layer::pw(&format!("{name}.exp"), c_mid, c_out, Act::Relu));
+    if s == 1 && c_in == c_out {
+        n.add_span(SpanKind::Residual, a, b);
+    } else if let Some(src) = block_input {
+        // Projection shortcut: 1x1 (stride s) from the block input.
+        let mut proj = Layer {
+            name: format!("{name}.proj"),
+            kind: LayerKind::PwConv { s },
+            c_in,
+            c_out,
+            bn: true,
+            act: Act::None,
+            branch_from: Some(src),
+        };
+        proj.bn = true;
+        let p = n.push(proj);
+        n.add_span(SpanKind::Residual, a, p);
+    }
+}
+
+/// DeepLabv3 with ResNet-50, output stride 16. The four parallel ASPP conv
+/// branches (1x1 + atrous 3x3 at rates 6/12/18, 256ch each) are collapsed
+/// into one equivalent-cost atrous conv (the chip executes branches
+/// sequentially anyway; params/MACs match the branch sum to ~3%).
+/// ~39M params, matching Table II's 39.64M.
+pub fn deeplabv3(classes: u32) -> Network {
+    let mut n = Network::new("deeplabv3", (513, 513), 3);
+    n.push(Layer::conv("stem", 3, 64, 7, 2, Act::Relu));
+    n.push(Layer::maxpool("stem.pool", 64, 3, 2));
+    // (name, c_mid, c_out, blocks, stride of first block, dilation)
+    let stages: &[(&str, u32, u32, usize, u32, u32)] = &[
+        ("s2", 64, 256, 3, 1, 1),
+        ("s3", 128, 512, 4, 2, 1),
+        ("s4", 256, 1024, 6, 2, 1),
+        ("s5", 512, 2048, 3, 1, 2), // OS16: stride 1, dilated
+    ];
+    let mut c_prev = 64;
+    for &(name, c_mid, c_out, blocks, s0, d) in stages {
+        for i in 0..blocks {
+            let s = if i == 0 { s0 } else { 1 };
+            bottleneck(&mut n, &format!("{name}.b{i}"), c_prev, c_mid, c_out, s, d);
+            c_prev = c_out;
+        }
+    }
+    // ASPP equivalent: branches sum to 9*2048*256*3 (atrous) + 2048*256
+    // (1x1) + 2048*256 (image pooling) ~ 15.2M params = one 3x3 atrous
+    // 2048 -> 832 (9*2048*832 = 15.3M).
+    n.push(Layer::atrous("aspp.branches", 2048, 832, 3, 12, Act::Relu));
+    n.push(Layer::pw("aspp.proj", 832, 256, Act::Relu));
+    n.push(Layer::head("classifier", 256, classes, 1));
+    n.push(Layer {
+        name: "up16".into(),
+        kind: LayerKind::Upsample { factor: 16 },
+        c_in: classes,
+        c_out: classes,
+        bn: false,
+        act: Act::None,
+        branch_from: None,
+    });
+    n
+}
+
+/// Lightweight-converted DeepLabv3 (§II-B): MobileNet-style backbone of
+/// proposed blocks + slim depthwise-atrous ASPP, in the high-single-digit
+/// M range like Table II's 9.11M.
+pub fn deeplabv3_converted(classes: u32) -> Network {
+    let mut n = Network::new("deeplabv3-converted", (513, 513), 3);
+    n.push(Layer::conv("stem", 3, 32, 3, 2, Act::Relu6));
+    let stages: &[(&str, u32, usize, u32)] = &[
+        ("s2", 64, 2, 2),
+        ("s3", 128, 3, 2),
+        ("s4", 256, 4, 2),
+        ("s5", 512, 4, 1),
+        ("s6", 1024, 3, 1),
+    ];
+    let mut c_prev = 32;
+    for &(name, c_out, blocks, s0) in stages {
+        for i in 0..blocks {
+            let s = if i == 0 { s0 } else { 1 };
+            let ci = if i == 0 { c_prev } else { c_out };
+            proposed_block(&mut n, &format!("{name}.b{i}"), ci, c_out, s);
+        }
+        c_prev = c_out;
+    }
+    // Slim ASPP: depthwise-atrous + pointwise per rate, sequential, plus
+    // two re-expansions so every rate sees a wide input (equivalent-cost
+    // collapse of the parallel branches).
+    n.push(Layer::dw("aspp.dw0", 1024, 1, Act::Relu6));
+    n.push(Layer::pw("aspp.pw0", 1024, 1024, Act::Relu6));
+    n.push(Layer::dw("aspp.dw1", 1024, 1, Act::Relu6));
+    n.push(Layer::pw("aspp.pw1", 1024, 1024, Act::Relu6));
+    n.push(Layer::dw("aspp.dw2", 1024, 1, Act::Relu6));
+    n.push(Layer::pw("aspp.pw2", 1024, 1024, Act::Relu6));
+    n.push(Layer::pw("aspp.proj", 1024, 256, Act::Relu6));
+    n.push(Layer::head("classifier", 256, classes, 1));
+    n.push(Layer {
+        name: "up16".into(),
+        kind: LayerKind::Upsample { factor: 16 },
+        c_in: classes,
+        c_out: classes,
+        bn: false,
+        act: Act::None,
+        branch_from: None,
+    });
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deeplab_params_near_paper() {
+        // Table II: 39.64M.
+        let p = deeplabv3(21).params() as f64 / 1e6;
+        assert!((36.0..43.0).contains(&p), "{p}M");
+    }
+
+    #[test]
+    fn deeplab_converted_near_paper() {
+        // Table II column 2: 9.11M.
+        let p = deeplabv3_converted(21).params() as f64 / 1e6;
+        assert!((5.0..12.0).contains(&p), "{p}M");
+    }
+
+    #[test]
+    fn output_stride_16_before_upsample() {
+        let n = deeplabv3(21);
+        let s = n.shapes((512, 512));
+        let cls = n
+            .layers
+            .iter()
+            .position(|l| l.name == "classifier")
+            .unwrap();
+        assert_eq!(s[cls].h_out, 32);
+        assert_eq!(s.last().unwrap().h_out, 512);
+    }
+
+    #[test]
+    fn bottlenecks_have_residuals() {
+        let n = deeplabv3(21);
+        assert!(
+            n.spans
+                .iter()
+                .filter(|s| s.kind == SpanKind::Residual)
+                .count()
+                >= 14
+        );
+    }
+
+    #[test]
+    fn projection_shortcuts_consistent() {
+        let n = deeplabv3(21);
+        let errs = n.check_consistency();
+        assert!(errs.is_empty(), "{errs:?}");
+    }
+}

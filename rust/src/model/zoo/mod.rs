@@ -1,0 +1,128 @@
+//! Network builders for every model in the paper's evaluation:
+//! YOLOv2 (Table I baseline), DeepLabv3 (Table II), VGG16 (Table III),
+//! their lightweight conversions (§II-B), and the derived RC-YOLOv2.
+
+mod convert;
+mod deeplabv3;
+mod vgg16;
+mod yolov2;
+
+pub use convert::convert_lightweight;
+
+/// Build two otherwise-identical stacks of `blocks` residual blocks at
+/// width `c`: one from the paper's proposed block (Fig. 1b), one from the
+/// full MobileNetv2 block (Fig. 1a, t = 6) — the §II-B ablation.
+pub fn block_ablation_networks(c: u32, blocks: usize) -> (Network, Network) {
+    let mut a = Network::new("proposed-blocks", (180, 320), c);
+    let mut b = Network::new("mbv2-blocks", (180, 320), c);
+    for i in 0..blocks {
+        proposed_block(&mut a, &format!("b{i}"), c, c, 1);
+        mbv2_block(&mut b, &format!("b{i}"), c, c, 1, 6);
+    }
+    (a, b)
+}
+pub use deeplabv3::{deeplabv3, deeplabv3_converted};
+pub use vgg16::{vgg16, vgg16_converted};
+pub use yolov2::{yolo_head_channels, yolov2, yolov2_converted};
+
+use super::{Act, Layer, Network, SpanKind};
+
+/// Append the paper's proposed block (Fig. 1b): depthwise 3x3 + pointwise
+/// 1x1, *without* the MobileNetv2 expansion pointwise, with a residual skip
+/// when the block preserves shape. Returns (first, last) layer indices.
+pub(crate) fn proposed_block(
+    net: &mut Network,
+    name: &str,
+    c_in: u32,
+    c_out: u32,
+    s: u32,
+) -> (usize, usize) {
+    let a = net.push(Layer::dw(&format!("{name}.dw"), c_in, s, Act::Relu6));
+    let b = net.push(Layer::pw(&format!("{name}.pw"), c_in, c_out, Act::None));
+    if s == 1 && c_in == c_out {
+        net.add_span(SpanKind::Residual, a, b);
+    }
+    (a, b)
+}
+
+/// Append the full MobileNetv2 block (Fig. 1a) for comparison/ablation:
+/// expansion pointwise (factor `t`) + depthwise 3x3 + projection pointwise.
+pub(crate) fn mbv2_block(
+    net: &mut Network,
+    name: &str,
+    c_in: u32,
+    c_out: u32,
+    s: u32,
+    t: u32,
+) -> (usize, usize) {
+    let c_mid = c_in * t;
+    let a = net.push(Layer::pw(&format!("{name}.exp"), c_in, c_mid, Act::Relu6));
+    net.push(Layer::dw(&format!("{name}.dw"), c_mid, s, Act::Relu6));
+    let b = net.push(Layer::pw(&format!("{name}.proj"), c_mid, c_out, Act::None));
+    if s == 1 && c_in == c_out {
+        net.add_span(SpanKind::Residual, a, b);
+    }
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{network_cost, Precision};
+
+    #[test]
+    fn proposed_block_is_cheaper_than_mbv2() {
+        let mut a = Network::new("a", (32, 32), 32);
+        proposed_block(&mut a, "b", 32, 32, 1);
+        let mut b = Network::new("b", (32, 32), 32);
+        mbv2_block(&mut b, "b", 32, 32, 1, 6);
+        assert!(a.params() < b.params());
+        assert!(a.check_consistency().is_empty());
+        assert!(b.check_consistency().is_empty());
+    }
+
+    #[test]
+    fn all_zoo_nets_are_consistent() {
+        for net in [
+            yolov2(20, 5),
+            yolov2_converted(20, 5),
+            deeplabv3(21),
+            deeplabv3_converted(21),
+            vgg16(1000),
+            vgg16_converted(1000),
+        ] {
+            let errs = net.check_consistency();
+            assert!(errs.is_empty(), "{}: {:?}", net.name, errs);
+        }
+    }
+
+    #[test]
+    fn zoo_params_match_paper_scale() {
+        // Paper Table I: YOLOv2 55.66M, converted 3.8M. We count the
+        // standard darknet19+head topology; accept the same order.
+        let p = yolov2(20, 5).params() as f64 / 1e6;
+        assert!((45.0..60.0).contains(&p), "yolov2 params {p}M");
+        let c = yolov2_converted(20, 5).params() as f64 / 1e6;
+        assert!((2.5..6.5).contains(&c), "converted params {c}M");
+        // Table II: DeepLabv3 39.64M. Table III: VGG16 15.23M.
+        let d = deeplabv3(21).params() as f64 / 1e6;
+        assert!((35.0..45.0).contains(&d), "deeplabv3 params {d}M");
+        let v = vgg16(1000).params() as f64 / 1e6;
+        assert!((14.0..16.5).contains(&v), "vgg16 params {v}M");
+    }
+
+    #[test]
+    fn yolov2_flops_match_paper_scale() {
+        // Table I reports 625 GFLOPs at 1920x960.
+        let g = yolov2(3, 5).flops((960, 1920)) as f64 / 1e9;
+        assert!((250.0..750.0).contains(&g), "yolov2 gflops {g}");
+    }
+
+    #[test]
+    fn feature_io_matches_paper_scale() {
+        // Table I: 131.62 MB feature I/O at 1920x960 (8-bit).
+        let c = network_cost(&yolov2(3, 5), (960, 1920), Precision::INT8);
+        let mb = c.feat_io_mb();
+        assert!((90.0..290.0).contains(&mb), "yolov2 feat io {mb} MB");
+    }
+}

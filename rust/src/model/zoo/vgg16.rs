@@ -1,0 +1,138 @@
+//! VGG16 (Table III ablation, ImageNet classification, 200 KB buffer).
+//!
+//! The paper counts "Model size 15.23M" for VGG16 — the convolutional
+//! backbone plus a single global-pool classifier, not the original 3x FC
+//! monster (which alone is 123M). We build the same.
+
+use crate::model::{Act, Layer, LayerKind, Network};
+
+use super::proposed_block;
+
+/// VGG16 conv backbone + global-average-pool classifier.
+pub fn vgg16(classes: u32) -> Network {
+    let mut n = Network::new("vgg16", (224, 224), 3);
+    let mut c_prev = 3u32;
+    let cfg: &[(&str, &[u32])] = &[
+        ("s1", &[64, 64]),
+        ("s2", &[128, 128]),
+        ("s3", &[256, 256, 256]),
+        ("s4", &[512, 512, 512]),
+        ("s5", &[512, 512, 512]),
+    ];
+    for (stage, widths) in cfg {
+        for (i, &co) in widths.iter().enumerate() {
+            n.push(Layer::conv(
+                &format!("{stage}.c{i}"),
+                c_prev,
+                co,
+                3,
+                1,
+                Act::Relu,
+            ));
+            c_prev = co;
+        }
+        n.push(Layer {
+            name: format!("{stage}.pool"),
+            kind: LayerKind::MaxPool { k: 2, s: 2 },
+            c_in: c_prev,
+            c_out: c_prev,
+            bn: false,
+            act: Act::None,
+            branch_from: None,
+        });
+    }
+    n.push(Layer {
+        name: "gap".into(),
+        kind: LayerKind::GlobalAvgPool,
+        c_in: 512,
+        c_out: 512,
+        bn: false,
+        act: Act::None,
+        branch_from: None,
+    });
+    n.push(Layer {
+        name: "fc".into(),
+        kind: LayerKind::Dense,
+        c_in: 512,
+        c_out: classes,
+        bn: false,
+        act: Act::None,
+        branch_from: None,
+    });
+    n
+}
+
+/// Lightweight-converted VGG16 (§II-B): dense 3x3 -> dw3x3+pw1x1 blocks,
+/// first layer kept dense.
+pub fn vgg16_converted(classes: u32) -> Network {
+    let mut n = Network::new("vgg16-converted", (224, 224), 3);
+    n.push(Layer::conv("s1.c0", 3, 64, 3, 1, Act::Relu6));
+    let mut c_prev = 64u32;
+    let cfg: &[(&str, &[u32])] = &[
+        ("s1", &[64]),
+        ("s2", &[128, 128]),
+        ("s3", &[256, 256, 256]),
+        ("s4", &[512, 512, 512]),
+        ("s5", &[512, 512, 512]),
+    ];
+    for (stage, widths) in cfg {
+        for (i, &co) in widths.iter().enumerate() {
+            proposed_block(&mut n, &format!("{stage}.b{i}"), c_prev, co, 1);
+            c_prev = co;
+        }
+        n.push(Layer::maxpool(&format!("{stage}.pool"), c_prev, 2, 2));
+    }
+    n.push(Layer {
+        name: "gap".into(),
+        kind: LayerKind::GlobalAvgPool,
+        c_in: 512,
+        c_out: 512,
+        bn: false,
+        act: Act::None,
+        branch_from: None,
+    });
+    n.push(Layer {
+        name: "fc".into(),
+        kind: LayerKind::Dense,
+        c_in: 512,
+        c_out: classes,
+        bn: false,
+        act: Act::None,
+        branch_from: None,
+    });
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_params_near_paper() {
+        // Table III: 15.23M (backbone 14.71M + classifier).
+        let p = vgg16(1000).params() as f64 / 1e6;
+        assert!((14.5..16.0).contains(&p), "{p}M");
+    }
+
+    #[test]
+    fn vgg16_flops_near_paper() {
+        // Table III: 30.74 GFLOPs at 224x224.
+        let g = vgg16(1000).flops((224, 224)) as f64 / 1e9;
+        assert!((28.0..33.0).contains(&g), "{g} GFLOPs");
+    }
+
+    #[test]
+    fn converted_much_smaller() {
+        let p = vgg16_converted(1000).params() as f64 / 1e6;
+        assert!(p < 5.0, "{p}M");
+    }
+
+    #[test]
+    fn output_is_1x1xclasses() {
+        let n = vgg16(1000);
+        let s = n.shapes((224, 224));
+        let last = s.last().unwrap();
+        assert_eq!((last.h_out, last.w_out), (1, 1));
+        assert_eq!(n.layers.last().unwrap().c_out, 1000);
+    }
+}

@@ -1,0 +1,197 @@
+//! YOLOv2 (darknet-19 backbone + detection head) and its lightweight
+//! conversion — the paper's baseline and §II-B starting point.
+
+use crate::model::{Act, Layer, LayerKind, Network, SpanKind};
+
+use super::proposed_block;
+
+/// Output channels of a YOLO detection head: `anchors * (5 + classes)`.
+pub fn yolo_head_channels(classes: u32, anchors: u32) -> u32 {
+    anchors * (5 + classes)
+}
+
+/// Full YOLOv2: darknet-19 backbone, passthrough (route + squeeze + reorg +
+/// concat), detection head — the darknet `yolov2-voc.cfg` topology. ~50M
+/// parameters for VOC (the paper reports 55.66M from their framework's
+/// counting; topology is identical, see EXPERIMENTS.md §Conventions).
+pub fn yolov2(classes: u32, anchors: u32) -> Network {
+    let mut n = Network::new("yolov2", (416, 416), 3);
+    let c = |n: &mut Network, name: &str, ci: u32, co: u32, k: u32| {
+        n.push(Layer::conv(name, ci, co, k, 1, Act::Leaky))
+    };
+    let pool = |n: &mut Network, name: &str, ch: u32| {
+        n.push(Layer::maxpool(name, ch, 2, 2));
+    };
+
+    c(&mut n, "conv1", 3, 32, 3);
+    pool(&mut n, "pool1", 32);
+    c(&mut n, "conv2", 32, 64, 3);
+    pool(&mut n, "pool2", 64);
+    c(&mut n, "conv3", 64, 128, 3);
+    c(&mut n, "conv4", 128, 64, 1);
+    c(&mut n, "conv5", 64, 128, 3);
+    pool(&mut n, "pool3", 128);
+    c(&mut n, "conv6", 128, 256, 3);
+    c(&mut n, "conv7", 256, 128, 1);
+    c(&mut n, "conv8", 128, 256, 3);
+    pool(&mut n, "pool4", 256);
+    c(&mut n, "conv9", 256, 512, 3);
+    c(&mut n, "conv10", 512, 256, 1);
+    c(&mut n, "conv11", 256, 512, 3);
+    c(&mut n, "conv12", 512, 256, 1);
+    let conv13 = c(&mut n, "conv13", 256, 512, 3); // passthrough source, /16
+    pool(&mut n, "pool5", 512);
+    c(&mut n, "conv14", 512, 1024, 3);
+    c(&mut n, "conv15", 1024, 512, 1);
+    c(&mut n, "conv16", 512, 1024, 3);
+    c(&mut n, "conv17", 1024, 512, 1);
+    c(&mut n, "conv18", 512, 1024, 3);
+    // Head.
+    c(&mut n, "conv19", 1024, 1024, 3);
+    let conv20 = c(&mut n, "conv20", 1024, 1024, 3);
+    // Passthrough: squeeze conv13's 26x26x512 to 64ch, reorg s=2 into
+    // 13x13x256, concat with conv20's 13x13x1024.
+    n.push(Layer::pw("route.squeeze", 512, 64, Act::Leaky).with_branch(conv13));
+    n.push(Layer {
+        name: "route.reorg".into(),
+        kind: LayerKind::Reorg { s: 2 },
+        c_in: 64,
+        c_out: 256,
+        bn: false,
+        act: Act::None,
+        branch_from: None,
+    });
+    let concat = n.push(Layer {
+        name: "route.concat".into(),
+        kind: LayerKind::Concat,
+        c_in: 256 + 1024,
+        c_out: 1280,
+        bn: false,
+        act: Act::None,
+        branch_from: None,
+    });
+    n.add_span(SpanKind::Concat, conv20, concat);
+    c(&mut n, "conv21", 1280, 1024, 3);
+    n.push(Layer::head(
+        "detect",
+        1024,
+        yolo_head_channels(classes, anchors),
+        1,
+    ));
+    n
+}
+
+/// Lightweight-converted YOLOv2 (§II-B): every dense 3x3 conv becomes the
+/// proposed dw3x3+pw1x1 block (Fig. 1b); the passthrough head is slimmed to
+/// a single block + detector (the converted model drops the reorg path —
+/// Fig. 7 / Fig. 12 show a plain sequential backbone) and the 1024-wide
+/// tail is shortened to match the paper's reported 3.8M conversion size.
+pub fn yolov2_converted(classes: u32, anchors: u32) -> Network {
+    let mut n = Network::new("yolov2-converted", (416, 416), 3);
+    // First layer stays a dense 3x3 (3 input channels; fusion guideline 1
+    // keeps it with the first group and ignores its downsampling).
+    n.push(Layer::conv("conv1", 3, 32, 3, 1, Act::Relu6));
+    n.push(Layer::maxpool("pool1", 32, 2, 2));
+    let stage = |n: &mut Network, name: &str, blocks: &[(u32, u32)], pool_c: u32| {
+        for (i, &(ci, co)) in blocks.iter().enumerate() {
+            proposed_block(n, &format!("{name}.b{i}"), ci, co, 1);
+        }
+        if pool_c > 0 {
+            n.push(Layer::maxpool(&format!("{name}.pool"), pool_c, 2, 2));
+        }
+    };
+    stage(&mut n, "s2", &[(32, 64)], 64);
+    stage(&mut n, "s3", &[(64, 128), (128, 128), (128, 128)], 128);
+    stage(&mut n, "s4", &[(128, 256), (256, 256), (256, 256)], 256);
+    stage(
+        &mut n,
+        "s5",
+        &[(256, 512), (512, 512), (512, 512), (512, 512), (512, 512)],
+        512,
+    );
+    stage(&mut n, "s6", &[(512, 1024), (1024, 1024)], 0);
+    // Slim head: one block + 1x1 detector.
+    proposed_block(&mut n, "head", 1024, 1024, 1);
+    n.push(Layer::head(
+        "detect",
+        1024,
+        yolo_head_channels(classes, anchors),
+        1,
+    ));
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_channels() {
+        assert_eq!(yolo_head_channels(20, 5), 125);
+        assert_eq!(yolo_head_channels(3, 5), 40);
+    }
+
+    #[test]
+    fn yolov2_is_consistent() {
+        let n = yolov2(20, 5);
+        let errs = n.check_consistency();
+        assert!(errs.is_empty(), "{errs:?}");
+    }
+
+    #[test]
+    fn yolov2_final_stride_is_32() {
+        let n = yolov2(20, 5);
+        let s = n.shapes((416, 416));
+        let last = s.last().unwrap();
+        assert_eq!((last.h_out, last.w_out), (13, 13));
+    }
+
+    #[test]
+    fn passthrough_shapes() {
+        let n = yolov2(20, 5);
+        let s = n.shapes((416, 416));
+        let squeeze = n
+            .layers
+            .iter()
+            .position(|l| l.name == "route.squeeze")
+            .unwrap();
+        assert_eq!(s[squeeze].h_in, 26); // reads conv13's /16 output
+        assert_eq!(s[squeeze + 1].h_out, 13); // reorg lands on /32
+    }
+
+    #[test]
+    fn converted_final_stride_is_32() {
+        let n = yolov2_converted(3, 5);
+        let s = n.shapes((416, 416));
+        assert_eq!(s.last().unwrap().h_out, 13);
+        // HD input: 1280x720 -> 40x23 grid (ceil).
+        let s = n.shapes((720, 1280));
+        assert_eq!((s.last().unwrap().h_out, s.last().unwrap().w_out), (23, 40));
+    }
+
+    #[test]
+    fn converted_has_residual_spans() {
+        let n = yolov2_converted(3, 5);
+        assert!(
+            n.spans
+                .iter()
+                .filter(|s| s.kind == SpanKind::Residual)
+                .count()
+                >= 8
+        );
+    }
+
+    #[test]
+    fn conversion_shrinks_params_by_order_of_magnitude() {
+        let full = yolov2(3, 5).params();
+        let conv = yolov2_converted(3, 5).params();
+        assert!(conv * 8 < full, "conv {conv} vs full {full}");
+    }
+
+    #[test]
+    fn converted_params_near_paper() {
+        // Table I column 2: 3.8M.
+        let p = yolov2_converted(3, 5).params() as f64 / 1e6;
+        assert!((3.0..4.8).contains(&p), "{p}M");
+    }
+}

@@ -1,0 +1,83 @@
+//! INT8 quantization utilities (the chip's deployment precision; the
+//! Tables I–III "Quantization?" column).
+//!
+//! Symmetric per-tensor scheme, matching `python/compile/params.py`'s
+//! `fake_quantize`: `q = round(x / s)` with `s = max|x| / 127`.
+
+/// Quantization parameters for one tensor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+}
+
+impl QuantParams {
+    /// Fit a symmetric scale to the data.
+    pub fn fit(data: &[f32]) -> Self {
+        let max = data.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-8);
+        QuantParams { scale: max / 127.0 }
+    }
+}
+
+/// Quantize f32 -> i8.
+pub fn quantize(data: &[f32], q: QuantParams) -> Vec<i8> {
+    data.iter()
+        .map(|&x| (x / q.scale).round().clamp(-127.0, 127.0) as i8)
+        .collect()
+}
+
+/// Dequantize i8 -> f32.
+pub fn dequantize(data: &[i8], q: QuantParams) -> Vec<f32> {
+    data.iter().map(|&x| x as f32 * q.scale).collect()
+}
+
+/// Round-trip fake quantization (what the lowered artifacts carry when
+/// built with `--quantize`).
+pub fn fake_quantize(data: &[f32]) -> Vec<f32> {
+    let q = QuantParams::fit(data);
+    dequantize(&quantize(data, q), q)
+}
+
+/// Max absolute quantization error for a tensor.
+pub fn max_abs_error(data: &[f32]) -> f32 {
+    let fq = fake_quantize(data);
+    data.iter()
+        .zip(&fq)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let data: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) / 13.0).collect();
+        let q = QuantParams::fit(&data);
+        assert!(max_abs_error(&data) <= q.scale * 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn preserves_extremes() {
+        let data = vec![-2.0f32, 0.0, 2.0];
+        let fq = fake_quantize(&data);
+        assert!((fq[0] + 2.0).abs() < 1e-6);
+        assert!((fq[2] - 2.0).abs() < 1e-6);
+        assert_eq!(fq[1], 0.0);
+    }
+
+    #[test]
+    fn zero_tensor_safe() {
+        let data = vec![0.0f32; 8];
+        let fq = fake_quantize(&data);
+        assert!(fq.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn int8_range_respected() {
+        let data = vec![1000.0f32, -1000.0, 3.0];
+        let q = QuantParams::fit(&data);
+        let qd = quantize(&data, q);
+        assert!(qd.iter().all(|&x| (-127..=127).contains(&x)));
+    }
+}

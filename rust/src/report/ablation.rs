@@ -1,0 +1,224 @@
+//! Ablation rows for Tables I / II / III: baseline -> lightweight
+//! conversion -> naive fusion -> RCNet -> quantization.
+//!
+//! FLOPs / params / feature-I/O columns are *counted* (exact for our
+//! topologies). The accuracy column is an explicitly-labeled capacity
+//! proxy: the paper's datasets (IVS_3cls, PASCAL VOC, ImageNet) are not
+//! available here, so accuracy is modeled as
+//! `base - a_conv*log2(conv shrink) - a_prune*log2(prune shrink) - q`,
+//! with the coefficients calibrated per task from the paper's own
+//! endpoints (Table I-III) — it reproduces the tables' *shape* by
+//! construction for the middle columns and is cross-checked by the
+//! measured synthetic-scene mAP of the deployed model (EXPERIMENTS.md).
+//! Feature-I/O counts each DRAM-crossing map once, the paper's Table I
+//! convention (Table IV bandwidth instead counts write+read).
+
+use crate::fusion::{naive_partition, rcnet, FusionConfig, FusionGroup, GammaSet, RcnetOptions};
+use crate::model::{zoo, Network, Precision};
+use crate::util::kb;
+
+/// Which paper table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AblationTask {
+    Yolov2,
+    DeepLabV3,
+    Vgg16,
+}
+
+impl AblationTask {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AblationTask::Yolov2 => "RC-YOLOv2 (Table I)",
+            AblationTask::DeepLabV3 => "DeepLabv3 (Table II)",
+            AblationTask::Vgg16 => "VGG16 (Table III)",
+        }
+    }
+
+    pub fn setting(&self) -> String {
+        let (hw, b) = self.config();
+        format!("{}x{}, B = {} KB", hw.1, hw.0, b / 1024)
+    }
+
+    /// (input resolution, weight buffer bytes) per the table captions.
+    pub fn config(&self) -> ((u32, u32), u64) {
+        match self {
+            AblationTask::Yolov2 => ((960, 1920), kb(100)),
+            AblationTask::DeepLabV3 => ((513, 513), kb(100)),
+            AblationTask::Vgg16 => ((224, 224), kb(200)),
+        }
+    }
+
+    fn nets(&self) -> (Network, Network) {
+        match self {
+            AblationTask::Yolov2 => (zoo::yolov2(3, 5), zoo::yolov2_converted(3, 5)),
+            AblationTask::DeepLabV3 => (zoo::deeplabv3(21), zoo::deeplabv3_converted(21)),
+            AblationTask::Vgg16 => (zoo::vgg16(1000), zoo::vgg16_converted(1000)),
+        }
+    }
+
+    /// (base accuracy, conversion coeff, pruning coeff, quant drop,
+    /// RCNet param target) calibrated from the paper's table endpoints.
+    fn accuracy_model(&self) -> (f64, f64, f64, f64, u64) {
+        match self {
+            AblationTask::Yolov2 => (88.2, 1.01, 3.15, 0.79, 1_760_000),
+            AblationTask::DeepLabV3 => (70.5, 0.80, 0.83, 1.20, 2_200_000),
+            AblationTask::Vgg16 => (92.5, 1.30, 0.62, 0.20, 2_530_000),
+        }
+    }
+}
+
+/// One ablation row.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub variant: String,
+    pub accuracy: f64,
+    pub gflops: f64,
+    pub params_m: f64,
+    pub feat_io_mb: f64,
+    pub groups: Option<usize>,
+}
+
+/// Feature I/O with each DRAM-crossing map counted once (Table I-III
+/// convention): network input + every storage-point map that crosses the
+/// chip boundary. Pooling folds into its producer.
+pub fn feat_io_single_count(
+    net: &Network,
+    groups: Option<&[FusionGroup]>,
+    hw: (u32, u32),
+    prec: Precision,
+) -> u64 {
+    let shapes = net.shapes(hw);
+    let act = prec.act_bytes;
+    let input = shapes[0].in_px() * net.layers[0].c_in as u64 * act;
+    match groups {
+        None => {
+            // Layer-by-layer: every non-epilogue layer's (pool-folded)
+            // output crosses DRAM once.
+            let mut total = input;
+            let mut i = 0;
+            while i < net.layers.len() {
+                let mut j = i;
+                // dw fuses into the following pw (block unit), pools fold
+                // into their producer.
+                if matches!(net.layers[j].kind, crate::model::LayerKind::DwConv { .. })
+                    && j + 1 < net.layers.len()
+                    && net.layers[j + 1].is_weighted()
+                    && net.layers[j + 1].branch_from.is_none()
+                {
+                    j += 1;
+                }
+                while j + 1 < net.layers.len() && net.layers[j + 1].is_epilogue() {
+                    j += 1;
+                }
+                total += shapes[j].out_px() * net.layers[j].c_out as u64 * act;
+                i = j + 1;
+            }
+            total
+        }
+        Some(gs) => {
+            let mut total = input;
+            for g in gs {
+                total += shapes[g.end].out_px() * net.layers[g.end].c_out as u64 * act;
+            }
+            total
+        }
+    }
+}
+
+/// Build the five table rows for `task`.
+pub fn ablation_rows(task: AblationTask) -> Vec<AblationRow> {
+    let (hw, buffer) = task.config();
+    let (base, converted) = task.nets();
+    let (acc0, a_conv, a_prune, q_drop, target) = task.accuracy_model();
+    let cfg = FusionConfig::paper_default().with_buffer(buffer);
+    let prec = Precision::INT8;
+
+    let row = |name: &str,
+               net: &Network,
+               groups: Option<&[FusionGroup]>,
+               acc: f64| AblationRow {
+        variant: name.to_string(),
+        accuracy: acc,
+        gflops: net.flops(hw) as f64 / 1e9,
+        params_m: net.params() as f64 / 1e6,
+        feat_io_mb: feat_io_single_count(net, groups, hw, prec) as f64 / 1e6,
+        groups: groups.map(|g| g.len()),
+    };
+
+    let mut rows = Vec::new();
+    rows.push(row("baseline", &base, None, acc0));
+
+    let acc_conv = acc0
+        - a_conv * (base.params() as f64 / converted.params() as f64).log2().max(0.0);
+    rows.push(row("conversion", &converted, None, acc_conv));
+
+    // Naive fusion: same (unpruned) converted net, strict-B partition.
+    let naive = naive_partition(&converted, &cfg);
+    rows.push(row("naive fusion", &converted, Some(&naive), acc_conv));
+
+    // RCNet.
+    let gammas = GammaSet::synthetic(&converted, 7);
+    let out = rcnet(
+        &converted,
+        &gammas,
+        &cfg,
+        &RcnetOptions { target_params: Some(target), ..Default::default() },
+    );
+    let acc_rcnet = acc_conv
+        - a_prune
+            * (converted.params() as f64 / out.params_after as f64)
+                .log2()
+                .max(0.0);
+    rows.push(row("rcnet", &out.network, Some(&out.groups), acc_rcnet));
+
+    // Quantization changes no counted cost column, only accuracy.
+    let mut qrow = row("rcnet+int8", &out.network, Some(&out.groups), acc_rcnet - q_drop);
+    qrow.gflops = rows[3].gflops;
+    rows.push(qrow);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn yolo_table_shape_matches_paper() {
+        let rows = ablation_rows(AblationTask::Yolov2);
+        assert_eq!(rows.len(), 5);
+        // Monotone accuracy decrease down the table.
+        for w in rows.windows(2) {
+            assert!(w[1].accuracy <= w[0].accuracy + 1e-9);
+        }
+        // Params: 55.66 -> 3.8 -> 3.8 -> 1.76 (paper Table I).
+        assert!(rows[0].params_m > 40.0);
+        assert!((rows[1].params_m - 3.8).abs() < 1.0);
+        // Our group-budget equilibrium lands below the paper's 1.76M
+        // (synthetic gammas prune harder); same order of magnitude.
+        assert!((0.8..2.1).contains(&rows[3].params_m), "{}", rows[3].params_m);
+        // Naive fusion reduces feature I/O vs layer-by-layer; RCNet
+        // reduces it much further (paper: 130.65 -> 80.45 -> 21.55).
+        assert!(rows[2].feat_io_mb < rows[1].feat_io_mb);
+        // Paper: 80.45 -> 21.55 (3.7x); synthetic gammas give ~1.7x —
+        // same direction, weaker channel concentration (EXPERIMENTS.md).
+        assert!(rows[3].feat_io_mb < 0.75 * rows[2].feat_io_mb);
+    }
+
+    #[test]
+    fn deeplab_and_vgg_tables_run() {
+        for task in [AblationTask::DeepLabV3, AblationTask::Vgg16] {
+            let rows = ablation_rows(task);
+            assert_eq!(rows.len(), 5);
+            assert!(rows[3].params_m < rows[1].params_m);
+            assert!(rows[3].feat_io_mb < rows[2].feat_io_mb);
+        }
+    }
+
+    #[test]
+    fn feature_io_baseline_matches_paper_scale() {
+        // Paper Table I: YOLOv2 feature I/O 131.62 MB at 1920x960.
+        let net = zoo::yolov2(3, 5);
+        let io = feat_io_single_count(&net, None, (960, 1920), Precision::INT8) as f64 / 1e6;
+        assert!((80.0..200.0).contains(&io), "{io} MB");
+    }
+}

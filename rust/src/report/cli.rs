@@ -1,0 +1,236 @@
+//! Command-line interface of the `rcnet-dla` binary (hand-rolled argv
+//! parsing — the offline vendor set has no clap).
+//!
+//! Subcommands:
+//! * `emit-spec`  — run the RCNet pipeline, write `artifacts/model_spec.json`
+//! * `traffic`    — traffic comparison at an operating point
+//! * `simulate`   — DLA cycle simulation at an operating point
+//! * `serve`      — run the detection pipeline on synthetic frames
+//!   (requires `make artifacts`)
+
+use std::collections::HashMap;
+
+use crate::config::ChipConfig;
+use crate::dla::{simulate_fused, simulate_layer_by_layer};
+use crate::energy::dram_energy_mj;
+use crate::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
+use crate::traffic::TrafficModel;
+use crate::util::json::Json;
+use crate::Result;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn hw_of(flags: &HashMap<String, String>) -> (u32, u32) {
+    match flags.get("res").map(|s| s.as_str()) {
+        Some("416") => (416, 416),
+        Some("fullhd") => (1080, 1920),
+        Some("ivs") => (960, 1920),
+        _ => (720, 1280),
+    }
+}
+
+const USAGE: &str = "\
+rcnet-dla — RCNet + fused-layer DLA reproduction (TVLSI'22)
+
+USAGE:
+  rcnet-dla emit-spec [--profile scaled|hd] [--out PATH] [--gammas PATH]
+  rcnet-dla traffic   [--res 416|hd|fullhd|ivs] [--spec PATH]
+  rcnet-dla simulate  [--res 416|hd|fullhd|ivs] [--spec PATH]
+  rcnet-dla serve     [--manifest artifacts/manifest.json] [--frames N]
+  rcnet-dla ablation  [--net yolov2|deeplabv3|vgg16]
+";
+
+/// Entry point used by `main.rs`.
+pub fn cli_main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    match pos.first().map(|s| s.as_str()) {
+        Some("emit-spec") => emit_spec(&flags),
+        Some("traffic") => traffic(&flags),
+        Some("simulate") => simulate(&flags),
+        Some("serve") => serve(&flags),
+        Some("ablation") => ablation(&flags),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn load_spec(flags: &HashMap<String, String>) -> Result<(crate::model::Network, Vec<crate::fusion::FusionGroup>)> {
+    match flags.get("spec") {
+        Some(path) => {
+            let txt = std::fs::read_to_string(path)?;
+            let j = Json::parse(&txt).map_err(|e| anyhow::anyhow!(e))?;
+            spec_to_network(&j)
+        }
+        None => {
+            let spec = build_deployment_spec(PipelineProfile::Hd, 3, 5, None, 7);
+            spec_to_network(&spec)
+        }
+    }
+}
+
+fn emit_spec(flags: &HashMap<String, String>) -> Result<()> {
+    let profile = flags
+        .get("profile")
+        .and_then(|s| PipelineProfile::parse(s))
+        .unwrap_or(PipelineProfile::Scaled);
+    let gammas = match flags.get("gammas") {
+        Some(p) if std::path::Path::new(p).exists() => {
+            let txt = std::fs::read_to_string(p)?;
+            Some(Json::parse(&txt).map_err(|e| anyhow::anyhow!(e))?)
+        }
+        _ => None,
+    };
+    let spec = build_deployment_spec(profile, 3, 5, gammas.as_ref(), 7);
+    let out = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "artifacts/model_spec.json".to_string());
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, spec.to_string())?;
+    let (net, groups) = spec_to_network(&spec)?;
+    eprintln!(
+        "wrote {out}: {} layers, {} groups, {:.3}M params ({} profile, gammas: {})",
+        net.layers.len(),
+        groups.len(),
+        net.params() as f64 / 1e6,
+        if profile == PipelineProfile::Scaled { "scaled" } else { "hd" },
+        if gammas.is_some() { "trained" } else { "synthetic" },
+    );
+    Ok(())
+}
+
+fn traffic(flags: &HashMap<String, String>) -> Result<()> {
+    let (net, groups) = load_spec(flags)?;
+    let hw = hw_of(flags);
+    let tm = TrafficModel::paper_chip();
+    let (lbl, fus) = tm.compare(&net, &groups, hw, 30.0);
+    println!("resolution {}x{} @30FPS", hw.1, hw.0);
+    println!(
+        "layer-by-layer: {:8.1} MB/s  ({:6.1} mJ/s DRAM)",
+        lbl.total_mb_s(),
+        dram_energy_mj(lbl.total_bytes()) * 30.0
+    );
+    println!(
+        "group-fused:    {:8.1} MB/s  ({:6.1} mJ/s DRAM)",
+        fus.total_mb_s(),
+        dram_energy_mj(fus.total_bytes()) * 30.0
+    );
+    println!("reduction:      {:8.1}x", lbl.total_mb_s() / fus.total_mb_s());
+    Ok(())
+}
+
+fn simulate(flags: &HashMap<String, String>) -> Result<()> {
+    let (net, groups) = load_spec(flags)?;
+    let hw = hw_of(flags);
+    let chip = ChipConfig::paper_chip();
+    let lbl = simulate_layer_by_layer(&net, hw, &chip);
+    let (fus, gsims) = simulate_fused(&net, &groups, hw, &chip)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    println!("resolution {}x{}", hw.1, hw.0);
+    println!(
+        "layer-by-layer: {:7.2} ms ({:5.1} FPS)",
+        lbl.latency_ms(),
+        lbl.fps()
+    );
+    println!(
+        "group-fused:    {:7.2} ms ({:5.1} FPS, util {:.2})",
+        fus.latency_ms(),
+        fus.fps(),
+        fus.mean_utilization(&chip)
+    );
+    for (i, g) in gsims.iter().enumerate() {
+        println!(
+            "  group {i:>2}: layers {:>2}..{:<2} tiles {:>3} cycles {:>9}",
+            g.group.start, g.group.end, g.tiling.tiles, g.cycles
+        );
+    }
+    Ok(())
+}
+
+fn ablation(flags: &HashMap<String, String>) -> Result<()> {
+    use crate::report::ablation::{ablation_rows, AblationTask};
+    let task = match flags.get("net").map(|s| s.as_str()) {
+        Some("deeplabv3") => AblationTask::DeepLabV3,
+        Some("vgg16") => AblationTask::Vgg16,
+        _ => AblationTask::Yolov2,
+    };
+    let mut t = crate::report::tables::TableBuilder::new(&format!(
+        "{} ({})",
+        task.name(),
+        task.setting()
+    ))
+    .header(&["variant", "acc (proxy)", "GFLOPs", "params (M)", "feat I/O (MB)", "groups"]);
+    for r in ablation_rows(task) {
+        t.row(vec![
+            r.variant,
+            format!("{:.1}", r.accuracy),
+            format!("{:.2}", r.gflops),
+            format!("{:.3}", r.params_m),
+            format!("{:.2}", r.feat_io_mb),
+            r.groups.map_or("-".into(), |g| g.to_string()),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn serve(flags: &HashMap<String, String>) -> Result<()> {
+    let manifest = flags
+        .get("manifest")
+        .cloned()
+        .unwrap_or_else(|| "artifacts/manifest.json".to_string());
+    let frames: usize = flags.get("frames").and_then(|s| s.parse().ok()).unwrap_or(16);
+    let report = crate::coordinator::run_pipeline(&manifest, frames, None)?;
+    println!("{report}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_parsing() {
+        let args: Vec<String> = ["emit-spec", "--out", "x.json", "--hd"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let (pos, flags) = parse_flags(&args);
+        assert_eq!(pos, vec!["emit-spec"]);
+        assert_eq!(flags.get("out").map(|s| s.as_str()), Some("x.json"));
+        assert_eq!(flags.get("hd").map(|s| s.as_str()), Some("true"));
+    }
+
+    #[test]
+    fn hw_selection() {
+        let mut f = HashMap::new();
+        assert_eq!(hw_of(&f), (720, 1280));
+        f.insert("res".to_string(), "fullhd".to_string());
+        assert_eq!(hw_of(&f), (1080, 1920));
+    }
+}

@@ -1,0 +1,11 @@
+//! Reporting: model-spec interchange with the python compile path, table
+//! rendering for the bench harness, and the CLI.
+
+pub mod ablation;
+pub mod cli;
+pub mod spec;
+pub mod sweep;
+pub mod tables;
+
+pub use spec::{network_to_spec, spec_to_network, PipelineProfile};
+pub use tables::TableBuilder;

@@ -1,0 +1,336 @@
+//! Model-spec interchange: the rust fusion engine decides the network
+//! structure (RCNet output + fusion groups + tile plans); the python
+//! compile path (`python/compile/aot.py`) reads the spec, builds the L2
+//! JAX functions per fusion group (calling the L1 Pallas kernels), and
+//! lowers them to `artifacts/group_*.hlo.txt`.
+
+use crate::config::ChipConfig;
+use crate::fusion::{rcnet, FusionConfig, FusionGroup, GammaSet, RcnetOptions};
+use crate::model::{zoo, Act, Layer, LayerKind, Network, Span, SpanKind};
+use crate::tile;
+use crate::util::json::Json;
+use crate::Result;
+
+/// A deployment profile: resolution the artifacts are lowered for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineProfile {
+    /// Runnable numerics on CPU-PJRT (interpret-mode Pallas): 96x160 —
+    /// matches the build-time training resolution exactly (CNNs are not
+    /// scale-invariant; train and serve must see the same object scale).
+    Scaled,
+    /// The paper's HD operating point (analytic path; lowering the full
+    /// 1280x720 graph works but interpret-mode execution is slow).
+    Hd,
+}
+
+impl PipelineProfile {
+    pub fn hw(&self) -> (u32, u32) {
+        match self {
+            PipelineProfile::Scaled => (96, 160),
+            PipelineProfile::Hd => (720, 1280),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "scaled" => Some(PipelineProfile::Scaled),
+            "hd" => Some(PipelineProfile::Hd),
+            _ => None,
+        }
+    }
+}
+
+fn kind_json(l: &Layer) -> (String, u64, u64, u64) {
+    // (kind, k, s, d)
+    match l.kind {
+        LayerKind::Conv { k, s, d } => ("conv".into(), k as u64, s as u64, d as u64),
+        LayerKind::DwConv { k, s } => ("dw".into(), k as u64, s as u64, 1),
+        LayerKind::PwConv { s } => ("pw".into(), 1, s as u64, 1),
+        LayerKind::MaxPool { k, s } => ("maxpool".into(), k as u64, s as u64, 1),
+        LayerKind::GlobalAvgPool => ("gap".into(), 0, 1, 1),
+        LayerKind::Dense => ("dense".into(), 1, 1, 1),
+        LayerKind::Reorg { s } => ("reorg".into(), 0, s as u64, 1),
+        LayerKind::Concat => ("concat".into(), 0, 1, 1),
+        LayerKind::Upsample { factor } => ("upsample".into(), 0, factor as u64, 1),
+    }
+}
+
+fn act_name(a: Act) -> &'static str {
+    match a {
+        Act::None => "none",
+        Act::Relu6 => "relu6",
+        Act::Leaky => "leaky",
+        Act::Relu => "relu",
+    }
+}
+
+/// Serialize a network + fusion groups (+ per-group tile plans at `hw`).
+pub fn network_to_spec(
+    net: &Network,
+    groups: &[FusionGroup],
+    chip: &ChipConfig,
+    hw: (u32, u32),
+    classes: u32,
+    anchors: u32,
+) -> Json {
+    let mut root = Json::obj();
+    root.set("name", Json::Str(net.name.clone()));
+    root.set(
+        "input_hw",
+        Json::Arr(vec![Json::Num(hw.0 as f64), Json::Num(hw.1 as f64)]),
+    );
+    root.set("c_in", Json::Num(net.c_in as f64));
+    root.set("classes", Json::Num(classes as f64));
+    root.set("anchors", Json::Num(anchors as f64));
+
+    let layers: Vec<Json> = net
+        .layers
+        .iter()
+        .map(|l| {
+            let (kind, k, s, d) = kind_json(l);
+            let mut o = Json::obj();
+            o.set("name", Json::Str(l.name.clone()));
+            o.set("kind", Json::Str(kind));
+            o.set("k", Json::Num(k as f64));
+            o.set("s", Json::Num(s as f64));
+            o.set("d", Json::Num(d as f64));
+            o.set("c_in", Json::Num(l.c_in as f64));
+            o.set("c_out", Json::Num(l.c_out as f64));
+            o.set("bn", Json::Bool(l.bn));
+            o.set("act", Json::Str(act_name(l.act).into()));
+            o.set(
+                "branch_from",
+                l.branch_from.map_or(Json::Null, |b| Json::Num(b as f64)),
+            );
+            o
+        })
+        .collect();
+    root.set("layers", Json::Arr(layers));
+
+    let spans: Vec<Json> = net
+        .spans
+        .iter()
+        .map(|sp| {
+            let mut o = Json::obj();
+            o.set(
+                "kind",
+                Json::Str(match sp.kind {
+                    SpanKind::Residual => "residual".into(),
+                    SpanKind::Concat => "concat".into(),
+                }),
+            );
+            o.set("start", Json::Num(sp.start as f64));
+            o.set("end", Json::Num(sp.end as f64));
+            o
+        })
+        .collect();
+    root.set("spans", Json::Arr(spans));
+
+    let shapes = net.shapes(hw);
+    let groups_json: Vec<Json> = groups
+        .iter()
+        .enumerate()
+        .map(|(gi, g)| {
+            let mut o = Json::obj();
+            o.set("id", Json::Num(gi as f64));
+            o.set("start", Json::Num(g.start as f64));
+            o.set("end", Json::Num(g.end as f64));
+            let t = tile::plan_group(net, g, hw, chip).ok();
+            o.set("tile_h", t.map_or(Json::Null, |t| Json::Num(t.tile_h as f64)));
+            o.set("tiles", t.map_or(Json::Null, |t| Json::Num(t.tiles as f64)));
+            let si = shapes[g.start];
+            let so = shapes[g.end];
+            o.set(
+                "in_shape",
+                Json::Arr(vec![
+                    Json::Num(si.h_in as f64),
+                    Json::Num(si.w_in as f64),
+                    Json::Num(net.layers[g.start].c_in as f64),
+                ]),
+            );
+            o.set(
+                "out_shape",
+                Json::Arr(vec![
+                    Json::Num(so.h_out as f64),
+                    Json::Num(so.w_out as f64),
+                    Json::Num(net.layers[g.end].c_out as f64),
+                ]),
+            );
+            o
+        })
+        .collect();
+    root.set("groups", Json::Arr(groups_json));
+    root
+}
+
+/// Rebuild a network (+groups) from a spec (round-trip for tests and for
+/// loading a spec produced by an earlier run).
+pub fn spec_to_network(j: &Json) -> Result<(Network, Vec<FusionGroup>)> {
+    let err = |m: &str| anyhow::anyhow!("spec: {m}");
+    let hw = j.get("input_hw").ok_or_else(|| err("input_hw"))?;
+    let mut net = Network::new(
+        j.get("name").and_then(|v| v.as_str()).unwrap_or("spec"),
+        (
+            hw.idx(0).and_then(|v| v.as_u64()).unwrap_or(0) as u32,
+            hw.idx(1).and_then(|v| v.as_u64()).unwrap_or(0) as u32,
+        ),
+        j.get("c_in").and_then(|v| v.as_u64()).unwrap_or(3) as u32,
+    );
+    for l in j.get("layers").and_then(|v| v.as_arr()).ok_or_else(|| err("layers"))? {
+        let kind = l.get("kind").and_then(|v| v.as_str()).ok_or_else(|| err("kind"))?;
+        let k = l.get("k").and_then(|v| v.as_u64()).unwrap_or(0) as u32;
+        let s = l.get("s").and_then(|v| v.as_u64()).unwrap_or(1) as u32;
+        let d = l.get("d").and_then(|v| v.as_u64()).unwrap_or(1) as u32;
+        let c_in = l.get("c_in").and_then(|v| v.as_u64()).unwrap_or(0) as u32;
+        let c_out = l.get("c_out").and_then(|v| v.as_u64()).unwrap_or(0) as u32;
+        let lk = match kind {
+            "conv" => LayerKind::Conv { k, s, d },
+            "dw" => LayerKind::DwConv { k, s },
+            "pw" => LayerKind::PwConv { s },
+            "maxpool" => LayerKind::MaxPool { k, s },
+            "gap" => LayerKind::GlobalAvgPool,
+            "dense" => LayerKind::Dense,
+            "reorg" => LayerKind::Reorg { s },
+            "concat" => LayerKind::Concat,
+            "upsample" => LayerKind::Upsample { factor: s },
+            other => return Err(err(&format!("unknown kind {other}"))),
+        };
+        let act = match l.get("act").and_then(|v| v.as_str()).unwrap_or("none") {
+            "relu6" => Act::Relu6,
+            "leaky" => Act::Leaky,
+            "relu" => Act::Relu,
+            _ => Act::None,
+        };
+        net.push(Layer {
+            name: l.get("name").and_then(|v| v.as_str()).unwrap_or("").into(),
+            kind: lk,
+            c_in,
+            c_out,
+            bn: l.get("bn").and_then(|v| v.as_bool()).unwrap_or(false),
+            act,
+            branch_from: l.get("branch_from").and_then(|v| v.as_usize()),
+        });
+    }
+    for sp in j.get("spans").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+        net.spans.push(Span {
+            kind: match sp.get("kind").and_then(|v| v.as_str()) {
+                Some("concat") => SpanKind::Concat,
+                _ => SpanKind::Residual,
+            },
+            start: sp.get("start").and_then(|v| v.as_usize()).unwrap_or(0),
+            end: sp.get("end").and_then(|v| v.as_usize()).unwrap_or(0),
+        });
+    }
+    let groups = j
+        .get("groups")
+        .and_then(|v| v.as_arr())
+        .unwrap_or(&[])
+        .iter()
+        .map(|g| FusionGroup {
+            start: g.get("start").and_then(|v| v.as_usize()).unwrap_or(0),
+            end: g.get("end").and_then(|v| v.as_usize()).unwrap_or(0),
+        })
+        .collect();
+    Ok((net, groups))
+}
+
+/// Build the deployment RC-YOLOv2 (the full §II pipeline) and serialize it
+/// for the given profile. `gammas_json` optionally carries trained gammas
+/// from `python/compile/rcnet.py`.
+pub fn build_deployment_spec(
+    profile: PipelineProfile,
+    classes: u32,
+    anchors: u32,
+    gammas_json: Option<&Json>,
+    seed: u64,
+) -> Json {
+    let mut base = zoo::yolov2_converted(classes, anchors);
+    base.input_hw = profile.hw();
+    let gammas = match gammas_json {
+        Some(j) => {
+            let named: Vec<(String, Vec<f32>)> = j
+                .get("gammas")
+                .and_then(|v| v.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|e| {
+                    let name = e.get("layer")?.as_str()?.to_string();
+                    let vals = e
+                        .get("values")?
+                        .as_arr()?
+                        .iter()
+                        .filter_map(|v| v.as_f64().map(|f| f as f32))
+                        .collect();
+                    Some((name, vals))
+                })
+                .collect();
+            GammaSet::from_artifact(&base, &named, seed)
+        }
+        None => GammaSet::synthetic(&base, seed),
+    };
+    let cfg = FusionConfig::paper_default();
+    let out = rcnet(
+        &base,
+        &gammas,
+        &cfg,
+        &RcnetOptions {
+            target_params: Some(1_020_000),
+            ..Default::default()
+        },
+    );
+    let chip = ChipConfig::paper_chip();
+    network_to_spec(&out.network, &out.groups, &chip, profile.hw(), classes, anchors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::network_cost;
+    use crate::model::Precision;
+
+    #[test]
+    fn spec_roundtrips() {
+        let spec = build_deployment_spec(PipelineProfile::Scaled, 3, 5, None, 7);
+        let txt = spec.to_string();
+        let parsed = Json::parse(&txt).unwrap();
+        let (net, groups) = spec_to_network(&parsed).unwrap();
+        assert!(net.check_consistency().is_empty(), "{:?}", net.check_consistency());
+        assert!(!groups.is_empty());
+        // Params survive the round trip.
+        let spec2 = build_deployment_spec(PipelineProfile::Scaled, 3, 5, None, 7);
+        let (net2, _) = spec_to_network(&spec2).unwrap();
+        assert_eq!(
+            network_cost(&net, net.input_hw, Precision::INT8).params,
+            network_cost(&net2, net2.input_hw, Precision::INT8).params
+        );
+    }
+
+    #[test]
+    fn scaled_profile_shapes_divide() {
+        let spec = build_deployment_spec(PipelineProfile::Scaled, 3, 5, None, 7);
+        let (net, groups) = spec_to_network(&spec).unwrap();
+        let shapes = net.shapes((96, 160));
+        assert_eq!(shapes.last().unwrap().h_out, 3);
+        assert_eq!(shapes.last().unwrap().w_out, 5);
+        // Group shapes recorded in the spec match recomputation.
+        for (gi, g) in groups.iter().enumerate() {
+            let gj = spec.get("groups").unwrap().idx(gi).unwrap();
+            assert_eq!(
+                gj.get("in_shape").unwrap().idx(2).unwrap().as_u64().unwrap() as u32,
+                net.layers[g.start].c_in
+            );
+        }
+    }
+
+    #[test]
+    fn gamma_artifact_changes_structure() {
+        let spec_a = build_deployment_spec(PipelineProfile::Scaled, 3, 5, None, 7);
+        // A gamma artifact zeroing half of conv1's channels.
+        let g = Json::parse(
+            r#"{"gammas": [{"layer": "conv1", "values": [0.001, 0.001, 0.001, 0.001]}]}"#,
+        )
+        .unwrap();
+        let spec_b = build_deployment_spec(PipelineProfile::Scaled, 3, 5, Some(&g), 7);
+        assert_ne!(spec_a.to_string(), spec_b.to_string());
+    }
+}

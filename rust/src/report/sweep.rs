@@ -1,0 +1,129 @@
+//! Parameter sweeps behind Fig. 9 (weight-buffer size), Fig. 10 (final
+//! model size) and Fig. 13 (latency/bandwidth vs buffer size). Each point
+//! reruns the full RCNet pipeline at that configuration — structure
+//! genuinely re-morphs per point, as in the paper.
+
+use crate::config::ChipConfig;
+use crate::dla::simulate_fused;
+use crate::fusion::{rcnet, FusionConfig, GammaSet, RcnetOptions};
+use crate::model::zoo;
+use crate::traffic::TrafficModel;
+use crate::util::kb;
+
+/// One sweep sample.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub buffer_kb: u64,
+    pub target_params: u64,
+    pub params_m: f64,
+    pub groups: usize,
+    /// Fused feature traffic per frame (MB, write+read).
+    pub feat_io_mb: f64,
+    /// Total fused bandwidth at 30 FPS (MB/s).
+    pub bandwidth_mb_s: f64,
+    /// Accuracy proxy (same capacity model as the ablation tables).
+    pub accuracy_proxy: f64,
+    pub latency_ms: f64,
+    pub fps: f64,
+}
+
+fn point(buffer_kb: u64, target_params: u64, hw: (u32, u32)) -> SweepPoint {
+    point_opts(buffer_kb, target_params, hw, false)
+}
+
+fn point_opts(buffer_kb: u64, target_params: u64, hw: (u32, u32), scale_up: bool) -> SweepPoint {
+    let converted = zoo::yolov2_converted(3, 5);
+    let gammas = GammaSet::synthetic(&converted, 7);
+    // Small design-space search over the slack m (the designer's knob in
+    // Algorithm 1): pick the partition with the lowest fused traffic.
+    let mut best: Option<(crate::fusion::RcnetOutcome, u64)> = None;
+    for slack in [0.25f64, 0.5, 0.75] {
+        let mut cfg = FusionConfig::paper_default().with_buffer(kb(buffer_kb));
+        cfg.slack = slack;
+        let out = rcnet(
+            &converted,
+            &gammas,
+            &cfg,
+            &RcnetOptions {
+                target_params: Some(target_params),
+                scale_up_to_target: scale_up,
+                ..Default::default()
+            },
+        );
+        let bytes = TrafficModel::paper_chip()
+            .fused(&out.network, &out.groups, hw)
+            .total_bytes();
+        if best.as_ref().map_or(true, |(_, b)| bytes < *b) {
+            best = Some((out, bytes));
+        }
+    }
+    let (out, _) = best.unwrap();
+    let cfg = FusionConfig::paper_default().with_buffer(kb(buffer_kb));
+    let _ = &cfg;
+    let tm = TrafficModel::paper_chip();
+    let fused = tm.fused(&out.network, &out.groups, hw);
+    let chip = ChipConfig::paper_chip().with_weight_buffer(kb(buffer_kb));
+    let (latency_ms, fps) = match simulate_fused(&out.network, &out.groups, hw, &chip) {
+        Ok((sim, _)) => (sim.latency_ms(), sim.fps()),
+        Err(_) => (f64::NAN, 0.0),
+    };
+    // Capacity proxy, shared coefficients with the Table I model; an
+    // extra penalty below 100 KB reflects the paper's observation that
+    // "when the buffer size is under 100 KB, the mAP drop will be
+    // significant" (harsher in-group pruning distorts the structure).
+    let base = 84.3; // converted-model accuracy on IVS (Table I col 2)
+    let shrink = (converted.params() as f64 / out.params_after as f64).log2().max(0.0);
+    let buffer_pressure = (100.0 / buffer_kb as f64 - 1.0).max(0.0);
+    let accuracy_proxy = base - 3.15 * shrink - 3.0 * buffer_pressure;
+    SweepPoint {
+        buffer_kb,
+        target_params,
+        params_m: out.params_after as f64 / 1e6,
+        groups: out.groups.len(),
+        feat_io_mb: fused.feat_bytes() as f64 / 1e6,
+        bandwidth_mb_s: fused.frame(30.0).total_mb_s(),
+        accuracy_proxy,
+        latency_ms,
+        fps,
+    }
+}
+
+/// Fig. 9 / Fig. 13: vary the weight buffer at fixed model-size target.
+pub fn buffer_sweep(buffers_kb: &[u64], target_params: u64, hw: (u32, u32)) -> Vec<SweepPoint> {
+    buffers_kb.iter().map(|&b| point(b, target_params, hw)).collect()
+}
+
+/// Fig. 10: vary the final model size at fixed 100 KB buffer.
+pub fn size_sweep(targets: &[u64], hw: (u32, u32)) -> Vec<SweepPoint> {
+    targets.iter().map(|&t| point_opts(100, t, hw, true)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_io_rises_as_buffer_shrinks() {
+        let pts = buffer_sweep(&[50, 200], 1_020_000, (720, 1280));
+        assert!(
+            pts[0].feat_io_mb > pts[1].feat_io_mb,
+            "50KB {} !> 200KB {}",
+            pts[0].feat_io_mb,
+            pts[1].feat_io_mb
+        );
+    }
+
+    #[test]
+    fn accuracy_proxy_drops_below_100kb() {
+        let pts = buffer_sweep(&[50, 100, 200], 1_020_000, (720, 1280));
+        assert!(pts[0].accuracy_proxy < pts[1].accuracy_proxy);
+        assert!(pts[1].accuracy_proxy <= pts[2].accuracy_proxy + 0.5);
+    }
+
+    #[test]
+    fn size_sweep_monotone_in_accuracy() {
+        let pts = size_sweep(&[800_000, 1_500_000, 3_000_000], (720, 1280));
+        assert!(pts[0].accuracy_proxy <= pts[2].accuracy_proxy);
+        assert!(pts[0].params_m < pts[2].params_m);
+    }
+}

@@ -1,0 +1,141 @@
+//! `artifacts/manifest.json` — written by `python/compile/aot.py`.
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Per-group artifact metadata.
+#[derive(Debug, Clone)]
+pub struct GroupMeta {
+    pub id: usize,
+    pub file: String,
+    /// (h, w, c)
+    pub in_shape: (usize, usize, usize),
+    pub out_shape: (usize, usize, usize),
+    pub tiles: Option<u32>,
+    pub tile_h: Option<u32>,
+}
+
+/// The artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    /// (h, w) input resolution the artifacts were lowered for.
+    pub input_hw: (usize, usize),
+    pub classes: usize,
+    /// Normalized (w, h) anchors baked at training time.
+    pub anchors: Vec<(f32, f32)>,
+    pub groups: Vec<GroupMeta>,
+    pub trained: bool,
+    pub quantized: bool,
+}
+
+fn shape3(j: &Json) -> Option<(usize, usize, usize)> {
+    Some((
+        j.idx(0)?.as_usize()?,
+        j.idx(1)?.as_usize()?,
+        j.idx(2)?.as_usize()?,
+    ))
+}
+
+impl Manifest {
+    pub fn parse(j: &Json) -> Result<Manifest> {
+        let e = |m: &str| anyhow::anyhow!("manifest: missing {m}");
+        let hw = j.get("input_hw").ok_or_else(|| e("input_hw"))?;
+        let groups = j
+            .get("groups")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| e("groups"))?
+            .iter()
+            .map(|g| {
+                Ok(GroupMeta {
+                    id: g.get("id").and_then(|v| v.as_usize()).ok_or_else(|| e("group.id"))?,
+                    file: g
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| e("group.file"))?
+                        .to_string(),
+                    in_shape: g
+                        .get("in_shape")
+                        .and_then(shape3)
+                        .ok_or_else(|| e("group.in_shape"))?,
+                    out_shape: g
+                        .get("out_shape")
+                        .and_then(shape3)
+                        .ok_or_else(|| e("group.out_shape"))?,
+                    tiles: g.get("tiles").and_then(|v| v.as_u64()).map(|v| v as u32),
+                    tile_h: g.get("tile_h").and_then(|v| v.as_u64()).map(|v| v as u32),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let anchors = j
+            .get("anchors")
+            .and_then(|v| v.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|a| {
+                        Some((
+                            a.idx(0)?.as_f64()? as f32,
+                            a.idx(1)?.as_f64()? as f32,
+                        ))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(Manifest {
+            name: j
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("model")
+                .to_string(),
+            input_hw: (
+                hw.idx(0).and_then(|v| v.as_usize()).ok_or_else(|| e("input_hw[0]"))?,
+                hw.idx(1).and_then(|v| v.as_usize()).ok_or_else(|| e("input_hw[1]"))?,
+            ),
+            classes: j.get("classes").and_then(|v| v.as_usize()).unwrap_or(3),
+            anchors,
+            groups,
+            trained: j.get("trained").and_then(|v| v.as_bool()).unwrap_or(false),
+            quantized: j.get("quantized").and_then(|v| v.as_bool()).unwrap_or(false),
+        })
+    }
+
+    pub fn load(path: &str) -> Result<Manifest> {
+        let txt = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let j = Json::parse(&txt).map_err(|m| anyhow::anyhow!("parsing {path}: {m}"))?;
+        Self::parse(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "name": "rc-yolov2", "input_hw": [192, 320], "classes": 3,
+        "anchors": [[0.08, 0.1], [0.18, 0.2]],
+        "groups": [
+            {"id": 0, "file": "group_00.hlo.txt",
+             "in_shape": [192, 320, 3], "out_shape": [48, 80, 40],
+             "tiles": 1, "tile_h": 192}
+        ],
+        "trained": true, "quantized": false
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::parse(&j).unwrap();
+        assert_eq!(m.input_hw, (192, 320));
+        assert_eq!(m.groups.len(), 1);
+        assert_eq!(m.groups[0].in_shape, (192, 320, 3));
+        assert_eq!(m.anchors.len(), 2);
+        assert!(m.trained);
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        let j = Json::parse(r#"{"name": "x"}"#).unwrap();
+        assert!(Manifest::parse(&j).is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/group_*.hlo.txt` +
+//! `manifest.json`) and executes fusion groups on the request path.
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO *text* interchange (the
+//! crate's xla_extension 0.5.1 rejects jax>=0.5 serialized protos), one
+//! compiled executable per fusion group, `return_tuple=True` unwrapped
+//! with `to_tuple1()`. Python never runs here.
+
+mod manifest;
+
+pub use manifest::{GroupMeta, Manifest};
+
+use anyhow::{Context, Result};
+
+/// A compiled fusion-group executable.
+pub struct GroupExecutable {
+    pub meta: GroupMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl GroupExecutable {
+    /// Execute on a row-major HWC f32 buffer; returns the output buffer.
+    pub fn execute(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let (h, w, c) = self.meta.in_shape;
+        anyhow::ensure!(
+            input.len() == h * w * c,
+            "group {}: input len {} != {}x{}x{}",
+            self.meta.id,
+            input.len(),
+            h,
+            w,
+            c
+        );
+        let lit = xla::Literal::vec1(input).reshape(&[h as i64, w as i64, c as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The loaded model: a PJRT client plus one executable per fusion group.
+pub struct Runtime {
+    pub manifest: Manifest,
+    pub groups: Vec<GroupExecutable>,
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Load and compile every group executable named by the manifest.
+    pub fn load(manifest_path: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(manifest_path)?;
+        let dir = std::path::Path::new(manifest_path)
+            .parent()
+            .unwrap_or_else(|| std::path::Path::new("."));
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mut groups = Vec::with_capacity(manifest.groups.len());
+        for meta in &manifest.groups {
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("loading {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling group {}", meta.id))?;
+            groups.push(GroupExecutable { meta: meta.clone(), exe });
+        }
+        Ok(Runtime { manifest, groups, client })
+    }
+
+    /// Run a full frame (HWC f32 at the manifest's input resolution)
+    /// through all fusion groups; returns the raw head tensor.
+    pub fn run_frame(&self, frame: &[f32]) -> Result<Vec<f32>> {
+        let mut x = frame.to_vec();
+        for g in &self.groups {
+            x = g.execute(&x)?;
+        }
+        Ok(x)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

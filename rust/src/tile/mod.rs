@@ -1,0 +1,235 @@
+//! Nonoverlapped tile processing (§III-B, after split-CNN [24] / block
+//! convolution [25]).
+//!
+//! Tiles span the full feature-map width (no left/right padding); the tile
+//! height is the largest value for which *every* layer of the fusion group
+//! keeps both its input and output tile slab inside one half of the
+//! unified buffer: `map / pooling_factor x channels <= buffer size`.
+//! Top/bottom tile boundaries use boundary extension — tiles are fully
+//! independent (no halo exchange, no recompute).
+
+use crate::config::ChipConfig;
+use crate::fusion::FusionGroup;
+use crate::model::Network;
+
+/// Tiling decision for one fusion group at a concrete input resolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupTiling {
+    /// Tile height in rows of the *group input* feature map.
+    pub tile_h: u32,
+    /// Number of tiles covering the group input.
+    pub tiles: u32,
+    /// Largest slab (bytes) any layer of the group places in a unified
+    /// buffer half under this tiling — must be `<= unified_half_bytes`.
+    pub max_slab_bytes: u64,
+    /// Total downsampling factor across the group.
+    pub pool_factor: u32,
+}
+
+/// Errors from tile planning.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TileError {
+    /// Even a single deepest-layer row exceeds the buffer half: the group
+    /// cannot execute from the unified buffer at this resolution.
+    BufferTooSmall { group_start: usize, needed: u64, available: u64 },
+}
+
+/// Plan the tiling of `group` for network input resolution `hw`.
+///
+/// The group input resolution is the input of its first layer; the tile
+/// height is maximized subject to every layer's input *and* output slab
+/// fitting `chip.unified_half_bytes` (ping-pong: input in one half, output
+/// in the other), and is aligned down to a multiple of the group's total
+/// downsampling factor so tile boundaries land on whole output rows.
+pub fn plan_group(
+    net: &Network,
+    group: &FusionGroup,
+    hw: (u32, u32),
+    chip: &ChipConfig,
+) -> Result<GroupTiling, TileError> {
+    let shapes = net.shapes(hw);
+    let g_in_h = shapes[group.start].h_in.max(1);
+    let act = chip.precision.act_bytes;
+
+    // Per-layer downsampling factor of the layer's input relative to the
+    // group input (>= 1).
+    let mut pool_factor = 1u32;
+    for i in group.layer_range() {
+        pool_factor = pool_factor.saturating_mul(net.layers[i].stride().max(1));
+    }
+
+    // A candidate tile height must be a multiple of the cumulative factor;
+    // search the largest feasible height.
+    let fits = |tile_h: u32| -> Option<u64> {
+        let max_slab;
+        // Group input slab.
+        {
+            let s0 = shapes[group.start];
+            let c0 = net.layers[group.start].c_in as u64;
+            let slab = tile_h.min(s0.h_in) as u64 * s0.w_in as u64 * c0 * act;
+            if slab > chip.unified_half_bytes {
+                return None;
+            }
+            max_slab = slab;
+        }
+        let mut max_slab = max_slab;
+        // Stored output slabs: pooling runs as the preceding layer's
+        // epilogue, so the stored slab of a conv followed by pools is the
+        // pooled map ("map / Pooling Factor x channels <= Buffer Size").
+        let mut i = group.start;
+        while i <= group.end {
+            // Advance to the end of the epilogue chain of layer i.
+            let mut j = i;
+            while j + 1 <= group.end && net.layers[j + 1].is_epilogue() {
+                j += 1;
+            }
+            let l_store = &net.layers[j];
+            let s = shapes[j];
+            let f_out = (g_in_h / s.h_out.max(1)).max(1);
+            let rows_out = tile_h.div_ceil(f_out).min(s.h_out).max(1);
+            let slab = rows_out as u64 * s.w_out as u64 * l_store.c_out as u64 * act;
+            if slab > chip.unified_half_bytes {
+                return None;
+            }
+            max_slab = max_slab.max(slab);
+            i = j + 1;
+        }
+        Some(max_slab)
+    };
+
+    // Candidates: multiples of pool_factor up to the full group input.
+    let step = pool_factor.max(1);
+    let mut best: Option<(u32, u64)> = None;
+    let mut th = (g_in_h / step) * step;
+    if th == 0 {
+        th = g_in_h;
+    }
+    while th >= step.min(g_in_h) {
+        if let Some(slab) = fits(th) {
+            best = Some((th, slab));
+            break; // largest feasible found (search descends)
+        }
+        th = th.saturating_sub(step);
+        if th == 0 {
+            break;
+        }
+    }
+    // Last resort: tile heights below the alignment step (misaligned
+    // tiles cost extra boundary-extension rows but remain correct under
+    // nonoverlapped-tile semantics).
+    if best.is_none() {
+        let mut th = step.min(g_in_h).saturating_sub(1);
+        while th >= 1 {
+            if let Some(slab) = fits(th) {
+                best = Some((th, slab));
+                break;
+            }
+            th -= 1;
+        }
+    }
+
+    match best {
+        Some((tile_h, max_slab)) => Ok(GroupTiling {
+            tile_h,
+            tiles: g_in_h.div_ceil(tile_h),
+            max_slab_bytes: max_slab,
+            pool_factor,
+        }),
+        None => Err(TileError::BufferTooSmall {
+            group_start: group.start,
+            needed: fits(step).map_or(u64::MAX, |s| s),
+            available: chip.unified_half_bytes,
+        }),
+    }
+}
+
+/// Plan every group; groups that cannot tile are returned as errors.
+pub fn plan_network(
+    net: &Network,
+    groups: &[FusionGroup],
+    hw: (u32, u32),
+    chip: &ChipConfig,
+) -> Vec<Result<GroupTiling, TileError>> {
+    groups.iter().map(|g| plan_group(net, g, hw, chip)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::{rcnet, FusionConfig, GammaSet, RcnetOptions};
+    use crate::model::zoo::yolov2_converted;
+
+    fn rc_yolo() -> (crate::model::Network, Vec<FusionGroup>) {
+        let net = yolov2_converted(3, 5);
+        let g = GammaSet::synthetic(&net, 7);
+        let cfg = FusionConfig::paper_default();
+        let out = rcnet(
+            &net,
+            &g,
+            &cfg,
+            &RcnetOptions { target_params: Some(1_020_000), ..Default::default() },
+        );
+        (out.network, out.groups)
+    }
+
+    #[test]
+    fn hd_groups_all_tile() {
+        let (net, groups) = rc_yolo();
+        let chip = ChipConfig::paper_chip();
+        for (gi, t) in plan_network(&net, &groups, (720, 1280), &chip).iter().enumerate() {
+            let t = t.as_ref().unwrap_or_else(|e| panic!("group {gi}: {e:?}"));
+            assert!(t.max_slab_bytes <= chip.unified_half_bytes);
+            assert!(t.tiles >= 1);
+        }
+    }
+
+    #[test]
+    fn tile_height_is_aligned() {
+        let (net, groups) = rc_yolo();
+        let chip = ChipConfig::paper_chip();
+        for g in &groups {
+            let t = plan_group(&net, g, (720, 1280), &chip).unwrap();
+            // Aligned unless it is the final partial tile of the map.
+            assert!(
+                t.tile_h % t.pool_factor == 0 || t.tiles == 1,
+                "tile_h {} not aligned to {}",
+                t.tile_h,
+                t.pool_factor
+            );
+        }
+    }
+
+    #[test]
+    fn tiles_cover_input() {
+        let (net, groups) = rc_yolo();
+        let chip = ChipConfig::paper_chip();
+        let shapes = net.shapes((720, 1280));
+        for g in &groups {
+            let t = plan_group(&net, g, (720, 1280), &chip).unwrap();
+            let h = shapes[g.start].h_in;
+            assert!(t.tile_h * t.tiles >= h, "{} * {} < {h}", t.tile_h, t.tiles);
+            assert!(t.tile_h * (t.tiles - 1) < h, "one tile too many");
+        }
+    }
+
+    #[test]
+    fn smaller_buffer_means_more_tiles() {
+        let (net, groups) = rc_yolo();
+        let big = ChipConfig::paper_chip();
+        let small = ChipConfig::paper_chip().with_unified_half(big.unified_half_bytes / 2);
+        let g0 = &groups[0];
+        let tb = plan_group(&net, g0, (720, 1280), &big).unwrap();
+        let ts = plan_group(&net, g0, (720, 1280), &small).unwrap();
+        assert!(ts.tiles >= tb.tiles);
+        assert!(ts.tile_h <= tb.tile_h);
+    }
+
+    #[test]
+    fn full_hd_still_tiles() {
+        let (net, groups) = rc_yolo();
+        let chip = ChipConfig::paper_chip();
+        for t in plan_network(&net, &groups, (1080, 1920), &chip) {
+            assert!(t.is_ok(), "{t:?}");
+        }
+    }
+}

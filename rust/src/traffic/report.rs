@@ -1,0 +1,103 @@
+//! Traffic report types: per-layer series (Fig. 12) and per-frame /
+//! per-second aggregates (Tables I & IV).
+
+/// Per-layer external traffic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerTraffic {
+    pub name: String,
+    /// Output channels (Fig. 12 plots channels alongside traffic).
+    pub c_out: u32,
+    pub feat_in_bytes: u64,
+    pub feat_out_bytes: u64,
+    pub weight_bytes: u64,
+}
+
+impl LayerTraffic {
+    pub fn total(&self) -> u64 {
+        self.feat_in_bytes + self.feat_out_bytes + self.weight_bytes
+    }
+    pub fn feat(&self) -> u64 {
+        self.feat_in_bytes + self.feat_out_bytes
+    }
+}
+
+/// Whole-network traffic under one schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TrafficReport {
+    pub per_layer: Vec<LayerTraffic>,
+    pub schedule: String,
+}
+
+impl TrafficReport {
+    pub fn feat_bytes(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.feat()).sum()
+    }
+    pub fn weight_bytes(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.weight_bytes).sum()
+    }
+    pub fn total_bytes(&self) -> u64 {
+        self.feat_bytes() + self.weight_bytes()
+    }
+    /// Attach a frame rate to get bandwidth/energy figures.
+    pub fn frame(&self, fps: f64) -> FrameTraffic {
+        FrameTraffic {
+            feat_bytes: self.feat_bytes(),
+            weight_bytes: self.weight_bytes(),
+            fps,
+        }
+    }
+}
+
+/// Traffic at an operating point (resolution implied by the report, frame
+/// rate attached).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrameTraffic {
+    pub feat_bytes: u64,
+    pub weight_bytes: u64,
+    pub fps: f64,
+}
+
+impl FrameTraffic {
+    pub fn total_bytes(&self) -> u64 {
+        self.feat_bytes + self.weight_bytes
+    }
+    pub fn total_mb_s(&self) -> f64 {
+        self.total_bytes() as f64 * self.fps / 1e6
+    }
+    pub fn feat_mb(&self) -> f64 {
+        self.feat_bytes as f64 / 1e6
+    }
+    /// DRAM energy per second at `pj_per_bit` (Table IV: 70 pJ/bit DDR3).
+    pub fn dram_energy_mj(&self, pj_per_bit: f64) -> f64 {
+        self.total_bytes() as f64 * self.fps * 8.0 * pj_per_bit * 1e-12 * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_energy_formula() {
+        // 4656 MB/s at 70 pJ/bit = 2607 mJ (Table IV "Original" HD row).
+        let ft = FrameTraffic { feat_bytes: 4656_000_000 / 30, weight_bytes: 0, fps: 30.0 };
+        let e = ft.dram_energy_mj(70.0);
+        assert!((e - 2607.0).abs() < 10.0, "{e}");
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = TrafficReport {
+            per_layer: vec![
+                LayerTraffic { name: "a".into(), c_out: 8, feat_in_bytes: 10, feat_out_bytes: 20, weight_bytes: 5 },
+                LayerTraffic { name: "b".into(), c_out: 8, feat_in_bytes: 1, feat_out_bytes: 2, weight_bytes: 3 },
+            ],
+            schedule: "t".into(),
+        };
+        assert_eq!(r.feat_bytes(), 33);
+        assert_eq!(r.weight_bytes(), 8);
+        assert_eq!(r.total_bytes(), 41);
+        let f = r.frame(30.0);
+        assert!((f.total_mb_s() - 41.0 * 30.0 / 1e6).abs() < 1e-12);
+    }
+}

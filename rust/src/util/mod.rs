@@ -1,0 +1,12 @@
+//! Small shared utilities: deterministic PRNG (matches the python-side
+//! generator bit-for-bit so dataset scenes agree across the build/run
+//! boundary), unit formatting, simple stats.
+
+pub mod json;
+mod rng;
+mod stats;
+mod units;
+
+pub use rng::Rng;
+pub use stats::{mean, percentile, stddev};
+pub use units::{fmt_bytes, fmt_rate, gb, kb, mb};

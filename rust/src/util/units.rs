@@ -1,0 +1,63 @@
+//! Byte/rate unit helpers. The paper mixes KB (2^10, for SRAM buffers) and
+//! MB/s (10^6, for DRAM bandwidth); we follow the same convention: SRAM
+//! sizes binary, DRAM traffic decimal.
+
+/// SRAM kilobytes (binary): `kb(96)` = 96 KiB in bytes.
+pub const fn kb(n: u64) -> u64 {
+    n * 1024
+}
+
+/// Decimal megabytes in bytes (DRAM traffic convention).
+pub const fn mb(n: u64) -> u64 {
+    n * 1_000_000
+}
+
+/// Decimal gigabytes in bytes.
+pub const fn gb(n: u64) -> u64 {
+    n * 1_000_000_000
+}
+
+/// Human-format a byte count (decimal units, matching the paper's tables).
+pub fn fmt_bytes(bytes: u64) -> String {
+    let b = bytes as f64;
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.2} KB", b / 1e3)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Format a bytes/second rate.
+pub fn fmt_rate(bytes_per_s: f64) -> String {
+    if bytes_per_s >= 1e9 {
+        format!("{:.2} GB/s", bytes_per_s / 1e9)
+    } else {
+        format!("{:.1} MB/s", bytes_per_s / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sram_is_binary() {
+        assert_eq!(kb(96), 98304);
+    }
+
+    #[test]
+    fn dram_is_decimal() {
+        assert_eq!(mb(585), 585_000_000);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(585_000_000), "585.00 MB");
+        assert_eq!(fmt_rate(4.656e9), "4.66 GB/s");
+        assert_eq!(fmt_rate(585e6), "585.0 MB/s");
+    }
+}

@@ -1,0 +1,73 @@
+//! Integration tests over the PJRT runtime + coordinator. These need the
+//! AOT artifacts (`make artifacts`); they self-skip when absent so
+//! `cargo test` stays green on a fresh checkout.
+
+use std::path::Path;
+
+use rcnet_dla::coordinator::{run_with_runtime, PipelineConfig};
+use rcnet_dla::data;
+use rcnet_dla::runtime::Runtime;
+
+const MANIFEST: &str = "artifacts/manifest.json";
+
+fn runtime() -> Option<Runtime> {
+    if !Path::new(MANIFEST).exists() {
+        eprintln!("skipping: {MANIFEST} missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(MANIFEST).expect("artifacts present but unloadable"))
+}
+
+#[test]
+fn groups_chain_shapes() {
+    let Some(rt) = runtime() else { return };
+    // Group i's output shape equals group i+1's input shape.
+    for w in rt.groups.windows(2) {
+        assert_eq!(w[0].meta.out_shape, w[1].meta.in_shape);
+    }
+    let (h, w2) = rt.manifest.input_hw;
+    assert_eq!(rt.groups[0].meta.in_shape, (h, w2, 3));
+}
+
+#[test]
+fn frame_executes_and_is_finite() {
+    let Some(rt) = runtime() else { return };
+    let (h, w) = rt.manifest.input_hw;
+    let scene = data::render(99, h, w, 4);
+    let head = rt.run_frame(&scene.image).expect("frame execution");
+    let (gh, gw, gc) = rt.groups.last().unwrap().meta.out_shape;
+    assert_eq!(head.len(), gh * gw * gc);
+    assert!(head.iter().all(|v| v.is_finite()), "non-finite head values");
+    // Not all-zero (the network does *something*).
+    assert!(head.iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let Some(rt) = runtime() else { return };
+    let (h, w) = rt.manifest.input_hw;
+    let scene = data::render(7, h, w, 4);
+    let a = rt.run_frame(&scene.image).unwrap();
+    let b = rt.run_frame(&scene.image).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn pipeline_reports_metrics() {
+    let Some(rt) = runtime() else { return };
+    let cfg = PipelineConfig { frames: 3, ..Default::default() };
+    let report = run_with_runtime(&rt, &cfg).expect("pipeline");
+    assert_eq!(report.frames, 3);
+    assert!(report.mean_latency_ms > 0.0);
+    assert!(report.p99_latency_ms >= report.mean_latency_ms * 0.5);
+    assert!((0.0..=1.0).contains(&report.map_50));
+}
+
+#[test]
+fn pipeline_seed_changes_scenes_not_crash() {
+    let Some(rt) = runtime() else { return };
+    for seed in [1u64, 5000] {
+        let cfg = PipelineConfig { frames: 2, seed, ..Default::default() };
+        run_with_runtime(&rt, &cfg).expect("pipeline");
+    }
+}

@@ -1,0 +1,60 @@
+//! Integration over the spec pipeline: deployment spec emission, JSON
+//! round-trip, cross-checks between the traffic model, the simulator and
+//! the tile planner on the deployed network.
+
+use rcnet_dla::config::ChipConfig;
+use rcnet_dla::dla::{simulate_fused, simulate_layer_by_layer};
+use rcnet_dla::fusion::{validate_groups, FusionConfig};
+use rcnet_dla::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
+use rcnet_dla::traffic::TrafficModel;
+use rcnet_dla::util::json::Json;
+
+#[test]
+fn deployment_spec_roundtrip_and_validation() {
+    for profile in [PipelineProfile::Scaled, PipelineProfile::Hd] {
+        let spec = build_deployment_spec(profile, 3, 5, None, 7);
+        let txt = spec.to_string();
+        let (net, groups) = spec_to_network(&Json::parse(&txt).unwrap()).unwrap();
+        assert!(net.check_consistency().is_empty());
+        let v = validate_groups(&net, &groups, &FusionConfig::paper_default());
+        assert!(v.is_empty(), "{profile:?}: {v:?}");
+    }
+}
+
+#[test]
+fn spec_is_deterministic() {
+    let a = build_deployment_spec(PipelineProfile::Scaled, 3, 5, None, 7).to_string();
+    let b = build_deployment_spec(PipelineProfile::Scaled, 3, 5, None, 7).to_string();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn simulator_and_traffic_model_agree_on_dram_bytes() {
+    let spec = build_deployment_spec(PipelineProfile::Hd, 3, 5, None, 7);
+    let (net, groups) = spec_to_network(&spec).unwrap();
+    let chip = ChipConfig::paper_chip();
+    let tm = TrafficModel::paper_chip();
+    for hw in [(416u32, 416u32), (720, 1280), (1080, 1920)] {
+        let (sim, _) = simulate_fused(&net, &groups, hw, &chip).unwrap();
+        assert_eq!(sim.total_dram_bytes(), tm.fused(&net, &groups, hw).total_bytes());
+        let lbl = simulate_layer_by_layer(&net, hw, &chip);
+        assert_eq!(lbl.total_dram_bytes(), tm.layer_by_layer(&net, hw).total_bytes());
+        assert_eq!(sim.total_macs(), net.macs(hw));
+    }
+}
+
+#[test]
+fn headline_numbers_in_paper_regime() {
+    // The end-to-end claim set, asserted as a regression fence:
+    // traffic reduction 5-10x, >80% savings, HD real-time regime.
+    let spec = build_deployment_spec(PipelineProfile::Hd, 3, 5, None, 7);
+    let (net, groups) = spec_to_network(&spec).unwrap();
+    let tm = TrafficModel::paper_chip();
+    let (lbl, fus) = tm.compare(&net, &groups, (720, 1280), 30.0);
+    let reduction = lbl.total_mb_s() / fus.total_mb_s();
+    assert!((4.0..12.0).contains(&reduction), "reduction {reduction}");
+    assert!(fus.total_mb_s() < 1200.0, "fused {}", fus.total_mb_s());
+    let chip = ChipConfig::paper_chip();
+    let (sim, _) = simulate_fused(&net, &groups, (720, 1280), &chip).unwrap();
+    assert!(sim.fps() > 18.0, "fps {}", sim.fps());
+}

@@ -1,0 +1,147 @@
+//! Property tests over the fusion engine: random fusion-ready networks,
+//! random buffer sizes, random prune sequences — the partition/pruning
+//! invariants must hold for all of them. (Hand-rolled generator loop: the
+//! offline vendor set has no proptest; `Rng` provides the determinism.)
+
+use rcnet_dla::fusion::{
+    naive_partition, partition, pruning, rcnet, validate_groups, FusionConfig,
+    GammaSet, RcnetOptions, Violation,
+};
+use rcnet_dla::model::{Act, Layer, Network, SpanKind};
+use rcnet_dla::util::{kb, Rng};
+
+/// Random fusion-ready network: conv stem + stages of dw/pw blocks with
+/// optional residuals and pools.
+fn random_network(rng: &mut Rng) -> Network {
+    let mut n = Network::new("rand", (128, 128), 3);
+    let c0 = 8 + 8 * rng.range(0, 4);
+    n.push(Layer::conv("stem", 3, c0, 3, 1, Act::Relu6));
+    let mut c = c0;
+    let stages = 2 + rng.range(0, 3);
+    for s in 0..stages {
+        let blocks = 1 + rng.range(0, 3);
+        for b in 0..blocks {
+            let c_out = 8 + 8 * rng.range(0, 40);
+            let a = n.push(Layer::dw(&format!("s{s}b{b}d"), c, 1, Act::Relu6));
+            let z = n.push(Layer::pw(&format!("s{s}b{b}p"), c, c_out, Act::None));
+            if c == c_out && rng.f64() < 0.5 {
+                n.add_span(SpanKind::Residual, a, z);
+            }
+            c = c_out;
+        }
+        if rng.f64() < 0.8 {
+            n.push(Layer::maxpool(&format!("s{s}pool"), c, 2, 2));
+        }
+    }
+    n.push(Layer::head("head", c, 40, 1));
+    n
+}
+
+#[test]
+fn partition_invariants_hold_for_random_networks() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..60 {
+        let net = random_network(&mut rng);
+        assert!(net.check_consistency().is_empty(), "case {case}");
+        let cfg = FusionConfig::paper_default().with_buffer(kb(32 + 32 * rng.range(0, 6) as u64));
+        for groups in [partition(&net, &cfg), naive_partition(&net, &cfg)] {
+            // Exact tiling of the layer list.
+            let mut expect = 0;
+            for g in &groups {
+                assert_eq!(g.start, expect, "case {case}: gap/overlap");
+                assert!(g.end >= g.start);
+                expect = g.end + 1;
+            }
+            assert_eq!(expect, net.layers.len(), "case {case}: uncovered tail");
+            // Residual atomicity.
+            let v = validate_groups(&net, &groups, &cfg);
+            assert!(
+                v.iter().all(|x| matches!(x, Violation::OverBudget { .. })),
+                "case {case}: {v:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn random_prune_sequences_preserve_consistency() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..30 {
+        let mut net = random_network(&mut rng);
+        let mut gammas = GammaSet::synthetic(&net, case);
+        for _ in 0..100 {
+            let i = rng.range(0, net.layers.len() as u32) as usize;
+            if !pruning::prunable(&net, i, 4) {
+                continue;
+            }
+            let ch = (rng.range(0, net.layers[i].c_out) as usize)
+                .min(gammas.per_layer[i].len().saturating_sub(1));
+            pruning::prune_output_channel(&mut net, &mut gammas, i, ch);
+            let errs = net.check_consistency();
+            assert!(errs.is_empty(), "case {case}: {errs:?}");
+            assert!(gammas.check(&net), "case {case}: gamma desync");
+        }
+    }
+}
+
+#[test]
+fn rcnet_always_fits_deployment_groups() {
+    let mut rng = Rng::new(0xCAFE);
+    for case in 0..15 {
+        let net = random_network(&mut rng);
+        let buf = kb(48 + 16 * rng.range(0, 8) as u64);
+        let cfg = FusionConfig::paper_default().with_buffer(buf);
+        let gammas = GammaSet::synthetic(&net, case);
+        let out = rcnet(&net, &gammas, &cfg, &RcnetOptions::default());
+        assert!(out.network.check_consistency().is_empty(), "case {case}");
+        for (gi, g) in out.groups.iter().enumerate() {
+            let w = g.weight_bytes(&out.network, cfg.precision);
+            // A single layer may exceed any buffer (degenerate layer-by-
+            // layer group, as the paper allows); multi-layer groups must
+            // fit strictly.
+            if g.len() > 1 {
+                assert!(w <= buf, "case {case} group {gi}: {w} > {buf}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_traffic_never_exceeds_layerwise_features() {
+    use rcnet_dla::traffic::TrafficModel;
+    let mut rng = Rng::new(0xABCD);
+    for case in 0..20 {
+        let net = random_network(&mut rng);
+        let cfg = FusionConfig::paper_default();
+        let gammas = GammaSet::synthetic(&net, case);
+        let out = rcnet(&net, &gammas, &cfg, &RcnetOptions::default());
+        let tm = TrafficModel::paper_chip();
+        let lbl = tm.layer_by_layer(&out.network, (128, 128));
+        let fus = tm.fused(&out.network, &out.groups, (128, 128));
+        assert!(
+            fus.feat_bytes() <= lbl.feat_bytes(),
+            "case {case}: fused {} > lbl {}",
+            fus.feat_bytes(),
+            lbl.feat_bytes()
+        );
+        assert_eq!(fus.weight_bytes(), lbl.weight_bytes(), "case {case}");
+    }
+}
+
+#[test]
+fn tile_plans_respect_buffer_for_random_networks() {
+    use rcnet_dla::config::ChipConfig;
+    use rcnet_dla::tile::plan_network;
+    let mut rng = Rng::new(0x7117);
+    let chip = ChipConfig::paper_chip();
+    for case in 0..20 {
+        let net = random_network(&mut rng);
+        let cfg = FusionConfig::paper_default();
+        let gammas = GammaSet::synthetic(&net, case);
+        let out = rcnet(&net, &gammas, &cfg, &RcnetOptions::default());
+        for t in plan_network(&out.network, &out.groups, (256, 256), &chip).into_iter().flatten() {
+            assert!(t.max_slab_bytes <= chip.unified_half_bytes, "case {case}");
+            assert!(t.tiles >= 1 && t.tile_h >= 1, "case {case}");
+        }
+    }
+}
