@@ -1,0 +1,21 @@
+//! Fleet-serving demo: one rack of simulated DLA chips, a mixed bag of
+//! camera streams (416/720p/1080p at 15/30 FPS, gold/silver/bronze QoS),
+//! and a shared DRAM bus swept from comfortable to starved. Watch
+//! admission, shedding and tail latency respond — the paper's 585 MB/s
+//! single-chip budget becomes the knob that decides how many streams a
+//! fleet can honestly serve.
+//!
+//!     cargo run --release --example fleet
+
+use rcnet_dla::serve::{run_fleet, FleetConfig};
+
+fn main() -> anyhow::Result<()> {
+    let base = FleetConfig { streams: 32, chips: 8, seconds: 4.0, ..FleetConfig::default() };
+    for bus_mbps in [4680.0, 1170.0, 585.0] {
+        println!("== shared bus budget: {bus_mbps} MB/s ==");
+        let report = run_fleet(&FleetConfig { bus_mbps, ..base })?;
+        println!("{report}\n");
+    }
+    println!("(64-stream acceptance run: `cargo run --release -- fleet --streams 64 --bus-mbps 585`)");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Fleet scaling — streams vs p99 latency at a fixed shared-bus budget
+//! (the paper's 585 MB/s HD30 figure). Admission is disabled so the
+//! sweep shows the raw bandwidth wall: as streams grow past what the bus
+//! carries, p99 climbs toward the deadline and shed/miss rates take over.
+
+#[path = "common.rs"]
+mod common;
+
+use rcnet_dla::report::tables::TableBuilder;
+use rcnet_dla::serve::{run_fleet, AdmissionPolicy, FleetConfig};
+
+fn cfg(streams: usize) -> FleetConfig {
+    FleetConfig {
+        streams,
+        chips: 16,
+        bus_mbps: 585.0,
+        seconds: 3.0,
+        admission: AdmissionPolicy::AdmitAll,
+        ..FleetConfig::default()
+    }
+}
+
+fn main() {
+    let mut t = TableBuilder::new("fleet scaling — streams vs p99 @ 585 MB/s bus, 16 chips").header(
+        &["streams", "released", "done", "p50 (ms)", "p99 (ms)", "miss %", "shed %", "bus util"],
+    );
+    let mut last = None;
+    for streams in [4usize, 8, 16, 32, 64] {
+        let r = run_fleet(&cfg(streams)).expect("fleet run");
+        t.row(vec![
+            format!("{streams}"),
+            format!("{}", r.released()),
+            format!("{}", r.completed()),
+            format!("{:.1}", r.aggregate_percentile_ms(50.0)),
+            format!("{:.1}", r.aggregate_p99_ms()),
+            format!("{:.1}", 100.0 * r.miss_rate()),
+            format!("{:.1}", 100.0 * r.shed_rate()),
+            format!("{:.2}", r.bus_utilization),
+        ]);
+        last = Some(r);
+    }
+    println!("{}", t.render());
+
+    // The paper's single-chip claim as the yardstick: at 585 MB/s one
+    // chip serves one HD30 stream; a saturated shared bus should sit at
+    // ~full utilization while the fleet sheds the excess.
+    if let Some(r) = last {
+        common::compare("bus utilization at 64 streams", 1.0, r.bus_utilization, "frac");
+    }
+    common::time_it("64-stream, 3 s fleet simulation", 3, || {
+        let _ = run_fleet(&cfg(64));
+    });
+}

@@ -14,6 +14,11 @@ pub struct Metrics {
     /// Frames that missed the real-time deadline.
     pub deadline_misses: usize,
     pub frames: usize,
+    /// Wall-clock span of the whole run in seconds, set once at the end
+    /// via [`Metrics::set_wall`]. Throughput must come from this, not
+    /// from per-frame latency: once frames overlap (pipelining, a fleet
+    /// of chips), `1 / mean_latency` overstates FPS.
+    pub wall_s: Option<f64>,
 }
 
 impl Metrics {
@@ -43,7 +48,20 @@ impl Metrics {
         percentile(&self.latency_ms, 99.0)
     }
 
+    /// Record the wall-clock span of the run; call once when it ends.
+    pub fn set_wall(&mut self, wall: Duration) {
+        self.wall_s = Some(wall.as_secs_f64());
+    }
+
+    /// Achieved throughput: frames over the wall-clock span of the run.
+    /// Falls back to the mean-latency derivation when no span was
+    /// recorded — correct only while frames never overlap.
     pub fn fps(&self) -> f64 {
+        if let Some(w) = self.wall_s {
+            if w > 0.0 {
+                return self.frames as f64 / w;
+            }
+        }
         let m = self.mean_latency_ms();
         if m <= 0.0 {
             0.0
@@ -66,6 +84,18 @@ mod tests {
         assert_eq!(m.deadline_misses, 1);
         assert!((m.mean_latency_ms() - 30.0).abs() < 0.5);
         assert!(m.fps() > 30.0);
+    }
+
+    #[test]
+    fn wall_clock_fps_counts_overlap() {
+        let mut m = Metrics::default();
+        // Two 600 ms frames that ran concurrently over a 1 s span: the
+        // old mean-latency derivation would claim 1.67 FPS; the wall
+        // clock says 2.
+        m.record_frame(Duration::from_millis(600), None);
+        m.record_frame(Duration::from_millis(600), None);
+        m.set_wall(Duration::from_secs(1));
+        assert!((m.fps() - 2.0).abs() < 1e-9);
     }
 
     #[test]

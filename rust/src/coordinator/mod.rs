@@ -6,9 +6,15 @@
 //! decode + NMS + metrics run inline. A real-time pacer enforces the
 //! target frame interval and reports deadline misses — the software
 //! analog of the chip's 30 FPS claim.
+//!
+//! [`Metrics`] is always available (the fleet simulator in
+//! [`crate::serve`] reuses it); the PJRT-backed pipeline itself needs the
+//! `pjrt` feature (xla_extension toolchain).
 
 mod metrics;
+#[cfg(feature = "pjrt")]
 mod pipeline;
 
 pub use metrics::Metrics;
+#[cfg(feature = "pjrt")]
 pub use pipeline::{run_pipeline, run_with_runtime, PipelineConfig, PipelineReport};

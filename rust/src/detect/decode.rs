@@ -111,4 +111,14 @@ mod tests {
         let dets = decode(&head_with_one_box(gh, gw, classes), gh, gw, classes, 0.9999);
         assert!(dets.is_empty());
     }
+
+    #[test]
+    fn all_cells_below_threshold() {
+        // A head with uniformly low objectness everywhere must decode to
+        // nothing at any sane threshold — the empty-frame fast path.
+        let (gh, gw, classes) = (4, 6, 3);
+        let head = vec![-10.0f32; gh * gw * ANCHORS.len() * (5 + classes)];
+        assert!(decode(&head, gh, gw, classes, 0.25).is_empty());
+        assert!(decode(&head, gh, gw, classes, 0.01).is_empty());
+    }
 }

@@ -153,6 +153,25 @@ mod tests {
     }
 
     #[test]
+    fn no_ground_truths_is_zero_not_nan() {
+        // With zero GT boxes the recall denominator would be 0; the
+        // guard must return 0 rather than divide by zero.
+        let dets = vec![det(0, 0, 0.3, 0.9)];
+        let ap = average_precision(&dets, &[], 0, 0.5);
+        assert_eq!(ap, 0.0);
+        assert!(ap.is_finite());
+        let m = mean_average_precision(&dets, &[], 3, 0.5);
+        assert_eq!(m, 0.0);
+        assert!(m.is_finite());
+    }
+
+    #[test]
+    fn zero_classes_map_is_zero() {
+        let gts = vec![gt(0, 0, 0.3)];
+        assert_eq!(mean_average_precision(&[], &gts, 0, 0.5), 0.0);
+    }
+
+    #[test]
     fn map_averages_classes() {
         let gts = vec![gt(0, 0, 0.3), gt(0, 1, 0.7)];
         let dets = vec![det(0, 0, 0.3, 0.9)]; // only class 0 detected

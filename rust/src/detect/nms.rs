@@ -52,4 +52,26 @@ mod tests {
         let kept = nms(vec![det(0.2, 0.5, 0), det(0.8, 0.9, 0)], 0.5);
         assert!(kept[0].score >= kept[1].score);
     }
+
+    #[test]
+    fn zero_detections() {
+        assert!(nms(Vec::new(), 0.5).is_empty());
+    }
+
+    #[test]
+    fn tied_scores_distant_both_survive() {
+        // sort_by is stable: equal scores keep insertion order, so the
+        // outcome is deterministic, not an unordered-float panic.
+        let kept = nms(vec![det(0.2, 0.8, 0), det(0.8, 0.8, 0)], 0.5);
+        assert_eq!(kept.len(), 2);
+        assert!((kept[0].bbox.cx - 0.2).abs() < 1e-6);
+        assert!((kept[1].bbox.cx - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tied_scores_overlapping_keeps_first() {
+        let kept = nms(vec![det(0.50, 0.8, 0), det(0.51, 0.8, 0)], 0.5);
+        assert_eq!(kept.len(), 1);
+        assert!((kept[0].bbox.cx - 0.50).abs() < 1e-6);
+    }
 }

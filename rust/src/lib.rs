@@ -12,13 +12,17 @@
 //!
 //! * **L3 (this crate)** — coordinator, DLA cycle/traffic/energy simulator,
 //!   RCNet fusion engine, detection post-processing, synthetic HD dataset,
-//!   PJRT runtime that executes AOT-compiled fusion-group HLO.
+//!   fleet-serving simulator, and (behind the `pjrt` feature) a PJRT
+//!   runtime that executes AOT-compiled fusion-group HLO.
 //! * **L2 (`python/compile/model.py`)** — RC-YOLOv2 forward in JAX, lowered
 //!   once to HLO text per fusion group (`make artifacts`).
 //! * **L1 (`python/compile/kernels/`)** — Pallas fused-block tile kernels
 //!   (depthwise 3x3 + pointwise 1x1 + BN + ReLU6), interpret mode.
 //!
-//! Python never runs on the request path.
+//! Python never runs on the request path. The default build is fully
+//! offline and dependency-light; enabling `pjrt` additionally requires
+//! the xla_extension toolchain and the out-of-registry `xla` crate (see
+//! `Cargo.toml`).
 //!
 //! ## Quick tour
 //!
@@ -33,6 +37,22 @@
 //! let traffic = TrafficModel::paper_chip().fused(&net, &groups, (720, 1280));
 //! println!("external traffic: {:.1} MB/frame", traffic.total_bytes() as f64 / 1e6);
 //! ```
+//!
+//! ## Fleet serving
+//!
+//! The single-chip story above scales out in [`serve`]: N mixed-QoS
+//! camera streams (416/720p/1080p at 15/30 FPS) are multiplexed over a
+//! pool of simulated chips that share one DRAM-bus budget, with EDF
+//! dispatch, admission control and load shedding. Deterministic from a
+//! seed — virtual time only.
+//!
+//! ```no_run
+//! use rcnet_dla::serve::{run_fleet, FleetConfig};
+//!
+//! let cfg = FleetConfig { streams: 64, bus_mbps: 585.0, ..FleetConfig::default() };
+//! let report = run_fleet(&cfg).unwrap();
+//! println!("{report}"); // per-stream p50/p99, miss/shed rates, bus utilization
+//! ```
 
 pub mod config;
 pub mod coordinator;
@@ -41,9 +61,11 @@ pub mod detect;
 pub mod dla;
 pub mod quant;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod energy;
 pub mod fusion;
+pub mod serve;
 pub mod tile;
 pub mod traffic;
 pub mod model;

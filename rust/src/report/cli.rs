@@ -5,8 +5,10 @@
 //! * `emit-spec`  — run the RCNet pipeline, write `artifacts/model_spec.json`
 //! * `traffic`    — traffic comparison at an operating point
 //! * `simulate`   — DLA cycle simulation at an operating point
+//! * `fleet`      — multi-stream fleet serving over a chip pool with a
+//!   shared DRAM-bus budget (deterministic from a seed)
 //! * `serve`      — run the detection pipeline on synthetic frames
-//!   (requires `make artifacts`)
+//!   (requires `make artifacts` and the `pjrt` feature)
 
 use std::collections::HashMap;
 
@@ -14,6 +16,7 @@ use crate::config::ChipConfig;
 use crate::dla::{simulate_fused, simulate_layer_by_layer};
 use crate::energy::dram_energy_mj;
 use crate::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
+use crate::serve::{run_fleet, AdmissionPolicy, FleetConfig};
 use crate::traffic::TrafficModel;
 use crate::util::json::Json;
 use crate::Result;
@@ -56,6 +59,8 @@ USAGE:
   rcnet-dla emit-spec [--profile scaled|hd] [--out PATH] [--gammas PATH]
   rcnet-dla traffic   [--res 416|hd|fullhd|ivs] [--spec PATH]
   rcnet-dla simulate  [--res 416|hd|fullhd|ivs] [--spec PATH]
+  rcnet-dla fleet     [--streams N] [--chips N] [--bus-mbps MB] [--seconds S]
+                      [--seed K] [--oversub F | --admit-all]
   rcnet-dla serve     [--manifest artifacts/manifest.json] [--frames N]
   rcnet-dla ablation  [--net yolov2|deeplabv3|vgg16]
 ";
@@ -68,6 +73,7 @@ pub fn cli_main() -> Result<()> {
         Some("emit-spec") => emit_spec(&flags),
         Some("traffic") => traffic(&flags),
         Some("simulate") => simulate(&flags),
+        Some("fleet") => fleet(&flags),
         Some("serve") => serve(&flags),
         Some("ablation") => ablation(&flags),
         _ => {
@@ -199,6 +205,30 @@ fn ablation(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+fn fleet(flags: &HashMap<String, String>) -> Result<()> {
+    let d = FleetConfig::default();
+    let admission = if flags.contains_key("admit-all") {
+        AdmissionPolicy::AdmitAll
+    } else if let Some(oversub) = flags.get("oversub").and_then(|s| s.parse().ok()) {
+        AdmissionPolicy::DemandLimit { oversub }
+    } else {
+        d.admission
+    };
+    let cfg = FleetConfig {
+        streams: flags.get("streams").and_then(|s| s.parse().ok()).unwrap_or(d.streams),
+        chips: flags.get("chips").and_then(|s| s.parse().ok()).unwrap_or(d.chips),
+        bus_mbps: flags.get("bus-mbps").and_then(|s| s.parse().ok()).unwrap_or(d.bus_mbps),
+        seconds: flags.get("seconds").and_then(|s| s.parse().ok()).unwrap_or(d.seconds),
+        seed: flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(d.seed),
+        admission,
+        ..d
+    };
+    let report = run_fleet(&cfg)?;
+    println!("{report}");
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
 fn serve(flags: &HashMap<String, String>) -> Result<()> {
     let manifest = flags
         .get("manifest")
@@ -208,6 +238,15 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     let report = crate::coordinator::run_pipeline(&manifest, frames, None)?;
     println!("{report}");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve(_flags: &HashMap<String, String>) -> Result<()> {
+    anyhow::bail!(
+        "`serve` drives the PJRT runtime, which this build omits; add the `xla` \
+         crate to rust/Cargo.toml (see the `pjrt` feature note there) and rebuild \
+         with `--features pjrt`"
+    )
 }
 
 #[cfg(test)]

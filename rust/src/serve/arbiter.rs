@@ -1,0 +1,127 @@
+//! Shared DRAM-bus arbitration.
+//!
+//! The fleet's chips sit behind one memory bus with a fixed byte budget
+//! per tick (the `--bus-mbps` knob; the paper's single-chip figure is
+//! 585 MB/s at HD30). Each tick the arbiter water-fills the budget across
+//! the in-flight frames' outstanding transfers: every requester gets
+//! `min(need, fair_share)` and any leftover is re-split among the still
+//! hungry, so light transfers finish fast and heavy ones degrade
+//! together instead of starving. The arbiter also keeps the books for
+//! aggregate bus utilization.
+
+/// Per-tick bandwidth budget accounting.
+#[derive(Debug, Clone)]
+pub struct BusArbiter {
+    /// Bytes the bus can move per tick.
+    pub budget_bytes_per_tick: f64,
+    granted_bytes: f64,
+    offered_ticks: u64,
+}
+
+impl BusArbiter {
+    pub fn new(bus_mbps: f64, tick_ms: f64) -> Self {
+        BusArbiter {
+            budget_bytes_per_tick: bus_mbps * 1e6 * tick_ms / 1e3,
+            granted_bytes: 0.0,
+            offered_ticks: 0,
+        }
+    }
+
+    /// Split one tick's budget across `demands` (outstanding bytes per
+    /// requester) by equal-share water-filling. Returns the per-requester
+    /// grants; their sum never exceeds the budget.
+    pub fn arbitrate(&mut self, demands: &[f64]) -> Vec<f64> {
+        self.offered_ticks += 1;
+        let mut grant = vec![0.0; demands.len()];
+        let mut remaining = self.budget_bytes_per_tick;
+        let mut hungry: Vec<usize> = (0..demands.len()).filter(|&i| demands[i] > 0.0).collect();
+        // Each pass either exhausts the budget or fully satisfies at
+        // least one requester, so `len + 1` passes always suffice.
+        for _ in 0..=demands.len() {
+            if remaining <= 1e-9 || hungry.is_empty() {
+                break;
+            }
+            let share = remaining / hungry.len() as f64;
+            let mut still_hungry = Vec::with_capacity(hungry.len());
+            for &i in &hungry {
+                let want = demands[i] - grant[i];
+                let g = want.min(share);
+                grant[i] += g;
+                remaining -= g;
+                if demands[i] - grant[i] > 1e-9 {
+                    still_hungry.push(i);
+                }
+            }
+            hungry = still_hungry;
+        }
+        self.granted_bytes += grant.iter().sum::<f64>();
+        grant
+    }
+
+    /// Fraction of the offered bus capacity actually granted so far.
+    pub fn utilization(&self) -> f64 {
+        let offered = self.offered_ticks as f64 * self.budget_bytes_per_tick;
+        if offered <= 0.0 {
+            0.0
+        } else {
+            self.granted_bytes / offered
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 1 MB/s at a 1 ms tick = 1000 bytes per tick.
+    fn arb() -> BusArbiter {
+        BusArbiter::new(1.0, 1.0)
+    }
+
+    #[test]
+    fn budget_per_tick() {
+        assert!((arb().budget_bytes_per_tick - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn equal_split_under_contention() {
+        let g = arb().arbitrate(&[600.0, 600.0]);
+        assert!((g[0] - 500.0).abs() < 1e-6);
+        assert!((g[1] - 500.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn leftover_redistributes() {
+        let g = arb().arbitrate(&[200.0, 900.0]);
+        assert!((g[0] - 200.0).abs() < 1e-6);
+        assert!((g[1] - 800.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn under_demand_grants_everything() {
+        let mut a = arb();
+        let g = a.arbitrate(&[100.0, 100.0]);
+        assert!((g[0] - 100.0).abs() < 1e-9);
+        assert!((g[1] - 100.0).abs() < 1e-9);
+        assert!((a.utilization() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn never_exceeds_budget() {
+        let mut a = arb();
+        for _ in 0..10 {
+            let g = a.arbitrate(&[5000.0, 5000.0, 5000.0]);
+            let total: f64 = g.iter().sum();
+            assert!(total <= 1000.0 + 1e-6, "over-granted {total}");
+        }
+        assert!(a.utilization() <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn idle_requesters_get_nothing() {
+        let g = arb().arbitrate(&[0.0, 400.0, 0.0]);
+        assert_eq!(g[0], 0.0);
+        assert_eq!(g[2], 0.0);
+        assert!((g[1] - 400.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,249 @@
+//! The worker pool: N simulated DLA chips, each with a bounded mpsc
+//! dispatch queue.
+//!
+//! The queue is a real `std::sync::mpsc::sync_channel` of depth
+//! `queue_depth` (default 2 — the ping-pong buffer analogy): `try_send`
+//! failing *is* the backpressure signal that keeps frames in the central
+//! EDF queue instead of piling up behind a busy chip. The simulator
+//! drives senders and receivers from one thread, so the channel acts as
+//! a deterministic bounded FIFO.
+//!
+//! A chip executes one frame at a time. The frame holds the chip for
+//! `max(compute, bus transfer)` — compute advances one tick per tick,
+//! while the transfer drains at whatever rate the [`super::BusArbiter`]
+//! grants, capped by the chip's own DDR3 link rate. A chip stalled on
+//! the shared bus counts as busy: that occupancy is precisely the
+//! bandwidth wall the paper is about.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+
+use crate::config::ChipConfig;
+use crate::dla::DDR3_BYTES_PER_S;
+
+use super::stream::FrameTask;
+
+/// A frame being executed by a chip.
+#[derive(Debug)]
+pub struct InFlight {
+    pub task: FrameTask,
+    pub remaining_compute_ticks: u64,
+    pub remaining_bytes: f64,
+}
+
+/// One simulated DLA chip plus its bounded dispatch queue.
+#[derive(Debug)]
+pub struct ChipWorker {
+    pub chip: ChipConfig,
+    tx: SyncSender<FrameTask>,
+    rx: Receiver<FrameTask>,
+    depth: usize,
+    /// Frames sitting in the dispatch queue (sent, not yet started).
+    pub queued: usize,
+    pub active: Option<InFlight>,
+    /// Ticks spent with a frame on the chip (computing or bus-stalled).
+    pub busy_ticks: u64,
+    pub completed: u64,
+}
+
+impl ChipWorker {
+    pub fn new(chip: ChipConfig, queue_depth: usize) -> Self {
+        let (tx, rx) = sync_channel(queue_depth.max(1));
+        ChipWorker {
+            chip,
+            tx,
+            rx,
+            depth: queue_depth.max(1),
+            queued: 0,
+            active: None,
+            busy_ticks: 0,
+            completed: 0,
+        }
+    }
+
+    /// Idle and nothing queued: a dispatched frame starts this tick.
+    pub fn is_idle(&self) -> bool {
+        self.active.is_none() && self.queued == 0
+    }
+
+    /// Room left in the dispatch queue.
+    pub fn has_room(&self) -> bool {
+        self.queued < self.depth
+    }
+
+    /// Bounded dispatch. `Err` hands the task back to the caller — the
+    /// backpressure signal.
+    pub fn try_dispatch(&mut self, task: FrameTask) -> Result<(), FrameTask> {
+        match self.tx.try_send(task) {
+            Ok(()) => {
+                self.queued += 1;
+                Ok(())
+            }
+            Err(TrySendError::Full(t)) | Err(TrySendError::Disconnected(t)) => Err(t),
+        }
+    }
+
+    /// Pull the next queued frame if the chip is free.
+    pub fn refill(&mut self, cycles_per_tick: f64) {
+        if self.active.is_some() {
+            return;
+        }
+        if let Ok(task) = self.rx.try_recv() {
+            self.queued -= 1;
+            let ticks = (task.cost.compute_cycles as f64 / cycles_per_tick).ceil() as u64;
+            self.active = Some(InFlight {
+                task,
+                remaining_compute_ticks: ticks.max(1),
+                remaining_bytes: task.cost.dram_bytes as f64,
+            });
+        }
+    }
+
+    /// Outstanding DRAM bytes this chip wants this tick, capped by its
+    /// own DDR3 link rate.
+    pub fn bus_demand(&self, link_bytes_per_tick: f64) -> f64 {
+        self.active
+            .as_ref()
+            .map_or(0.0, |j| j.remaining_bytes.max(0.0).min(link_bytes_per_tick))
+    }
+
+    /// Advance one tick with `granted` DRAM bytes. Returns the finished
+    /// frame if both compute and transfer completed.
+    pub fn advance(&mut self, granted: f64) -> Option<FrameTask> {
+        let job = self.active.as_mut()?;
+        self.busy_ticks += 1;
+        job.remaining_compute_ticks = job.remaining_compute_ticks.saturating_sub(1);
+        job.remaining_bytes -= granted;
+        if job.remaining_compute_ticks == 0 && job.remaining_bytes <= 1e-6 {
+            let done = self.active.take().map(|j| j.task);
+            self.completed += 1;
+            done
+        } else {
+            None
+        }
+    }
+}
+
+/// The chip pool plus the per-tick unit conversions.
+#[derive(Debug)]
+pub struct Fleet {
+    pub workers: Vec<ChipWorker>,
+    /// Core cycles one chip executes per tick.
+    pub cycles_per_tick: f64,
+    /// Per-chip DDR3 link ceiling per tick (the shared-bus grant can
+    /// never exceed what one chip's own interface can absorb).
+    pub link_bytes_per_tick: f64,
+}
+
+impl Fleet {
+    pub fn new(chip: ChipConfig, chips: usize, queue_depth: usize, tick_ms: f64) -> Self {
+        Fleet {
+            workers: (0..chips).map(|_| ChipWorker::new(chip, queue_depth)).collect(),
+            cycles_per_tick: chip.clock_hz * tick_ms / 1e3,
+            link_bytes_per_tick: DDR3_BYTES_PER_S * tick_ms / 1e3,
+        }
+    }
+
+    /// First worker able to accept a frame: idle chips first (the frame
+    /// starts this tick), then any with queue room. `None` means every
+    /// queue is full — backpressure to the central queue.
+    pub fn pick_worker(&self) -> Option<usize> {
+        self.workers
+            .iter()
+            .position(ChipWorker::is_idle)
+            .or_else(|| self.workers.iter().position(ChipWorker::has_room))
+    }
+
+    /// Aggregate compute capacity in cycles per second.
+    pub fn compute_cycles_per_s(&self) -> f64 {
+        self.workers.iter().map(|w| w.chip.clock_hz).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::stream::{FrameCost, QosClass};
+
+    fn task(seq: u64) -> FrameTask {
+        FrameTask {
+            stream: 0,
+            seq,
+            release_ms: 0.0,
+            deadline_ms: 100.0,
+            cost: FrameCost { compute_cycles: 600_000, dram_bytes: 4000 },
+            qos: QosClass::Silver,
+        }
+    }
+
+    fn fleet1() -> Fleet {
+        // 1 chip, depth-2 queue, 1 ms tick at the paper chip's 300 MHz
+        // => 300k cycles/tick, so the test frame needs 2 compute ticks.
+        Fleet::new(ChipConfig::paper_chip(), 1, 2, 1.0)
+    }
+
+    #[test]
+    fn bounded_queue_backpressure() {
+        let mut f = fleet1();
+        let w = &mut f.workers[0];
+        assert!(w.try_dispatch(task(0)).is_ok());
+        assert!(w.try_dispatch(task(1)).is_ok());
+        // Depth 2: the third dispatch must bounce back.
+        let bounced = w.try_dispatch(task(2));
+        assert_eq!(bounced.unwrap_err().seq, 2);
+    }
+
+    #[test]
+    fn frame_completes_when_compute_and_bytes_done() {
+        let mut f = fleet1();
+        let cpt = f.cycles_per_tick;
+        let w = &mut f.workers[0];
+        w.try_dispatch(task(0)).unwrap();
+        w.refill(cpt);
+        assert!(w.active.is_some());
+        // Tick 1: compute 1/2 done, all bytes granted.
+        assert!(w.advance(4000.0).is_none());
+        // Tick 2: compute finishes.
+        let done = w.advance(0.0).expect("frame should complete");
+        assert_eq!(done.seq, 0);
+        assert_eq!(w.busy_ticks, 2);
+        assert_eq!(w.completed, 1);
+    }
+
+    #[test]
+    fn bus_starved_frame_holds_the_chip() {
+        let mut f = fleet1();
+        let cpt = f.cycles_per_tick;
+        let w = &mut f.workers[0];
+        w.try_dispatch(task(0)).unwrap();
+        w.refill(cpt);
+        // Compute finishes in 2 ticks but the bus grants nothing.
+        assert!(w.advance(0.0).is_none());
+        assert!(w.advance(0.0).is_none());
+        assert!(w.advance(0.0).is_none());
+        // Bytes finally drain.
+        let done = w.advance(4000.0);
+        assert!(done.is_some());
+    }
+
+    #[test]
+    fn pick_prefers_idle_workers() {
+        let mut f = Fleet::new(ChipConfig::paper_chip(), 2, 2, 1.0);
+        let cpt = f.cycles_per_tick;
+        f.workers[0].try_dispatch(task(0)).unwrap();
+        f.workers[0].refill(cpt);
+        assert_eq!(f.pick_worker(), Some(1));
+    }
+
+    #[test]
+    fn demand_capped_by_link() {
+        let mut f = fleet1();
+        let cpt = f.cycles_per_tick;
+        let w = &mut f.workers[0];
+        let mut t = task(0);
+        t.cost.dram_bytes = 100_000_000;
+        w.try_dispatch(t).unwrap();
+        w.refill(cpt);
+        let link = f.link_bytes_per_tick;
+        assert!((f.workers[0].bus_demand(link) - link).abs() < 1e-6);
+    }
+}

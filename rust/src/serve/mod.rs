@@ -1,0 +1,45 @@
+//! Fleet serving: many camera streams multiplexed over a pool of
+//! simulated DLA chips behind a shared, budgeted DRAM bus.
+//!
+//! The paper's thesis is that DRAM bandwidth — not PE count — bounds
+//! real-time HD detection: one chip sustains 1280x720@30 inside a
+//! 585 MB/s traffic budget. This module asks the production question
+//! that follows: how many *streams* can a rack of such chips serve when
+//! they all contend for one memory bus, and what happens to tail latency,
+//! deadline misses and drops when they can't all fit? Everything runs in
+//! virtual time (fixed 1 ms ticks), so a run is a pure function of its
+//! seed — reproducible load tests, no wall clock.
+//!
+//! One concern per module:
+//!
+//! * [`stream`] — QoS classes, stream operating points (416/720p/1080p at
+//!   15/30 FPS), per-frame cost derived from the counted chip models, and
+//!   the seeded frame source.
+//! * [`arbiter`] — the shared bus: a per-tick byte budget water-filled
+//!   across in-flight transfers, plus utilization accounting.
+//! * [`scheduler`] — EDF dispatch, admission control, load shedding, and
+//!   the tick engine ([`FleetSim`], [`run_fleet`]).
+//! * [`fleet`] — the chip pool; bounded mpsc dispatch queues whose
+//!   `try_send` failures are the backpressure signal.
+//! * [`stats`] — per-stream latency histograms (shared `Metrics` with the
+//!   single-chip coordinator), miss/shed rates, the printable report.
+//!
+//! ```no_run
+//! use rcnet_dla::serve::{run_fleet, FleetConfig};
+//!
+//! let cfg = FleetConfig { streams: 64, bus_mbps: 585.0, ..FleetConfig::default() };
+//! let report = run_fleet(&cfg).unwrap();
+//! println!("{report}");
+//! ```
+
+pub mod arbiter;
+pub mod fleet;
+pub mod scheduler;
+pub mod stats;
+pub mod stream;
+
+pub use arbiter::BusArbiter;
+pub use fleet::{ChipWorker, Fleet, InFlight};
+pub use scheduler::{run_fleet, run_fleet_with, AdmissionPolicy, FleetConfig, FleetSim};
+pub use stats::{FleetReport, StreamStats};
+pub use stream::{FrameCost, FrameTask, QosClass, Stream, StreamSpec};

@@ -1,0 +1,369 @@
+//! Dispatch policy, admission control and load shedding — the fleet
+//! simulation engine.
+//!
+//! **Why EDF.** Dispatch is earliest-deadline-first over the central
+//! ready queue. Every frame carries a hard deadline (two periods after
+//! release), which is exactly the regime EDF is optimal for on a shared
+//! resource; weighted round-robin would be fairer on *throughput* but
+//! has no notion of urgency, so a 15 FPS stream's slack frames would
+//! delay a 30 FPS stream's tight ones. EDF's known pathology — thrashing
+//! under overload, where it burns capacity on frames that will miss
+//! anyway — is fenced off by the two mechanisms around it: admission
+//! control keeps steady-state demand bounded, and expired frames are
+//! shed *before* dispatch, so the queue only ever holds frames that can
+//! still make their deadline. QoS breaks EDF ties (gold first) and picks
+//! shed victims (bronze first).
+//!
+//! Virtual time advances in fixed ticks (default 1 ms), so a run is a
+//! pure function of its seed — no wall clock anywhere.
+//!
+//! Per tick:
+//! 1. streams release due frames into the central ready queue,
+//! 2. expired frames are shed; the bounded queue sheds lowest-QoS first,
+//! 3. ready frames dispatch EDF-order onto chips through each chip's
+//!    bounded mpsc queue (`try_send` failure = backpressure, frame stays
+//!    central),
+//! 4. the bus arbiter water-fills the tick's byte budget across the
+//!    chips' in-flight transfers,
+//! 5. chips advance; completions are scored against their deadlines.
+
+use crate::config::ChipConfig;
+use crate::dla::simulate_fused;
+use crate::fusion::FusionGroup;
+use crate::model::Network;
+use crate::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
+use crate::util::Rng;
+use crate::Result;
+
+use std::time::Duration;
+
+use super::arbiter::BusArbiter;
+use super::fleet::Fleet;
+use super::stats::{FleetReport, StreamStats};
+use super::stream::{FrameCost, FrameTask, Stream, StreamSpec};
+
+/// Whether streams are admitted before the run starts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionPolicy {
+    /// Admit every requested stream (pure shedding/miss behavior).
+    AdmitAll,
+    /// First-fit in arrival order: admit while projected steady-state
+    /// bus AND compute demand stay under `oversub` x capacity. A modest
+    /// oversubscription (default 2.0) banks on shedding to degrade
+    /// gracefully rather than turning traffic away at the door.
+    DemandLimit { oversub: f64 },
+}
+
+/// Knobs of one fleet run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetConfig {
+    /// Streams requested (the admitted set may be smaller).
+    pub streams: usize,
+    pub chips: usize,
+    /// Shared DRAM-bus budget in MB/s (the paper's single-chip HD30
+    /// figure is 585).
+    pub bus_mbps: f64,
+    /// Simulated span in seconds.
+    pub seconds: f64,
+    pub seed: u64,
+    /// Virtual tick in milliseconds.
+    pub tick_ms: f64,
+    /// Per-chip dispatch queue depth (bounded mpsc).
+    pub queue_depth: usize,
+    /// Central ready-queue bound, as a multiple of the stream count.
+    pub max_ready_per_stream: usize,
+    pub admission: AdmissionPolicy,
+    pub chip: ChipConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            streams: 16,
+            chips: 8,
+            bus_mbps: 585.0,
+            seconds: 5.0,
+            seed: 1,
+            tick_ms: 1.0,
+            queue_depth: 2,
+            max_ready_per_stream: 4,
+            admission: AdmissionPolicy::DemandLimit { oversub: 2.0 },
+            chip: ChipConfig::paper_chip(),
+        }
+    }
+}
+
+/// Per-frame cost of the deployed RC-YOLOv2 at each resolution in the
+/// mix, from the same counted models the single-chip reports use.
+struct CostModel {
+    net: Network,
+    groups: Vec<FusionGroup>,
+    chip: ChipConfig,
+    cache: Vec<((u32, u32), FrameCost)>,
+}
+
+impl CostModel {
+    fn new(chip: ChipConfig) -> Result<Self> {
+        let spec = build_deployment_spec(PipelineProfile::Hd, 3, 5, None, 7);
+        let (net, groups) = spec_to_network(&spec)?;
+        Ok(CostModel { net, groups, chip, cache: Vec::new() })
+    }
+
+    fn cost(&mut self, hw: (u32, u32)) -> Result<FrameCost> {
+        if let Some((_, c)) = self.cache.iter().find(|(k, _)| *k == hw) {
+            return Ok(*c);
+        }
+        let (sim, _) = simulate_fused(&self.net, &self.groups, hw, &self.chip)
+            .map_err(|e| anyhow::anyhow!("tile planning at {hw:?}: {e:?}"))?;
+        let c = FrameCost {
+            compute_cycles: sim.total_cycles,
+            dram_bytes: sim.total_dram_bytes(),
+        };
+        self.cache.push((hw, c));
+        Ok(c)
+    }
+}
+
+/// Index of the EDF-next frame: earliest deadline, gold-first on ties,
+/// then (stream, seq) for full determinism.
+fn edf_min(ready: &[FrameTask]) -> usize {
+    (0..ready.len())
+        .min_by(|&a, &b| {
+            let (x, y) = (&ready[a], &ready[b]);
+            x.deadline_ms
+                .total_cmp(&y.deadline_ms)
+                .then(y.qos.cmp(&x.qos))
+                .then(x.stream.cmp(&y.stream))
+                .then(x.seq.cmp(&y.seq))
+        })
+        .expect("edf_min on empty queue")
+}
+
+/// Index of the frame to shed on queue overflow: lowest QoS, then latest
+/// deadline (the least urgent work of the least important tier).
+fn shed_victim(ready: &[FrameTask]) -> usize {
+    (0..ready.len())
+        .min_by(|&a, &b| {
+            let (x, y) = (&ready[a], &ready[b]);
+            x.qos
+                .cmp(&y.qos)
+                .then(y.deadline_ms.total_cmp(&x.deadline_ms))
+                .then(y.stream.cmp(&x.stream))
+                .then(y.seq.cmp(&x.seq))
+        })
+        .expect("shed_victim on empty queue")
+}
+
+/// The discrete-tick fleet simulator.
+pub struct FleetSim {
+    cfg: FleetConfig,
+    streams: Vec<Stream>,
+    ready: Vec<FrameTask>,
+    fleet: Fleet,
+    arbiter: BusArbiter,
+    stats: Vec<StreamStats>,
+    rejected: usize,
+}
+
+impl FleetSim {
+    /// Admit (a subset of) `specs` and set up the pool. Costs come from
+    /// the deployed network's counted models at each spec's resolution.
+    pub fn new(cfg: &FleetConfig, specs: &[StreamSpec]) -> Result<FleetSim> {
+        let mut costs = CostModel::new(cfg.chip)?;
+        let fleet = Fleet::new(cfg.chip, cfg.chips, cfg.queue_depth, cfg.tick_ms);
+        let bus_capacity = cfg.bus_mbps * 1e6;
+        let compute_capacity = fleet.compute_cycles_per_s();
+
+        // Admission: first-fit in arrival order, both resources checked.
+        let mut admitted: Vec<(StreamSpec, FrameCost)> = Vec::new();
+        let mut rejected = 0usize;
+        let mut bus_demand = 0.0f64;
+        let mut compute_demand = 0.0f64;
+        for &s in specs {
+            let cost = costs.cost(s.hw)?;
+            let b = cost.bus_demand_bytes_per_s(s.target_fps);
+            let c = cost.compute_demand_cycles_per_s(s.target_fps);
+            let fits = match cfg.admission {
+                AdmissionPolicy::AdmitAll => true,
+                AdmissionPolicy::DemandLimit { oversub } => {
+                    bus_demand + b <= oversub * bus_capacity
+                        && compute_demand + c <= oversub * compute_capacity
+                }
+            };
+            if fits {
+                bus_demand += b;
+                compute_demand += c;
+                admitted.push((s, cost));
+            } else {
+                rejected += 1;
+            }
+        }
+
+        // Seeded release phases, decoupled from the spec-sampling stream.
+        let mut rng = Rng::new(cfg.seed ^ 0xF1EE_75E1_2D1E_0001);
+        let streams: Vec<Stream> = admitted
+            .iter()
+            .enumerate()
+            .map(|(id, &(spec, cost))| Stream::new(id, spec, cost, &mut rng))
+            .collect();
+        let stats = admitted.iter().map(|&(spec, _)| StreamStats::new(spec)).collect();
+
+        Ok(FleetSim {
+            cfg: *cfg,
+            streams,
+            ready: Vec::new(),
+            fleet,
+            arbiter: BusArbiter::new(cfg.bus_mbps, cfg.tick_ms),
+            stats,
+            rejected,
+        })
+    }
+
+    fn step(&mut self, now_ms: f64) {
+        // 1. Frame releases.
+        for s in &mut self.streams {
+            for t in s.release_due(now_ms) {
+                self.stats[t.stream].released += 1;
+                self.ready.push(t);
+            }
+        }
+
+        // 2a. Shed frames that can no longer make their deadline.
+        let stats = &mut self.stats;
+        self.ready.retain(|t| {
+            if t.deadline_ms <= now_ms {
+                stats[t.stream].shed += 1;
+                false
+            } else {
+                true
+            }
+        });
+
+        // 2b. Bounded central queue: shed lowest-QoS, least-urgent first.
+        let max_ready = self.cfg.max_ready_per_stream * self.streams.len().max(1);
+        while self.ready.len() > max_ready {
+            let v = shed_victim(&self.ready);
+            let t = self.ready.swap_remove(v);
+            self.stats[t.stream].shed += 1;
+        }
+
+        // 3. EDF dispatch through the bounded per-chip queues.
+        while !self.ready.is_empty() {
+            let Some(w) = self.fleet.pick_worker() else { break };
+            let i = edf_min(&self.ready);
+            let task = self.ready.swap_remove(i);
+            if let Err(back) = self.fleet.workers[w].try_dispatch(task) {
+                self.ready.push(back);
+                break;
+            }
+        }
+
+        // 4. Chips pull queued work, then the bus budget is arbitrated.
+        let cycles_per_tick = self.fleet.cycles_per_tick;
+        for w in &mut self.fleet.workers {
+            w.refill(cycles_per_tick);
+        }
+        let link = self.fleet.link_bytes_per_tick;
+        let demands: Vec<f64> = self.fleet.workers.iter().map(|w| w.bus_demand(link)).collect();
+        let grants = self.arbiter.arbitrate(&demands);
+
+        // 5. Execution progress and completion scoring.
+        for (w, g) in self.fleet.workers.iter_mut().zip(&grants) {
+            if let Some(done) = w.advance(*g) {
+                let latency_ms = now_ms + self.cfg.tick_ms - done.release_ms;
+                self.stats[done.stream]
+                    .record_completion(latency_ms, done.deadline_ms - done.release_ms);
+            }
+        }
+    }
+
+    /// Run the configured span and produce the report.
+    pub fn run(&mut self) -> FleetReport {
+        let ticks = (self.cfg.seconds * 1e3 / self.cfg.tick_ms).round().max(1.0) as u64;
+        for k in 0..ticks {
+            self.step(k as f64 * self.cfg.tick_ms);
+        }
+        let wall = Duration::from_secs_f64(self.cfg.seconds);
+        for s in &mut self.stats {
+            s.metrics.set_wall(wall);
+        }
+        let busy: u64 = self.fleet.workers.iter().map(|w| w.busy_ticks).sum();
+        let chips = self.fleet.workers.len();
+        FleetReport {
+            per_stream: self.stats.clone(),
+            rejected: self.rejected,
+            chips,
+            bus_mbps: self.cfg.bus_mbps,
+            bus_utilization: self.arbiter.utilization(),
+            chip_utilization: busy as f64 / (ticks as f64 * chips.max(1) as f64),
+            wall_s: self.cfg.seconds,
+        }
+    }
+}
+
+/// Run a fleet with a seeded mix of stream specs (`cfg.streams` of them).
+pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
+    let mut rng = Rng::new(cfg.seed);
+    let specs: Vec<StreamSpec> =
+        (0..cfg.streams).map(|_| StreamSpec::sample(&mut rng)).collect();
+    run_fleet_with(cfg, &specs)
+}
+
+/// Run a fleet over an explicit stream list (`cfg.streams` is ignored).
+pub fn run_fleet_with(cfg: &FleetConfig, specs: &[StreamSpec]) -> Result<FleetReport> {
+    let mut sim = FleetSim::new(cfg, specs)?;
+    Ok(sim.run())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::stream::QosClass;
+
+    fn task(stream: usize, seq: u64, deadline_ms: f64, qos: QosClass) -> FrameTask {
+        FrameTask {
+            stream,
+            seq,
+            release_ms: 0.0,
+            deadline_ms,
+            cost: FrameCost { compute_cycles: 1, dram_bytes: 1 },
+            qos,
+        }
+    }
+
+    #[test]
+    fn edf_picks_earliest_deadline() {
+        let q = [
+            task(0, 0, 50.0, QosClass::Bronze),
+            task(1, 0, 20.0, QosClass::Bronze),
+            task(2, 0, 90.0, QosClass::Gold),
+        ];
+        assert_eq!(edf_min(&q), 1);
+    }
+
+    #[test]
+    fn edf_breaks_ties_by_qos() {
+        let q = [
+            task(0, 0, 50.0, QosClass::Bronze),
+            task(1, 0, 50.0, QosClass::Gold),
+        ];
+        assert_eq!(edf_min(&q), 1);
+    }
+
+    #[test]
+    fn shed_victim_is_lowest_qos_least_urgent() {
+        let q = [
+            task(0, 0, 90.0, QosClass::Gold),
+            task(1, 0, 40.0, QosClass::Bronze),
+            task(2, 0, 80.0, QosClass::Bronze),
+        ];
+        assert_eq!(shed_victim(&q), 2);
+    }
+
+    #[test]
+    fn default_config_is_sane() {
+        let cfg = FleetConfig::default();
+        assert!(cfg.streams > 0 && cfg.chips > 0);
+        assert!(cfg.bus_mbps > 0.0 && cfg.tick_ms > 0.0);
+    }
+}

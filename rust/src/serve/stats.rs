@@ -1,0 +1,236 @@
+//! Per-stream and aggregate serving statistics.
+//!
+//! Reuses [`crate::coordinator::Metrics`] for the per-stream latency
+//! series and deadline accounting, so the fleet report and the
+//! single-pipeline report share one definition of latency, deadline miss
+//! and (wall-clock) throughput.
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::coordinator::Metrics;
+use crate::util::percentile;
+
+use super::stream::StreamSpec;
+
+fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+/// Serving statistics for one admitted stream.
+#[derive(Debug, Clone)]
+pub struct StreamStats {
+    pub spec: StreamSpec,
+    /// Latency series + deadline misses of the *completed* frames.
+    pub metrics: Metrics,
+    /// Frames the camera released into the system.
+    pub released: u64,
+    /// Frames dropped without execution (expired or queue overflow).
+    pub shed: u64,
+}
+
+impl StreamStats {
+    pub fn new(spec: StreamSpec) -> Self {
+        StreamStats { spec, metrics: Metrics::default(), released: 0, shed: 0 }
+    }
+
+    /// Record a completed frame; `deadline_ms` is the relative deadline.
+    pub fn record_completion(&mut self, latency_ms: f64, deadline_ms: f64) {
+        self.metrics.record_frame(
+            Duration::from_secs_f64(latency_ms / 1e3),
+            Some(Duration::from_secs_f64(deadline_ms / 1e3)),
+        );
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.metrics.frames as u64
+    }
+
+    pub fn missed(&self) -> u64 {
+        self.metrics.deadline_misses as u64
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        percentile(&self.metrics.latency_ms, 50.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        percentile(&self.metrics.latency_ms, 99.0)
+    }
+
+    /// Deadline misses over released frames.
+    pub fn miss_rate(&self) -> f64 {
+        ratio(self.missed(), self.released)
+    }
+
+    /// Shed frames over released frames.
+    pub fn shed_rate(&self) -> f64 {
+        ratio(self.shed, self.released)
+    }
+}
+
+/// Result of one fleet simulation.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub per_stream: Vec<StreamStats>,
+    /// Streams refused at admission control.
+    pub rejected: usize,
+    pub chips: usize,
+    pub bus_mbps: f64,
+    /// Granted bus bytes over offered bus capacity.
+    pub bus_utilization: f64,
+    /// Mean fraction of ticks chips held a frame (compute or bus stall).
+    pub chip_utilization: f64,
+    /// Simulated span in seconds.
+    pub wall_s: f64,
+}
+
+impl FleetReport {
+    pub fn released(&self) -> u64 {
+        self.per_stream.iter().map(|s| s.released).sum()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.per_stream.iter().map(|s| s.completed()).sum()
+    }
+
+    pub fn missed(&self) -> u64 {
+        self.per_stream.iter().map(|s| s.missed()).sum()
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.per_stream.iter().map(|s| s.shed).sum()
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        ratio(self.missed(), self.released())
+    }
+
+    pub fn shed_rate(&self) -> f64 {
+        ratio(self.shed(), self.released())
+    }
+
+    /// Sheds and misses together — the fraction of released frames that
+    /// did not produce a timely detection.
+    pub fn loss_rate(&self) -> f64 {
+        ratio(self.missed() + self.shed(), self.released())
+    }
+
+    /// Latency percentile over every completed frame in the fleet.
+    pub fn aggregate_percentile_ms(&self, p: f64) -> f64 {
+        let mut all: Vec<f64> = Vec::new();
+        for s in &self.per_stream {
+            all.extend_from_slice(&s.metrics.latency_ms);
+        }
+        percentile(&all, p)
+    }
+
+    /// p99 latency over every completed frame in the fleet.
+    pub fn aggregate_p99_ms(&self) -> f64 {
+        self.aggregate_percentile_ms(99.0)
+    }
+}
+
+impl fmt::Display for FleetReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "fleet: {} streams admitted ({} rejected), {} chips, bus {:.0} MB/s, {:.1} s simulated",
+            self.per_stream.len(),
+            self.rejected,
+            self.chips,
+            self.bus_mbps,
+            self.wall_s
+        )?;
+        writeln!(
+            f,
+            "  id  resolution   fps  qos     released  done  p50 ms   p99 ms  miss%  shed%"
+        )?;
+        for (i, s) in self.per_stream.iter().enumerate() {
+            writeln!(
+                f,
+                "{:>4}  {:>4}x{:<4}  {:>4.0}  {:<7} {:>7} {:>6}  {:>6.1}  {:>7.1}  {:>5.1}  {:>5.1}",
+                i,
+                s.spec.hw.1,
+                s.spec.hw.0,
+                s.spec.target_fps,
+                s.spec.qos.name(),
+                s.released,
+                s.completed(),
+                s.p50_ms(),
+                s.p99_ms(),
+                100.0 * s.miss_rate(),
+                100.0 * s.shed_rate()
+            )?;
+        }
+        write!(
+            f,
+            "aggregate: bus util {:.2}  chip util {:.2}  miss {:.1}%  shed {:.1}%  p99 {:.1} ms",
+            self.bus_utilization,
+            self.chip_utilization,
+            100.0 * self.miss_rate(),
+            100.0 * self.shed_rate(),
+            self.aggregate_p99_ms()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::stream::QosClass;
+
+    fn stats() -> StreamStats {
+        StreamStats::new(StreamSpec {
+            hw: (720, 1280),
+            target_fps: 30.0,
+            qos: QosClass::Gold,
+        })
+    }
+
+    #[test]
+    fn rates_guard_zero_released() {
+        let s = stats();
+        assert_eq!(s.miss_rate(), 0.0);
+        assert_eq!(s.shed_rate(), 0.0);
+    }
+
+    #[test]
+    fn completion_recording() {
+        let mut s = stats();
+        s.released = 2;
+        s.record_completion(10.0, 66.6); // on time
+        s.record_completion(80.0, 66.6); // late
+        assert_eq!(s.completed(), 2);
+        assert_eq!(s.missed(), 1);
+        assert!((s.miss_rate() - 0.5).abs() < 1e-9);
+        assert!(s.p99_ms() >= s.p50_ms());
+    }
+
+    #[test]
+    fn report_aggregates_and_displays() {
+        let mut a = stats();
+        a.released = 10;
+        a.shed = 2;
+        a.record_completion(5.0, 66.6);
+        let r = FleetReport {
+            per_stream: vec![a],
+            rejected: 1,
+            chips: 4,
+            bus_mbps: 585.0,
+            bus_utilization: 0.5,
+            chip_utilization: 0.25,
+            wall_s: 1.0,
+        };
+        assert_eq!(r.released(), 10);
+        assert_eq!(r.shed(), 2);
+        assert!((r.shed_rate() - 0.2).abs() < 1e-9);
+        let text = r.to_string();
+        assert!(text.contains("bus util"));
+        assert!(text.contains("1 rejected"));
+    }
+}

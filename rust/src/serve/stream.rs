@@ -1,0 +1,221 @@
+//! Per-stream state: operating point (resolution + target FPS), QoS
+//! class, per-frame cost, and the seeded frame source.
+//!
+//! A stream does not carry pixels — the fleet simulator schedules *cost*,
+//! not content. Each frame of a stream costs the same compute cycles and
+//! DRAM bytes (derived once from `dla::simulate_fused` + `TrafficModel`
+//! at the stream's resolution), which is exactly the property the paper's
+//! fixed per-frame traffic budget (585 MB/s at HD30) rests on.
+
+use crate::util::Rng;
+
+/// Quality-of-service tier. Declaration order is shed order: when the
+/// scheduler must drop work, `Bronze` frames go first and `Gold` last;
+/// `Gold` also wins EDF ties.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum QosClass {
+    Bronze,
+    Silver,
+    Gold,
+}
+
+impl QosClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Bronze => "bronze",
+            QosClass::Silver => "silver",
+            QosClass::Gold => "gold",
+        }
+    }
+}
+
+/// A camera stream's operating point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamSpec {
+    /// Input resolution (height, width), matching the paper's operating
+    /// points: 416x416, 1280x720, 1920x1080.
+    pub hw: (u32, u32),
+    /// Frame rate the camera produces (15 or 30 FPS in the mixes).
+    pub target_fps: f64,
+    pub qos: QosClass,
+}
+
+impl StreamSpec {
+    /// Frame period in milliseconds.
+    pub fn period_ms(&self) -> f64 {
+        1e3 / self.target_fps
+    }
+
+    /// Relative deadline: two frame periods. One period of slack mirrors
+    /// the chip's ping-pong double buffering — a frame finishing within
+    /// the *next* period still keeps the output pipeline full; later than
+    /// that the detection is stale and the frame should be dropped.
+    pub fn deadline_ms(&self) -> f64 {
+        2.0 * self.period_ms()
+    }
+
+    /// Sample a mixed fleet workload: 40% 416x416, 40% 720p, 20% 1080p;
+    /// 15/30 FPS evenly; QoS 20% gold / 40% silver / 40% bronze.
+    pub fn sample(rng: &mut Rng) -> Self {
+        let hw = match rng.range(0, 10) {
+            0..=3 => (416, 416),
+            4..=7 => (720, 1280),
+            _ => (1080, 1920),
+        };
+        let target_fps = if rng.f64() < 0.5 { 15.0 } else { 30.0 };
+        let qos = match rng.range(0, 10) {
+            0..=1 => QosClass::Gold,
+            2..=5 => QosClass::Silver,
+            _ => QosClass::Bronze,
+        };
+        StreamSpec { hw, target_fps, qos }
+    }
+}
+
+/// Per-frame execution cost on one chip, from the counted models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameCost {
+    /// PE-array cycles for the whole frame (group-fused schedule).
+    pub compute_cycles: u64,
+    /// External DRAM bytes for the whole frame (features + weights).
+    pub dram_bytes: u64,
+}
+
+impl FrameCost {
+    /// Steady-state DRAM-bus demand at `fps`, bytes per second — the
+    /// quantity admission control budgets against.
+    pub fn bus_demand_bytes_per_s(&self, fps: f64) -> f64 {
+        self.dram_bytes as f64 * fps
+    }
+
+    /// Steady-state compute demand at `fps`, cycles per second.
+    pub fn compute_demand_cycles_per_s(&self, fps: f64) -> f64 {
+        self.compute_cycles as f64 * fps
+    }
+}
+
+/// One released frame instance awaiting dispatch or execution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrameTask {
+    /// Index of the owning stream in the admitted set.
+    pub stream: usize,
+    /// Frame sequence number within the stream.
+    pub seq: u64,
+    /// Virtual release time (ms).
+    pub release_ms: f64,
+    /// Absolute deadline (ms): release + the stream's relative deadline.
+    pub deadline_ms: f64,
+    pub cost: FrameCost,
+    pub qos: QosClass,
+}
+
+/// Live per-stream state inside the simulator.
+#[derive(Debug, Clone)]
+pub struct Stream {
+    pub id: usize,
+    pub spec: StreamSpec,
+    pub cost: FrameCost,
+    /// Virtual time (ms) of the next frame release.
+    pub next_release_ms: f64,
+    pub frames_released: u64,
+}
+
+impl Stream {
+    /// A stream starts at a seeded phase offset within its first period,
+    /// so a fleet of same-rate cameras does not release in lockstep.
+    pub fn new(id: usize, spec: StreamSpec, cost: FrameCost, rng: &mut Rng) -> Self {
+        Stream {
+            id,
+            spec,
+            cost,
+            next_release_ms: rng.f64() * spec.period_ms(),
+            frames_released: 0,
+        }
+    }
+
+    /// Release every frame due at or before `now_ms`.
+    pub fn release_due(&mut self, now_ms: f64) -> Vec<FrameTask> {
+        let mut out = Vec::new();
+        while self.next_release_ms <= now_ms {
+            out.push(FrameTask {
+                stream: self.id,
+                seq: self.frames_released,
+                release_ms: self.next_release_ms,
+                deadline_ms: self.next_release_ms + self.spec.deadline_ms(),
+                cost: self.cost,
+                qos: self.spec.qos,
+            });
+            self.frames_released += 1;
+            self.next_release_ms += self.spec.period_ms();
+        }
+        out
+    }
+
+    /// Steady-state DRAM-bus demand in bytes per second.
+    pub fn bus_demand_bytes_per_s(&self) -> f64 {
+        self.cost.bus_demand_bytes_per_s(self.spec.target_fps)
+    }
+
+    /// Steady-state compute demand in cycles per second.
+    pub fn compute_demand_cycles_per_s(&self) -> f64 {
+        self.cost.compute_demand_cycles_per_s(self.spec.target_fps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const COST: FrameCost = FrameCost { compute_cycles: 1_000_000, dram_bytes: 2_000_000 };
+
+    fn spec() -> StreamSpec {
+        StreamSpec { hw: (720, 1280), target_fps: 30.0, qos: QosClass::Silver }
+    }
+
+    #[test]
+    fn qos_shed_order() {
+        assert!(QosClass::Bronze < QosClass::Silver);
+        assert!(QosClass::Silver < QosClass::Gold);
+    }
+
+    #[test]
+    fn period_and_deadline() {
+        let s = spec();
+        assert!((s.period_ms() - 33.333).abs() < 0.01);
+        assert!((s.deadline_ms() - 66.666).abs() < 0.01);
+    }
+
+    #[test]
+    fn sample_is_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..32 {
+            assert_eq!(StreamSpec::sample(&mut a), StreamSpec::sample(&mut b));
+        }
+    }
+
+    #[test]
+    fn releases_one_frame_per_period() {
+        let mut rng = Rng::new(3);
+        let mut s = Stream::new(0, spec(), COST, &mut rng);
+        let mut total = 0usize;
+        for t in 0..1000 {
+            let released = s.release_due(t as f64);
+            for (k, f) in released.iter().enumerate() {
+                assert_eq!(f.seq, (total + k) as u64);
+                assert!((f.deadline_ms - f.release_ms - s.spec.deadline_ms()).abs() < 1e-9);
+            }
+            total += released.len();
+        }
+        // 1 second at 30 FPS, minus up to one period of phase offset.
+        assert!((29..=31).contains(&total), "released {total}");
+    }
+
+    #[test]
+    fn demand_math() {
+        let mut rng = Rng::new(3);
+        let s = Stream::new(0, spec(), COST, &mut rng);
+        assert!((s.bus_demand_bytes_per_s() - 60e6).abs() < 1e-6);
+        assert!((s.compute_demand_cycles_per_s() - 30e6).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,127 @@
+//! Integration tests over the fleet-serving subsystem: determinism,
+//! admission control, and the headline property — shrinking the shared
+//! DRAM-bus budget can only degrade service (more sheds / misses).
+
+use rcnet_dla::serve::{
+    run_fleet, run_fleet_with, AdmissionPolicy, FleetConfig, FleetReport, QosClass, StreamSpec,
+};
+
+fn hd15(qos: QosClass) -> StreamSpec {
+    StreamSpec { hw: (720, 1280), target_fps: 15.0, qos }
+}
+
+fn loss(r: &FleetReport) -> f64 {
+    r.loss_rate()
+}
+
+#[test]
+fn halving_bus_budget_monotonically_degrades() {
+    // Six HD15 streams on six chips: compute is comfortably sustainable
+    // (each chip serves one stream below full utilization), so every
+    // degradation as the budget halves is attributable to the bus.
+    let specs = [
+        hd15(QosClass::Gold),
+        hd15(QosClass::Gold),
+        hd15(QosClass::Silver),
+        hd15(QosClass::Silver),
+        hd15(QosClass::Bronze),
+        hd15(QosClass::Bronze),
+    ];
+    let mut rates = Vec::new();
+    for bus_mbps in [50_000.0, 1_000.0, 500.0, 250.0] {
+        let cfg = FleetConfig {
+            streams: specs.len(),
+            chips: 6,
+            bus_mbps,
+            seconds: 2.0,
+            admission: AdmissionPolicy::AdmitAll,
+            ..FleetConfig::default()
+        };
+        let r = run_fleet_with(&cfg, &specs).unwrap();
+        assert!(r.released() > 0, "no frames released at {bus_mbps} MB/s");
+        rates.push(loss(&r));
+    }
+    for w in rates.windows(2) {
+        assert!(
+            w[1] + 1e-9 >= w[0],
+            "shed+miss rate must not improve when the bus shrinks: {rates:?}"
+        );
+    }
+    assert!(rates[0] < 0.05, "uncontended bus should serve ~everything: {rates:?}");
+    assert!(rates[3] > rates[0] + 0.2, "a 200x smaller bus must visibly hurt: {rates:?}");
+}
+
+#[test]
+fn same_seed_same_report() {
+    let cfg = FleetConfig {
+        streams: 12,
+        chips: 4,
+        seconds: 1.0,
+        seed: 42,
+        ..FleetConfig::default()
+    };
+    let a = run_fleet(&cfg).unwrap().to_string();
+    let b = run_fleet(&cfg).unwrap().to_string();
+    assert_eq!(a, b, "a seeded fleet run must be reproducible");
+    assert!(a.contains("bus util"));
+}
+
+#[test]
+fn different_seeds_change_the_mix() {
+    let base = FleetConfig { streams: 12, chips: 4, seconds: 1.0, ..FleetConfig::default() };
+    let a = run_fleet(&FleetConfig { seed: 1, ..base }).unwrap().to_string();
+    let b = run_fleet(&FleetConfig { seed: 2, ..base }).unwrap().to_string();
+    assert_ne!(a, b);
+}
+
+#[test]
+fn admission_rejects_everything_on_a_starved_bus() {
+    // 1 MB/s cannot carry a single HD15 stream at oversub 1.0.
+    let specs = [hd15(QosClass::Gold); 4];
+    let cfg = FleetConfig {
+        streams: specs.len(),
+        chips: 64,
+        bus_mbps: 1.0,
+        seconds: 0.5,
+        admission: AdmissionPolicy::DemandLimit { oversub: 1.0 },
+        ..FleetConfig::default()
+    };
+    let r = run_fleet_with(&cfg, &specs).unwrap();
+    assert_eq!(r.per_stream.len(), 0);
+    assert_eq!(r.rejected, 4);
+}
+
+#[test]
+fn admission_admits_under_ample_capacity() {
+    let specs = [hd15(QosClass::Silver); 4];
+    let cfg = FleetConfig {
+        streams: specs.len(),
+        chips: 64,
+        bus_mbps: 100_000.0,
+        seconds: 0.5,
+        admission: AdmissionPolicy::DemandLimit { oversub: 1.0 },
+        ..FleetConfig::default()
+    };
+    let r = run_fleet_with(&cfg, &specs).unwrap();
+    assert_eq!(r.per_stream.len(), 4);
+    assert_eq!(r.rejected, 0);
+}
+
+#[test]
+fn report_counts_are_consistent() {
+    let cfg = FleetConfig {
+        streams: 8,
+        chips: 4,
+        seconds: 1.0,
+        admission: AdmissionPolicy::AdmitAll,
+        ..FleetConfig::default()
+    };
+    let r = run_fleet(&cfg).unwrap();
+    assert_eq!(r.per_stream.len(), 8);
+    // Completed + shed never exceeds released (the rest is in flight at
+    // the end of the simulated span).
+    assert!(r.completed() + r.shed() <= r.released());
+    assert!(r.missed() <= r.completed());
+    assert!(r.bus_utilization >= 0.0 && r.bus_utilization <= 1.0 + 1e-9);
+    assert!(r.chip_utilization >= 0.0 && r.chip_utilization <= 1.0 + 1e-9);
+}
