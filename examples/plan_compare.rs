@@ -1,0 +1,44 @@
+//! Greedy vs traffic-optimal fusion planning, and the plan cache the
+//! fleet simulator uses to price every stream from the optimal plan at
+//! its own resolution.
+//!
+//! Run with: `cargo run --release --example plan_compare`
+
+use rcnet_dla::config::ChipConfig;
+use rcnet_dla::fusion::FusionConfig;
+use rcnet_dla::model::zoo;
+use rcnet_dla::plan::{PlanCache, Planner};
+
+fn main() {
+    let chip = ChipConfig::paper_chip();
+    let cfg = FusionConfig::paper_default();
+    let net = zoo::yolov2_converted(3, 5);
+    let mut cache = PlanCache::new();
+
+    println!("{} — fused DRAM feature traffic per frame\n", net.name);
+    for hw in zoo::PAPER_RESOLUTIONS {
+        let g = cache.plan(&net, &cfg, &chip, hw, Planner::PaperGreedy);
+        let o = cache.plan(&net, &cfg, &chip, hw, Planner::OptimalDp);
+        println!(
+            "  {:>9}: greedy {:>7.2} MB in {:>2} groups | optimal {:>7.2} MB in {:>2} groups | saved {:>5.1}%",
+            format!("{}x{}", hw.1, hw.0),
+            g.feat_bytes as f64 / 1e6,
+            g.groups.len(),
+            o.feat_bytes as f64 / 1e6,
+            o.groups.len(),
+            (1.0 - o.feat_bytes as f64 / g.feat_bytes.max(1) as f64) * 100.0,
+        );
+    }
+
+    // A second sweep over the same operating points is free — this is the
+    // path the fleet's admission control rides for every arriving stream.
+    for hw in zoo::PAPER_RESOLUTIONS {
+        let _ = cache.plan(&net, &cfg, &chip, hw, Planner::OptimalDp);
+    }
+    println!(
+        "\nplan cache: {} plans held, {} hits, {} misses",
+        cache.len(),
+        cache.hits(),
+        cache.misses()
+    );
+}

@@ -90,22 +90,27 @@ impl Default for ChipConfig {
 pub struct Workload {
     /// Input resolution (height, width).
     pub hw: (u32, u32),
+    /// Target frame rate.
     pub fps: f64,
 }
 
 impl Workload {
+    /// 1280x720 at 30 FPS — the headline real-time HD point.
     pub const HD30: Workload = Workload {
         hw: (720, 1280),
         fps: 30.0,
     };
+    /// 1920x1080 at 20 FPS (Table V "1080p@20").
     pub const FULLHD20: Workload = Workload {
         hw: (1080, 1920),
         fps: 20.0,
     };
+    /// 416x416 at 30 FPS — the VOC evaluation point.
     pub const VOC30: Workload = Workload {
         hw: (416, 416),
         fps: 30.0,
     };
+    /// 1920x960 at 30 FPS — the IVS dataset point (Table I).
     pub const IVS: Workload = Workload {
         hw: (960, 1920),
         fps: 30.0,

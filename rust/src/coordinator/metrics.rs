@@ -13,6 +13,7 @@ pub struct Metrics {
     pub group_ms: Vec<f64>,
     /// Frames that missed the real-time deadline.
     pub deadline_misses: usize,
+    /// Frames recorded.
     pub frames: usize,
     /// Wall-clock span of the whole run in seconds, set once at the end
     /// via [`Metrics::set_wall`]. Throughput must come from this, not
@@ -22,6 +23,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Record one frame's end-to-end latency and score its deadline.
     pub fn record_frame(&mut self, latency: Duration, deadline: Option<Duration>) {
         let ms = latency.as_secs_f64() * 1e3;
         self.latency_ms.push(ms);
@@ -33,6 +35,7 @@ impl Metrics {
         }
     }
 
+    /// Accumulate execution time of fusion group `gi`.
     pub fn record_group(&mut self, gi: usize, t: Duration) {
         if self.group_ms.len() <= gi {
             self.group_ms.resize(gi + 1, 0.0);
@@ -40,10 +43,12 @@ impl Metrics {
         self.group_ms[gi] += t.as_secs_f64() * 1e3;
     }
 
+    /// Mean end-to-end latency in ms.
     pub fn mean_latency_ms(&self) -> f64 {
         mean(&self.latency_ms)
     }
 
+    /// 99th-percentile end-to-end latency in ms.
     pub fn p99_latency_ms(&self) -> f64 {
         percentile(&self.latency_ms, 99.0)
     }

@@ -17,12 +17,17 @@ use super::Metrics;
 /// Pipeline knobs.
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
+    /// Frames to run.
     pub frames: usize,
     /// Real-time pacing target; None = run as fast as possible.
     pub target_fps: Option<f64>,
+    /// Detection confidence threshold.
     pub conf_threshold: f32,
+    /// NMS IoU threshold.
     pub nms_iou: f32,
+    /// Scene-generator seed.
     pub seed: u64,
+    /// Max objects per scene.
     pub max_objects: u32,
 }
 
@@ -42,18 +47,26 @@ impl Default for PipelineConfig {
 /// Result of a pipeline run.
 #[derive(Debug, Clone)]
 pub struct PipelineReport {
+    /// Frames executed.
     pub frames: usize,
+    /// Mean end-to-end latency (ms).
     pub mean_latency_ms: f64,
+    /// 99th-percentile latency (ms).
     pub p99_latency_ms: f64,
+    /// Wall-clock throughput.
     pub fps: f64,
+    /// Frames past the pacing deadline.
     pub deadline_misses: usize,
     pub map_50: f32,
     /// mAP at the looser IoU 0.3 — reported alongside 0.5 because the
     /// build-time training budget (a few hundred steps) leaves box
     /// regression coarse; objectness/classification quality shows here.
     pub map_30: f32,
+    /// Total detections emitted.
     pub detections: usize,
+    /// Whether trained parameters were loaded.
     pub trained: bool,
+    /// Input resolution (height, width).
     pub input_hw: (usize, usize),
 }
 

@@ -12,20 +12,30 @@ use crate::util::Rng;
 /// A scene object in normalized coordinates.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SceneObject {
+    /// Class index (0 box, 1 disc, 2 wedge).
     pub class: usize,
+    /// Center x in [0,1].
     pub cx: f32,
+    /// Center y in [0,1].
     pub cy: f32,
+    /// Width in [0,1].
     pub w: f32,
+    /// Height in [0,1].
     pub h: f32,
+    /// Fill intensity.
     pub shade: f32,
 }
 
 /// A rendered scene: HWC f32 image in [0,1] plus ground truth.
 #[derive(Debug, Clone)]
 pub struct Scene {
+    /// HWC f32 pixels in [0,1].
     pub image: Vec<f32>,
+    /// Image height in pixels.
     pub h: usize,
+    /// Image width in pixels.
     pub w: usize,
+    /// Ground-truth objects.
     pub objects: Vec<SceneObject>,
 }
 

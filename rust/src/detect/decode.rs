@@ -10,8 +10,11 @@ use super::BBox;
 /// One decoded detection.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Detection {
+    /// Decoded box in normalized image coordinates.
     pub bbox: BBox,
+    /// Argmax class index.
     pub class: usize,
+    /// objectness x class probability.
     pub score: f32,
 }
 

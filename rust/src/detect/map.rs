@@ -8,15 +8,20 @@ use super::{BBox, Detection};
 /// A ground-truth box with its class and image id.
 #[derive(Debug, Clone, Copy)]
 pub struct GroundTruth {
+    /// Image id the box belongs to.
     pub image: usize,
+    /// Class index.
     pub class: usize,
+    /// The box.
     pub bbox: BBox,
 }
 
 /// Detection tagged with its image id.
 #[derive(Debug, Clone)]
 pub struct TaggedDetection {
+    /// Image id the detection was made on.
     pub image: usize,
+    /// The detection.
     pub det: Detection,
 }
 

@@ -16,26 +16,35 @@ pub use nms::nms;
 /// An axis-aligned box, normalized to [0,1] image coordinates.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BBox {
+    /// Center x.
     pub cx: f32,
+    /// Center y.
     pub cy: f32,
+    /// Width.
     pub w: f32,
+    /// Height.
     pub h: f32,
 }
 
 impl BBox {
+    /// Left edge.
     pub fn x0(&self) -> f32 {
         self.cx - self.w / 2.0
     }
+    /// Top edge.
     pub fn y0(&self) -> f32 {
         self.cy - self.h / 2.0
     }
+    /// Right edge.
     pub fn x1(&self) -> f32 {
         self.cx + self.w / 2.0
     }
+    /// Bottom edge.
     pub fn y1(&self) -> f32 {
         self.cy + self.h / 2.0
     }
 
+    /// Box area (clamped non-negative).
     pub fn area(&self) -> f32 {
         self.w.max(0.0) * self.h.max(0.0)
     }

@@ -46,6 +46,7 @@ impl UnifiedBufferHalf {
         Self::new(8, 24 * 1024, channels)
     }
 
+    /// Total bytes across all banks.
     pub fn capacity(&self) -> usize {
         self.banks * self.data[0].len()
     }

@@ -23,7 +23,9 @@ use crate::model::{Layer, LayerKind, LayerShape};
 /// Compute statistics of one layer on the PE array.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LayerPeStats {
+    /// MAC operations the layer executes.
     pub macs: u64,
+    /// PE-array cycles to execute them.
     pub compute_cycles: u64,
     /// macs / (cycles * total_macs) — fraction of peak.
     pub utilization: f64,

@@ -25,46 +25,66 @@ const STEP_OVERHEAD_CYCLES: u64 = 64;
 /// Per-layer simulation record.
 #[derive(Debug, Clone)]
 pub struct LayerSim {
+    /// Layer name.
     pub name: String,
+    /// Cycles the layer holds the pipeline.
     pub cycles: u64,
+    /// MAC operations executed.
     pub macs: u64,
+    /// MACs over offered MAC-cycles (1.0 = the array never idles).
     pub utilization: f64,
+    /// On-chip SRAM bytes moved.
     pub sram_bytes: u64,
+    /// External DRAM bytes moved.
     pub dram_bytes: u64,
 }
 
 /// Per-group simulation record (fused schedule).
 #[derive(Debug, Clone)]
 pub struct GroupSim {
+    /// The fusion group simulated.
     pub group: FusionGroup,
+    /// Its tiling at the simulated resolution.
     pub tiling: GroupTiling,
+    /// Total group cycles (weight load + all layers, all tiles).
     pub cycles: u64,
+    /// MAC operations executed.
     pub macs: u64,
+    /// On-chip SRAM bytes moved.
     pub sram_bytes: u64,
+    /// External DRAM bytes moved (group I/O + weights).
     pub dram_bytes: u64,
 }
 
 /// Whole-frame simulation result.
 #[derive(Debug, Clone)]
 pub struct FrameSim {
+    /// Per-layer records, in execution order.
     pub layers: Vec<LayerSim>,
+    /// Total frame cycles.
     pub total_cycles: u64,
+    /// Core clock the cycle counts are relative to.
     pub clock_hz: f64,
 }
 
 impl FrameSim {
+    /// Frame latency in milliseconds.
     pub fn latency_ms(&self) -> f64 {
         self.total_cycles as f64 / self.clock_hz * 1e3
     }
+    /// Sustained frame rate (1 / latency).
     pub fn fps(&self) -> f64 {
         1e3 / self.latency_ms()
     }
+    /// Total MAC operations over the frame.
     pub fn total_macs(&self) -> u64 {
         self.layers.iter().map(|l| l.macs).sum()
     }
+    /// Total on-chip SRAM bytes over the frame.
     pub fn total_sram_bytes(&self) -> u64 {
         self.layers.iter().map(|l| l.sram_bytes).sum()
     }
+    /// Total external DRAM bytes over the frame.
     pub fn total_dram_bytes(&self) -> u64 {
         self.layers.iter().map(|l| l.dram_bytes).sum()
     }

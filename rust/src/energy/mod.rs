@@ -27,6 +27,7 @@ pub struct ExecutionEvents {
 }
 
 impl ExecutionEvents {
+    /// Scale every event count by `k` (e.g. frames/s to per-frame).
     pub fn scale(&self, k: f64) -> Self {
         ExecutionEvents {
             macs: self.macs * k,
@@ -39,14 +40,20 @@ impl ExecutionEvents {
 /// Fig. 14 power split (mW).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PowerBreakdown {
+    /// On-chip SRAM power.
     pub memory_mw: f64,
+    /// Combinational-logic (MAC datapath) power.
     pub combinational_mw: f64,
+    /// Pipeline-register power.
     pub register_mw: f64,
+    /// External I/O pad power.
     pub pads_mw: f64,
+    /// Clock-network power.
     pub clock_mw: f64,
 }
 
 impl PowerBreakdown {
+    /// Sum of all five components.
     pub fn total_mw(&self) -> f64 {
         self.memory_mw + self.combinational_mw + self.register_mw + self.pads_mw + self.clock_mw
     }
@@ -64,8 +71,10 @@ impl PowerBreakdown {
     }
 }
 
-/// The measured chip numbers used for calibration (Fig. 11 / Fig. 14).
+/// The measured core power used for calibration (Fig. 11 / Fig. 14).
 pub const CHIP_CORE_POWER_MW: f64 = 692.3;
+/// Fig. 14's published split (memory, combinational, register, pads,
+/// clock) as fractions of the core power.
 pub const FIG14_FRACTIONS: [f64; 5] = [0.51, 0.195, 0.137, 0.134, 0.022];
 
 /// Per-event energy model calibrated at a design point.
@@ -124,9 +133,13 @@ impl ChipPowerModel {
 /// Efficiency figures for Table V / Fig. 11.
 #[derive(Debug, Clone, Copy)]
 pub struct ChipSummary {
+    /// Peak throughput in GOPS.
     pub peak_gops: f64,
+    /// Measured core power in mW.
     pub core_power_mw: f64,
+    /// Die area in mm².
     pub area_mm2: f64,
+    /// Total on-chip SRAM in KB.
     pub sram_kb: u64,
 }
 
@@ -136,10 +149,12 @@ impl ChipSummary {
         ChipSummary { peak_gops: 460.8, core_power_mw: 692.3, area_mm2: 4.56, sram_kb: 480 }
     }
 
+    /// Energy efficiency (TOPS/W) at peak throughput.
     pub fn tops_per_w(&self) -> f64 {
         self.peak_gops / self.core_power_mw
     }
 
+    /// Area efficiency (GOPS/mm²).
     pub fn gops_per_mm2(&self) -> f64 {
         self.peak_gops / self.area_mm2
     }

@@ -18,6 +18,7 @@ use crate::util::Rng;
 /// `net.layers`. Non-weighted layers get empty vectors.
 #[derive(Debug, Clone)]
 pub struct GammaSet {
+    /// One gamma vector per layer (empty for unweighted layers).
     pub per_layer: Vec<Vec<f32>>,
 }
 

@@ -6,6 +6,10 @@
 //! saliency until every group's weights fit the buffer. [`residual`]
 //! implements the Fig. 8 channel-mismatch rules that make pruned residual
 //! blocks executable.
+//!
+//! The greedy scan is the *paper's* partitioner; [`crate::plan`] searches
+//! the same atomic-unit space ([`atomic_units`]) exhaustively for the
+//! DRAM-traffic-optimal grouping and never does worse.
 
 mod gamma;
 mod guidelines;
@@ -16,7 +20,7 @@ pub mod residual;
 
 pub use gamma::GammaSet;
 pub use guidelines::{validate_groups, Violation};
-pub use partition::{naive_partition, partition};
+pub use partition::{atomic_units, naive_partition, partition, Unit};
 pub use rcnet::{rcnet, uniform_scale_to_params, RcnetOptions, RcnetOutcome};
 
 use crate::model::{Network, Precision};
@@ -82,18 +86,22 @@ pub struct FusionGroup {
 }
 
 impl FusionGroup {
+    /// Number of layers in the group.
     pub fn len(&self) -> usize {
         self.end - self.start + 1
     }
 
+    /// A group always holds at least one layer.
     pub fn is_empty(&self) -> bool {
         false // a group always holds >= 1 layer
     }
 
+    /// True if layer index `i` belongs to the group.
     pub fn contains(&self, i: usize) -> bool {
         self.start <= i && i <= self.end
     }
 
+    /// Inclusive range of the group's layer indices.
     pub fn layer_range(&self) -> std::ops::RangeInclusive<usize> {
         self.start..=self.end
     }

@@ -13,17 +13,35 @@ use crate::model::{Network, SpanKind};
 use super::{FusionConfig, FusionGroup};
 
 /// An atomic partitioning unit: either a single layer or a whole residual
-/// block (with its trailing epilogue layers).
-#[derive(Debug, Clone, Copy)]
-struct Unit {
-    start: usize,
-    end: usize,
+/// block (with its trailing epilogue layers). Guideline 3 forbids cutting
+/// inside one, so every partitioner — the paper's greedy scan here and the
+/// DP search in [`crate::plan`] — places group boundaries only between
+/// units.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Unit {
+    /// First layer index of the unit (inclusive).
+    pub start: usize,
+    /// Last layer index of the unit (inclusive).
+    pub end: usize,
 }
 
-/// Build atomic units: residual spans are merged into one unit; all other
-/// layers are singleton units. Epilogue (pool) layers attach to the unit
-/// of the layer they follow, since they execute as that layer's epilogue.
-fn units(net: &Network) -> Vec<Unit> {
+impl Unit {
+    /// Number of layers in the unit.
+    pub fn len(&self) -> usize {
+        self.end - self.start + 1
+    }
+
+    /// A unit always holds at least one layer.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+}
+
+/// Build the atomic units of `net`: residual spans are merged into one
+/// unit; all other layers are singleton units. Epilogue (pool) layers
+/// attach to the unit of the layer they follow, since they execute as that
+/// layer's epilogue.
+pub fn atomic_units(net: &Network) -> Vec<Unit> {
     let n = net.layers.len();
     // Map each layer to the residual span it belongs to, if any.
     let mut span_of = vec![None; n];
@@ -56,7 +74,7 @@ fn units(net: &Network) -> Vec<Unit> {
 }
 
 /// Weight bytes of a layer range.
-fn range_weight(net: &Network, cfg: &FusionConfig, start: usize, end: usize) -> u64 {
+pub(crate) fn range_weight(net: &Network, cfg: &FusionConfig, start: usize, end: usize) -> u64 {
     net.layers[start..=end]
         .iter()
         .map(|l| l.params() * cfg.precision.weight_bytes)
@@ -64,7 +82,12 @@ fn range_weight(net: &Network, cfg: &FusionConfig, start: usize, end: usize) -> 
 }
 
 /// Downsampling layers in a range, honouring the first-layer exemption.
-fn range_downsampling(net: &Network, cfg: &FusionConfig, start: usize, end: usize) -> u32 {
+pub(crate) fn range_downsampling(
+    net: &Network,
+    cfg: &FusionConfig,
+    start: usize,
+    end: usize,
+) -> u32 {
     net.layers[start..=end]
         .iter()
         .enumerate()
@@ -81,6 +104,20 @@ fn range_downsampling(net: &Network, cfg: &FusionConfig, start: usize, end: usiz
 /// Greedy partition under the grouping budget `(1+m)·B` — the paper's
 /// step 2. Groups produced here may exceed `B` (by at most the slack);
 /// [`super::rcnet`] prunes them back under `B`.
+///
+/// ```
+/// use rcnet_dla::fusion::{partition, FusionConfig};
+/// use rcnet_dla::model::zoo;
+///
+/// let net = zoo::yolov2_converted(3, 5);
+/// let groups = partition(&net, &FusionConfig::paper_default());
+/// // Groups tile the layer list exactly, in order.
+/// assert_eq!(groups[0].start, 0);
+/// assert_eq!(groups.last().unwrap().end, net.layers.len() - 1);
+/// for w in groups.windows(2) {
+///     assert_eq!(w[0].end + 1, w[1].start);
+/// }
+/// ```
 pub fn partition(net: &Network, cfg: &FusionConfig) -> Vec<FusionGroup> {
     partition_with_budget(net, cfg, cfg.grouping_budget())
 }
@@ -93,7 +130,7 @@ pub fn naive_partition(net: &Network, cfg: &FusionConfig) -> Vec<FusionGroup> {
 }
 
 fn partition_with_budget(net: &Network, cfg: &FusionConfig, budget: u64) -> Vec<FusionGroup> {
-    let units = units(net);
+    let units = atomic_units(net);
     let mut groups: Vec<FusionGroup> = Vec::new();
     let mut cur: Option<FusionGroup> = None;
 

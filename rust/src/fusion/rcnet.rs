@@ -82,9 +82,13 @@ pub struct RcnetOutcome {
     pub network: Network,
     /// Deployment fusion groups — every group's weights fit `B` strictly.
     pub groups: Vec<FusionGroup>,
+    /// Parameters before pruning.
     pub params_before: u64,
+    /// Parameters after pruning.
     pub params_after: u64,
+    /// Output channels removed in total.
     pub pruned_channels: usize,
+    /// Prune iterations executed.
     pub iterations_run: usize,
 }
 

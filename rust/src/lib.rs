@@ -1,3 +1,4 @@
+#![warn(missing_docs)]
 //! # rcnet-dla
 //!
 //! Reproduction of *"A Real-Time 1280x720 Object Detection Chip With
@@ -38,6 +39,28 @@
 //! println!("external traffic: {:.1} MB/frame", traffic.total_bytes() as f64 / 1e6);
 //! ```
 //!
+//! The greedy `partition` above is the paper's Algorithm 1; [`plan`]
+//! searches the same space exactly and never does worse:
+//!
+//! ```no_run
+//! use rcnet_dla::config::ChipConfig;
+//! use rcnet_dla::fusion::FusionConfig;
+//! use rcnet_dla::model::zoo;
+//! use rcnet_dla::plan::{PlanCache, Planner};
+//!
+//! let net = zoo::yolov2_converted(20, 5);
+//! let mut cache = PlanCache::new();
+//! let plan = cache.plan(
+//!     &net,
+//!     &FusionConfig::paper_default(),
+//!     &ChipConfig::paper_chip(),
+//!     (720, 1280),
+//!     Planner::OptimalDp,
+//! );
+//! println!("{} groups, {:.1} MB features/frame", plan.groups.len(),
+//!          plan.feat_bytes as f64 / 1e6);
+//! ```
+//!
 //! ## Fleet serving
 //!
 //! The single-chip story above scales out in [`serve`]: N mixed-QoS
@@ -65,6 +88,7 @@ pub mod report;
 pub mod runtime;
 pub mod energy;
 pub mod fusion;
+pub mod plan;
 pub mod serve;
 pub mod tile;
 pub mod traffic;

@@ -15,7 +15,9 @@ use super::Precision;
 /// Cost of one layer at a concrete resolution.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LayerCost {
+    /// Parameter count.
     pub params: u64,
+    /// MAC operations at the queried resolution.
     pub macs: u64,
     /// Feature bytes read from DRAM in layer-by-layer execution.
     pub feat_in_bytes: u64,
@@ -27,6 +29,7 @@ pub struct LayerCost {
 }
 
 impl LayerCost {
+    /// Feature bytes in + out.
     pub fn feat_io(&self) -> u64 {
         self.feat_in_bytes + self.feat_out_bytes
     }
@@ -35,22 +38,30 @@ impl LayerCost {
 /// Whole-network cost summary.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NetworkCost {
+    /// Total parameters.
     pub params: u64,
+    /// Total MACs at the queried resolution.
     pub macs: u64,
+    /// Total layer-by-layer feature DRAM bytes.
     pub feat_io_bytes: u64,
+    /// Total weight bytes.
     pub weight_bytes: u64,
 }
 
 impl NetworkCost {
+    /// FLOPs = 2 x MACs.
     pub fn flops(&self) -> u64 {
         2 * self.macs
     }
+    /// FLOPs in billions.
     pub fn gflops(&self) -> f64 {
         self.flops() as f64 / 1e9
     }
+    /// Parameters in millions.
     pub fn params_m(&self) -> f64 {
         self.params as f64 / 1e6
     }
+    /// Feature I/O in MB.
     pub fn feat_io_mb(&self) -> f64 {
         self.feat_io_bytes as f64 / 1e6
     }

@@ -49,6 +49,7 @@ pub enum LayerKind {
 pub struct Layer {
     /// Human-readable name, unique within a network (e.g. `"g3.b1.dw"`).
     pub name: String,
+    /// The operator.
     pub kind: LayerKind,
     /// Input channels (for `Concat` this is the *combined* channel count).
     pub c_in: u32,
@@ -57,6 +58,7 @@ pub struct Layer {
     /// Whether a BatchNorm (with learnable scale gamma) follows — the gamma
     /// is what RCNet's L1-regularized pruning acts on (§II-C eq. 2).
     pub bn: bool,
+    /// Activation applied after the layer (and BN).
     pub act: Act,
     /// If `Some(i)`, this layer reads the *output of layer i* instead of the
     /// previous layer (a branch: YOLOv2 passthrough squeeze, ResNet
@@ -65,6 +67,7 @@ pub struct Layer {
 }
 
 impl Layer {
+    /// Dense `k x k` convolution with BN.
     pub fn conv(name: &str, c_in: u32, c_out: u32, k: u32, s: u32, act: Act) -> Self {
         Layer {
             name: name.into(),
@@ -77,6 +80,7 @@ impl Layer {
         }
     }
 
+    /// Atrous (dilated) `k x k` convolution with BN, stride 1.
     pub fn atrous(name: &str, c_in: u32, c_out: u32, k: u32, d: u32, act: Act) -> Self {
         Layer {
             name: name.into(),
@@ -89,6 +93,7 @@ impl Layer {
         }
     }
 
+    /// Depthwise 3x3 convolution with BN.
     pub fn dw(name: &str, c: u32, s: u32, act: Act) -> Self {
         Layer {
             name: name.into(),
@@ -101,6 +106,7 @@ impl Layer {
         }
     }
 
+    /// Pointwise (1x1) convolution with BN, stride 1.
     pub fn pw(name: &str, c_in: u32, c_out: u32, act: Act) -> Self {
         Layer {
             name: name.into(),
@@ -113,6 +119,7 @@ impl Layer {
         }
     }
 
+    /// Max pooling `k x k` at stride `s`.
     pub fn maxpool(name: &str, c: u32, k: u32, s: u32) -> Self {
         Layer {
             name: name.into(),

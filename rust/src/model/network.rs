@@ -18,24 +18,33 @@ pub enum SpanKind {
 /// Inclusive span `[start, end]` over layer indices.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Span {
+    /// Edge semantics (residual add vs concat).
     pub kind: SpanKind,
+    /// Source layer index.
     pub start: usize,
+    /// Destination layer index.
     pub end: usize,
 }
 
 /// Per-layer spatial shapes for a given network input resolution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LayerShape {
+    /// Input height.
     pub h_in: u32,
+    /// Input width.
     pub w_in: u32,
+    /// Output height.
     pub h_out: u32,
+    /// Output width.
     pub w_out: u32,
 }
 
 impl LayerShape {
+    /// Input pixels (h x w).
     pub fn in_px(&self) -> u64 {
         self.h_in as u64 * self.w_in as u64
     }
+    /// Output pixels (h x w).
     pub fn out_px(&self) -> u64 {
         self.h_out as u64 * self.w_out as u64
     }
@@ -44,17 +53,22 @@ impl LayerShape {
 /// A network: input descriptor, flat layer list, span annotations.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Network {
+    /// Model name (e.g. "yolov2-converted").
     pub name: String,
     /// Input (height, width, channels). Height/width are the *nominal*
     /// resolution; all cost queries take an explicit resolution so one
     /// topology serves 416x416 / 1280x720 / 1920x1080 analyses.
     pub input_hw: (u32, u32),
+    /// Input channels (3 for RGB).
     pub c_in: u32,
+    /// The flat layer sequence.
     pub layers: Vec<Layer>,
+    /// Residual/concat edges over the layer sequence.
     pub spans: Vec<Span>,
 }
 
 impl Network {
+    /// An empty network with the given input descriptor.
     pub fn new(name: &str, input_hw: (u32, u32), c_in: u32) -> Self {
         Network {
             name: name.into(),
@@ -71,6 +85,7 @@ impl Network {
         self.layers.len() - 1
     }
 
+    /// Annotate a residual/concat edge over `[start, end]`.
     pub fn add_span(&mut self, kind: SpanKind, start: usize, end: usize) {
         debug_assert!(start <= end && end < self.layers.len());
         self.spans.push(Span { kind, start, end });
@@ -216,6 +231,57 @@ impl Network {
     pub fn weighted_layers(&self) -> usize {
         self.layers.iter().filter(|l| l.is_weighted()).count()
     }
+
+    /// Resolution-independent structural fingerprint (FNV-1a, 64-bit):
+    /// layer operators, channel counts, BN/activation flags, branch edges
+    /// and spans. Layer *names* and the nominal `input_hw` are
+    /// deliberately excluded — planning never reads either, so two
+    /// structurally identical networks hash alike regardless of naming,
+    /// and the plan cache keys resolution separately.
+    pub fn structural_hash(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn mix(mut h: u64, x: u64) -> u64 {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+            h
+        }
+        let mut h = FNV_OFFSET;
+        h = mix(h, self.c_in as u64);
+        h = mix(h, self.layers.len() as u64);
+        for l in &self.layers {
+            let (tag, a, b, c) = match l.kind {
+                LayerKind::Conv { k, s, d } => (1u64, k as u64, s as u64, d as u64),
+                LayerKind::DwConv { k, s } => (2, k as u64, s as u64, 0),
+                LayerKind::PwConv { s } => (3, s as u64, 0, 0),
+                LayerKind::MaxPool { k, s } => (4, k as u64, s as u64, 0),
+                LayerKind::GlobalAvgPool => (5, 0, 0, 0),
+                LayerKind::Dense => (6, 0, 0, 0),
+                LayerKind::Reorg { s } => (7, s as u64, 0, 0),
+                LayerKind::Concat => (8, 0, 0, 0),
+                LayerKind::Upsample { factor } => (9, factor as u64, 0, 0),
+            };
+            for v in [tag, a, b, c, l.c_in as u64, l.c_out as u64] {
+                h = mix(h, v);
+            }
+            h = mix(h, u64::from(l.bn));
+            h = mix(h, l.act as u64);
+            h = mix(h, l.branch_from.map_or(u64::MAX, |i| i as u64));
+        }
+        h = mix(h, self.spans.len() as u64);
+        for sp in &self.spans {
+            let kind = match sp.kind {
+                SpanKind::Residual => 1u64,
+                SpanKind::Concat => 2,
+            };
+            for v in [kind, sp.start as u64, sp.end as u64] {
+                h = mix(h, v);
+            }
+        }
+        h
+    }
 }
 
 #[cfg(test)]
@@ -279,6 +345,21 @@ mod tests {
         assert!(n.residual_span_of(2).is_some());
         assert!(n.residual_span_of(3).is_some());
         assert!(n.residual_span_of(1).is_none());
+    }
+
+    #[test]
+    fn structural_hash_ignores_resolution_but_not_structure() {
+        let a = tiny();
+        let mut b = tiny();
+        b.input_hw = (720, 1280); // nominal resolution is not structural
+        b.layers[0].name = "renamed".into(); // neither are layer names
+        assert_eq!(a.structural_hash(), b.structural_hash());
+        let mut c = tiny();
+        c.layers[0].c_out += 1;
+        assert_ne!(a.structural_hash(), c.structural_hash());
+        let mut d = tiny();
+        d.spans.clear();
+        assert_ne!(a.structural_hash(), d.structural_hash());
     }
 
     #[test]

@@ -27,6 +27,80 @@ pub use yolov2::{yolo_head_channels, yolov2, yolov2_converted};
 
 use super::{Act, Layer, Network, SpanKind};
 
+/// The three input resolutions (height, width) the paper evaluates at:
+/// 416x416 (VOC), 1280x720 (the headline HD30 point), 1920x1080.
+pub const PAPER_RESOLUTIONS: [(u32, u32); 3] = [(416, 416), (720, 1280), (1080, 1920)];
+
+/// Expected-plan fixture: one zoo model plus the envelope its fusion
+/// plans are validated against at every entry of [`PAPER_RESOLUTIONS`].
+///
+/// Consumed by the cross-model planner property tests
+/// (`tests/prop_planner.rs`), the `plan` CLI subcommand and
+/// `benches/planner.rs`, so all three agree on what "every zoo model at
+/// every paper resolution" means.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanFixture {
+    /// Stable fixture name (also accepted by `plan --net <name>`).
+    pub name: &'static str,
+    /// Build the model with the paper's class/anchor counts.
+    pub build: fn() -> Network,
+    /// Weakest acceptable layer-by-layer / fused *feature*-traffic
+    /// reduction of the traffic-optimal plan across the paper
+    /// resolutions. 1.0 means "no worse than layer-by-layer"; converted
+    /// models fuse deeply and must clear a higher bar than the unconverted
+    /// baselines, whose giant per-layer weights force near-singleton
+    /// groups.
+    pub min_feat_reduction: f64,
+}
+
+fn build_yolov2() -> Network {
+    yolov2(20, 5)
+}
+fn build_yolov2_converted() -> Network {
+    yolov2_converted(3, 5)
+}
+fn build_vgg16() -> Network {
+    vgg16(1000)
+}
+fn build_vgg16_converted() -> Network {
+    vgg16_converted(1000)
+}
+fn build_deeplabv3() -> Network {
+    deeplabv3(21)
+}
+fn build_deeplabv3_converted() -> Network {
+    deeplabv3_converted(21)
+}
+
+/// Every zoo model with its expected-plan envelope.
+pub fn plan_fixtures() -> Vec<PlanFixture> {
+    vec![
+        PlanFixture { name: "yolov2", build: build_yolov2, min_feat_reduction: 1.15 },
+        PlanFixture {
+            name: "yolov2-converted",
+            build: build_yolov2_converted,
+            min_feat_reduction: 1.3,
+        },
+        PlanFixture { name: "vgg16", build: build_vgg16, min_feat_reduction: 1.05 },
+        PlanFixture {
+            name: "vgg16-converted",
+            build: build_vgg16_converted,
+            min_feat_reduction: 1.3,
+        },
+        PlanFixture { name: "deeplabv3", build: build_deeplabv3, min_feat_reduction: 1.1 },
+        // The converted DeepLab fuses less than the other conversions:
+        // its 1024-wide ASPP pointwise layers exceed any buffer (their
+        // dw/pw pairs cannot merge, and layer-by-layer accounting already
+        // pairs them for free), and the fused schedule pays the 16x
+        // upsampled output map at the final group boundary.
+        PlanFixture {
+            name: "deeplabv3-converted",
+            build: build_deeplabv3_converted,
+            min_feat_reduction: 1.05,
+        },
+    ]
+}
+
 /// Append the paper's proposed block (Fig. 1b): depthwise 3x3 + pointwise
 /// 1x1, *without* the MobileNetv2 expansion pointwise, with a residual skip
 /// when the block preserves shape. Returns (first, last) layer indices.

@@ -1,0 +1,177 @@
+//! Memoizing plan cache.
+//!
+//! Planning is cheap but not free (the DP re-tiles O(U²) candidate groups
+//! at the target resolution), and the fleet simulator asks for the same
+//! handful of (model, resolution, chip) points over and over — every
+//! admitted 720p stream shares one plan, every 1080p stream another. The
+//! cache keys plans by *content*, not identity: the network key is
+//! [`Network::structural_hash`], so two structurally identical networks
+//! built independently hit the same entry, and a pruned/retuned network
+//! naturally misses.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::config::ChipConfig;
+use crate::fusion::FusionConfig;
+use crate::model::Network;
+
+use super::{Plan, Planner};
+
+/// Content-derived cache key for one planning request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// [`Network::structural_hash`] of the network.
+    pub net: u64,
+    /// Combined hash of the fusion config and chip config.
+    pub config: u64,
+    /// Input resolution (height, width).
+    pub hw: (u32, u32),
+    /// Strategy requested.
+    pub planner: Planner,
+}
+
+/// FNV-1a over a word stream (matches the style of
+/// [`Network::structural_hash`]).
+fn fnv(words: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+impl PlanKey {
+    /// Build the key for a planning request.
+    pub fn new(
+        net: &Network,
+        cfg: &FusionConfig,
+        chip: &ChipConfig,
+        hw: (u32, u32),
+        planner: Planner,
+    ) -> Self {
+        let config = fnv(&[
+            cfg.weight_buffer_bytes,
+            cfg.slack.to_bits(),
+            cfg.max_downsampling as u64,
+            u64::from(cfg.first_layer_exempt),
+            cfg.precision.act_bytes,
+            cfg.precision.weight_bytes,
+            chip.pe_blocks as u64,
+            chip.pe_inputs as u64,
+            chip.pe_weights as u64,
+            chip.clock_hz.to_bits(),
+            chip.weight_buffer_bytes,
+            chip.unified_half_bytes,
+            chip.banks as u64,
+            chip.precision.act_bytes,
+            chip.precision.weight_bytes,
+        ]);
+        PlanKey { net: net.structural_hash(), config, hw, planner }
+    }
+}
+
+/// Memoizing store of finished [`Plan`]s.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    map: HashMap<PlanKey, Rc<Plan>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlanCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The plan for (`net`, `cfg`, `chip`, `hw`, `planner`), computed on
+    /// first request and shared (cheaply, via `Rc`) thereafter.
+    pub fn plan(
+        &mut self,
+        net: &Network,
+        cfg: &FusionConfig,
+        chip: &ChipConfig,
+        hw: (u32, u32),
+        planner: Planner,
+    ) -> Rc<Plan> {
+        let key = PlanKey::new(net, cfg, chip, hw, planner);
+        if let Some(p) = self.map.get(&key) {
+            self.hits += 1;
+            return Rc::clone(p);
+        }
+        self.misses += 1;
+        let p = Rc::new(planner.plan(net, cfg, chip, hw));
+        self.map.insert(key, Rc::clone(&p));
+        p
+    }
+
+    /// Number of distinct plans held.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True if no plan has been computed yet.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Requests served from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Requests that had to compute a fresh plan.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::yolov2_converted;
+
+    #[test]
+    fn second_request_hits() {
+        let net = yolov2_converted(3, 5);
+        let cfg = FusionConfig::paper_default();
+        let chip = ChipConfig::paper_chip();
+        let mut cache = PlanCache::new();
+        let a = cache.plan(&net, &cfg, &chip, (416, 416), Planner::OptimalDp);
+        let b = cache.plan(&net, &cfg, &chip, (416, 416), Planner::OptimalDp);
+        assert_eq!(a, b);
+        assert_eq!(cache.len(), 1);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn resolution_planner_and_config_are_key_dimensions() {
+        let net = yolov2_converted(3, 5);
+        let cfg = FusionConfig::paper_default();
+        let chip = ChipConfig::paper_chip();
+        let mut cache = PlanCache::new();
+        cache.plan(&net, &cfg, &chip, (416, 416), Planner::OptimalDp);
+        cache.plan(&net, &cfg, &chip, (720, 1280), Planner::OptimalDp);
+        cache.plan(&net, &cfg, &chip, (416, 416), Planner::PaperGreedy);
+        let small = FusionConfig { slack: 0.0, ..cfg };
+        cache.plan(&net, &small, &chip, (416, 416), Planner::OptimalDp);
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.hits(), 0);
+    }
+
+    #[test]
+    fn structurally_equal_networks_share_an_entry() {
+        let a = yolov2_converted(3, 5);
+        let b = yolov2_converted(3, 5);
+        let cfg = FusionConfig::paper_default();
+        let chip = ChipConfig::paper_chip();
+        let mut cache = PlanCache::new();
+        cache.plan(&a, &cfg, &chip, (416, 416), Planner::OptimalDp);
+        cache.plan(&b, &cfg, &chip, (416, 416), Planner::OptimalDp);
+        assert_eq!((cache.len(), cache.hits()), (1, 1));
+    }
+}

@@ -1,0 +1,290 @@
+//! Exact dynamic-programming partitioner minimizing fused DRAM feature
+//! traffic.
+//!
+//! The paper's Algorithm 1 scans greedily from input to output and closes
+//! a group when the weight budget or downsampling bound trips — a fixed
+//! heuristic that is not traffic-optimal in general (HarDNet showed
+//! memory-traffic-aware *search* over layer graphs beats fixed rules).
+//! Because fusion groups are contiguous runs of [atomic
+//! units](crate::fusion::atomic_units) and the fused-schedule traffic of a
+//! partition decomposes into independent per-group terms (group input +
+//! group output + cross-group skip charges), the optimal grouping is a
+//! classic interval DP: `best[j] = min over i of best[i] + cost(units
+//! i..j)` over O(U²) candidate groups.
+//!
+//! A candidate group is *legal* when it satisfies the same constraints the
+//! greedy scan enforces — weight bytes within the grouping budget
+//! `(1+m)·B` and at most `max_downsampling` downsampling layers (first
+//! layer exempt, guideline 1) — **plus** one the greedy scan never checks:
+//! [`crate::tile::plan_group`] must succeed for the group at the target
+//! resolution, so tiling feasibility and partitioning are co-optimized
+//! instead of validated after the fact. A single-unit group is always
+//! legal (there is no way to split below a unit; the greedy scan emits the
+//! same degenerate singleton when a layer exceeds the buffer).
+//!
+//! The per-group cost model mirrors
+//! [`crate::traffic::TrafficModel::fused`] *exactly* — see
+//! [`partition_feat_bytes`], which the tests pin against the traffic
+//! model's own accounting. Weight traffic is schedule-invariant (each
+//! layer's weights stream in once per frame under every partition), so
+//! minimizing feature bytes minimizes total bytes.
+
+use crate::config::ChipConfig;
+use crate::fusion::{atomic_units, FusionConfig, FusionGroup};
+use crate::model::{Network, SpanKind};
+use crate::tile;
+
+/// Precomputed per-layer byte tables for the decomposed group cost.
+struct CostTables {
+    /// DRAM bytes of layer `i`'s input map (charged when `i` starts a group).
+    in_bytes: Vec<u64>,
+    /// DRAM bytes of layer `i`'s output map (charged when `i` ends a group).
+    out_bytes: Vec<u64>,
+    /// Skip edges as `(src, dst, reread_bytes)`: a Concat re-reads the
+    /// source's output map, a Residual re-reads the source's input map.
+    spans: Vec<(usize, usize, u64)>,
+}
+
+impl CostTables {
+    fn new(net: &Network, chip: &ChipConfig, hw: (u32, u32)) -> Self {
+        let shapes = net.shapes(hw);
+        let act = chip.precision.act_bytes;
+        let in_bytes: Vec<u64> = net
+            .layers
+            .iter()
+            .zip(&shapes)
+            .map(|(l, s)| s.in_px() * l.c_in as u64 * act)
+            .collect();
+        let out_bytes: Vec<u64> = net
+            .layers
+            .iter()
+            .zip(&shapes)
+            .map(|(l, s)| s.out_px() * l.c_out as u64 * act)
+            .collect();
+        let spans = net
+            .spans
+            .iter()
+            .map(|sp| {
+                let reread = match sp.kind {
+                    SpanKind::Concat => out_bytes[sp.start],
+                    SpanKind::Residual => in_bytes[sp.start],
+                };
+                (sp.start, sp.end, reread)
+            })
+            .collect();
+        CostTables { in_bytes, out_bytes, spans }
+    }
+
+    /// Fused DRAM feature bytes attributable to the group `[s, e]`:
+    /// group input + group output, plus — for every skip edge with exactly
+    /// one endpoint inside the group — the re-read (charged to the group
+    /// holding the destination) or the mid-group spill (charged to the
+    /// group holding a non-boundary source).
+    fn group_feat_bytes(&self, s: usize, e: usize) -> u64 {
+        let mut total = self.in_bytes[s] + self.out_bytes[e];
+        for &(src, dst, reread) in &self.spans {
+            // Skip edges always point forward (src <= dst), and groups are
+            // contiguous, so "different groups" means src < s or dst > e.
+            if dst >= s && dst <= e && src < s {
+                total += reread;
+            }
+            if src >= s && src < e && dst > e {
+                total += self.out_bytes[src];
+            }
+        }
+        total
+    }
+}
+
+/// Per-frame fused DRAM *feature* bytes of `groups` at resolution `hw`,
+/// computed with the same per-group decomposition the DP minimizes.
+///
+/// Identical to `TrafficModel::new(*chip).fused(net, groups, hw)
+/// .feat_bytes()` for any partition of the layer list — the property
+/// tests pin the two accountings against each other.
+pub fn partition_feat_bytes(
+    net: &Network,
+    groups: &[FusionGroup],
+    chip: &ChipConfig,
+    hw: (u32, u32),
+) -> u64 {
+    let tables = CostTables::new(net, chip, hw);
+    groups.iter().map(|g| tables.group_feat_bytes(g.start, g.end)).sum()
+}
+
+/// Exact DRAM-traffic-minimizing partition of `net` into fusion groups at
+/// resolution `hw`, subject to the grouping budget, the downsampling
+/// bound, and per-group tileability on `chip`.
+///
+/// Runs in O(U² · (spans + tile-planning)) over the U atomic units —
+/// single-digit milliseconds for every zoo model.
+pub fn optimal_partition(
+    net: &Network,
+    cfg: &FusionConfig,
+    chip: &ChipConfig,
+    hw: (u32, u32),
+) -> Vec<FusionGroup> {
+    let units = atomic_units(net);
+    let n = units.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let tables = CostTables::new(net, chip, hw);
+    let budget = cfg.grouping_budget();
+
+    // Prefix sums over layers: weight bytes and (exemption-aware)
+    // downsampling counts, for O(1) legality checks.
+    let mut weight_pre = vec![0u64; net.layers.len() + 1];
+    let mut ds_pre = vec![0u32; net.layers.len() + 1];
+    for (i, l) in net.layers.iter().enumerate() {
+        weight_pre[i + 1] = weight_pre[i] + l.params() * cfg.precision.weight_bytes;
+        let exempt = cfg.first_layer_exempt && i == 0;
+        ds_pre[i + 1] = ds_pre[i] + u32::from(l.is_downsampling() && !exempt);
+    }
+
+    // best[j]: minimal feature bytes partitioning units 0..j; parent[j]:
+    // the i achieving it (group = units i..j). Ties keep the smallest i
+    // (iteration order), so the result is deterministic.
+    let mut best = vec![u64::MAX; n + 1];
+    let mut parent = vec![0usize; n + 1];
+    best[0] = 0;
+    for j in 1..=n {
+        for i in 0..j {
+            if best[i] == u64::MAX {
+                continue;
+            }
+            let s = units[i].start;
+            let e = units[j - 1].end;
+            if j - i > 1 {
+                let w = weight_pre[e + 1] - weight_pre[s];
+                let ds = ds_pre[e + 1] - ds_pre[s];
+                if w > budget || ds > cfg.max_downsampling {
+                    continue;
+                }
+            }
+            // Cost-dominance first: only candidates that would improve
+            // best[j] pay for the (comparatively expensive) tile check.
+            let cost = best[i].saturating_add(tables.group_feat_bytes(s, e));
+            if cost >= best[j] {
+                continue;
+            }
+            if j - i > 1 {
+                let g = FusionGroup { start: s, end: e };
+                if tile::plan_group(net, &g, hw, chip).is_err() {
+                    continue;
+                }
+            }
+            best[j] = cost;
+            parent[j] = i;
+        }
+    }
+
+    // Reconstruct the arg-min partition (single-unit groups are always
+    // legal, so best[n] is always finite).
+    let mut bounds = Vec::new();
+    let mut j = n;
+    while j > 0 {
+        let i = parent[j];
+        bounds.push((i, j));
+        j = i;
+    }
+    bounds.reverse();
+    bounds
+        .into_iter()
+        .map(|(i, j)| FusionGroup { start: units[i].start, end: units[j - 1].end })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{vgg16, yolov2, yolov2_converted};
+    use crate::traffic::TrafficModel;
+
+    fn setup() -> (ChipConfig, FusionConfig) {
+        (ChipConfig::paper_chip(), FusionConfig::paper_default())
+    }
+
+    #[test]
+    fn dp_groups_tile_the_layer_list() {
+        let (chip, cfg) = setup();
+        let net = yolov2_converted(3, 5);
+        let groups = optimal_partition(&net, &cfg, &chip, (416, 416));
+        let mut expect = 0;
+        for g in &groups {
+            assert_eq!(g.start, expect, "gap/overlap at {g:?}");
+            assert!(g.end >= g.start);
+            expect = g.end + 1;
+        }
+        assert_eq!(expect, net.layers.len());
+    }
+
+    #[test]
+    fn decomposed_cost_matches_traffic_model() {
+        // The DP's internal accounting must agree with TrafficModel::fused
+        // for arbitrary partitions — here the greedy one, which exercises
+        // cross-group concat edges on the unconverted YOLOv2.
+        let (chip, cfg) = setup();
+        for net in [yolov2(20, 5), yolov2_converted(3, 5), vgg16(1000)] {
+            let groups = crate::fusion::partition(&net, &cfg);
+            let tm = TrafficModel::new(chip);
+            for hw in [(416, 416), (720, 1280)] {
+                assert_eq!(
+                    partition_feat_bytes(&net, &groups, &chip, hw),
+                    tm.fused(&net, &groups, hw).feat_bytes(),
+                    "{} at {hw:?}",
+                    net.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dp_beats_or_matches_greedy_on_yolo() {
+        let (chip, cfg) = setup();
+        let net = yolov2_converted(3, 5);
+        for hw in [(416, 416), (720, 1280), (1080, 1920)] {
+            let greedy = crate::fusion::partition(&net, &cfg);
+            let dp = optimal_partition(&net, &cfg, &chip, hw);
+            let g = partition_feat_bytes(&net, &greedy, &chip, hw);
+            let d = partition_feat_bytes(&net, &dp, &chip, hw);
+            assert!(d <= g, "dp {d} > greedy {g} at {hw:?}");
+        }
+    }
+
+    #[test]
+    fn dp_respects_weight_budget_on_multi_unit_groups() {
+        let (chip, cfg) = setup();
+        let net = yolov2(20, 5);
+        let units = atomic_units(&net);
+        let dp = optimal_partition(&net, &cfg, &chip, (416, 416));
+        for g in &dp {
+            let n_units = units
+                .iter()
+                .filter(|u| g.start <= u.start && u.end <= g.end)
+                .count();
+            if n_units > 1 {
+                let w = g.weight_bytes(&net, cfg.precision);
+                assert!(w <= cfg.grouping_budget(), "{g:?}: {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn dp_groups_are_tileable() {
+        let (chip, cfg) = setup();
+        let net = yolov2_converted(3, 5);
+        let units = atomic_units(&net);
+        for hw in [(416, 416), (1080, 1920)] {
+            for g in optimal_partition(&net, &cfg, &chip, hw) {
+                let n_units = units
+                    .iter()
+                    .filter(|u| g.start <= u.start && u.end <= g.end)
+                    .count();
+                if n_units > 1 {
+                    assert!(tile::plan_group(&net, &g, hw, &chip).is_ok(), "{g:?}");
+                }
+            }
+        }
+    }
+}

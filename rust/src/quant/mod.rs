@@ -7,6 +7,7 @@
 /// Quantization parameters for one tensor.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QuantParams {
+    /// Scale `s` such that `q = round(x / s)` with `|q| <= 127`.
     pub scale: f32,
 }
 

@@ -20,12 +20,16 @@ use crate::util::kb;
 /// Which paper table.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AblationTask {
+    /// Table I: YOLOv2 detection at 1920x960, 100 KB buffer.
     Yolov2,
+    /// Table II: DeepLabv3 segmentation at 513x513, 100 KB buffer.
     DeepLabV3,
+    /// Table III: VGG16 classification at 224x224, 200 KB buffer.
     Vgg16,
 }
 
 impl AblationTask {
+    /// Display title of the table.
     pub fn name(&self) -> &'static str {
         match self {
             AblationTask::Yolov2 => "RC-YOLOv2 (Table I)",
@@ -34,6 +38,7 @@ impl AblationTask {
         }
     }
 
+    /// Display string of the table's resolution/buffer setting.
     pub fn setting(&self) -> String {
         let (hw, b) = self.config();
         format!("{}x{}, B = {} KB", hw.1, hw.0, b / 1024)
@@ -70,11 +75,17 @@ impl AblationTask {
 /// One ablation row.
 #[derive(Debug, Clone)]
 pub struct AblationRow {
+    /// Variant label (baseline / conversion / fusion step).
     pub variant: String,
+    /// Accuracy proxy (see module docs — not a measured dataset score).
     pub accuracy: f64,
+    /// Counted GFLOPs at the table's resolution.
     pub gflops: f64,
+    /// Parameters in millions.
     pub params_m: f64,
+    /// Feature I/O in MB (single-count convention).
     pub feat_io_mb: f64,
+    /// Fusion-group count, when the variant fuses.
     pub groups: Option<usize>,
 }
 

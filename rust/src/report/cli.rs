@@ -4,6 +4,8 @@
 //! Subcommands:
 //! * `emit-spec`  — run the RCNet pipeline, write `artifacts/model_spec.json`
 //! * `traffic`    — traffic comparison at an operating point
+//! * `plan`       — greedy-vs-optimal fusion-plan comparison across the
+//!   paper resolutions (the [`crate::plan`] planners)
 //! * `simulate`   — DLA cycle simulation at an operating point
 //! * `fleet`      — multi-stream fleet serving over a chip pool with a
 //!   shared DRAM-bus budget (deterministic from a seed)
@@ -58,9 +60,12 @@ rcnet-dla — RCNet + fused-layer DLA reproduction (TVLSI'22)
 USAGE:
   rcnet-dla emit-spec [--profile scaled|hd] [--out PATH] [--gammas PATH]
   rcnet-dla traffic   [--res 416|hd|fullhd|ivs] [--spec PATH]
+  rcnet-dla plan      [--net rc|yolov2|yolov2-converted|vgg16|vgg16-converted|
+                       deeplabv3|deeplabv3-converted] [--res 416|hd|fullhd|all]
   rcnet-dla simulate  [--res 416|hd|fullhd|ivs] [--spec PATH]
   rcnet-dla fleet     [--streams N] [--chips N] [--bus-mbps MB] [--seconds S]
                       [--seed K] [--oversub F | --admit-all]
+                      [--planner greedy|optimal-dp]
   rcnet-dla serve     [--manifest artifacts/manifest.json] [--frames N]
   rcnet-dla ablation  [--net yolov2|deeplabv3|vgg16]
 ";
@@ -72,6 +77,7 @@ pub fn cli_main() -> Result<()> {
     match pos.first().map(|s| s.as_str()) {
         Some("emit-spec") => emit_spec(&flags),
         Some("traffic") => traffic(&flags),
+        Some("plan") => plan(&flags),
         Some("simulate") => simulate(&flags),
         Some("fleet") => fleet(&flags),
         Some("serve") => serve(&flags),
@@ -150,6 +156,81 @@ fn traffic(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+fn plan(flags: &HashMap<String, String>) -> Result<()> {
+    use crate::fusion::FusionConfig;
+    use crate::model::zoo;
+    use crate::plan::Planner;
+
+    // Resolve the network: the deployed RC-YOLOv2 ("rc", the default —
+    // honours --spec) or a zoo fixture by name.
+    let which = flags.get("net").map(|s| s.as_str()).unwrap_or("rc");
+    let (net, cfg) = if which == "rc" {
+        let (net, _spec_groups) = load_spec(flags)?;
+        // The deployed network is already pruned under the weight buffer,
+        // so replanning runs with zero grouping slack: every group fits B.
+        (net, FusionConfig { slack: 0.0, ..FusionConfig::paper_default() })
+    } else {
+        let fx = zoo::plan_fixtures()
+            .into_iter()
+            .find(|f| f.name == which)
+            .ok_or_else(|| anyhow::anyhow!("unknown --net {which} (see usage)"))?;
+        ((fx.build)(), FusionConfig::paper_default())
+    };
+
+    let resolutions: Vec<(u32, u32)> = match flags.get("res").map(|s| s.as_str()) {
+        None | Some("all") => zoo::PAPER_RESOLUTIONS.to_vec(),
+        Some(_) => vec![hw_of(flags)],
+    };
+
+    let chip = ChipConfig::paper_chip();
+    let tm = TrafficModel::paper_chip();
+    let mut t = crate::report::tables::TableBuilder::new(&format!(
+        "fusion plans — {} (greedy vs optimal-dp, 30 FPS)",
+        net.name
+    ))
+    .header(&[
+        "resolution",
+        "planner",
+        "groups",
+        "feat MB/frame",
+        "feat MB/s",
+        "total MB/s",
+        "reduction",
+        "vs greedy",
+    ]);
+    for hw in resolutions {
+        let lbl = tm.layer_by_layer(&net, hw).frame(30.0);
+        let mut greedy_feat = 0u64;
+        for planner in [Planner::PaperGreedy, Planner::OptimalDp] {
+            let p = planner.plan(&net, &cfg, &chip, hw);
+            let fus = tm.fused(&net, &p.groups, hw).frame(30.0);
+            let delta = if planner == Planner::PaperGreedy {
+                greedy_feat = p.feat_bytes;
+                "-".into()
+            } else if greedy_feat > 0 {
+                format!(
+                    "{:+.1}%",
+                    (p.feat_bytes as f64 / greedy_feat as f64 - 1.0) * 100.0
+                )
+            } else {
+                "-".into()
+            };
+            t.row(vec![
+                format!("{}x{}", hw.1, hw.0),
+                planner.name().into(),
+                p.groups.len().to_string(),
+                format!("{:.2}", p.feat_bytes as f64 / 1e6),
+                format!("{:.1}", p.feat_bytes as f64 * 30.0 / 1e6),
+                format!("{:.1}", fus.total_mb_s()),
+                format!("{:.1}x", lbl.total_mb_s() / fus.total_mb_s()),
+                delta,
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
 fn simulate(flags: &HashMap<String, String>) -> Result<()> {
     let (net, groups) = load_spec(flags)?;
     let hw = hw_of(flags);
@@ -221,6 +302,11 @@ fn fleet(flags: &HashMap<String, String>) -> Result<()> {
         seconds: flags.get("seconds").and_then(|s| s.parse().ok()).unwrap_or(d.seconds),
         seed: flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(d.seed),
         admission,
+        planner: match flags.get("planner") {
+            Some(s) => crate::plan::Planner::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown --planner {s} (greedy|optimal-dp)"))?,
+            None => d.planner,
+        },
         ..d
     };
     let report = run_fleet(&cfg)?;

@@ -24,6 +24,7 @@ pub enum PipelineProfile {
 }
 
 impl PipelineProfile {
+    /// The resolution (height, width) the profile lowers for.
     pub fn hw(&self) -> (u32, u32) {
         match self {
             PipelineProfile::Scaled => (96, 160),
@@ -31,6 +32,7 @@ impl PipelineProfile {
         }
     }
 
+    /// Parse a profile name ("scaled" / "hd").
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "scaled" => Some(PipelineProfile::Scaled),

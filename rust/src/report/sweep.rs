@@ -13,9 +13,13 @@ use crate::util::kb;
 /// One sweep sample.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
+    /// Weight-buffer size of this point (KB).
     pub buffer_kb: u64,
+    /// RCNet parameter target of this point.
     pub target_params: u64,
+    /// Resulting parameters in millions.
     pub params_m: f64,
+    /// Resulting fusion-group count.
     pub groups: usize,
     /// Fused feature traffic per frame (MB, write+read).
     pub feat_io_mb: f64,
@@ -23,7 +27,9 @@ pub struct SweepPoint {
     pub bandwidth_mb_s: f64,
     /// Accuracy proxy (same capacity model as the ablation tables).
     pub accuracy_proxy: f64,
+    /// Simulated frame latency (ms).
     pub latency_ms: f64,
+    /// Simulated frame rate.
     pub fps: f64,
 }
 

@@ -10,20 +10,24 @@ pub struct TableBuilder {
 }
 
 impl TableBuilder {
+    /// A table with the given title and no columns yet.
     pub fn new(title: &str) -> Self {
         TableBuilder { title: title.into(), ..Default::default() }
     }
 
+    /// Set the column headers (builder style).
     pub fn header(mut self, cols: &[&str]) -> Self {
         self.header = cols.iter().map(|s| s.to_string()).collect();
         self
     }
 
+    /// Append one row.
     pub fn row(&mut self, cols: Vec<String>) -> &mut Self {
         self.rows.push(cols);
         self
     }
 
+    /// Render the aligned table as plain text.
     pub fn render(&self) -> String {
         let ncol = self
             .header

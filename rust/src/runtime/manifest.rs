@@ -7,26 +7,36 @@ use crate::util::json::Json;
 /// Per-group artifact metadata.
 #[derive(Debug, Clone)]
 pub struct GroupMeta {
+    /// Group index (execution order).
     pub id: usize,
+    /// HLO artifact file name.
     pub file: String,
     /// (h, w, c)
     pub in_shape: (usize, usize, usize),
+    /// (h, w, c) of the group output.
     pub out_shape: (usize, usize, usize),
+    /// Tile count planned at lowering time, if tiled.
     pub tiles: Option<u32>,
+    /// Tile height planned at lowering time, if tiled.
     pub tile_h: Option<u32>,
 }
 
 /// The artifact manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Model name.
     pub name: String,
     /// (h, w) input resolution the artifacts were lowered for.
     pub input_hw: (usize, usize),
+    /// Detection class count.
     pub classes: usize,
     /// Normalized (w, h) anchors baked at training time.
     pub anchors: Vec<(f32, f32)>,
+    /// Per-group artifact metadata, in execution order.
     pub groups: Vec<GroupMeta>,
+    /// Whether trained parameters were baked in.
     pub trained: bool,
+    /// Whether fake-quantized weights were baked in.
     pub quantized: bool,
 }
 
@@ -39,6 +49,7 @@ fn shape3(j: &Json) -> Option<(usize, usize, usize)> {
 }
 
 impl Manifest {
+    /// Parse a manifest from its JSON document.
     pub fn parse(j: &Json) -> Result<Manifest> {
         let e = |m: &str| anyhow::anyhow!("manifest: missing {m}");
         let hw = j.get("input_hw").ok_or_else(|| e("input_hw"))?;
@@ -100,6 +111,7 @@ impl Manifest {
         })
     }
 
+    /// Read and parse a manifest file.
     pub fn load(path: &str) -> Result<Manifest> {
         let txt = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
         let j = Json::parse(&txt).map_err(|m| anyhow::anyhow!("parsing {path}: {m}"))?;

@@ -14,6 +14,7 @@ use anyhow::{Context, Result};
 
 /// A compiled fusion-group executable.
 pub struct GroupExecutable {
+    /// The group's artifact metadata.
     pub meta: GroupMeta,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -40,7 +41,9 @@ impl GroupExecutable {
 
 /// The loaded model: a PJRT client plus one executable per fusion group.
 pub struct Runtime {
+    /// The loaded manifest.
     pub manifest: Manifest,
+    /// One compiled executable per fusion group.
     pub groups: Vec<GroupExecutable>,
     client: xla::PjRtClient,
 }
@@ -79,6 +82,7 @@ impl Runtime {
         Ok(x)
     }
 
+    /// Name of the PJRT platform the client runs on (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

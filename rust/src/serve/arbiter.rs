@@ -19,6 +19,7 @@ pub struct BusArbiter {
 }
 
 impl BusArbiter {
+    /// An arbiter with `bus_mbps` MB/s of budget at a `tick_ms` tick.
     pub fn new(bus_mbps: f64, tick_ms: f64) -> Self {
         BusArbiter {
             budget_bytes_per_tick: bus_mbps * 1e6 * tick_ms / 1e3,

@@ -25,27 +25,34 @@ use super::stream::FrameTask;
 /// A frame being executed by a chip.
 #[derive(Debug)]
 pub struct InFlight {
+    /// The frame being executed.
     pub task: FrameTask,
+    /// Compute ticks still owed.
     pub remaining_compute_ticks: u64,
+    /// DRAM bytes still to transfer.
     pub remaining_bytes: f64,
 }
 
 /// One simulated DLA chip plus its bounded dispatch queue.
 #[derive(Debug)]
 pub struct ChipWorker {
+    /// The chip's design point.
     pub chip: ChipConfig,
     tx: SyncSender<FrameTask>,
     rx: Receiver<FrameTask>,
     depth: usize,
     /// Frames sitting in the dispatch queue (sent, not yet started).
     pub queued: usize,
+    /// The frame currently on the chip, if any.
     pub active: Option<InFlight>,
     /// Ticks spent with a frame on the chip (computing or bus-stalled).
     pub busy_ticks: u64,
+    /// Frames finished so far.
     pub completed: u64,
 }
 
 impl ChipWorker {
+    /// A worker for one `chip` with a bounded queue of `queue_depth`.
     pub fn new(chip: ChipConfig, queue_depth: usize) -> Self {
         let (tx, rx) = sync_channel(queue_depth.max(1));
         ChipWorker {
@@ -126,6 +133,7 @@ impl ChipWorker {
 /// The chip pool plus the per-tick unit conversions.
 #[derive(Debug)]
 pub struct Fleet {
+    /// The workers, indexed by chip id.
     pub workers: Vec<ChipWorker>,
     /// Core cycles one chip executes per tick.
     pub cycles_per_tick: f64,
@@ -135,6 +143,7 @@ pub struct Fleet {
 }
 
 impl Fleet {
+    /// A pool of `chips` identical workers at a `tick_ms` virtual tick.
     pub fn new(chip: ChipConfig, chips: usize, queue_depth: usize, tick_ms: f64) -> Self {
         Fleet {
             workers: (0..chips).map(|_| ChipWorker::new(chip, queue_depth)).collect(),

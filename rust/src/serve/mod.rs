@@ -14,7 +14,10 @@
 //!
 //! * [`stream`] — QoS classes, stream operating points (416/720p/1080p at
 //!   15/30 FPS), per-frame cost derived from the counted chip models, and
-//!   the seeded frame source.
+//!   the seeded frame source. Costs are priced from the fusion plan the
+//!   configured [`crate::plan::Planner`] forms *at each stream's own
+//!   resolution* (memoized in a [`crate::plan::PlanCache`]), not from a
+//!   fixed build-time grouping.
 //! * [`arbiter`] — the shared bus: a per-tick byte budget water-filled
 //!   across in-flight transfers, plus utilization accounting.
 //! * [`scheduler`] — EDF dispatch, admission control, load shedding, and

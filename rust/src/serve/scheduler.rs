@@ -29,8 +29,9 @@
 
 use crate::config::ChipConfig;
 use crate::dla::simulate_fused;
-use crate::fusion::FusionGroup;
+use crate::fusion::FusionConfig;
 use crate::model::Network;
+use crate::plan::{PlanCache, Planner};
 use crate::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
 use crate::util::Rng;
 use crate::Result;
@@ -59,12 +60,14 @@ pub enum AdmissionPolicy {
 pub struct FleetConfig {
     /// Streams requested (the admitted set may be smaller).
     pub streams: usize,
+    /// Number of simulated DLA chips in the pool.
     pub chips: usize,
     /// Shared DRAM-bus budget in MB/s (the paper's single-chip HD30
     /// figure is 585).
     pub bus_mbps: f64,
     /// Simulated span in seconds.
     pub seconds: f64,
+    /// Seed for the stream mix and release phases.
     pub seed: u64,
     /// Virtual tick in milliseconds.
     pub tick_ms: f64,
@@ -72,8 +75,15 @@ pub struct FleetConfig {
     pub queue_depth: usize,
     /// Central ready-queue bound, as a multiple of the stream count.
     pub max_ready_per_stream: usize,
+    /// Stream admission policy.
     pub admission: AdmissionPolicy,
+    /// Design point of every chip in the pool.
     pub chip: ChipConfig,
+    /// Fusion-planning strategy for per-resolution frame costs: each
+    /// stream is priced from a plan formed *at its own resolution* (via
+    /// [`crate::plan::PlanCache`]) rather than from the build-time HD
+    /// grouping; [`Planner::OptimalDp`] makes that plan traffic-optimal.
+    pub planner: Planner,
 }
 
 impl Default for FleetConfig {
@@ -89,37 +99,48 @@ impl Default for FleetConfig {
             max_ready_per_stream: 4,
             admission: AdmissionPolicy::DemandLimit { oversub: 2.0 },
             chip: ChipConfig::paper_chip(),
+            planner: Planner::OptimalDp,
         }
     }
 }
 
 /// Per-frame cost of the deployed RC-YOLOv2 at each resolution in the
-/// mix, from the same counted models the single-chip reports use.
+/// mix, from the same counted models the single-chip reports use. Fusion
+/// groups come from the configured [`Planner`] at the *stream's*
+/// resolution (memoized in a [`PlanCache`]), so a 416 stream and a 1080p
+/// stream are each priced from the grouping that minimizes their own
+/// DRAM traffic. The deployed network is already pruned under the weight
+/// buffer, so replanning runs with zero grouping slack: every planned
+/// group truly fits the 96 KB buffer.
 struct CostModel {
     net: Network,
-    groups: Vec<FusionGroup>,
+    cfg: FusionConfig,
     chip: ChipConfig,
-    cache: Vec<((u32, u32), FrameCost)>,
+    planner: Planner,
+    plans: PlanCache,
+    costs: Vec<((u32, u32), FrameCost)>,
 }
 
 impl CostModel {
-    fn new(chip: ChipConfig) -> Result<Self> {
+    fn new(chip: ChipConfig, planner: Planner) -> Result<Self> {
         let spec = build_deployment_spec(PipelineProfile::Hd, 3, 5, None, 7);
-        let (net, groups) = spec_to_network(&spec)?;
-        Ok(CostModel { net, groups, chip, cache: Vec::new() })
+        let (net, _build_groups) = spec_to_network(&spec)?;
+        let cfg = FusionConfig { slack: 0.0, ..FusionConfig::paper_default() };
+        Ok(CostModel { net, cfg, chip, planner, plans: PlanCache::new(), costs: Vec::new() })
     }
 
     fn cost(&mut self, hw: (u32, u32)) -> Result<FrameCost> {
-        if let Some((_, c)) = self.cache.iter().find(|(k, _)| *k == hw) {
+        if let Some((_, c)) = self.costs.iter().find(|(k, _)| *k == hw) {
             return Ok(*c);
         }
-        let (sim, _) = simulate_fused(&self.net, &self.groups, hw, &self.chip)
+        let plan = self.plans.plan(&self.net, &self.cfg, &self.chip, hw, self.planner);
+        let (sim, _) = simulate_fused(&self.net, &plan.groups, hw, &self.chip)
             .map_err(|e| anyhow::anyhow!("tile planning at {hw:?}: {e:?}"))?;
         let c = FrameCost {
             compute_cycles: sim.total_cycles,
             dram_bytes: sim.total_dram_bytes(),
         };
-        self.cache.push((hw, c));
+        self.costs.push((hw, c));
         Ok(c)
     }
 }
@@ -169,7 +190,7 @@ impl FleetSim {
     /// Admit (a subset of) `specs` and set up the pool. Costs come from
     /// the deployed network's counted models at each spec's resolution.
     pub fn new(cfg: &FleetConfig, specs: &[StreamSpec]) -> Result<FleetSim> {
-        let mut costs = CostModel::new(cfg.chip)?;
+        let mut costs = CostModel::new(cfg.chip, cfg.planner)?;
         let fleet = Fleet::new(cfg.chip, cfg.chips, cfg.queue_depth, cfg.tick_ms);
         let bus_capacity = cfg.bus_mbps * 1e6;
         let compute_capacity = fleet.compute_cycles_per_s();

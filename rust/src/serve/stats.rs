@@ -24,6 +24,7 @@ fn ratio(num: u64, den: u64) -> f64 {
 /// Serving statistics for one admitted stream.
 #[derive(Debug, Clone)]
 pub struct StreamStats {
+    /// The stream's operating point.
     pub spec: StreamSpec,
     /// Latency series + deadline misses of the *completed* frames.
     pub metrics: Metrics,
@@ -34,6 +35,7 @@ pub struct StreamStats {
 }
 
 impl StreamStats {
+    /// Fresh (all-zero) stats for one stream.
     pub fn new(spec: StreamSpec) -> Self {
         StreamStats { spec, metrics: Metrics::default(), released: 0, shed: 0 }
     }
@@ -46,18 +48,22 @@ impl StreamStats {
         );
     }
 
+    /// Frames that finished execution (timely or late).
     pub fn completed(&self) -> u64 {
         self.metrics.frames as u64
     }
 
+    /// Completed frames that finished after their deadline.
     pub fn missed(&self) -> u64 {
         self.metrics.deadline_misses as u64
     }
 
+    /// Median completion latency in ms.
     pub fn p50_ms(&self) -> f64 {
         percentile(&self.metrics.latency_ms, 50.0)
     }
 
+    /// 99th-percentile completion latency in ms.
     pub fn p99_ms(&self) -> f64 {
         percentile(&self.metrics.latency_ms, 99.0)
     }
@@ -76,10 +82,13 @@ impl StreamStats {
 /// Result of one fleet simulation.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
+    /// Per-admitted-stream statistics.
     pub per_stream: Vec<StreamStats>,
     /// Streams refused at admission control.
     pub rejected: usize,
+    /// Chips in the pool.
     pub chips: usize,
+    /// Shared DRAM-bus budget in MB/s.
     pub bus_mbps: f64,
     /// Granted bus bytes over offered bus capacity.
     pub bus_utilization: f64,
@@ -90,26 +99,32 @@ pub struct FleetReport {
 }
 
 impl FleetReport {
+    /// Frames released across all streams.
     pub fn released(&self) -> u64 {
         self.per_stream.iter().map(|s| s.released).sum()
     }
 
+    /// Frames completed across all streams.
     pub fn completed(&self) -> u64 {
         self.per_stream.iter().map(|s| s.completed()).sum()
     }
 
+    /// Deadline misses across all streams.
     pub fn missed(&self) -> u64 {
         self.per_stream.iter().map(|s| s.missed()).sum()
     }
 
+    /// Frames shed (dropped unexecuted) across all streams.
     pub fn shed(&self) -> u64 {
         self.per_stream.iter().map(|s| s.shed).sum()
     }
 
+    /// Fleet-wide deadline misses over released frames.
     pub fn miss_rate(&self) -> f64 {
         ratio(self.missed(), self.released())
     }
 
+    /// Fleet-wide shed frames over released frames.
     pub fn shed_rate(&self) -> f64 {
         ratio(self.shed(), self.released())
     }

@@ -14,12 +14,16 @@ use crate::util::Rng;
 /// `Gold` also wins EDF ties.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum QosClass {
+    /// Best-effort tier: first to shed.
     Bronze,
+    /// Standard tier.
     Silver,
+    /// Premium tier: last to shed, wins EDF ties.
     Gold,
 }
 
 impl QosClass {
+    /// Lower-case display name.
     pub fn name(self) -> &'static str {
         match self {
             QosClass::Bronze => "bronze",
@@ -37,6 +41,7 @@ pub struct StreamSpec {
     pub hw: (u32, u32),
     /// Frame rate the camera produces (15 or 30 FPS in the mixes).
     pub target_fps: f64,
+    /// Quality-of-service tier.
     pub qos: QosClass,
 }
 
@@ -105,18 +110,24 @@ pub struct FrameTask {
     pub release_ms: f64,
     /// Absolute deadline (ms): release + the stream's relative deadline.
     pub deadline_ms: f64,
+    /// Per-frame execution cost.
     pub cost: FrameCost,
+    /// QoS tier inherited from the stream.
     pub qos: QosClass,
 }
 
 /// Live per-stream state inside the simulator.
 #[derive(Debug, Clone)]
 pub struct Stream {
+    /// Index in the admitted set.
     pub id: usize,
+    /// Operating point.
     pub spec: StreamSpec,
+    /// Per-frame cost at the stream's resolution.
     pub cost: FrameCost,
     /// Virtual time (ms) of the next frame release.
     pub next_release_ms: f64,
+    /// Frames released so far.
     pub frames_released: u64,
 }
 

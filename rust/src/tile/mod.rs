@@ -41,6 +41,20 @@ pub enum TileError {
 /// fitting `chip.unified_half_bytes` (ping-pong: input in one half, output
 /// in the other), and is aligned down to a multiple of the group's total
 /// downsampling factor so tile boundaries land on whole output rows.
+///
+/// ```
+/// use rcnet_dla::config::ChipConfig;
+/// use rcnet_dla::fusion::{partition, FusionConfig};
+/// use rcnet_dla::model::zoo;
+/// use rcnet_dla::tile::plan_group;
+///
+/// let net = zoo::yolov2_converted(3, 5);
+/// let groups = partition(&net, &FusionConfig::paper_default());
+/// let chip = ChipConfig::paper_chip();
+/// let t = plan_group(&net, &groups[0], (720, 1280), &chip).unwrap();
+/// assert!(t.tiles >= 1);
+/// assert!(t.max_slab_bytes <= chip.unified_half_bytes);
+/// ```
 pub fn plan_group(
     net: &Network,
     group: &FusionGroup,

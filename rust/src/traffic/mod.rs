@@ -25,14 +25,17 @@ use crate::model::{layer_costs, Network, SpanKind};
 /// Traffic model bound to a chip configuration (precision matters).
 #[derive(Debug, Clone, Copy)]
 pub struct TrafficModel {
+    /// The chip whose precision/buffers the accounting assumes.
     pub chip: ChipConfig,
 }
 
 impl TrafficModel {
+    /// Traffic model at the fabricated chip's design point.
     pub fn paper_chip() -> Self {
         TrafficModel { chip: ChipConfig::paper_chip() }
     }
 
+    /// Traffic model for an arbitrary chip configuration.
     pub fn new(chip: ChipConfig) -> Self {
         TrafficModel { chip }
     }

@@ -4,18 +4,24 @@
 /// Per-layer external traffic.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerTraffic {
+    /// Layer name.
     pub name: String,
     /// Output channels (Fig. 12 plots channels alongside traffic).
     pub c_out: u32,
+    /// Feature bytes read from DRAM, attributed to this layer.
     pub feat_in_bytes: u64,
+    /// Feature bytes written to DRAM, attributed to this layer.
     pub feat_out_bytes: u64,
+    /// Weight bytes streamed from DRAM (once per frame).
     pub weight_bytes: u64,
 }
 
 impl LayerTraffic {
+    /// Features + weights.
     pub fn total(&self) -> u64 {
         self.feat_in_bytes + self.feat_out_bytes + self.weight_bytes
     }
+    /// Feature bytes only (in + out).
     pub fn feat(&self) -> u64 {
         self.feat_in_bytes + self.feat_out_bytes
     }
@@ -24,17 +30,22 @@ impl LayerTraffic {
 /// Whole-network traffic under one schedule.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TrafficReport {
+    /// Per-layer attribution, in layer order.
     pub per_layer: Vec<LayerTraffic>,
+    /// Schedule label ("layer-by-layer" or "group-fused").
     pub schedule: String,
 }
 
 impl TrafficReport {
+    /// Total feature bytes per frame.
     pub fn feat_bytes(&self) -> u64 {
         self.per_layer.iter().map(|l| l.feat()).sum()
     }
+    /// Total weight bytes per frame.
     pub fn weight_bytes(&self) -> u64 {
         self.per_layer.iter().map(|l| l.weight_bytes).sum()
     }
+    /// Total DRAM bytes per frame (features + weights).
     pub fn total_bytes(&self) -> u64 {
         self.feat_bytes() + self.weight_bytes()
     }
@@ -52,18 +63,24 @@ impl TrafficReport {
 /// rate attached).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FrameTraffic {
+    /// Feature bytes per frame.
     pub feat_bytes: u64,
+    /// Weight bytes per frame.
     pub weight_bytes: u64,
+    /// Frame rate the bandwidth figures assume.
     pub fps: f64,
 }
 
 impl FrameTraffic {
+    /// Total DRAM bytes per frame.
     pub fn total_bytes(&self) -> u64 {
         self.feat_bytes + self.weight_bytes
     }
+    /// Sustained DRAM bandwidth in MB/s at the attached frame rate.
     pub fn total_mb_s(&self) -> f64 {
         self.total_bytes() as f64 * self.fps / 1e6
     }
+    /// Feature megabytes per frame.
     pub fn feat_mb(&self) -> f64 {
         self.feat_bytes as f64 / 1e6
     }

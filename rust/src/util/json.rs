@@ -10,19 +10,27 @@ use std::fmt::Write as _;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (always stored as f64, like JavaScript).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys, so serialization is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// An empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Insert `key` into an object (no-op on non-objects); chainable.
     pub fn set(&mut self, key: &str, v: Json) -> &mut Self {
         if let Json::Obj(m) = self {
             m.insert(key.to_string(), v);
@@ -30,6 +38,7 @@ impl Json {
         self
     }
 
+    /// Object field lookup; `None` on non-objects or missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -37,6 +46,7 @@ impl Json {
         }
     }
 
+    /// Array element lookup; `None` on non-arrays or out of range.
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(i),
@@ -44,6 +54,7 @@ impl Json {
         }
     }
 
+    /// The value as f64 if it is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -51,14 +62,17 @@ impl Json {
         }
     }
 
+    /// The value truncated to u64 if it is a number.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().map(|f| f as u64)
     }
 
+    /// The value truncated to usize if it is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
 
+    /// The value as a string slice if it is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -66,6 +80,7 @@ impl Json {
         }
     }
 
+    /// The value as bool if it is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -73,6 +88,7 @@ impl Json {
         }
     }
 
+    /// The value as a slice if it is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),

@@ -9,6 +9,8 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// A generator seeded at `seed` (same seed, same sequence — here and
+    /// in the python mirror).
     pub fn new(seed: u64) -> Self {
         Rng { state: seed }
     }
