@@ -13,7 +13,7 @@ fn main() {
     let chip = ChipConfig::paper_chip();
     let cfg = FusionConfig::paper_default();
     let net = zoo::yolov2_converted(3, 5);
-    let mut cache = PlanCache::new();
+    let cache = PlanCache::new();
 
     println!("{} — fused DRAM feature traffic per frame\n", net.name);
     for hw in zoo::PAPER_RESOLUTIONS {

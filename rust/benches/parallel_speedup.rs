@@ -1,0 +1,72 @@
+//! Parallel fleet engine — wall-clock speedup over the serial reference
+//! engine at the acceptance workload (64 chips, 1024 mixed-resolution
+//! streams), plus the scaling curve over worker counts. The two engines
+//! produce byte-identical statistics (checked here per run), so every
+//! speedup below is free of behavior drift.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use rcnet_dla::report::tables::TableBuilder;
+use rcnet_dla::serve::{
+    resolve_threads, run_fleet, AdmissionPolicy, FleetConfig, FleetReport,
+};
+
+fn cfg(threads: usize) -> FleetConfig {
+    FleetConfig {
+        streams: 1024,
+        chips: 64,
+        bus_mbps: 585.0 * 64.0,
+        seconds: 3.0,
+        seed: 1,
+        admission: AdmissionPolicy::AdmitAll,
+        threads,
+        ..FleetConfig::default()
+    }
+}
+
+fn timed_run(threads: usize) -> (FleetReport, f64) {
+    let t0 = Instant::now();
+    let r = run_fleet(&cfg(threads)).expect("fleet run");
+    (r, t0.elapsed().as_secs_f64() * 1e3)
+}
+
+fn main() {
+    let cores = resolve_threads(0);
+    println!(
+        "[bench] 64 chips x 1024 streams x 3 s virtual, {cores} cores available"
+    );
+
+    let (serial, serial_ms) = timed_run(1);
+    let mut t = TableBuilder::new("parallel fleet engine — wall time vs worker threads")
+        .header(&["workers", "wall (ms)", "speedup", "identical"]);
+    t.row(vec!["1 (serial)".into(), format!("{serial_ms:.0}"), "1.00x".into(), "-".into()]);
+    for threads in [2usize, 4, 8, 0] {
+        let workers = resolve_threads(threads);
+        if threads != 0 && workers > cores {
+            continue; // oversubscribing physical cores tells us nothing
+        }
+        let (r, ms) = timed_run(threads);
+        let same = r.stats_digest() == serial.stats_digest();
+        t.row(vec![
+            if threads == 0 { format!("{workers} (auto)") } else { format!("{workers}") },
+            format!("{ms:.0}"),
+            format!("{:.2}x", serial_ms / ms),
+            if same { "yes".into() } else { "DIVERGED".into() },
+        ]);
+        assert!(same, "parallel engine diverged from serial at {workers} workers");
+    }
+    println!("{}", t.render());
+
+    // The acceptance yardstick: >= 3x on an 8-core runner.
+    let (_, auto_ms) = timed_run(0);
+    common::compare("speedup at auto workers", 3.0, serial_ms / auto_ms, "x");
+    common::time_it("serial 64x1024 fleet run", 2, || {
+        let _ = run_fleet(&cfg(1));
+    });
+    common::time_it("parallel (auto) 64x1024 fleet run", 2, || {
+        let _ = run_fleet(&cfg(0));
+    });
+}

@@ -62,7 +62,7 @@ fn main() {
     common::time_it("optimal-dp plan (yolov2-converted @720p)", 20, || {
         let _ = Planner::OptimalDp.plan(&net, &cfg, &chip, (720, 1280));
     });
-    let mut cache = PlanCache::new();
+    let cache = PlanCache::new();
     cache.plan(&net, &cfg, &chip, (720, 1280), Planner::OptimalDp);
     common::time_it("warm PlanCache hit (same point)", 200, || {
         let _ = cache.plan(&net, &cfg, &chip, (720, 1280), Planner::OptimalDp);

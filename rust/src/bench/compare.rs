@@ -1,0 +1,285 @@
+//! Baseline comparison — the regression gate behind
+//! `bench --against <baseline> --tolerance <f>`.
+//!
+//! Measurements join on their stable workload id. Three things are
+//! checked per joined pair:
+//!
+//! 1. `wall_ms` may not grow by more than the tolerance (the perf gate
+//!    proper; wall time is machine-dependent, so baselines only make
+//!    sense against comparable runners — in CI, the committed baseline
+//!    regenerated on the same runner class).
+//! 2. Each gated deterministic metric may not move in its *worse*
+//!    direction by more than the tolerance. These are virtual-time
+//!    quantities, so genuine drift means the simulation's behavior
+//!    changed, not that the machine was busy.
+//! 3. Fingerprints, when both sides carry one, are compared exactly and
+//!    drift is *reported* (not gated): it flags a behavior change that
+//!    stayed inside every metric tolerance.
+//!
+//! Ids present on only one side are reported but never gate — a
+//! `--quick` run against a full baseline (or a grown workload catalog)
+//! is a normal situation, and a bootstrap baseline (committed with
+//! `"bootstrap": true` and no measurements) passes trivially.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+use super::{BenchReport, Direction};
+
+/// One gated value that moved past tolerance in its worse direction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Regression {
+    /// Workload id.
+    pub id: String,
+    /// `"wall_ms"` or the deterministic metric's name.
+    pub metric: String,
+    /// Baseline value.
+    pub baseline: f64,
+    /// Current value.
+    pub current: f64,
+    /// `current / baseline` (negative baselines never occur in practice).
+    pub ratio: f64,
+}
+
+/// Result of comparing a current report against a baseline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CompareOutcome {
+    /// Workload ids present in both reports.
+    pub compared: usize,
+    /// Ids only in the current report (new workloads; informational).
+    pub new_ids: Vec<String>,
+    /// Ids only in the baseline (vanished workloads; informational).
+    pub missing_ids: Vec<String>,
+    /// Ids whose fingerprints differ (behavior drift; informational).
+    pub fingerprint_drift: Vec<String>,
+    /// Gated values that regressed past tolerance.
+    pub regressions: Vec<Regression>,
+}
+
+impl CompareOutcome {
+    /// True when no gated value regressed.
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+
+    /// Human-readable summary (one block, stable ordering).
+    pub fn render(&self, kind: &str, tolerance: f64) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "bench[{kind}] vs baseline: {} compared, {} new, {} missing, tolerance {:.0}%",
+            self.compared,
+            self.new_ids.len(),
+            self.missing_ids.len(),
+            tolerance * 100.0
+        );
+        for d in &self.fingerprint_drift {
+            let _ = writeln!(s, "  fingerprint drift (behavior changed): {d}");
+        }
+        for r in &self.regressions {
+            let _ = writeln!(
+                s,
+                "  REGRESSION {} {}: {:.4} -> {:.4} (x{:.2})",
+                r.id, r.metric, r.baseline, r.current, r.ratio
+            );
+        }
+        let _ = write!(
+            s,
+            "  {}",
+            if self.passed() { "PASS" } else { "FAIL" }
+        );
+        s
+    }
+}
+
+/// Relative worsening of `current` vs `baseline` in the gated
+/// direction; 0 when the value held or improved. The denominator floor
+/// keeps a 0-valued baseline (e.g. a 0% miss rate) gateable: any
+/// nonzero worsening against a zero baseline is infinite-relative and
+/// must trip the gate.
+fn worsening(baseline: f64, current: f64, better: Direction) -> f64 {
+    let worse_by = match better {
+        Direction::Lower => current - baseline,
+        Direction::Higher => baseline - current,
+        Direction::Info => return 0.0,
+    };
+    if worse_by <= 0.0 {
+        0.0
+    } else {
+        worse_by / baseline.abs().max(1e-12)
+    }
+}
+
+/// Compare `current` against `baseline` under `tolerance` (a relative
+/// fraction, e.g. `0.15`). See the module docs for exactly what gates.
+pub fn compare_reports(
+    baseline: &BenchReport,
+    current: &BenchReport,
+    tolerance: f64,
+) -> CompareOutcome {
+    let mut out = CompareOutcome::default();
+    let base_by_id: HashMap<&str, usize> = baseline
+        .measurements
+        .iter()
+        .enumerate()
+        .map(|(i, m)| (m.id.as_str(), i))
+        .collect();
+
+    for cur in &current.measurements {
+        let Some(&bi) = base_by_id.get(cur.id.as_str()) else {
+            out.new_ids.push(cur.id.clone());
+            continue;
+        };
+        let base = &baseline.measurements[bi];
+        out.compared += 1;
+
+        if worsening(base.wall_ms, cur.wall_ms, Direction::Lower) > tolerance {
+            out.regressions.push(Regression {
+                id: cur.id.clone(),
+                metric: "wall_ms".into(),
+                baseline: base.wall_ms,
+                current: cur.wall_ms,
+                ratio: cur.wall_ms / base.wall_ms.abs().max(1e-12),
+            });
+        }
+        for m in &cur.metrics {
+            let Some(bm) = base.metrics.iter().find(|b| b.name == m.name) else { continue };
+            if worsening(bm.value, m.value, m.better) > tolerance {
+                out.regressions.push(Regression {
+                    id: cur.id.clone(),
+                    metric: m.name.clone(),
+                    baseline: bm.value,
+                    current: m.value,
+                    ratio: m.value / bm.value.abs().max(1e-12),
+                });
+            }
+        }
+        if !base.fingerprint.is_empty()
+            && !cur.fingerprint.is_empty()
+            && base.fingerprint != cur.fingerprint
+        {
+            out.fingerprint_drift.push(cur.id.clone());
+        }
+    }
+    for base in &baseline.measurements {
+        if !current.measurements.iter().any(|c| c.id == base.id) {
+            out.missing_ids.push(base.id.clone());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::{Measurement, Metric};
+
+    fn report(wall_ms: f64, p99: f64, fps: f64, fp: &str) -> BenchReport {
+        BenchReport {
+            kind: "fleet".into(),
+            quick: true,
+            bootstrap: false,
+            measurements: vec![Measurement {
+                id: "fleet/chips=8/streams=64".into(),
+                wall_ms,
+                fingerprint: fp.into(),
+                metrics: vec![
+                    Metric { name: "p99_ms".into(), value: p99, better: Direction::Lower },
+                    Metric {
+                        name: "virtual_throughput_fps".into(),
+                        value: fps,
+                        better: Direction::Higher,
+                    },
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn identical_reports_pass() {
+        let a = report(100.0, 40.0, 900.0, "0xabc");
+        let out = compare_reports(&a, &a.clone(), 0.15);
+        assert!(out.passed());
+        assert_eq!(out.compared, 1);
+        assert!(out.fingerprint_drift.is_empty());
+    }
+
+    #[test]
+    fn injected_2x_slowdown_is_a_regression() {
+        let base = report(100.0, 40.0, 900.0, "0xabc");
+        let cur = report(200.0, 40.0, 900.0, "0xabc");
+        let out = compare_reports(&base, &cur, 0.15);
+        assert!(!out.passed());
+        assert_eq!(out.regressions.len(), 1);
+        assert_eq!(out.regressions[0].metric, "wall_ms");
+        assert!((out.regressions[0].ratio - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speedup_and_small_jitter_pass() {
+        let base = report(100.0, 40.0, 900.0, "0xabc");
+        assert!(compare_reports(&base, &report(50.0, 40.0, 900.0, "0xabc"), 0.15).passed());
+        assert!(compare_reports(&base, &report(110.0, 40.0, 900.0, "0xabc"), 0.15).passed());
+    }
+
+    #[test]
+    fn gated_metrics_regress_in_their_worse_direction_only() {
+        let base = report(100.0, 40.0, 900.0, "0xabc");
+        // p99 +50% (lower-better) trips; throughput +50% (higher) passes.
+        let out = compare_reports(&base, &report(100.0, 60.0, 1350.0, "0xabc"), 0.15);
+        assert_eq!(out.regressions.len(), 1);
+        assert_eq!(out.regressions[0].metric, "p99_ms");
+        // Throughput -50% trips; p99 -50% passes.
+        let out = compare_reports(&base, &report(100.0, 20.0, 450.0, "0xabc"), 0.15);
+        assert_eq!(out.regressions.len(), 1);
+        assert_eq!(out.regressions[0].metric, "virtual_throughput_fps");
+    }
+
+    #[test]
+    fn zero_baseline_metric_still_gates() {
+        let mut base = report(100.0, 40.0, 900.0, "");
+        base.measurements[0].metrics.push(Metric {
+            name: "miss_rate".into(),
+            value: 0.0,
+            better: Direction::Lower,
+        });
+        let mut cur = base.clone();
+        cur.measurements[0].metrics[2].value = 0.01;
+        assert!(!compare_reports(&base, &cur, 0.15).passed());
+    }
+
+    #[test]
+    fn fingerprint_drift_reported_but_not_gated() {
+        let base = report(100.0, 40.0, 900.0, "0xaaa");
+        let out = compare_reports(&base, &report(100.0, 40.0, 900.0, "0xbbb"), 0.15);
+        assert!(out.passed());
+        assert_eq!(out.fingerprint_drift.len(), 1);
+    }
+
+    #[test]
+    fn bootstrap_baseline_passes_everything() {
+        let empty = BenchReport {
+            kind: "fleet".into(),
+            quick: true,
+            bootstrap: true,
+            measurements: Vec::new(),
+        };
+        let out = compare_reports(&empty, &report(1e9, 1e9, 0.0, "0xabc"), 0.15);
+        assert!(out.passed());
+        assert_eq!(out.compared, 0);
+        assert_eq!(out.new_ids.len(), 1);
+    }
+
+    #[test]
+    fn new_and_missing_ids_are_informational() {
+        let base = report(100.0, 40.0, 900.0, "");
+        let mut cur = base.clone();
+        cur.measurements[0].id = "fleet/renamed".into();
+        let out = compare_reports(&base, &cur, 0.15);
+        assert!(out.passed());
+        assert_eq!(out.new_ids, vec!["fleet/renamed".to_string()]);
+        assert_eq!(out.missing_ids, vec!["fleet/chips=8/streams=64".to_string()]);
+        let text = out.render("fleet", 0.15);
+        assert!(text.contains("PASS"));
+    }
+}

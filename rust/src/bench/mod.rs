@@ -1,0 +1,336 @@
+//! Deterministic, machine-readable performance benchmarks.
+//!
+//! The paper's argument is throughput-per-byte; this subsystem makes the
+//! repo's own throughput a first-class, regression-gated artifact. It
+//! runs standardized workloads — fleet scaling over the parallel engine,
+//! planner DP-vs-greedy across the model zoo, fused vs layer-by-layer
+//! schedule simulation — and emits one JSON report per family
+//! (`BENCH_fleet.json`, `BENCH_planner.json`) that CI uploads and gates
+//! against the committed baselines at the repository root.
+//!
+//! Every measurement separates two kinds of numbers:
+//!
+//! * **wall-clock** (`wall_ms`) — machine-dependent, compared against a
+//!   baseline under a relative tolerance (the perf gate);
+//! * **virtual metrics** (throughput, p50/p99, miss/shed rates, feature
+//!   bytes, …) — *deterministic* for a given seed and code version, so
+//!   any drift beyond tolerance is a behavior change, not noise;
+//!
+//! plus a **fingerprint**: an FNV-1a digest of the workload config and
+//! its deterministic outputs. Fingerprint drift between baseline and
+//! current run flags silent behavior changes even when every gated
+//! metric stays inside tolerance.
+//!
+//! Format: see `docs/BENCHMARKS.md` for the JSON schema, the workload
+//! catalog, and exact reproduction commands. Driven by the `bench` CLI
+//! subcommand (`rcnet-dla bench [--quick] [--against PATH]`).
+
+mod compare;
+mod workloads;
+
+pub use compare::{compare_reports, CompareOutcome, Regression};
+pub use workloads::{fleet_report, planner_report, BenchProfile};
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::util::fnv1a;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Which way a metric is allowed to move before it counts as a
+/// regression.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Larger is better (throughput, speedup): gated on decreases.
+    Higher,
+    /// Smaller is better (latency, traffic, miss rate): gated on
+    /// increases.
+    Lower,
+    /// Recorded for context, never gated (e.g. group counts, where a
+    /// legitimate improvement may move either way).
+    Info,
+}
+
+impl Direction {
+    /// Stable serialized name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Direction::Higher => "higher",
+            Direction::Lower => "lower",
+            Direction::Info => "info",
+        }
+    }
+
+    /// Parse a serialized name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "higher" => Some(Direction::Higher),
+            "lower" => Some(Direction::Lower),
+            "info" => Some(Direction::Info),
+            _ => None,
+        }
+    }
+}
+
+/// One deterministic (virtual-time) metric of a measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metric {
+    /// Stable metric name within the measurement.
+    pub name: String,
+    /// The value.
+    pub value: f64,
+    /// Gating direction.
+    pub better: Direction,
+}
+
+/// One benchmarked workload: a stable id, its wall time, its
+/// deterministic metrics and its fingerprint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Measurement {
+    /// Stable workload id (`family/key=value/...`) — the join key for
+    /// baseline comparison. Must not encode anything machine-dependent.
+    pub id: String,
+    /// Measured wall-clock time in milliseconds (machine-dependent).
+    pub wall_ms: f64,
+    /// Hex FNV-1a digest of the workload config + deterministic outputs;
+    /// empty when a workload has no meaningful digest.
+    pub fingerprint: String,
+    /// Deterministic metrics.
+    pub metrics: Vec<Metric>,
+}
+
+impl Measurement {
+    /// Look up a metric value by name.
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|m| m.name == name).map(|m| m.value)
+    }
+}
+
+/// A full benchmark report: one workload family, one JSON file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    /// Report family (`"fleet"` or `"planner"`).
+    pub kind: String,
+    /// True when produced by the reduced `--quick` CI profile.
+    pub quick: bool,
+    /// True for a committed seed baseline that carries no measurements
+    /// yet: comparisons against it trivially pass and the first real run
+    /// replaces it.
+    pub bootstrap: bool,
+    /// The measurements, in workload-catalog order.
+    pub measurements: Vec<Measurement>,
+}
+
+impl BenchReport {
+    /// Schema tag embedded in (and required from) every report file.
+    pub const SCHEMA: &'static str = "rcnet-dla/bench/v1";
+
+    /// An empty report of the given family.
+    pub fn new(kind: &str, quick: bool) -> Self {
+        BenchReport { kind: kind.into(), quick, bootstrap: false, measurements: Vec::new() }
+    }
+
+    /// Serialize to the on-disk JSON document.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("schema", Json::Str(Self::SCHEMA.into()))
+            .set("kind", Json::Str(self.kind.clone()))
+            .set("quick", Json::Bool(self.quick))
+            .set("bootstrap", Json::Bool(self.bootstrap));
+        let ms = self
+            .measurements
+            .iter()
+            .map(|m| {
+                let mut mo = Json::obj();
+                mo.set("id", Json::Str(m.id.clone()))
+                    .set("wall_ms", Json::Num(m.wall_ms))
+                    .set("fingerprint", Json::Str(m.fingerprint.clone()));
+                let metrics = m
+                    .metrics
+                    .iter()
+                    .map(|x| {
+                        let mut xo = Json::obj();
+                        xo.set("name", Json::Str(x.name.clone()))
+                            .set("value", Json::Num(x.value))
+                            .set("better", Json::Str(x.better.name().into()));
+                        xo
+                    })
+                    .collect();
+                mo.set("metrics", Json::Arr(metrics));
+                mo
+            })
+            .collect();
+        o.set("measurements", Json::Arr(ms));
+        o
+    }
+
+    /// Parse and schema-validate a report document.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
+        if schema != Self::SCHEMA {
+            anyhow::bail!("bench report schema {schema:?} != {:?}", Self::SCHEMA);
+        }
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("bench report missing \"kind\""))?
+            .to_string();
+        let quick = j.get("quick").and_then(Json::as_bool).unwrap_or(false);
+        let bootstrap = j.get("bootstrap").and_then(Json::as_bool).unwrap_or(false);
+        let mut measurements = Vec::new();
+        for m in j.get("measurements").and_then(Json::as_arr).unwrap_or(&[]) {
+            let id = m
+                .get("id")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("measurement missing \"id\""))?
+                .to_string();
+            let wall_ms = m
+                .get("wall_ms")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("measurement {id}: missing \"wall_ms\""))?;
+            let fingerprint =
+                m.get("fingerprint").and_then(Json::as_str).unwrap_or("").to_string();
+            let mut metrics = Vec::new();
+            for x in m.get("metrics").and_then(Json::as_arr).unwrap_or(&[]) {
+                let name = x
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("measurement {id}: metric missing name"))?
+                    .to_string();
+                let value = x
+                    .get("value")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow::anyhow!("measurement {id}: metric {name} not a number"))?;
+                let better = x
+                    .get("better")
+                    .and_then(Json::as_str)
+                    .and_then(Direction::parse)
+                    .ok_or_else(|| anyhow::anyhow!("measurement {id}: metric {name} bad direction"))?;
+                metrics.push(Metric { name, value, better });
+            }
+            measurements.push(Measurement { id, wall_ms, fingerprint, metrics });
+        }
+        Ok(BenchReport { kind, quick, bootstrap, measurements })
+    }
+
+    /// Load a report from disk.
+    pub fn load(path: &Path) -> Result<Self> {
+        let txt = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let j = Json::parse(&txt)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+
+    /// Write the report to disk (compact JSON + trailing newline).
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let mut txt = self.to_json().to_string();
+        txt.push('\n');
+        std::fs::write(path, txt)
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// Hex-format an FNV-1a digest of a word stream — the bench fingerprint
+/// primitive (`0x` + 16 hex digits).
+pub fn fingerprint_hex(words: impl IntoIterator<Item = u64>) -> String {
+    format!("{:#018x}", fnv1a(words))
+}
+
+/// Time one call of `f`; returns its result and the elapsed milliseconds.
+pub fn time_ms<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64() * 1e3)
+}
+
+/// Run `f` `iters` times (at least once) and return the last result with
+/// the *minimum* per-iteration milliseconds — the standard noise filter
+/// for sub-millisecond workloads.
+pub fn best_of_ms<T>(iters: usize, mut f: impl FnMut() -> T) -> (T, f64) {
+    let mut best = f64::INFINITY;
+    let mut out = None;
+    for _ in 0..iters.max(1) {
+        let (v, ms) = time_ms(&mut f);
+        best = best.min(ms);
+        out = Some(v);
+    }
+    (out.expect("at least one iteration"), best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BenchReport {
+        BenchReport {
+            kind: "fleet".into(),
+            quick: true,
+            bootstrap: false,
+            measurements: vec![Measurement {
+                id: "fleet/chips=8/streams=64".into(),
+                wall_ms: 12.5,
+                fingerprint: fingerprint_hex([1, 2, 3]),
+                metrics: vec![
+                    Metric { name: "p99_ms".into(), value: 40.0, better: Direction::Lower },
+                    Metric {
+                        name: "virtual_throughput_fps".into(),
+                        value: 900.0,
+                        better: Direction::Higher,
+                    },
+                    Metric { name: "groups".into(), value: 7.0, better: Direction::Info },
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let r = sample();
+        let j = r.to_json();
+        let back = BenchReport::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn wrong_schema_rejected() {
+        let mut j = sample().to_json();
+        j.set("schema", Json::Str("something/else".into()));
+        assert!(BenchReport::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn bootstrap_baseline_parses_with_no_measurements() {
+        let txt = r#"{"schema":"rcnet-dla/bench/v1","kind":"fleet","quick":true,"bootstrap":true,"measurements":[]}"#;
+        let r = BenchReport::from_json(&Json::parse(txt).unwrap()).unwrap();
+        assert!(r.bootstrap);
+        assert!(r.measurements.is_empty());
+    }
+
+    #[test]
+    fn directions_round_trip() {
+        for d in [Direction::Higher, Direction::Lower, Direction::Info] {
+            assert_eq!(Direction::parse(d.name()), Some(d));
+        }
+        assert_eq!(Direction::parse("sideways"), None);
+    }
+
+    #[test]
+    fn fingerprints_are_stable_and_content_sensitive() {
+        assert_eq!(fingerprint_hex([1, 2]), fingerprint_hex([1, 2]));
+        assert_ne!(fingerprint_hex([1, 2]), fingerprint_hex([2, 1]));
+        assert_eq!(fingerprint_hex([]).len(), 18); // 0x + 16 hex digits
+    }
+
+    #[test]
+    fn best_of_takes_the_minimum() {
+        let mut n = 0u64;
+        let (_, ms) = best_of_ms(3, || {
+            n += 1;
+            std::thread::sleep(std::time::Duration::from_millis(if n == 1 { 5 } else { 1 }));
+        });
+        assert!(ms < 5.0, "min should skip the slow first iter: {ms}");
+    }
+}

@@ -49,7 +49,7 @@
 //! use rcnet_dla::plan::{PlanCache, Planner};
 //!
 //! let net = zoo::yolov2_converted(20, 5);
-//! let mut cache = PlanCache::new();
+//! let cache = PlanCache::new();
 //! let plan = cache.plan(
 //!     &net,
 //!     &FusionConfig::paper_default(),
@@ -67,16 +67,28 @@
 //! camera streams (416/720p/1080p at 15/30 FPS) are multiplexed over a
 //! pool of simulated chips that share one DRAM-bus budget, with EDF
 //! dispatch, admission control and load shedding. Deterministic from a
-//! seed — virtual time only.
+//! seed — virtual time only. Setting `threads: 0` shards the engine
+//! across one worker per core ([`serve::parallel`]) with byte-identical
+//! output.
 //!
 //! ```no_run
 //! use rcnet_dla::serve::{run_fleet, FleetConfig};
 //!
-//! let cfg = FleetConfig { streams: 64, bus_mbps: 585.0, ..FleetConfig::default() };
+//! let cfg =
+//!     FleetConfig { streams: 64, bus_mbps: 585.0, threads: 0, ..FleetConfig::default() };
 //! let report = run_fleet(&cfg).unwrap();
 //! println!("{report}"); // per-stream p50/p99, miss/shed rates, bus utilization
 //! ```
+//!
+//! ## Benchmarks
+//!
+//! [`bench`] packages all of the above into deterministic, regression-
+//! gated performance workloads: `rcnet-dla bench --quick` emits
+//! `BENCH_fleet.json` / `BENCH_planner.json`, and `bench --against`
+//! exits nonzero when a gated value regresses past tolerance (the CI
+//! perf-smoke job). See `docs/BENCHMARKS.md`.
 
+pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;

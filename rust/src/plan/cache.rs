@@ -1,4 +1,4 @@
-//! Memoizing plan cache.
+//! Memoizing, concurrency-safe plan cache.
 //!
 //! Planning is cheap but not free (the DP re-tiles O(U²) candidate groups
 //! at the target resolution), and the fleet simulator asks for the same
@@ -8,15 +8,35 @@
 //! [`Network::structural_hash`], so two structurally identical networks
 //! built independently hit the same entry, and a pruned/retuned network
 //! naturally misses.
+//!
+//! ## Concurrency
+//!
+//! The map is sharded dashmap-style: keys hash to one of a fixed set of
+//! `RwLock<HashMap>` shards, so concurrent lookups of *different*
+//! operating points (the parallel fleet engine priming 416/720p/1080p
+//! costs on separate worker threads) never contend on one lock, and
+//! warm hits take only a shard read lock. Planning itself runs *outside*
+//! any lock; if two threads race to plan the same key, the first insert
+//! wins and both return the same shared [`Arc`] plan. All methods take
+//! `&self`, so one cache can be shared by reference across scoped
+//! threads.
 
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
 use crate::config::ChipConfig;
 use crate::fusion::FusionConfig;
 use crate::model::Network;
+use crate::util::fnv1a;
 
 use super::{Plan, Planner};
+
+/// Number of lock shards. Small power of two: the working set is a
+/// handful of operating points, so this is about avoiding *contention*,
+/// not about bucket occupancy.
+const SHARDS: usize = 8;
 
 /// Content-derived cache key for one planning request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -31,19 +51,6 @@ pub struct PlanKey {
     pub planner: Planner,
 }
 
-/// FNV-1a over a word stream (matches the style of
-/// [`Network::structural_hash`]).
-fn fnv(words: &[u64]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for w in words {
-        for b in w.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-    }
-    h
-}
-
 impl PlanKey {
     /// Build the key for a planning request.
     pub fn new(
@@ -53,7 +60,7 @@ impl PlanKey {
         hw: (u32, u32),
         planner: Planner,
     ) -> Self {
-        let config = fnv(&[
+        let config = fnv1a([
             cfg.weight_buffer_bytes,
             cfg.slack.to_bits(),
             cfg.max_downsampling as u64,
@@ -72,14 +79,32 @@ impl PlanKey {
         ]);
         PlanKey { net: net.structural_hash(), config, hw, planner }
     }
+
+    /// Shard index for this key.
+    fn shard(&self) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.hash(&mut h);
+        (h.finish() as usize) % SHARDS
+    }
 }
 
-/// Memoizing store of finished [`Plan`]s.
-#[derive(Debug, Default)]
+/// Memoizing, shareable store of finished [`Plan`]s (see the module docs
+/// for the sharding/locking discipline).
+#[derive(Debug)]
 pub struct PlanCache {
-    map: HashMap<PlanKey, Rc<Plan>>,
-    hits: u64,
-    misses: u64,
+    shards: [RwLock<HashMap<PlanKey, Arc<Plan>>>; SHARDS],
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache {
+            shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
 }
 
 impl PlanCache {
@@ -89,44 +114,52 @@ impl PlanCache {
     }
 
     /// The plan for (`net`, `cfg`, `chip`, `hw`, `planner`), computed on
-    /// first request and shared (cheaply, via `Rc`) thereafter.
+    /// first request and shared (cheaply, via `Arc`) thereafter.
     pub fn plan(
-        &mut self,
+        &self,
         net: &Network,
         cfg: &FusionConfig,
         chip: &ChipConfig,
         hw: (u32, u32),
         planner: Planner,
-    ) -> Rc<Plan> {
+    ) -> Arc<Plan> {
         let key = PlanKey::new(net, cfg, chip, hw, planner);
-        if let Some(p) = self.map.get(&key) {
-            self.hits += 1;
-            return Rc::clone(p);
+        let shard = &self.shards[key.shard()];
+        if let Some(p) = shard.read().expect("plan cache shard poisoned").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(p);
         }
-        self.misses += 1;
-        let p = Rc::new(planner.plan(net, cfg, chip, hw));
-        self.map.insert(key, Rc::clone(&p));
-        p
+        // Plan outside any lock: the DP is the expensive part, and a
+        // concurrent thread may be planning a *different* key in this
+        // shard. Racing planners of the same key are deduplicated at
+        // insert (first writer wins; the loser returns the winner's Arc).
+        let fresh = Arc::new(planner.plan(net, cfg, chip, hw));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = shard.write().expect("plan cache shard poisoned");
+        Arc::clone(map.entry(key).or_insert(fresh))
     }
 
     /// Number of distinct plans held.
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.shards
+            .iter()
+            .map(|s| s.read().expect("plan cache shard poisoned").len())
+            .sum()
     }
 
     /// True if no plan has been computed yet.
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.len() == 0
     }
 
     /// Requests served from the cache.
     pub fn hits(&self) -> u64 {
-        self.hits
+        self.hits.load(Ordering::Relaxed)
     }
 
     /// Requests that had to compute a fresh plan.
     pub fn misses(&self) -> u64 {
-        self.misses
+        self.misses.load(Ordering::Relaxed)
     }
 }
 
@@ -140,7 +173,7 @@ mod tests {
         let net = yolov2_converted(3, 5);
         let cfg = FusionConfig::paper_default();
         let chip = ChipConfig::paper_chip();
-        let mut cache = PlanCache::new();
+        let cache = PlanCache::new();
         let a = cache.plan(&net, &cfg, &chip, (416, 416), Planner::OptimalDp);
         let b = cache.plan(&net, &cfg, &chip, (416, 416), Planner::OptimalDp);
         assert_eq!(a, b);
@@ -153,7 +186,7 @@ mod tests {
         let net = yolov2_converted(3, 5);
         let cfg = FusionConfig::paper_default();
         let chip = ChipConfig::paper_chip();
-        let mut cache = PlanCache::new();
+        let cache = PlanCache::new();
         cache.plan(&net, &cfg, &chip, (416, 416), Planner::OptimalDp);
         cache.plan(&net, &cfg, &chip, (720, 1280), Planner::OptimalDp);
         cache.plan(&net, &cfg, &chip, (416, 416), Planner::PaperGreedy);
@@ -169,9 +202,33 @@ mod tests {
         let b = yolov2_converted(3, 5);
         let cfg = FusionConfig::paper_default();
         let chip = ChipConfig::paper_chip();
-        let mut cache = PlanCache::new();
+        let cache = PlanCache::new();
         cache.plan(&a, &cfg, &chip, (416, 416), Planner::OptimalDp);
         cache.plan(&b, &cfg, &chip, (416, 416), Planner::OptimalDp);
         assert_eq!((cache.len(), cache.hits()), (1, 1));
+    }
+
+    #[test]
+    fn concurrent_requests_share_one_plan() {
+        let net = yolov2_converted(3, 5);
+        let cfg = FusionConfig::paper_default();
+        let chip = ChipConfig::paper_chip();
+        let cache = PlanCache::new();
+        let plans: Vec<Arc<Plan>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let (net, cfg, chip, cache) = (&net, &cfg, &chip, &cache);
+                    s.spawn(move || cache.plan(net, cfg, chip, (416, 416), Planner::OptimalDp))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("cache thread")).collect()
+        });
+        // Exactly one entry survives; every thread sees the same groups.
+        assert_eq!(cache.len(), 1);
+        for p in &plans[1..] {
+            assert_eq!(p.groups, plans[0].groups);
+            assert_eq!(p.feat_bytes, plans[0].feat_bytes);
+        }
+        assert_eq!(cache.hits() + cache.misses(), 4);
     }
 }

@@ -8,11 +8,17 @@
 //!   paper resolutions (the [`crate::plan`] planners)
 //! * `simulate`   — DLA cycle simulation at an operating point
 //! * `fleet`      — multi-stream fleet serving over a chip pool with a
-//!   shared DRAM-bus budget (deterministic from a seed)
+//!   shared DRAM-bus budget (deterministic from a seed; `--threads`
+//!   selects the serial or sharded-parallel engine)
+//! * `bench`      — standardized performance workloads
+//!   ([`crate::bench`]): emits `BENCH_fleet.json` / `BENCH_planner.json`
+//!   and optionally gates against a baseline (nonzero exit on
+//!   regression)
 //! * `serve`      — run the detection pipeline on synthetic frames
 //!   (requires `make artifacts` and the `pjrt` feature)
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 
 use crate::config::ChipConfig;
 use crate::dla::{simulate_fused, simulate_layer_by_layer};
@@ -65,9 +71,17 @@ USAGE:
   rcnet-dla simulate  [--res 416|hd|fullhd|ivs] [--spec PATH]
   rcnet-dla fleet     [--streams N] [--chips N] [--bus-mbps MB] [--seconds S]
                       [--seed K] [--oversub F | --admit-all]
-                      [--planner greedy|optimal-dp]
+                      [--planner greedy|optimal-dp] [--threads N]
+  rcnet-dla bench     [--quick] [--out-dir DIR] [--against PATH]
+                      [--tolerance F]
   rcnet-dla serve     [--manifest artifacts/manifest.json] [--frames N]
   rcnet-dla ablation  [--net yolov2|deeplabv3|vgg16]
+
+`fleet --threads`: 1 = serial reference engine (default), 0 = one worker
+per core, N = N workers; output is byte-identical across engines.
+`bench --against` accepts a report file (BENCH_fleet.json) or a
+directory holding the committed baselines; exits nonzero on regression
+past --tolerance (default 0.15).
 ";
 
 /// Entry point used by `main.rs`.
@@ -80,6 +94,7 @@ pub fn cli_main() -> Result<()> {
         Some("plan") => plan(&flags),
         Some("simulate") => simulate(&flags),
         Some("fleet") => fleet(&flags),
+        Some("bench") => bench(&flags),
         Some("serve") => serve(&flags),
         Some("ablation") => ablation(&flags),
         _ => {
@@ -307,10 +322,122 @@ fn fleet(flags: &HashMap<String, String>) -> Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("unknown --planner {s} (greedy|optimal-dp)"))?,
             None => d.planner,
         },
+        threads: flags.get("threads").and_then(|s| s.parse().ok()).unwrap_or(d.threads),
         ..d
     };
     let report = run_fleet(&cfg)?;
     println!("{report}");
+    Ok(())
+}
+
+/// Default bench output directory: the repository root (the parent of
+/// the crate's manifest directory, baked in at compile time), where the
+/// committed baselines live. Overridable with `--out-dir`.
+fn default_bench_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().map_or_else(|| PathBuf::from("."), Path::to_path_buf)
+}
+
+/// Resolve `--against` for one report family: a directory means "the
+/// committed `BENCH_<kind>.json` inside it", a file matches only if its
+/// `kind` agrees (so `--against BENCH_fleet.json` gates the fleet family
+/// and leaves the planner family ungated).
+fn load_baseline(against: &str, kind: &str) -> Result<Option<crate::bench::BenchReport>> {
+    let p = Path::new(against);
+    let file = if p.is_dir() { p.join(format!("BENCH_{kind}.json")) } else { p.to_path_buf() };
+    if !file.is_file() {
+        return Ok(None);
+    }
+    let rep = crate::bench::BenchReport::load(&file)?;
+    Ok(if rep.kind == kind { Some(rep) } else { None })
+}
+
+fn bench(flags: &HashMap<String, String>) -> Result<()> {
+    use crate::bench::{compare_reports, fleet_report, planner_report, BenchProfile};
+
+    let profile =
+        if flags.contains_key("quick") { BenchProfile::Quick } else { BenchProfile::Full };
+    let tolerance: f64 =
+        flags.get("tolerance").and_then(|s| s.parse().ok()).unwrap_or(0.15);
+    let out_dir = flags.get("out-dir").map_or_else(default_bench_dir, PathBuf::from);
+
+    eprintln!("bench: running the {} fleet workloads...", profile.name());
+    let fleet = fleet_report(profile)?;
+    eprintln!("bench: running the {} planner workloads...", profile.name());
+    let planner = planner_report(profile)?;
+
+    let mut t = crate::report::tables::TableBuilder::new(&format!(
+        "bench ({} profile) — wall times; deterministic metrics in the JSON",
+        profile.name()
+    ))
+    .header(&["workload", "wall (ms)"]);
+    for rep in [&fleet, &planner] {
+        for m in &rep.measurements {
+            t.row(vec![m.id.clone(), format!("{:.3}", m.wall_ms)]);
+        }
+    }
+    println!("{}", t.render());
+
+    // Compare before writing (the baseline may be the very files about
+    // to be overwritten), but never let a broken baseline abort the run
+    // before the fresh reports hit disk — CI uploads them either way,
+    // and they are exactly what fixes a corrupt baseline.
+    let mut failed = Vec::new();
+    let mut broken_baselines = Vec::new();
+    let mut matched_baselines = 0usize;
+    if let Some(against) = flags.get("against") {
+        for rep in [&fleet, &planner] {
+            match load_baseline(against, &rep.kind) {
+                Ok(Some(base)) => {
+                    matched_baselines += 1;
+                    let out = compare_reports(&base, rep, tolerance);
+                    println!("{}", out.render(&rep.kind, tolerance));
+                    if !out.passed() {
+                        failed.push(rep.kind.clone());
+                    }
+                }
+                Ok(None) => {
+                    println!("bench[{}]: no baseline under {against}, skipped", rep.kind);
+                }
+                Err(e) => {
+                    eprintln!("bench[{}]: unreadable baseline: {e}", rep.kind);
+                    broken_baselines.push(rep.kind.clone());
+                }
+            }
+        }
+    }
+
+    std::fs::create_dir_all(&out_dir)?;
+    fleet.write(&out_dir.join("BENCH_fleet.json"))?;
+    planner.write(&out_dir.join("BENCH_planner.json"))?;
+    eprintln!(
+        "bench: wrote {} and {}",
+        out_dir.join("BENCH_fleet.json").display(),
+        out_dir.join("BENCH_planner.json").display()
+    );
+
+    if !broken_baselines.is_empty() {
+        anyhow::bail!(
+            "unreadable baseline(s) for {} — fresh reports were still written above",
+            broken_baselines.join(", ")
+        );
+    }
+    // An explicitly requested gate that matched *nothing* is a broken
+    // gate (typo'd path, renamed baselines), not a pass: failing here
+    // keeps the CI perf-smoke job from silently becoming a no-op.
+    if let Some(against) = flags.get("against") {
+        if matched_baselines == 0 {
+            anyhow::bail!(
+                "--against {against} matched no baseline for any report family \
+                 — fresh reports were still written above"
+            );
+        }
+    }
+    if !failed.is_empty() {
+        anyhow::bail!(
+            "bench regression vs baseline in {} (tolerance {tolerance})",
+            failed.join(", ")
+        );
+    }
     Ok(())
 }
 

@@ -21,28 +21,37 @@
 //! * [`arbiter`] — the shared bus: a per-tick byte budget water-filled
 //!   across in-flight transfers, plus utilization accounting.
 //! * [`scheduler`] — EDF dispatch, admission control, load shedding, and
-//!   the tick engine ([`FleetSim`], [`run_fleet`]).
+//!   the reference tick engine ([`FleetSim`], [`run_fleet`]).
+//! * [`parallel`] — the sharded multi-threaded engine: per-worker stream
+//!   and chip shards with a deterministic merge at each arbiter epoch,
+//!   byte-identical to the serial engine ([`FleetConfig::threads`]).
 //! * [`fleet`] — the chip pool; bounded mpsc dispatch queues whose
 //!   `try_send` failures are the backpressure signal.
 //! * [`stats`] — per-stream latency histograms (shared `Metrics` with the
-//!   single-chip coordinator), miss/shed rates, the printable report.
+//!   single-chip coordinator), miss/shed rates, the printable report and
+//!   its determinism digest.
 //!
 //! ```no_run
 //! use rcnet_dla::serve::{run_fleet, FleetConfig};
 //!
-//! let cfg = FleetConfig { streams: 64, bus_mbps: 585.0, ..FleetConfig::default() };
+//! // threads: 0 = one worker per core; the report is byte-identical to
+//! // the serial (threads: 1) engine either way.
+//! let cfg =
+//!     FleetConfig { streams: 64, bus_mbps: 585.0, threads: 0, ..FleetConfig::default() };
 //! let report = run_fleet(&cfg).unwrap();
 //! println!("{report}");
 //! ```
 
 pub mod arbiter;
 pub mod fleet;
+pub mod parallel;
 pub mod scheduler;
 pub mod stats;
 pub mod stream;
 
 pub use arbiter::BusArbiter;
 pub use fleet::{ChipWorker, Fleet, InFlight};
+pub use parallel::resolve_threads;
 pub use scheduler::{run_fleet, run_fleet_with, AdmissionPolicy, FleetConfig, FleetSim};
 pub use stats::{FleetReport, StreamStats};
 pub use stream::{FrameCost, FrameTask, QosClass, Stream, StreamSpec};

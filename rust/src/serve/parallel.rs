@@ -1,0 +1,445 @@
+//! The sharded parallel fleet engine.
+//!
+//! [`super::scheduler::FleetSim::run`] is the *reference* engine: one
+//! thread walks every stream and chip each tick. This module runs the
+//! same simulation across worker threads — each worker owns a contiguous
+//! shard of streams (frame release) and chips (dispatch queues,
+//! execution) — while the main thread keeps the only state that is
+//! genuinely global: the EDF ready queue, the occupancy mirror it
+//! dispatches against, the bus arbiter, and the per-stream statistics.
+//!
+//! ## The identity guarantee
+//!
+//! The parallel engine's [`super::FleetReport`] is **byte-identical** to
+//! the serial engine's for the same [`super::FleetConfig`] and stream
+//! list (pinned by `tests/parallel_fleet.rs` across seeds and thread
+//! counts). That holds because every cross-chip interaction is merged
+//! deterministically at a tick barrier, in the same order the serial
+//! engine produces it:
+//!
+//! * **Releases** — workers release their stream shards concurrently;
+//!   the main thread merges the per-shard lists in shard order. Shards
+//!   are contiguous in stream id, so the merged sequence equals the
+//!   serial engine's stream-id-ordered scan.
+//! * **Dispatch** — selection uses the same total orders (the
+//!   scheduler's `edf_order` / `shed_order`) the serial scan
+//!   uses. Because the orders are total (unique `(stream, seq)` tail —
+//!   the pinned tie-break), a binary heap here and a linear scan there
+//!   select identical frame sequences from identical multisets. Chip
+//!   choice runs against an occupancy mirror that replays the serial
+//!   `pick_worker` scan exactly.
+//! * **Bus** — per-chip demands are concatenated in global chip order
+//!   and water-filled by the unchanged [`super::BusArbiter`] on the main
+//!   thread: same input sequence, same f64 operations, same grants.
+//! * **Completions** — workers advance their chips with the granted
+//!   bytes (the same per-tick subtraction sequence as serial — no
+//!   re-associated arithmetic anywhere); completions are applied to the
+//!   stats in global chip order.
+//!
+//! Inside a tick the worker phases are fully concurrent; the protocol is
+//! three fork/join rounds per tick (release → dispatch+demand →
+//! advance) over plain `mpsc` channels, with each command answered by
+//! exactly one response so the engine cannot deadlock: the main thread
+//! batches all sends before the first receive, and a dropped channel
+//! (worker panic, main unwind) surfaces as a closed-channel error
+//! instead of a hang.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use super::fleet::ChipWorker;
+use super::scheduler::{edf_order, shed_order, FleetSim};
+use super::stats::FleetReport;
+use super::stream::{FrameTask, Stream};
+
+/// Resolve a [`super::FleetConfig::threads`] request to a worker count:
+/// `0` means one worker per available core; anything else is taken
+/// literally. Callers treat the result `1` as "run the serial engine".
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// Ready-queue entry ordered so a max-[`BinaryHeap`] pops the EDF-next
+/// frame ([`edf_order`] reversed). The order is total, so the heap's pop
+/// sequence equals the serial engine's repeated linear-scan minimum.
+struct EdfTask(FrameTask);
+
+impl PartialEq for EdfTask {
+    fn eq(&self, other: &Self) -> bool {
+        edf_order(&self.0, &other.0) == Ordering::Equal
+    }
+}
+impl Eq for EdfTask {}
+impl PartialOrd for EdfTask {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for EdfTask {
+    fn cmp(&self, other: &Self) -> Ordering {
+        edf_order(&other.0, &self.0)
+    }
+}
+
+/// Main-thread occupancy mirror of one remote [`ChipWorker`]: exactly
+/// the fields the serial `pick_worker` scan reads. The mirror is kept in
+/// lockstep by replaying the three deterministic transitions — dispatch
+/// (`queued += 1`), the once-per-tick refill (`queued -= 1`, busy), and
+/// completion (idle) — so dispatch decisions never need to ask the
+/// worker threads anything.
+struct ChipMirror {
+    depth: usize,
+    queued: usize,
+    active: bool,
+}
+
+impl ChipMirror {
+    fn is_idle(&self) -> bool {
+        !self.active && self.queued == 0
+    }
+    fn has_room(&self) -> bool {
+        self.queued < self.depth
+    }
+}
+
+/// The serial `Fleet::pick_worker` scan, replayed over the mirror:
+/// first idle chip (frame starts this tick), else first with queue room.
+fn pick_mirror(mirror: &[ChipMirror]) -> Option<usize> {
+    mirror
+        .iter()
+        .position(ChipMirror::is_idle)
+        .or_else(|| mirror.iter().position(ChipMirror::has_room))
+}
+
+/// One worker's owned state: contiguous stream and chip shards.
+struct Shard {
+    streams: Vec<Stream>,
+    chips: Vec<ChipWorker>,
+}
+
+/// Per-tick commands, each answered by exactly one [`Rsp`].
+enum Cmd {
+    /// Release due frames from this worker's streams.
+    Release { now_ms: f64 },
+    /// Apply EDF dispatch decisions (local chip index, frame), then
+    /// refill and report per-chip bus demands.
+    Dispatch { tasks: Vec<(usize, FrameTask)> },
+    /// Advance every chip one tick with its bus grant.
+    Advance { grants: Vec<f64> },
+    /// Run over; report busy-tick totals and exit.
+    Finish,
+}
+
+/// Worker responses, in 1:1 correspondence with [`Cmd`].
+enum Rsp {
+    /// Released frames, in stream-id-then-seq order within the shard.
+    Released(Vec<FrameTask>),
+    /// Per-chip outstanding DRAM demand, in local chip order.
+    Demands(Vec<f64>),
+    /// Completed frames as (local chip index, frame), in chip order.
+    Completions(Vec<(usize, FrameTask)>),
+    /// Sum of busy ticks over the shard's chips.
+    Done { busy_ticks: u64 },
+}
+
+fn worker_loop(
+    mut shard: Shard,
+    cycles_per_tick: f64,
+    link_bytes_per_tick: f64,
+    rx: mpsc::Receiver<Cmd>,
+    tx: mpsc::Sender<Rsp>,
+) {
+    while let Ok(cmd) = rx.recv() {
+        let rsp = match cmd {
+            Cmd::Release { now_ms } => {
+                let mut out = Vec::new();
+                for s in &mut shard.streams {
+                    out.extend(s.release_due(now_ms));
+                }
+                Rsp::Released(out)
+            }
+            Cmd::Dispatch { tasks } => {
+                for (i, t) in tasks {
+                    if shard.chips[i].try_dispatch(t).is_err() {
+                        // The mirror only dispatches into room; a bounce
+                        // would silently diverge from the serial engine,
+                        // so fail loudly instead.
+                        panic!("dispatch bounced off chip with mirrored queue room");
+                    }
+                }
+                for c in &mut shard.chips {
+                    c.refill(cycles_per_tick);
+                }
+                Rsp::Demands(shard.chips.iter().map(|c| c.bus_demand(link_bytes_per_tick)).collect())
+            }
+            Cmd::Advance { grants } => {
+                let mut done = Vec::new();
+                for (i, (c, g)) in shard.chips.iter_mut().zip(&grants).enumerate() {
+                    if let Some(t) = c.advance(*g) {
+                        done.push((i, t));
+                    }
+                }
+                Rsp::Completions(done)
+            }
+            Cmd::Finish => {
+                let busy = shard.chips.iter().map(|c| c.busy_ticks).sum();
+                let _ = tx.send(Rsp::Done { busy_ticks: busy });
+                return;
+            }
+        };
+        if tx.send(rsp).is_err() {
+            return; // main thread gone (unwind); exit quietly
+        }
+    }
+}
+
+impl FleetSim {
+    /// Run the configured span on `threads` worker threads and produce
+    /// the report — byte-identical to [`FleetSim::run`] (see the module
+    /// docs for why). Falls back to the serial engine when one worker
+    /// (or an empty pool) leaves nothing to parallelize.
+    pub fn run_parallel(mut self, threads: usize) -> FleetReport {
+        let shard_count = threads.min(self.fleet.workers.len().max(self.streams.len())).max(1);
+        if shard_count <= 1 {
+            return self.run();
+        }
+        debug_assert!(self.ready.is_empty(), "run_parallel on a started sim");
+
+        let cfg = self.cfg;
+        let cycles_per_tick = self.fleet.cycles_per_tick;
+        let link_bytes_per_tick = self.fleet.link_bytes_per_tick;
+        let chips = self.fleet.workers.len();
+        let total_streams = self.streams.len();
+        let mut stats = std::mem::take(&mut self.stats);
+        let mut arbiter = self.arbiter.clone();
+        let rejected = self.rejected;
+
+        // Contiguous shards: worker order == global stream/chip order.
+        let chip_chunk = chips.div_ceil(shard_count).max(1);
+        let stream_chunk = total_streams.div_ceil(shard_count).max(1);
+        let mut shards: Vec<Shard> = Vec::with_capacity(shard_count);
+        {
+            let mut chips_left = std::mem::take(&mut self.fleet.workers);
+            let mut streams_left = std::mem::take(&mut self.streams);
+            for _ in 0..shard_count {
+                let take_c = chip_chunk.min(chips_left.len());
+                let take_s = stream_chunk.min(streams_left.len());
+                shards.push(Shard {
+                    chips: chips_left.drain(..take_c).collect(),
+                    streams: streams_left.drain(..take_s).collect(),
+                });
+            }
+            debug_assert!(chips_left.is_empty() && streams_left.is_empty());
+        }
+        let shard_chips: Vec<usize> = shards.iter().map(|s| s.chips.len()).collect();
+        // Global chip index -> (worker, local index).
+        let mut chip_owner: Vec<(usize, usize)> = Vec::with_capacity(chips);
+        for (wi, &n) in shard_chips.iter().enumerate() {
+            for li in 0..n {
+                chip_owner.push((wi, li));
+            }
+        }
+
+        let depth = cfg.queue_depth.max(1);
+        let ticks = (cfg.seconds * 1e3 / cfg.tick_ms).round().max(1.0) as u64;
+        let max_ready = cfg.max_ready_per_stream * total_streams.max(1);
+
+        let busy: u64 = std::thread::scope(|scope| {
+            let mut cmd_tx: Vec<mpsc::Sender<Cmd>> = Vec::with_capacity(shard_count);
+            let mut rsp_rx: Vec<mpsc::Receiver<Rsp>> = Vec::with_capacity(shard_count);
+            for shard in shards {
+                let (ctx, crx) = mpsc::channel();
+                let (rtx, rrx) = mpsc::channel();
+                scope.spawn(move || {
+                    worker_loop(shard, cycles_per_tick, link_bytes_per_tick, crx, rtx)
+                });
+                cmd_tx.push(ctx);
+                rsp_rx.push(rrx);
+            }
+
+            let mut heap: BinaryHeap<EdfTask> = BinaryHeap::new();
+            let mut mirror: Vec<ChipMirror> =
+                (0..chips).map(|_| ChipMirror { depth, queued: 0, active: false }).collect();
+
+            for k in 0..ticks {
+                let now_ms = k as f64 * cfg.tick_ms;
+
+                // 1. Releases: concurrent, merged in stream-id order.
+                for tx in &cmd_tx {
+                    tx.send(Cmd::Release { now_ms }).expect("fleet worker hung up");
+                }
+                for rx in &rsp_rx {
+                    match rx.recv().expect("fleet worker hung up") {
+                        Rsp::Released(v) => {
+                            for t in v {
+                                stats[t.stream].released += 1;
+                                heap.push(EdfTask(t));
+                            }
+                        }
+                        _ => unreachable!("protocol: expected Released"),
+                    }
+                }
+
+                // 2a. Expiry shedding: expired frames (deadline is the
+                // heap's primary key) sit at the front.
+                while let Some(front) = heap.peek() {
+                    if front.0.deadline_ms > now_ms {
+                        break;
+                    }
+                    let t = heap.pop().expect("peeked entry").0;
+                    stats[t.stream].shed += 1;
+                }
+
+                // 2b. Bounded central queue: drop the (len - max) worst
+                // frames in shed order — exactly the frames the serial
+                // engine's one-at-a-time victim scan removes.
+                if heap.len() > max_ready {
+                    let mut v: Vec<FrameTask> =
+                        std::mem::take(&mut heap).into_iter().map(|e| e.0).collect();
+                    v.sort_by(shed_order);
+                    let excess = v.len() - max_ready;
+                    for t in v.drain(..excess) {
+                        stats[t.stream].shed += 1;
+                    }
+                    heap = v.into_iter().map(EdfTask).collect();
+                }
+
+                // 3. EDF dispatch against the occupancy mirror.
+                let mut dispatches: Vec<Vec<(usize, FrameTask)>> = vec![Vec::new(); shard_count];
+                while !heap.is_empty() {
+                    let Some(g) = pick_mirror(&mirror) else { break };
+                    let t = heap.pop().expect("non-empty heap").0;
+                    mirror[g].queued += 1;
+                    let (wi, li) = chip_owner[g];
+                    dispatches[wi].push((li, t));
+                }
+
+                // 4. Apply dispatches, refill, collect demands; mirror
+                // the refill transition each chip performs.
+                for (tx, tasks) in cmd_tx.iter().zip(dispatches) {
+                    tx.send(Cmd::Dispatch { tasks }).expect("fleet worker hung up");
+                }
+                for m in &mut mirror {
+                    if !m.active && m.queued > 0 {
+                        m.queued -= 1;
+                        m.active = true;
+                    }
+                }
+                let mut demands: Vec<f64> = Vec::with_capacity(chips);
+                for rx in &rsp_rx {
+                    match rx.recv().expect("fleet worker hung up") {
+                        Rsp::Demands(d) => demands.extend(d),
+                        _ => unreachable!("protocol: expected Demands"),
+                    }
+                }
+                let grants = arbiter.arbitrate(&demands);
+
+                // 5. Advance; merge completions in global chip order.
+                let mut off = 0usize;
+                for (tx, &n) in cmd_tx.iter().zip(&shard_chips) {
+                    tx.send(Cmd::Advance { grants: grants[off..off + n].to_vec() })
+                        .expect("fleet worker hung up");
+                    off += n;
+                }
+                let mut base = 0usize;
+                for (rx, &n) in rsp_rx.iter().zip(&shard_chips) {
+                    match rx.recv().expect("fleet worker hung up") {
+                        Rsp::Completions(done) => {
+                            for (li, t) in done {
+                                mirror[base + li].active = false;
+                                let latency_ms = now_ms + cfg.tick_ms - t.release_ms;
+                                stats[t.stream]
+                                    .record_completion(latency_ms, t.deadline_ms - t.release_ms);
+                            }
+                        }
+                        _ => unreachable!("protocol: expected Completions"),
+                    }
+                    base += n;
+                }
+            }
+
+            for tx in &cmd_tx {
+                tx.send(Cmd::Finish).expect("fleet worker hung up");
+            }
+            let mut busy = 0u64;
+            for rx in &rsp_rx {
+                match rx.recv().expect("fleet worker hung up") {
+                    Rsp::Done { busy_ticks } => busy += busy_ticks,
+                    _ => unreachable!("protocol: expected Done"),
+                }
+            }
+            busy
+        });
+
+        let wall = Duration::from_secs_f64(cfg.seconds);
+        for s in &mut stats {
+            s.metrics.set_wall(wall);
+        }
+        FleetReport {
+            per_stream: stats,
+            rejected,
+            chips,
+            bus_mbps: cfg.bus_mbps,
+            bus_utilization: arbiter.utilization(),
+            chip_utilization: busy as f64 / (ticks as f64 * chips.max(1) as f64),
+            wall_s: cfg.seconds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::stream::QosClass;
+
+    fn frame(stream: usize, seq: u64, deadline_ms: f64, qos: QosClass) -> FrameTask {
+        FrameTask {
+            stream,
+            seq,
+            release_ms: 0.0,
+            deadline_ms,
+            cost: crate::serve::stream::FrameCost { compute_cycles: 1, dram_bytes: 1 },
+            qos,
+        }
+    }
+
+    #[test]
+    fn heap_pops_in_edf_order() {
+        let mut h = BinaryHeap::new();
+        h.push(EdfTask(frame(3, 0, 50.0, QosClass::Silver)));
+        h.push(EdfTask(frame(1, 0, 50.0, QosClass::Silver)));
+        h.push(EdfTask(frame(0, 0, 90.0, QosClass::Gold)));
+        h.push(EdfTask(frame(2, 0, 20.0, QosClass::Bronze)));
+        let order: Vec<usize> = std::iter::from_fn(|| h.pop()).map(|e| e.0.stream).collect();
+        // Earliest deadline first; the 50 ms tie breaks by stream id.
+        assert_eq!(order, vec![2, 1, 3, 0]);
+    }
+
+    #[test]
+    fn mirror_replays_pick_worker() {
+        let mut m = vec![
+            ChipMirror { depth: 2, queued: 1, active: true },
+            ChipMirror { depth: 2, queued: 0, active: false },
+        ];
+        assert_eq!(pick_mirror(&m), Some(1), "idle chip preferred");
+        m[1].queued = 1;
+        m[1].active = true;
+        assert_eq!(pick_mirror(&m), Some(0), "then first chip with room");
+        m[0].queued = 2;
+        m[1].queued = 2;
+        assert_eq!(pick_mirror(&m), None, "all queues full backpressures");
+    }
+
+    #[test]
+    fn resolve_threads_zero_is_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(6), 6);
+    }
+}

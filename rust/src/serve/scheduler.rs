@@ -36,6 +36,7 @@ use crate::report::spec::{build_deployment_spec, spec_to_network, PipelineProfil
 use crate::util::Rng;
 use crate::Result;
 
+use std::cmp::Ordering;
 use std::time::Duration;
 
 use super::arbiter::BusArbiter;
@@ -84,6 +85,13 @@ pub struct FleetConfig {
     /// [`crate::plan::PlanCache`]) rather than from the build-time HD
     /// grouping; [`Planner::OptimalDp`] makes that plan traffic-optimal.
     pub planner: Planner,
+    /// Engine worker threads. `1` (the default) runs the reference
+    /// serial tick engine; `0` resolves to one worker per available
+    /// core; `N > 1` runs the sharded parallel engine
+    /// ([`super::parallel`]). The parallel engine's report — per-stream
+    /// p50/p99/miss/shed, utilizations, everything — is byte-identical
+    /// to the serial engine's, so this knob only trades wall-clock time.
+    pub threads: usize,
 }
 
 impl Default for FleetConfig {
@@ -100,6 +108,7 @@ impl Default for FleetConfig {
             admission: AdmissionPolicy::DemandLimit { oversub: 2.0 },
             chip: ChipConfig::paper_chip(),
             planner: Planner::OptimalDp,
+            threads: 1,
         }
     }
 }
@@ -129,68 +138,147 @@ impl CostModel {
         Ok(CostModel { net, cfg, chip, planner, plans: PlanCache::new(), costs: Vec::new() })
     }
 
+    /// Plan + schedule one resolution into a per-frame cost. Pure in
+    /// (`net`, `cfg`, `chip`, `planner`, `hw`), so serial and parallel
+    /// priming produce bit-identical costs.
+    fn price(
+        net: &Network,
+        cfg: &FusionConfig,
+        chip: &ChipConfig,
+        planner: Planner,
+        plans: &PlanCache,
+        hw: (u32, u32),
+    ) -> Result<FrameCost> {
+        let plan = plans.plan(net, cfg, chip, hw, planner);
+        let (sim, _) = simulate_fused(net, &plan.groups, hw, chip)
+            .map_err(|e| anyhow::anyhow!("tile planning at {hw:?}: {e:?}"))?;
+        Ok(FrameCost { compute_cycles: sim.total_cycles, dram_bytes: sim.total_dram_bytes() })
+    }
+
     fn cost(&mut self, hw: (u32, u32)) -> Result<FrameCost> {
         if let Some((_, c)) = self.costs.iter().find(|(k, _)| *k == hw) {
             return Ok(*c);
         }
-        let plan = self.plans.plan(&self.net, &self.cfg, &self.chip, hw, self.planner);
-        let (sim, _) = simulate_fused(&self.net, &plan.groups, hw, &self.chip)
-            .map_err(|e| anyhow::anyhow!("tile planning at {hw:?}: {e:?}"))?;
-        let c = FrameCost {
-            compute_cycles: sim.total_cycles,
-            dram_bytes: sim.total_dram_bytes(),
-        };
+        let c = Self::price(&self.net, &self.cfg, &self.chip, self.planner, &self.plans, hw)?;
         self.costs.push((hw, c));
         Ok(c)
     }
+
+    /// Pre-plan every distinct resolution in `hws`, fanning the planning
+    /// work (the DP + tiling at each operating point — the expensive part
+    /// of fleet setup) across `threads` scoped worker threads. Results
+    /// land in the same memo the serial path uses, in first-appearance
+    /// order, so admission afterwards sees identical costs either way.
+    fn prime(&mut self, hws: &[(u32, u32)], threads: usize) -> Result<()> {
+        let mut todo: Vec<(u32, u32)> = Vec::new();
+        for &hw in hws {
+            if !todo.contains(&hw) && !self.costs.iter().any(|(k, _)| *k == hw) {
+                todo.push(hw);
+            }
+        }
+        if threads <= 1 || todo.len() <= 1 {
+            for hw in todo {
+                self.cost(hw)?;
+            }
+            return Ok(());
+        }
+        let (net, cfg, planner, plans) = (&self.net, &self.cfg, self.planner, &self.plans);
+        let chip = self.chip;
+        // At most `threads` planning threads in flight: an explicit spec
+        // list may carry arbitrarily many distinct resolutions, and each
+        // prices via the O(U^2) DP.
+        let mut priced: Vec<Result<((u32, u32), FrameCost)>> = Vec::with_capacity(todo.len());
+        for batch in todo.chunks(threads) {
+            priced.extend(std::thread::scope(|s| {
+                let handles: Vec<_> = batch
+                    .iter()
+                    .map(|&hw| {
+                        s.spawn(move || {
+                            Self::price(net, cfg, &chip, planner, plans, hw).map(|c| (hw, c))
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("cost-priming thread panicked"))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for r in priced {
+            let (hw, c) = r?;
+            self.costs.push((hw, c));
+        }
+        Ok(())
+    }
 }
 
-/// Index of the EDF-next frame: earliest deadline, gold-first on ties,
-/// then (stream, seq) for full determinism.
+/// Total EDF dispatch order: earliest deadline first; ties broken by QoS
+/// (gold first), then — explicitly, so equal-deadline dispatch is
+/// deterministic and engine-independent — by ascending stream id, then
+/// frame sequence number. Because `(stream, seq)` is unique per frame
+/// this order is *total*: two distinct frames never compare `Equal`, so
+/// any dispatch structure (linear scan, binary heap, sorted run) selects
+/// the same frame sequence. Shared by the serial engine's scan and the
+/// parallel engine's ready-heap.
+pub(crate) fn edf_order(a: &FrameTask, b: &FrameTask) -> Ordering {
+    a.deadline_ms
+        .total_cmp(&b.deadline_ms)
+        .then(b.qos.cmp(&a.qos))
+        .then(a.stream.cmp(&b.stream))
+        .then(a.seq.cmp(&b.seq))
+}
+
+/// Total shed order on queue overflow: lowest QoS first, then latest
+/// deadline (the least urgent work of the least important tier), with
+/// the same unique `(stream, seq)` tail — descending, so the *newest*
+/// frame of the *highest* stream id sheds first among full ties.
+pub(crate) fn shed_order(a: &FrameTask, b: &FrameTask) -> Ordering {
+    a.qos
+        .cmp(&b.qos)
+        .then(b.deadline_ms.total_cmp(&a.deadline_ms))
+        .then(b.stream.cmp(&a.stream))
+        .then(b.seq.cmp(&a.seq))
+}
+
+/// Index of the EDF-next frame under [`edf_order`].
 fn edf_min(ready: &[FrameTask]) -> usize {
     (0..ready.len())
-        .min_by(|&a, &b| {
-            let (x, y) = (&ready[a], &ready[b]);
-            x.deadline_ms
-                .total_cmp(&y.deadline_ms)
-                .then(y.qos.cmp(&x.qos))
-                .then(x.stream.cmp(&y.stream))
-                .then(x.seq.cmp(&y.seq))
-        })
+        .min_by(|&a, &b| edf_order(&ready[a], &ready[b]))
         .expect("edf_min on empty queue")
 }
 
-/// Index of the frame to shed on queue overflow: lowest QoS, then latest
-/// deadline (the least urgent work of the least important tier).
+/// Index of the frame to shed on queue overflow under [`shed_order`].
 fn shed_victim(ready: &[FrameTask]) -> usize {
     (0..ready.len())
-        .min_by(|&a, &b| {
-            let (x, y) = (&ready[a], &ready[b]);
-            x.qos
-                .cmp(&y.qos)
-                .then(y.deadline_ms.total_cmp(&x.deadline_ms))
-                .then(y.stream.cmp(&x.stream))
-                .then(y.seq.cmp(&x.seq))
-        })
+        .min_by(|&a, &b| shed_order(&ready[a], &ready[b]))
         .expect("shed_victim on empty queue")
 }
 
 /// The discrete-tick fleet simulator.
+///
+/// Fields are crate-visible so [`super::parallel`] can take the admitted
+/// state apart into per-worker shards; everything observable is produced
+/// through [`FleetSim::run`] (serial) or the parallel engine, which are
+/// byte-identical.
 pub struct FleetSim {
-    cfg: FleetConfig,
-    streams: Vec<Stream>,
-    ready: Vec<FrameTask>,
-    fleet: Fleet,
-    arbiter: BusArbiter,
-    stats: Vec<StreamStats>,
-    rejected: usize,
+    pub(crate) cfg: FleetConfig,
+    pub(crate) streams: Vec<Stream>,
+    pub(crate) ready: Vec<FrameTask>,
+    pub(crate) fleet: Fleet,
+    pub(crate) arbiter: BusArbiter,
+    pub(crate) stats: Vec<StreamStats>,
+    pub(crate) rejected: usize,
 }
 
 impl FleetSim {
     /// Admit (a subset of) `specs` and set up the pool. Costs come from
-    /// the deployed network's counted models at each spec's resolution.
+    /// the deployed network's counted models at each spec's resolution;
+    /// with `cfg.threads != 1` the per-resolution planning fans out
+    /// across scoped threads (values are identical either way).
     pub fn new(cfg: &FleetConfig, specs: &[StreamSpec]) -> Result<FleetSim> {
         let mut costs = CostModel::new(cfg.chip, cfg.planner)?;
+        let hws: Vec<(u32, u32)> = specs.iter().map(|s| s.hw).collect();
+        costs.prime(&hws, super::parallel::resolve_threads(cfg.threads))?;
         let fleet = Fleet::new(cfg.chip, cfg.chips, cfg.queue_depth, cfg.tick_ms);
         let bus_capacity = cfg.bus_mbps * 1e6;
         let compute_capacity = fleet.compute_cycles_per_s();
@@ -323,6 +411,8 @@ impl FleetSim {
 }
 
 /// Run a fleet with a seeded mix of stream specs (`cfg.streams` of them).
+/// Dispatches on `cfg.threads`: the serial reference engine at 1, the
+/// sharded parallel engine otherwise — with byte-identical output.
 pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
     let mut rng = Rng::new(cfg.seed);
     let specs: Vec<StreamSpec> =
@@ -331,9 +421,16 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
 }
 
 /// Run a fleet over an explicit stream list (`cfg.streams` is ignored).
+/// Engine selection follows `cfg.threads` exactly as in [`run_fleet`].
 pub fn run_fleet_with(cfg: &FleetConfig, specs: &[StreamSpec]) -> Result<FleetReport> {
-    let mut sim = FleetSim::new(cfg, specs)?;
-    Ok(sim.run())
+    let sim = FleetSim::new(cfg, specs)?;
+    let threads = super::parallel::resolve_threads(cfg.threads);
+    if threads <= 1 {
+        let mut sim = sim;
+        Ok(sim.run())
+    } else {
+        Ok(sim.run_parallel(threads))
+    }
 }
 
 #[cfg(test)]
@@ -379,6 +476,50 @@ mod tests {
             task(2, 0, 80.0, QosClass::Bronze),
         ];
         assert_eq!(shed_victim(&q), 2);
+    }
+
+    /// Pins the satellite guarantee the parallel/serial identity rests
+    /// on: equal deadline AND equal QoS dispatches by ascending stream
+    /// id, regardless of queue position.
+    #[test]
+    fn edf_tie_on_deadline_and_qos_is_stable_by_stream_id() {
+        let q = [
+            task(7, 0, 50.0, QosClass::Silver),
+            task(2, 0, 50.0, QosClass::Silver),
+            task(5, 0, 50.0, QosClass::Silver),
+        ];
+        assert_eq!(edf_min(&q), 1, "lowest stream id wins the full tie");
+        // The same frames in any other order select the same frame.
+        let r = [q[2], q[0], q[1]];
+        assert_eq!(r[edf_min(&r)].stream, 2);
+    }
+
+    #[test]
+    fn edf_tie_within_one_stream_is_stable_by_seq() {
+        let q = [task(3, 9, 50.0, QosClass::Gold), task(3, 4, 50.0, QosClass::Gold)];
+        assert_eq!(q[edf_min(&q)].seq, 4, "earlier frame of the stream wins");
+    }
+
+    /// `edf_order` and `shed_order` are total: distinct frames never
+    /// compare equal, so every dispatch structure picks one winner.
+    #[test]
+    fn dispatch_orders_are_total() {
+        let frames = [
+            task(0, 0, 50.0, QosClass::Silver),
+            task(0, 1, 50.0, QosClass::Silver),
+            task(1, 0, 50.0, QosClass::Silver),
+            task(1, 0, 20.0, QosClass::Gold),
+        ];
+        for (i, a) in frames.iter().enumerate() {
+            for (j, b) in frames.iter().enumerate() {
+                if i != j {
+                    assert_ne!(edf_order(a, b), std::cmp::Ordering::Equal, "{i} vs {j}");
+                    assert_ne!(shed_order(a, b), std::cmp::Ordering::Equal, "{i} vs {j}");
+                    assert_eq!(edf_order(a, b), edf_order(b, a).reverse());
+                    assert_eq!(shed_order(a, b), shed_order(b, a).reverse());
+                }
+            }
+        }
     }
 
     #[test]

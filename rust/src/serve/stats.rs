@@ -9,7 +9,7 @@ use std::fmt;
 use std::time::Duration;
 
 use crate::coordinator::Metrics;
-use crate::util::percentile;
+use crate::util::{fnv1a, percentile};
 
 use super::stream::StreamSpec;
 
@@ -147,6 +147,32 @@ impl FleetReport {
     /// p99 latency over every completed frame in the fleet.
     pub fn aggregate_p99_ms(&self) -> f64 {
         self.aggregate_percentile_ms(99.0)
+    }
+
+    /// Order-sensitive FNV-1a digest of everything observable per stream:
+    /// spec, release/shed counters, completion count, deadline misses and
+    /// the *bit pattern* of every recorded latency sample, in recording
+    /// order. Two reports digest equal iff their per-stream statistics
+    /// are byte-identical — this is the oracle the parallel-vs-serial
+    /// identity tests and the bench workload fingerprints rest on.
+    pub fn stats_digest(&self) -> u64 {
+        let mut words: Vec<u64> = Vec::new();
+        words.push(self.per_stream.len() as u64);
+        words.push(self.rejected as u64);
+        for s in &self.per_stream {
+            words.push(s.spec.hw.0 as u64);
+            words.push(s.spec.hw.1 as u64);
+            words.push(s.spec.target_fps.to_bits());
+            words.push(s.spec.qos as u64);
+            words.push(s.released);
+            words.push(s.shed);
+            words.push(s.metrics.frames as u64);
+            words.push(s.metrics.deadline_misses as u64);
+            words.extend(s.metrics.latency_ms.iter().map(|l| l.to_bits()));
+        }
+        words.push(self.bus_utilization.to_bits());
+        words.push(self.chip_utilization.to_bits());
+        fnv1a(words)
     }
 }
 

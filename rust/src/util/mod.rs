@@ -8,5 +8,5 @@ mod stats;
 mod units;
 
 pub use rng::Rng;
-pub use stats::{mean, percentile, stddev};
+pub use stats::{fnv1a, mean, percentile, stddev};
 pub use units::{fmt_bytes, fmt_rate, gb, kb, mb};

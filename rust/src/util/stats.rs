@@ -1,5 +1,23 @@
 //! Tiny statistics helpers for metrics and benchmarks.
 
+/// FNV-1a over a stream of 64-bit words (little-endian byte order).
+///
+/// The crate's one content-fingerprint primitive: used by
+/// [`crate::model::Network::structural_hash`]-style keys, the
+/// [`crate::plan::PlanCache`] config hash, and the bench subsystem's
+/// workload/stats digests, so "same digest" means the same thing
+/// everywhere.
+pub fn fnv1a(words: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
 /// Arithmetic mean; 0 for empty input.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {

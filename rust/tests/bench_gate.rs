@@ -1,0 +1,127 @@
+//! The bench regression gate, end to end through the on-disk format:
+//! emit a baseline `BENCH_*.json`, reload it, and verify an injected 2x
+//! slowdown (and only a genuine worsening) trips the gate that makes
+//! `bench --against` exit nonzero.
+
+use std::path::PathBuf;
+
+use rcnet_dla::bench::{
+    compare_reports, fingerprint_hex, BenchReport, Direction, Measurement, Metric,
+};
+
+fn sample_report() -> BenchReport {
+    let mut rep = BenchReport::new("fleet", true);
+    rep.measurements.push(Measurement {
+        id: "fleet/chips=8/streams=64/sec=1/seed=1/threads=auto".into(),
+        wall_ms: 120.0,
+        fingerprint: fingerprint_hex([8, 64, 1]),
+        metrics: vec![
+            Metric { name: "virtual_throughput_fps".into(), value: 950.0, better: Direction::Higher },
+            Metric { name: "p99_ms".into(), value: 45.0, better: Direction::Lower },
+            Metric { name: "miss_rate".into(), value: 0.02, better: Direction::Lower },
+            Metric { name: "admitted".into(), value: 64.0, better: Direction::Info },
+        ],
+    });
+    rep.measurements.push(Measurement {
+        id: "plan-cache/warm-hits-x1000".into(),
+        wall_ms: 0.8,
+        fingerprint: String::new(),
+        metrics: Vec::new(),
+    });
+    rep
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rcnet-bench-{}-{name}", std::process::id()))
+}
+
+#[test]
+fn baseline_round_trips_through_disk() {
+    let rep = sample_report();
+    let path = temp_path("roundtrip.json");
+    rep.write(&path).expect("write baseline");
+    let loaded = BenchReport::load(&path).expect("load baseline");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(rep, loaded);
+    // And the self-comparison passes with zero drift.
+    let out = compare_reports(&loaded, &rep, 0.15);
+    assert!(out.passed());
+    assert_eq!(out.compared, 2);
+    assert!(out.fingerprint_drift.is_empty());
+}
+
+#[test]
+fn injected_2x_slowdown_fails_the_gate() {
+    let baseline = sample_report();
+    let path = temp_path("slowdown.json");
+    baseline.write(&path).expect("write baseline");
+    let baseline = BenchReport::load(&path).expect("load baseline");
+    std::fs::remove_file(&path).ok();
+
+    let mut current = sample_report();
+    for m in &mut current.measurements {
+        m.wall_ms *= 2.0; // the injected slowdown
+    }
+    let out = compare_reports(&baseline, &current, 0.15);
+    assert!(!out.passed(), "a 2x slowdown must gate");
+    // Every measurement's wall time regressed.
+    assert_eq!(out.regressions.len(), 2);
+    assert!(out.regressions.iter().all(|r| r.metric == "wall_ms"));
+    assert!(out.regressions.iter().all(|r| (r.ratio - 2.0).abs() < 1e-9));
+    // This outcome is exactly what makes the CLI `bench --against`
+    // bail out with a nonzero exit status.
+    let text = out.render("fleet", 0.15);
+    assert!(text.contains("FAIL"));
+    assert!(text.contains("REGRESSION"));
+}
+
+#[test]
+fn deterministic_metric_drift_gates_and_fingerprints_warn() {
+    let baseline = sample_report();
+
+    // p99 worsens 60% — gated even with wall times unchanged.
+    let mut worse = sample_report();
+    worse.measurements[0].metrics[1].value = 72.0;
+    let out = compare_reports(&baseline, &worse, 0.15);
+    assert!(!out.passed());
+    assert_eq!(out.regressions[0].metric, "p99_ms");
+
+    // Info metrics never gate.
+    let mut info = sample_report();
+    info.measurements[0].metrics[3].value = 1.0;
+    assert!(compare_reports(&baseline, &info, 0.15).passed());
+
+    // Fingerprint drift alone warns but does not gate.
+    let mut drifted = sample_report();
+    drifted.measurements[0].fingerprint = fingerprint_hex([9, 9, 9]);
+    let out = compare_reports(&baseline, &drifted, 0.15);
+    assert!(out.passed());
+    assert_eq!(out.fingerprint_drift.len(), 1);
+}
+
+#[test]
+fn bootstrap_baseline_file_passes_trivially() {
+    // The exact shape committed at the repo root before the first real
+    // baseline lands: bootstrap = true, no measurements.
+    let txt = r#"{"schema":"rcnet-dla/bench/v1","kind":"fleet","quick":true,"bootstrap":true,"measurements":[]}"#;
+    let path = temp_path("bootstrap.json");
+    std::fs::write(&path, txt).expect("write bootstrap baseline");
+    let baseline = BenchReport::load(&path).expect("load bootstrap baseline");
+    std::fs::remove_file(&path).ok();
+    assert!(baseline.bootstrap);
+    let out = compare_reports(&baseline, &sample_report(), 0.15);
+    assert!(out.passed());
+    assert_eq!(out.compared, 0);
+    assert_eq!(out.new_ids.len(), 2);
+}
+
+#[test]
+fn corrupt_or_wrong_schema_files_are_rejected() {
+    let path = temp_path("corrupt.json");
+    std::fs::write(&path, "{not json").expect("write");
+    assert!(BenchReport::load(&path).is_err());
+    std::fs::write(&path, r#"{"schema":"other/v9","kind":"fleet","measurements":[]}"#)
+        .expect("write");
+    assert!(BenchReport::load(&path).is_err());
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,106 @@
+//! The parallel engine's identity guarantee: for any seed and any
+//! worker count, the sharded multi-threaded fleet engine produces
+//! **byte-identical** per-stream statistics (p50/p99, miss/shed, every
+//! recorded latency bit) to the serial reference engine. This is the
+//! property every future "make the fleet faster" change is held to.
+
+use rcnet_dla::serve::{
+    run_fleet, run_fleet_with, AdmissionPolicy, FleetConfig, FleetReport, QosClass, StreamSpec,
+};
+
+fn cfg(seed: u64, threads: usize) -> FleetConfig {
+    FleetConfig {
+        streams: 24,
+        chips: 6,
+        bus_mbps: 2000.0,
+        seconds: 1.0,
+        seed,
+        threads,
+        ..FleetConfig::default()
+    }
+}
+
+/// Byte-identity oracle: the stats digest folds every observable bit;
+/// the Display string is the human-facing cross-check.
+fn assert_identical(a: &FleetReport, b: &FleetReport, what: &str) {
+    assert_eq!(a.stats_digest(), b.stats_digest(), "stats digest diverged: {what}");
+    assert_eq!(a.to_string(), b.to_string(), "report text diverged: {what}");
+    assert_eq!(a.rejected, b.rejected, "{what}");
+    assert!(
+        a.bus_utilization.to_bits() == b.bus_utilization.to_bits()
+            && a.chip_utilization.to_bits() == b.chip_utilization.to_bits(),
+        "utilization bits diverged: {what}"
+    );
+}
+
+#[test]
+fn parallel_is_byte_identical_across_seeds_and_thread_counts() {
+    for seed in [1u64, 7, 23] {
+        let serial = run_fleet(&cfg(seed, 1)).expect("serial run");
+        assert!(serial.released() > 0, "seed {seed} released nothing");
+        for threads in [2usize, 4] {
+            let parallel = run_fleet(&cfg(seed, threads)).expect("parallel run");
+            assert_identical(&serial, &parallel, &format!("seed {seed}, {threads} threads"));
+        }
+    }
+}
+
+#[test]
+fn auto_thread_count_is_identical_too() {
+    let serial = run_fleet(&cfg(11, 1)).expect("serial run");
+    let auto = run_fleet(&cfg(11, 0)).expect("auto-threaded run");
+    assert_identical(&serial, &auto, "threads=auto");
+}
+
+#[test]
+fn more_workers_than_chips_or_streams_is_identical() {
+    // Worker count far above both shard dimensions: most workers own an
+    // empty shard, which must not perturb the merge order.
+    let serial = run_fleet(&cfg(5, 1)).expect("serial run");
+    let oversharded = run_fleet(&cfg(5, 64)).expect("oversharded run");
+    assert_identical(&serial, &oversharded, "64 workers over 6 chips");
+}
+
+#[test]
+fn identity_holds_under_contention_and_shedding() {
+    // A starved bus forces expiry shedding, queue overflow and deadline
+    // misses — the paths where a merge-order bug would first show up.
+    let base = FleetConfig {
+        streams: 32,
+        chips: 4,
+        bus_mbps: 100.0,
+        seconds: 1.5,
+        seed: 3,
+        admission: AdmissionPolicy::AdmitAll,
+        ..FleetConfig::default()
+    };
+    let serial = run_fleet(&FleetConfig { threads: 1, ..base }).expect("serial run");
+    assert!(
+        serial.shed() > 0 || serial.missed() > 0,
+        "workload must actually contend to exercise the shed/miss paths"
+    );
+    let parallel = run_fleet(&FleetConfig { threads: 3, ..base }).expect("parallel run");
+    assert_identical(&serial, &parallel, "contended workload");
+}
+
+#[test]
+fn identity_holds_for_explicit_uniform_stream_lists() {
+    // Same-rate same-QoS streams maximize EDF deadline ties: the pinned
+    // (stream id, seq) tie-break is what keeps the engines aligned here.
+    let specs =
+        vec![StreamSpec { hw: (720, 1280), target_fps: 30.0, qos: QosClass::Silver }; 12];
+    let base = FleetConfig {
+        streams: specs.len(),
+        chips: 4,
+        bus_mbps: 1500.0,
+        seconds: 1.0,
+        seed: 9,
+        admission: AdmissionPolicy::AdmitAll,
+        ..FleetConfig::default()
+    };
+    let serial =
+        run_fleet_with(&FleetConfig { threads: 1, ..base }, &specs).expect("serial run");
+    let parallel =
+        run_fleet_with(&FleetConfig { threads: 4, ..base }, &specs).expect("parallel run");
+    assert_identical(&serial, &parallel, "uniform tie-heavy stream list");
+}
