@@ -7,7 +7,7 @@ use rcnet_dla::model::Network;
 use rcnet_dla::report::tables::TableBuilder;
 use rcnet_dla::report::ablation::{ablation_rows, AblationTask};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rcnet_dla::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let net = args
         .iter()

@@ -10,7 +10,7 @@ use rcnet_dla::report::sweep::{buffer_sweep, SweepPoint};
 use rcnet_dla::report::tables::TableBuilder;
 use rcnet_dla::util::kb;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rcnet_dla::Result<()> {
     let fullhd = std::env::args().any(|a| a == "--fullhd");
     let hw = if fullhd { (1080, 1920) } else { (720, 1280) };
 

@@ -17,7 +17,7 @@ use rcnet_dla::report::spec::spec_to_network;
 use rcnet_dla::runtime::Runtime;
 use rcnet_dla::util::json::Json;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rcnet_dla::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let frames: usize = args
         .iter()
@@ -49,11 +49,11 @@ fn main() -> anyhow::Result<()> {
     // The chip-side story for the same network at true HD.
     println!("\n== DLA cycle/traffic model at 1280x720 @ 30FPS ==");
     let spec_txt = std::fs::read_to_string("artifacts/model_spec.json")?;
-    let spec = Json::parse(&spec_txt).map_err(|e| anyhow::anyhow!(e))?;
+    let spec = Json::parse(&spec_txt).map_err(|e| rcnet_dla::err!(e))?;
     let (net, groups) = spec_to_network(&spec)?;
     let chip = ChipConfig::paper_chip();
     let (sim, _) = simulate_fused(&net, &groups, (720, 1280), &chip)
-        .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        .map_err(|e| rcnet_dla::err!("{e:?}"))?;
     let traffic = sim.total_dram_bytes() as f64 * 30.0;
     println!(
         "chip latency {:.1} ms/frame ({:.1} FPS), PE util {:.0}%",

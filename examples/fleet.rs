@@ -9,7 +9,7 @@
 
 use rcnet_dla::serve::{run_fleet, FleetConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rcnet_dla::Result<()> {
     let base = FleetConfig { streams: 32, chips: 8, seconds: 4.0, ..FleetConfig::default() };
     for bus_mbps in [4680.0, 1170.0, 585.0] {
         println!("== shared bus budget: {bus_mbps} MB/s ==");

@@ -14,7 +14,7 @@ use rcnet_dla::model::zoo;
 use rcnet_dla::traffic::TrafficModel;
 use rcnet_dla::util::fmt_rate;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rcnet_dla::Result<()> {
     // 1. Baseline + lightweight conversion (§II-B).
     let base = zoo::yolov2(3, 5);
     let converted = zoo::yolov2_converted(3, 5);
@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
     let chip = ChipConfig::paper_chip();
     let lbl_sim = simulate_layer_by_layer(&out.network, wl.hw, &chip);
     let (fus_sim, _) = simulate_fused(&out.network, &out.groups, wl.hw, &chip)
-        .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        .map_err(|e| rcnet_dla::err!("{e:?}"))?;
     println!("\n-- DLA cycle model --");
     println!(
         "layer-by-layer: {:.1} ms/frame ({:.1} FPS)",

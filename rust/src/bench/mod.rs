@@ -4,9 +4,10 @@
 //! repo's own throughput a first-class, regression-gated artifact. It
 //! runs standardized workloads — fleet scaling over the parallel engine,
 //! planner DP-vs-greedy across the model zoo, fused vs layer-by-layer
-//! schedule simulation — and emits one JSON report per family
-//! (`BENCH_fleet.json`, `BENCH_planner.json`) that CI uploads and gates
-//! against the committed baselines at the repository root.
+//! schedule simulation, and phase-level trace construction — and emits
+//! one JSON report per family (`BENCH_fleet.json`, `BENCH_planner.json`,
+//! `BENCH_trace.json`) that CI uploads and gates against the committed
+//! baselines at the repository root.
 //!
 //! Every measurement separates two kinds of numbers:
 //!
@@ -29,7 +30,7 @@ mod compare;
 mod workloads;
 
 pub use compare::{compare_reports, CompareOutcome, Regression};
-pub use workloads::{fleet_report, planner_report, BenchProfile};
+pub use workloads::{fleet_report, planner_report, trace_report, BenchProfile};
 
 use std::path::Path;
 use std::time::Instant;
@@ -110,7 +111,7 @@ impl Measurement {
 /// A full benchmark report: one workload family, one JSON file.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchReport {
-    /// Report family (`"fleet"` or `"planner"`).
+    /// Report family (`"fleet"`, `"planner"` or `"trace"`).
     pub kind: String,
     /// True when produced by the reduced `--quick` CI profile.
     pub quick: bool,
@@ -169,12 +170,12 @@ impl BenchReport {
     pub fn from_json(j: &Json) -> Result<Self> {
         let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
         if schema != Self::SCHEMA {
-            anyhow::bail!("bench report schema {schema:?} != {:?}", Self::SCHEMA);
+            crate::bail!("bench report schema {schema:?} != {:?}", Self::SCHEMA);
         }
         let kind = j
             .get("kind")
             .and_then(Json::as_str)
-            .ok_or_else(|| anyhow::anyhow!("bench report missing \"kind\""))?
+            .ok_or_else(|| crate::err!("bench report missing \"kind\""))?
             .to_string();
         let quick = j.get("quick").and_then(Json::as_bool).unwrap_or(false);
         let bootstrap = j.get("bootstrap").and_then(Json::as_bool).unwrap_or(false);
@@ -183,12 +184,12 @@ impl BenchReport {
             let id = m
                 .get("id")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow::anyhow!("measurement missing \"id\""))?
+                .ok_or_else(|| crate::err!("measurement missing \"id\""))?
                 .to_string();
             let wall_ms = m
                 .get("wall_ms")
                 .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow::anyhow!("measurement {id}: missing \"wall_ms\""))?;
+                .ok_or_else(|| crate::err!("measurement {id}: missing \"wall_ms\""))?;
             let fingerprint =
                 m.get("fingerprint").and_then(Json::as_str).unwrap_or("").to_string();
             let mut metrics = Vec::new();
@@ -196,17 +197,17 @@ impl BenchReport {
                 let name = x
                     .get("name")
                     .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow::anyhow!("measurement {id}: metric missing name"))?
+                    .ok_or_else(|| crate::err!("measurement {id}: metric missing name"))?
                     .to_string();
                 let value = x
                     .get("value")
                     .and_then(Json::as_f64)
-                    .ok_or_else(|| anyhow::anyhow!("measurement {id}: metric {name} not a number"))?;
+                    .ok_or_else(|| crate::err!("measurement {id}: metric {name} not a number"))?;
                 let better = x
                     .get("better")
                     .and_then(Json::as_str)
                     .and_then(Direction::parse)
-                    .ok_or_else(|| anyhow::anyhow!("measurement {id}: metric {name} bad direction"))?;
+                    .ok_or_else(|| crate::err!("measurement {id}: metric {name} bad direction"))?;
                 metrics.push(Metric { name, value, better });
             }
             measurements.push(Measurement { id, wall_ms, fingerprint, metrics });
@@ -217,9 +218,9 @@ impl BenchReport {
     /// Load a report from disk.
     pub fn load(path: &Path) -> Result<Self> {
         let txt = std::fs::read_to_string(path)
-            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+            .map_err(|e| crate::err!("reading {}: {e}", path.display()))?;
         let j = Json::parse(&txt)
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+            .map_err(|e| crate::err!("parsing {}: {e}", path.display()))?;
         Self::from_json(&j)
     }
 
@@ -228,7 +229,7 @@ impl BenchReport {
         let mut txt = self.to_json().to_string();
         txt.push('\n');
         std::fs::write(path, txt)
-            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+            .map_err(|e| crate::err!("writing {}: {e}", path.display()))?;
         Ok(())
     }
 }

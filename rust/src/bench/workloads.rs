@@ -17,6 +17,11 @@
 //!   fused vs layer-by-layer schedule simulation of the deployed
 //!   RC-YOLOv2, and the warm plan-cache hit path the fleet's admission
 //!   control rides.
+//! * **trace** ([`trace_report`]) — phase-level execution-trace
+//!   construction for the deployed RC-YOLOv2 (fused and layer-by-layer),
+//!   frame-cost/burst-profile derivation, and Chrome-trace
+//!   serialization, so the perf gate covers the cost of the trace core
+//!   everything else now reduces from.
 //!
 //! Workload ids never encode anything machine-dependent (the resolved
 //!   `auto` worker count is recorded as an `info` metric instead), so
@@ -24,7 +29,7 @@
 //! times differ.
 
 use crate::config::ChipConfig;
-use crate::dla::{simulate_fused, simulate_layer_by_layer};
+use crate::dla::{simulate_fused, simulate_layer_by_layer, trace_fused, trace_layer_by_layer};
 use crate::fusion::FusionConfig;
 use crate::model::zoo::{plan_fixtures, yolov2_converted, PAPER_RESOLUTIONS};
 use crate::plan::{PlanCache, Planner};
@@ -164,7 +169,7 @@ pub fn fleet_report(profile: BenchProfile) -> Result<BenchReport> {
 
         // Every bench run is also a determinism check.
         if serial.stats_digest() != parallel.stats_digest() {
-            anyhow::bail!(
+            crate::bail!(
                 "parallel fleet diverged from serial at chips={chips} streams={streams}"
             );
         }
@@ -282,7 +287,7 @@ pub fn planner_report(profile: BenchProfile) -> Result<BenchReport> {
         let plan = Planner::OptimalDp.plan(&rc, &rc_cfg, &chip, hw);
         let (fused, fused_ms) = best_of_ms(iters, || simulate_fused(&rc, &plan.groups, hw, &chip));
         let (fused, _group_sims) =
-            fused.map_err(|e| anyhow::anyhow!("fused schedule at {hw:?}: {e:?}"))?;
+            fused.map_err(|e| crate::err!("fused schedule at {hw:?}: {e:?}"))?;
         let (lbl, lbl_ms) = best_of_ms(iters, || simulate_layer_by_layer(&rc, hw, &chip));
         for (mode, ms, sim) in [("fused", fused_ms, &fused), ("layer-by-layer", lbl_ms, &lbl)] {
             rep.measurements.push(Measurement {
@@ -331,6 +336,97 @@ pub fn planner_report(profile: BenchProfile) -> Result<BenchReport> {
     Ok(rep)
 }
 
+/// Run the trace workload family (see the module docs): build cost of
+/// the phase-level execution traces everything else reduces from, plus
+/// burst-profile derivation and Chrome-trace serialization.
+pub fn trace_report(profile: BenchProfile) -> Result<BenchReport> {
+    let mut rep = BenchReport::new("trace", profile == BenchProfile::Quick);
+    let chip = ChipConfig::paper_chip();
+    let iters = profile.plan_iters();
+
+    let spec = build_deployment_spec(PipelineProfile::Hd, 3, 5, None, 7);
+    let (rc, _build_groups) = spec_to_network(&spec)?;
+    let rc_cfg = FusionConfig { slack: 0.0, ..FusionConfig::paper_default() };
+    for &hw in profile.schedule_resolutions() {
+        let res = format!("{}x{}", hw.1, hw.0);
+        let plan = Planner::OptimalDp.plan(&rc, &rc_cfg, &chip, hw);
+
+        // Trace construction, both schedules.
+        let (fused, fused_ms) =
+            best_of_ms(iters, || trace_fused(&rc, &plan.groups, hw, &chip));
+        let (fused, _tilings) =
+            fused.map_err(|e| crate::err!("fused trace at {hw:?}: {e:?}"))?;
+        let (lbl, lbl_ms) = best_of_ms(iters, || trace_layer_by_layer(&rc, hw, &chip));
+        for (mode, ms, t) in [("fused", fused_ms, &fused), ("layer-by-layer", lbl_ms, &lbl)] {
+            let cost = t.frame_cost();
+            rep.measurements.push(Measurement {
+                id: format!("trace-build/res={res}/mode={mode}"),
+                wall_ms: ms,
+                fingerprint: fingerprint_hex(
+                    [
+                        rc.structural_hash(),
+                        hw.0 as u64,
+                        hw.1 as u64,
+                        t.total_cycles(),
+                        t.dram_bytes(),
+                        t.sram_bytes(),
+                        t.macs(),
+                        t.phases.len() as u64,
+                    ]
+                    .into_iter()
+                    .chain(cost.profile.digest_words()),
+                ),
+                metrics: vec![
+                    Metric {
+                        name: "latency_ms".into(),
+                        value: t.latency_ms(),
+                        better: Direction::Lower,
+                    },
+                    Metric {
+                        name: "dram_mb_frame".into(),
+                        value: t.dram_bytes() as f64 / 1e6,
+                        better: Direction::Lower,
+                    },
+                    Metric {
+                        name: "phases".into(),
+                        value: t.phases.len() as f64,
+                        better: Direction::Info,
+                    },
+                    Metric {
+                        name: "burst_peak_to_mean".into(),
+                        value: cost.profile.peak_to_mean(),
+                        better: Direction::Info,
+                    },
+                ],
+            });
+        }
+
+        // Frame-cost (histogram + burst profile) derivation on the warm
+        // trace — the path fleet admission rides per operating point.
+        let (_, cost_ms) = best_of_ms(iters, || fused.frame_cost());
+        rep.measurements.push(Measurement {
+            id: format!("trace-cost/res={res}"),
+            wall_ms: cost_ms,
+            fingerprint: String::new(),
+            metrics: Vec::new(),
+        });
+
+        // Chrome-trace serialization (the `trace` CLI subcommand body).
+        let (doc, chrome_ms) = best_of_ms(iters, || fused.to_chrome_json().to_string());
+        rep.measurements.push(Measurement {
+            id: format!("trace-chrome/res={res}"),
+            wall_ms: chrome_ms,
+            fingerprint: fingerprint_hex([crate::util::fnv1a(doc.bytes().map(u64::from))]),
+            metrics: vec![Metric {
+                name: "json_bytes".into(),
+                value: doc.len() as f64,
+                better: Direction::Info,
+            }],
+        });
+    }
+    Ok(rep)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -362,6 +458,26 @@ mod tests {
         }
         // Deterministic across runs: same ids, same fingerprints.
         let again = planner_report(BenchProfile::Quick).expect("planner report");
+        let a: Vec<_> = rep.measurements.iter().map(|m| (&m.id, &m.fingerprint)).collect();
+        let b: Vec<_> = again.measurements.iter().map(|m| (&m.id, &m.fingerprint)).collect();
+        assert_eq!(a, b);
+    }
+
+    /// The trace family must fingerprint every build/serialization entry
+    /// and stay fingerprint-deterministic across runs (the CI trace
+    /// determinism check in executable form).
+    #[test]
+    fn quick_trace_report_is_well_formed_and_deterministic() {
+        let rep = trace_report(BenchProfile::Quick).expect("trace report");
+        assert_eq!(rep.kind, "trace");
+        assert!(rep.measurements.iter().any(|m| m.id.starts_with("trace-build/")));
+        for m in &rep.measurements {
+            assert!(!m.id.contains(' '), "ids are space-free: {}", m.id);
+            if m.id.starts_with("trace-build/") || m.id.starts_with("trace-chrome/") {
+                assert!(m.fingerprint.starts_with("0x"), "{}", m.id);
+            }
+        }
+        let again = trace_report(BenchProfile::Quick).expect("trace report");
         let a: Vec<_> = rep.measurements.iter().map(|m| (&m.id, &m.fingerprint)).collect();
         let b: Vec<_> = again.measurements.iter().map(|m| (&m.id, &m.fingerprint)).collect();
         assert_eq!(a, b);

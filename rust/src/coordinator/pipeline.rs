@@ -5,7 +5,7 @@ use std::fmt;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use crate::Result;
 
 use crate::data;
 use crate::detect::map::{GroundTruth, TaggedDetection};

@@ -11,7 +11,9 @@
 //!
 //! * [`pe`] — per-layer compute-cycle model of the MAC array.
 //! * [`buffer`] — the banked unified buffer with write-masking transpose.
-//! * [`schedule`] — layer-by-layer vs group-fused frame schedules.
+//! * [`schedule`] — layer-by-layer vs group-fused frame schedules, built
+//!   as phase-level [`crate::trace::ExecutionTrace`]s that every
+//!   aggregate (latency, traffic, energy, fleet cost) reduces from.
 
 pub mod buffer;
 pub mod pe;
@@ -19,7 +21,10 @@ pub mod schedule;
 
 pub use buffer::UnifiedBufferHalf;
 pub use pe::{layer_compute_cycles, layer_sram_bytes, LayerPeStats};
-pub use schedule::{simulate_fused, simulate_layer_by_layer, FrameSim, GroupSim, LayerSim};
+pub use schedule::{
+    simulate_fused, simulate_layer_by_layer, trace_fused, trace_layer_by_layer, FrameSim,
+    GroupSim, LayerSim,
+};
 
 /// DDR3 peak bandwidth the paper assumes available (12.8 GB/s).
 pub const DDR3_BYTES_PER_S: f64 = 12.8e9;

@@ -1,18 +1,30 @@
 //! Frame schedules: layer-by-layer (prior design [5]) vs group-fused
-//! (this chip). Produces latency, utilization, SRAM/DRAM byte counts —
-//! the inputs of Fig. 13 (latency/bandwidth vs buffer size) and the
-//! energy model's event counts.
+//! (this chip), built as **execution traces**.
+//!
+//! The builders ([`trace_layer_by_layer`], [`trace_fused`]) emit a
+//! phase-level [`ExecutionTrace`] — weight DMA, ifmap load, compute,
+//! SRAM streaming, writeback, each with a cycle span and byte counts —
+//! and every aggregate this module reports is a *reduction* over that
+//! trace: [`FrameSim`]/[`GroupSim`] fold it per layer and per group, the
+//! energy model folds it into [`ExecutionEvents`]
+//! ([`ExecutionEvents::per_frame`]), and the trace's DRAM byte totals are
+//! pinned byte-for-byte to the analytic [`TrafficModel`] by the
+//! `tests/trace.rs` property suite, so the timing, traffic and energy
+//! paths can no longer drift apart.
 //!
 //! Timing model per scheduled step: compute and DMA overlap (double
 //! buffering), SRAM port pressure bounds the streaming rate, so
 //! `cycles = max(compute, sram_port, dram)` + a per-step pipeline-fill
-//! overhead. DRAM transfers at DDR3 peak 12.8 GB/s.
+//! overhead. DRAM transfers at DDR3 peak 12.8 GB/s. Within a step, the
+//! DMA engine orders its phases weight → ifmap → writeback with span
+//! boundaries proportional to cumulative bytes (exact integer split).
 
 use crate::config::ChipConfig;
 use crate::energy::ExecutionEvents;
 use crate::fusion::FusionGroup;
 use crate::model::Network;
 use crate::tile::{plan_group, GroupTiling, TileError};
+use crate::trace::{ExecutionTrace, PhaseKind, ScheduleKind, TraceBuilder};
 use crate::traffic::TrafficModel;
 
 use super::pe::{layer_compute_cycles, layer_sram_bytes, layer_sram_components};
@@ -56,7 +68,8 @@ pub struct GroupSim {
     pub dram_bytes: u64,
 }
 
-/// Whole-frame simulation result.
+/// Whole-frame simulation result — a per-layer reduction of an
+/// [`ExecutionTrace`] (see [`FrameSim::from_trace`]).
 #[derive(Debug, Clone)]
 pub struct FrameSim {
     /// Per-layer records, in execution order.
@@ -68,13 +81,71 @@ pub struct FrameSim {
 }
 
 impl FrameSim {
-    /// Frame latency in milliseconds.
+    /// Fold a trace into per-layer records: step spans give each layer
+    /// its pipeline cycles, phases give its MAC/SRAM/DRAM counts (a
+    /// group's weight DMA is attributed to its first layer, matching the
+    /// per-layer DRAM view). Utilization keeps the schedule's historical
+    /// definition: compute-phase cycles under layer-by-layer, whole-step
+    /// cycles under group fusion.
+    pub fn from_trace(trace: &ExecutionTrace, chip: &ChipConfig) -> FrameSim {
+        let n = trace.layer_names.len();
+        let mut layers: Vec<LayerSim> = trace
+            .layer_names
+            .iter()
+            .map(|name| LayerSim {
+                name: name.clone(),
+                cycles: 0,
+                macs: 0,
+                utilization: 0.0,
+                sram_bytes: 0,
+                dram_bytes: 0,
+            })
+            .collect();
+        let mut compute_cycles = vec![0u64; n];
+        for s in &trace.steps {
+            if let Some(i) = s.layer {
+                layers[i].cycles += s.cycles();
+            }
+        }
+        for p in &trace.phases {
+            let l = &mut layers[p.layer];
+            l.macs += p.macs;
+            l.sram_bytes += p.sram_bytes;
+            l.dram_bytes += p.dram_bytes;
+            if p.kind == PhaseKind::Compute {
+                compute_cycles[p.layer] += p.cycles();
+            }
+        }
+        for (i, l) in layers.iter_mut().enumerate() {
+            let denom = match trace.schedule {
+                ScheduleKind::LayerByLayer => compute_cycles[i],
+                ScheduleKind::GroupFused => l.cycles,
+            };
+            l.utilization = if denom == 0 {
+                0.0
+            } else {
+                l.macs as f64 / (denom as f64 * chip.total_macs() as f64)
+            };
+        }
+        FrameSim { layers, total_cycles: trace.total_cycles(), clock_hz: trace.clock_hz }
+    }
+
+    /// Frame latency in milliseconds (0.0 for an empty frame, so
+    /// [`FrameSim::fps`] never divides by zero).
     pub fn latency_ms(&self) -> f64 {
+        if self.total_cycles == 0 || self.clock_hz <= 0.0 {
+            return 0.0;
+        }
         self.total_cycles as f64 / self.clock_hz * 1e3
     }
-    /// Sustained frame rate (1 / latency).
+    /// Sustained frame rate (1 / latency; 0.0 for an empty frame).
     pub fn fps(&self) -> f64 {
-        1e3 / self.latency_ms()
+        let latency = self.latency_ms();
+        if latency <= 0.0 {
+            0.0
+        } else {
+            1e3 / latency
+        }
     }
     /// Total MAC operations over the frame.
     pub fn total_macs(&self) -> u64 {
@@ -112,65 +183,83 @@ fn sram_port_cycles(bytes: u64, chip: &ChipConfig) -> u64 {
     bytes.div_ceil(port)
 }
 
-/// Layer-by-layer schedule: every layer streams its input from DRAM and
-/// its output back; weights stream once per layer.
-pub fn simulate_layer_by_layer(net: &Network, hw: (u32, u32), chip: &ChipConfig) -> FrameSim {
+fn layer_names(net: &Network) -> Vec<String> {
+    net.layers.iter().map(|l| l.name.clone()).collect()
+}
+
+/// Layer-by-layer schedule as a trace: every layer streams its input
+/// from DRAM and its output back; weights stream once per layer.
+pub fn trace_layer_by_layer(net: &Network, hw: (u32, u32), chip: &ChipConfig) -> ExecutionTrace {
     let shapes = net.shapes(hw);
     let traffic = TrafficModel::new(*chip).layer_by_layer(net, hw);
-    let mut layers = Vec::with_capacity(net.layers.len());
-    let mut total = 0u64;
+    let mut b = TraceBuilder::new(ScheduleKind::LayerByLayer, chip.clock_hz, layer_names(net));
     for (i, l) in net.layers.iter().enumerate() {
         let pe = layer_compute_cycles(l, &shapes[i], chip);
         let sram = layer_sram_bytes(l, &shapes[i], chip);
         let (r, w, wb) = layer_sram_components(l, &shapes[i], chip);
-        let dram = traffic.per_layer[i].total();
-        let cycles = pe
-            .compute_cycles
-            .max(sram_port_cycles(r, chip))
+        let t = &traffic.per_layer[i];
+        let sram_cycles = sram_port_cycles(r, chip)
             .max(sram_port_cycles(w, chip))
-            .max(sram_port_cycles(wb, chip))
-            .max(dram_cycles(dram, chip))
+            .max(sram_port_cycles(wb, chip));
+        let dma_cycles = dram_cycles(t.total(), chip);
+        let cycles = pe.compute_cycles.max(sram_cycles).max(dma_cycles)
             + if l.is_epilogue() { 0 } else { STEP_OVERHEAD_CYCLES };
-        total += cycles;
-        layers.push(LayerSim {
-            name: l.name.clone(),
-            cycles,
-            macs: pe.macs,
-            utilization: pe.utilization,
-            sram_bytes: sram,
-            dram_bytes: dram,
-        });
+        let (step, t0) = b.begin_step(Some(i), None, cycles);
+        if pe.compute_cycles > 0 || pe.macs > 0 {
+            b.phase(PhaseKind::Compute, step, i, None, t0, pe.compute_cycles, 0, 0, pe.macs);
+        }
+        if sram > 0 {
+            b.phase(PhaseKind::SramStream, step, i, None, t0, sram_cycles, 0, sram, 0);
+        }
+        b.dma_burst(
+            step,
+            None,
+            t0,
+            dma_cycles,
+            &[
+                (PhaseKind::WeightDma, i, t.weight_bytes),
+                (PhaseKind::IfmapLoad, i, t.feat_in_bytes),
+                (PhaseKind::Writeback, i, t.feat_out_bytes),
+            ],
+        );
     }
-    FrameSim { layers, total_cycles: total, clock_hz: chip.clock_hz }
+    b.finish()
 }
 
-/// Group-fused schedule: per group, per tile, layer-by-layer *inside the
-/// unified buffer*; DRAM moves only the group's input/output tiles and
-/// the group weights (once per frame).
-pub fn simulate_fused(
+/// Layer-by-layer schedule, reduced to per-layer aggregates.
+pub fn simulate_layer_by_layer(net: &Network, hw: (u32, u32), chip: &ChipConfig) -> FrameSim {
+    FrameSim::from_trace(&trace_layer_by_layer(net, hw, chip), chip)
+}
+
+/// Group-fused schedule as a trace: per group, one weight-DMA step (the
+/// group's weights load once per frame), then per layer a step covering
+/// all that layer's tiles inside the unified buffer; DRAM moves only the
+/// group's input/output maps (plus cross-group skip re-reads, already
+/// priced by the [`TrafficModel`]). Also returns each group's tiling.
+pub fn trace_fused(
     net: &Network,
     groups: &[FusionGroup],
     hw: (u32, u32),
     chip: &ChipConfig,
-) -> Result<(FrameSim, Vec<GroupSim>), TileError> {
+) -> Result<(ExecutionTrace, Vec<GroupTiling>), TileError> {
     let shapes = net.shapes(hw);
     let traffic = TrafficModel::new(*chip).fused(net, groups, hw);
-    let mut layers: Vec<LayerSim> = Vec::with_capacity(net.layers.len());
-    let mut group_sims = Vec::with_capacity(groups.len());
-    let mut total = 0u64;
+    let mut b = TraceBuilder::new(ScheduleKind::GroupFused, chip.clock_hz, layer_names(net));
+    let mut tilings = Vec::with_capacity(groups.len());
 
-    for g in groups {
+    for (gi, g) in groups.iter().enumerate() {
         let tiling = plan_group(net, g, hw, chip)?;
         let tiles = tiling.tiles as u64;
-        let mut g_cycles = 0u64;
-        let mut g_macs = 0u64;
-        let mut g_sram = 0u64;
-        let mut g_dram = 0u64;
 
         // Weight load for the whole group, once per frame (fits B).
         let w_bytes: u64 = g.weight_bytes(net, chip.precision);
-        g_cycles += dram_cycles(w_bytes, chip);
-        g_dram += w_bytes;
+        let w_cycles = dram_cycles(w_bytes, chip);
+        let (step, t0) = b.begin_step(None, Some(gi), w_cycles);
+        if w_bytes > 0 {
+            // Attributed to the group's first layer for the per-layer
+            // DRAM view.
+            b.phase(PhaseKind::WeightDma, step, g.start, Some(gi), t0, w_cycles, w_bytes, 0, 0);
+        }
 
         for i in g.layer_range() {
             let l = &net.layers[i];
@@ -185,48 +274,76 @@ pub fn simulate_fused(
             // buffer reads/writes + weight fetches.
             let sram_full = layer_sram_bytes(l, &s, chip);
             let (r, w, wb) = layer_sram_components(l, &s, chip);
-            let dram_l = traffic.per_layer[i].feat_in_bytes + traffic.per_layer[i].feat_out_bytes;
+            let t = &traffic.per_layer[i];
+            let dram_l = t.feat_in_bytes + t.feat_out_bytes;
             let compute_all_tiles = pe_tile * tiles;
-            let cycles = compute_all_tiles
-                .max(sram_port_cycles(r, chip))
+            let sram_cycles = sram_port_cycles(r, chip)
                 .max(sram_port_cycles(w, chip))
-                .max(sram_port_cycles(wb, chip))
-                .max(dram_cycles(dram_l, chip))
+                .max(sram_port_cycles(wb, chip));
+            let dma_cycles = dram_cycles(dram_l, chip);
+            let cycles = compute_all_tiles.max(sram_cycles).max(dma_cycles)
                 + if l.is_epilogue() { 0 } else { STEP_OVERHEAD_CYCLES * tiles };
             let macs = l.macs_per_out_px() * s.out_px();
-            layers.push(LayerSim {
-                name: l.name.clone(),
+            let (step, t0) = b.begin_step(Some(i), Some(gi), cycles);
+            if compute_all_tiles > 0 || macs > 0 {
+                b.phase(PhaseKind::Compute, step, i, Some(gi), t0, compute_all_tiles, 0, 0, macs);
+            }
+            if sram_full > 0 {
+                b.phase(PhaseKind::SramStream, step, i, Some(gi), t0, sram_cycles, 0, sram_full, 0);
+            }
+            b.dma_burst(
+                step,
+                Some(gi),
+                t0,
+                dma_cycles,
+                &[
+                    (PhaseKind::IfmapLoad, i, t.feat_in_bytes),
+                    (PhaseKind::Writeback, i, t.feat_out_bytes),
+                ],
+            );
+        }
+        tilings.push(tiling);
+    }
+    Ok((b.finish(), tilings))
+}
+
+/// Group-fused schedule, reduced to per-layer and per-group aggregates.
+pub fn simulate_fused(
+    net: &Network,
+    groups: &[FusionGroup],
+    hw: (u32, u32),
+    chip: &ChipConfig,
+) -> Result<(FrameSim, Vec<GroupSim>), TileError> {
+    let (trace, tilings) = trace_fused(net, groups, hw, chip)?;
+    let frame = FrameSim::from_trace(&trace, chip);
+    let group_sims = groups
+        .iter()
+        .zip(tilings)
+        .enumerate()
+        .map(|(gi, (g, tiling))| {
+            let cycles = trace
+                .steps
+                .iter()
+                .filter(|s| s.group == Some(gi))
+                .map(|s| s.cycles())
+                .sum();
+            let (mut macs, mut sram, mut dram) = (0u64, 0u64, 0u64);
+            for p in trace.phases.iter().filter(|p| p.group == Some(gi)) {
+                macs += p.macs;
+                sram += p.sram_bytes;
+                dram += p.dram_bytes;
+            }
+            GroupSim {
+                group: g.clone(),
+                tiling,
                 cycles,
                 macs,
-                utilization: if cycles == 0 { 0.0 } else { macs as f64 / (cycles as f64 * chip.total_macs() as f64) },
-                sram_bytes: sram_full,
-                dram_bytes: dram_l,
-            });
-            g_cycles += cycles;
-            g_macs += macs;
-            g_sram += sram_full;
-            g_dram += dram_l;
-        }
-        total += g_cycles;
-        group_sims.push(GroupSim {
-            group: g.clone(),
-            tiling,
-            cycles: g_cycles,
-            macs: g_macs,
-            sram_bytes: g_sram,
-            dram_bytes: g_dram,
-        });
-    }
-    // Account group weight loads in the layer list? They are already in
-    // the group records; attach them to the first layer of each group for
-    // the per-layer DRAM view.
-    for gs in &group_sims {
-        let w = gs.group.weight_bytes(net, chip.precision);
-        if let Some(l) = layers.get_mut(gs.group.start) {
-            l.dram_bytes += w;
-        }
-    }
-    Ok((FrameSim { layers, total_cycles: total, clock_hz: chip.clock_hz }, group_sims))
+                sram_bytes: sram,
+                dram_bytes: dram,
+            }
+        })
+        .collect();
+    Ok((frame, group_sims))
 }
 
 #[cfg(test)]
@@ -332,5 +449,46 @@ mod tests {
         let (fus, _) = simulate_fused(&net, &groups, (720, 1280), &chip).unwrap();
         let u = fus.mean_utilization(&chip);
         assert!(u > 0.05 && u <= 1.0, "utilization {u}");
+    }
+
+    #[test]
+    fn traces_are_structurally_valid() {
+        let (net, groups) = rc_yolo();
+        let chip = ChipConfig::paper_chip();
+        let lbl = trace_layer_by_layer(&net, (720, 1280), &chip);
+        assert_eq!(lbl.validate(), Vec::<String>::new());
+        let (fus, _) = trace_fused(&net, &groups, (720, 1280), &chip).unwrap();
+        assert_eq!(fus.validate(), Vec::<String>::new());
+        // One step per layer (+ one weight step per group for fused).
+        assert_eq!(lbl.steps.len(), net.layers.len());
+        assert_eq!(fus.steps.len(), net.layers.len() + groups.len());
+    }
+
+    #[test]
+    fn reductions_agree_with_the_trace() {
+        let (net, groups) = rc_yolo();
+        let chip = ChipConfig::paper_chip();
+        let (trace, _) = trace_fused(&net, &groups, (720, 1280), &chip).unwrap();
+        let (sim, gsims) = simulate_fused(&net, &groups, (720, 1280), &chip).unwrap();
+        assert_eq!(sim.total_cycles, trace.total_cycles());
+        assert_eq!(sim.total_dram_bytes(), trace.dram_bytes());
+        assert_eq!(sim.total_sram_bytes(), trace.sram_bytes());
+        assert_eq!(sim.total_macs(), trace.macs());
+        // Group records partition the trace totals.
+        assert_eq!(gsims.iter().map(|g| g.cycles).sum::<u64>(), trace.total_cycles());
+        assert_eq!(gsims.iter().map(|g| g.dram_bytes).sum::<u64>(), trace.dram_bytes());
+    }
+
+    #[test]
+    fn empty_network_has_zero_fps_and_latency() {
+        // The historical fps() divided 1e3 by a zero latency; both
+        // accessors now return 0.0 for an empty frame.
+        let net = Network::new("empty", (720, 1280), 3);
+        let chip = ChipConfig::paper_chip();
+        let sim = simulate_layer_by_layer(&net, (720, 1280), &chip);
+        assert_eq!(sim.total_cycles, 0);
+        assert_eq!(sim.latency_ms(), 0.0);
+        assert_eq!(sim.fps(), 0.0);
+        assert!(sim.fps().is_finite());
     }
 }

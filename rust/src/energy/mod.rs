@@ -35,6 +35,22 @@ impl ExecutionEvents {
             pad_bytes: self.pad_bytes * k,
         }
     }
+
+    /// Event counts of one frame, folded from its execution trace — the
+    /// same totals the schedule reductions report, taken from the single
+    /// source of truth ([`crate::trace`]).
+    pub fn per_frame(trace: &crate::trace::ExecutionTrace) -> Self {
+        ExecutionEvents {
+            macs: trace.macs() as f64,
+            sram_bytes: trace.sram_bytes() as f64,
+            pad_bytes: trace.dram_bytes() as f64,
+        }
+    }
+
+    /// Per-second event rates of a frame trace replayed at `fps`.
+    pub fn per_second(trace: &crate::trace::ExecutionTrace, fps: f64) -> Self {
+        Self::per_frame(trace).scale(fps)
+    }
 }
 
 /// Fig. 14 power split (mW).

@@ -1,0 +1,149 @@
+//! Minimal dynamic error type — the crate's only error currency.
+//!
+//! The repo builds fully offline with **zero** external dependencies (see
+//! the ROADMAP lockfile item: the dependency-free graph is what lets a
+//! valid `Cargo.lock` exist without a registry round-trip). This module
+//! supplies the small slice of `anyhow`'s ergonomics the crate actually
+//! uses: a string-backed [`Error`] that any `std::error::Error` converts
+//! into, the [`err!`]/[`bail!`]/[`ensure!`] constructor macros, and a
+//! [`Context`] extension for annotating failures.
+//!
+//! [`err!`]: crate::err
+//! [`bail!`]: crate::bail
+//! [`ensure!`]: crate::ensure
+
+use std::fmt;
+
+/// A boxed, message-carrying error. Deliberately does **not** implement
+/// `std::error::Error`, so the blanket `From<E: std::error::Error>`
+/// conversion below cannot collide with the reflexive `From<Error>`.
+pub struct Error(String);
+
+impl Error {
+    /// An error from a displayable message.
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `main() -> Result<_, Error>` prints the Debug form on exit;
+        // show the message, not a struct dump.
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(e.to_string())
+    }
+}
+
+/// Crate-wide result alias over [`Error`].
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Context annotation for fallible values, mirroring the `anyhow` trait
+/// of the same name: `ctx` is prepended to the underlying message.
+pub trait Context<T> {
+    /// Annotate the error with a fixed message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Annotate the error with a lazily-built message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{ctx}: {e}")))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error(ctx.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! err {
+    ($fmt:literal $($arg:tt)*) => { $crate::error::Error::msg(format!($fmt $($arg)*)) };
+    ($e:expr) => { $crate::error::Error::msg($e.to_string()) };
+}
+
+/// Return early with an [`Error`] built as by [`err!`].
+///
+/// [`err!`]: crate::err
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::err!($($t)*)) };
+}
+
+/// Return early with an [`Error`] unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        crate::bail!("broke at {}", 7)
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        assert_eq!(fails().unwrap_err().to_string(), "broke at 7");
+        let e = crate::err!("x = {}", 1);
+        assert_eq!(format!("{e}"), "x = 1");
+        assert_eq!(format!("{e:?}"), "x = 1");
+        // Single-expression form accepts any displayable value.
+        let s = String::from("plain");
+        assert_eq!(crate::err!(s).to_string(), "plain");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(v: u32) -> Result<u32> {
+            crate::ensure!(v < 10, "v {v} out of range");
+            Ok(v)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(check(12).unwrap_err().to_string(), "v 12 out of range");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn context_annotates_results_and_options() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        assert_eq!(r.context("outer").unwrap_err().to_string(), "outer: inner");
+        let o: Option<u32> = None;
+        assert_eq!(o.with_context(|| "missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(5u32).context("unused").unwrap(), 5);
+    }
+}

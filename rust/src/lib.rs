@@ -21,8 +21,9 @@
 //!   (depthwise 3x3 + pointwise 1x1 + BN + ReLU6), interpret mode.
 //!
 //! Python never runs on the request path. The default build is fully
-//! offline and dependency-light; enabling `pjrt` additionally requires
-//! the xla_extension toolchain and the out-of-registry `xla` crate (see
+//! offline with zero external dependencies ([`error`] supplies the
+//! crate's error type); enabling `pjrt` additionally requires the
+//! xla_extension toolchain and the out-of-registry `xla` crate (see
 //! `Cargo.toml`).
 //!
 //! ## Quick tour
@@ -80,13 +81,23 @@
 //! println!("{report}"); // per-stream p50/p99, miss/shed rates, bus utilization
 //! ```
 //!
+//! ## Execution traces
+//!
+//! Latency, DRAM traffic and energy all derive from one phase-level
+//! [`trace::ExecutionTrace`] per frame — the schedulers in [`dla`] are
+//! trace *builders*, and everything downstream is a reduction (see
+//! `docs/TRACE.md`). Each trace also yields the frame's DRAM
+//! [`trace::BurstProfile`], which the fleet's bus arbiter schedules
+//! against instead of a flat average. `rcnet-dla trace` emits the
+//! timeline in Chrome trace-event JSON.
+//!
 //! ## Benchmarks
 //!
 //! [`bench`] packages all of the above into deterministic, regression-
 //! gated performance workloads: `rcnet-dla bench --quick` emits
-//! `BENCH_fleet.json` / `BENCH_planner.json`, and `bench --against`
-//! exits nonzero when a gated value regresses past tolerance (the CI
-//! perf-smoke job). See `docs/BENCHMARKS.md`.
+//! `BENCH_fleet.json` / `BENCH_planner.json` / `BENCH_trace.json`, and
+//! `bench --against` exits nonzero when a gated value regresses past
+//! tolerance (the CI perf-smoke job). See `docs/BENCHMARKS.md`.
 
 pub mod bench;
 pub mod config;
@@ -94,6 +105,7 @@ pub mod coordinator;
 pub mod data;
 pub mod detect;
 pub mod dla;
+pub mod error;
 pub mod quant;
 pub mod report;
 #[cfg(feature = "pjrt")]
@@ -103,11 +115,14 @@ pub mod fusion;
 pub mod plan;
 pub mod serve;
 pub mod tile;
+pub mod trace;
 pub mod traffic;
 pub mod model;
 pub mod util;
 
+pub use error::{Context, Error};
+
 /// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = error::Result<T>;
 
 pub use report::cli::cli_main;

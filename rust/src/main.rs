@@ -1,5 +1,5 @@
 //! CLI entrypoint — see `rcnet-dla --help`.
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rcnet_dla::Result<()> {
     rcnet_dla::cli_main()
 }

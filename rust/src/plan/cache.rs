@@ -29,6 +29,7 @@ use std::sync::{Arc, RwLock};
 use crate::config::ChipConfig;
 use crate::fusion::FusionConfig;
 use crate::model::Network;
+use crate::trace::FrameCost;
 use crate::util::fnv1a;
 
 use super::{Plan, Planner};
@@ -93,6 +94,10 @@ impl PlanKey {
 #[derive(Debug)]
 pub struct PlanCache {
     shards: [RwLock<HashMap<PlanKey, Arc<Plan>>>; SHARDS],
+    /// Per-frame cost summaries (cycles, DRAM bytes, burst profile from
+    /// the plan's execution trace), cached alongside the plans under the
+    /// same keys and locking discipline.
+    costs: [RwLock<HashMap<PlanKey, FrameCost>>; SHARDS],
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -101,6 +106,7 @@ impl Default for PlanCache {
     fn default() -> Self {
         PlanCache {
             shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
+            costs: std::array::from_fn(|_| RwLock::new(HashMap::new())),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
@@ -137,6 +143,26 @@ impl PlanCache {
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut map = shard.write().expect("plan cache shard poisoned");
         Arc::clone(map.entry(key).or_insert(fresh))
+    }
+
+    /// The cached per-frame cost for `key`, if one has been derived.
+    pub fn frame_cost(&self, key: &PlanKey) -> Option<FrameCost> {
+        self.costs[key.shard()]
+            .read()
+            .expect("plan cost shard poisoned")
+            .get(key)
+            .copied()
+    }
+
+    /// Insert a per-frame cost derived outside the lock (from the plan's
+    /// execution trace); first writer wins, and the winning value is
+    /// returned so racing derivations agree.
+    pub fn insert_frame_cost(&self, key: PlanKey, cost: FrameCost) -> FrameCost {
+        *self.costs[key.shard()]
+            .write()
+            .expect("plan cost shard poisoned")
+            .entry(key)
+            .or_insert(cost)
     }
 
     /// Number of distinct plans held.
@@ -206,6 +232,22 @@ mod tests {
         cache.plan(&a, &cfg, &chip, (416, 416), Planner::OptimalDp);
         cache.plan(&b, &cfg, &chip, (416, 416), Planner::OptimalDp);
         assert_eq!((cache.len(), cache.hits()), (1, 1));
+    }
+
+    #[test]
+    fn frame_costs_cache_alongside_plans() {
+        use crate::trace::FrameCost;
+        let net = yolov2_converted(3, 5);
+        let cfg = FusionConfig::paper_default();
+        let chip = ChipConfig::paper_chip();
+        let cache = PlanCache::new();
+        let key = PlanKey::new(&net, &cfg, &chip, (416, 416), Planner::OptimalDp);
+        assert!(cache.frame_cost(&key).is_none());
+        let a = cache.insert_frame_cost(key, FrameCost::flat(10, 20));
+        // First writer wins; a racing insert gets the original back.
+        let b = cache.insert_frame_cost(key, FrameCost::flat(99, 99));
+        assert_eq!(a, b);
+        assert_eq!(cache.frame_cost(&key), Some(FrameCost::flat(10, 20)));
     }
 
     #[test]

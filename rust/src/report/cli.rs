@@ -7,13 +7,16 @@
 //! * `plan`       — greedy-vs-optimal fusion-plan comparison across the
 //!   paper resolutions (the [`crate::plan`] planners)
 //! * `simulate`   — DLA cycle simulation at an operating point
+//! * `trace`      — phase-level execution trace ([`crate::trace`]) of a
+//!   frame in Chrome trace-event JSON (load in `chrome://tracing` /
+//!   Perfetto); deterministic, so CI diffs two runs byte-for-byte
 //! * `fleet`      — multi-stream fleet serving over a chip pool with a
 //!   shared DRAM-bus budget (deterministic from a seed; `--threads`
 //!   selects the serial or sharded-parallel engine)
 //! * `bench`      — standardized performance workloads
 //!   ([`crate::bench`]): emits `BENCH_fleet.json` / `BENCH_planner.json`
-//!   and optionally gates against a baseline (nonzero exit on
-//!   regression)
+//!   / `BENCH_trace.json` and optionally gates against a baseline
+//!   (nonzero exit on regression)
 //! * `serve`      — run the detection pipeline on synthetic frames
 //!   (requires `make artifacts` and the `pjrt` feature)
 
@@ -21,7 +24,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use crate::config::ChipConfig;
-use crate::dla::{simulate_fused, simulate_layer_by_layer};
+use crate::dla::{simulate_fused, simulate_layer_by_layer, trace_fused, trace_layer_by_layer};
 use crate::energy::dram_energy_mj;
 use crate::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
 use crate::serve::{run_fleet, AdmissionPolicy, FleetConfig};
@@ -69,6 +72,8 @@ USAGE:
   rcnet-dla plan      [--net rc|yolov2|yolov2-converted|vgg16|vgg16-converted|
                        deeplabv3|deeplabv3-converted] [--res 416|hd|fullhd|all]
   rcnet-dla simulate  [--res 416|hd|fullhd|ivs] [--spec PATH]
+  rcnet-dla trace     [--res 416|hd|fullhd|ivs] [--spec PATH]
+                      [--schedule fused|layer-by-layer] [--out PATH]
   rcnet-dla fleet     [--streams N] [--chips N] [--bus-mbps MB] [--seconds S]
                       [--seed K] [--oversub F | --admit-all]
                       [--planner greedy|optimal-dp] [--threads N]
@@ -77,6 +82,9 @@ USAGE:
   rcnet-dla serve     [--manifest artifacts/manifest.json] [--frames N]
   rcnet-dla ablation  [--net yolov2|deeplabv3|vgg16]
 
+`trace` emits Chrome trace-event JSON (chrome://tracing, Perfetto) to
+--out or stdout; the output is a pure function of its inputs, so two
+runs are byte-identical (CI checks exactly that).
 `fleet --threads`: 1 = serial reference engine (default), 0 = one worker
 per core, N = N workers; output is byte-identical across engines.
 `bench --against` accepts a report file (BENCH_fleet.json) or a
@@ -93,6 +101,7 @@ pub fn cli_main() -> Result<()> {
         Some("traffic") => traffic(&flags),
         Some("plan") => plan(&flags),
         Some("simulate") => simulate(&flags),
+        Some("trace") => trace(&flags),
         Some("fleet") => fleet(&flags),
         Some("bench") => bench(&flags),
         Some("serve") => serve(&flags),
@@ -108,7 +117,7 @@ fn load_spec(flags: &HashMap<String, String>) -> Result<(crate::model::Network, 
     match flags.get("spec") {
         Some(path) => {
             let txt = std::fs::read_to_string(path)?;
-            let j = Json::parse(&txt).map_err(|e| anyhow::anyhow!(e))?;
+            let j = Json::parse(&txt).map_err(|e| crate::err!(e))?;
             spec_to_network(&j)
         }
         None => {
@@ -126,7 +135,7 @@ fn emit_spec(flags: &HashMap<String, String>) -> Result<()> {
     let gammas = match flags.get("gammas") {
         Some(p) if std::path::Path::new(p).exists() => {
             let txt = std::fs::read_to_string(p)?;
-            Some(Json::parse(&txt).map_err(|e| anyhow::anyhow!(e))?)
+            Some(Json::parse(&txt).map_err(|e| crate::err!(e))?)
         }
         _ => None,
     };
@@ -188,7 +197,7 @@ fn plan(flags: &HashMap<String, String>) -> Result<()> {
         let fx = zoo::plan_fixtures()
             .into_iter()
             .find(|f| f.name == which)
-            .ok_or_else(|| anyhow::anyhow!("unknown --net {which} (see usage)"))?;
+            .ok_or_else(|| crate::err!("unknown --net {which} (see usage)"))?;
         ((fx.build)(), FusionConfig::paper_default())
     };
 
@@ -252,7 +261,7 @@ fn simulate(flags: &HashMap<String, String>) -> Result<()> {
     let chip = ChipConfig::paper_chip();
     let lbl = simulate_layer_by_layer(&net, hw, &chip);
     let (fus, gsims) = simulate_fused(&net, &groups, hw, &chip)
-        .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        .map_err(|e| crate::err!("{e:?}"))?;
     println!("resolution {}x{}", hw.1, hw.0);
     println!(
         "layer-by-layer: {:7.2} ms ({:5.1} FPS)",
@@ -270,6 +279,53 @@ fn simulate(flags: &HashMap<String, String>) -> Result<()> {
             "  group {i:>2}: layers {:>2}..{:<2} tiles {:>3} cycles {:>9}",
             g.group.start, g.group.end, g.tiling.tiles, g.cycles
         );
+    }
+    Ok(())
+}
+
+fn trace(flags: &HashMap<String, String>) -> Result<()> {
+    let (net, groups) = load_spec(flags)?;
+    let hw = hw_of(flags);
+    let chip = ChipConfig::paper_chip();
+    let trace = match flags.get("schedule").map(|s| s.as_str()).unwrap_or("fused") {
+        "fused" => {
+            let (t, _tilings) = trace_fused(&net, &groups, hw, &chip)
+                .map_err(|e| crate::err!("tile planning at {hw:?}: {e:?}"))?;
+            t
+        }
+        "layer-by-layer" | "lbl" => trace_layer_by_layer(&net, hw, &chip),
+        other => crate::bail!("unknown --schedule {other} (fused|layer-by-layer)"),
+    };
+    let violations = trace.validate();
+    if !violations.is_empty() {
+        crate::bail!("trace failed validation: {}", violations.join("; "));
+    }
+    let cost = trace.frame_cost();
+    eprintln!(
+        "trace: {} {}x{} — {} steps, {} phases, {:.2} ms/frame, {:.2} MB DRAM, \
+         burst peak {:.1}x mean",
+        trace.schedule.name(),
+        hw.1,
+        hw.0,
+        trace.steps.len(),
+        trace.phases.len(),
+        trace.latency_ms(),
+        trace.dram_bytes() as f64 / 1e6,
+        cost.profile.peak_to_mean()
+    );
+    let mut doc = trace.to_chrome_json().to_string();
+    doc.push('\n');
+    match flags.get("out") {
+        Some(path) => {
+            if let Some(dir) = Path::new(path).parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            std::fs::write(path, doc)?;
+            eprintln!("trace: wrote {path} (open in chrome://tracing or Perfetto)");
+        }
+        None => print!("{doc}"),
     }
     Ok(())
 }
@@ -319,7 +375,7 @@ fn fleet(flags: &HashMap<String, String>) -> Result<()> {
         admission,
         planner: match flags.get("planner") {
             Some(s) => crate::plan::Planner::parse(s)
-                .ok_or_else(|| anyhow::anyhow!("unknown --planner {s} (greedy|optimal-dp)"))?,
+                .ok_or_else(|| crate::err!("unknown --planner {s} (greedy|optimal-dp)"))?,
             None => d.planner,
         },
         threads: flags.get("threads").and_then(|s| s.parse().ok()).unwrap_or(d.threads),
@@ -352,7 +408,7 @@ fn load_baseline(against: &str, kind: &str) -> Result<Option<crate::bench::Bench
 }
 
 fn bench(flags: &HashMap<String, String>) -> Result<()> {
-    use crate::bench::{compare_reports, fleet_report, planner_report, BenchProfile};
+    use crate::bench::{compare_reports, fleet_report, planner_report, trace_report, BenchProfile};
 
     let profile =
         if flags.contains_key("quick") { BenchProfile::Quick } else { BenchProfile::Full };
@@ -364,13 +420,15 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     let fleet = fleet_report(profile)?;
     eprintln!("bench: running the {} planner workloads...", profile.name());
     let planner = planner_report(profile)?;
+    eprintln!("bench: running the {} trace workloads...", profile.name());
+    let trace = trace_report(profile)?;
 
     let mut t = crate::report::tables::TableBuilder::new(&format!(
         "bench ({} profile) — wall times; deterministic metrics in the JSON",
         profile.name()
     ))
     .header(&["workload", "wall (ms)"]);
-    for rep in [&fleet, &planner] {
+    for rep in [&fleet, &planner, &trace] {
         for m in &rep.measurements {
             t.row(vec![m.id.clone(), format!("{:.3}", m.wall_ms)]);
         }
@@ -385,7 +443,7 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     let mut broken_baselines = Vec::new();
     let mut matched_baselines = 0usize;
     if let Some(against) = flags.get("against") {
-        for rep in [&fleet, &planner] {
+        for rep in [&fleet, &planner, &trace] {
             match load_baseline(against, &rep.kind) {
                 Ok(Some(base)) => {
                     matched_baselines += 1;
@@ -409,14 +467,16 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     std::fs::create_dir_all(&out_dir)?;
     fleet.write(&out_dir.join("BENCH_fleet.json"))?;
     planner.write(&out_dir.join("BENCH_planner.json"))?;
+    trace.write(&out_dir.join("BENCH_trace.json"))?;
     eprintln!(
-        "bench: wrote {} and {}",
+        "bench: wrote {}, {} and {}",
         out_dir.join("BENCH_fleet.json").display(),
-        out_dir.join("BENCH_planner.json").display()
+        out_dir.join("BENCH_planner.json").display(),
+        out_dir.join("BENCH_trace.json").display()
     );
 
     if !broken_baselines.is_empty() {
-        anyhow::bail!(
+        crate::bail!(
             "unreadable baseline(s) for {} — fresh reports were still written above",
             broken_baselines.join(", ")
         );
@@ -426,14 +486,14 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     // keeps the CI perf-smoke job from silently becoming a no-op.
     if let Some(against) = flags.get("against") {
         if matched_baselines == 0 {
-            anyhow::bail!(
+            crate::bail!(
                 "--against {against} matched no baseline for any report family \
                  — fresh reports were still written above"
             );
         }
     }
     if !failed.is_empty() {
-        anyhow::bail!(
+        crate::bail!(
             "bench regression vs baseline in {} (tolerance {tolerance})",
             failed.join(", ")
         );
@@ -455,7 +515,7 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
 
 #[cfg(not(feature = "pjrt"))]
 fn serve(_flags: &HashMap<String, String>) -> Result<()> {
-    anyhow::bail!(
+    crate::bail!(
         "`serve` drives the PJRT runtime, which this build omits; add the `xla` \
          crate to rust/Cargo.toml (see the `pjrt` feature note there) and rebuild \
          with `--features pjrt`"

@@ -168,7 +168,7 @@ pub fn network_to_spec(
 /// Rebuild a network (+groups) from a spec (round-trip for tests and for
 /// loading a spec produced by an earlier run).
 pub fn spec_to_network(j: &Json) -> Result<(Network, Vec<FusionGroup>)> {
-    let err = |m: &str| anyhow::anyhow!("spec: {m}");
+    let err = |m: &str| crate::err!("spec: {m}");
     let hw = j.get("input_hw").ok_or_else(|| err("input_hw"))?;
     let mut net = Network::new(
         j.get("name").and_then(|v| v.as_str()).unwrap_or("spec"),

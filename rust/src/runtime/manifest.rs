@@ -1,6 +1,6 @@
 //! `artifacts/manifest.json` — written by `python/compile/aot.py`.
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 use crate::util::json::Json;
 
@@ -51,7 +51,7 @@ fn shape3(j: &Json) -> Option<(usize, usize, usize)> {
 impl Manifest {
     /// Parse a manifest from its JSON document.
     pub fn parse(j: &Json) -> Result<Manifest> {
-        let e = |m: &str| anyhow::anyhow!("manifest: missing {m}");
+        let e = |m: &str| crate::err!("manifest: missing {m}");
         let hw = j.get("input_hw").ok_or_else(|| e("input_hw"))?;
         let groups = j
             .get("groups")
@@ -114,7 +114,7 @@ impl Manifest {
     /// Read and parse a manifest file.
     pub fn load(path: &str) -> Result<Manifest> {
         let txt = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        let j = Json::parse(&txt).map_err(|m| anyhow::anyhow!("parsing {path}: {m}"))?;
+        let j = Json::parse(&txt).map_err(|m| crate::err!("parsing {path}: {m}"))?;
         Self::parse(&j)
     }
 }

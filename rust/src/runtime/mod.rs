@@ -10,7 +10,7 @@ mod manifest;
 
 pub use manifest::{GroupMeta, Manifest};
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 /// A compiled fusion-group executable.
 pub struct GroupExecutable {
@@ -23,7 +23,7 @@ impl GroupExecutable {
     /// Execute on a row-major HWC f32 buffer; returns the output buffer.
     pub fn execute(&self, input: &[f32]) -> Result<Vec<f32>> {
         let (h, w, c) = self.meta.in_shape;
-        anyhow::ensure!(
+        crate::ensure!(
             input.len() == h * w * c,
             "group {}: input len {} != {}x{}x{}",
             self.meta.id,

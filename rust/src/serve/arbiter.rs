@@ -7,7 +7,12 @@
 //! `min(need, fair_share)` and any leftover is re-split among the still
 //! hungry, so light transfers finish fast and heavy ones degrade
 //! together instead of starving. The arbiter also keeps the books for
-//! aggregate bus utilization.
+//! aggregate bus utilization — and, now that each chip offers the
+//! *burst-shaped* demand of its in-flight frame (see
+//! [`super::fleet::ChipWorker::bus_demand`]), for how often those bursts
+//! overlap past the budget ([`BusArbiter::saturation`]) and how tall the
+//! tallest overlap was ([`BusArbiter::peak_demand_ratio`]). Averages
+//! can't see either: that is the paper's point about bursts.
 
 /// Per-tick bandwidth budget accounting.
 #[derive(Debug, Clone)]
@@ -16,6 +21,8 @@ pub struct BusArbiter {
     pub budget_bytes_per_tick: f64,
     granted_bytes: f64,
     offered_ticks: u64,
+    peak_demand_bytes: f64,
+    saturated_ticks: u64,
 }
 
 impl BusArbiter {
@@ -25,6 +32,8 @@ impl BusArbiter {
             budget_bytes_per_tick: bus_mbps * 1e6 * tick_ms / 1e3,
             granted_bytes: 0.0,
             offered_ticks: 0,
+            peak_demand_bytes: 0.0,
+            saturated_ticks: 0,
         }
     }
 
@@ -33,6 +42,11 @@ impl BusArbiter {
     /// grants; their sum never exceeds the budget.
     pub fn arbitrate(&mut self, demands: &[f64]) -> Vec<f64> {
         self.offered_ticks += 1;
+        let offered: f64 = demands.iter().sum();
+        self.peak_demand_bytes = self.peak_demand_bytes.max(offered);
+        if offered > self.budget_bytes_per_tick + 1e-9 {
+            self.saturated_ticks += 1;
+        }
         let mut grant = vec![0.0; demands.len()];
         let mut remaining = self.budget_bytes_per_tick;
         let mut hungry: Vec<usize> = (0..demands.len()).filter(|&i| demands[i] > 0.0).collect();
@@ -66,6 +80,26 @@ impl BusArbiter {
             0.0
         } else {
             self.granted_bytes / offered
+        }
+    }
+
+    /// Fraction of ticks where the chips' overlapping bursts demanded
+    /// more than the tick's budget (someone had to stall).
+    pub fn saturation(&self) -> f64 {
+        if self.offered_ticks == 0 {
+            0.0
+        } else {
+            self.saturated_ticks as f64 / self.offered_ticks as f64
+        }
+    }
+
+    /// Tallest single-tick demand over the per-tick budget — >1.0 means
+    /// bursts overlapped past what an average-rate model would admit.
+    pub fn peak_demand_ratio(&self) -> f64 {
+        if self.budget_bytes_per_tick <= 0.0 {
+            0.0
+        } else {
+            self.peak_demand_bytes / self.budget_bytes_per_tick
         }
     }
 }
@@ -124,5 +158,22 @@ mod tests {
         assert_eq!(g[0], 0.0);
         assert_eq!(g[2], 0.0);
         assert!((g[1] - 400.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn saturation_counts_overcommitted_ticks_only() {
+        let mut a = arb();
+        a.arbitrate(&[300.0, 300.0]); // 600 < 1000: fine
+        a.arbitrate(&[800.0, 700.0]); // 1500 > 1000: saturated
+        a.arbitrate(&[1000.0]); // exactly the budget: not saturated
+        assert!((a.saturation() - 1.0 / 3.0).abs() < 1e-9);
+        assert!((a.peak_demand_ratio() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fresh_arbiter_reports_zero_burst_stats() {
+        let a = arb();
+        assert_eq!(a.saturation(), 0.0);
+        assert_eq!(a.peak_demand_ratio(), 0.0);
     }
 }

@@ -14,6 +14,15 @@
 //! grants, capped by the chip's own DDR3 link rate. A chip stalled on
 //! the shared bus counts as busy: that occupancy is precisely the
 //! bandwidth wall the paper is about.
+//!
+//! **Burst awareness.** A frame does not offer its whole byte budget to
+//! the bus up front: bytes become *eligible* as execution enters the
+//! time-slices of the frame's [`BurstProfile`](crate::trace::BurstProfile)
+//! (derived from its execution trace), so a frame's demand follows the
+//! shape its schedule actually produces — weight DMA and boundary
+//! writebacks burst, fused interiors go quiet. Starvation only ever
+//! *defers* demand (unsent eligible bytes accumulate, and finished
+//! compute releases everything), so a frame can always drain.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 
@@ -27,10 +36,24 @@ use super::stream::FrameTask;
 pub struct InFlight {
     /// The frame being executed.
     pub task: FrameTask,
+    /// Compute ticks the frame needs in total (the burst profile's time
+    /// base).
+    pub total_compute_ticks: u64,
     /// Compute ticks still owed.
     pub remaining_compute_ticks: u64,
     /// DRAM bytes still to transfer.
     pub remaining_bytes: f64,
+}
+
+impl InFlight {
+    /// DRAM bytes eligible for transfer while the upcoming tick runs:
+    /// the frame's total bytes scaled by its burst profile at the
+    /// current execution position. Finished compute releases everything.
+    fn eligible_bytes(&self) -> f64 {
+        let elapsed = self.total_compute_ticks - self.remaining_compute_ticks + 1;
+        self.task.cost.dram_bytes as f64
+            * self.task.cost.profile.eligible_fraction(elapsed, self.total_compute_ticks)
+    }
 }
 
 /// One simulated DLA chip plus its bounded dispatch queue.
@@ -96,21 +119,27 @@ impl ChipWorker {
         }
         if let Ok(task) = self.rx.try_recv() {
             self.queued -= 1;
-            let ticks = (task.cost.compute_cycles as f64 / cycles_per_tick).ceil() as u64;
+            let ticks = ((task.cost.compute_cycles as f64 / cycles_per_tick).ceil() as u64).max(1);
             self.active = Some(InFlight {
                 task,
-                remaining_compute_ticks: ticks.max(1),
+                total_compute_ticks: ticks,
+                remaining_compute_ticks: ticks,
                 remaining_bytes: task.cost.dram_bytes as f64,
             });
         }
     }
 
-    /// Outstanding DRAM bytes this chip wants this tick, capped by its
-    /// own DDR3 link rate.
+    /// DRAM bytes this chip wants this tick: the *eligible* bytes of the
+    /// active frame (per its burst profile) not yet transferred, capped
+    /// by the chip's own DDR3 link rate.
     pub fn bus_demand(&self, link_bytes_per_tick: f64) -> f64 {
-        self.active
-            .as_ref()
-            .map_or(0.0, |j| j.remaining_bytes.max(0.0).min(link_bytes_per_tick))
+        self.active.as_ref().map_or(0.0, |j| {
+            let transferred = j.task.cost.dram_bytes as f64 - j.remaining_bytes;
+            (j.eligible_bytes() - transferred)
+                .min(j.remaining_bytes)
+                .max(0.0)
+                .min(link_bytes_per_tick)
+        })
     }
 
     /// Advance one tick with `granted` DRAM bytes. Returns the finished
@@ -179,7 +208,7 @@ mod tests {
             seq,
             release_ms: 0.0,
             deadline_ms: 100.0,
-            cost: FrameCost { compute_cycles: 600_000, dram_bytes: 4000 },
+            cost: FrameCost::flat(600_000, 4000),
             qos: QosClass::Silver,
         }
     }
@@ -241,6 +270,28 @@ mod tests {
         f.workers[0].try_dispatch(task(0)).unwrap();
         f.workers[0].refill(cpt);
         assert_eq!(f.pick_worker(), Some(1));
+    }
+
+    #[test]
+    fn burst_profile_defers_demand_until_its_slice() {
+        use crate::trace::{BurstProfile, BURST_BUCKETS};
+        let mut f = fleet1();
+        let cpt = f.cycles_per_tick;
+        let mut t = task(0);
+        // Every byte lands in the frame's final time slice.
+        let mut h = [0u64; BURST_BUCKETS];
+        h[BURST_BUCKETS - 1] = 4000;
+        t.cost.profile = BurstProfile::from_histogram(&h);
+        let w = &mut f.workers[0];
+        w.try_dispatch(t).unwrap();
+        w.refill(cpt);
+        let link = 1e9;
+        // Tick 1 of 2: the final slice has not been entered — no demand.
+        assert_eq!(w.bus_demand(link), 0.0);
+        assert!(w.advance(0.0).is_none());
+        // Tick 2 (the last compute tick) releases everything.
+        assert!((w.bus_demand(link) - 4000.0).abs() < 1e-9);
+        assert!(w.advance(4000.0).is_some());
     }
 
     #[test]

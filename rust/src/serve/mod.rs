@@ -13,13 +13,18 @@
 //! One concern per module:
 //!
 //! * [`stream`] — QoS classes, stream operating points (416/720p/1080p at
-//!   15/30 FPS), per-frame cost derived from the counted chip models, and
-//!   the seeded frame source. Costs are priced from the fusion plan the
-//!   configured [`crate::plan::Planner`] forms *at each stream's own
-//!   resolution* (memoized in a [`crate::plan::PlanCache`]), not from a
-//!   fixed build-time grouping.
+//!   15/30 FPS), per-frame cost derived from the stream-resolution
+//!   execution trace ([`crate::trace`]), and the seeded frame source.
+//!   Costs are priced from the fusion plan the configured
+//!   [`crate::plan::Planner`] forms *at each stream's own resolution*
+//!   (memoized, together with the trace-derived cost and burst profile,
+//!   in a [`crate::plan::PlanCache`]), not from a fixed build-time
+//!   grouping.
 //! * [`arbiter`] — the shared bus: a per-tick byte budget water-filled
-//!   across in-flight transfers, plus utilization accounting.
+//!   across in-flight transfers. Chips offer the *burst-shaped* demand
+//!   of their frames' [`crate::trace::BurstProfile`]s, so the arbiter
+//!   resolves overlapping bursts and reports saturation and peak demand
+//!   alongside utilization.
 //! * [`scheduler`] — EDF dispatch, admission control, load shedding, and
 //!   the reference tick engine ([`FleetSim`], [`run_fleet`]).
 //! * [`parallel`] — the sharded multi-threaded engine: per-worker stream

@@ -387,6 +387,8 @@ impl FleetSim {
             chips,
             bus_mbps: cfg.bus_mbps,
             bus_utilization: arbiter.utilization(),
+            bus_saturation: arbiter.saturation(),
+            bus_peak_demand: arbiter.peak_demand_ratio(),
             chip_utilization: busy as f64 / (ticks as f64 * chips.max(1) as f64),
             wall_s: cfg.seconds,
         }
@@ -404,7 +406,7 @@ mod tests {
             seq,
             release_ms: 0.0,
             deadline_ms,
-            cost: crate::serve::stream::FrameCost { compute_cycles: 1, dram_bytes: 1 },
+            cost: crate::serve::stream::FrameCost::flat(1, 1),
             qos,
         }
     }

@@ -28,10 +28,10 @@
 //! 5. chips advance; completions are scored against their deadlines.
 
 use crate::config::ChipConfig;
-use crate::dla::simulate_fused;
+use crate::dla::trace_fused;
 use crate::fusion::FusionConfig;
 use crate::model::Network;
-use crate::plan::{PlanCache, Planner};
+use crate::plan::{PlanCache, PlanKey, Planner};
 use crate::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
 use crate::util::Rng;
 use crate::Result;
@@ -126,8 +126,11 @@ struct CostModel {
     cfg: FusionConfig,
     chip: ChipConfig,
     planner: Planner,
+    /// The only memo: plans *and* trace-derived frame costs live in the
+    /// cache, keyed identically, so repeat pricings of one operating
+    /// point (one `cost()` call per admitted stream) skip both the DP
+    /// and the trace build.
     plans: PlanCache,
-    costs: Vec<((u32, u32), FrameCost)>,
 }
 
 impl CostModel {
@@ -135,10 +138,14 @@ impl CostModel {
         let spec = build_deployment_spec(PipelineProfile::Hd, 3, 5, None, 7);
         let (net, _build_groups) = spec_to_network(&spec)?;
         let cfg = FusionConfig { slack: 0.0, ..FusionConfig::paper_default() };
-        Ok(CostModel { net, cfg, chip, planner, plans: PlanCache::new(), costs: Vec::new() })
+        Ok(CostModel { net, cfg, chip, planner, plans: PlanCache::new() })
     }
 
-    /// Plan + schedule one resolution into a per-frame cost. Pure in
+    /// Plan + schedule one resolution into a per-frame cost: build the
+    /// plan's [`crate::trace::ExecutionTrace`] and summarize it (cycles,
+    /// DRAM bytes, burst profile). The summary is cached in the
+    /// [`PlanCache`] alongside the plan, so repeat pricings of one
+    /// operating point skip both the DP *and* the trace build. Pure in
     /// (`net`, `cfg`, `chip`, `planner`, `hw`), so serial and parallel
     /// priming produce bit-identical costs.
     fn price(
@@ -149,30 +156,31 @@ impl CostModel {
         plans: &PlanCache,
         hw: (u32, u32),
     ) -> Result<FrameCost> {
+        let key = PlanKey::new(net, cfg, chip, hw, planner);
+        if let Some(cost) = plans.frame_cost(&key) {
+            return Ok(cost);
+        }
         let plan = plans.plan(net, cfg, chip, hw, planner);
-        let (sim, _) = simulate_fused(net, &plan.groups, hw, chip)
-            .map_err(|e| anyhow::anyhow!("tile planning at {hw:?}: {e:?}"))?;
-        Ok(FrameCost { compute_cycles: sim.total_cycles, dram_bytes: sim.total_dram_bytes() })
+        let (trace, _tilings) = trace_fused(net, &plan.groups, hw, chip)
+            .map_err(|e| crate::err!("tile planning at {hw:?}: {e:?}"))?;
+        Ok(plans.insert_frame_cost(key, trace.frame_cost()))
     }
 
+    /// Price one resolution. Warm operating points are a cache read
+    /// (plan *and* trace cost); cold ones plan, trace and insert.
     fn cost(&mut self, hw: (u32, u32)) -> Result<FrameCost> {
-        if let Some((_, c)) = self.costs.iter().find(|(k, _)| *k == hw) {
-            return Ok(*c);
-        }
-        let c = Self::price(&self.net, &self.cfg, &self.chip, self.planner, &self.plans, hw)?;
-        self.costs.push((hw, c));
-        Ok(c)
+        Self::price(&self.net, &self.cfg, &self.chip, self.planner, &self.plans, hw)
     }
 
     /// Pre-plan every distinct resolution in `hws`, fanning the planning
     /// work (the DP + tiling at each operating point — the expensive part
     /// of fleet setup) across `threads` scoped worker threads. Results
-    /// land in the same memo the serial path uses, in first-appearance
-    /// order, so admission afterwards sees identical costs either way.
+    /// land in the shared cache the serial path reads, so admission
+    /// afterwards sees identical costs either way.
     fn prime(&mut self, hws: &[(u32, u32)], threads: usize) -> Result<()> {
         let mut todo: Vec<(u32, u32)> = Vec::new();
         for &hw in hws {
-            if !todo.contains(&hw) && !self.costs.iter().any(|(k, _)| *k == hw) {
+            if !todo.contains(&hw) {
                 todo.push(hw);
             }
         }
@@ -186,27 +194,22 @@ impl CostModel {
         let chip = self.chip;
         // At most `threads` planning threads in flight: an explicit spec
         // list may carry arbitrarily many distinct resolutions, and each
-        // prices via the O(U^2) DP.
-        let mut priced: Vec<Result<((u32, u32), FrameCost)>> = Vec::with_capacity(todo.len());
+        // prices via the O(U^2) DP. Results land in the cache as a side
+        // effect; only errors need collecting.
         for batch in todo.chunks(threads) {
-            priced.extend(std::thread::scope(|s| {
+            let results: Vec<Result<FrameCost>> = std::thread::scope(|s| {
                 let handles: Vec<_> = batch
                     .iter()
-                    .map(|&hw| {
-                        s.spawn(move || {
-                            Self::price(net, cfg, &chip, planner, plans, hw).map(|c| (hw, c))
-                        })
-                    })
+                    .map(|&hw| s.spawn(move || Self::price(net, cfg, &chip, planner, plans, hw)))
                     .collect();
                 handles
                     .into_iter()
                     .map(|h| h.join().expect("cost-priming thread panicked"))
-                    .collect::<Vec<_>>()
-            }));
-        }
-        for r in priced {
-            let (hw, c) = r?;
-            self.costs.push((hw, c));
+                    .collect()
+            });
+            for r in results {
+                r?;
+            }
         }
         Ok(())
     }
@@ -315,7 +318,7 @@ impl FleetSim {
             .enumerate()
             .map(|(id, &(spec, cost))| Stream::new(id, spec, cost, &mut rng))
             .collect();
-        let stats = admitted.iter().map(|&(spec, _)| StreamStats::new(spec)).collect();
+        let stats = admitted.iter().map(|&(spec, cost)| StreamStats::new(spec, cost)).collect();
 
         Ok(FleetSim {
             cfg: *cfg,
@@ -404,6 +407,8 @@ impl FleetSim {
             chips,
             bus_mbps: self.cfg.bus_mbps,
             bus_utilization: self.arbiter.utilization(),
+            bus_saturation: self.arbiter.saturation(),
+            bus_peak_demand: self.arbiter.peak_demand_ratio(),
             chip_utilization: busy as f64 / (ticks as f64 * chips.max(1) as f64),
             wall_s: self.cfg.seconds,
         }
@@ -444,7 +449,7 @@ mod tests {
             seq,
             release_ms: 0.0,
             deadline_ms,
-            cost: FrameCost { compute_cycles: 1, dram_bytes: 1 },
+            cost: FrameCost::flat(1, 1),
             qos,
         }
     }

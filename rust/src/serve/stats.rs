@@ -11,7 +11,7 @@ use std::time::Duration;
 use crate::coordinator::Metrics;
 use crate::util::{fnv1a, percentile};
 
-use super::stream::StreamSpec;
+use super::stream::{FrameCost, StreamSpec};
 
 fn ratio(num: u64, den: u64) -> f64 {
     if den == 0 {
@@ -26,6 +26,10 @@ fn ratio(num: u64, den: u64) -> f64 {
 pub struct StreamStats {
     /// The stream's operating point.
     pub spec: StreamSpec,
+    /// The stream's per-frame cost (cycles, DRAM bytes, burst profile) —
+    /// recorded so the stats digest covers the priced demand shape, not
+    /// just the observed latencies.
+    pub cost: FrameCost,
     /// Latency series + deadline misses of the *completed* frames.
     pub metrics: Metrics,
     /// Frames the camera released into the system.
@@ -36,8 +40,8 @@ pub struct StreamStats {
 
 impl StreamStats {
     /// Fresh (all-zero) stats for one stream.
-    pub fn new(spec: StreamSpec) -> Self {
-        StreamStats { spec, metrics: Metrics::default(), released: 0, shed: 0 }
+    pub fn new(spec: StreamSpec, cost: FrameCost) -> Self {
+        StreamStats { spec, cost, metrics: Metrics::default(), released: 0, shed: 0 }
     }
 
     /// Record a completed frame; `deadline_ms` is the relative deadline.
@@ -92,6 +96,11 @@ pub struct FleetReport {
     pub bus_mbps: f64,
     /// Granted bus bytes over offered bus capacity.
     pub bus_utilization: f64,
+    /// Fraction of ticks where the chips' overlapping DRAM bursts
+    /// demanded more than the tick's budget (someone stalled).
+    pub bus_saturation: f64,
+    /// Tallest single-tick burst demand over the per-tick budget.
+    pub bus_peak_demand: f64,
     /// Mean fraction of ticks chips held a frame (compute or bus stall).
     pub chip_utilization: f64,
     /// Simulated span in seconds.
@@ -150,8 +159,10 @@ impl FleetReport {
     }
 
     /// Order-sensitive FNV-1a digest of everything observable per stream:
-    /// spec, release/shed counters, completion count, deadline misses and
-    /// the *bit pattern* of every recorded latency sample, in recording
+    /// spec, priced frame cost (cycles, DRAM bytes, and every burst-
+    /// profile weight — the demand shape the arbiter scheduled),
+    /// release/shed counters, completion count, deadline misses and the
+    /// *bit pattern* of every recorded latency sample, in recording
     /// order. Two reports digest equal iff their per-stream statistics
     /// are byte-identical — this is the oracle the parallel-vs-serial
     /// identity tests and the bench workload fingerprints rest on.
@@ -164,6 +175,9 @@ impl FleetReport {
             words.push(s.spec.hw.1 as u64);
             words.push(s.spec.target_fps.to_bits());
             words.push(s.spec.qos as u64);
+            words.push(s.cost.compute_cycles);
+            words.push(s.cost.dram_bytes);
+            words.extend(s.cost.profile.digest_words());
             words.push(s.released);
             words.push(s.shed);
             words.push(s.metrics.frames as u64);
@@ -171,6 +185,8 @@ impl FleetReport {
             words.extend(s.metrics.latency_ms.iter().map(|l| l.to_bits()));
         }
         words.push(self.bus_utilization.to_bits());
+        words.push(self.bus_saturation.to_bits());
+        words.push(self.bus_peak_demand.to_bits());
         words.push(self.chip_utilization.to_bits());
         fnv1a(words)
     }
@@ -210,8 +226,11 @@ impl fmt::Display for FleetReport {
         }
         write!(
             f,
-            "aggregate: bus util {:.2}  chip util {:.2}  miss {:.1}%  shed {:.1}%  p99 {:.1} ms",
+            "aggregate: bus util {:.2}  sat {:.2}  peak {:.1}x  chip util {:.2}  miss {:.1}%  \
+             shed {:.1}%  p99 {:.1} ms",
             self.bus_utilization,
+            self.bus_saturation,
+            self.bus_peak_demand,
             self.chip_utilization,
             100.0 * self.miss_rate(),
             100.0 * self.shed_rate(),
@@ -226,11 +245,10 @@ mod tests {
     use crate::serve::stream::QosClass;
 
     fn stats() -> StreamStats {
-        StreamStats::new(StreamSpec {
-            hw: (720, 1280),
-            target_fps: 30.0,
-            qos: QosClass::Gold,
-        })
+        StreamStats::new(
+            StreamSpec { hw: (720, 1280), target_fps: 30.0, qos: QosClass::Gold },
+            FrameCost::flat(1_000_000, 2_000_000),
+        )
     }
 
     #[test]
@@ -264,6 +282,8 @@ mod tests {
             chips: 4,
             bus_mbps: 585.0,
             bus_utilization: 0.5,
+            bus_saturation: 0.1,
+            bus_peak_demand: 1.4,
             chip_utilization: 0.25,
             wall_s: 1.0,
         };

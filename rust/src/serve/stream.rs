@@ -3,9 +3,14 @@
 //!
 //! A stream does not carry pixels — the fleet simulator schedules *cost*,
 //! not content. Each frame of a stream costs the same compute cycles and
-//! DRAM bytes (derived once from `dla::simulate_fused` + `TrafficModel`
-//! at the stream's resolution), which is exactly the property the paper's
-//! fixed per-frame traffic budget (585 MB/s at HD30) rests on.
+//! DRAM bytes (derived once from the stream-resolution
+//! [`ExecutionTrace`](crate::trace::ExecutionTrace), which also supplies
+//! the frame's [`BurstProfile`](crate::trace::BurstProfile) — the
+//! temporal shape the bus arbiter schedules against), which is exactly
+//! the property the paper's fixed per-frame traffic budget (585 MB/s at
+//! HD30) rests on.
+
+pub use crate::trace::FrameCost;
 
 use crate::util::Rng;
 
@@ -74,28 +79,6 @@ impl StreamSpec {
             _ => QosClass::Bronze,
         };
         StreamSpec { hw, target_fps, qos }
-    }
-}
-
-/// Per-frame execution cost on one chip, from the counted models.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct FrameCost {
-    /// PE-array cycles for the whole frame (group-fused schedule).
-    pub compute_cycles: u64,
-    /// External DRAM bytes for the whole frame (features + weights).
-    pub dram_bytes: u64,
-}
-
-impl FrameCost {
-    /// Steady-state DRAM-bus demand at `fps`, bytes per second — the
-    /// quantity admission control budgets against.
-    pub fn bus_demand_bytes_per_s(&self, fps: f64) -> f64 {
-        self.dram_bytes as f64 * fps
-    }
-
-    /// Steady-state compute demand at `fps`, cycles per second.
-    pub fn compute_demand_cycles_per_s(&self, fps: f64) -> f64 {
-        self.compute_cycles as f64 * fps
     }
 }
 
@@ -177,7 +160,7 @@ impl Stream {
 mod tests {
     use super::*;
 
-    const COST: FrameCost = FrameCost { compute_cycles: 1_000_000, dram_bytes: 2_000_000 };
+    const COST: FrameCost = FrameCost::flat(1_000_000, 2_000_000);
 
     fn spec() -> StreamSpec {
         StreamSpec { hw: (720, 1280), target_fps: 30.0, qos: QosClass::Silver }

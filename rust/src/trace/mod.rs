@@ -1,0 +1,626 @@
+//! Phase-level execution traces — the single source of truth for
+//! latency, traffic and energy.
+//!
+//! The DLA schedulers in [`crate::dla::schedule`] no longer accumulate
+//! aggregates directly: they *build* an [`ExecutionTrace`] — an ordered
+//! list of [`Phase`]s (weight DMA, tile ifmap load, compute, SRAM
+//! streaming, writeback) with cycle spans and byte counts — and every
+//! downstream quantity is a reduction over it:
+//!
+//! * `FrameSim` / `GroupSim` — per-layer and per-group folds
+//!   ([`crate::dla::schedule`]);
+//! * [`crate::energy::ExecutionEvents`] — the event-count fold the power
+//!   model consumes ([`ExecutionEvents::per_frame`]);
+//! * DRAM traffic — [`ExecutionTrace::dram_bytes`], cross-checked
+//!   byte-for-byte against the analytic [`crate::traffic::TrafficModel`]
+//!   across the model zoo (`tests/trace.rs`), so the closed-form and
+//!   event-level accountings can never drift apart again;
+//! * the fleet's per-frame cost — [`ExecutionTrace::frame_cost`], whose
+//!   [`BurstProfile`] gives the shared-bus arbiter the *shape* of a
+//!   frame's DRAM demand instead of one flat average.
+//!
+//! ## Structure
+//!
+//! A trace is a contiguous sequence of [`StepSpan`]s (one per scheduled
+//! step: a layer pass, or a group weight load) tiling `[0, total_cycles)`.
+//! Each phase belongs to one step and runs on one [`Engine`] (PE array,
+//! SRAM ports, or the DRAM/DMA interface); within an engine, phases are
+//! ordered and non-overlapping — [`ExecutionTrace::validate`] checks
+//! exactly these invariants, and the property tests hold every builder to
+//! them. [`ExecutionTrace::to_chrome_json`] serializes the trace in
+//! Chrome trace-event format (load it at `chrome://tracing` or in
+//! Perfetto) — see the `trace` CLI subcommand and `docs/TRACE.md`.
+//!
+//! [`ExecutionEvents::per_frame`]: crate::energy::ExecutionEvents::per_frame
+
+mod profile;
+
+pub use profile::{BurstProfile, FrameCost, BURST_BUCKETS};
+
+use crate::util::json::Json;
+
+/// Which frame schedule produced a trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// Every layer streams its I/O through DRAM (prior design [5]).
+    LayerByLayer,
+    /// Fusion groups execute from the unified buffer (this chip).
+    GroupFused,
+}
+
+impl ScheduleKind {
+    /// Stable display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ScheduleKind::LayerByLayer => "layer-by-layer",
+            ScheduleKind::GroupFused => "group-fused",
+        }
+    }
+}
+
+/// The hardware engine a phase occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Engine {
+    /// The PE MAC array.
+    Pe,
+    /// The on-chip SRAM ports (unified + weight buffers).
+    Sram,
+    /// The external DRAM interface (DMA).
+    Dma,
+}
+
+impl Engine {
+    /// Every engine, in trace/thread-id order.
+    pub const ALL: [Engine; 3] = [Engine::Pe, Engine::Sram, Engine::Dma];
+
+    /// Stable display name (also the Chrome-trace thread name).
+    pub fn name(self) -> &'static str {
+        match self {
+            Engine::Pe => "pe",
+            Engine::Sram => "sram",
+            Engine::Dma => "dma",
+        }
+    }
+}
+
+/// The kind of work a phase performs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// Weight load from DRAM (per layer, or once per fusion group).
+    WeightDma,
+    /// Input feature map (tile) load from DRAM.
+    IfmapLoad,
+    /// PE-array compute.
+    Compute,
+    /// Feature/weight streaming through the on-chip SRAM ports.
+    SramStream,
+    /// Output feature map store to DRAM.
+    Writeback,
+}
+
+impl PhaseKind {
+    /// The engine this kind of phase occupies.
+    pub fn engine(self) -> Engine {
+        match self {
+            PhaseKind::Compute => Engine::Pe,
+            PhaseKind::SramStream => Engine::Sram,
+            PhaseKind::WeightDma | PhaseKind::IfmapLoad | PhaseKind::Writeback => Engine::Dma,
+        }
+    }
+
+    /// Stable display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            PhaseKind::WeightDma => "weight-dma",
+            PhaseKind::IfmapLoad => "ifmap-load",
+            PhaseKind::Compute => "compute",
+            PhaseKind::SramStream => "sram-stream",
+            PhaseKind::Writeback => "writeback",
+        }
+    }
+}
+
+/// One contiguous span of work on one engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Phase {
+    /// What the phase does.
+    pub kind: PhaseKind,
+    /// Index of the owning [`StepSpan`] in the trace.
+    pub step: usize,
+    /// Owning layer index. A group weight load is attributed to the
+    /// first layer of its group (matching the per-layer DRAM view).
+    pub layer: usize,
+    /// Owning fusion-group index (group-fused schedules only).
+    pub group: Option<usize>,
+    /// First cycle of the phase (inclusive).
+    pub start_cycle: u64,
+    /// One past the last cycle of the phase.
+    pub end_cycle: u64,
+    /// External DRAM bytes the phase moves.
+    pub dram_bytes: u64,
+    /// On-chip SRAM bytes the phase moves.
+    pub sram_bytes: u64,
+    /// MAC operations the phase executes.
+    pub macs: u64,
+}
+
+impl Phase {
+    /// Phase length in cycles.
+    pub fn cycles(&self) -> u64 {
+        self.end_cycle - self.start_cycle
+    }
+}
+
+/// One scheduled step: a layer pass (all its tiles) or a group weight
+/// load. Steps tile the frame span contiguously.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StepSpan {
+    /// The layer the step executes; `None` for a group weight load.
+    pub layer: Option<usize>,
+    /// Owning fusion-group index (group-fused schedules only).
+    pub group: Option<usize>,
+    /// First cycle of the step (inclusive).
+    pub start_cycle: u64,
+    /// One past the last cycle of the step.
+    pub end_cycle: u64,
+}
+
+impl StepSpan {
+    /// Step length in cycles.
+    pub fn cycles(&self) -> u64 {
+        self.end_cycle - self.start_cycle
+    }
+}
+
+/// Event-level record of one frame's execution — see the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionTrace {
+    /// The schedule that produced the trace.
+    pub schedule: ScheduleKind,
+    /// Core clock the cycle counts are relative to.
+    pub clock_hz: f64,
+    /// Layer names, indexed by the `layer` fields of steps and phases.
+    pub layer_names: Vec<String>,
+    /// The scheduled steps, contiguous from cycle 0.
+    pub steps: Vec<StepSpan>,
+    /// Every phase, in construction (step, then engine-offset) order.
+    pub phases: Vec<Phase>,
+}
+
+impl ExecutionTrace {
+    /// Total frame cycles (the end of the last step).
+    pub fn total_cycles(&self) -> u64 {
+        self.steps.last().map_or(0, |s| s.end_cycle)
+    }
+
+    /// Frame latency in milliseconds (0.0 for an empty trace).
+    pub fn latency_ms(&self) -> f64 {
+        if self.clock_hz <= 0.0 {
+            return 0.0;
+        }
+        self.total_cycles() as f64 / self.clock_hz * 1e3
+    }
+
+    /// Total external DRAM bytes over the frame.
+    pub fn dram_bytes(&self) -> u64 {
+        self.phases.iter().map(|p| p.dram_bytes).sum()
+    }
+
+    /// Total on-chip SRAM bytes over the frame.
+    pub fn sram_bytes(&self) -> u64 {
+        self.phases.iter().map(|p| p.sram_bytes).sum()
+    }
+
+    /// Total MAC operations over the frame.
+    pub fn macs(&self) -> u64 {
+        self.phases.iter().map(|p| p.macs).sum()
+    }
+
+    /// The phases running on `engine`, in trace order.
+    pub fn engine_phases(&self, engine: Engine) -> impl Iterator<Item = &Phase> {
+        self.phases.iter().filter(move |p| p.kind.engine() == engine)
+    }
+
+    /// Check the structural invariants every builder must uphold; each
+    /// violation is one human-readable string (empty = valid):
+    ///
+    /// 1. steps tile `[0, total_cycles)` contiguously, in order;
+    /// 2. every phase lies within its step's span and references a valid
+    ///    step and layer;
+    /// 3. per engine, phases are ordered and non-overlapping.
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        let mut cursor = 0u64;
+        for (i, s) in self.steps.iter().enumerate() {
+            if s.start_cycle != cursor {
+                errs.push(format!(
+                    "step {i}: starts at {} instead of the previous end {cursor}",
+                    s.start_cycle
+                ));
+            }
+            if s.end_cycle < s.start_cycle {
+                errs.push(format!("step {i}: negative span {s:?}"));
+            }
+            if let Some(l) = s.layer {
+                if l >= self.layer_names.len() {
+                    errs.push(format!("step {i}: layer {l} out of range"));
+                }
+            }
+            cursor = s.end_cycle;
+        }
+        for (i, p) in self.phases.iter().enumerate() {
+            if p.end_cycle < p.start_cycle {
+                errs.push(format!("phase {i}: negative span"));
+            }
+            if p.layer >= self.layer_names.len() {
+                errs.push(format!("phase {i}: layer {} out of range", p.layer));
+            }
+            match self.steps.get(p.step) {
+                None => errs.push(format!("phase {i}: step {} out of range", p.step)),
+                Some(s) => {
+                    if p.start_cycle < s.start_cycle || p.end_cycle > s.end_cycle {
+                        errs.push(format!(
+                            "phase {i} ({}): span [{}, {}) escapes step {} [{}, {})",
+                            p.kind.name(),
+                            p.start_cycle,
+                            p.end_cycle,
+                            p.step,
+                            s.start_cycle,
+                            s.end_cycle
+                        ));
+                    }
+                }
+            }
+        }
+        for engine in Engine::ALL {
+            let mut prev_end = 0u64;
+            let mut prev_idx = 0usize;
+            for (i, p) in self.phases.iter().enumerate() {
+                if p.kind.engine() != engine {
+                    continue;
+                }
+                if p.start_cycle < prev_end {
+                    errs.push(format!(
+                        "engine {}: phase {i} [{}, {}) overlaps phase {prev_idx} ending at \
+                         {prev_end}",
+                        engine.name(),
+                        p.start_cycle,
+                        p.end_cycle
+                    ));
+                }
+                prev_end = prev_end.max(p.end_cycle);
+                prev_idx = i;
+            }
+        }
+        errs
+    }
+
+    /// Bucket the trace's DRAM traffic into `buckets` equal time slices.
+    /// Bytes of a phase spanning a bucket boundary are split
+    /// proportionally with exact cumulative arithmetic, so the histogram
+    /// sums to [`Self::dram_bytes`] byte-for-byte.
+    pub fn dram_histogram(&self, buckets: usize) -> Vec<u64> {
+        let mut out = vec![0u64; buckets.max(1)];
+        let total = self.total_cycles();
+        if total == 0 {
+            return out;
+        }
+        let n = out.len() as u128;
+        for p in self.phases.iter().filter(|p| p.dram_bytes > 0) {
+            let (s, e, bytes) = (p.start_cycle as u128, p.end_cycle as u128, p.dram_bytes as u128);
+            if e <= s {
+                // Degenerate zero-length phase: attribute to its slice.
+                let b = (s * n / total as u128).min(n - 1) as usize;
+                out[b] += p.dram_bytes;
+                continue;
+            }
+            // Bytes allocated to the phase's first `c - s` cycles.
+            let alloc = |c: u128| bytes * (c - s) / (e - s);
+            let first = (s * n / total as u128) as usize;
+            let last = ((e - 1) * n / total as u128).min(n - 1) as usize;
+            for (b, slot) in out.iter_mut().enumerate().take(last + 1).skip(first) {
+                let lo = (total as u128 * b as u128).div_ceil(n).max(s);
+                let hi = (total as u128 * (b as u128 + 1)).div_ceil(n).min(e);
+                // `hi == lo` happens only for buckets shorter than one
+                // cycle (more buckets than cycles); they get no bytes and
+                // the allocation telescopes to the neighbours exactly.
+                if hi > lo {
+                    *slot += (alloc(hi) - alloc(lo)) as u64;
+                }
+            }
+        }
+        out
+    }
+
+    /// The frame's cost summary for the fleet scheduler: total cycles,
+    /// total DRAM bytes, and the burst shape of those bytes.
+    pub fn frame_cost(&self) -> FrameCost {
+        let mut hist = [0u64; BURST_BUCKETS];
+        hist.copy_from_slice(&self.dram_histogram(BURST_BUCKETS));
+        FrameCost {
+            compute_cycles: self.total_cycles(),
+            dram_bytes: self.dram_bytes(),
+            profile: BurstProfile::from_histogram(&hist),
+        }
+    }
+
+    /// Serialize in Chrome trace-event format (one complete-event per
+    /// phase; engines as threads). Deterministic: same trace, same bytes.
+    pub fn to_chrome_json(&self) -> Json {
+        let us_per_cycle = if self.clock_hz > 0.0 { 1e6 / self.clock_hz } else { 0.0 };
+        let mut events: Vec<Json> = Vec::with_capacity(self.phases.len() + Engine::ALL.len());
+        for (tid, engine) in Engine::ALL.iter().enumerate() {
+            let mut meta = Json::obj();
+            let mut args = Json::obj();
+            args.set("name", Json::Str(engine.name().into()));
+            meta.set("ph", Json::Str("M".into()))
+                .set("pid", Json::Num(0.0))
+                .set("tid", Json::Num(tid as f64))
+                .set("name", Json::Str("thread_name".into()))
+                .set("args", args);
+            events.push(meta);
+        }
+        for p in &self.phases {
+            let tid = Engine::ALL.iter().position(|&e| e == p.kind.engine()).expect("known engine");
+            let mut args = Json::obj();
+            args.set("layer", Json::Str(self.layer_names[p.layer].clone()))
+                .set("dram_bytes", Json::Num(p.dram_bytes as f64))
+                .set("sram_bytes", Json::Num(p.sram_bytes as f64))
+                .set("macs", Json::Num(p.macs as f64))
+                .set("step", Json::Num(p.step as f64));
+            if let Some(g) = p.group {
+                args.set("group", Json::Num(g as f64));
+            }
+            let mut ev = Json::obj();
+            ev.set("ph", Json::Str("X".into()))
+                .set("pid", Json::Num(0.0))
+                .set("tid", Json::Num(tid as f64))
+                .set("name", Json::Str(format!("{} {}", p.kind.name(), self.layer_names[p.layer])))
+                .set("ts", Json::Num(p.start_cycle as f64 * us_per_cycle))
+                .set("dur", Json::Num(p.cycles() as f64 * us_per_cycle))
+                .set("args", args);
+            events.push(ev);
+        }
+        let mut other = Json::obj();
+        other
+            .set("schedule", Json::Str(self.schedule.name().into()))
+            .set("clock_hz", Json::Num(self.clock_hz))
+            .set("total_cycles", Json::Num(self.total_cycles() as f64))
+            .set("dram_bytes", Json::Num(self.dram_bytes() as f64))
+            .set("sram_bytes", Json::Num(self.sram_bytes() as f64))
+            .set("macs", Json::Num(self.macs() as f64))
+            .set("latency_ms", Json::Num(self.latency_ms()));
+        let mut doc = Json::obj();
+        doc.set("displayTimeUnit", Json::Str("ms".into()))
+            .set("otherData", other)
+            .set("traceEvents", Json::Arr(events));
+        doc
+    }
+}
+
+/// Incremental [`ExecutionTrace`] constructor used by the schedule
+/// builders: steps are laid contiguously from cycle 0; phases are placed
+/// inside the current step.
+#[derive(Debug)]
+pub struct TraceBuilder {
+    trace: ExecutionTrace,
+    cursor: u64,
+}
+
+impl TraceBuilder {
+    /// Start an empty trace.
+    pub fn new(schedule: ScheduleKind, clock_hz: f64, layer_names: Vec<String>) -> Self {
+        TraceBuilder {
+            trace: ExecutionTrace {
+                schedule,
+                clock_hz,
+                layer_names,
+                steps: Vec::new(),
+                phases: Vec::new(),
+            },
+            cursor: 0,
+        }
+    }
+
+    /// Open a step of `cycles` length at the current cursor; returns
+    /// `(step index, step start cycle)`.
+    pub fn begin_step(
+        &mut self,
+        layer: Option<usize>,
+        group: Option<usize>,
+        cycles: u64,
+    ) -> (usize, u64) {
+        let start = self.cursor;
+        self.trace.steps.push(StepSpan {
+            layer,
+            group,
+            start_cycle: start,
+            end_cycle: start + cycles,
+        });
+        self.cursor = start + cycles;
+        (self.trace.steps.len() - 1, start)
+    }
+
+    /// Add a phase spanning `[start, start + cycles)` of step `step`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn phase(
+        &mut self,
+        kind: PhaseKind,
+        step: usize,
+        layer: usize,
+        group: Option<usize>,
+        start: u64,
+        cycles: u64,
+        dram_bytes: u64,
+        sram_bytes: u64,
+        macs: u64,
+    ) {
+        self.trace.phases.push(Phase {
+            kind,
+            step,
+            layer,
+            group,
+            start_cycle: start,
+            end_cycle: start + cycles,
+            dram_bytes,
+            sram_bytes,
+            macs,
+        });
+    }
+
+    /// Lay a sequence of DMA sub-phases over `[start, start + dma_cycles)`
+    /// with boundaries proportional to cumulative byte counts (exact
+    /// integer arithmetic: the last boundary is always `dma_cycles`).
+    /// Zero-byte parts are skipped.
+    pub fn dma_burst(
+        &mut self,
+        step: usize,
+        group: Option<usize>,
+        start: u64,
+        dma_cycles: u64,
+        parts: &[(PhaseKind, usize, u64)],
+    ) {
+        let total: u128 = parts.iter().map(|&(_, _, b)| b as u128).sum();
+        if total == 0 {
+            return;
+        }
+        let mut cum = 0u128;
+        let mut prev = 0u64;
+        for &(kind, layer, bytes) in parts {
+            cum += bytes as u128;
+            let boundary = (dma_cycles as u128 * cum / total) as u64;
+            if bytes > 0 {
+                self.phase(kind, step, layer, group, start + prev, boundary - prev, bytes, 0, 0);
+            }
+            prev = boundary;
+        }
+    }
+
+    /// Current cursor (the end of the last step laid so far).
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
+    /// Finish and return the trace.
+    pub fn finish(self) -> ExecutionTrace {
+        self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_trace() -> ExecutionTrace {
+        let mut b = TraceBuilder::new(
+            ScheduleKind::LayerByLayer,
+            300e6,
+            vec!["a".into(), "b".into()],
+        );
+        let (s0, t0) = b.begin_step(Some(0), None, 100);
+        b.phase(PhaseKind::Compute, s0, 0, None, t0, 80, 0, 0, 640);
+        b.phase(PhaseKind::SramStream, s0, 0, None, t0, 50, 0, 4000, 0);
+        b.dma_burst(
+            s0,
+            None,
+            t0,
+            60,
+            &[
+                (PhaseKind::WeightDma, 0, 300),
+                (PhaseKind::IfmapLoad, 0, 0),
+                (PhaseKind::Writeback, 0, 900),
+            ],
+        );
+        let (s1, t1) = b.begin_step(Some(1), None, 40);
+        b.phase(PhaseKind::Compute, s1, 1, None, t1, 40, 0, 0, 128);
+        b.dma_burst(s1, None, t1, 20, &[(PhaseKind::IfmapLoad, 1, 500)]);
+        b.finish()
+    }
+
+    #[test]
+    fn builder_produces_valid_trace() {
+        let t = tiny_trace();
+        assert_eq!(t.validate(), Vec::<String>::new());
+        assert_eq!(t.total_cycles(), 140);
+        assert_eq!(t.dram_bytes(), 1700);
+        assert_eq!(t.sram_bytes(), 4000);
+        assert_eq!(t.macs(), 768);
+        assert!((t.latency_ms() - 140.0 / 300e6 * 1e3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dma_burst_boundaries_are_exact_and_ordered() {
+        let t = tiny_trace();
+        let dma: Vec<&Phase> = t.engine_phases(Engine::Dma).collect();
+        // Zero-byte ifmap part skipped; three DMA phases total.
+        assert_eq!(dma.len(), 3);
+        assert_eq!(dma[0].kind, PhaseKind::WeightDma);
+        assert_eq!(dma[1].kind, PhaseKind::Writeback);
+        // Cumulative-proportional split of 60 cycles over 300/900 bytes.
+        assert_eq!((dma[0].start_cycle, dma[0].end_cycle), (0, 15));
+        assert_eq!((dma[1].start_cycle, dma[1].end_cycle), (15, 60));
+        // Second step's DMA phase starts after the first step.
+        assert_eq!((dma[2].start_cycle, dma[2].end_cycle), (100, 120));
+    }
+
+    #[test]
+    fn validate_flags_overlap_and_escape() {
+        let mut t = tiny_trace();
+        t.phases[0].end_cycle = 1000; // escapes its step
+        assert!(t.validate().iter().any(|e| e.contains("escapes step")));
+        let mut t2 = tiny_trace();
+        // Make the second compute phase start inside the first one's span.
+        let c2 = t2
+            .phases
+            .iter()
+            .position(|p| p.kind == PhaseKind::Compute && p.layer == 1)
+            .unwrap();
+        t2.phases[c2].start_cycle = 10;
+        t2.phases[c2].end_cycle = 20;
+        assert!(t2.validate().iter().any(|e| e.contains("overlaps")));
+    }
+
+    #[test]
+    fn histogram_conserves_bytes() {
+        let t = tiny_trace();
+        for buckets in [1usize, 3, 16, 64] {
+            let h = t.dram_histogram(buckets);
+            assert_eq!(h.iter().sum::<u64>(), t.dram_bytes(), "{buckets} buckets");
+        }
+    }
+
+    #[test]
+    fn frame_cost_summarizes_the_trace() {
+        let t = tiny_trace();
+        let c = t.frame_cost();
+        assert_eq!(c.compute_cycles, 140);
+        assert_eq!(c.dram_bytes, 1700);
+        assert_eq!(c.profile.cumulative(BURST_BUCKETS), BurstProfile::SCALE);
+    }
+
+    #[test]
+    fn empty_trace_is_valid_and_zero() {
+        let t = TraceBuilder::new(ScheduleKind::GroupFused, 300e6, Vec::new()).finish();
+        assert!(t.validate().is_empty());
+        assert_eq!(t.total_cycles(), 0);
+        assert_eq!(t.latency_ms(), 0.0);
+        assert_eq!(t.dram_histogram(8), vec![0; 8]);
+        assert_eq!(t.frame_cost().profile, BurstProfile::FLAT);
+    }
+
+    #[test]
+    fn chrome_json_is_deterministic_and_well_formed() {
+        let t = tiny_trace();
+        let a = t.to_chrome_json().to_string();
+        let b = t.to_chrome_json().to_string();
+        assert_eq!(a, b);
+        let doc = Json::parse(&a).expect("valid JSON");
+        let events = doc.get("traceEvents").and_then(Json::as_arr).expect("events");
+        // 3 thread-name metadata events + 6 phases.
+        assert_eq!(events.len(), 3 + t.phases.len());
+        assert_eq!(
+            doc.get("otherData").and_then(|o| o.get("dram_bytes")).and_then(Json::as_u64),
+            Some(1700)
+        );
+    }
+}

@@ -1,0 +1,191 @@
+//! Per-frame DRAM demand shape and the frame cost summary.
+//!
+//! The paper's point is that *when* bytes cross the pad matters as much
+//! as how many: group fusion turns bursty per-layer feature traffic into
+//! a sustained stream. [`BurstProfile`] captures that temporal shape as a
+//! fixed-size, exactly-normalized histogram derived from an
+//! [`ExecutionTrace`](super::ExecutionTrace)'s DMA phases, and
+//! [`FrameCost`] packages it with the frame's cycle and byte totals —
+//! the unit of account the fleet scheduler prices, admits and arbitrates
+//! with. Both are `Copy` and integer-exact, so they digest cleanly and
+//! keep the serial/parallel engine identity bit-for-bit.
+
+/// Number of equal time-slices a frame's DRAM demand is bucketed into.
+pub const BURST_BUCKETS: usize = 16;
+
+/// The temporal shape of one frame's DRAM traffic: how the frame's bytes
+/// distribute over [`BURST_BUCKETS`] equal slices of its execution span.
+///
+/// Weights are integers summing exactly to [`BurstProfile::SCALE`]
+/// (cumulative rounding — no drift), so two profiles are comparable and
+/// digestable without any float tolerance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BurstProfile {
+    weights: [u16; BURST_BUCKETS],
+}
+
+impl BurstProfile {
+    /// Weights of one profile always sum to this.
+    pub const SCALE: u32 = 10_000;
+
+    /// The uniform profile: bytes spread evenly over the frame — the
+    /// shape the pre-trace fleet model implicitly assumed, and the
+    /// stand-in for synthetic costs in tests.
+    pub const FLAT: BurstProfile =
+        BurstProfile { weights: [(Self::SCALE as usize / BURST_BUCKETS) as u16; BURST_BUCKETS] };
+
+    /// Build from a per-bucket byte histogram (length [`BURST_BUCKETS`]).
+    /// An all-zero histogram (no DRAM traffic) maps to [`Self::FLAT`].
+    pub fn from_histogram(bytes: &[u64; BURST_BUCKETS]) -> Self {
+        let total: u128 = bytes.iter().map(|&b| b as u128).sum();
+        if total == 0 {
+            return Self::FLAT;
+        }
+        let mut weights = [0u16; BURST_BUCKETS];
+        let mut cum_bytes = 0u128;
+        let mut prev = 0u32;
+        for (w, &b) in weights.iter_mut().zip(bytes.iter()) {
+            cum_bytes += b as u128;
+            let cum = (Self::SCALE as u128 * cum_bytes / total) as u32;
+            *w = (cum - prev) as u16;
+            prev = cum;
+        }
+        debug_assert_eq!(prev, Self::SCALE);
+        BurstProfile { weights }
+    }
+
+    /// The per-bucket weights (sum = [`Self::SCALE`]).
+    pub fn weights(&self) -> &[u16; BURST_BUCKETS] {
+        &self.weights
+    }
+
+    /// Sum of the first `buckets` weights.
+    pub fn cumulative(&self, buckets: usize) -> u32 {
+        self.weights[..buckets.min(BURST_BUCKETS)].iter().map(|&w| w as u32).sum()
+    }
+
+    /// Fraction of the frame's bytes eligible for transfer while tick
+    /// `elapsed_ticks` (1-based) of `total_ticks` executes: a bucket's
+    /// bytes become eligible the moment execution *enters* its slice.
+    /// Compute that has finished (or a degenerate zero-tick frame)
+    /// releases everything.
+    pub fn eligible_fraction(&self, elapsed_ticks: u64, total_ticks: u64) -> f64 {
+        if total_ticks == 0 || elapsed_ticks >= total_ticks {
+            return 1.0;
+        }
+        let entered = (BURST_BUCKETS as u64 * elapsed_ticks).div_ceil(total_ticks);
+        let entered = entered.clamp(1, BURST_BUCKETS as u64) as usize;
+        self.cumulative(entered) as f64 / Self::SCALE as f64
+    }
+
+    /// Peak bucket weight over the uniform weight — 1.0 for a perfectly
+    /// sustained stream, [`BURST_BUCKETS`] as f64 for a single-slice
+    /// spike. The burstiness figure the trace reports surface.
+    pub fn peak_to_mean(&self) -> f64 {
+        let peak = *self.weights.iter().max().expect("non-empty weights") as f64;
+        peak * BURST_BUCKETS as f64 / Self::SCALE as f64
+    }
+
+    /// The weights as digest words (for bench fingerprints and the fleet
+    /// stats digest).
+    pub fn digest_words(&self) -> impl Iterator<Item = u64> + '_ {
+        self.weights.iter().map(|&w| w as u64)
+    }
+}
+
+/// Per-frame execution cost on one chip, as derived from a frame's
+/// [`ExecutionTrace`](super::ExecutionTrace): total cycles, total DRAM
+/// bytes, and the temporal shape those bytes arrive in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameCost {
+    /// Total frame cycles (group-fused schedule).
+    pub compute_cycles: u64,
+    /// External DRAM bytes for the whole frame (features + weights).
+    pub dram_bytes: u64,
+    /// How those bytes distribute over the frame's execution span.
+    pub profile: BurstProfile,
+}
+
+impl FrameCost {
+    /// A cost with a uniform demand shape — for synthetic workloads and
+    /// tests; real costs come from [`super::ExecutionTrace::frame_cost`].
+    pub const fn flat(compute_cycles: u64, dram_bytes: u64) -> Self {
+        FrameCost { compute_cycles, dram_bytes, profile: BurstProfile::FLAT }
+    }
+
+    /// Steady-state DRAM-bus demand at `fps`, bytes per second — the
+    /// quantity admission control budgets against.
+    pub fn bus_demand_bytes_per_s(&self, fps: f64) -> f64 {
+        self.dram_bytes as f64 * fps
+    }
+
+    /// Steady-state compute demand at `fps`, cycles per second.
+    pub fn compute_demand_cycles_per_s(&self, fps: f64) -> f64 {
+        self.compute_cycles as f64 * fps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_sums_to_scale() {
+        assert_eq!(BurstProfile::FLAT.cumulative(BURST_BUCKETS), BurstProfile::SCALE);
+        assert!((BurstProfile::FLAT.peak_to_mean() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_weights_sum_exactly() {
+        // Awkward byte counts that would drift under naive per-bucket
+        // rounding.
+        let mut h = [0u64; BURST_BUCKETS];
+        for (i, b) in h.iter_mut().enumerate() {
+            *b = (i as u64 * 7919 + 13) % 1000;
+        }
+        let p = BurstProfile::from_histogram(&h);
+        assert_eq!(p.cumulative(BURST_BUCKETS), BurstProfile::SCALE);
+    }
+
+    #[test]
+    fn empty_histogram_is_flat() {
+        assert_eq!(BurstProfile::from_histogram(&[0; BURST_BUCKETS]), BurstProfile::FLAT);
+    }
+
+    #[test]
+    fn single_spike_has_max_peak() {
+        let mut h = [0u64; BURST_BUCKETS];
+        h[3] = 1_000_000;
+        let p = BurstProfile::from_histogram(&h);
+        assert_eq!(p.weights()[3], BurstProfile::SCALE as u16);
+        assert!((p.peak_to_mean() - BURST_BUCKETS as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eligibility_releases_bucket_by_bucket() {
+        let mut h = [0u64; BURST_BUCKETS];
+        h[0] = 100;
+        h[BURST_BUCKETS - 1] = 100;
+        let p = BurstProfile::from_histogram(&h);
+        // 16-tick frame: one bucket per tick. Tick 1 releases bucket 0.
+        assert!((p.eligible_fraction(1, 16) - 0.5).abs() < 1e-9);
+        // Mid-frame ticks release nothing new.
+        assert!((p.eligible_fraction(8, 16) - 0.5).abs() < 1e-9);
+        // The last tick (and anything beyond) releases everything.
+        assert!((p.eligible_fraction(16, 16) - 1.0).abs() < 1e-9);
+        assert!((p.eligible_fraction(99, 16) - 1.0).abs() < 1e-9);
+        // Degenerate frames release everything immediately.
+        assert!((p.eligible_fraction(1, 0) - 1.0).abs() < 1e-9);
+        // Short frames (fewer ticks than buckets) still reach 1.0 by the
+        // final tick and release a prefix before it.
+        assert!((p.eligible_fraction(1, 2) - 0.5).abs() < 1e-9);
+        assert!((p.eligible_fraction(2, 2) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flat_cost_demand_math() {
+        let c = FrameCost::flat(1_000_000, 2_000_000);
+        assert!((c.bus_demand_bytes_per_s(30.0) - 60e6).abs() < 1e-6);
+        assert!((c.compute_demand_cycles_per_s(30.0) - 30e6).abs() < 1e-6);
+    }
+}

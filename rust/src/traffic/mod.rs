@@ -13,6 +13,13 @@
 //! Cross-group concat edges (YOLOv2 passthrough) add a re-read of the
 //! source group's output. Residual edges never cross groups (guideline 3);
 //! if a partition violates that anyway, the skip input is re-read.
+//!
+//! This analytic model is one of **two** byte accountings: the schedule
+//! builders in [`crate::dla::schedule`] emit the same bytes as phases of
+//! an event-level [`crate::trace::ExecutionTrace`]. The two paths are
+//! pinned equal byte-for-byte — totals *and* per-kind (weights vs
+//! features) — for every zoo model at every paper resolution by
+//! `tests/trace.rs`, so a change that lets them drift fails the suite.
 
 mod report;
 

@@ -84,6 +84,37 @@ fn identity_holds_under_contention_and_shedding() {
 }
 
 #[test]
+fn identity_holds_when_bursts_saturate_the_bus() {
+    // The burst-aware arbiter's hardest regime: admitted demand far above
+    // the bus, so the chips' profile-shaped bursts overlap past the
+    // per-tick budget and the water-filler is splitting scarcity every
+    // tick. The serial/parallel identity must survive it, and the report
+    // must actually show burst saturation (averages would hide it).
+    let base = FleetConfig {
+        streams: 24,
+        chips: 8,
+        bus_mbps: 300.0,
+        seconds: 1.5,
+        seed: 17,
+        admission: AdmissionPolicy::AdmitAll,
+        ..FleetConfig::default()
+    };
+    let serial = run_fleet(&FleetConfig { threads: 1, ..base }).expect("serial run");
+    assert!(
+        serial.bus_saturation > 0.0,
+        "a starved bus must show saturated ticks: {}",
+        serial.bus_saturation
+    );
+    assert!(
+        serial.bus_peak_demand > 1.0,
+        "overlapping bursts must exceed the per-tick budget: {}",
+        serial.bus_peak_demand
+    );
+    let parallel = run_fleet(&FleetConfig { threads: 4, ..base }).expect("parallel run");
+    assert_identical(&serial, &parallel, "burst-saturated workload");
+}
+
+#[test]
 fn identity_holds_for_explicit_uniform_stream_lists() {
     // Same-rate same-QoS streams maximize EDF deadline ties: the pinned
     // (stream id, seq) tie-break is what keeps the engines aligned here.

@@ -1,0 +1,140 @@
+//! Trace invariants across the model zoo — the contract that makes the
+//! phase-level trace the single source of truth:
+//!
+//! 1. every builder output is structurally valid (steps tile the frame,
+//!    phases stay inside their steps, engines never overlap);
+//! 2. trace DRAM byte totals equal the analytic `TrafficModel` report
+//!    **exactly** for every zoo model at every paper resolution, under
+//!    both schedules;
+//! 3. the `FrameSim` reductions and the `ExecutionEvents` energy fold
+//!    agree with the trace totals bit-for-bit (the paper design point
+//!    pins the old aggregate path);
+//! 4. burst profiles conserve bytes and stay exactly normalized.
+
+use rcnet_dla::config::ChipConfig;
+use rcnet_dla::dla::{simulate_fused, trace_fused, trace_layer_by_layer, FrameSim};
+use rcnet_dla::energy::ExecutionEvents;
+use rcnet_dla::fusion::FusionConfig;
+use rcnet_dla::model::zoo::{plan_fixtures, PAPER_RESOLUTIONS};
+use rcnet_dla::plan::Planner;
+use rcnet_dla::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
+use rcnet_dla::trace::{BurstProfile, ExecutionTrace, BURST_BUCKETS};
+use rcnet_dla::traffic::TrafficModel;
+
+fn assert_valid(trace: &ExecutionTrace, what: &str) {
+    let errs = trace.validate();
+    assert!(errs.is_empty(), "{what}: {errs:?}");
+}
+
+fn assert_profile_exact(trace: &ExecutionTrace, what: &str) {
+    let hist = trace.dram_histogram(BURST_BUCKETS);
+    assert_eq!(hist.iter().sum::<u64>(), trace.dram_bytes(), "{what}: histogram loses bytes");
+    let cost = trace.frame_cost();
+    assert_eq!(
+        cost.profile.cumulative(BURST_BUCKETS),
+        BurstProfile::SCALE,
+        "{what}: profile not normalized"
+    );
+    assert_eq!(cost.compute_cycles, trace.total_cycles(), "{what}");
+    assert_eq!(cost.dram_bytes, trace.dram_bytes(), "{what}");
+}
+
+#[test]
+fn trace_bytes_match_traffic_model_across_the_zoo() {
+    let chip = ChipConfig::paper_chip();
+    let cfg = FusionConfig::paper_default();
+    let tm = TrafficModel::new(chip);
+    for fx in plan_fixtures() {
+        let net = (fx.build)();
+        for hw in PAPER_RESOLUTIONS {
+            let what = format!("{} at {hw:?}", fx.name);
+
+            // Layer-by-layer: every model, every resolution.
+            let lbl = trace_layer_by_layer(&net, hw, &chip);
+            assert_valid(&lbl, &format!("{what} (layer-by-layer)"));
+            assert_eq!(
+                lbl.dram_bytes(),
+                tm.layer_by_layer(&net, hw).total_bytes(),
+                "{what}: layer-by-layer trace bytes != traffic model"
+            );
+            assert_profile_exact(&lbl, &what);
+
+            // Group-fused under the traffic-optimal plan. A tiling error
+            // is acceptable only for the known physically-untileable
+            // points (DeepLab's 2048-ch rows at 1080p — pinned by
+            // tests/prop_planner.rs); those are skipped here.
+            let plan = Planner::OptimalDp.plan(&net, &cfg, &chip, hw);
+            let Ok((fused, _tilings)) = trace_fused(&net, &plan.groups, hw, &chip) else {
+                continue;
+            };
+            assert_valid(&fused, &format!("{what} (fused)"));
+            assert_eq!(
+                fused.dram_bytes(),
+                tm.fused(&net, &plan.groups, hw).total_bytes(),
+                "{what}: fused trace bytes != traffic model"
+            );
+            assert_profile_exact(&fused, &what);
+
+            // The reductions agree with the trace they fold.
+            let sim = FrameSim::from_trace(&fused, &chip);
+            assert_eq!(sim.total_cycles, fused.total_cycles(), "{what}");
+            assert_eq!(sim.total_dram_bytes(), fused.dram_bytes(), "{what}");
+            assert_eq!(sim.total_sram_bytes(), fused.sram_bytes(), "{what}");
+            assert_eq!(sim.total_macs(), fused.macs(), "{what}");
+        }
+    }
+}
+
+#[test]
+fn energy_fold_matches_old_aggregates_at_the_paper_design_point() {
+    // The deployed RC-YOLOv2 at the chip's headline HD30 operating point:
+    // the trace fold and the FrameSim aggregate path must produce
+    // bit-identical event counts for the power model.
+    let chip = ChipConfig::paper_chip();
+    let spec = build_deployment_spec(PipelineProfile::Hd, 3, 5, None, 7);
+    let (net, groups) = spec_to_network(&spec).expect("deployment spec");
+    let (trace, _tilings) = trace_fused(&net, &groups, (720, 1280), &chip).expect("fused trace");
+    let (sim, _gsims) = simulate_fused(&net, &groups, (720, 1280), &chip).expect("fused sim");
+
+    let from_trace = ExecutionEvents::per_second(&trace, 30.0);
+    let from_sim = sim.events_per_second(30.0);
+    assert_eq!(from_trace.macs.to_bits(), from_sim.macs.to_bits());
+    assert_eq!(from_trace.sram_bytes.to_bits(), from_sim.sram_bytes.to_bits());
+    assert_eq!(from_trace.pad_bytes.to_bits(), from_sim.pad_bytes.to_bits());
+
+    // And the per-frame fold is the plain totals.
+    let per_frame = ExecutionEvents::per_frame(&trace);
+    assert_eq!(per_frame.macs, trace.macs() as f64);
+    assert_eq!(per_frame.pad_bytes, trace.dram_bytes() as f64);
+}
+
+#[test]
+fn fused_phase_kinds_partition_the_traffic_exactly() {
+    // Per-kind accounting at the HD design point, not just totals: the
+    // trace's WeightDma bytes are the traffic model's weight bytes, and
+    // IfmapLoad + Writeback are its feature bytes — exactly.
+    use rcnet_dla::trace::PhaseKind;
+    let chip = ChipConfig::paper_chip();
+    let spec = build_deployment_spec(PipelineProfile::Hd, 3, 5, None, 7);
+    let (net, groups) = spec_to_network(&spec).expect("deployment spec");
+    let (fused, _) = trace_fused(&net, &groups, (720, 1280), &chip).expect("fused trace");
+    let report = TrafficModel::new(chip).fused(&net, &groups, (720, 1280));
+    let weight: u64 = fused
+        .phases
+        .iter()
+        .filter(|p| p.kind == PhaseKind::WeightDma)
+        .map(|p| p.dram_bytes)
+        .sum();
+    let feat: u64 = fused
+        .phases
+        .iter()
+        .filter(|p| matches!(p.kind, PhaseKind::IfmapLoad | PhaseKind::Writeback))
+        .map(|p| p.dram_bytes)
+        .sum();
+    assert_eq!(weight, report.weight_bytes());
+    assert_eq!(feat, report.feat_bytes());
+    // And the fused schedule still moves far fewer bytes than
+    // layer-by-layer while the traces stay structurally valid.
+    let lbl = trace_layer_by_layer(&net, (720, 1280), &chip);
+    assert!(fused.dram_bytes() * 3 < lbl.dram_bytes());
+}
