@@ -3,19 +3,28 @@
 //! and a shared DRAM bus swept from comfortable to starved. Watch
 //! admission, shedding and tail latency respond — the paper's 585 MB/s
 //! single-chip budget becomes the knob that decides how many streams a
-//! fleet can honestly serve.
+//! fleet can honestly serve. The second half runs the bundled scenario
+//! presets: churn bursts, per-stream models and a heterogeneous pool.
 //!
 //!     cargo run --release --example fleet
 
-use rcnet_dla::serve::{run_fleet, FleetConfig};
+use rcnet_dla::serve::{run_fleet, FleetConfig, Scenario, PRESET_NAMES};
 
 fn main() -> rcnet_dla::Result<()> {
-    let base = FleetConfig { streams: 32, chips: 8, seconds: 4.0, ..FleetConfig::default() };
+    let base = FleetConfig { seconds: 4.0, ..FleetConfig::sampled(32, 8, 1) };
     for bus_mbps in [4680.0, 1170.0, 585.0] {
         println!("== shared bus budget: {bus_mbps} MB/s ==");
-        let report = run_fleet(&FleetConfig { bus_mbps, ..base })?;
+        let report = run_fleet(&FleetConfig { bus_mbps, ..base.clone() })?;
         println!("{report}\n");
     }
-    println!("(64-stream acceptance run: `cargo run --release -- fleet --streams 64 --bus-mbps 585`)");
+
+    for name in PRESET_NAMES {
+        println!("== scenario preset: {name} ==");
+        let cfg = FleetConfig { seconds: 4.0, ..FleetConfig::new(Scenario::preset(name)?) };
+        println!("{}\n", run_fleet(&cfg)?);
+    }
+    println!(
+        "(reproduce any preset: `cargo run --release -- fleet --scenario mixed-zoo --json`)"
+    );
     Ok(())
 }

@@ -11,12 +11,10 @@ use rcnet_dla::serve::{run_fleet, AdmissionPolicy, FleetConfig};
 
 fn cfg(streams: usize) -> FleetConfig {
     FleetConfig {
-        streams,
-        chips: 16,
         bus_mbps: 585.0,
         seconds: 3.0,
         admission: AdmissionPolicy::AdmitAll,
-        ..FleetConfig::default()
+        ..FleetConfig::sampled(streams, 16, 1)
     }
 }
 

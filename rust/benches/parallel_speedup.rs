@@ -16,14 +16,11 @@ use rcnet_dla::serve::{
 
 fn cfg(threads: usize) -> FleetConfig {
     FleetConfig {
-        streams: 1024,
-        chips: 64,
         bus_mbps: 585.0 * 64.0,
         seconds: 3.0,
-        seed: 1,
         admission: AdmissionPolicy::AdmitAll,
         threads,
-        ..FleetConfig::default()
+        ..FleetConfig::sampled(1024, 64, 1)
     }
 }
 

@@ -22,6 +22,12 @@
 //!   frame-cost/burst-profile derivation, and Chrome-trace
 //!   serialization, so the perf gate covers the cost of the trace core
 //!   everything else now reduces from.
+//! * **serve_scenario** ([`scenario_report`]) — the bundled scenario
+//!   presets (churn, multi-model pricing, heterogeneous pools) on both
+//!   engines, digest-cross-checked per point, so the perf gate covers
+//!   the scenario timeline machinery (online admission, capability
+//!   dispatch, per-model plan pricing) and every bench run doubles as a
+//!   churn determinism check.
 //!
 //! Workload ids never encode anything machine-dependent (the resolved
 //!   `auto` worker count is recorded as an `info` metric instead), so
@@ -35,9 +41,9 @@ use crate::model::zoo::{plan_fixtures, yolov2_converted, PAPER_RESOLUTIONS};
 use crate::plan::{PlanCache, Planner};
 use crate::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
 use crate::serve::{
-    resolve_threads, AdmissionPolicy, FleetConfig, FleetReport, FleetSim, StreamSpec,
+    resolve_threads, AdmissionPolicy, FleetConfig, FleetReport, FleetSim, Scenario, PRESET_NAMES,
 };
-use crate::util::Rng;
+use crate::util::fnv1a;
 use crate::Result;
 
 use super::{best_of_ms, fingerprint_hex, time_ms, BenchReport, Direction, Measurement, Metric};
@@ -110,6 +116,23 @@ impl BenchProfile {
             BenchProfile::Full => &PAPER_RESOLUTIONS,
         }
     }
+
+    fn scenario_names(self) -> &'static [&'static str] {
+        match self {
+            // Quick keeps the gate meaningful across all three scenario
+            // axes (steady, churn, multi-model) without the hetero pool.
+            BenchProfile::Quick => &["steady-hd", "rush-hour", "mixed-zoo"],
+            BenchProfile::Full => &PRESET_NAMES,
+        }
+    }
+
+    fn scenario_seconds(self) -> f64 {
+        match self {
+            // Long enough that rush-hour's departures actually fire.
+            BenchProfile::Quick => 2.0,
+            BenchProfile::Full => 3.5,
+        }
+    }
 }
 
 /// Deterministic virtual-time metrics shared by both engine runs of a
@@ -125,7 +148,7 @@ fn fleet_metrics(r: &FleetReport, seconds: f64) -> Vec<Metric> {
         Metric { name: "p99_ms".into(), value: r.aggregate_p99_ms(), better: Direction::Lower },
         Metric { name: "miss_rate".into(), value: r.miss_rate(), better: Direction::Lower },
         Metric { name: "shed_rate".into(), value: r.shed_rate(), better: Direction::Lower },
-        Metric { name: "admitted".into(), value: r.per_stream.len() as f64, better: Direction::Info },
+        Metric { name: "admitted".into(), value: r.admitted() as f64, better: Direction::Info },
         Metric { name: "bus_utilization".into(), value: r.bus_utilization, better: Direction::Info },
     ]
 }
@@ -135,28 +158,22 @@ pub fn fleet_report(profile: BenchProfile) -> Result<BenchReport> {
     let mut rep = BenchReport::new("fleet", profile == BenchProfile::Quick);
     let seconds = profile.fleet_seconds();
     for &(chips, streams) in profile.fleet_grid() {
+        // The same seeded mixed-resolution scenario for both engines;
+        // the paper's single-chip budget scales with the pool, so the
+        // grid stays loaded instead of admission-starved.
         let cfg = FleetConfig {
-            streams,
-            chips,
-            // The paper's single-chip budget, scaled with the pool, so
-            // the grid stays loaded instead of admission-starved.
-            bus_mbps: 585.0 * chips as f64,
             seconds,
-            seed: 1,
             admission: AdmissionPolicy::AdmitAll,
-            ..FleetConfig::default()
+            ..FleetConfig::sampled(streams, chips, 1)
         };
-        // Same seeded mixed-resolution specs for both engines.
-        let mut rng = Rng::new(cfg.seed);
-        let specs: Vec<StreamSpec> =
-            (0..cfg.streams).map(|_| StreamSpec::sample(&mut rng)).collect();
+        let (seed, bus_mbps) = (cfg.seed, cfg.bus_mbps);
 
-        // Setup (admission + per-resolution planning), each priming mode.
-        let serial_cfg = FleetConfig { threads: 1, ..cfg };
+        // Setup (cost pricing + per-point planning), each priming mode.
+        let serial_cfg = FleetConfig { threads: 1, ..cfg.clone() };
         let auto_cfg = FleetConfig { threads: 0, ..cfg };
-        let (sim, setup_serial_ms) = time_ms(|| FleetSim::new(&serial_cfg, &specs));
+        let (sim, setup_serial_ms) = time_ms(|| FleetSim::new(&serial_cfg));
         let sim = sim?;
-        let (psim, setup_auto_ms) = time_ms(|| FleetSim::new(&auto_cfg, &specs));
+        let (psim, setup_auto_ms) = time_ms(|| FleetSim::new(&auto_cfg));
         let psim = psim?;
 
         // Engine wall time, serial vs parallel, on identical sims.
@@ -174,13 +191,13 @@ pub fn fleet_report(profile: BenchProfile) -> Result<BenchReport> {
             );
         }
 
-        let point = format!("chips={chips}/streams={streams}/sec={seconds}/seed={}", cfg.seed);
+        let point = format!("chips={chips}/streams={streams}/sec={seconds}/seed={seed}");
         let fingerprint = fingerprint_hex([
             chips as u64,
             streams as u64,
             seconds.to_bits(),
-            cfg.seed,
-            cfg.bus_mbps.to_bits(),
+            seed,
+            bus_mbps.to_bits(),
             serial.stats_digest(),
         ]);
         for (engine, wall_ms, setup_ms, r) in [
@@ -427,6 +444,86 @@ pub fn trace_report(profile: BenchProfile) -> Result<BenchReport> {
     Ok(rep)
 }
 
+/// Run the serve_scenario workload family (see the module docs): every
+/// profiled scenario preset on both engines, digest-cross-checked, with
+/// the deterministic service metrics (throughput, tails, miss/shed,
+/// admission outcome) gated alongside wall time.
+pub fn scenario_report(profile: BenchProfile) -> Result<BenchReport> {
+    let mut rep = BenchReport::new("serve_scenario", profile == BenchProfile::Quick);
+    let seconds = profile.scenario_seconds();
+    for &name in profile.scenario_names() {
+        let base = FleetConfig { seconds, ..FleetConfig::new(Scenario::preset(name)?) };
+        let serial_cfg = FleetConfig { threads: 1, ..base.clone() };
+        let auto_cfg = FleetConfig { threads: 0, ..base };
+
+        let (sim, setup_serial_ms) = time_ms(|| FleetSim::new(&serial_cfg));
+        let sim = sim?;
+        let (psim, setup_auto_ms) = time_ms(|| FleetSim::new(&auto_cfg));
+        let psim = psim?;
+
+        let (serial, serial_ms) = time_ms(|| {
+            let mut s = sim;
+            s.run()
+        });
+        let workers = resolve_threads(0);
+        let (parallel, parallel_ms) = time_ms(|| psim.run_parallel(workers));
+
+        // Every bench run doubles as a churn determinism check.
+        if serial.stats_digest() != parallel.stats_digest() {
+            crate::bail!("parallel fleet diverged from serial on scenario {name}");
+        }
+
+        // Distinct priced networks — the multi-model coverage witness.
+        let mut nets: Vec<u64> =
+            serial.per_stream.iter().map(|s| s.provenance.net_hash).collect();
+        nets.sort_unstable();
+        nets.dedup();
+
+        let point = format!("scenario={name}/sec={seconds}");
+        let fingerprint = fingerprint_hex([
+            fnv1a(name.bytes().map(u64::from)),
+            seconds.to_bits(),
+            serial.stats_digest(),
+        ]);
+        for (engine, wall_ms, setup_ms, r) in [
+            ("1", serial_ms, setup_serial_ms, &serial),
+            ("auto", parallel_ms, setup_auto_ms, &parallel),
+        ] {
+            let mut metrics = fleet_metrics(r, seconds);
+            metrics.push(Metric {
+                name: "rejected".into(),
+                value: r.rejected as f64,
+                better: Direction::Info,
+            });
+            metrics.push(Metric {
+                name: "models".into(),
+                value: nets.len() as f64,
+                better: Direction::Info,
+            });
+            if engine == "auto" {
+                metrics.push(Metric {
+                    name: "workers".into(),
+                    value: workers as f64,
+                    better: Direction::Info,
+                });
+            }
+            rep.measurements.push(Measurement {
+                id: format!("serve-scenario/{point}/threads={engine}"),
+                wall_ms,
+                fingerprint: fingerprint.clone(),
+                metrics,
+            });
+            rep.measurements.push(Measurement {
+                id: format!("serve-scenario-setup/{point}/threads={engine}"),
+                wall_ms: setup_ms,
+                fingerprint: String::new(),
+                metrics: Vec::new(),
+            });
+        }
+    }
+    Ok(rep)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -438,6 +535,14 @@ mod tests {
         assert!(BenchProfile::Full
             .planner_fixture_names()
             .contains(&"yolov2-converted"));
+        // The scenario family's quick profile keeps churn AND the
+        // multi-model preset under the CI gate; full covers every preset.
+        assert!(BenchProfile::Quick.scenario_names().contains(&"rush-hour"));
+        assert!(BenchProfile::Quick.scenario_names().contains(&"mixed-zoo"));
+        assert_eq!(BenchProfile::Full.scenario_names(), &PRESET_NAMES[..]);
+        for n in BenchProfile::Full.scenario_names() {
+            assert!(Scenario::preset(n).is_ok(), "profiled preset {n} must build");
+        }
     }
 
     /// The planner family is cheap enough to smoke-test end to end: it

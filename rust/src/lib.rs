@@ -64,21 +64,27 @@
 //!
 //! ## Fleet serving
 //!
-//! The single-chip story above scales out in [`serve`]: N mixed-QoS
-//! camera streams (416/720p/1080p at 15/30 FPS) are multiplexed over a
-//! pool of simulated chips that share one DRAM-bus budget, with EDF
-//! dispatch, admission control and load shedding. Deterministic from a
-//! seed — virtual time only. Setting `threads: 0` shards the engine
-//! across one worker per core ([`serve::parallel`]) with byte-identical
-//! output.
+//! The single-chip story above scales out in [`serve`]: a fleet run is
+//! described by a [`serve::Scenario`] — a deterministic timeline of
+//! stream arrival/departure events over a (possibly heterogeneous) pool
+//! of chip design points, where every stream carries its own model (any
+//! zoo network), resolution, FPS and QoS. Admission is decided *online*
+//! at each arrival event; EDF dispatch is capability-aware; per-stream
+//! statistics window over each stream's actual lifetime. Deterministic
+//! from the config — virtual time only. Setting `threads: 0` shards the
+//! engine across one worker per core ([`serve::parallel`]) with
+//! byte-identical output, churn included.
 //!
 //! ```no_run
-//! use rcnet_dla::serve::{run_fleet, FleetConfig};
+//! use rcnet_dla::serve::{run_fleet, FleetConfig, Scenario};
 //!
-//! let cfg =
-//!     FleetConfig { streams: 64, bus_mbps: 585.0, threads: 0, ..FleetConfig::default() };
+//! // Bundled presets: steady-hd, rush-hour, mixed-zoo, hetero-pool.
+//! let cfg = FleetConfig {
+//!     threads: 0,
+//!     ..FleetConfig::new(Scenario::preset("rush-hour").unwrap())
+//! };
 //! let report = run_fleet(&cfg).unwrap();
-//! println!("{report}"); // per-stream p50/p99, miss/shed rates, bus utilization
+//! println!("{report}"); // per-stream model, window, p50/p99, miss/shed
 //! ```
 //!
 //! ## Execution traces
@@ -95,9 +101,10 @@
 //!
 //! [`bench`] packages all of the above into deterministic, regression-
 //! gated performance workloads: `rcnet-dla bench --quick` emits
-//! `BENCH_fleet.json` / `BENCH_planner.json` / `BENCH_trace.json`, and
-//! `bench --against` exits nonzero when a gated value regresses past
-//! tolerance (the CI perf-smoke job). See `docs/BENCHMARKS.md`.
+//! `BENCH_fleet.json` / `BENCH_planner.json` / `BENCH_trace.json` /
+//! `BENCH_serve_scenario.json`, and `bench --against` exits nonzero
+//! when a gated value regresses past tolerance (the CI perf-smoke job).
+//! See `docs/BENCHMARKS.md`.
 
 pub mod bench;
 pub mod config;

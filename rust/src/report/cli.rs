@@ -10,13 +10,16 @@
 //! * `trace`      — phase-level execution trace ([`crate::trace`]) of a
 //!   frame in Chrome trace-event JSON (load in `chrome://tracing` /
 //!   Perfetto); deterministic, so CI diffs two runs byte-for-byte
-//! * `fleet`      — multi-stream fleet serving over a chip pool with a
-//!   shared DRAM-bus budget (deterministic from a seed; `--threads`
-//!   selects the serial or sharded-parallel engine)
+//! * `fleet`      — scenario-driven fleet serving over a chip pool with
+//!   a shared DRAM-bus budget (deterministic from its config;
+//!   `--scenario` picks a bundled preset — churn, multi-model,
+//!   heterogeneous pool — `--threads` selects the serial or
+//!   sharded-parallel engine, `--json` emits the deterministic report
+//!   document CI byte-diffs)
 //! * `bench`      — standardized performance workloads
 //!   ([`crate::bench`]): emits `BENCH_fleet.json` / `BENCH_planner.json`
-//!   / `BENCH_trace.json` and optionally gates against a baseline
-//!   (nonzero exit on regression)
+//!   / `BENCH_trace.json` / `BENCH_serve_scenario.json` and optionally
+//!   gates against a baseline (nonzero exit on regression)
 //! * `serve`      — run the detection pipeline on synthetic frames
 //!   (requires `make artifacts` and the `pjrt` feature)
 
@@ -27,7 +30,7 @@ use crate::config::ChipConfig;
 use crate::dla::{simulate_fused, simulate_layer_by_layer, trace_fused, trace_layer_by_layer};
 use crate::energy::dram_energy_mj;
 use crate::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
-use crate::serve::{run_fleet, AdmissionPolicy, FleetConfig};
+use crate::serve::{run_fleet, AdmissionPolicy, FleetConfig, Scenario};
 use crate::traffic::TrafficModel;
 use crate::util::json::Json;
 use crate::Result;
@@ -74,9 +77,11 @@ USAGE:
   rcnet-dla simulate  [--res 416|hd|fullhd|ivs] [--spec PATH]
   rcnet-dla trace     [--res 416|hd|fullhd|ivs] [--spec PATH]
                       [--schedule fused|layer-by-layer] [--out PATH]
-  rcnet-dla fleet     [--streams N] [--chips N] [--bus-mbps MB] [--seconds S]
+  rcnet-dla fleet     [--scenario steady-hd|rush-hour|mixed-zoo|hetero-pool]
+                      [--streams N] [--chips N] [--bus-mbps MB] [--seconds S]
                       [--seed K] [--oversub F | --admit-all]
                       [--planner greedy|optimal-dp] [--threads N]
+                      [--json] [--out PATH]
   rcnet-dla bench     [--quick] [--out-dir DIR] [--against PATH]
                       [--tolerance F]
   rcnet-dla serve     [--manifest artifacts/manifest.json] [--frames N]
@@ -85,8 +90,15 @@ USAGE:
 `trace` emits Chrome trace-event JSON (chrome://tracing, Perfetto) to
 --out or stdout; the output is a pure function of its inputs, so two
 runs are byte-identical (CI checks exactly that).
+`fleet --scenario` runs a bundled preset (stream churn, per-stream
+models, heterogeneous chip pools — see docs/SCENARIOS.md); without it a
+seeded uniform workload of --streams on --chips paper chips runs.
 `fleet --threads`: 1 = serial reference engine (default), 0 = one worker
 per core, N = N workers; output is byte-identical across engines.
+`fleet --json` prints the deterministic report document (stats digest
+included) to stdout or --out (--out implies --json); CI byte-diffs two
+such runs. Preset scenarios fix their own pool, so --scenario rejects
+--streams/--chips.
 `bench --against` accepts a report file (BENCH_fleet.json) or a
 directory holding the committed baselines; exits nonzero on regression
 past --tolerance (default 0.15).
@@ -358,31 +370,74 @@ fn ablation(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn fleet(flags: &HashMap<String, String>) -> Result<()> {
-    let d = FleetConfig::default();
-    let admission = if flags.contains_key("admit-all") {
-        AdmissionPolicy::AdmitAll
+    // The run description: a bundled preset, or the legacy seeded
+    // workload of --streams sampled streams on --chips paper chips.
+    let seed: u64 = flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let scenario = match flags.get("scenario") {
+        Some(name) => {
+            // A preset fixes its own stream script and pool: silently
+            // ignoring --streams/--chips would misreport any capacity
+            // measurement built on them.
+            for conflicting in ["streams", "chips"] {
+                if flags.contains_key(conflicting) {
+                    crate::bail!(
+                        "--{conflicting} conflicts with --scenario {name} \
+                         (the preset fixes its own streams and pool)"
+                    );
+                }
+            }
+            // The preset error already lists the bundled names.
+            Scenario::preset(name)?
+        }
+        None => {
+            let streams = flags.get("streams").and_then(|s| s.parse().ok()).unwrap_or(16);
+            let chips = flags.get("chips").and_then(|s| s.parse().ok()).unwrap_or(8);
+            Scenario::sampled(streams, chips, seed)
+        }
+    };
+    let mut cfg = FleetConfig::new(scenario);
+    cfg.seed = seed;
+    if let Some(v) = flags.get("bus-mbps").and_then(|s| s.parse().ok()) {
+        cfg.bus_mbps = v;
+    }
+    if let Some(v) = flags.get("seconds").and_then(|s| s.parse().ok()) {
+        cfg.seconds = v;
+    }
+    if let Some(v) = flags.get("threads").and_then(|s| s.parse().ok()) {
+        cfg.threads = v;
+    }
+    if flags.contains_key("admit-all") {
+        cfg.admission = AdmissionPolicy::AdmitAll;
     } else if let Some(oversub) = flags.get("oversub").and_then(|s| s.parse().ok()) {
-        AdmissionPolicy::DemandLimit { oversub }
-    } else {
-        d.admission
-    };
-    let cfg = FleetConfig {
-        streams: flags.get("streams").and_then(|s| s.parse().ok()).unwrap_or(d.streams),
-        chips: flags.get("chips").and_then(|s| s.parse().ok()).unwrap_or(d.chips),
-        bus_mbps: flags.get("bus-mbps").and_then(|s| s.parse().ok()).unwrap_or(d.bus_mbps),
-        seconds: flags.get("seconds").and_then(|s| s.parse().ok()).unwrap_or(d.seconds),
-        seed: flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(d.seed),
-        admission,
-        planner: match flags.get("planner") {
-            Some(s) => crate::plan::Planner::parse(s)
-                .ok_or_else(|| crate::err!("unknown --planner {s} (greedy|optimal-dp)"))?,
-            None => d.planner,
-        },
-        threads: flags.get("threads").and_then(|s| s.parse().ok()).unwrap_or(d.threads),
-        ..d
-    };
+        cfg.admission = AdmissionPolicy::DemandLimit { oversub };
+    }
+    if let Some(s) = flags.get("planner") {
+        cfg.planner = crate::plan::Planner::parse(s)
+            .ok_or_else(|| crate::err!("unknown --planner {s} (greedy|optimal-dp)"))?;
+    }
     let report = run_fleet(&cfg)?;
-    println!("{report}");
+    // --out implies the JSON document (the table has no file form), so
+    // `fleet --out report.json` never silently drops the file.
+    if flags.contains_key("json") || flags.contains_key("out") {
+        // Deterministic report document: a pure function of the config,
+        // so two runs are byte-identical (CI diffs exactly this).
+        let mut doc = report.to_json().to_string();
+        doc.push('\n');
+        match flags.get("out") {
+            Some(path) => {
+                if let Some(dir) = Path::new(path).parent() {
+                    if !dir.as_os_str().is_empty() {
+                        std::fs::create_dir_all(dir)?;
+                    }
+                }
+                std::fs::write(path, doc)?;
+                eprintln!("fleet: wrote {path}");
+            }
+            None => print!("{doc}"),
+        }
+    } else {
+        println!("{report}");
+    }
     Ok(())
 }
 
@@ -408,7 +463,10 @@ fn load_baseline(against: &str, kind: &str) -> Result<Option<crate::bench::Bench
 }
 
 fn bench(flags: &HashMap<String, String>) -> Result<()> {
-    use crate::bench::{compare_reports, fleet_report, planner_report, trace_report, BenchProfile};
+    use crate::bench::{
+        compare_reports, fleet_report, planner_report, scenario_report, trace_report,
+        BenchProfile,
+    };
 
     let profile =
         if flags.contains_key("quick") { BenchProfile::Quick } else { BenchProfile::Full };
@@ -422,13 +480,15 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     let planner = planner_report(profile)?;
     eprintln!("bench: running the {} trace workloads...", profile.name());
     let trace = trace_report(profile)?;
+    eprintln!("bench: running the {} scenario workloads...", profile.name());
+    let scenario = scenario_report(profile)?;
 
     let mut t = crate::report::tables::TableBuilder::new(&format!(
         "bench ({} profile) — wall times; deterministic metrics in the JSON",
         profile.name()
     ))
     .header(&["workload", "wall (ms)"]);
-    for rep in [&fleet, &planner, &trace] {
+    for rep in [&fleet, &planner, &trace, &scenario] {
         for m in &rep.measurements {
             t.row(vec![m.id.clone(), format!("{:.3}", m.wall_ms)]);
         }
@@ -443,7 +503,7 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     let mut broken_baselines = Vec::new();
     let mut matched_baselines = 0usize;
     if let Some(against) = flags.get("against") {
-        for rep in [&fleet, &planner, &trace] {
+        for rep in [&fleet, &planner, &trace, &scenario] {
             match load_baseline(against, &rep.kind) {
                 Ok(Some(base)) => {
                     matched_baselines += 1;
@@ -468,11 +528,13 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     fleet.write(&out_dir.join("BENCH_fleet.json"))?;
     planner.write(&out_dir.join("BENCH_planner.json"))?;
     trace.write(&out_dir.join("BENCH_trace.json"))?;
+    scenario.write(&out_dir.join("BENCH_serve_scenario.json"))?;
     eprintln!(
-        "bench: wrote {}, {} and {}",
+        "bench: wrote {}, {}, {} and {}",
         out_dir.join("BENCH_fleet.json").display(),
         out_dir.join("BENCH_planner.json").display(),
-        out_dir.join("BENCH_trace.json").display()
+        out_dir.join("BENCH_trace.json").display(),
+        out_dir.join("BENCH_serve_scenario.json").display()
     );
 
     if !broken_baselines.is_empty() {

@@ -1,5 +1,5 @@
-//! The worker pool: N simulated DLA chips, each with a bounded mpsc
-//! dispatch queue.
+//! The worker pool: N simulated DLA chips — possibly *heterogeneous*
+//! design points — each with a bounded mpsc dispatch queue.
 //!
 //! The queue is a real `std::sync::mpsc::sync_channel` of depth
 //! `queue_depth` (default 2 — the ping-pong buffer analogy): `try_send`
@@ -9,11 +9,18 @@
 //! a deterministic bounded FIFO.
 //!
 //! A chip executes one frame at a time. The frame holds the chip for
-//! `max(compute, bus transfer)` — compute advances one tick per tick,
-//! while the transfer drains at whatever rate the [`super::BusArbiter`]
-//! grants, capped by the chip's own DDR3 link rate. A chip stalled on
-//! the shared bus counts as busy: that occupancy is precisely the
-//! bandwidth wall the paper is about.
+//! `max(compute, bus transfer)` — compute advances at the *chip's own*
+//! clock (a [`ChipSpec`](super::ChipSpec)'s design point sets its cycles
+//! per tick), while the transfer drains at whatever rate the
+//! [`super::BusArbiter`] grants, capped by the chip's *own* DRAM link
+//! rate. A chip stalled on the shared bus counts as busy: that occupancy
+//! is precisely the bandwidth wall the paper is about.
+//!
+//! **Capability-aware dispatch.** A heterogeneous pool may contain chips
+//! with a capability ceiling ([`ChipSpec::max_pixels`](super::ChipSpec));
+//! [`Fleet::pick_worker`] only offers a frame to chips that can serve its
+//! input size, preferring (in chip order) an idle capable chip, then any
+//! capable chip with queue room.
 //!
 //! **Burst awareness.** A frame does not offer its whole byte budget to
 //! the bus up front: bytes become *eligible* as execution enters the
@@ -26,9 +33,7 @@
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 
-use crate::config::ChipConfig;
-use crate::dla::DDR3_BYTES_PER_S;
-
+use super::scenario::ChipSpec;
 use super::stream::FrameTask;
 
 /// A frame being executed by a chip.
@@ -59,8 +64,13 @@ impl InFlight {
 /// One simulated DLA chip plus its bounded dispatch queue.
 #[derive(Debug)]
 pub struct ChipWorker {
-    /// The chip's design point.
-    pub chip: ChipConfig,
+    /// The chip's design point (config, link rate, capability bound).
+    pub spec: ChipSpec,
+    /// Core cycles this chip executes per tick (its own clock).
+    pub cycles_per_tick: f64,
+    /// This chip's DRAM link ceiling per tick (the shared-bus grant can
+    /// never exceed what the chip's own interface can absorb).
+    pub link_bytes_per_tick: f64,
     tx: SyncSender<FrameTask>,
     rx: Receiver<FrameTask>,
     depth: usize,
@@ -75,11 +85,14 @@ pub struct ChipWorker {
 }
 
 impl ChipWorker {
-    /// A worker for one `chip` with a bounded queue of `queue_depth`.
-    pub fn new(chip: ChipConfig, queue_depth: usize) -> Self {
+    /// A worker for one design point with a bounded queue of
+    /// `queue_depth`, at a `tick_ms` virtual tick.
+    pub fn new(spec: ChipSpec, queue_depth: usize, tick_ms: f64) -> Self {
         let (tx, rx) = sync_channel(queue_depth.max(1));
         ChipWorker {
-            chip,
+            spec,
+            cycles_per_tick: spec.chip.clock_hz * tick_ms / 1e3,
+            link_bytes_per_tick: spec.link_bytes_per_s * tick_ms / 1e3,
             tx,
             rx,
             depth: queue_depth.max(1),
@@ -100,6 +113,11 @@ impl ChipWorker {
         self.queued < self.depth
     }
 
+    /// Whether this chip's capability bound covers a frame of `pixels`.
+    pub fn can_serve(&self, pixels: u64) -> bool {
+        self.spec.can_serve(pixels)
+    }
+
     /// Bounded dispatch. `Err` hands the task back to the caller — the
     /// backpressure signal.
     pub fn try_dispatch(&mut self, task: FrameTask) -> Result<(), FrameTask> {
@@ -112,14 +130,17 @@ impl ChipWorker {
         }
     }
 
-    /// Pull the next queued frame if the chip is free.
-    pub fn refill(&mut self, cycles_per_tick: f64) {
+    /// Pull the next queued frame if the chip is free. The frame's tick
+    /// count comes from this chip's own clock, so the same frame takes
+    /// longer on a slower design point.
+    pub fn refill(&mut self) {
         if self.active.is_some() {
             return;
         }
         if let Ok(task) = self.rx.try_recv() {
             self.queued -= 1;
-            let ticks = ((task.cost.compute_cycles as f64 / cycles_per_tick).ceil() as u64).max(1);
+            let ticks =
+                ((task.cost.compute_cycles as f64 / self.cycles_per_tick).ceil() as u64).max(1);
             self.active = Some(InFlight {
                 task,
                 total_compute_ticks: ticks,
@@ -131,14 +152,14 @@ impl ChipWorker {
 
     /// DRAM bytes this chip wants this tick: the *eligible* bytes of the
     /// active frame (per its burst profile) not yet transferred, capped
-    /// by the chip's own DDR3 link rate.
-    pub fn bus_demand(&self, link_bytes_per_tick: f64) -> f64 {
+    /// by the chip's own link rate.
+    pub fn bus_demand(&self) -> f64 {
         self.active.as_ref().map_or(0.0, |j| {
             let transferred = j.task.cost.dram_bytes as f64 - j.remaining_bytes;
             (j.eligible_bytes() - transferred)
                 .min(j.remaining_bytes)
                 .max(0.0)
-                .min(link_bytes_per_tick)
+                .min(self.link_bytes_per_tick)
         })
     }
 
@@ -159,47 +180,49 @@ impl ChipWorker {
     }
 }
 
-/// The chip pool plus the per-tick unit conversions.
+/// The chip pool.
 #[derive(Debug)]
 pub struct Fleet {
-    /// The workers, indexed by chip id.
+    /// The workers, indexed by chip id (scenario pool order).
     pub workers: Vec<ChipWorker>,
-    /// Core cycles one chip executes per tick.
-    pub cycles_per_tick: f64,
-    /// Per-chip DDR3 link ceiling per tick (the shared-bus grant can
-    /// never exceed what one chip's own interface can absorb).
-    pub link_bytes_per_tick: f64,
 }
 
 impl Fleet {
-    /// A pool of `chips` identical workers at a `tick_ms` virtual tick.
-    pub fn new(chip: ChipConfig, chips: usize, queue_depth: usize, tick_ms: f64) -> Self {
+    /// A pool over `chips` design points at a `tick_ms` virtual tick.
+    pub fn new(chips: &[ChipSpec], queue_depth: usize, tick_ms: f64) -> Self {
         Fleet {
-            workers: (0..chips).map(|_| ChipWorker::new(chip, queue_depth)).collect(),
-            cycles_per_tick: chip.clock_hz * tick_ms / 1e3,
-            link_bytes_per_tick: DDR3_BYTES_PER_S * tick_ms / 1e3,
+            workers: chips.iter().map(|&c| ChipWorker::new(c, queue_depth, tick_ms)).collect(),
         }
     }
 
-    /// First worker able to accept a frame: idle chips first (the frame
-    /// starts this tick), then any with queue room. `None` means every
-    /// queue is full — backpressure to the central queue.
-    pub fn pick_worker(&self) -> Option<usize> {
+    /// First worker able to accept a frame of `pixels` input pixels:
+    /// capable idle chips first (the frame starts this tick), then any
+    /// capable chip with queue room. `None` means every capable queue is
+    /// full — backpressure to the central queue.
+    pub fn pick_worker(&self, pixels: u64) -> Option<usize> {
         self.workers
             .iter()
-            .position(ChipWorker::is_idle)
-            .or_else(|| self.workers.iter().position(ChipWorker::has_room))
+            .position(|w| w.can_serve(pixels) && w.is_idle())
+            .or_else(|| self.workers.iter().position(|w| w.can_serve(pixels) && w.has_room()))
+    }
+
+    /// Whether *any* chip in the pool may ever serve a frame of
+    /// `pixels`. Static over a run — a frame this returns `false` for
+    /// can never dispatch and must be shed, not waited on.
+    pub fn any_can_serve(&self, pixels: u64) -> bool {
+        self.workers.iter().any(|w| w.can_serve(pixels))
     }
 
     /// Aggregate compute capacity in cycles per second.
     pub fn compute_cycles_per_s(&self) -> f64 {
-        self.workers.iter().map(|w| w.chip.clock_hz).sum()
+        self.workers.iter().map(|w| w.spec.chip.clock_hz).sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::scenario::ChipSpec;
     use crate::serve::stream::{FrameCost, QosClass};
 
     fn task(seq: u64) -> FrameTask {
@@ -208,15 +231,16 @@ mod tests {
             seq,
             release_ms: 0.0,
             deadline_ms: 100.0,
+            pixels: 1280 * 720,
             cost: FrameCost::flat(600_000, 4000),
             qos: QosClass::Silver,
         }
     }
 
     fn fleet1() -> Fleet {
-        // 1 chip, depth-2 queue, 1 ms tick at the paper chip's 300 MHz
+        // 1 paper chip, depth-2 queue, 1 ms tick at 300 MHz
         // => 300k cycles/tick, so the test frame needs 2 compute ticks.
-        Fleet::new(ChipConfig::paper_chip(), 1, 2, 1.0)
+        Fleet::new(&[ChipSpec::paper()], 2, 1.0)
     }
 
     #[test]
@@ -233,10 +257,9 @@ mod tests {
     #[test]
     fn frame_completes_when_compute_and_bytes_done() {
         let mut f = fleet1();
-        let cpt = f.cycles_per_tick;
         let w = &mut f.workers[0];
         w.try_dispatch(task(0)).unwrap();
-        w.refill(cpt);
+        w.refill();
         assert!(w.active.is_some());
         // Tick 1: compute 1/2 done, all bytes granted.
         assert!(w.advance(4000.0).is_none());
@@ -250,10 +273,9 @@ mod tests {
     #[test]
     fn bus_starved_frame_holds_the_chip() {
         let mut f = fleet1();
-        let cpt = f.cycles_per_tick;
         let w = &mut f.workers[0];
         w.try_dispatch(task(0)).unwrap();
-        w.refill(cpt);
+        w.refill();
         // Compute finishes in 2 ticks but the bus grants nothing.
         assert!(w.advance(0.0).is_none());
         assert!(w.advance(0.0).is_none());
@@ -265,18 +287,38 @@ mod tests {
 
     #[test]
     fn pick_prefers_idle_workers() {
-        let mut f = Fleet::new(ChipConfig::paper_chip(), 2, 2, 1.0);
-        let cpt = f.cycles_per_tick;
+        let mut f = Fleet::new(&[ChipSpec::paper(), ChipSpec::paper()], 2, 1.0);
         f.workers[0].try_dispatch(task(0)).unwrap();
-        f.workers[0].refill(cpt);
-        assert_eq!(f.pick_worker(), Some(1));
+        f.workers[0].refill();
+        assert_eq!(f.pick_worker(task(1).pixels), Some(1));
+    }
+
+    #[test]
+    fn capability_bound_excludes_small_chips() {
+        // Edge chip (capped at 720p) first in pool order: a 1080p frame
+        // must skip it even though it is idle.
+        let f = Fleet::new(&[ChipSpec::edge(), ChipSpec::paper()], 2, 1.0);
+        assert_eq!(f.pick_worker(1920 * 1080), Some(1));
+        assert_eq!(f.pick_worker(1280 * 720), Some(0));
+        // A pool of only capped chips cannot take the frame at all.
+        let capped = Fleet::new(&[ChipSpec::edge()], 2, 1.0);
+        assert_eq!(capped.pick_worker(1920 * 1080), None);
+    }
+
+    #[test]
+    fn slower_clock_takes_more_ticks() {
+        // Same frame, half the clock: twice the compute ticks.
+        let mut f = Fleet::new(&[ChipSpec::edge()], 2, 1.0);
+        let w = &mut f.workers[0];
+        w.try_dispatch(task(0)).unwrap();
+        w.refill();
+        assert_eq!(w.active.as_ref().unwrap().total_compute_ticks, 4);
     }
 
     #[test]
     fn burst_profile_defers_demand_until_its_slice() {
         use crate::trace::{BurstProfile, BURST_BUCKETS};
         let mut f = fleet1();
-        let cpt = f.cycles_per_tick;
         let mut t = task(0);
         // Every byte lands in the frame's final time slice.
         let mut h = [0u64; BURST_BUCKETS];
@@ -284,26 +326,24 @@ mod tests {
         t.cost.profile = BurstProfile::from_histogram(&h);
         let w = &mut f.workers[0];
         w.try_dispatch(t).unwrap();
-        w.refill(cpt);
-        let link = 1e9;
+        w.refill();
         // Tick 1 of 2: the final slice has not been entered — no demand.
-        assert_eq!(w.bus_demand(link), 0.0);
+        assert_eq!(w.bus_demand(), 0.0);
         assert!(w.advance(0.0).is_none());
         // Tick 2 (the last compute tick) releases everything.
-        assert!((w.bus_demand(link) - 4000.0).abs() < 1e-9);
+        assert!((w.bus_demand() - 4000.0).abs() < 1e-9);
         assert!(w.advance(4000.0).is_some());
     }
 
     #[test]
     fn demand_capped_by_link() {
         let mut f = fleet1();
-        let cpt = f.cycles_per_tick;
         let w = &mut f.workers[0];
         let mut t = task(0);
         t.cost.dram_bytes = 100_000_000;
         w.try_dispatch(t).unwrap();
-        w.refill(cpt);
-        let link = f.link_bytes_per_tick;
-        assert!((f.workers[0].bus_demand(link) - link).abs() < 1e-6);
+        w.refill();
+        let link = f.workers[0].link_bytes_per_tick;
+        assert!((f.workers[0].bus_demand() - link).abs() < 1e-6);
     }
 }

@@ -6,43 +6,58 @@
 //! 585 MB/s traffic budget. This module asks the production question
 //! that follows: how many *streams* can a rack of such chips serve when
 //! they all contend for one memory bus, and what happens to tail latency,
-//! deadline misses and drops when they can't all fit? Everything runs in
-//! virtual time (fixed 1 ms ticks), so a run is a pure function of its
-//! seed — reproducible load tests, no wall clock.
+//! deadline misses and drops when they can't all fit? A run is described
+//! by a [`Scenario`] — a deterministic timeline of stream
+//! arrival/departure events over a (possibly heterogeneous) chip pool,
+//! where every stream carries its own model, resolution, FPS and QoS.
+//! Everything runs in virtual time (fixed 1 ms ticks), so a run is a
+//! pure function of its config — reproducible load tests, no wall clock.
 //!
 //! One concern per module:
 //!
-//! * [`stream`] — QoS classes, stream operating points (416/720p/1080p at
-//!   15/30 FPS), per-frame cost derived from the stream-resolution
-//!   execution trace ([`crate::trace`]), and the seeded frame source.
-//!   Costs are priced from the fusion plan the configured
-//!   [`crate::plan::Planner`] forms *at each stream's own resolution*
-//!   (memoized, together with the trace-derived cost and burst profile,
-//!   in a [`crate::plan::PlanCache`]), not from a fixed build-time
-//!   grouping.
+//! * [`scenario`] — the run description: [`ModelId`] (any zoo network,
+//!   not just the deployed RC-YOLOv2), [`ChipSpec`] design points
+//!   (paper / edge / datacenter: per-chip clock, DRAM link rate and
+//!   capability bound), scripted stream windows, and the bundled
+//!   presets (`steady-hd`, `rush-hour`, `mixed-zoo`, `hetero-pool`).
+//! * [`stream`] — QoS classes, stream operating points, per-frame cost
+//!   derived from the stream's own model at its own resolution
+//!   ([`crate::trace`]), and the seeded frame source gated on the
+//!   stream's scripted liveness window. Costs are priced from the fusion
+//!   plan the configured [`crate::plan::Planner`] forms per (model,
+//!   resolution) — memoized, together with the trace-derived cost and
+//!   burst profile, in a [`crate::plan::PlanCache`] keyed by the
+//!   network's structural hash, so multi-model pricing is a cache-key
+//!   dimension, not a special case.
 //! * [`arbiter`] — the shared bus: a per-tick byte budget water-filled
 //!   across in-flight transfers. Chips offer the *burst-shaped* demand
-//!   of their frames' [`crate::trace::BurstProfile`]s, so the arbiter
-//!   resolves overlapping bursts and reports saturation and peak demand
-//!   alongside utilization.
-//! * [`scheduler`] — EDF dispatch, admission control, load shedding, and
+//!   of their frames' [`crate::trace::BurstProfile`]s, capped by each
+//!   chip's own link rate, so the arbiter resolves overlapping bursts
+//!   and reports saturation and peak demand alongside utilization.
+//! * [`scheduler`] — EDF dispatch, *online* admission control at each
+//!   arrival event (departures hand capacity back), load shedding, and
 //!   the reference tick engine ([`FleetSim`], [`run_fleet`]).
 //! * [`parallel`] — the sharded multi-threaded engine: per-worker stream
 //!   and chip shards with a deterministic merge at each arbiter epoch,
-//!   byte-identical to the serial engine ([`FleetConfig::threads`]).
+//!   byte-identical to the serial engine ([`FleetConfig::threads`]) —
+//!   churn included.
 //! * [`fleet`] — the chip pool; bounded mpsc dispatch queues whose
-//!   `try_send` failures are the backpressure signal.
-//! * [`stats`] — per-stream latency histograms (shared `Metrics` with the
-//!   single-chip coordinator), miss/shed rates, the printable report and
-//!   its determinism digest.
+//!   `try_send` failures are the backpressure signal; capability-aware
+//!   worker choice for heterogeneous pools.
+//! * [`stats`] — per-stream latency histograms windowed over each
+//!   stream's actual lifetime, miss/shed rates, per-stream cost
+//!   provenance (which model/plan priced it), the printable report, its
+//!   deterministic JSON form and its determinism digest.
 //!
 //! ```no_run
-//! use rcnet_dla::serve::{run_fleet, FleetConfig};
+//! use rcnet_dla::serve::{run_fleet, FleetConfig, Scenario};
 //!
-//! // threads: 0 = one worker per core; the report is byte-identical to
-//! // the serial (threads: 1) engine either way.
-//! let cfg =
-//!     FleetConfig { streams: 64, bus_mbps: 585.0, threads: 0, ..FleetConfig::default() };
+//! // A bundled preset; threads: 0 = one worker per core. The report is
+//! // byte-identical to the serial (threads: 1) engine either way.
+//! let cfg = FleetConfig {
+//!     threads: 0,
+//!     ..FleetConfig::new(Scenario::preset("mixed-zoo").unwrap())
+//! };
 //! let report = run_fleet(&cfg).unwrap();
 //! println!("{report}");
 //! ```
@@ -50,6 +65,7 @@
 pub mod arbiter;
 pub mod fleet;
 pub mod parallel;
+pub mod scenario;
 pub mod scheduler;
 pub mod stats;
 pub mod stream;
@@ -57,6 +73,7 @@ pub mod stream;
 pub use arbiter::BusArbiter;
 pub use fleet::{ChipWorker, Fleet, InFlight};
 pub use parallel::resolve_threads;
+pub use scenario::{ChipSpec, ModelId, Scenario, StreamScript, PRESET_NAMES};
 pub use scheduler::{run_fleet, run_fleet_with, AdmissionPolicy, FleetConfig, FleetSim};
-pub use stats::{FleetReport, StreamStats};
+pub use stats::{CostProvenance, FleetReport, StreamStats};
 pub use stream::{FrameCost, FrameTask, QosClass, Stream, StreamSpec};

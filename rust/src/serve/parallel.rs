@@ -5,18 +5,26 @@
 //! same simulation across worker threads — each worker owns a contiguous
 //! shard of streams (frame release) and chips (dispatch queues,
 //! execution) — while the main thread keeps the only state that is
-//! genuinely global: the EDF ready queue, the occupancy mirror it
-//! dispatches against, the bus arbiter, and the per-stream statistics.
+//! genuinely global: the scenario timeline and its online admission
+//! accounting, the EDF ready queue, the occupancy mirror it dispatches
+//! against, the bus arbiter, and the per-stream statistics.
 //!
 //! ## The identity guarantee
 //!
 //! The parallel engine's [`super::FleetReport`] is **byte-identical** to
-//! the serial engine's for the same [`super::FleetConfig`] and stream
-//! list (pinned by `tests/parallel_fleet.rs` across seeds and thread
-//! counts). That holds because every cross-chip interaction is merged
-//! deterministically at a tick barrier, in the same order the serial
-//! engine produces it:
+//! the serial engine's for the same [`super::FleetConfig`] — scenario
+//! churn, heterogeneous pools and all (pinned by
+//! `tests/parallel_fleet.rs` and `tests/scenario_fleet.rs` across seeds
+//! and thread counts). That holds because every cross-chip interaction
+//! is merged deterministically at a tick barrier, in the same order the
+//! serial engine produces it:
 //!
+//! * **Timeline events** — arrival/departure admission runs on the main
+//!   thread (its decisions depend only on the scenario and the priced
+//!   costs, never on execution state); the resulting liveness
+//!   transitions ship to the owning worker *in event order* inside the
+//!   release command, so a stream arriving and departing in one tick
+//!   lands inactive in both engines.
 //! * **Releases** — workers release their stream shards concurrently;
 //!   the main thread merges the per-shard lists in shard order. Shards
 //!   are contiguous in stream id, so the merged sequence equals the
@@ -27,10 +35,12 @@
 //!   the pinned tie-break), a binary heap here and a linear scan there
 //!   select identical frame sequences from identical multisets. Chip
 //!   choice runs against an occupancy mirror that replays the serial
-//!   `pick_worker` scan exactly.
-//! * **Bus** — per-chip demands are concatenated in global chip order
-//!   and water-filled by the unchanged [`super::BusArbiter`] on the main
-//!   thread: same input sequence, same f64 operations, same grants.
+//!   `pick_worker` scan exactly — including each chip's capability
+//!   bound, so a 1080p frame skips capped edge chips in both engines.
+//! * **Bus** — per-chip demands (each already capped by its chip's own
+//!   link rate) are concatenated in global chip order and water-filled
+//!   by the unchanged [`super::BusArbiter`] on the main thread: same
+//!   input sequence, same f64 operations, same grants.
 //! * **Completions** — workers advance their chips with the granted
 //!   bytes (the same per-tick subtraction sequence as serial — no
 //!   re-associated arithmetic anywhere); completions are applied to the
@@ -47,7 +57,6 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::sync::mpsc;
-use std::time::Duration;
 
 use super::fleet::ChipWorker;
 use super::scheduler::{edf_order, shed_order, FleetSim};
@@ -88,8 +97,9 @@ impl Ord for EdfTask {
 }
 
 /// Main-thread occupancy mirror of one remote [`ChipWorker`]: exactly
-/// the fields the serial `pick_worker` scan reads. The mirror is kept in
-/// lockstep by replaying the three deterministic transitions — dispatch
+/// the fields the serial `pick_worker` scan reads — queue occupancy plus
+/// the chip's capability bound. The mirror is kept in lockstep by
+/// replaying the three deterministic transitions — dispatch
 /// (`queued += 1`), the once-per-tick refill (`queued -= 1`, busy), and
 /// completion (idle) — so dispatch decisions never need to ask the
 /// worker threads anything.
@@ -97,6 +107,7 @@ struct ChipMirror {
     depth: usize,
     queued: usize,
     active: bool,
+    max_pixels: Option<u64>,
 }
 
 impl ChipMirror {
@@ -106,15 +117,22 @@ impl ChipMirror {
     fn has_room(&self) -> bool {
         self.queued < self.depth
     }
+    fn can_serve(&self, pixels: u64) -> bool {
+        match self.max_pixels {
+            Some(m) => pixels <= m,
+            None => true,
+        }
+    }
 }
 
-/// The serial `Fleet::pick_worker` scan, replayed over the mirror:
-/// first idle chip (frame starts this tick), else first with queue room.
-fn pick_mirror(mirror: &[ChipMirror]) -> Option<usize> {
+/// The serial `Fleet::pick_worker` scan, replayed over the mirror: first
+/// capable idle chip (frame starts this tick), else first capable chip
+/// with queue room.
+fn pick_mirror(mirror: &[ChipMirror], pixels: u64) -> Option<usize> {
     mirror
         .iter()
-        .position(ChipMirror::is_idle)
-        .or_else(|| mirror.iter().position(ChipMirror::has_room))
+        .position(|m| m.can_serve(pixels) && m.is_idle())
+        .or_else(|| mirror.iter().position(|m| m.can_serve(pixels) && m.has_room()))
 }
 
 /// One worker's owned state: contiguous stream and chip shards.
@@ -125,8 +143,9 @@ struct Shard {
 
 /// Per-tick commands, each answered by exactly one [`Rsp`].
 enum Cmd {
-    /// Release due frames from this worker's streams.
-    Release { now_ms: f64 },
+    /// Apply the tick's liveness transitions (local stream index, live)
+    /// in order, then release due frames from this worker's streams.
+    Release { now_ms: f64, toggles: Vec<(usize, bool)> },
     /// Apply EDF dispatch decisions (local chip index, frame), then
     /// refill and report per-chip bus demands.
     Dispatch { tasks: Vec<(usize, FrameTask)> },
@@ -148,16 +167,13 @@ enum Rsp {
     Done { busy_ticks: u64 },
 }
 
-fn worker_loop(
-    mut shard: Shard,
-    cycles_per_tick: f64,
-    link_bytes_per_tick: f64,
-    rx: mpsc::Receiver<Cmd>,
-    tx: mpsc::Sender<Rsp>,
-) {
+fn worker_loop(mut shard: Shard, rx: mpsc::Receiver<Cmd>, tx: mpsc::Sender<Rsp>) {
     while let Ok(cmd) = rx.recv() {
         let rsp = match cmd {
-            Cmd::Release { now_ms } => {
+            Cmd::Release { now_ms, toggles } => {
+                for (li, live) in toggles {
+                    shard.streams[li].active = live;
+                }
                 let mut out = Vec::new();
                 for s in &mut shard.streams {
                     out.extend(s.release_due(now_ms));
@@ -174,9 +190,9 @@ fn worker_loop(
                     }
                 }
                 for c in &mut shard.chips {
-                    c.refill(cycles_per_tick);
+                    c.refill();
                 }
-                Rsp::Demands(shard.chips.iter().map(|c| c.bus_demand(link_bytes_per_tick)).collect())
+                Rsp::Demands(shard.chips.iter().map(ChipWorker::bus_demand).collect())
             }
             Cmd::Advance { grants } => {
                 let mut done = Vec::new();
@@ -212,21 +228,21 @@ impl FleetSim {
         debug_assert!(self.ready.is_empty(), "run_parallel on a started sim");
 
         let cfg = self.cfg;
-        let cycles_per_tick = self.fleet.cycles_per_tick;
-        let link_bytes_per_tick = self.fleet.link_bytes_per_tick;
+        let chip_caps: Vec<Option<u64>> =
+            self.fleet.workers.iter().map(|w| w.spec.max_pixels).collect();
         let chips = self.fleet.workers.len();
         let total_streams = self.streams.len();
-        let mut stats = std::mem::take(&mut self.stats);
-        let mut arbiter = self.arbiter.clone();
-        let rejected = self.rejected;
+        let mut stats = self.stats;
+        let mut arbiter = self.arbiter;
+        let mut admission = self.admission;
 
         // Contiguous shards: worker order == global stream/chip order.
         let chip_chunk = chips.div_ceil(shard_count).max(1);
         let stream_chunk = total_streams.div_ceil(shard_count).max(1);
         let mut shards: Vec<Shard> = Vec::with_capacity(shard_count);
         {
-            let mut chips_left = std::mem::take(&mut self.fleet.workers);
-            let mut streams_left = std::mem::take(&mut self.streams);
+            let mut chips_left = self.fleet.workers;
+            let mut streams_left = self.streams;
             for _ in 0..shard_count {
                 let take_c = chip_chunk.min(chips_left.len());
                 let take_s = stream_chunk.min(streams_left.len());
@@ -256,23 +272,30 @@ impl FleetSim {
             for shard in shards {
                 let (ctx, crx) = mpsc::channel();
                 let (rtx, rrx) = mpsc::channel();
-                scope.spawn(move || {
-                    worker_loop(shard, cycles_per_tick, link_bytes_per_tick, crx, rtx)
-                });
+                scope.spawn(move || worker_loop(shard, crx, rtx));
                 cmd_tx.push(ctx);
                 rsp_rx.push(rrx);
             }
 
             let mut heap: BinaryHeap<EdfTask> = BinaryHeap::new();
-            let mut mirror: Vec<ChipMirror> =
-                (0..chips).map(|_| ChipMirror { depth, queued: 0, active: false }).collect();
+            let mut mirror: Vec<ChipMirror> = chip_caps
+                .iter()
+                .map(|&max_pixels| ChipMirror { depth, queued: 0, active: false, max_pixels })
+                .collect();
 
             for k in 0..ticks {
                 let now_ms = k as f64 * cfg.tick_ms;
 
-                // 1. Releases: concurrent, merged in stream-id order.
-                for tx in &cmd_tx {
-                    tx.send(Cmd::Release { now_ms }).expect("fleet worker hung up");
+                // 1+2. Timeline events on the main thread, then
+                // releases: each worker gets its shard's liveness
+                // transitions (in event order) with the release command;
+                // the released lists merge in stream-id order.
+                let mut toggles: Vec<Vec<(usize, bool)>> = vec![Vec::new(); shard_count];
+                for (g, live) in admission.step(now_ms, &mut stats) {
+                    toggles[g / stream_chunk].push((g % stream_chunk, live));
+                }
+                for (tx, t) in cmd_tx.iter().zip(toggles) {
+                    tx.send(Cmd::Release { now_ms, toggles: t }).expect("fleet worker hung up");
                 }
                 for rx in &rsp_rx {
                     match rx.recv().expect("fleet worker hung up") {
@@ -286,7 +309,7 @@ impl FleetSim {
                     }
                 }
 
-                // 2a. Expiry shedding: expired frames (deadline is the
+                // 3a. Expiry shedding: expired frames (deadline is the
                 // heap's primary key) sit at the front.
                 while let Some(front) = heap.peek() {
                     if front.0.deadline_ms > now_ms {
@@ -296,7 +319,7 @@ impl FleetSim {
                     stats[t.stream].shed += 1;
                 }
 
-                // 2b. Bounded central queue: drop the (len - max) worst
+                // 3b. Bounded central queue: drop the (len - max) worst
                 // frames in shed order — exactly the frames the serial
                 // engine's one-at-a-time victim scan removes.
                 if heap.len() > max_ready {
@@ -310,17 +333,27 @@ impl FleetSim {
                     heap = v.into_iter().map(EdfTask).collect();
                 }
 
-                // 3. EDF dispatch against the occupancy mirror.
+                // 4. Strict-EDF dispatch against the capability-aware
+                // occupancy mirror: peek the EDF-next frame, stop when
+                // its capable chips are all full (head-of-line), exactly
+                // like the serial scan — and shed frames no chip in the
+                // pool can ever serve, exactly like the serial scan.
                 let mut dispatches: Vec<Vec<(usize, FrameTask)>> = vec![Vec::new(); shard_count];
-                while !heap.is_empty() {
-                    let Some(g) = pick_mirror(&mirror) else { break };
-                    let t = heap.pop().expect("non-empty heap").0;
+                while let Some(front) = heap.peek() {
+                    let pixels = front.0.pixels;
+                    if !mirror.iter().any(|m| m.can_serve(pixels)) {
+                        let t = heap.pop().expect("peeked entry").0;
+                        stats[t.stream].shed += 1;
+                        continue;
+                    }
+                    let Some(g) = pick_mirror(&mirror, pixels) else { break };
+                    let t = heap.pop().expect("peeked entry").0;
                     mirror[g].queued += 1;
                     let (wi, li) = chip_owner[g];
                     dispatches[wi].push((li, t));
                 }
 
-                // 4. Apply dispatches, refill, collect demands; mirror
+                // 5. Apply dispatches, refill, collect demands; mirror
                 // the refill transition each chip performs.
                 for (tx, tasks) in cmd_tx.iter().zip(dispatches) {
                     tx.send(Cmd::Dispatch { tasks }).expect("fleet worker hung up");
@@ -340,7 +373,7 @@ impl FleetSim {
                 }
                 let grants = arbiter.arbitrate(&demands);
 
-                // 5. Advance; merge completions in global chip order.
+                // 6. Advance; merge completions in global chip order.
                 let mut off = 0usize;
                 for (tx, &n) in cmd_tx.iter().zip(&shard_chips) {
                     tx.send(Cmd::Advance { grants: grants[off..off + n].to_vec() })
@@ -377,13 +410,15 @@ impl FleetSim {
             busy
         });
 
-        let wall = Duration::from_secs_f64(cfg.seconds);
-        for s in &mut stats {
-            s.metrics.set_wall(wall);
+        let end_ms = cfg.seconds * 1e3;
+        for (i, s) in stats.iter_mut().enumerate() {
+            s.refused = admission.outcome(i) == Some(false);
+            s.close(end_ms);
         }
         FleetReport {
+            scenario: cfg.scenario.name.clone(),
             per_stream: stats,
-            rejected,
+            rejected: admission.rejected,
             chips,
             bus_mbps: cfg.bus_mbps,
             bus_utilization: arbiter.utilization(),
@@ -406,6 +441,7 @@ mod tests {
             seq,
             release_ms: 0.0,
             deadline_ms,
+            pixels: 416 * 416,
             cost: crate::serve::stream::FrameCost::flat(1, 1),
             qos,
         }
@@ -426,16 +462,28 @@ mod tests {
     #[test]
     fn mirror_replays_pick_worker() {
         let mut m = vec![
-            ChipMirror { depth: 2, queued: 1, active: true },
-            ChipMirror { depth: 2, queued: 0, active: false },
+            ChipMirror { depth: 2, queued: 1, active: true, max_pixels: None },
+            ChipMirror { depth: 2, queued: 0, active: false, max_pixels: None },
         ];
-        assert_eq!(pick_mirror(&m), Some(1), "idle chip preferred");
+        let px = 1280 * 720;
+        assert_eq!(pick_mirror(&m, px), Some(1), "idle chip preferred");
         m[1].queued = 1;
         m[1].active = true;
-        assert_eq!(pick_mirror(&m), Some(0), "then first chip with room");
+        assert_eq!(pick_mirror(&m, px), Some(0), "then first chip with room");
         m[0].queued = 2;
         m[1].queued = 2;
-        assert_eq!(pick_mirror(&m), None, "all queues full backpressures");
+        assert_eq!(pick_mirror(&m, px), None, "all queues full backpressures");
+    }
+
+    #[test]
+    fn mirror_respects_capability_bounds() {
+        let m = vec![
+            ChipMirror { depth: 2, queued: 0, active: false, max_pixels: Some(1280 * 720) },
+            ChipMirror { depth: 2, queued: 1, active: true, max_pixels: None },
+        ];
+        // The capped chip is idle, but a 1080p frame must skip it.
+        assert_eq!(pick_mirror(&m, 1920 * 1080), Some(1));
+        assert_eq!(pick_mirror(&m, 1280 * 720), Some(0));
     }
 
     #[test]

@@ -1,0 +1,610 @@
+//! Scenario: the run description of a fleet simulation, as a first-class
+//! object.
+//!
+//! A [`Scenario`] is a deterministic timeline of stream arrival/departure
+//! events over a *heterogeneous* chip pool. Each [`StreamScript`] carries
+//! its own model ([`ModelId`] — any zoo network, not just the deployed
+//! RC-YOLOv2), resolution, frame rate and QoS class, plus the window of
+//! virtual time it is present; each [`ChipSpec`] is an accelerator design
+//! point (clock, DRAM link rate, capability ceiling) sharing the paper
+//! chip's buffer geometry. The fleet engines replay the same timeline
+//! tick by tick — admission is decided *online* at each arrival event,
+//! against the demand of the streams currently in the system — and the
+//! serial/parallel byte-identity invariant holds for every scenario,
+//! churn included (`tests/scenario_fleet.rs`).
+//!
+//! Why heterogeneity: real deployments mix operating points. GnetDet
+//! ships a 224 mW detection chip at a very different throughput/power
+//! point than this paper's 300 MHz design, and Suleiman et al.'s 58.6 mW
+//! detector is explicitly programmable across multi-scale multi-object
+//! configurations (see `PAPERS.md`); a fleet model that can only express
+//! "N copies of the paper chip, all streams at t=0" cannot ask any of
+//! the interesting capacity questions. The bundled presets
+//! ([`Scenario::preset`]) cover the four axes: steady state
+//! (`steady-hd`), churn bursts (`rush-hour`), per-stream models
+//! (`mixed-zoo`) and mixed design points (`hetero-pool`).
+//!
+//! Pricing discipline: frame costs are derived from execution traces on
+//! the pool's *reference buffer geometry* ([`Scenario::reference_chip`]),
+//! so every chip in one pool must share buffer sizes ([`Scenario::validate`]
+//! enforces it); design points may differ in clock and link rate, which
+//! change how fast a chip executes and drains — not what a frame costs.
+
+use crate::config::ChipConfig;
+use crate::dla::DDR3_BYTES_PER_S;
+use crate::fusion::FusionConfig;
+use crate::model::zoo::plan_fixtures;
+use crate::model::Network;
+use crate::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
+use crate::util::Rng;
+use crate::Result;
+
+use super::stream::{QosClass, StreamSpec};
+
+/// Which network a stream runs. The fleet prices each stream from the
+/// fusion plan of *its own* model at *its own* resolution (through the
+/// [`crate::plan::PlanCache`], keyed by the network's structural hash),
+/// so a scenario can mix models freely without cross-pricing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelId {
+    /// The deployed RC-YOLOv2 (the paper's shipped pipeline, already
+    /// pruned under the weight buffer; planned with zero grouping slack).
+    Deployed,
+    /// A model-zoo fixture by its stable [`crate::model::zoo::PlanFixture`]
+    /// name (`yolov2-converted`, `vgg16-converted`, ...).
+    Zoo(&'static str),
+}
+
+impl ModelId {
+    /// Stable name: `rc` for the deployed network, the fixture name
+    /// otherwise. Round-trips through [`ModelId::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelId::Deployed => "rc",
+            ModelId::Zoo(n) => n,
+        }
+    }
+
+    /// Parse a model name (`rc`, or any zoo fixture name). Returns the
+    /// canonical id, so two parses of one name compare equal.
+    pub fn parse(s: &str) -> Option<ModelId> {
+        if s == "rc" {
+            return Some(ModelId::Deployed);
+        }
+        plan_fixtures().into_iter().find(|f| f.name == s).map(|f| ModelId::Zoo(f.name))
+    }
+
+    /// Build the network and the fusion config it is planned under. The
+    /// deployed network replans with zero slack (every group truly fits
+    /// the weight buffer — it was pruned to); zoo fixtures use the
+    /// paper-default config.
+    pub fn build(self) -> Result<(Network, FusionConfig)> {
+        match self {
+            ModelId::Deployed => {
+                let spec = build_deployment_spec(PipelineProfile::Hd, 3, 5, None, 7);
+                let (net, _build_groups) = spec_to_network(&spec)?;
+                Ok((net, FusionConfig { slack: 0.0, ..FusionConfig::paper_default() }))
+            }
+            ModelId::Zoo(name) => {
+                let fx = plan_fixtures()
+                    .into_iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| crate::err!("unknown zoo model {name:?}"))?;
+                Ok(((fx.build)(), FusionConfig::paper_default()))
+            }
+        }
+    }
+
+    /// The model name folded to digest words (for the fleet stats digest
+    /// and bench fingerprints).
+    pub fn digest_word(self) -> u64 {
+        crate::util::fnv1a(self.name().bytes().map(u64::from))
+    }
+}
+
+/// One accelerator design point in a fleet pool: a chip configuration
+/// plus the fleet-level knobs that differ across deployments — the
+/// chip's own DRAM link ceiling and an optional capability bound on the
+/// stream sizes it may serve. Buffer geometry must match the pool's
+/// reference chip (costs are priced once per (model, resolution) on that
+/// geometry); clock and link rate may differ freely.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChipSpec {
+    /// The chip's design point (clock, PE array, buffer geometry).
+    pub chip: ChipConfig,
+    /// This chip's own DRAM interface ceiling in bytes per second — the
+    /// shared-bus grant to this chip can never exceed it.
+    pub link_bytes_per_s: f64,
+    /// Largest input `height x width` (in pixels) this chip may be
+    /// dispatched; `None` means unbounded. Admission rejects streams no
+    /// chip in the pool can serve, and dispatch only offers frames to
+    /// capable chips.
+    pub max_pixels: Option<u64>,
+}
+
+impl ChipSpec {
+    /// The fabricated paper chip: 300 MHz, full DDR3 link, no capability
+    /// bound.
+    pub fn paper() -> Self {
+        ChipSpec {
+            chip: ChipConfig::paper_chip(),
+            link_bytes_per_s: DDR3_BYTES_PER_S,
+            max_pixels: None,
+        }
+    }
+
+    /// A low-power edge point (in the spirit of GnetDet's 224 mW part and
+    /// Suleiman et al.'s 58.6 mW detector): half the paper clock, a
+    /// quarter of the DDR3 link, and capped at 720p streams. Same buffer
+    /// geometry as the paper chip.
+    pub fn edge() -> Self {
+        let mut chip = ChipConfig::paper_chip();
+        chip.clock_hz = 150e6;
+        ChipSpec {
+            chip,
+            link_bytes_per_s: DDR3_BYTES_PER_S / 4.0,
+            max_pixels: Some(1280 * 720),
+        }
+    }
+
+    /// A datacenter point: double the paper clock and link, unbounded.
+    /// Same buffer geometry as the paper chip.
+    pub fn datacenter() -> Self {
+        let mut chip = ChipConfig::paper_chip();
+        chip.clock_hz = 600e6;
+        ChipSpec { chip, link_bytes_per_s: 2.0 * DDR3_BYTES_PER_S, max_pixels: None }
+    }
+
+    /// Whether this chip may execute a frame of `pixels` input pixels.
+    pub fn can_serve(&self, pixels: u64) -> bool {
+        match self.max_pixels {
+            Some(m) => pixels <= m,
+            None => true,
+        }
+    }
+
+    /// Whether two design points share buffer geometry (PE array and
+    /// SRAM sizes — everything per-frame costs depend on).
+    pub fn same_geometry(&self, other: &ChipSpec) -> bool {
+        let g = |c: &ChipConfig| {
+            (
+                c.pe_blocks,
+                c.pe_inputs,
+                c.pe_weights,
+                c.weight_buffer_bytes,
+                c.unified_half_bytes,
+                c.banks,
+                c.precision,
+            )
+        };
+        g(&self.chip) == g(&other.chip)
+    }
+}
+
+/// One scripted stream: its operating point, its model, and the window
+/// of virtual time it is present in the system.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamScript {
+    /// Resolution, frame rate and QoS class.
+    pub spec: StreamSpec,
+    /// The network this stream runs.
+    pub model: ModelId,
+    /// Virtual time (ms) the stream arrives and requests admission.
+    pub arrival_ms: f64,
+    /// Virtual time (ms) the stream departs (stops releasing frames;
+    /// in-flight frames still drain). `None` = stays to the end.
+    pub departure_ms: Option<f64>,
+}
+
+impl StreamScript {
+    /// A stream present from `t = 0` to the end of the run — the shape
+    /// every pre-scenario fleet run implicitly used.
+    pub fn steady(spec: StreamSpec, model: ModelId) -> Self {
+        StreamScript { spec, model, arrival_ms: 0.0, departure_ms: None }
+    }
+}
+
+/// Names of the bundled scenario presets, in [`Scenario::preset`] order.
+pub const PRESET_NAMES: [&str; 4] = ["steady-hd", "rush-hour", "mixed-zoo", "hetero-pool"];
+
+/// A deterministic fleet-run description: a heterogeneous chip pool plus
+/// a timeline of scripted streams. See the module docs for the design
+/// discussion and `docs/SCENARIOS.md` for the schema and preset table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Display name (preset name, `sampled`, or `custom`).
+    pub name: String,
+    /// The chip pool, in dispatch-preference order.
+    pub chips: Vec<ChipSpec>,
+    /// The scripted streams; a stream's index in this list is its stable
+    /// stream id everywhere (stats, digests, shard ownership).
+    pub streams: Vec<StreamScript>,
+}
+
+impl Scenario {
+    /// A steady scenario over an explicit stream list: every spec runs
+    /// the deployed RC-YOLOv2 from `t = 0` to the end on the given pool.
+    pub fn steady(chips: Vec<ChipSpec>, specs: &[StreamSpec]) -> Self {
+        Scenario {
+            name: "custom".into(),
+            chips,
+            streams: specs
+                .iter()
+                .map(|&spec| StreamScript::steady(spec, ModelId::Deployed))
+                .collect(),
+        }
+    }
+
+    /// The legacy seeded workload: `streams` sampled mixed-resolution
+    /// specs ([`StreamSpec::sample`]) on `chips` paper chips, all present
+    /// for the whole run. Same seed, same scenario.
+    pub fn sampled(streams: usize, chips: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        Scenario {
+            name: format!("sampled-{streams}x{chips}"),
+            chips: vec![ChipSpec::paper(); chips],
+            streams: (0..streams)
+                .map(|_| StreamScript::steady(StreamSpec::sample(&mut rng), ModelId::Deployed))
+                .collect(),
+        }
+    }
+
+    /// Build a bundled preset by name (see [`PRESET_NAMES`]):
+    ///
+    /// | preset | pool | streams | exercises |
+    /// |---|---|---|---|
+    /// | `steady-hd` | 8x paper | 24 HD30, all at t=0 | steady-state baseline |
+    /// | `rush-hour` | 8x paper | 10 steady + 16-stream churn burst | online admission |
+    /// | `mixed-zoo` | 12x paper | 16 streams across 4 networks | per-model pricing |
+    /// | `hetero-pool` | 3 paper + 3 edge + 2 datacenter | 16 incl. 1080p | capability dispatch |
+    pub fn preset(name: &str) -> Result<Scenario> {
+        match name {
+            "steady-hd" => Ok(Self::steady_hd()),
+            "rush-hour" => Ok(Self::rush_hour()),
+            "mixed-zoo" => Ok(Self::mixed_zoo()),
+            "hetero-pool" => Ok(Self::hetero_pool()),
+            other => crate::bail!(
+                "unknown scenario preset {other:?} (expected one of {})",
+                PRESET_NAMES.join(", ")
+            ),
+        }
+    }
+
+    /// Every bundled preset, in [`PRESET_NAMES`] order.
+    pub fn presets() -> Vec<Scenario> {
+        PRESET_NAMES
+            .iter()
+            .map(|n| Self::preset(n).expect("bundled preset must build"))
+            .collect()
+    }
+
+    /// QoS tier for stream index `i` under the standard 1:2:1
+    /// gold/silver/bronze cycle the presets use.
+    fn qos_cycle(i: usize) -> QosClass {
+        match i % 4 {
+            0 => QosClass::Gold,
+            1 | 2 => QosClass::Silver,
+            _ => QosClass::Bronze,
+        }
+    }
+
+    /// `steady-hd`: 24 deployed HD30 streams on 8 paper chips, all
+    /// admitted at t=0 — the pre-scenario fleet as a named baseline.
+    fn steady_hd() -> Scenario {
+        Scenario {
+            name: "steady-hd".into(),
+            chips: vec![ChipSpec::paper(); 8],
+            streams: (0..24)
+                .map(|i| {
+                    StreamScript::steady(
+                        StreamSpec {
+                            hw: (720, 1280),
+                            target_fps: 30.0,
+                            qos: Self::qos_cycle(i),
+                        },
+                        ModelId::Deployed,
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    /// `rush-hour`: a steady base load plus a burst of 16 short-lived
+    /// streams arriving between 0.5 s and 1.5 s and departing between
+    /// ~1.9 s and ~3.3 s — admission is decided online per arrival, and
+    /// departures hand capacity back.
+    fn rush_hour() -> Scenario {
+        let mut rng = Rng::new(0xB005_7ED);
+        let mut streams: Vec<StreamScript> = (0..10)
+            .map(|_| StreamScript::steady(StreamSpec::sample(&mut rng), ModelId::Deployed))
+            .collect();
+        for i in 0..16u32 {
+            let hw = if rng.f64() < 0.5 { (416, 416) } else { (720, 1280) };
+            let target_fps = if rng.f64() < 0.5 { 15.0 } else { 30.0 };
+            let arrival_ms = 500.0 + 62.5 * f64::from(i);
+            let stay_ms = 1400.0 + 120.0 * f64::from(i % 5);
+            streams.push(StreamScript {
+                spec: StreamSpec { hw, target_fps, qos: Self::qos_cycle(i as usize) },
+                model: ModelId::Deployed,
+                arrival_ms,
+                departure_ms: Some(arrival_ms + stay_ms),
+            });
+        }
+        Scenario { name: "rush-hour".into(), chips: vec![ChipSpec::paper(); 8], streams }
+    }
+
+    /// `mixed-zoo`: 16 streams across four networks — the deployed
+    /// RC-YOLOv2 at 720p plus three converted zoo models at 416x416 —
+    /// with staggered arrivals and two mid-run departures. Every stream
+    /// is priced from its own network's plan (the mixed-model acceptance
+    /// scenario).
+    fn mixed_zoo() -> Scenario {
+        let mut streams = Vec::new();
+        for i in 0..6 {
+            streams.push(StreamScript::steady(
+                StreamSpec { hw: (720, 1280), target_fps: 30.0, qos: Self::qos_cycle(i) },
+                ModelId::Deployed,
+            ));
+        }
+        for i in 0..4u32 {
+            streams.push(StreamScript {
+                spec: StreamSpec { hw: (416, 416), target_fps: 30.0, qos: QosClass::Silver },
+                model: ModelId::Zoo("yolov2-converted"),
+                arrival_ms: 250.0 * f64::from(i),
+                departure_ms: None,
+            });
+        }
+        for i in 0..3u32 {
+            streams.push(StreamScript {
+                spec: StreamSpec { hw: (416, 416), target_fps: 15.0, qos: QosClass::Bronze },
+                model: ModelId::Zoo("vgg16-converted"),
+                arrival_ms: 300.0,
+                departure_ms: if i == 0 { Some(2600.0) } else { None },
+            });
+        }
+        for i in 0..3u32 {
+            streams.push(StreamScript {
+                spec: StreamSpec { hw: (416, 416), target_fps: 15.0, qos: QosClass::Gold },
+                model: ModelId::Zoo("deeplabv3-converted"),
+                arrival_ms: 800.0,
+                departure_ms: if i == 2 { Some(3200.0) } else { None },
+            });
+        }
+        Scenario { name: "mixed-zoo".into(), chips: vec![ChipSpec::paper(); 12], streams }
+    }
+
+    /// `hetero-pool`: 3 paper + 3 edge + 2 datacenter chips serving a mix
+    /// that includes 1080p streams only the uncapped chips can take, with
+    /// two late arrivals and two mid-run departures.
+    fn hetero_pool() -> Scenario {
+        let chips = vec![
+            ChipSpec::paper(),
+            ChipSpec::paper(),
+            ChipSpec::paper(),
+            ChipSpec::edge(),
+            ChipSpec::edge(),
+            ChipSpec::edge(),
+            ChipSpec::datacenter(),
+            ChipSpec::datacenter(),
+        ];
+        let mut streams = Vec::new();
+        for _ in 0..2 {
+            streams.push(StreamScript::steady(
+                StreamSpec { hw: (1080, 1920), target_fps: 30.0, qos: QosClass::Gold },
+                ModelId::Deployed,
+            ));
+        }
+        for i in 0..6u32 {
+            streams.push(StreamScript {
+                spec: StreamSpec {
+                    hw: (720, 1280),
+                    target_fps: 30.0,
+                    qos: Self::qos_cycle(i as usize),
+                },
+                model: ModelId::Deployed,
+                arrival_ms: 150.0 * f64::from(i),
+                departure_ms: None,
+            });
+        }
+        for i in 0..6u32 {
+            streams.push(StreamScript {
+                spec: StreamSpec { hw: (416, 416), target_fps: 15.0, qos: QosClass::Bronze },
+                model: ModelId::Deployed,
+                arrival_ms: 0.0,
+                departure_ms: if i < 2 { Some(1700.0 + 400.0 * f64::from(i)) } else { None },
+            });
+        }
+        for i in 0..2u32 {
+            streams.push(StreamScript {
+                spec: StreamSpec { hw: (720, 1280), target_fps: 30.0, qos: QosClass::Silver },
+                model: ModelId::Deployed,
+                arrival_ms: 1000.0 + 200.0 * f64::from(i),
+                departure_ms: None,
+            });
+        }
+        Scenario { name: "hetero-pool".into(), chips, streams }
+    }
+
+    /// The buffer geometry frame costs are priced on: the first chip's
+    /// config. [`Scenario::validate`] guarantees every chip shares it.
+    pub fn reference_chip(&self) -> ChipConfig {
+        self.chips.first().map_or_else(ChipConfig::paper_chip, |c| c.chip)
+    }
+
+    /// The distinct (model, resolution) operating points in the script,
+    /// in first-appearance order — what fleet setup must price.
+    pub fn operating_points(&self) -> Vec<(ModelId, (u32, u32))> {
+        let mut out: Vec<(ModelId, (u32, u32))> = Vec::new();
+        for s in &self.streams {
+            let p = (s.model, s.spec.hw);
+            if !out.contains(&p) {
+                out.push(p);
+            }
+        }
+        out
+    }
+
+    /// Whether any chip in the pool may serve a stream of `pixels`.
+    pub fn any_chip_can_serve(&self, pixels: u64) -> bool {
+        self.chips.iter().any(|c| c.can_serve(pixels))
+    }
+
+    /// Structural validation: non-empty pool and script, finite positive
+    /// rates and clocks, uniform buffer geometry across the pool, and
+    /// well-ordered stream windows. Called by
+    /// [`super::FleetConfig::validate`] before every run.
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(!self.chips.is_empty(), "scenario {:?} has an empty chip pool", self.name);
+        crate::ensure!(!self.streams.is_empty(), "scenario {:?} has no streams", self.name);
+        let reference = self.chips[0];
+        for (i, c) in self.chips.iter().enumerate() {
+            crate::ensure!(
+                c.chip.clock_hz.is_finite() && c.chip.clock_hz > 0.0,
+                "chip {i}: clock {} Hz is not positive and finite",
+                c.chip.clock_hz
+            );
+            crate::ensure!(
+                c.link_bytes_per_s.is_finite() && c.link_bytes_per_s > 0.0,
+                "chip {i}: link rate {} B/s is not positive and finite",
+                c.link_bytes_per_s
+            );
+            crate::ensure!(
+                c.same_geometry(&reference),
+                "chip {i} differs from the pool's reference buffer geometry \
+                 (costs are priced per (model, resolution) on one geometry; \
+                 clock and link rate may vary, buffers may not)"
+            );
+        }
+        for (i, s) in self.streams.iter().enumerate() {
+            crate::ensure!(
+                s.spec.hw.0 > 0 && s.spec.hw.1 > 0,
+                "stream {i}: resolution {:?} has a zero dimension",
+                s.spec.hw
+            );
+            crate::ensure!(
+                s.spec.target_fps.is_finite() && s.spec.target_fps > 0.0,
+                "stream {i}: target fps {} is not positive and finite",
+                s.spec.target_fps
+            );
+            crate::ensure!(
+                s.arrival_ms.is_finite() && s.arrival_ms >= 0.0,
+                "stream {i}: arrival {} ms is not non-negative and finite",
+                s.arrival_ms
+            );
+            if let Some(d) = s.departure_ms {
+                crate::ensure!(
+                    d.is_finite() && d > s.arrival_ms,
+                    "stream {i}: departure {} ms does not follow arrival {} ms",
+                    d,
+                    s.arrival_ms
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_ids_round_trip() {
+        assert_eq!(ModelId::parse("rc"), Some(ModelId::Deployed));
+        for fx in plan_fixtures() {
+            let id = ModelId::parse(fx.name).expect("fixture name parses");
+            assert_eq!(id.name(), fx.name);
+        }
+        assert_eq!(ModelId::parse("not-a-model"), None);
+    }
+
+    #[test]
+    fn model_builds_deployed_and_zoo() {
+        let (rc, rc_cfg) = ModelId::Deployed.build().expect("deployed builds");
+        assert!(!rc.layers.is_empty());
+        assert_eq!(rc_cfg.slack, 0.0, "deployed network replans with zero slack");
+        let (zoo, _) =
+            ModelId::parse("yolov2-converted").unwrap().build().expect("zoo builds");
+        assert_ne!(rc.structural_hash(), zoo.structural_hash());
+    }
+
+    #[test]
+    fn chip_capability_and_geometry() {
+        let paper = ChipSpec::paper();
+        let edge = ChipSpec::edge();
+        assert!(paper.can_serve(1920 * 1080));
+        assert!(edge.can_serve(1280 * 720));
+        assert!(!edge.can_serve(1920 * 1080));
+        assert!(paper.same_geometry(&edge), "design points share buffer geometry");
+        let fat = ChipSpec {
+            chip: ChipConfig::paper_chip().with_weight_buffer(1 << 20),
+            ..ChipSpec::paper()
+        };
+        assert!(!paper.same_geometry(&fat));
+    }
+
+    #[test]
+    fn every_preset_validates() {
+        let presets = Scenario::presets();
+        assert_eq!(presets.len(), PRESET_NAMES.len());
+        for (s, name) in presets.iter().zip(PRESET_NAMES) {
+            assert_eq!(s.name, name);
+            s.validate().expect("bundled preset must validate");
+            assert!(!s.operating_points().is_empty());
+        }
+        assert!(Scenario::preset("no-such-preset").is_err());
+    }
+
+    #[test]
+    fn presets_are_deterministic() {
+        for name in PRESET_NAMES {
+            assert_eq!(Scenario::preset(name).unwrap(), Scenario::preset(name).unwrap());
+        }
+        assert_eq!(Scenario::sampled(8, 4, 9), Scenario::sampled(8, 4, 9));
+        assert_ne!(Scenario::sampled(8, 4, 9), Scenario::sampled(8, 4, 10));
+    }
+
+    #[test]
+    fn mixed_zoo_spans_multiple_networks() {
+        let s = Scenario::preset("mixed-zoo").unwrap();
+        let mut models: Vec<&str> = s.streams.iter().map(|x| x.model.name()).collect();
+        models.sort_unstable();
+        models.dedup();
+        assert!(models.len() >= 4, "mixed-zoo must script >= 4 models: {models:?}");
+    }
+
+    #[test]
+    fn rush_hour_actually_churns() {
+        let s = Scenario::preset("rush-hour").unwrap();
+        assert!(s.streams.iter().any(|x| x.arrival_ms > 0.0), "late arrivals");
+        assert!(s.streams.iter().any(|x| x.departure_ms.is_some()), "departures");
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_scenarios() {
+        let good = Scenario::preset("steady-hd").unwrap();
+        let mut empty_pool = good.clone();
+        empty_pool.chips.clear();
+        assert!(empty_pool.validate().is_err());
+
+        let mut no_streams = good.clone();
+        no_streams.streams.clear();
+        assert!(no_streams.validate().is_err());
+
+        let mut bad_fps = good.clone();
+        bad_fps.streams[0].spec.target_fps = 0.0;
+        assert!(bad_fps.validate().is_err());
+
+        let mut bad_window = good.clone();
+        bad_window.streams[0].departure_ms = Some(bad_window.streams[0].arrival_ms);
+        assert!(bad_window.validate().is_err());
+
+        let mut mixed_geometry = good.clone();
+        mixed_geometry.chips[1].chip.weight_buffer_bytes *= 2;
+        assert!(mixed_geometry.validate().is_err());
+
+        let mut bad_link = good;
+        bad_link.chips[0].link_bytes_per_s = 0.0;
+        assert!(bad_link.validate().is_err());
+    }
+}

@@ -1,5 +1,5 @@
-//! Dispatch policy, admission control and load shedding — the fleet
-//! simulation engine.
+//! Dispatch policy, online admission control and load shedding — the
+//! fleet simulation engine.
 //!
 //! **Why EDF.** Dispatch is earliest-deadline-first over the central
 //! ready queue. Every frame carries a hard deadline (two periods after
@@ -12,63 +12,85 @@
 //! control keeps steady-state demand bounded, and expired frames are
 //! shed *before* dispatch, so the queue only ever holds frames that can
 //! still make their deadline. QoS breaks EDF ties (gold first) and picks
-//! shed victims (bronze first).
+//! shed victims (bronze first). In a heterogeneous pool the EDF-next
+//! frame is offered only to chips whose capability bound covers it.
+//!
+//! **Online admission.** A run replays its [`Scenario`]'s timeline:
+//! at each arrival event the [`AdmissionPolicy`] decides against the
+//! demand of the streams *currently* in the system (departures hand
+//! their bus and compute demand back), so a stream rejected at the peak
+//! of a churn burst may well have been admitted a second later. The
+//! decision sequence is a pure function of the scenario and the policy —
+//! execution state (sheds, misses) never feeds back into it — which is
+//! what keeps the serial and parallel engines byte-identical under
+//! churn.
 //!
 //! Virtual time advances in fixed ticks (default 1 ms), so a run is a
 //! pure function of its seed — no wall clock anywhere.
 //!
 //! Per tick:
-//! 1. streams release due frames into the central ready queue,
-//! 2. expired frames are shed; the bounded queue sheds lowest-QoS first,
-//! 3. ready frames dispatch EDF-order onto chips through each chip's
-//!    bounded mpsc queue (`try_send` failure = backpressure, frame stays
-//!    central),
-//! 4. the bus arbiter water-fills the tick's byte budget across the
-//!    chips' in-flight transfers,
-//! 5. chips advance; completions are scored against their deadlines.
+//! 1. timeline events fire: departures deactivate streams and free
+//!    capacity, arrivals are admitted (activating the stream) or
+//!    refused,
+//! 2. live streams release due frames into the central ready queue,
+//! 3. expired frames are shed; the bounded queue sheds lowest-QoS first,
+//! 4. ready frames dispatch EDF-order onto capable chips through each
+//!    chip's bounded mpsc queue (`try_send` failure = backpressure,
+//!    frame stays central),
+//! 5. the bus arbiter water-fills the tick's byte budget across the
+//!    chips' in-flight transfers (each capped by its chip's own link),
+//! 6. chips advance; completions are scored against their deadlines.
 
 use crate::config::ChipConfig;
 use crate::dla::trace_fused;
 use crate::fusion::FusionConfig;
 use crate::model::Network;
-use crate::plan::{PlanCache, PlanKey, Planner};
-use crate::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
+use crate::plan::{Plan, PlanCache, PlanKey, Planner};
 use crate::util::Rng;
 use crate::Result;
 
 use std::cmp::Ordering;
-use std::time::Duration;
+use std::collections::HashMap;
+use std::sync::Arc;
 
 use super::arbiter::BusArbiter;
 use super::fleet::Fleet;
-use super::stats::{FleetReport, StreamStats};
+use super::scenario::{ModelId, Scenario};
+use super::stats::{CostProvenance, FleetReport, StreamStats};
 use super::stream::{FrameCost, FrameTask, Stream, StreamSpec};
 
-/// Whether streams are admitted before the run starts.
+/// How arrival events are admitted while the run replays its scenario
+/// timeline.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum AdmissionPolicy {
-    /// Admit every requested stream (pure shedding/miss behavior).
+    /// Admit every arriving stream (pure shedding/miss behavior) — even
+    /// ones no chip in the pool can serve; their frames are shed at
+    /// dispatch (never waited on, so they cannot stall servable work).
     AdmitAll,
-    /// First-fit in arrival order: admit while projected steady-state
-    /// bus AND compute demand stay under `oversub` x capacity. A modest
-    /// oversubscription (default 2.0) banks on shedding to degrade
-    /// gracefully rather than turning traffic away at the door.
-    DemandLimit { oversub: f64 },
+    /// Admit an arrival while the projected steady-state bus AND compute
+    /// demand of the streams currently in the system stay under
+    /// `oversub` x capacity, and at least one chip can serve it. A
+    /// modest oversubscription (default 2.0) banks on shedding to
+    /// degrade gracefully rather than turning traffic away at the door.
+    /// Departures hand their demand back, so churn frees capacity.
+    DemandLimit {
+        /// Capacity multiplier both demand checks run against.
+        oversub: f64,
+    },
 }
 
-/// Knobs of one fleet run.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// Knobs of one fleet run: the [`Scenario`] being served (the pool and
+/// the stream timeline) plus engine parameters.
+#[derive(Debug, Clone, PartialEq)]
 pub struct FleetConfig {
-    /// Streams requested (the admitted set may be smaller).
-    pub streams: usize,
-    /// Number of simulated DLA chips in the pool.
-    pub chips: usize,
+    /// The run description: chip pool and scripted stream timeline.
+    pub scenario: Scenario,
     /// Shared DRAM-bus budget in MB/s (the paper's single-chip HD30
-    /// figure is 585).
+    /// figure is 585; [`FleetConfig::new`] scales it with the pool).
     pub bus_mbps: f64,
     /// Simulated span in seconds.
     pub seconds: f64,
-    /// Seed for the stream mix and release phases.
+    /// Seed for the streams' release phase offsets.
     pub seed: u64,
     /// Virtual tick in milliseconds.
     pub tick_ms: f64,
@@ -76,14 +98,12 @@ pub struct FleetConfig {
     pub queue_depth: usize,
     /// Central ready-queue bound, as a multiple of the stream count.
     pub max_ready_per_stream: usize,
-    /// Stream admission policy.
+    /// Stream admission policy, applied online at each arrival event.
     pub admission: AdmissionPolicy,
-    /// Design point of every chip in the pool.
-    pub chip: ChipConfig,
-    /// Fusion-planning strategy for per-resolution frame costs: each
-    /// stream is priced from a plan formed *at its own resolution* (via
-    /// [`crate::plan::PlanCache`]) rather than from the build-time HD
-    /// grouping; [`Planner::OptimalDp`] makes that plan traffic-optimal.
+    /// Fusion-planning strategy for per-stream frame costs: each stream
+    /// is priced from a plan formed for *its own model at its own
+    /// resolution* (via [`crate::plan::PlanCache`]);
+    /// [`Planner::OptimalDp`] makes that plan traffic-optimal.
     pub planner: Planner,
     /// Engine worker threads. `1` (the default) runs the reference
     /// serial tick engine; `0` resolves to one worker per available
@@ -94,60 +114,118 @@ pub struct FleetConfig {
     pub threads: usize,
 }
 
-impl Default for FleetConfig {
-    fn default() -> Self {
+impl FleetConfig {
+    /// A config over `scenario` with default engine knobs and the bus
+    /// budget scaled to the pool (the paper's 585 MB/s per chip).
+    pub fn new(scenario: Scenario) -> Self {
+        let bus_mbps = 585.0 * scenario.chips.len().max(1) as f64;
         FleetConfig {
-            streams: 16,
-            chips: 8,
-            bus_mbps: 585.0,
+            scenario,
+            bus_mbps,
             seconds: 5.0,
             seed: 1,
             tick_ms: 1.0,
             queue_depth: 2,
             max_ready_per_stream: 4,
             admission: AdmissionPolicy::DemandLimit { oversub: 2.0 },
-            chip: ChipConfig::paper_chip(),
             planner: Planner::OptimalDp,
             threads: 1,
         }
     }
+
+    /// The legacy seeded workload: `streams` sampled mixed-resolution
+    /// streams on `chips` paper chips, with `seed` driving both the mix
+    /// and the release phases.
+    pub fn sampled(streams: usize, chips: usize, seed: u64) -> Self {
+        FleetConfig { seed, ..Self::new(Scenario::sampled(streams, chips, seed)) }
+    }
+
+    /// Reject configurations that would NaN or hang the engines: zero or
+    /// non-finite tick/span/budget, zero queue bounds, a degenerate
+    /// oversubscription, or an invalid scenario
+    /// ([`Scenario::validate`]). Run by [`run_fleet`] before every run.
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(
+            self.bus_mbps.is_finite() && self.bus_mbps > 0.0,
+            "bus budget {} MB/s is not positive and finite",
+            self.bus_mbps
+        );
+        crate::ensure!(
+            self.seconds.is_finite() && self.seconds > 0.0,
+            "simulated span {} s is not positive and finite",
+            self.seconds
+        );
+        crate::ensure!(
+            self.tick_ms.is_finite() && self.tick_ms > 0.0,
+            "virtual tick {} ms is not positive and finite",
+            self.tick_ms
+        );
+        crate::ensure!(self.queue_depth >= 1, "per-chip queue depth must be >= 1");
+        crate::ensure!(
+            self.max_ready_per_stream >= 1,
+            "central ready-queue bound must be >= 1 frame per stream"
+        );
+        if let AdmissionPolicy::DemandLimit { oversub } = self.admission {
+            crate::ensure!(
+                oversub.is_finite() && oversub > 0.0,
+                "admission oversubscription {oversub} is not positive and finite"
+            );
+        }
+        self.scenario.validate()
+    }
 }
 
-/// Per-frame cost of the deployed RC-YOLOv2 at each resolution in the
-/// mix, from the same counted models the single-chip reports use. Fusion
-/// groups come from the configured [`Planner`] at the *stream's*
-/// resolution (memoized in a [`PlanCache`]), so a 416 stream and a 1080p
-/// stream are each priced from the grouping that minimizes their own
-/// DRAM traffic. The deployed network is already pruned under the weight
-/// buffer, so replanning runs with zero grouping slack: every planned
-/// group truly fits the 96 KB buffer.
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self::sampled(16, 8, 1)
+    }
+}
+
+/// Per-frame costs for every (model, resolution) operating point in a
+/// scenario, priced from the same counted models the single-chip reports
+/// use. Fusion groups come from the configured [`Planner`] at each
+/// stream's *own* model and resolution (memoized in a [`PlanCache`],
+/// whose keys carry [`Network::structural_hash`] — so multi-model
+/// pricing is a cache-key dimension, not a separate code path). Costs
+/// are priced on the pool's reference buffer geometry; heterogeneous
+/// clocks and links change execution rate, not per-frame cost.
 struct CostModel {
-    net: Network,
-    cfg: FusionConfig,
     chip: ChipConfig,
     planner: Planner,
+    /// One built network (+ its fusion config) per distinct model in the
+    /// scenario, keyed by [`ModelId`].
+    nets: HashMap<ModelId, (Network, FusionConfig)>,
     /// The only memo: plans *and* trace-derived frame costs live in the
     /// cache, keyed identically, so repeat pricings of one operating
-    /// point (one `cost()` call per admitted stream) skip both the DP
-    /// and the trace build.
+    /// point skip both the DP and the trace build.
     plans: PlanCache,
 }
 
 impl CostModel {
-    fn new(chip: ChipConfig, planner: Planner) -> Result<Self> {
-        let spec = build_deployment_spec(PipelineProfile::Hd, 3, 5, None, 7);
-        let (net, _build_groups) = spec_to_network(&spec)?;
-        let cfg = FusionConfig { slack: 0.0, ..FusionConfig::paper_default() };
-        Ok(CostModel { net, cfg, chip, planner, plans: PlanCache::new() })
+    fn new(chip: ChipConfig, planner: Planner) -> Self {
+        CostModel { chip, planner, nets: HashMap::new(), plans: PlanCache::new() }
     }
 
-    /// Plan + schedule one resolution into a per-frame cost: build the
-    /// plan's [`crate::trace::ExecutionTrace`] and summarize it (cycles,
-    /// DRAM bytes, burst profile). The summary is cached in the
+    /// Build every distinct model named by `points` (serial — network
+    /// construction is cheap next to planning).
+    fn ensure_models(&mut self, points: &[(ModelId, (u32, u32))]) -> Result<()> {
+        for &(model, _) in points {
+            if !self.nets.contains_key(&model) {
+                self.nets.insert(model, model.build()?);
+            }
+        }
+        Ok(())
+    }
+
+    /// Plan + schedule one operating point into a per-frame cost: build
+    /// the plan's [`crate::trace::ExecutionTrace`] and summarize it
+    /// (cycles, DRAM bytes, burst profile). The summary is cached in the
     /// [`PlanCache`] alongside the plan, so repeat pricings of one
-    /// operating point skip both the DP *and* the trace build. Pure in
-    /// (`net`, `cfg`, `chip`, `planner`, `hw`), so serial and parallel
-    /// priming produce bit-identical costs.
+    /// operating point skip both the DP *and* the trace build. Returns
+    /// the plan too (one key construction, one cache path), so callers
+    /// can derive provenance without a second lookup. Pure in (`net`,
+    /// `cfg`, `chip`, `planner`, `hw`), so serial and parallel priming
+    /// produce bit-identical costs.
     fn price(
         net: &Network,
         cfg: &FusionConfig,
@@ -155,52 +233,72 @@ impl CostModel {
         planner: Planner,
         plans: &PlanCache,
         hw: (u32, u32),
-    ) -> Result<FrameCost> {
+    ) -> Result<(FrameCost, Arc<Plan>)> {
         let key = PlanKey::new(net, cfg, chip, hw, planner);
-        if let Some(cost) = plans.frame_cost(&key) {
-            return Ok(cost);
-        }
         let plan = plans.plan(net, cfg, chip, hw, planner);
+        if let Some(cost) = plans.frame_cost(&key) {
+            return Ok((cost, plan));
+        }
         let (trace, _tilings) = trace_fused(net, &plan.groups, hw, chip)
-            .map_err(|e| crate::err!("tile planning at {hw:?}: {e:?}"))?;
-        Ok(plans.insert_frame_cost(key, trace.frame_cost()))
+            .map_err(|e| crate::err!("tile planning {} at {hw:?}: {e:?}", net.name))?;
+        Ok((plans.insert_frame_cost(key, trace.frame_cost()), plan))
     }
 
-    /// Price one resolution. Warm operating points are a cache read
-    /// (plan *and* trace cost); cold ones plan, trace and insert.
-    fn cost(&mut self, hw: (u32, u32)) -> Result<FrameCost> {
-        Self::price(&self.net, &self.cfg, &self.chip, self.planner, &self.plans, hw)
+    /// Price one operating point and report where the price came from.
+    /// Warm points are a cache read (plan *and* trace cost); cold ones
+    /// plan, trace and insert.
+    fn cost(&self, model: ModelId, hw: (u32, u32)) -> Result<(FrameCost, CostProvenance)> {
+        let (net, cfg) = self
+            .nets
+            .get(&model)
+            .ok_or_else(|| crate::err!("model {} was not primed", model.name()))?;
+        let (cost, plan) = Self::price(net, cfg, &self.chip, self.planner, &self.plans, hw)?;
+        Ok((
+            cost,
+            CostProvenance {
+                model,
+                net_hash: net.structural_hash(),
+                planner: self.planner,
+                groups: plan.groups.len() as u64,
+                feat_bytes: plan.feat_bytes,
+            },
+        ))
     }
 
-    /// Pre-plan every distinct resolution in `hws`, fanning the planning
-    /// work (the DP + tiling at each operating point — the expensive part
-    /// of fleet setup) across `threads` scoped worker threads. Results
-    /// land in the shared cache the serial path reads, so admission
-    /// afterwards sees identical costs either way.
-    fn prime(&mut self, hws: &[(u32, u32)], threads: usize) -> Result<()> {
-        let mut todo: Vec<(u32, u32)> = Vec::new();
-        for &hw in hws {
-            if !todo.contains(&hw) {
-                todo.push(hw);
+    /// Pre-plan every distinct (model, resolution) point in `points`,
+    /// fanning the planning work (the DP + tiling at each operating
+    /// point — the expensive part of fleet setup) across `threads`
+    /// scoped worker threads. Results land in the shared cache the
+    /// serial path reads, so admission afterwards sees identical costs
+    /// either way.
+    fn prime(&mut self, points: &[(ModelId, (u32, u32))], threads: usize) -> Result<()> {
+        self.ensure_models(points)?;
+        let mut todo: Vec<(ModelId, (u32, u32))> = Vec::new();
+        for &p in points {
+            if !todo.contains(&p) {
+                todo.push(p);
             }
         }
         if threads <= 1 || todo.len() <= 1 {
-            for hw in todo {
-                self.cost(hw)?;
+            for (model, hw) in todo {
+                self.cost(model, hw)?;
             }
             return Ok(());
         }
-        let (net, cfg, planner, plans) = (&self.net, &self.cfg, self.planner, &self.plans);
+        let (planner, plans, nets) = (self.planner, &self.plans, &self.nets);
         let chip = self.chip;
-        // At most `threads` planning threads in flight: an explicit spec
-        // list may carry arbitrarily many distinct resolutions, and each
+        // At most `threads` planning threads in flight: a scenario may
+        // carry arbitrarily many distinct operating points, and each
         // prices via the O(U^2) DP. Results land in the cache as a side
         // effect; only errors need collecting.
         for batch in todo.chunks(threads) {
-            let results: Vec<Result<FrameCost>> = std::thread::scope(|s| {
+            let results: Vec<Result<(FrameCost, Arc<Plan>)>> = std::thread::scope(|s| {
                 let handles: Vec<_> = batch
                     .iter()
-                    .map(|&hw| s.spawn(move || Self::price(net, cfg, &chip, planner, plans, hw)))
+                    .map(|&(model, hw)| {
+                        let (net, cfg) = &nets[&model];
+                        s.spawn(move || Self::price(net, cfg, &chip, planner, plans, hw))
+                    })
                     .collect();
                 handles
                     .into_iter()
@@ -257,9 +355,139 @@ fn shed_victim(ready: &[FrameTask]) -> usize {
         .expect("shed_victim on empty queue")
 }
 
+/// Whether a timeline event is an arrival or a departure. Departures
+/// sort first at equal timestamps, so capacity freed in a tick is
+/// available to that tick's arrivals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum EventKind {
+    /// A scripted stream leaves: demand is handed back, releases stop.
+    Depart,
+    /// A scripted stream arrives and requests admission.
+    Arrive,
+}
+
+/// One scenario timeline event.
+#[derive(Debug, Clone, Copy)]
+struct FleetEvent {
+    at_ms: f64,
+    kind: EventKind,
+    stream: usize,
+}
+
+/// The run's online admission controller: the sorted scenario timeline
+/// plus running demand accounting. Decisions depend only on the
+/// scenario, the priced costs and the policy — never on execution state
+/// — so the serial and parallel engines (which both drive this from
+/// their tick loop) make identical decisions.
+#[derive(Debug)]
+pub(crate) struct AdmissionState {
+    policy: AdmissionPolicy,
+    events: Vec<FleetEvent>,
+    next: usize,
+    /// Per-stream steady-state demand: (bus bytes/s, compute cycles/s,
+    /// servable by at least one chip in the pool).
+    demands: Vec<(f64, f64, bool)>,
+    bus_capacity: f64,
+    compute_capacity: f64,
+    bus_demand: f64,
+    compute_demand: f64,
+    /// Per-stream decision; `None` until the arrival event fires.
+    admitted: Vec<Option<bool>>,
+    /// Streams refused at their arrival event so far.
+    pub(crate) rejected: usize,
+}
+
+impl AdmissionState {
+    /// Build the sorted timeline for `scenario` with per-stream demands.
+    pub(crate) fn new(
+        scenario: &Scenario,
+        policy: AdmissionPolicy,
+        demands: Vec<(f64, f64, bool)>,
+        bus_capacity: f64,
+        compute_capacity: f64,
+    ) -> Self {
+        let mut events = Vec::with_capacity(2 * scenario.streams.len());
+        for (i, s) in scenario.streams.iter().enumerate() {
+            events.push(FleetEvent { at_ms: s.arrival_ms, kind: EventKind::Arrive, stream: i });
+            if let Some(d) = s.departure_ms {
+                events.push(FleetEvent { at_ms: d, kind: EventKind::Depart, stream: i });
+            }
+        }
+        events.sort_by(|a, b| {
+            a.at_ms
+                .total_cmp(&b.at_ms)
+                .then(a.kind.cmp(&b.kind))
+                .then(a.stream.cmp(&b.stream))
+        });
+        AdmissionState {
+            policy,
+            events,
+            next: 0,
+            admitted: vec![None; scenario.streams.len()],
+            demands,
+            bus_capacity,
+            compute_capacity,
+            bus_demand: 0.0,
+            compute_demand: 0.0,
+            rejected: 0,
+        }
+    }
+
+    /// Fire every event due at or before `now_ms`, in timeline order.
+    /// Marks admitted streams in `stats` and returns the liveness
+    /// transitions to apply — `(stream id, live)` — *in event order*, so
+    /// a stream that arrives and departs inside one tick ends inactive
+    /// in both engines.
+    pub(crate) fn step(&mut self, now_ms: f64, stats: &mut [StreamStats]) -> Vec<(usize, bool)> {
+        let mut toggles = Vec::new();
+        while self.next < self.events.len() && self.events[self.next].at_ms <= now_ms {
+            let e = self.events[self.next];
+            self.next += 1;
+            match e.kind {
+                EventKind::Depart => {
+                    if self.admitted[e.stream] == Some(true) {
+                        let (b, c, _) = self.demands[e.stream];
+                        self.bus_demand -= b;
+                        self.compute_demand -= c;
+                        toggles.push((e.stream, false));
+                    }
+                }
+                EventKind::Arrive => {
+                    let (b, c, servable) = self.demands[e.stream];
+                    let fits = match self.policy {
+                        AdmissionPolicy::AdmitAll => true,
+                        AdmissionPolicy::DemandLimit { oversub } => {
+                            servable
+                                && self.bus_demand + b <= oversub * self.bus_capacity
+                                && self.compute_demand + c <= oversub * self.compute_capacity
+                        }
+                    };
+                    if fits {
+                        self.bus_demand += b;
+                        self.compute_demand += c;
+                        self.admitted[e.stream] = Some(true);
+                        stats[e.stream].admitted = true;
+                        toggles.push((e.stream, true));
+                    } else {
+                        self.admitted[e.stream] = Some(false);
+                        self.rejected += 1;
+                    }
+                }
+            }
+        }
+        toggles
+    }
+
+    /// The admission outcome for `stream` so far: `None` while its
+    /// arrival event has not fired, else `Some(admitted)`.
+    pub(crate) fn outcome(&self, stream: usize) -> Option<bool> {
+        self.admitted[stream]
+    }
+}
+
 /// The discrete-tick fleet simulator.
 ///
-/// Fields are crate-visible so [`super::parallel`] can take the admitted
+/// Fields are crate-visible so [`super::parallel`] can take the prepared
 /// state apart into per-worker shards; everything observable is produced
 /// through [`FleetSim::run`] (serial) or the parallel engine, which are
 /// byte-identical.
@@ -270,69 +498,72 @@ pub struct FleetSim {
     pub(crate) fleet: Fleet,
     pub(crate) arbiter: BusArbiter,
     pub(crate) stats: Vec<StreamStats>,
-    pub(crate) rejected: usize,
+    pub(crate) admission: AdmissionState,
 }
 
 impl FleetSim {
-    /// Admit (a subset of) `specs` and set up the pool. Costs come from
-    /// the deployed network's counted models at each spec's resolution;
-    /// with `cfg.threads != 1` the per-resolution planning fans out
-    /// across scoped threads (values are identical either way).
-    pub fn new(cfg: &FleetConfig, specs: &[StreamSpec]) -> Result<FleetSim> {
-        let mut costs = CostModel::new(cfg.chip, cfg.planner)?;
-        let hws: Vec<(u32, u32)> = specs.iter().map(|s| s.hw).collect();
-        costs.prime(&hws, super::parallel::resolve_threads(cfg.threads))?;
-        let fleet = Fleet::new(cfg.chip, cfg.chips, cfg.queue_depth, cfg.tick_ms);
-        let bus_capacity = cfg.bus_mbps * 1e6;
-        let compute_capacity = fleet.compute_cycles_per_s();
+    /// Price the scenario's operating points and set up the pool and
+    /// timeline. Costs come from each stream's own model at its own
+    /// resolution; with `cfg.threads != 1` the per-point planning fans
+    /// out across scoped threads (values are identical either way).
+    /// Admission itself happens *during* the run, at arrival events.
+    pub fn new(cfg: &FleetConfig) -> Result<FleetSim> {
+        cfg.validate()?;
+        let scenario = &cfg.scenario;
+        let mut costs = CostModel::new(scenario.reference_chip(), cfg.planner);
+        costs.prime(&scenario.operating_points(), super::parallel::resolve_threads(cfg.threads))?;
+        let fleet = Fleet::new(&scenario.chips, cfg.queue_depth, cfg.tick_ms);
 
-        // Admission: first-fit in arrival order, both resources checked.
-        let mut admitted: Vec<(StreamSpec, FrameCost)> = Vec::new();
-        let mut rejected = 0usize;
-        let mut bus_demand = 0.0f64;
-        let mut compute_demand = 0.0f64;
-        for &s in specs {
-            let cost = costs.cost(s.hw)?;
-            let b = cost.bus_demand_bytes_per_s(s.target_fps);
-            let c = cost.compute_demand_cycles_per_s(s.target_fps);
-            let fits = match cfg.admission {
-                AdmissionPolicy::AdmitAll => true,
-                AdmissionPolicy::DemandLimit { oversub } => {
-                    bus_demand + b <= oversub * bus_capacity
-                        && compute_demand + c <= oversub * compute_capacity
-                }
-            };
-            if fits {
-                bus_demand += b;
-                compute_demand += c;
-                admitted.push((s, cost));
-            } else {
-                rejected += 1;
-            }
-        }
-
-        // Seeded release phases, decoupled from the spec-sampling stream.
+        // Seeded release phases, drawn in script order for every stream
+        // (admitted or not) so the sequence is timeline-independent.
         let mut rng = Rng::new(cfg.seed ^ 0xF1EE_75E1_2D1E_0001);
-        let streams: Vec<Stream> = admitted
-            .iter()
-            .enumerate()
-            .map(|(id, &(spec, cost))| Stream::new(id, spec, cost, &mut rng))
-            .collect();
-        let stats = admitted.iter().map(|&(spec, cost)| StreamStats::new(spec, cost)).collect();
+        let mut streams = Vec::with_capacity(scenario.streams.len());
+        let mut stats = Vec::with_capacity(scenario.streams.len());
+        let mut demands = Vec::with_capacity(scenario.streams.len());
+        for (id, script) in scenario.streams.iter().enumerate() {
+            let (cost, provenance) = costs.cost(script.model, script.spec.hw)?;
+            streams.push(Stream::new(id, script.spec, cost, script.arrival_ms, &mut rng));
+            stats.push(StreamStats::new(
+                script.spec,
+                cost,
+                provenance,
+                script.arrival_ms,
+                script.departure_ms,
+            ));
+            demands.push((
+                cost.bus_demand_bytes_per_s(script.spec.target_fps),
+                cost.compute_demand_cycles_per_s(script.spec.target_fps),
+                scenario.any_chip_can_serve(script.spec.pixels()),
+            ));
+        }
+        let admission = AdmissionState::new(
+            scenario,
+            cfg.admission,
+            demands,
+            cfg.bus_mbps * 1e6,
+            fleet.compute_cycles_per_s(),
+        );
 
         Ok(FleetSim {
-            cfg: *cfg,
+            cfg: cfg.clone(),
             streams,
             ready: Vec::new(),
             fleet,
             arbiter: BusArbiter::new(cfg.bus_mbps, cfg.tick_ms),
             stats,
-            rejected,
+            admission,
         })
     }
 
     fn step(&mut self, now_ms: f64) {
-        // 1. Frame releases.
+        // 1. Timeline events: departures free capacity first, then
+        //    arrivals are admitted against current demand. Transitions
+        //    apply in event order.
+        for (i, live) in self.admission.step(now_ms, &mut self.stats) {
+            self.streams[i].active = live;
+        }
+
+        // 2. Frame releases from live streams.
         for s in &mut self.streams {
             for t in s.release_due(now_ms) {
                 self.stats[t.stream].released += 1;
@@ -340,7 +571,7 @@ impl FleetSim {
             }
         }
 
-        // 2a. Shed frames that can no longer make their deadline.
+        // 3a. Shed frames that can no longer make their deadline.
         let stats = &mut self.stats;
         self.ready.retain(|t| {
             if t.deadline_ms <= now_ms {
@@ -351,7 +582,7 @@ impl FleetSim {
             }
         });
 
-        // 2b. Bounded central queue: shed lowest-QoS, least-urgent first.
+        // 3b. Bounded central queue: shed lowest-QoS, least-urgent first.
         let max_ready = self.cfg.max_ready_per_stream * self.streams.len().max(1);
         while self.ready.len() > max_ready {
             let v = shed_victim(&self.ready);
@@ -359,10 +590,21 @@ impl FleetSim {
             self.stats[t.stream].shed += 1;
         }
 
-        // 3. EDF dispatch through the bounded per-chip queues.
+        // 4. Strict-EDF dispatch through the bounded per-chip queues:
+        //    the EDF-next frame is offered only to capable chips; if its
+        //    capable chips are all *full*, dispatch waits (head-of-line),
+        //    which both engines replay identically. A frame no chip in
+        //    the pool can *ever* serve (AdmitAll admits such streams) is
+        //    shed immediately instead — waiting on it would stall every
+        //    frame behind it for its whole deadline window.
         while !self.ready.is_empty() {
-            let Some(w) = self.fleet.pick_worker() else { break };
             let i = edf_min(&self.ready);
+            if !self.fleet.any_can_serve(self.ready[i].pixels) {
+                let t = self.ready.swap_remove(i);
+                self.stats[t.stream].shed += 1;
+                continue;
+            }
+            let Some(w) = self.fleet.pick_worker(self.ready[i].pixels) else { break };
             let task = self.ready.swap_remove(i);
             if let Err(back) = self.fleet.workers[w].try_dispatch(task) {
                 self.ready.push(back);
@@ -370,16 +612,15 @@ impl FleetSim {
             }
         }
 
-        // 4. Chips pull queued work, then the bus budget is arbitrated.
-        let cycles_per_tick = self.fleet.cycles_per_tick;
+        // 5. Chips pull queued work, then the bus budget is arbitrated
+        //    (each chip's demand already capped by its own link rate).
         for w in &mut self.fleet.workers {
-            w.refill(cycles_per_tick);
+            w.refill();
         }
-        let link = self.fleet.link_bytes_per_tick;
-        let demands: Vec<f64> = self.fleet.workers.iter().map(|w| w.bus_demand(link)).collect();
+        let demands: Vec<f64> = self.fleet.workers.iter().map(|w| w.bus_demand()).collect();
         let grants = self.arbiter.arbitrate(&demands);
 
-        // 5. Execution progress and completion scoring.
+        // 6. Execution progress and completion scoring.
         for (w, g) in self.fleet.workers.iter_mut().zip(&grants) {
             if let Some(done) = w.advance(*g) {
                 let latency_ms = now_ms + self.cfg.tick_ms - done.release_ms;
@@ -395,15 +636,17 @@ impl FleetSim {
         for k in 0..ticks {
             self.step(k as f64 * self.cfg.tick_ms);
         }
-        let wall = Duration::from_secs_f64(self.cfg.seconds);
-        for s in &mut self.stats {
-            s.metrics.set_wall(wall);
+        let end_ms = self.cfg.seconds * 1e3;
+        for (i, s) in self.stats.iter_mut().enumerate() {
+            s.refused = self.admission.outcome(i) == Some(false);
+            s.close(end_ms);
         }
         let busy: u64 = self.fleet.workers.iter().map(|w| w.busy_ticks).sum();
         let chips = self.fleet.workers.len();
         FleetReport {
+            scenario: self.cfg.scenario.name.clone(),
             per_stream: self.stats.clone(),
-            rejected: self.rejected,
+            rejected: self.admission.rejected,
             chips,
             bus_mbps: self.cfg.bus_mbps,
             bus_utilization: self.arbiter.utilization(),
@@ -415,20 +658,12 @@ impl FleetSim {
     }
 }
 
-/// Run a fleet with a seeded mix of stream specs (`cfg.streams` of them).
-/// Dispatches on `cfg.threads`: the serial reference engine at 1, the
-/// sharded parallel engine otherwise — with byte-identical output.
+/// Run the configured scenario. Validates the config, prices every
+/// operating point, then dispatches on `cfg.threads`: the serial
+/// reference engine at 1, the sharded parallel engine otherwise — with
+/// byte-identical output.
 pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
-    let mut rng = Rng::new(cfg.seed);
-    let specs: Vec<StreamSpec> =
-        (0..cfg.streams).map(|_| StreamSpec::sample(&mut rng)).collect();
-    run_fleet_with(cfg, &specs)
-}
-
-/// Run a fleet over an explicit stream list (`cfg.streams` is ignored).
-/// Engine selection follows `cfg.threads` exactly as in [`run_fleet`].
-pub fn run_fleet_with(cfg: &FleetConfig, specs: &[StreamSpec]) -> Result<FleetReport> {
-    let sim = FleetSim::new(cfg, specs)?;
+    let sim = FleetSim::new(cfg)?;
     let threads = super::parallel::resolve_threads(cfg.threads);
     if threads <= 1 {
         let mut sim = sim;
@@ -436,6 +671,16 @@ pub fn run_fleet_with(cfg: &FleetConfig, specs: &[StreamSpec]) -> Result<FleetRe
     } else {
         Ok(sim.run_parallel(threads))
     }
+}
+
+/// Run a steady fleet over an explicit stream list on `cfg`'s chip pool:
+/// every spec runs the deployed RC-YOLOv2 from `t = 0` to the end
+/// (`cfg.scenario`'s own stream script is ignored). Engine selection
+/// follows `cfg.threads` exactly as in [`run_fleet`].
+pub fn run_fleet_with(cfg: &FleetConfig, specs: &[StreamSpec]) -> Result<FleetReport> {
+    let mut cfg = cfg.clone();
+    cfg.scenario = Scenario::steady(cfg.scenario.chips.clone(), specs);
+    run_fleet(&cfg)
 }
 
 #[cfg(test)]
@@ -449,6 +694,7 @@ mod tests {
             seq,
             release_ms: 0.0,
             deadline_ms,
+            pixels: 416 * 416,
             cost: FrameCost::flat(1, 1),
             qos,
         }
@@ -530,7 +776,138 @@ mod tests {
     #[test]
     fn default_config_is_sane() {
         let cfg = FleetConfig::default();
-        assert!(cfg.streams > 0 && cfg.chips > 0);
+        assert!(!cfg.scenario.streams.is_empty() && !cfg.scenario.chips.is_empty());
         assert!(cfg.bus_mbps > 0.0 && cfg.tick_ms > 0.0);
+        cfg.validate().expect("default config validates");
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_engine_knobs() {
+        let good = FleetConfig::default();
+        for bad in [
+            FleetConfig { tick_ms: 0.0, ..good.clone() },
+            FleetConfig { tick_ms: f64::NAN, ..good.clone() },
+            FleetConfig { seconds: 0.0, ..good.clone() },
+            FleetConfig { bus_mbps: 0.0, ..good.clone() },
+            FleetConfig { bus_mbps: f64::INFINITY, ..good.clone() },
+            FleetConfig { queue_depth: 0, ..good.clone() },
+            FleetConfig { max_ready_per_stream: 0, ..good.clone() },
+            FleetConfig {
+                admission: AdmissionPolicy::DemandLimit { oversub: 0.0 },
+                ..good.clone()
+            },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} should not validate");
+        }
+        good.validate().expect("the default config validates");
+    }
+
+    /// Online admission accounting: a departure hands capacity back, so
+    /// a later arrival that would not have fit alongside the departed
+    /// stream is admitted.
+    #[test]
+    fn departures_free_capacity_for_later_arrivals() {
+        use crate::serve::scenario::{ChipSpec, Scenario, StreamScript};
+        let spec = StreamSpec { hw: (416, 416), target_fps: 30.0, qos: QosClass::Silver };
+        let scenario = Scenario {
+            name: "test-churn".into(),
+            chips: vec![ChipSpec::paper()],
+            streams: vec![
+                StreamScript {
+                    spec,
+                    model: ModelId::Deployed,
+                    arrival_ms: 0.0,
+                    departure_ms: Some(100.0),
+                },
+                StreamScript {
+                    spec,
+                    model: ModelId::Deployed,
+                    arrival_ms: 200.0,
+                    departure_ms: None,
+                },
+            ],
+        };
+        // Demands sized so exactly one stream fits at a time.
+        let demands = vec![(10.0, 10.0, true); 2];
+        let mut st = AdmissionState::new(
+            &scenario,
+            AdmissionPolicy::DemandLimit { oversub: 1.0 },
+            demands,
+            15.0,
+            15.0,
+        );
+        let mut stats: Vec<StreamStats> = scenario
+            .streams
+            .iter()
+            .map(|s| {
+                StreamStats::new(
+                    s.spec,
+                    FrameCost::flat(1, 1),
+                    CostProvenance::synthetic(ModelId::Deployed),
+                    s.arrival_ms,
+                    s.departure_ms,
+                )
+            })
+            .collect();
+        assert_eq!(st.step(0.0, &mut stats), vec![(0, true)]);
+        assert_eq!(st.step(100.0, &mut stats), vec![(0, false)], "departure deactivates");
+        assert_eq!(
+            st.step(200.0, &mut stats),
+            vec![(1, true)],
+            "freed capacity admits the late stream"
+        );
+        assert_eq!(st.rejected, 0);
+        assert!(stats[0].admitted && stats[1].admitted);
+    }
+
+    /// Without the departure, the same late arrival is refused: the
+    /// decision really is made online against current demand.
+    #[test]
+    fn arrival_is_rejected_while_capacity_is_held() {
+        use crate::serve::scenario::{ChipSpec, Scenario, StreamScript};
+        let spec = StreamSpec { hw: (416, 416), target_fps: 30.0, qos: QosClass::Silver };
+        let scenario = Scenario {
+            name: "test-held".into(),
+            chips: vec![ChipSpec::paper()],
+            streams: vec![
+                StreamScript {
+                    spec,
+                    model: ModelId::Deployed,
+                    arrival_ms: 0.0,
+                    departure_ms: None,
+                },
+                StreamScript {
+                    spec,
+                    model: ModelId::Deployed,
+                    arrival_ms: 200.0,
+                    departure_ms: None,
+                },
+            ],
+        };
+        let demands = vec![(10.0, 10.0, true); 2];
+        let mut st = AdmissionState::new(
+            &scenario,
+            AdmissionPolicy::DemandLimit { oversub: 1.0 },
+            demands,
+            15.0,
+            15.0,
+        );
+        let mut stats: Vec<StreamStats> = scenario
+            .streams
+            .iter()
+            .map(|s| {
+                StreamStats::new(
+                    s.spec,
+                    FrameCost::flat(1, 1),
+                    CostProvenance::synthetic(ModelId::Deployed),
+                    s.arrival_ms,
+                    s.departure_ms,
+                )
+            })
+            .collect();
+        st.step(0.0, &mut stats);
+        assert!(st.step(200.0, &mut stats).is_empty());
+        assert_eq!(st.rejected, 1);
+        assert!(!stats[1].admitted);
     }
 }

@@ -3,14 +3,25 @@
 //! Reuses [`crate::coordinator::Metrics`] for the per-stream latency
 //! series and deadline accounting, so the fleet report and the
 //! single-pipeline report share one definition of latency, deadline miss
-//! and (wall-clock) throughput.
+//! and throughput — with one scenario-era twist: a stream's wall span is
+//! its *own lifetime* (arrival to departure or end of run), not the
+//! whole simulated span, so a churned stream's FPS is measured over the
+//! window it was actually present.
+//!
+//! Every per-stream record also carries its [`CostProvenance`]: which
+//! network the stream's frame cost was priced from, under which planner,
+//! and what that plan looked like — the auditable link between a
+//! scenario's mixed models and the costs the engines scheduled.
 
 use std::fmt;
 use std::time::Duration;
 
 use crate::coordinator::Metrics;
+use crate::plan::Planner;
+use crate::util::json::Json;
 use crate::util::{fnv1a, percentile};
 
+use super::scenario::ModelId;
 use super::stream::{FrameCost, StreamSpec};
 
 fn ratio(num: u64, den: u64) -> f64 {
@@ -21,7 +32,51 @@ fn ratio(num: u64, den: u64) -> f64 {
     }
 }
 
-/// Serving statistics for one admitted stream.
+/// Where a stream's per-frame cost came from: the model, the planner,
+/// and the shape of the plan it was priced against. Recorded per stream
+/// so a mixed-model scenario's report can *prove* each stream was priced
+/// from its own network's plan (asserted by `tests/scenario_fleet.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CostProvenance {
+    /// The network this stream runs.
+    pub model: ModelId,
+    /// [`crate::model::Network::structural_hash`] of the priced network.
+    pub net_hash: u64,
+    /// Planning strategy the fusion plan came from.
+    pub planner: Planner,
+    /// Fusion groups in the priced plan.
+    pub groups: u64,
+    /// The plan's per-frame fused DRAM feature bytes at the stream's
+    /// resolution.
+    pub feat_bytes: u64,
+}
+
+impl CostProvenance {
+    /// A placeholder provenance for synthetic costs in tests and
+    /// hand-built stats (zero hash, zero-size plan).
+    pub fn synthetic(model: ModelId) -> Self {
+        CostProvenance {
+            model,
+            net_hash: 0,
+            planner: Planner::OptimalDp,
+            groups: 0,
+            feat_bytes: 0,
+        }
+    }
+
+    /// The provenance as digest words (for the fleet stats digest).
+    pub fn digest_words(&self) -> [u64; 5] {
+        [
+            self.model.digest_word(),
+            self.net_hash,
+            self.planner as u64,
+            self.groups,
+            self.feat_bytes,
+        ]
+    }
+}
+
+/// Serving statistics for one scripted stream (admitted or not).
 #[derive(Debug, Clone)]
 pub struct StreamStats {
     /// The stream's operating point.
@@ -30,6 +85,21 @@ pub struct StreamStats {
     /// recorded so the stats digest covers the priced demand shape, not
     /// just the observed latencies.
     pub cost: FrameCost,
+    /// Which model/plan the cost was priced from.
+    pub provenance: CostProvenance,
+    /// Scripted arrival time (ms).
+    pub arrival_ms: f64,
+    /// Scripted departure time (ms), if the stream leaves mid-run.
+    pub departure_ms: Option<f64>,
+    /// Whether the stream was admitted at its arrival event.
+    pub admitted: bool,
+    /// Whether the stream was *refused* at its arrival event. Both this
+    /// and [`StreamStats::admitted`] false means the arrival never fired
+    /// inside the simulated span (the stream was simply absent).
+    pub refused: bool,
+    /// The stream's realized lifetime in seconds (arrival to departure
+    /// or end of run; 0 for rejected streams). Set when the run closes.
+    pub lifetime_s: f64,
     /// Latency series + deadline misses of the *completed* frames.
     pub metrics: Metrics,
     /// Frames the camera released into the system.
@@ -39,9 +109,27 @@ pub struct StreamStats {
 }
 
 impl StreamStats {
-    /// Fresh (all-zero) stats for one stream.
-    pub fn new(spec: StreamSpec, cost: FrameCost) -> Self {
-        StreamStats { spec, cost, metrics: Metrics::default(), released: 0, shed: 0 }
+    /// Fresh (all-zero) stats for one scripted stream.
+    pub fn new(
+        spec: StreamSpec,
+        cost: FrameCost,
+        provenance: CostProvenance,
+        arrival_ms: f64,
+        departure_ms: Option<f64>,
+    ) -> Self {
+        StreamStats {
+            spec,
+            cost,
+            provenance,
+            arrival_ms,
+            departure_ms,
+            admitted: false,
+            refused: false,
+            lifetime_s: 0.0,
+            metrics: Metrics::default(),
+            released: 0,
+            shed: 0,
+        }
     }
 
     /// Record a completed frame; `deadline_ms` is the relative deadline.
@@ -50,6 +138,17 @@ impl StreamStats {
             Duration::from_secs_f64(latency_ms / 1e3),
             Some(Duration::from_secs_f64(deadline_ms / 1e3)),
         );
+    }
+
+    /// Close the stream's books at the end of a run spanning `end_ms`:
+    /// fix the realized lifetime window and hand it to the metrics as
+    /// the wall span (so FPS is over the stream's own presence, not the
+    /// whole run). Rejected streams keep a zero lifetime.
+    pub fn close(&mut self, end_ms: f64) {
+        let start = self.arrival_ms.min(end_ms);
+        let stop = self.departure_ms.unwrap_or(end_ms).min(end_ms);
+        self.lifetime_s = if self.admitted { ((stop - start) / 1e3).max(0.0) } else { 0.0 };
+        self.metrics.set_wall(Duration::from_secs_f64(self.lifetime_s));
     }
 
     /// Frames that finished execution (timely or late).
@@ -62,33 +161,60 @@ impl StreamStats {
         self.metrics.deadline_misses as u64
     }
 
-    /// Median completion latency in ms.
+    /// Median completion latency in ms; 0.0 for a stream that never
+    /// completed a frame (rejected, or churned out before finishing one).
     pub fn p50_ms(&self) -> f64 {
         percentile(&self.metrics.latency_ms, 50.0)
     }
 
-    /// 99th-percentile completion latency in ms.
+    /// 99th-percentile completion latency in ms; 0.0 with no completions.
     pub fn p99_ms(&self) -> f64 {
         percentile(&self.metrics.latency_ms, 99.0)
     }
 
-    /// Deadline misses over released frames.
+    /// Deadline misses over released frames; 0.0 when nothing was
+    /// released (short-lived churned streams hit this constantly).
     pub fn miss_rate(&self) -> f64 {
         ratio(self.missed(), self.released)
     }
 
-    /// Shed frames over released frames.
+    /// Shed frames over released frames; 0.0 when nothing was released.
     pub fn shed_rate(&self) -> f64 {
         ratio(self.shed, self.released)
+    }
+
+    /// The stream's presence window rendered for the report table:
+    /// `rejected` only for streams actually refused at arrival; a stream
+    /// whose arrival never fired inside the span shows `absent`; a
+    /// scripted departure that lies beyond the simulated span did not
+    /// actually happen, so the stream renders as present to the end.
+    fn window_label(&self) -> String {
+        if self.refused {
+            return "rejected".into();
+        }
+        if !self.admitted {
+            return "absent".into();
+        }
+        // Realized end of presence (close() clamped it to the run).
+        let stop_ms = self.arrival_ms + self.lifetime_s * 1e3;
+        match self.departure_ms {
+            Some(d) if d <= stop_ms + 1e-9 => {
+                format!("{:.1}-{:.1}s", self.arrival_ms / 1e3, d / 1e3)
+            }
+            _ => format!("{:.1}s-end", self.arrival_ms / 1e3),
+        }
     }
 }
 
 /// Result of one fleet simulation.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
-    /// Per-admitted-stream statistics.
+    /// Name of the scenario that was served.
+    pub scenario: String,
+    /// Per-scripted-stream statistics (admitted and rejected alike), in
+    /// scenario script order.
     pub per_stream: Vec<StreamStats>,
-    /// Streams refused at admission control.
+    /// Streams refused at their arrival event.
     pub rejected: usize,
     /// Chips in the pool.
     pub chips: usize,
@@ -108,6 +234,11 @@ pub struct FleetReport {
 }
 
 impl FleetReport {
+    /// Streams admitted at their arrival event.
+    pub fn admitted(&self) -> usize {
+        self.per_stream.iter().filter(|s| s.admitted).count()
+    }
+
     /// Frames released across all streams.
     pub fn released(&self) -> u64 {
         self.per_stream.iter().map(|s| s.released).sum()
@@ -158,14 +289,16 @@ impl FleetReport {
         self.aggregate_percentile_ms(99.0)
     }
 
-    /// Order-sensitive FNV-1a digest of everything observable per stream:
-    /// spec, priced frame cost (cycles, DRAM bytes, and every burst-
-    /// profile weight — the demand shape the arbiter scheduled),
-    /// release/shed counters, completion count, deadline misses and the
-    /// *bit pattern* of every recorded latency sample, in recording
-    /// order. Two reports digest equal iff their per-stream statistics
-    /// are byte-identical — this is the oracle the parallel-vs-serial
-    /// identity tests and the bench workload fingerprints rest on.
+    /// Order-sensitive FNV-1a digest of everything observable per
+    /// stream: spec, priced frame cost (cycles, DRAM bytes, and every
+    /// burst-profile weight — the demand shape the arbiter scheduled),
+    /// cost provenance (model, network hash, plan shape), the admission
+    /// outcome and lifetime window, release/shed counters, completion
+    /// count, deadline misses and the *bit pattern* of every recorded
+    /// latency sample, in recording order. Two reports digest equal iff
+    /// their per-stream statistics are byte-identical — this is the
+    /// oracle the parallel-vs-serial identity tests and the bench
+    /// workload fingerprints rest on.
     pub fn stats_digest(&self) -> u64 {
         let mut words: Vec<u64> = Vec::new();
         words.push(self.per_stream.len() as u64);
@@ -178,6 +311,12 @@ impl FleetReport {
             words.push(s.cost.compute_cycles);
             words.push(s.cost.dram_bytes);
             words.extend(s.cost.profile.digest_words());
+            words.extend(s.provenance.digest_words());
+            words.push(u64::from(s.admitted));
+            words.push(u64::from(s.refused));
+            words.push(s.arrival_ms.to_bits());
+            words.push(s.departure_ms.map_or(u64::MAX, f64::to_bits));
+            words.push(s.lifetime_s.to_bits());
             words.push(s.released);
             words.push(s.shed);
             words.push(s.metrics.frames as u64);
@@ -190,13 +329,73 @@ impl FleetReport {
         words.push(self.chip_utilization.to_bits());
         fnv1a(words)
     }
+
+    /// The report as deterministic JSON (sorted object keys, virtual
+    /// metrics only — no wall clock anywhere), including the stats
+    /// digest. Two runs of the same config serialize byte-identically;
+    /// the CI scenario-determinism job diffs exactly this.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("scenario", Json::Str(self.scenario.clone()))
+            .set("chips", Json::Num(self.chips as f64))
+            .set("bus_mbps", Json::Num(self.bus_mbps))
+            .set("wall_s", Json::Num(self.wall_s))
+            .set("admitted", Json::Num(self.admitted() as f64))
+            .set("rejected", Json::Num(self.rejected as f64))
+            .set("released", Json::Num(self.released() as f64))
+            .set("completed", Json::Num(self.completed() as f64))
+            .set("missed", Json::Num(self.missed() as f64))
+            .set("shed", Json::Num(self.shed() as f64))
+            .set("bus_utilization", Json::Num(self.bus_utilization))
+            .set("bus_saturation", Json::Num(self.bus_saturation))
+            .set("bus_peak_demand", Json::Num(self.bus_peak_demand))
+            .set("chip_utilization", Json::Num(self.chip_utilization))
+            .set("p99_ms", Json::Num(self.aggregate_p99_ms()))
+            .set("stats_digest", Json::Str(format!("{:#018x}", self.stats_digest())));
+        let streams = self
+            .per_stream
+            .iter()
+            .map(|s| {
+                let mut so = Json::obj();
+                so.set("model", Json::Str(s.provenance.model.name().into()))
+                    .set("net_hash", Json::Str(format!("{:#018x}", s.provenance.net_hash)))
+                    .set("planner", Json::Str(s.provenance.planner.name().into()))
+                    .set("plan_groups", Json::Num(s.provenance.groups as f64))
+                    .set("plan_feat_bytes", Json::Num(s.provenance.feat_bytes as f64))
+                    .set("height", Json::Num(f64::from(s.spec.hw.0)))
+                    .set("width", Json::Num(f64::from(s.spec.hw.1)))
+                    .set("fps", Json::Num(s.spec.target_fps))
+                    .set("qos", Json::Str(s.spec.qos.name().into()))
+                    .set("arrival_ms", Json::Num(s.arrival_ms))
+                    .set(
+                        "departure_ms",
+                        s.departure_ms.map_or(Json::Null, Json::Num),
+                    )
+                    .set("admitted", Json::Bool(s.admitted))
+                    .set("refused", Json::Bool(s.refused))
+                    .set("lifetime_s", Json::Num(s.lifetime_s))
+                    .set("released", Json::Num(s.released as f64))
+                    .set("completed", Json::Num(s.completed() as f64))
+                    .set("missed", Json::Num(s.missed() as f64))
+                    .set("shed", Json::Num(s.shed as f64))
+                    .set("p50_ms", Json::Num(s.p50_ms()))
+                    .set("p99_ms", Json::Num(s.p99_ms()));
+                so
+            })
+            .collect();
+        o.set("per_stream", Json::Arr(streams));
+        o
+    }
 }
 
 impl fmt::Display for FleetReport {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(
             f,
-            "fleet: {} streams admitted ({} rejected), {} chips, bus {:.0} MB/s, {:.1} s simulated",
+            "fleet[{}]: {}/{} streams admitted ({} rejected), {} chips, bus {:.0} MB/s, \
+             {:.1} s simulated",
+            self.scenario,
+            self.admitted(),
             self.per_stream.len(),
             self.rejected,
             self.chips,
@@ -205,17 +404,21 @@ impl fmt::Display for FleetReport {
         )?;
         writeln!(
             f,
-            "  id  resolution   fps  qos     released  done  p50 ms   p99 ms  miss%  shed%"
+            "  id  model                resolution   fps  qos     window      released  done  \
+             p50 ms   p99 ms  miss%  shed%"
         )?;
         for (i, s) in self.per_stream.iter().enumerate() {
             writeln!(
                 f,
-                "{:>4}  {:>4}x{:<4}  {:>4.0}  {:<7} {:>7} {:>6}  {:>6.1}  {:>7.1}  {:>5.1}  {:>5.1}",
+                "{:>4}  {:<19} {:>4}x{:<4}  {:>4.0}  {:<7} {:<11} {:>7} {:>6}  {:>6.1}  \
+                 {:>7.1}  {:>5.1}  {:>5.1}",
                 i,
+                s.provenance.model.name(),
                 s.spec.hw.1,
                 s.spec.hw.0,
                 s.spec.target_fps,
                 s.spec.qos.name(),
+                s.window_label(),
                 s.released,
                 s.completed(),
                 s.p50_ms(),
@@ -248,14 +451,81 @@ mod tests {
         StreamStats::new(
             StreamSpec { hw: (720, 1280), target_fps: 30.0, qos: QosClass::Gold },
             FrameCost::flat(1_000_000, 2_000_000),
+            CostProvenance::synthetic(ModelId::Deployed),
+            0.0,
+            None,
         )
     }
 
+    /// Satellite pin: a stream that never completed a frame (or never
+    /// released one) must report clean zeros, not NaN — churned streams
+    /// hit these paths constantly.
     #[test]
-    fn rates_guard_zero_released() {
+    fn empty_sample_stats_are_zero_not_nan() {
         let s = stats();
+        assert_eq!(s.p50_ms(), 0.0);
+        assert_eq!(s.p99_ms(), 0.0);
         assert_eq!(s.miss_rate(), 0.0);
         assert_eq!(s.shed_rate(), 0.0);
+        assert_eq!(s.completed(), 0);
+    }
+
+    /// Satellite pin: zero released frames with nonzero shed counters
+    /// cannot happen, but zero released with zero everything must stay
+    /// finite through every aggregate too.
+    #[test]
+    fn aggregates_over_empty_streams_stay_finite() {
+        let mut a = stats();
+        a.close(1000.0); // never admitted: zero lifetime
+        let r = FleetReport {
+            scenario: "test".into(),
+            per_stream: vec![a],
+            rejected: 1,
+            chips: 4,
+            bus_mbps: 585.0,
+            bus_utilization: 0.0,
+            bus_saturation: 0.0,
+            bus_peak_demand: 0.0,
+            chip_utilization: 0.0,
+            wall_s: 1.0,
+        };
+        assert_eq!(r.admitted(), 0);
+        assert_eq!(r.miss_rate(), 0.0);
+        assert_eq!(r.shed_rate(), 0.0);
+        assert_eq!(r.loss_rate(), 0.0);
+        assert_eq!(r.aggregate_p99_ms(), 0.0);
+        assert!(r.to_string().contains("rejected"));
+    }
+
+    /// `rejected` is reserved for streams actually refused at arrival;
+    /// a stream whose arrival never fired shows `absent` — the report
+    /// must not contradict its own rejected counter.
+    #[test]
+    fn window_labels_distinguish_refused_from_absent() {
+        let mut refused = stats();
+        refused.refused = true;
+        assert_eq!(refused.window_label(), "rejected");
+
+        let absent = stats(); // neither admitted nor refused
+        assert_eq!(absent.window_label(), "absent");
+
+        let mut live = stats();
+        live.admitted = true;
+        live.close(1000.0);
+        assert!(live.window_label().ends_with("-end"));
+
+        // A scripted departure inside the run shows the real window...
+        let mut churned = stats();
+        churned.admitted = true;
+        churned.departure_ms = Some(600.0);
+        churned.close(1000.0);
+        assert_eq!(churned.window_label(), "0.0-0.6s");
+        // ...but one beyond the span never happened: present to the end.
+        let mut overlong = stats();
+        overlong.admitted = true;
+        overlong.departure_ms = Some(2600.0);
+        overlong.close(1000.0);
+        assert!(overlong.window_label().ends_with("-end"));
     }
 
     #[test]
@@ -271,12 +541,40 @@ mod tests {
     }
 
     #[test]
+    fn lifetime_windows_follow_the_script() {
+        let mut whole_run = stats();
+        whole_run.admitted = true;
+        whole_run.close(2000.0);
+        assert!((whole_run.lifetime_s - 2.0).abs() < 1e-9);
+
+        let mut churned = stats();
+        churned.admitted = true;
+        churned.arrival_ms = 500.0;
+        churned.departure_ms = Some(1500.0);
+        churned.close(2000.0);
+        assert!((churned.lifetime_s - 1.0).abs() < 1e-9);
+
+        let mut late = stats();
+        late.admitted = true;
+        late.arrival_ms = 1500.0;
+        late.close(2000.0);
+        assert!((late.lifetime_s - 0.5).abs() < 1e-9);
+
+        let mut rejected = stats();
+        rejected.close(2000.0);
+        assert_eq!(rejected.lifetime_s, 0.0);
+    }
+
+    #[test]
     fn report_aggregates_and_displays() {
         let mut a = stats();
+        a.admitted = true;
         a.released = 10;
         a.shed = 2;
         a.record_completion(5.0, 66.6);
+        a.close(1000.0);
         let r = FleetReport {
+            scenario: "steady-hd".into(),
             per_stream: vec![a],
             rejected: 1,
             chips: 4,
@@ -289,9 +587,65 @@ mod tests {
         };
         assert_eq!(r.released(), 10);
         assert_eq!(r.shed(), 2);
+        assert_eq!(r.admitted(), 1);
         assert!((r.shed_rate() - 0.2).abs() < 1e-9);
         let text = r.to_string();
         assert!(text.contains("bus util"));
         assert!(text.contains("1 rejected"));
+        assert!(text.contains("steady-hd"));
+        assert!(text.contains("rc"), "model column shows the priced network");
+    }
+
+    #[test]
+    fn json_is_deterministic_and_carries_provenance() {
+        let mut a = stats();
+        a.admitted = true;
+        a.record_completion(5.0, 66.6);
+        a.close(1000.0);
+        let r = FleetReport {
+            scenario: "mixed-zoo".into(),
+            per_stream: vec![a],
+            rejected: 0,
+            chips: 2,
+            bus_mbps: 1170.0,
+            bus_utilization: 0.5,
+            bus_saturation: 0.0,
+            bus_peak_demand: 0.8,
+            chip_utilization: 0.25,
+            wall_s: 1.0,
+        };
+        let x = r.to_json().to_string();
+        let y = r.to_json().to_string();
+        assert_eq!(x, y);
+        assert!(x.contains("\"stats_digest\""));
+        assert!(x.contains("\"model\":\"rc\""));
+        assert!(x.contains("\"planner\":\"optimal-dp\""));
+    }
+
+    #[test]
+    fn digest_covers_provenance_and_window() {
+        let base = stats();
+        let r = |s: StreamStats| FleetReport {
+            scenario: "t".into(),
+            per_stream: vec![s],
+            rejected: 0,
+            chips: 1,
+            bus_mbps: 585.0,
+            bus_utilization: 0.0,
+            bus_saturation: 0.0,
+            bus_peak_demand: 0.0,
+            chip_utilization: 0.0,
+            wall_s: 1.0,
+        };
+        let d0 = r(base.clone()).stats_digest();
+        let mut other_model = base.clone();
+        other_model.provenance.net_hash = 7;
+        assert_ne!(d0, r(other_model).stats_digest());
+        let mut other_window = base.clone();
+        other_window.departure_ms = Some(100.0);
+        assert_ne!(d0, r(other_window).stats_digest());
+        let mut admitted = base;
+        admitted.admitted = true;
+        assert_ne!(d0, r(admitted).stats_digest());
     }
 }

@@ -3,12 +3,18 @@
 //!
 //! A stream does not carry pixels — the fleet simulator schedules *cost*,
 //! not content. Each frame of a stream costs the same compute cycles and
-//! DRAM bytes (derived once from the stream-resolution
-//! [`ExecutionTrace`](crate::trace::ExecutionTrace), which also supplies
-//! the frame's [`BurstProfile`](crate::trace::BurstProfile) — the
-//! temporal shape the bus arbiter schedules against), which is exactly
-//! the property the paper's fixed per-frame traffic budget (585 MB/s at
-//! HD30) rests on.
+//! DRAM bytes (derived once from the stream's own model at the stream's
+//! resolution via its [`ExecutionTrace`](crate::trace::ExecutionTrace),
+//! which also supplies the frame's
+//! [`BurstProfile`](crate::trace::BurstProfile) — the temporal shape the
+//! bus arbiter schedules against), which is exactly the property the
+//! paper's fixed per-frame traffic budget (585 MB/s at HD30) rests on.
+//!
+//! Under a [`Scenario`](super::Scenario) a stream is only *live* inside
+//! its scripted arrival/departure window: [`Stream::active`] is flipped
+//! by the engines as the timeline's admission events fire, and
+//! [`Stream::release_due`] releases nothing while the stream is absent
+//! (or was refused admission).
 
 pub use crate::trace::FrameCost;
 
@@ -56,6 +62,12 @@ impl StreamSpec {
         1e3 / self.target_fps
     }
 
+    /// Input pixels per frame — the quantity chip capability bounds
+    /// ([`super::ChipSpec::max_pixels`]) are compared against.
+    pub fn pixels(&self) -> u64 {
+        u64::from(self.hw.0) * u64::from(self.hw.1)
+    }
+
     /// Relative deadline: two frame periods. One period of slack mirrors
     /// the chip's ping-pong double buffering — a frame finishing within
     /// the *next* period still keeps the output pipeline full; later than
@@ -85,7 +97,7 @@ impl StreamSpec {
 /// One released frame instance awaiting dispatch or execution.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FrameTask {
-    /// Index of the owning stream in the admitted set.
+    /// Index of the owning stream in the scenario's script.
     pub stream: usize,
     /// Frame sequence number within the stream.
     pub seq: u64,
@@ -93,6 +105,9 @@ pub struct FrameTask {
     pub release_ms: f64,
     /// Absolute deadline (ms): release + the stream's relative deadline.
     pub deadline_ms: f64,
+    /// Input pixels — dispatch only offers the frame to chips whose
+    /// capability bound covers it.
+    pub pixels: u64,
     /// Per-frame execution cost.
     pub cost: FrameCost,
     /// QoS tier inherited from the stream.
@@ -102,12 +117,16 @@ pub struct FrameTask {
 /// Live per-stream state inside the simulator.
 #[derive(Debug, Clone)]
 pub struct Stream {
-    /// Index in the admitted set.
+    /// Index in the scenario's script.
     pub id: usize,
     /// Operating point.
     pub spec: StreamSpec,
-    /// Per-frame cost at the stream's resolution.
+    /// Per-frame cost at the stream's model and resolution.
     pub cost: FrameCost,
+    /// Whether the stream is currently live (arrived, admitted, and not
+    /// yet departed). Inactive streams release nothing; the engines flip
+    /// this as the scenario timeline's events fire.
+    pub active: bool,
     /// Virtual time (ms) of the next frame release.
     pub next_release_ms: f64,
     /// Frames released so far.
@@ -115,27 +134,43 @@ pub struct Stream {
 }
 
 impl Stream {
-    /// A stream starts at a seeded phase offset within its first period,
-    /// so a fleet of same-rate cameras does not release in lockstep.
-    pub fn new(id: usize, spec: StreamSpec, cost: FrameCost, rng: &mut Rng) -> Self {
+    /// A stream scripted to arrive at `arrival_ms`, starting *inactive*
+    /// (activation is the engine's admission decision). The first release
+    /// lands at a seeded phase offset within the first period after
+    /// arrival, so a fleet of same-rate cameras does not release in
+    /// lockstep.
+    pub fn new(
+        id: usize,
+        spec: StreamSpec,
+        cost: FrameCost,
+        arrival_ms: f64,
+        rng: &mut Rng,
+    ) -> Self {
         Stream {
             id,
             spec,
             cost,
-            next_release_ms: rng.f64() * spec.period_ms(),
+            active: false,
+            next_release_ms: arrival_ms + rng.f64() * spec.period_ms(),
             frames_released: 0,
         }
     }
 
-    /// Release every frame due at or before `now_ms`.
+    /// Release every frame due at or before `now_ms`. An inactive stream
+    /// (not yet arrived, refused admission, or departed) releases
+    /// nothing and does not advance.
     pub fn release_due(&mut self, now_ms: f64) -> Vec<FrameTask> {
         let mut out = Vec::new();
+        if !self.active {
+            return out;
+        }
         while self.next_release_ms <= now_ms {
             out.push(FrameTask {
                 stream: self.id,
                 seq: self.frames_released,
                 release_ms: self.next_release_ms,
                 deadline_ms: self.next_release_ms + self.spec.deadline_ms(),
+                pixels: self.spec.pixels(),
                 cost: self.cost,
                 qos: self.spec.qos,
             });
@@ -177,6 +212,7 @@ mod tests {
         let s = spec();
         assert!((s.period_ms() - 33.333).abs() < 0.01);
         assert!((s.deadline_ms() - 66.666).abs() < 0.01);
+        assert_eq!(s.pixels(), 1280 * 720);
     }
 
     #[test]
@@ -191,13 +227,15 @@ mod tests {
     #[test]
     fn releases_one_frame_per_period() {
         let mut rng = Rng::new(3);
-        let mut s = Stream::new(0, spec(), COST, &mut rng);
+        let mut s = Stream::new(0, spec(), COST, 0.0, &mut rng);
+        s.active = true;
         let mut total = 0usize;
         for t in 0..1000 {
             let released = s.release_due(t as f64);
             for (k, f) in released.iter().enumerate() {
                 assert_eq!(f.seq, (total + k) as u64);
                 assert!((f.deadline_ms - f.release_ms - s.spec.deadline_ms()).abs() < 1e-9);
+                assert_eq!(f.pixels, s.spec.pixels());
             }
             total += released.len();
         }
@@ -206,9 +244,31 @@ mod tests {
     }
 
     #[test]
+    fn inactive_stream_releases_nothing() {
+        let mut rng = Rng::new(3);
+        let mut s = Stream::new(0, spec(), COST, 0.0, &mut rng);
+        assert!(s.release_due(500.0).is_empty(), "inactive by construction");
+        assert_eq!(s.frames_released, 0);
+        // Activation (admission) starts the flow; deactivation (a
+        // scripted departure) stops it without losing position.
+        s.active = true;
+        assert!(!s.release_due(500.0).is_empty());
+        s.active = false;
+        assert!(s.release_due(1000.0).is_empty());
+    }
+
+    #[test]
+    fn late_arrival_release_phase_follows_arrival() {
+        let mut rng = Rng::new(3);
+        let s = Stream::new(0, spec(), COST, 750.0, &mut rng);
+        assert!(s.next_release_ms >= 750.0);
+        assert!(s.next_release_ms < 750.0 + s.spec.period_ms());
+    }
+
+    #[test]
     fn demand_math() {
         let mut rng = Rng::new(3);
-        let s = Stream::new(0, spec(), COST, &mut rng);
+        let s = Stream::new(0, spec(), COST, 0.0, &mut rng);
         assert!((s.bus_demand_bytes_per_s() - 60e6).abs() < 1e-6);
         assert!((s.compute_demand_cycles_per_s() - 30e6).abs() < 1e-6);
     }

@@ -1,13 +1,21 @@
 //! Integration tests over the fleet-serving subsystem: determinism,
-//! admission control, and the headline property — shrinking the shared
-//! DRAM-bus budget can only degrade service (more sheds / misses).
+//! admission control, input validation, and the headline property —
+//! shrinking the shared DRAM-bus budget can only degrade service (more
+//! sheds / misses).
 
 use rcnet_dla::serve::{
-    run_fleet, run_fleet_with, AdmissionPolicy, FleetConfig, FleetReport, QosClass, StreamSpec,
+    run_fleet, run_fleet_with, AdmissionPolicy, FleetConfig, FleetReport, QosClass, Scenario,
+    StreamSpec,
 };
 
 fn hd15(qos: QosClass) -> StreamSpec {
     StreamSpec { hw: (720, 1280), target_fps: 15.0, qos }
+}
+
+/// A config whose scenario provides a pool of `chips` paper chips; the
+/// stream list is supplied per test through [`run_fleet_with`].
+fn pool(chips: usize) -> FleetConfig {
+    FleetConfig::sampled(1, chips, 1)
 }
 
 fn loss(r: &FleetReport) -> f64 {
@@ -30,12 +38,10 @@ fn halving_bus_budget_monotonically_degrades() {
     let mut rates = Vec::new();
     for bus_mbps in [50_000.0, 1_000.0, 500.0, 250.0] {
         let cfg = FleetConfig {
-            streams: specs.len(),
-            chips: 6,
             bus_mbps,
             seconds: 2.0,
             admission: AdmissionPolicy::AdmitAll,
-            ..FleetConfig::default()
+            ..pool(6)
         };
         let r = run_fleet_with(&cfg, &specs).unwrap();
         assert!(r.released() > 0, "no frames released at {bus_mbps} MB/s");
@@ -53,13 +59,7 @@ fn halving_bus_budget_monotonically_degrades() {
 
 #[test]
 fn same_seed_same_report() {
-    let cfg = FleetConfig {
-        streams: 12,
-        chips: 4,
-        seconds: 1.0,
-        seed: 42,
-        ..FleetConfig::default()
-    };
+    let cfg = FleetConfig { seconds: 1.0, ..FleetConfig::sampled(12, 4, 42) };
     let a = run_fleet(&cfg).unwrap().to_string();
     let b = run_fleet(&cfg).unwrap().to_string();
     assert_eq!(a, b, "a seeded fleet run must be reproducible");
@@ -68,60 +68,104 @@ fn same_seed_same_report() {
 
 #[test]
 fn different_seeds_change_the_mix() {
-    let base = FleetConfig { streams: 12, chips: 4, seconds: 1.0, ..FleetConfig::default() };
-    let a = run_fleet(&FleetConfig { seed: 1, ..base }).unwrap().to_string();
-    let b = run_fleet(&FleetConfig { seed: 2, ..base }).unwrap().to_string();
+    let a = run_fleet(&FleetConfig { seconds: 1.0, ..FleetConfig::sampled(12, 4, 1) })
+        .unwrap()
+        .to_string();
+    let b = run_fleet(&FleetConfig { seconds: 1.0, ..FleetConfig::sampled(12, 4, 2) })
+        .unwrap()
+        .to_string();
     assert_ne!(a, b);
 }
 
 #[test]
 fn admission_rejects_everything_on_a_starved_bus() {
-    // 1 MB/s cannot carry a single HD15 stream at oversub 1.0.
+    // 1 MB/s cannot carry a single HD15 stream at oversub 1.0. Every
+    // scripted stream still appears in the report — as rejected.
     let specs = [hd15(QosClass::Gold); 4];
     let cfg = FleetConfig {
-        streams: specs.len(),
-        chips: 64,
         bus_mbps: 1.0,
         seconds: 0.5,
         admission: AdmissionPolicy::DemandLimit { oversub: 1.0 },
-        ..FleetConfig::default()
+        ..pool(64)
     };
     let r = run_fleet_with(&cfg, &specs).unwrap();
-    assert_eq!(r.per_stream.len(), 0);
+    assert_eq!(r.per_stream.len(), 4);
+    assert_eq!(r.admitted(), 0);
     assert_eq!(r.rejected, 4);
+    assert_eq!(r.released(), 0, "rejected streams release nothing");
 }
 
 #[test]
 fn admission_admits_under_ample_capacity() {
     let specs = [hd15(QosClass::Silver); 4];
     let cfg = FleetConfig {
-        streams: specs.len(),
-        chips: 64,
         bus_mbps: 100_000.0,
         seconds: 0.5,
         admission: AdmissionPolicy::DemandLimit { oversub: 1.0 },
-        ..FleetConfig::default()
+        ..pool(64)
     };
     let r = run_fleet_with(&cfg, &specs).unwrap();
-    assert_eq!(r.per_stream.len(), 4);
+    assert_eq!(r.admitted(), 4);
     assert_eq!(r.rejected, 0);
 }
 
 #[test]
 fn report_counts_are_consistent() {
     let cfg = FleetConfig {
-        streams: 8,
-        chips: 4,
         seconds: 1.0,
         admission: AdmissionPolicy::AdmitAll,
-        ..FleetConfig::default()
+        ..FleetConfig::sampled(8, 4, 1)
     };
     let r = run_fleet(&cfg).unwrap();
     assert_eq!(r.per_stream.len(), 8);
+    assert_eq!(r.admitted(), 8);
     // Completed + shed never exceeds released (the rest is in flight at
     // the end of the simulated span).
     assert!(r.completed() + r.shed() <= r.released());
     assert!(r.missed() <= r.completed());
     assert!(r.bus_utilization >= 0.0 && r.bus_utilization <= 1.0 + 1e-9);
     assert!(r.chip_utilization >= 0.0 && r.chip_utilization <= 1.0 + 1e-9);
+}
+
+/// Satellite pin: degenerate engine knobs and scenarios must come back
+/// as crate errors from `run_fleet` — not NaN reports or panics.
+#[test]
+fn run_fleet_validates_its_config() {
+    let good = FleetConfig { seconds: 0.5, ..FleetConfig::sampled(2, 2, 1) };
+    assert!(run_fleet(&good).is_ok());
+
+    for (what, bad) in [
+        ("tick_ms 0", FleetConfig { tick_ms: 0.0, ..good.clone() }),
+        ("seconds 0", FleetConfig { seconds: 0.0, ..good.clone() }),
+        ("bus 0", FleetConfig { bus_mbps: 0.0, ..good.clone() }),
+        ("queue_depth 0", FleetConfig { queue_depth: 0, ..good.clone() }),
+        ("max_ready 0", FleetConfig { max_ready_per_stream: 0, ..good.clone() }),
+        (
+            "oversub 0",
+            FleetConfig {
+                admission: AdmissionPolicy::DemandLimit { oversub: 0.0 },
+                ..good.clone()
+            },
+        ),
+        (
+            "zero chips",
+            FleetConfig {
+                scenario: Scenario { chips: Vec::new(), ..good.scenario.clone() },
+                ..good.clone()
+            },
+        ),
+        (
+            "zero streams",
+            FleetConfig {
+                scenario: Scenario { streams: Vec::new(), ..good.scenario.clone() },
+                ..good.clone()
+            },
+        ),
+    ] {
+        assert!(run_fleet(&bad).is_err(), "{what} must be rejected");
+    }
+
+    // The same guard covers explicit stream lists with bad specs.
+    let bad_spec = StreamSpec { hw: (720, 1280), target_fps: 0.0, qos: QosClass::Gold };
+    assert!(run_fleet_with(&good, &[bad_spec]).is_err(), "fps 0 must be rejected");
 }

@@ -3,6 +3,8 @@
 //! **byte-identical** per-stream statistics (p50/p99, miss/shed, every
 //! recorded latency bit) to the serial reference engine. This is the
 //! property every future "make the fleet faster" change is held to.
+//! (Scenario churn and heterogeneous pools are pinned separately in
+//! `tests/scenario_fleet.rs`.)
 
 use rcnet_dla::serve::{
     run_fleet, run_fleet_with, AdmissionPolicy, FleetConfig, FleetReport, QosClass, StreamSpec,
@@ -10,13 +12,10 @@ use rcnet_dla::serve::{
 
 fn cfg(seed: u64, threads: usize) -> FleetConfig {
     FleetConfig {
-        streams: 24,
-        chips: 6,
         bus_mbps: 2000.0,
         seconds: 1.0,
-        seed,
         threads,
-        ..FleetConfig::default()
+        ..FleetConfig::sampled(24, 6, seed)
     }
 }
 
@@ -66,15 +65,12 @@ fn identity_holds_under_contention_and_shedding() {
     // A starved bus forces expiry shedding, queue overflow and deadline
     // misses — the paths where a merge-order bug would first show up.
     let base = FleetConfig {
-        streams: 32,
-        chips: 4,
         bus_mbps: 100.0,
         seconds: 1.5,
-        seed: 3,
         admission: AdmissionPolicy::AdmitAll,
-        ..FleetConfig::default()
+        ..FleetConfig::sampled(32, 4, 3)
     };
-    let serial = run_fleet(&FleetConfig { threads: 1, ..base }).expect("serial run");
+    let serial = run_fleet(&FleetConfig { threads: 1, ..base.clone() }).expect("serial run");
     assert!(
         serial.shed() > 0 || serial.missed() > 0,
         "workload must actually contend to exercise the shed/miss paths"
@@ -91,15 +87,12 @@ fn identity_holds_when_bursts_saturate_the_bus() {
     // tick. The serial/parallel identity must survive it, and the report
     // must actually show burst saturation (averages would hide it).
     let base = FleetConfig {
-        streams: 24,
-        chips: 8,
         bus_mbps: 300.0,
         seconds: 1.5,
-        seed: 17,
         admission: AdmissionPolicy::AdmitAll,
-        ..FleetConfig::default()
+        ..FleetConfig::sampled(24, 8, 17)
     };
-    let serial = run_fleet(&FleetConfig { threads: 1, ..base }).expect("serial run");
+    let serial = run_fleet(&FleetConfig { threads: 1, ..base.clone() }).expect("serial run");
     assert!(
         serial.bus_saturation > 0.0,
         "a starved bus must show saturated ticks: {}",
@@ -121,16 +114,13 @@ fn identity_holds_for_explicit_uniform_stream_lists() {
     let specs =
         vec![StreamSpec { hw: (720, 1280), target_fps: 30.0, qos: QosClass::Silver }; 12];
     let base = FleetConfig {
-        streams: specs.len(),
-        chips: 4,
         bus_mbps: 1500.0,
         seconds: 1.0,
-        seed: 9,
         admission: AdmissionPolicy::AdmitAll,
-        ..FleetConfig::default()
+        ..FleetConfig::sampled(1, 4, 9)
     };
     let serial =
-        run_fleet_with(&FleetConfig { threads: 1, ..base }, &specs).expect("serial run");
+        run_fleet_with(&FleetConfig { threads: 1, ..base.clone() }, &specs).expect("serial run");
     let parallel =
         run_fleet_with(&FleetConfig { threads: 4, ..base }, &specs).expect("parallel run");
     assert_identical(&serial, &parallel, "uniform tie-heavy stream list");

@@ -1,0 +1,68 @@
+//! PlanCache under concurrent multi-network pricing — the regime the
+//! scenario fleet's setup now runs every time a mixed-model scenario is
+//! primed: several zoo models, each with a distinct
+//! `Network::structural_hash`, planned from scoped threads against one
+//! shared cache. Pins that entries never collide across models and that
+//! every thread's plan equals the serially-computed plan for its model.
+
+use std::sync::Arc;
+
+use rcnet_dla::config::ChipConfig;
+use rcnet_dla::fusion::FusionConfig;
+use rcnet_dla::model::zoo::plan_fixtures;
+use rcnet_dla::model::Network;
+use rcnet_dla::plan::{Plan, PlanCache, Planner};
+
+fn nets() -> Vec<Network> {
+    // Every zoo fixture: six structurally distinct networks.
+    plan_fixtures().into_iter().map(|f| (f.build)()).collect()
+}
+
+#[test]
+fn concurrent_multi_network_pricing_does_not_collide() {
+    let nets = nets();
+    let cfg = FusionConfig::paper_default();
+    let chip = ChipConfig::paper_chip();
+    let hw = (416, 416);
+
+    // Distinct structural hashes are the premise of multi-model caching.
+    let mut hashes: Vec<u64> = nets.iter().map(Network::structural_hash).collect();
+    hashes.sort_unstable();
+    hashes.dedup();
+    assert_eq!(hashes.len(), nets.len(), "zoo models must hash distinctly");
+
+    // Reference plans, computed serially in a private cache each.
+    let reference: Vec<Plan> =
+        nets.iter().map(|n| Planner::OptimalDp.plan(n, &cfg, &chip, hw)).collect();
+
+    // One shared cache, every model planned from its own thread — twice,
+    // so both the cold (plan outside lock, insert) and warm (shard read)
+    // paths run concurrently.
+    let cache = PlanCache::new();
+    for round in 0..2 {
+        let plans: Vec<Arc<Plan>> = std::thread::scope(|s| {
+            let handles: Vec<_> = nets
+                .iter()
+                .map(|n| {
+                    let (cfg, chip, cache) = (&cfg, &chip, &cache);
+                    s.spawn(move || cache.plan(n, cfg, chip, hw, Planner::OptimalDp))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("planning thread")).collect()
+        });
+        // No cross-model collisions: each thread got its own model's
+        // plan, byte-equal to the serial reference.
+        for ((plan, reference), net) in plans.iter().zip(&reference).zip(&nets) {
+            assert_eq!(plan.groups, reference.groups, "{} round {round}", net.name);
+            assert_eq!(plan.feat_bytes, reference.feat_bytes, "{} round {round}", net.name);
+            // The plan tiles the *right* network: group bounds cover its
+            // layer list exactly.
+            let last = plan.groups.last().expect("non-empty plan");
+            assert_eq!(last.end + 1, net.layers.len(), "{} round {round}", net.name);
+        }
+        // Exactly one entry per model, no matter how many threads raced.
+        assert_eq!(cache.len(), nets.len(), "round {round}");
+    }
+    // Second round was all warm hits.
+    assert!(cache.hits() >= nets.len() as u64);
+}

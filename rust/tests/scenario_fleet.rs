@@ -1,0 +1,299 @@
+//! Scenario acceptance pins: for every bundled preset — stream churn,
+//! per-stream models, heterogeneous chip pools — the serial and
+//! parallel engines produce byte-identical reports across seeds and
+//! thread counts; mixed-model scenarios price every stream from its own
+//! network's optimal-DP plan (witnessed by per-stream cost provenance);
+//! and churned streams' statistics window over their actual lifetimes.
+
+use rcnet_dla::config::ChipConfig;
+use rcnet_dla::plan::Planner;
+use rcnet_dla::serve::{
+    run_fleet, ChipSpec, FleetConfig, FleetReport, ModelId, QosClass, Scenario, StreamScript,
+    StreamSpec, PRESET_NAMES,
+};
+
+fn preset_cfg(name: &str, seed: u64, threads: usize) -> FleetConfig {
+    // 2 s spans rush-hour's whole churn window: every burst arrival
+    // (0.5-1.5 s) and the first departures (from 1.9 s) fire mid-run.
+    FleetConfig {
+        seconds: 2.0,
+        seed,
+        threads,
+        ..FleetConfig::new(Scenario::preset(name).expect("bundled preset"))
+    }
+}
+
+/// Byte-identity oracle shared with `tests/parallel_fleet.rs`: digest
+/// plus the human-facing text.
+fn assert_identical(a: &FleetReport, b: &FleetReport, what: &str) {
+    assert_eq!(a.stats_digest(), b.stats_digest(), "stats digest diverged: {what}");
+    assert_eq!(a.to_string(), b.to_string(), "report text diverged: {what}");
+    assert_eq!(
+        a.to_json().to_string(),
+        b.to_json().to_string(),
+        "json document diverged: {what}"
+    );
+}
+
+/// The headline acceptance pin: every bundled preset, >= 2 seeds,
+/// >= 3 parallel thread counts vs the serial reference — byte-identical,
+/// with churn firing mid-run.
+#[test]
+fn every_preset_is_byte_identical_across_seeds_and_thread_counts() {
+    for name in PRESET_NAMES {
+        for seed in [1u64, 7] {
+            let serial = run_fleet(&preset_cfg(name, seed, 1)).expect("serial run");
+            assert!(serial.released() > 0, "{name} seed {seed} released nothing");
+            for threads in [2usize, 3, 8] {
+                let parallel =
+                    run_fleet(&preset_cfg(name, seed, threads)).expect("parallel run");
+                assert_identical(
+                    &serial,
+                    &parallel,
+                    &format!("{name}, seed {seed}, {threads} threads"),
+                );
+            }
+        }
+    }
+}
+
+/// Churn actually happens mid-run and the books reflect it: rush-hour's
+/// burst streams arrive late, and its departing streams close with a
+/// lifetime shorter than the simulated span.
+#[test]
+fn rush_hour_churns_mid_run() {
+    let r = run_fleet(&preset_cfg("rush-hour", 1, 1)).expect("rush-hour run");
+    let late_admitted = r
+        .per_stream
+        .iter()
+        .filter(|s| s.arrival_ms > 0.0 && s.admitted)
+        .count();
+    assert!(late_admitted > 0, "some burst arrivals must be admitted online");
+    let departed: Vec<&rcnet_dla::serve::StreamStats> = r
+        .per_stream
+        .iter()
+        .filter(|s| s.admitted && s.departure_ms.is_some_and(|d| d < r.wall_s * 1e3))
+        .collect();
+    assert!(!departed.is_empty(), "departures must fire inside the 2 s span");
+    for s in &departed {
+        assert!(
+            s.lifetime_s < r.wall_s,
+            "a departed stream's lifetime ({}) must be shorter than the run ({})",
+            s.lifetime_s,
+            r.wall_s
+        );
+    }
+    // A steady stream's lifetime is the whole span.
+    let steady = r
+        .per_stream
+        .iter()
+        .find(|s| s.admitted && s.arrival_ms == 0.0 && s.departure_ms.is_none())
+        .expect("rush-hour has steady base streams");
+    assert!((steady.lifetime_s - r.wall_s).abs() < 1e-9);
+}
+
+/// The mixed-model acceptance pin: every stream in `mixed-zoo` is priced
+/// from its *own* network's optimal-DP plan. The report's per-stream
+/// cost provenance carries the network hash and the plan shape; both
+/// must match a plan recomputed directly from the stream's model.
+#[test]
+fn mixed_zoo_prices_each_stream_from_its_own_network() {
+    let r = run_fleet(&preset_cfg("mixed-zoo", 1, 1)).expect("mixed-zoo run");
+
+    // Four distinct networks were priced.
+    let mut hashes: Vec<u64> = r.per_stream.iter().map(|s| s.provenance.net_hash).collect();
+    hashes.sort_unstable();
+    hashes.dedup();
+    assert!(hashes.len() >= 4, "expected >= 4 distinct priced networks, got {hashes:?}");
+
+    let chip = ChipConfig::paper_chip();
+    let mut checked: Vec<(ModelId, (u32, u32))> = Vec::new();
+    for s in &r.per_stream {
+        assert_eq!(s.provenance.planner, Planner::OptimalDp);
+        assert!(s.provenance.groups > 0, "a priced plan has at least one group");
+        let point = (s.provenance.model, s.spec.hw);
+        if checked.contains(&point) {
+            continue; // one replan per distinct operating point
+        }
+        checked.push(point);
+        // Recompute the stream's plan from scratch from its own model:
+        // hash, group count and feature bytes must all agree.
+        let (net, fusion_cfg) = s.provenance.model.build().expect("model builds");
+        assert_eq!(s.provenance.net_hash, net.structural_hash(), "hash provenance");
+        let plan = Planner::OptimalDp.plan(&net, &fusion_cfg, &chip, s.spec.hw);
+        assert_eq!(
+            s.provenance.feat_bytes, plan.feat_bytes,
+            "{}: provenance must carry its own network's optimal-DP price",
+            s.provenance.model.name()
+        );
+        assert_eq!(s.provenance.groups, plan.groups.len() as u64);
+    }
+    assert!(checked.len() >= 4, "mixed-zoo spans >= 4 operating points");
+
+    // And the models are genuinely different operating points: the
+    // deployed 720p streams must not share a cost with the 416 zoo ones.
+    let rc = r
+        .per_stream
+        .iter()
+        .find(|s| s.provenance.model == ModelId::Deployed)
+        .expect("mixed-zoo has deployed streams");
+    let zoo = r
+        .per_stream
+        .iter()
+        .find(|s| s.provenance.model != ModelId::Deployed)
+        .expect("mixed-zoo has zoo streams");
+    assert_ne!(rc.cost, zoo.cost, "distinct models must price distinct frame costs");
+}
+
+/// Heterogeneous-pool pin: 1080p streams exceed the edge chips'
+/// capability bound yet still get served (by the uncapped chips), while
+/// the pool's capped chips carry smaller streams.
+#[test]
+fn hetero_pool_serves_beyond_edge_capability() {
+    let r = run_fleet(&preset_cfg("hetero-pool", 1, 1)).expect("hetero-pool run");
+    let hd1080: Vec<_> =
+        r.per_stream.iter().filter(|s| s.spec.hw == (1080, 1920)).collect();
+    assert!(!hd1080.is_empty(), "preset scripts 1080p streams");
+    for s in &hd1080 {
+        assert!(s.admitted, "1080p streams are servable by the uncapped chips");
+        assert!(
+            s.completed() > 0,
+            "1080p frames must complete despite the capped edge chips"
+        );
+    }
+}
+
+/// A pool of only capped chips cannot serve an oversized stream: the
+/// demand-limit policy rejects it at arrival (capability-aware
+/// admission), while smaller streams are admitted normally.
+#[test]
+fn capability_gap_rejects_unservable_streams() {
+    let scenario = Scenario {
+        name: "edge-only".into(),
+        chips: vec![ChipSpec::edge(); 4],
+        streams: vec![
+            StreamScript::steady(
+                StreamSpec { hw: (1080, 1920), target_fps: 15.0, qos: QosClass::Gold },
+                ModelId::Deployed,
+            ),
+            StreamScript::steady(
+                StreamSpec { hw: (416, 416), target_fps: 15.0, qos: QosClass::Silver },
+                ModelId::Deployed,
+            ),
+        ],
+    };
+    let cfg = FleetConfig { seconds: 1.0, ..FleetConfig::new(scenario) };
+    let r = run_fleet(&cfg).expect("edge-only run");
+    assert!(!r.per_stream[0].admitted, "no edge chip can serve 1080p");
+    assert!(r.per_stream[0].refused, "the unservable stream was refused, not absent");
+    assert!(r.per_stream[1].admitted, "416 fits the edge capability");
+    assert_eq!(r.rejected, 1);
+}
+
+/// Under `AdmitAll` an unservable stream IS admitted — but its frames
+/// must be shed at dispatch, never waited on: the servable streams
+/// behind it keep completing, and the engines stay byte-identical.
+#[test]
+fn admit_all_sheds_unservable_frames_without_starving_the_pool() {
+    use rcnet_dla::serve::AdmissionPolicy;
+    let mut streams = vec![StreamScript::steady(
+        // Gold 1080p: wins every EDF tie, so without the dispatch-time
+        // shed it would head-of-line block the whole pool.
+        StreamSpec { hw: (1080, 1920), target_fps: 30.0, qos: QosClass::Gold },
+        ModelId::Deployed,
+    )];
+    for _ in 0..4 {
+        streams.push(StreamScript::steady(
+            StreamSpec { hw: (416, 416), target_fps: 15.0, qos: QosClass::Silver },
+            ModelId::Deployed,
+        ));
+    }
+    let scenario =
+        Scenario { name: "edge-admit-all".into(), chips: vec![ChipSpec::edge(); 4], streams };
+    let cfg = FleetConfig {
+        seconds: 1.0,
+        admission: AdmissionPolicy::AdmitAll,
+        ..FleetConfig::new(scenario)
+    };
+    let serial = run_fleet(&FleetConfig { threads: 1, ..cfg.clone() }).expect("serial");
+    let parallel = run_fleet(&FleetConfig { threads: 3, ..cfg }).expect("parallel");
+    assert_identical(&serial, &parallel, "admit-all unservable");
+
+    let unservable = &serial.per_stream[0];
+    assert!(unservable.admitted, "AdmitAll admits even unservable streams");
+    assert!(unservable.released > 0);
+    assert_eq!(unservable.completed(), 0, "no chip can execute 1080p here");
+    // Every frame is shed (at dispatch or expiry) — up to a couple
+    // released in the final ticks may still sit in the ready queue.
+    assert!(
+        unservable.shed + 2 >= unservable.released,
+        "unservable frames must be shed, not accumulated: {} shed of {}",
+        unservable.shed,
+        unservable.released
+    );
+    for s in &serial.per_stream[1..] {
+        assert!(
+            s.completed() > 0,
+            "servable streams must not be starved by the unservable gold stream"
+        );
+    }
+}
+
+/// Satellite pin, end to end: a stream that arrives too late to finish
+/// anything — and one that departs before its first release — must
+/// report clean zero statistics (p50/p99 0.0, finite rates), and the
+/// engines must still agree byte-for-byte.
+#[test]
+fn short_lived_streams_have_clean_empty_stats() {
+    let spec = StreamSpec { hw: (416, 416), target_fps: 15.0, qos: QosClass::Silver };
+    let scenario = Scenario {
+        name: "blink".into(),
+        chips: vec![ChipSpec::paper(); 2],
+        streams: vec![
+            // Steady background so the run does real work.
+            StreamScript::steady(spec, ModelId::Deployed),
+            // Arrives 1 ms before the end: nothing can complete.
+            StreamScript {
+                spec,
+                model: ModelId::Deployed,
+                arrival_ms: 999.0,
+                departure_ms: None,
+            },
+            // Departs 1 ms after arriving: at most one release, likely none.
+            StreamScript {
+                spec,
+                model: ModelId::Deployed,
+                arrival_ms: 100.0,
+                departure_ms: Some(101.0),
+            },
+        ],
+    };
+    let cfg = FleetConfig { seconds: 1.0, ..FleetConfig::new(scenario) };
+    let serial = run_fleet(&FleetConfig { threads: 1, ..cfg.clone() }).expect("serial");
+    let parallel = run_fleet(&FleetConfig { threads: 3, ..cfg }).expect("parallel");
+    assert_identical(&serial, &parallel, "blink scenario");
+
+    for idx in [1usize, 2] {
+        let s = &serial.per_stream[idx];
+        assert!(s.admitted, "blink stream {idx} is admitted");
+        assert_eq!(s.completed(), 0, "blink stream {idx} completes nothing");
+        assert_eq!(s.p50_ms(), 0.0);
+        assert_eq!(s.p99_ms(), 0.0);
+        assert!(s.miss_rate().is_finite() && s.miss_rate() == 0.0);
+        assert!(s.shed_rate().is_finite());
+        assert!(s.lifetime_s >= 0.0 && s.lifetime_s < 0.01);
+    }
+    assert!(serial.per_stream[0].completed() > 0, "the steady stream does real work");
+}
+
+/// The JSON document is deterministic and carries the digest — the CI
+/// byte-diff in unit-test form.
+#[test]
+fn scenario_json_round_is_deterministic() {
+    let a = run_fleet(&preset_cfg("mixed-zoo", 1, 1)).expect("run a");
+    let b = run_fleet(&preset_cfg("mixed-zoo", 1, 1)).expect("run b");
+    let (ja, jb) = (a.to_json().to_string(), b.to_json().to_string());
+    assert_eq!(ja, jb, "same config, same document");
+    assert!(ja.contains("\"stats_digest\""));
+    assert!(ja.contains("\"model\":\"vgg16-converted\""));
+}
