@@ -4,12 +4,12 @@
 //! repo's own throughput a first-class, regression-gated artifact. It
 //! runs standardized workloads — fleet scaling over the parallel engine,
 //! planner DP-vs-greedy across the model zoo, fused vs layer-by-layer
-//! schedule simulation, phase-level trace construction, and the bundled
-//! scenario presets (churn, multi-model, heterogeneous pools) — and
-//! emits one JSON report per family (`BENCH_fleet.json`,
-//! `BENCH_planner.json`, `BENCH_trace.json`,
-//! `BENCH_serve_scenario.json`) that CI uploads and gates against the
-//! committed baselines at the repository root.
+//! schedule simulation, phase-level trace construction, the bundled
+//! scenario presets (churn, multi-model, heterogeneous pools), and the
+//! telemetry hub on-vs-off overhead — and emits one JSON report per
+//! family (`BENCH_fleet.json`, `BENCH_planner.json`, `BENCH_trace.json`,
+//! `BENCH_serve_scenario.json`, `BENCH_telemetry.json`) that CI uploads
+//! and gates against the committed baselines at the repository root.
 //!
 //! Every measurement separates two kinds of numbers:
 //!
@@ -33,7 +33,7 @@ mod workloads;
 
 pub use compare::{compare_reports, CompareOutcome, Regression};
 pub use workloads::{
-    fleet_report, planner_report, scenario_report, trace_report, BenchProfile,
+    fleet_report, planner_report, scenario_report, telemetry_report, trace_report, BenchProfile,
 };
 
 use std::path::Path;
@@ -115,8 +115,8 @@ impl Measurement {
 /// A full benchmark report: one workload family, one JSON file.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchReport {
-    /// Report family (`"fleet"`, `"planner"`, `"trace"` or
-    /// `"serve_scenario"`).
+    /// Report family (`"fleet"`, `"planner"`, `"trace"`,
+    /// `"serve_scenario"` or `"telemetry"`).
     pub kind: String,
     /// True when produced by the reduced `--quick` CI profile.
     pub quick: bool,

@@ -28,6 +28,11 @@
 //!   the scenario timeline machinery (online admission, capability
 //!   dispatch, per-model plan pricing) and every bench run doubles as a
 //!   churn determinism check.
+//! * **telemetry** ([`telemetry_report`]) — each profiled preset on the
+//!   serial engine with the metrics hub on vs off (the `--no-telemetry`
+//!   fast path), so the perf gate bounds the observability overhead and
+//!   every run proves the hub never perturbs the served outcome, plus
+//!   the fleet Chrome-trace serialization cost.
 //!
 //! Workload ids never encode anything machine-dependent (the resolved
 //!   `auto` worker count is recorded as an `info` metric instead), so
@@ -41,7 +46,8 @@ use crate::model::zoo::{plan_fixtures, yolov2_converted, PAPER_RESOLUTIONS};
 use crate::plan::{PlanCache, Planner};
 use crate::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
 use crate::serve::{
-    resolve_threads, AdmissionPolicy, FleetConfig, FleetReport, FleetSim, Scenario, PRESET_NAMES,
+    resolve_threads, AdmissionPolicy, FleetConfig, FleetReport, FleetSim, Scenario,
+    TelemetryConfig, PRESET_NAMES,
 };
 use crate::util::fnv1a;
 use crate::Result;
@@ -161,9 +167,12 @@ pub fn fleet_report(profile: BenchProfile) -> Result<BenchReport> {
         // The same seeded mixed-resolution scenario for both engines;
         // the paper's single-chip budget scales with the pool, so the
         // grid stays loaded instead of admission-starved.
+        // Hub off: the engine-throughput gate stays on the bare fast
+        // path, and the point fingerprints match the pre-telemetry pins.
         let cfg = FleetConfig {
             seconds,
             admission: AdmissionPolicy::AdmitAll,
+            telemetry: TelemetryConfig::off(),
             ..FleetConfig::sampled(streams, chips, 1)
         };
         let (seed, bus_mbps) = (cfg.seed, cfg.bus_mbps);
@@ -452,7 +461,13 @@ pub fn scenario_report(profile: BenchProfile) -> Result<BenchReport> {
     let mut rep = BenchReport::new("serve_scenario", profile == BenchProfile::Quick);
     let seconds = profile.scenario_seconds();
     for &name in profile.scenario_names() {
-        let base = FleetConfig { seconds, ..FleetConfig::new(Scenario::preset(name)?) };
+        // Hub off, as in the fleet family: fingerprints stay on the
+        // pre-telemetry pins; the telemetry family gates the hub cost.
+        let base = FleetConfig {
+            seconds,
+            telemetry: TelemetryConfig::off(),
+            ..FleetConfig::new(Scenario::preset(name)?)
+        };
         let serial_cfg = FleetConfig { threads: 1, ..base.clone() };
         let auto_cfg = FleetConfig { threads: 0, ..base };
 
@@ -520,6 +535,101 @@ pub fn scenario_report(profile: BenchProfile) -> Result<BenchReport> {
                 metrics: Vec::new(),
             });
         }
+    }
+    Ok(rep)
+}
+
+/// Run the telemetry workload family (see the module docs): each
+/// profiled preset on the serial engine with the metrics hub on and off,
+/// cross-checked (the hub must never change what was served), plus the
+/// fleet Chrome-trace serialization cost of the recorded telemetry.
+pub fn telemetry_report(profile: BenchProfile) -> Result<BenchReport> {
+    let mut rep = BenchReport::new("telemetry", profile == BenchProfile::Quick);
+    let seconds = profile.scenario_seconds();
+    let iters = profile.plan_iters();
+    for &name in profile.scenario_names() {
+        let base =
+            FleetConfig { seconds, threads: 1, ..FleetConfig::new(Scenario::preset(name)?) };
+        let off_cfg = FleetConfig { telemetry: TelemetryConfig::off(), ..base.clone() };
+
+        let sim = FleetSim::new(&base)?;
+        let (on, on_ms) = time_ms(|| {
+            let mut s = sim;
+            s.run()
+        });
+        let sim = FleetSim::new(&off_cfg)?;
+        let (off, off_ms) = time_ms(|| {
+            let mut s = sim;
+            s.run()
+        });
+
+        // The hub observes; it must never perturb the served outcome —
+        // stripping the telemetry from the hub-on report must reproduce
+        // the hub-off digest bit for bit (the `--no-telemetry` pin).
+        let mut stripped = on.clone();
+        stripped.telemetry = None;
+        if stripped.stats_digest() != off.stats_digest() {
+            crate::bail!("telemetry hub perturbed the served outcome on scenario {name}");
+        }
+        let tel = on.telemetry.as_ref().ok_or_else(|| crate::err!("hub-on run lost its hub"))?;
+
+        let point = format!("scenario={name}/sec={seconds}");
+        for (hub, wall_ms, r) in [("on", on_ms, &on), ("off", off_ms, &off)] {
+            let mut metrics = vec![Metric {
+                name: "virtual_throughput_fps".into(),
+                value: r.completed() as f64 / seconds,
+                better: Direction::Higher,
+            }];
+            if hub == "on" {
+                // Context only: a quotient of two single-shot wall times
+                // is machine noise — this measurement's own `wall_ms` is
+                // the gated channel that bounds the hub overhead.
+                metrics.push(Metric {
+                    name: "overhead_vs_off".into(),
+                    value: on_ms / off_ms.max(1e-9),
+                    better: Direction::Info,
+                });
+                for (metric, value) in [
+                    ("windows", tel.windows.len()),
+                    ("events", tel.events.len()),
+                    ("incidents", tel.incidents.len()),
+                ] {
+                    metrics.push(Metric {
+                        name: metric.into(),
+                        value: value as f64,
+                        better: Direction::Info,
+                    });
+                }
+            }
+            rep.measurements.push(Measurement {
+                id: format!("telemetry/{point}/hub={hub}"),
+                wall_ms,
+                fingerprint: fingerprint_hex([
+                    fnv1a(name.bytes().map(u64::from)),
+                    seconds.to_bits(),
+                    r.stats_digest(),
+                ]),
+                metrics,
+            });
+        }
+
+        // Chrome trace-event serialization of the recorded telemetry
+        // (the `fleet --telemetry` body), on the warm report.
+        let (doc, chrome_ms) = best_of_ms(iters, || {
+            let mut d = tel.to_chrome_json(name).to_string();
+            d.push('\n');
+            d
+        });
+        rep.measurements.push(Measurement {
+            id: format!("telemetry-chrome/{point}"),
+            wall_ms: chrome_ms,
+            fingerprint: fingerprint_hex([fnv1a(doc.bytes().map(u64::from))]),
+            metrics: vec![Metric {
+                name: "json_bytes".into(),
+                value: doc.len() as f64,
+                better: Direction::Info,
+            }],
+        });
     }
     Ok(rep)
 }

@@ -75,6 +75,14 @@
 //! engine across one worker per core ([`serve::parallel`]) with
 //! byte-identical output, churn included.
 //!
+//! Every fleet run also carries a deterministic observability layer
+//! ([`serve::telemetry`] over the [`obs`] metrics registry): windowed
+//! bus/chip/stream time series, a virtual-time event log exported as
+//! Chrome trace-event JSON (`fleet --telemetry out.json`), and typed
+//! incidents (sustained saturation, miss-rate spikes, starving streams)
+//! — byte-identical across engines, rendered by the `obs` subcommand,
+//! catalogued in `docs/OBSERVABILITY.md`.
+//!
 //! ```no_run
 //! use rcnet_dla::serve::{run_fleet, FleetConfig, Scenario};
 //!
@@ -102,7 +110,7 @@
 //! [`bench`] packages all of the above into deterministic, regression-
 //! gated performance workloads: `rcnet-dla bench --quick` emits
 //! `BENCH_fleet.json` / `BENCH_planner.json` / `BENCH_trace.json` /
-//! `BENCH_serve_scenario.json`, and `bench --against` exits nonzero
+//! `BENCH_serve_scenario.json` / `BENCH_telemetry.json`, and `bench --against` exits nonzero
 //! when a gated value regresses past tolerance (the CI perf-smoke job).
 //! See `docs/BENCHMARKS.md`.
 
@@ -119,6 +127,7 @@ pub mod report;
 pub mod runtime;
 pub mod energy;
 pub mod fusion;
+pub mod obs;
 pub mod plan;
 pub mod serve;
 pub mod tile;

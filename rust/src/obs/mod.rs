@@ -1,0 +1,357 @@
+//! Deterministic metrics primitives: integer counters, gauges and
+//! fixed-edge log-bucket histograms in a name-keyed registry.
+//!
+//! This is the value layer under the fleet's telemetry subsystem
+//! ([`crate::serve::telemetry`]): every quantity is a `u64` — counts,
+//! last-set gauge values, and per-bucket tallies over power-of-two edges
+//! — so a [`MetricsHub`] snapshot digests bit-for-bit into the fleet's
+//! [`stats_digest`](crate::serve::FleetReport::stats_digest) with no
+//! float tolerance anywhere, and two engines that observe the same
+//! virtual-time history produce byte-identical registries. The registry
+//! is an ordinary [`BTreeMap`], so iteration, JSON rendering and digest
+//! folding all walk names in one deterministic (sorted) order.
+//!
+//! The bucket layout is fixed at compile time ([`HIST_BUCKETS`] edges at
+//! `0, 1, 2, 4, 8, ...`): histograms from different runs are always
+//! bucket-compatible, which is what lets CI diff and gate them.
+
+use std::collections::BTreeMap;
+
+use crate::util::fnv1a;
+use crate::util::json::Json;
+
+/// Number of log-spaced buckets every [`Histogram`] carries.
+pub const HIST_BUCKETS: usize = 32;
+
+/// The bucket a value falls into: bucket 0 holds zero, bucket `i >= 1`
+/// holds `[2^(i-1), 2^i)`, and the last bucket absorbs everything at or
+/// above its lower edge.
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Inclusive lower edge of bucket `i` (`0, 1, 2, 4, 8, ...`).
+pub fn bucket_lo(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+/// A fixed-edge log-bucket histogram of `u64` samples. Integer counts
+/// only; the mean is recoverable from `sum / count`, and tails from the
+/// bucket counts — no stored floats, so it digests exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { counts: [0; HIST_BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all samples (saturating).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Largest sample seen (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// The per-bucket counts (see [`bucket_lo`] for the edges).
+    pub fn bucket_counts(&self) -> &[u64; HIST_BUCKETS] {
+        &self.counts
+    }
+
+    /// The histogram folded to digest words: count, sum, max, then every
+    /// bucket count in edge order.
+    pub fn digest_words(&self) -> impl Iterator<Item = u64> + '_ {
+        [self.count, self.sum, self.max].into_iter().chain(self.counts.iter().copied())
+    }
+
+    /// Deterministic JSON: totals plus the non-empty buckets as
+    /// `[lower_edge, count]` pairs in edge order.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                Json::Arr(vec![Json::Num(bucket_lo(i) as f64), Json::Num(c as f64)])
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("count", Json::Num(self.count as f64))
+            .set("sum", Json::Num(self.sum as f64))
+            .set("max", Json::Num(self.max as f64))
+            .set("buckets", Json::Arr(buckets));
+        o
+    }
+}
+
+/// One registered metric: a monotone counter, a last-value gauge, or a
+/// log-bucket [`Histogram`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetricValue {
+    /// Monotonically accumulated count.
+    Counter(u64),
+    /// Last value set.
+    Gauge(u64),
+    /// Distribution over the fixed log-bucket edges.
+    Histogram(Histogram),
+}
+
+impl MetricValue {
+    /// Stable kind name (`counter` / `gauge` / `histogram`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            MetricValue::Counter(_) => "counter",
+            MetricValue::Gauge(_) => "gauge",
+            MetricValue::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// A name-keyed registry of [`MetricValue`]s with deterministic (sorted)
+/// iteration, digesting and JSON rendering. Writing through a name whose
+/// registered kind differs replaces the entry — callers own their
+/// namespace, and the fleet's recorder uses fixed names throughout.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricsHub {
+    metrics: BTreeMap<String, MetricValue>,
+}
+
+impl MetricsHub {
+    /// An empty hub.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `by` to the counter `name` (registering it at zero first).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        match self.metrics.get_mut(name) {
+            Some(MetricValue::Counter(c)) => *c += by,
+            _ => {
+                self.metrics.insert(name.to_string(), MetricValue::Counter(by));
+            }
+        }
+    }
+
+    /// Set the gauge `name` to `v`.
+    pub fn set(&mut self, name: &str, v: u64) {
+        self.metrics.insert(name.to_string(), MetricValue::Gauge(v));
+    }
+
+    /// Record `v` into the histogram `name` (registering it empty first).
+    pub fn observe(&mut self, name: &str, v: u64) {
+        match self.metrics.get_mut(name) {
+            Some(MetricValue::Histogram(h)) => h.record(v),
+            _ => {
+                let mut h = Histogram::new();
+                h.record(v);
+                self.metrics.insert(name.to_string(), MetricValue::Histogram(h));
+            }
+        }
+    }
+
+    /// The counter `name`, or 0 when absent (or not a counter).
+    pub fn counter(&self, name: &str) -> u64 {
+        match self.metrics.get(name) {
+            Some(MetricValue::Counter(c)) => *c,
+            _ => 0,
+        }
+    }
+
+    /// The gauge `name`, if registered as one.
+    pub fn gauge(&self, name: &str) -> Option<u64> {
+        match self.metrics.get(name) {
+            Some(MetricValue::Gauge(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// The histogram `name`, if registered as one.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        match self.metrics.get(name) {
+            Some(MetricValue::Histogram(h)) => Some(h),
+            _ => None,
+        }
+    }
+
+    /// Every metric in sorted-name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &MetricValue)> {
+        self.metrics.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Number of registered metrics.
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    /// Whether nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    /// The whole registry folded to digest words, in sorted-name order:
+    /// per metric a name hash, a kind code, and the value words.
+    pub fn digest_words(&self) -> Vec<u64> {
+        let mut words = vec![self.metrics.len() as u64];
+        for (name, m) in &self.metrics {
+            words.push(fnv1a(name.bytes().map(u64::from)));
+            match m {
+                MetricValue::Counter(c) => words.extend([1, *c]),
+                MetricValue::Gauge(v) => words.extend([2, *v]),
+                MetricValue::Histogram(h) => {
+                    words.push(3);
+                    words.extend(h.digest_words());
+                }
+            }
+        }
+        words
+    }
+
+    /// Deterministic JSON: one object keyed by metric name, each entry
+    /// carrying its kind and value.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        for (name, m) in &self.metrics {
+            let mut e = Json::obj();
+            e.set("kind", Json::Str(m.kind().into()));
+            match m {
+                MetricValue::Counter(c) => {
+                    e.set("value", Json::Num(*c as f64));
+                }
+                MetricValue::Gauge(v) => {
+                    e.set("value", Json::Num(*v as f64));
+                }
+                MetricValue::Histogram(h) => {
+                    e.set("value", h.to_json());
+                }
+            }
+            o.set(name, e);
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_powers_of_two() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        // Every lower edge lands in its own bucket.
+        assert_eq!(bucket_of(bucket_lo(0)), 0);
+        for i in 1..HIST_BUCKETS {
+            assert_eq!(bucket_of(bucket_lo(i)), i);
+        }
+    }
+
+    #[test]
+    fn histogram_counts_and_totals() {
+        let mut h = Histogram::new();
+        for v in [0u64, 1, 1, 3, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1005);
+        assert_eq!(h.max(), 1000);
+        assert_eq!(h.bucket_counts()[0], 1);
+        assert_eq!(h.bucket_counts()[1], 2);
+        assert_eq!(h.bucket_counts()[2], 1);
+        assert_eq!(h.bucket_counts()[bucket_of(1000)], 1);
+    }
+
+    #[test]
+    fn hub_counter_gauge_histogram() {
+        let mut hub = MetricsHub::new();
+        hub.inc("a.count", 2);
+        hub.inc("a.count", 3);
+        hub.set("b.gauge", 7);
+        hub.set("b.gauge", 9);
+        hub.observe("c.hist", 4);
+        hub.observe("c.hist", 5);
+        assert_eq!(hub.counter("a.count"), 5);
+        assert_eq!(hub.gauge("b.gauge"), Some(9));
+        assert_eq!(hub.histogram("c.hist").unwrap().count(), 2);
+        assert_eq!(hub.counter("missing"), 0);
+        assert_eq!(hub.len(), 3);
+        // Iteration is sorted by name.
+        let names: Vec<&str> = hub.iter().map(|(n, _)| n).collect();
+        assert_eq!(names, ["a.count", "b.gauge", "c.hist"]);
+    }
+
+    #[test]
+    fn digest_is_order_free_and_value_sensitive() {
+        let mut a = MetricsHub::new();
+        a.inc("x", 1);
+        a.set("y", 2);
+        let mut b = MetricsHub::new();
+        b.set("y", 2);
+        b.inc("x", 1);
+        assert_eq!(a.digest_words(), b.digest_words(), "insertion order must not matter");
+        b.inc("x", 1);
+        assert_ne!(a.digest_words(), b.digest_words(), "values must matter");
+    }
+
+    #[test]
+    fn json_is_deterministic_and_parses() {
+        let mut hub = MetricsHub::new();
+        hub.inc("plan_cache.hits", 12);
+        hub.observe("frame.latency_us", 1500);
+        let a = hub.to_json().to_string();
+        let b = hub.to_json().to_string();
+        assert_eq!(a, b);
+        let doc = Json::parse(&a).expect("valid JSON");
+        assert_eq!(
+            doc.get("plan_cache.hits").and_then(|m| m.get("value")).and_then(Json::as_u64),
+            Some(12)
+        );
+        assert_eq!(
+            doc.get("frame.latency_us")
+                .and_then(|m| m.get("value"))
+                .and_then(|v| v.get("count"))
+                .and_then(Json::as_u64),
+            Some(1)
+        );
+    }
+}

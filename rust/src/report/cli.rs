@@ -15,11 +15,16 @@
 //!   `--scenario` picks a bundled preset — churn, multi-model,
 //!   heterogeneous pool — `--threads` selects the serial or
 //!   sharded-parallel engine, `--json` emits the deterministic report
-//!   document CI byte-diffs)
+//!   document CI byte-diffs, `--telemetry PATH` writes the run's
+//!   fleet-level Chrome trace + windowed series + incidents, and
+//!   `--no-telemetry` skips the hub entirely)
+//! * `obs`        — render a fleet run's telemetry series
+//!   ([`crate::serve::telemetry`]) as an aligned table or CSV
 //! * `bench`      — standardized performance workloads
 //!   ([`crate::bench`]): emits `BENCH_fleet.json` / `BENCH_planner.json`
-//!   / `BENCH_trace.json` / `BENCH_serve_scenario.json` and optionally
-//!   gates against a baseline (nonzero exit on regression)
+//!   / `BENCH_trace.json` / `BENCH_serve_scenario.json` /
+//!   `BENCH_telemetry.json` and optionally gates against a baseline
+//!   (nonzero exit on regression)
 //! * `serve`      — run the detection pipeline on synthetic frames
 //!   (requires `make artifacts` and the `pjrt` feature)
 
@@ -30,7 +35,7 @@ use crate::config::ChipConfig;
 use crate::dla::{simulate_fused, simulate_layer_by_layer, trace_fused, trace_layer_by_layer};
 use crate::energy::dram_energy_mj;
 use crate::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
-use crate::serve::{run_fleet, AdmissionPolicy, FleetConfig, Scenario};
+use crate::serve::{run_fleet, AdmissionPolicy, FleetConfig, Scenario, TelemetryConfig};
 use crate::traffic::TrafficModel;
 use crate::util::json::Json;
 use crate::Result;
@@ -82,6 +87,10 @@ USAGE:
                       [--seed K] [--oversub F | --admit-all]
                       [--planner greedy|optimal-dp] [--threads N]
                       [--json] [--out PATH]
+                      [--telemetry PATH | --no-telemetry] [--window-ms W]
+  rcnet-dla obs       [--scenario steady-hd|rush-hour|mixed-zoo|hetero-pool]
+                      [--seconds S] [--seed K] [--threads N] [--window-ms W]
+                      [--csv] [--out PATH]
   rcnet-dla bench     [--quick] [--out-dir DIR] [--against PATH]
                       [--tolerance F]
   rcnet-dla serve     [--manifest artifacts/manifest.json] [--frames N]
@@ -99,6 +108,13 @@ per core, N = N workers; output is byte-identical across engines.
 included) to stdout or --out (--out implies --json); CI byte-diffs two
 such runs. Preset scenarios fix their own pool, so --scenario rejects
 --streams/--chips.
+`fleet --telemetry PATH` writes the run's fleet-level Chrome trace-event
+document (one track per chip plus one for the bus, windowed series and
+incidents embedded — see docs/OBSERVABILITY.md); byte-identical across
+engines and repeated runs. `--no-telemetry` disables the metrics hub
+(the bench fast path); `--window-ms` sets the series window (default
+100 ms). `obs` runs a preset and renders the windowed series as an
+aligned table, or CSV under --csv.
 `bench --against` accepts a report file (BENCH_fleet.json) or a
 directory holding the committed baselines; exits nonzero on regression
 past --tolerance (default 0.15).
@@ -115,6 +131,7 @@ pub fn cli_main() -> Result<()> {
         Some("simulate") => simulate(&flags),
         Some("trace") => trace(&flags),
         Some("fleet") => fleet(&flags),
+        Some("obs") => obs(&flags),
         Some("bench") => bench(&flags),
         Some("serve") => serve(&flags),
         Some("ablation") => ablation(&flags),
@@ -415,7 +432,38 @@ fn fleet(flags: &HashMap<String, String>) -> Result<()> {
         cfg.planner = crate::plan::Planner::parse(s)
             .ok_or_else(|| crate::err!("unknown --planner {s} (greedy|optimal-dp)"))?;
     }
+    let trace_out = flags.get("telemetry").cloned();
+    if flags.contains_key("no-telemetry") {
+        if trace_out.is_some() {
+            crate::bail!("--telemetry conflicts with --no-telemetry");
+        }
+        cfg.telemetry = TelemetryConfig::off();
+    }
+    if let Some(v) = flags.get("window-ms").and_then(|s| s.parse().ok()) {
+        cfg.telemetry.window_ms = v;
+    }
     let report = run_fleet(&cfg)?;
+    if let Some(path) = trace_out {
+        let tel = report
+            .telemetry
+            .as_ref()
+            .ok_or_else(|| crate::err!("--telemetry requires the hub (internal)"))?;
+        let mut doc = tel.to_chrome_json(&report.scenario).to_string();
+        doc.push('\n');
+        if let Some(dir) = Path::new(&path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&path, doc)?;
+        eprintln!(
+            "fleet: wrote {path} ({} windows, {} events, {} incidents; open in \
+             chrome://tracing or Perfetto)",
+            tel.windows.len(),
+            tel.events.len(),
+            tel.incidents.len()
+        );
+    }
     // --out implies the JSON document (the table has no file form), so
     // `fleet --out report.json` never silently drops the file.
     if flags.contains_key("json") || flags.contains_key("out") {
@@ -437,6 +485,45 @@ fn fleet(flags: &HashMap<String, String>) -> Result<()> {
         }
     } else {
         println!("{report}");
+    }
+    Ok(())
+}
+
+/// `obs`: run a preset with the telemetry hub on and render the
+/// windowed series — the same numbers `fleet --telemetry` embeds in the
+/// Chrome document, as an aligned table (default) or CSV (`--csv`).
+fn obs(flags: &HashMap<String, String>) -> Result<()> {
+    let name = flags.get("scenario").map(String::as_str).unwrap_or("steady-hd");
+    let mut cfg = FleetConfig::new(Scenario::preset(name)?);
+    if let Some(v) = flags.get("seed").and_then(|s| s.parse().ok()) {
+        cfg.seed = v;
+    }
+    if let Some(v) = flags.get("seconds").and_then(|s| s.parse().ok()) {
+        cfg.seconds = v;
+    }
+    if let Some(v) = flags.get("threads").and_then(|s| s.parse().ok()) {
+        cfg.threads = v;
+    }
+    if let Some(v) = flags.get("window-ms").and_then(|s| s.parse().ok()) {
+        cfg.telemetry.window_ms = v;
+    }
+    let report = run_fleet(&cfg)?;
+    let tel = report
+        .telemetry
+        .as_ref()
+        .ok_or_else(|| crate::err!("obs runs with the hub enabled (internal)"))?;
+    let body = if flags.contains_key("csv") { tel.series_csv() } else { tel.series_table() };
+    match flags.get("out") {
+        Some(path) => {
+            if let Some(dir) = Path::new(path).parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            std::fs::write(path, body)?;
+            eprintln!("obs: wrote {path}");
+        }
+        None => print!("{body}"),
     }
     Ok(())
 }
@@ -464,8 +551,8 @@ fn load_baseline(against: &str, kind: &str) -> Result<Option<crate::bench::Bench
 
 fn bench(flags: &HashMap<String, String>) -> Result<()> {
     use crate::bench::{
-        compare_reports, fleet_report, planner_report, scenario_report, trace_report,
-        BenchProfile,
+        compare_reports, fleet_report, planner_report, scenario_report, telemetry_report,
+        trace_report, BenchProfile,
     };
 
     let profile =
@@ -482,13 +569,15 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     let trace = trace_report(profile)?;
     eprintln!("bench: running the {} scenario workloads...", profile.name());
     let scenario = scenario_report(profile)?;
+    eprintln!("bench: running the {} telemetry workloads...", profile.name());
+    let telemetry = telemetry_report(profile)?;
 
     let mut t = crate::report::tables::TableBuilder::new(&format!(
         "bench ({} profile) — wall times; deterministic metrics in the JSON",
         profile.name()
     ))
     .header(&["workload", "wall (ms)"]);
-    for rep in [&fleet, &planner, &trace, &scenario] {
+    for rep in [&fleet, &planner, &trace, &scenario, &telemetry] {
         for m in &rep.measurements {
             t.row(vec![m.id.clone(), format!("{:.3}", m.wall_ms)]);
         }
@@ -503,7 +592,7 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     let mut broken_baselines = Vec::new();
     let mut matched_baselines = 0usize;
     if let Some(against) = flags.get("against") {
-        for rep in [&fleet, &planner, &trace, &scenario] {
+        for rep in [&fleet, &planner, &trace, &scenario, &telemetry] {
             match load_baseline(against, &rep.kind) {
                 Ok(Some(base)) => {
                     matched_baselines += 1;
@@ -529,12 +618,14 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     planner.write(&out_dir.join("BENCH_planner.json"))?;
     trace.write(&out_dir.join("BENCH_trace.json"))?;
     scenario.write(&out_dir.join("BENCH_serve_scenario.json"))?;
+    telemetry.write(&out_dir.join("BENCH_telemetry.json"))?;
     eprintln!(
-        "bench: wrote {}, {}, {} and {}",
+        "bench: wrote {}, {}, {}, {} and {}",
         out_dir.join("BENCH_fleet.json").display(),
         out_dir.join("BENCH_planner.json").display(),
         out_dir.join("BENCH_trace.json").display(),
-        out_dir.join("BENCH_serve_scenario.json").display()
+        out_dir.join("BENCH_serve_scenario.json").display(),
+        out_dir.join("BENCH_telemetry.json").display()
     );
 
     if !broken_baselines.is_empty() {

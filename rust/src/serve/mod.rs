@@ -48,6 +48,15 @@
 //!   stream's actual lifetime, miss/shed rates, per-stream cost
 //!   provenance (which model/plan priced it), the printable report, its
 //!   deterministic JSON form and its determinism digest.
+//! * [`telemetry`] — the deterministic observability layer
+//!   (`docs/OBSERVABILITY.md`): windowed time series (bus demand and
+//!   saturation, per-chip occupancy and queue depth, release/completion/
+//!   miss/shed/churn rates), a virtual-time fleet event log exported as
+//!   Chrome trace-event JSON (`fleet --telemetry`), a [`crate::obs`]
+//!   metrics registry snapshot, and an incident detector (sustained
+//!   saturation, miss-rate spikes, starving streams). Byte-identical
+//!   across engines and folded into the stats digest when enabled;
+//!   `--no-telemetry` ([`TelemetryConfig::off`]) skips it all.
 //!
 //! ```no_run
 //! use rcnet_dla::serve::{run_fleet, FleetConfig, Scenario};
@@ -69,6 +78,7 @@ pub mod scenario;
 pub mod scheduler;
 pub mod stats;
 pub mod stream;
+pub mod telemetry;
 
 pub use arbiter::BusArbiter;
 pub use fleet::{ChipWorker, Fleet, InFlight};
@@ -77,3 +87,7 @@ pub use scenario::{ChipSpec, ModelId, Scenario, StreamScript, PRESET_NAMES};
 pub use scheduler::{run_fleet, run_fleet_with, AdmissionPolicy, FleetConfig, FleetSim};
 pub use stats::{CostProvenance, FleetReport, StreamStats};
 pub use stream::{FrameCost, FrameTask, QosClass, Stream, StreamSpec};
+pub use telemetry::{
+    detect_incidents, Incident, IncidentKind, ShedCause, TelemetryConfig, TelemetryEvent,
+    TelemetryEventKind, TelemetryReport, WindowSample,
+};

@@ -62,6 +62,7 @@ use super::fleet::ChipWorker;
 use super::scheduler::{edf_order, shed_order, FleetSim};
 use super::stats::FleetReport;
 use super::stream::{FrameTask, Stream};
+use super::telemetry::{ShedCause, Telemetry};
 
 /// Resolve a [`super::FleetConfig::threads`] request to a worker count:
 /// `0` means one worker per available core; anything else is taken
@@ -235,6 +236,10 @@ impl FleetSim {
         let mut stats = self.stats;
         let mut arbiter = self.arbiter;
         let mut admission = self.admission;
+        // Telemetry records on the main thread only: every hook below
+        // observes the same values, in the same order, as the serial
+        // engine's — which is what keeps the telemetry byte-identical.
+        let mut telemetry = self.telemetry;
 
         // Contiguous shards: worker order == global stream/chip order.
         let chip_chunk = chips.div_ceil(shard_count).max(1);
@@ -290,8 +295,13 @@ impl FleetSim {
                 // releases: each worker gets its shard's liveness
                 // transitions (in event order) with the release command;
                 // the released lists merge in stream-id order.
+                let refused_base = admission.refused_ids.len();
+                let global_toggles = admission.step(now_ms, &mut stats);
+                if let Some(tel) = telemetry.as_mut() {
+                    tel.on_admission(k, &global_toggles, &admission.refused_ids[refused_base..]);
+                }
                 let mut toggles: Vec<Vec<(usize, bool)>> = vec![Vec::new(); shard_count];
-                for (g, live) in admission.step(now_ms, &mut stats) {
+                for (g, live) in global_toggles {
                     toggles[g / stream_chunk].push((g % stream_chunk, live));
                 }
                 for (tx, t) in cmd_tx.iter().zip(toggles) {
@@ -302,6 +312,9 @@ impl FleetSim {
                         Rsp::Released(v) => {
                             for t in v {
                                 stats[t.stream].released += 1;
+                                if let Some(tel) = telemetry.as_mut() {
+                                    tel.on_release(t.stream);
+                                }
                                 heap.push(EdfTask(t));
                             }
                         }
@@ -317,6 +330,9 @@ impl FleetSim {
                     }
                     let t = heap.pop().expect("peeked entry").0;
                     stats[t.stream].shed += 1;
+                    if let Some(tel) = telemetry.as_mut() {
+                        tel.on_shed(t.stream, t.seq, ShedCause::Expired);
+                    }
                 }
 
                 // 3b. Bounded central queue: drop the (len - max) worst
@@ -329,6 +345,9 @@ impl FleetSim {
                     let excess = v.len() - max_ready;
                     for t in v.drain(..excess) {
                         stats[t.stream].shed += 1;
+                        if let Some(tel) = telemetry.as_mut() {
+                            tel.on_shed(t.stream, t.seq, ShedCause::Overflow);
+                        }
                     }
                     heap = v.into_iter().map(EdfTask).collect();
                 }
@@ -344,11 +363,17 @@ impl FleetSim {
                     if !mirror.iter().any(|m| m.can_serve(pixels)) {
                         let t = heap.pop().expect("peeked entry").0;
                         stats[t.stream].shed += 1;
+                        if let Some(tel) = telemetry.as_mut() {
+                            tel.on_shed(t.stream, t.seq, ShedCause::Unservable);
+                        }
                         continue;
                     }
                     let Some(g) = pick_mirror(&mirror, pixels) else { break };
                     let t = heap.pop().expect("peeked entry").0;
                     mirror[g].queued += 1;
+                    if let Some(tel) = telemetry.as_mut() {
+                        tel.on_dispatch(k, t.stream, t.seq, g);
+                    }
                     let (wi, li) = chip_owner[g];
                     dispatches[wi].push((li, t));
                 }
@@ -364,6 +389,13 @@ impl FleetSim {
                         m.active = true;
                     }
                 }
+                // Post-refill mirror state is exactly the serial engine's
+                // post-refill worker state: same occupancy sample.
+                let chip_states: Vec<(bool, u32)> = if telemetry.is_some() {
+                    mirror.iter().map(|m| (m.active, m.queued as u32)).collect()
+                } else {
+                    Vec::new()
+                };
                 let mut demands: Vec<f64> = Vec::with_capacity(chips);
                 for rx in &rsp_rx {
                     match rx.recv().expect("fleet worker hung up") {
@@ -387,13 +419,21 @@ impl FleetSim {
                             for (li, t) in done {
                                 mirror[base + li].active = false;
                                 let latency_ms = now_ms + cfg.tick_ms - t.release_ms;
-                                stats[t.stream]
-                                    .record_completion(latency_ms, t.deadline_ms - t.release_ms);
+                                let budget_ms = t.deadline_ms - t.release_ms;
+                                stats[t.stream].record_completion(latency_ms, budget_ms);
+                                if let Some(tel) = telemetry.as_mut() {
+                                    let missed = latency_ms > budget_ms;
+                                    let chip = base + li;
+                                    tel.on_complete(k, t.stream, t.seq, chip, latency_ms, missed);
+                                }
                             }
                         }
                         _ => unreachable!("protocol: expected Completions"),
                     }
                     base += n;
+                }
+                if let Some(tel) = telemetry.as_mut() {
+                    tel.end_tick(k, &demands, &grants, &chip_states);
                 }
             }
 
@@ -426,6 +466,7 @@ impl FleetSim {
             bus_peak_demand: arbiter.peak_demand_ratio(),
             chip_utilization: busy as f64 / (ticks as f64 * chips.max(1) as f64),
             wall_s: cfg.seconds,
+            telemetry: telemetry.map(Telemetry::finish),
         }
     }
 }

@@ -58,6 +58,7 @@ use super::fleet::Fleet;
 use super::scenario::{ModelId, Scenario};
 use super::stats::{CostProvenance, FleetReport, StreamStats};
 use super::stream::{FrameCost, FrameTask, Stream, StreamSpec};
+use super::telemetry::{ShedCause, Telemetry, TelemetryConfig};
 
 /// How arrival events are admitted while the run replays its scenario
 /// timeline.
@@ -112,6 +113,12 @@ pub struct FleetConfig {
     /// p50/p99/miss/shed, utilizations, everything — is byte-identical
     /// to the serial engine's, so this knob only trades wall-clock time.
     pub threads: usize,
+    /// Telemetry recording: windowed time series, event log and
+    /// incident detection ([`super::telemetry`]). On by default;
+    /// recording is purely observational (the simulation arithmetic
+    /// never reads it), and [`TelemetryConfig::off`] skips every hook
+    /// for the bare-engine fast path.
+    pub telemetry: TelemetryConfig,
 }
 
 impl FleetConfig {
@@ -130,6 +137,7 @@ impl FleetConfig {
             admission: AdmissionPolicy::DemandLimit { oversub: 2.0 },
             planner: Planner::OptimalDp,
             threads: 1,
+            telemetry: TelemetryConfig::default(),
         }
     }
 
@@ -171,6 +179,11 @@ impl FleetConfig {
                 "admission oversubscription {oversub} is not positive and finite"
             );
         }
+        crate::ensure!(
+            self.telemetry.window_ms.is_finite() && self.telemetry.window_ms > 0.0,
+            "telemetry window {} ms is not positive and finite",
+            self.telemetry.window_ms
+        );
         self.scenario.validate()
     }
 }
@@ -395,6 +408,10 @@ pub(crate) struct AdmissionState {
     admitted: Vec<Option<bool>>,
     /// Streams refused at their arrival event so far.
     pub(crate) rejected: usize,
+    /// The refused stream ids, in refusal order (tiny: each stream
+    /// arrives at most once). Telemetry reads the tail it has not yet
+    /// logged.
+    pub(crate) refused_ids: Vec<usize>,
 }
 
 impl AdmissionState {
@@ -430,6 +447,7 @@ impl AdmissionState {
             bus_demand: 0.0,
             compute_demand: 0.0,
             rejected: 0,
+            refused_ids: Vec::new(),
         }
     }
 
@@ -471,6 +489,7 @@ impl AdmissionState {
                     } else {
                         self.admitted[e.stream] = Some(false);
                         self.rejected += 1;
+                        self.refused_ids.push(e.stream);
                     }
                 }
             }
@@ -499,6 +518,11 @@ pub struct FleetSim {
     pub(crate) arbiter: BusArbiter,
     pub(crate) stats: Vec<StreamStats>,
     pub(crate) admission: AdmissionState,
+    /// The telemetry recorder, `Some` when `cfg.telemetry.enabled`.
+    /// Purely observational: both engines drive it from their main
+    /// thread at the same phase points, and no simulation arithmetic
+    /// ever reads it back.
+    pub(crate) telemetry: Option<Telemetry>,
 }
 
 impl FleetSim {
@@ -543,39 +567,64 @@ impl FleetSim {
             cfg.bus_mbps * 1e6,
             fleet.compute_cycles_per_s(),
         );
+        let arbiter = BusArbiter::new(cfg.bus_mbps, cfg.tick_ms);
+        let telemetry = cfg.telemetry.enabled.then(|| {
+            Telemetry::new(
+                &cfg.telemetry,
+                cfg.tick_ms,
+                scenario.streams.len(),
+                fleet.workers.len(),
+                arbiter.budget_bytes_per_tick,
+                costs.plans.hits(),
+                costs.plans.misses(),
+            )
+        });
 
         Ok(FleetSim {
             cfg: cfg.clone(),
             streams,
             ready: Vec::new(),
             fleet,
-            arbiter: BusArbiter::new(cfg.bus_mbps, cfg.tick_ms),
+            arbiter,
             stats,
             admission,
+            telemetry,
         })
     }
 
-    fn step(&mut self, now_ms: f64) {
+    fn step(&mut self, tick: u64, now_ms: f64) {
         // 1. Timeline events: departures free capacity first, then
         //    arrivals are admitted against current demand. Transitions
         //    apply in event order.
-        for (i, live) in self.admission.step(now_ms, &mut self.stats) {
+        let refused_base = self.admission.refused_ids.len();
+        let toggles = self.admission.step(now_ms, &mut self.stats);
+        for &(i, live) in &toggles {
             self.streams[i].active = live;
+        }
+        if let Some(tel) = self.telemetry.as_mut() {
+            tel.on_admission(tick, &toggles, &self.admission.refused_ids[refused_base..]);
         }
 
         // 2. Frame releases from live streams.
         for s in &mut self.streams {
             for t in s.release_due(now_ms) {
                 self.stats[t.stream].released += 1;
+                if let Some(tel) = self.telemetry.as_mut() {
+                    tel.on_release(t.stream);
+                }
                 self.ready.push(t);
             }
         }
 
         // 3a. Shed frames that can no longer make their deadline.
         let stats = &mut self.stats;
+        let telemetry = &mut self.telemetry;
         self.ready.retain(|t| {
             if t.deadline_ms <= now_ms {
                 stats[t.stream].shed += 1;
+                if let Some(tel) = telemetry.as_mut() {
+                    tel.on_shed(t.stream, t.seq, ShedCause::Expired);
+                }
                 false
             } else {
                 true
@@ -588,6 +637,9 @@ impl FleetSim {
             let v = shed_victim(&self.ready);
             let t = self.ready.swap_remove(v);
             self.stats[t.stream].shed += 1;
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.on_shed(t.stream, t.seq, ShedCause::Overflow);
+            }
         }
 
         // 4. Strict-EDF dispatch through the bounded per-chip queues:
@@ -602,13 +654,20 @@ impl FleetSim {
             if !self.fleet.any_can_serve(self.ready[i].pixels) {
                 let t = self.ready.swap_remove(i);
                 self.stats[t.stream].shed += 1;
+                if let Some(tel) = self.telemetry.as_mut() {
+                    tel.on_shed(t.stream, t.seq, ShedCause::Unservable);
+                }
                 continue;
             }
             let Some(w) = self.fleet.pick_worker(self.ready[i].pixels) else { break };
             let task = self.ready.swap_remove(i);
+            let (t_stream, t_seq) = (task.stream, task.seq);
             if let Err(back) = self.fleet.workers[w].try_dispatch(task) {
                 self.ready.push(back);
                 break;
+            }
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.on_dispatch(tick, t_stream, t_seq, w);
             }
         }
 
@@ -617,16 +676,30 @@ impl FleetSim {
         for w in &mut self.fleet.workers {
             w.refill();
         }
+        // Telemetry samples occupancy post-refill (busy == will burn
+        // this tick), exactly what the parallel engine's mirror holds.
+        let chip_states: Vec<(bool, u32)> = if self.telemetry.is_some() {
+            self.fleet.workers.iter().map(|w| (w.active.is_some(), w.queued as u32)).collect()
+        } else {
+            Vec::new()
+        };
         let demands: Vec<f64> = self.fleet.workers.iter().map(|w| w.bus_demand()).collect();
         let grants = self.arbiter.arbitrate(&demands);
 
         // 6. Execution progress and completion scoring.
-        for (w, g) in self.fleet.workers.iter_mut().zip(&grants) {
+        for (c, (w, g)) in self.fleet.workers.iter_mut().zip(&grants).enumerate() {
             if let Some(done) = w.advance(*g) {
                 let latency_ms = now_ms + self.cfg.tick_ms - done.release_ms;
-                self.stats[done.stream]
-                    .record_completion(latency_ms, done.deadline_ms - done.release_ms);
+                let budget_ms = done.deadline_ms - done.release_ms;
+                self.stats[done.stream].record_completion(latency_ms, budget_ms);
+                if let Some(tel) = self.telemetry.as_mut() {
+                    let missed = latency_ms > budget_ms;
+                    tel.on_complete(tick, done.stream, done.seq, c, latency_ms, missed);
+                }
             }
+        }
+        if let Some(tel) = self.telemetry.as_mut() {
+            tel.end_tick(tick, &demands, &grants, &chip_states);
         }
     }
 
@@ -634,7 +707,7 @@ impl FleetSim {
     pub fn run(&mut self) -> FleetReport {
         let ticks = (self.cfg.seconds * 1e3 / self.cfg.tick_ms).round().max(1.0) as u64;
         for k in 0..ticks {
-            self.step(k as f64 * self.cfg.tick_ms);
+            self.step(k, k as f64 * self.cfg.tick_ms);
         }
         let end_ms = self.cfg.seconds * 1e3;
         for (i, s) in self.stats.iter_mut().enumerate() {
@@ -654,6 +727,7 @@ impl FleetSim {
             bus_peak_demand: self.arbiter.peak_demand_ratio(),
             chip_utilization: busy as f64 / (ticks as f64 * chips.max(1) as f64),
             wall_s: self.cfg.seconds,
+            telemetry: self.telemetry.take().map(Telemetry::finish),
         }
     }
 }

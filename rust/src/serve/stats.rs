@@ -23,6 +23,7 @@ use crate::util::{fnv1a, percentile};
 
 use super::scenario::ModelId;
 use super::stream::{FrameCost, StreamSpec};
+use super::telemetry::TelemetryReport;
 
 fn ratio(num: u64, den: u64) -> f64 {
     if den == 0 {
@@ -231,6 +232,12 @@ pub struct FleetReport {
     pub chip_utilization: f64,
     /// Simulated span in seconds.
     pub wall_s: f64,
+    /// Windowed time series, event log, incidents and metrics registry —
+    /// populated when the run's [`TelemetryConfig`](super::TelemetryConfig)
+    /// had the hub enabled, `None` on the `--no-telemetry` fast path.
+    /// Folded into [`FleetReport::stats_digest`] only when present, so
+    /// hub-off digests match the pre-telemetry pins bit for bit.
+    pub telemetry: Option<TelemetryReport>,
 }
 
 impl FleetReport {
@@ -327,6 +334,11 @@ impl FleetReport {
         words.push(self.bus_saturation.to_bits());
         words.push(self.bus_peak_demand.to_bits());
         words.push(self.chip_utilization.to_bits());
+        // Telemetry folds in only when the hub ran: hub-off reports keep
+        // the exact digests pinned before the telemetry subsystem landed.
+        if let Some(t) = &self.telemetry {
+            words.extend(t.digest_words());
+        }
         fnv1a(words)
     }
 
@@ -347,8 +359,10 @@ impl FleetReport {
             .set("missed", Json::Num(self.missed() as f64))
             .set("shed", Json::Num(self.shed() as f64))
             .set("bus_utilization", Json::Num(self.bus_utilization))
-            .set("bus_saturation", Json::Num(self.bus_saturation))
-            .set("bus_peak_demand", Json::Num(self.bus_peak_demand))
+            // Fixed 6-decimal strings: float-printing differences can
+            // never flake the CI byte-diff of `fleet --json` output.
+            .set("bus_saturation", Json::Str(format!("{:.6}", self.bus_saturation)))
+            .set("bus_peak_demand", Json::Str(format!("{:.6}", self.bus_peak_demand)))
             .set("chip_utilization", Json::Num(self.chip_utilization))
             .set("p99_ms", Json::Num(self.aggregate_p99_ms()))
             .set("stats_digest", Json::Str(format!("{:#018x}", self.stats_digest())));
@@ -384,6 +398,9 @@ impl FleetReport {
             })
             .collect();
         o.set("per_stream", Json::Arr(streams));
+        if let Some(t) = &self.telemetry {
+            o.set("telemetry", t.to_json());
+        }
         o
     }
 }
@@ -438,7 +455,18 @@ impl fmt::Display for FleetReport {
             100.0 * self.miss_rate(),
             100.0 * self.shed_rate(),
             self.aggregate_p99_ms()
-        )
+        )?;
+        if let Some(t) = &self.telemetry {
+            if t.incidents.is_empty() {
+                write!(f, "\nincidents: none")?;
+            } else {
+                write!(f, "\nincidents: {}", t.incidents.len())?;
+                for i in &t.incidents {
+                    write!(f, "\n  {i}")?;
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -488,6 +516,7 @@ mod tests {
             bus_peak_demand: 0.0,
             chip_utilization: 0.0,
             wall_s: 1.0,
+            telemetry: None,
         };
         assert_eq!(r.admitted(), 0);
         assert_eq!(r.miss_rate(), 0.0);
@@ -584,6 +613,7 @@ mod tests {
             bus_peak_demand: 1.4,
             chip_utilization: 0.25,
             wall_s: 1.0,
+            telemetry: None,
         };
         assert_eq!(r.released(), 10);
         assert_eq!(r.shed(), 2);
@@ -613,6 +643,7 @@ mod tests {
             bus_peak_demand: 0.8,
             chip_utilization: 0.25,
             wall_s: 1.0,
+            telemetry: None,
         };
         let x = r.to_json().to_string();
         let y = r.to_json().to_string();
@@ -620,6 +651,28 @@ mod tests {
         assert!(x.contains("\"stats_digest\""));
         assert!(x.contains("\"model\":\"rc\""));
         assert!(x.contains("\"planner\":\"optimal-dp\""));
+    }
+
+    /// Satellite pin: the saturation/peak-demand ratios serialize as
+    /// fixed 6-decimal strings, immune to float-printing drift.
+    #[test]
+    fn json_pins_bus_ratios_to_six_decimals() {
+        let r = FleetReport {
+            scenario: "t".into(),
+            per_stream: Vec::new(),
+            rejected: 0,
+            chips: 1,
+            bus_mbps: 585.0,
+            bus_utilization: 0.5,
+            bus_saturation: 1.0 / 3.0,
+            bus_peak_demand: 2.0 / 3.0,
+            chip_utilization: 0.25,
+            wall_s: 1.0,
+            telemetry: None,
+        };
+        let x = r.to_json().to_string();
+        assert!(x.contains("\"bus_saturation\":\"0.333333\""), "got {x}");
+        assert!(x.contains("\"bus_peak_demand\":\"0.666667\""), "got {x}");
     }
 
     #[test]
@@ -636,6 +689,7 @@ mod tests {
             bus_peak_demand: 0.0,
             chip_utilization: 0.0,
             wall_s: 1.0,
+            telemetry: None,
         };
         let d0 = r(base.clone()).stats_digest();
         let mut other_model = base.clone();

@@ -1,0 +1,1324 @@
+//! Deterministic, virtual-time fleet telemetry: windowed time series, a
+//! fleet-level event log, Chrome trace export and incident detection.
+//!
+//! The fleet engines report end-of-run scalars ([`super::FleetReport`]),
+//! which hide *when* the bus saturated or a churn wave blew deadlines.
+//! This module records the missing time dimension — without perturbing
+//! the simulation (recording is purely observational; with
+//! [`TelemetryConfig::enabled`] off, the engines skip every hook) and
+//! without breaking the serial/parallel identity guarantee:
+//!
+//! * **Windows.** Virtual time folds into fixed windows of
+//!   [`TelemetryConfig::window_ms`] (default 100 ms). Each
+//!   [`WindowSample`] holds integer accumulators only — tick counts,
+//!   truncated byte totals, frame counts, per-chip occupancy and
+//!   per-stream progress — so digests need no float tolerance.
+//! * **Events.** A [`TelemetryEvent`] log records
+//!   arrival/departure/refusal, shed (with [`ShedCause`]),
+//!   dispatch, completion and saturation-crossing events. The engines
+//!   never preempt a dispatched frame, so there is no preemption event.
+//!   Within one tick events are logged in canonical phase order
+//!   (admission, sheds, dispatches, completions — sheds sorted by
+//!   `(cause, stream, seq)`), because the two engines visit the same
+//!   shed *set* in different intra-tick orders.
+//! * **Incidents.** [`detect_incidents`] folds the windows into typed
+//!   [`Incident`]s: sustained saturation *onsets* (hysteresis: enter at
+//!   ≥ 1/2 saturated ticks per window, exit below 1/4, minimum
+//!   [`SAT_MIN_WINDOWS`] windows, after [`WARMUP_WINDOWS`]), miss-rate
+//!   spikes (absolute floor + 2x the run average), and starving streams
+//!   (released but nothing completed for [`STARVE_WINDOWS`] consecutive
+//!   windows). A pool that is *chronically* saturated from the first
+//!   window never produces a saturation onset — the signal is reserved
+//!   for load changes a policy could react to.
+//! * **Export.** [`TelemetryReport::to_chrome_json`] renders the run as
+//!   a Chrome trace-event document (`chrome://tracing`, Perfetto): one
+//!   track for the bus (saturated spans, per-window byte counters,
+//!   instant events for churn and sheds) and one per chip (one span per
+//!   completed frame). [`TelemetryReport::series_csv`] and
+//!   [`TelemetryReport::series_table`] render the windowed series for
+//!   the `obs` CLI subcommand.
+//!
+//! Both engines drive the recorder from their main thread at the same
+//! six phase points, observing identical values in identical order, so
+//! the telemetry is byte-identical across engines, thread counts and
+//! repeated runs — pinned by `tests/telemetry.rs` and folded into
+//! [`super::FleetReport::stats_digest`] so CI pins it too.
+
+use std::collections::HashMap;
+
+use crate::obs::MetricsHub;
+use crate::util::json::Json;
+
+/// Telemetry knobs carried by [`super::FleetConfig`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TelemetryConfig {
+    /// Record telemetry during the run. On by default; turn off (or use
+    /// the `--no-telemetry` CLI flag) for the fastest possible engine
+    /// path — benchmark baselines for the bare engines run with the hub
+    /// off, and a report without telemetry digests exactly as before the
+    /// subsystem existed.
+    pub enabled: bool,
+    /// Window length in virtual milliseconds for the time series; must
+    /// be positive and finite. Values are rounded to a whole number of
+    /// ticks (minimum one).
+    pub window_ms: f64,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { enabled: true, window_ms: 100.0 }
+    }
+}
+
+impl TelemetryConfig {
+    /// Telemetry disabled (the bare-engine fast path).
+    pub fn off() -> Self {
+        TelemetryConfig { enabled: false, ..Self::default() }
+    }
+}
+
+/// Windows ignored at the start of the run before the saturation
+/// detector arms: the pool fills from empty, so the first windows are
+/// not evidence of a load *change*.
+pub const WARMUP_WINDOWS: usize = 2;
+
+/// Minimum length, in windows, of a saturated episode before it is
+/// reported as a [`IncidentKind::SustainedSaturation`] incident.
+pub const SAT_MIN_WINDOWS: usize = 3;
+
+/// Absolute floor of missed frames in one window before a
+/// [`IncidentKind::MissRateSpike`] can fire (tiny windows are noise).
+pub const MISS_SPIKE_MIN: u64 = 5;
+
+/// A window's miss fraction must exceed the run average by this factor
+/// to count as a spike.
+pub const MISS_SPIKE_FACTOR: u64 = 2;
+
+/// Consecutive windows a stream must release frames without completing
+/// any before it is reported as [`IncidentKind::StarvingStream`].
+pub const STARVE_WINDOWS: usize = 5;
+
+/// Per-chip slice of one window: occupancy and dispatch activity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ChipWindow {
+    /// Ticks this chip spent executing a frame.
+    pub busy_ticks: u64,
+    /// Sum over ticks of the chip's dispatch-queue depth (so mean depth
+    /// is `queue_ticks / ticks`).
+    pub queue_ticks: u64,
+    /// Frames dispatched to this chip during the window.
+    pub dispatched: u64,
+}
+
+/// Per-stream slice of one window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StreamWindow {
+    /// Frames the stream released this window.
+    pub released: u32,
+    /// Frames of the stream completed this window.
+    pub completed: u32,
+}
+
+/// One fixed-length window of the fleet time series. Integer
+/// accumulators only — byte totals are per-tick f64 demands truncated to
+/// whole bytes before summing, so the digest carries no float noise.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct WindowSample {
+    /// Window index (0-based; `start_ms = window * ticks * tick_ms` for
+    /// full windows).
+    pub window: u64,
+    /// Ticks folded into this window (the last window may be short).
+    pub ticks: u64,
+    /// Ticks whose offered demand exceeded the bus budget.
+    pub saturated_ticks: u64,
+    /// Total bytes the chips asked the bus for.
+    pub demand_bytes: u64,
+    /// Total bytes the arbiter granted.
+    pub granted_bytes: u64,
+    /// Frames released into the ready queue.
+    pub released: u64,
+    /// Frames completed.
+    pub completed: u64,
+    /// Completed frames that missed their deadline.
+    pub missed: u64,
+    /// Frames shed (expired, overflowed or unservable).
+    pub shed: u64,
+    /// Streams that arrived and were admitted.
+    pub arrivals: u64,
+    /// Streams that departed.
+    pub departures: u64,
+    /// Streams refused at admission.
+    pub refusals: u64,
+    /// Frames dispatched onto chips.
+    pub dispatched: u64,
+    /// Per-chip occupancy, in global chip order.
+    pub per_chip: Vec<ChipWindow>,
+    /// Per-stream progress, in stream-id order.
+    pub per_stream: Vec<StreamWindow>,
+}
+
+impl WindowSample {
+    fn new(window: u64, chips: usize, streams: usize) -> Self {
+        WindowSample {
+            window,
+            per_chip: vec![ChipWindow::default(); chips],
+            per_stream: vec![StreamWindow::default(); streams],
+            ..Self::default()
+        }
+    }
+
+    /// `saturated_ticks / ticks >= num / den`, exactly, in integers.
+    fn sat_frac_ge(&self, num: u64, den: u64) -> bool {
+        self.ticks > 0 && self.saturated_ticks * den >= self.ticks * num
+    }
+
+    fn digest_words(&self, out: &mut Vec<u64>) {
+        out.extend([
+            self.window,
+            self.ticks,
+            self.saturated_ticks,
+            self.demand_bytes,
+            self.granted_bytes,
+            self.released,
+            self.completed,
+            self.missed,
+            self.shed,
+            self.arrivals,
+            self.departures,
+            self.refusals,
+            self.dispatched,
+        ]);
+        for c in &self.per_chip {
+            out.extend([c.busy_ticks, c.queue_ticks, c.dispatched]);
+        }
+        for s in &self.per_stream {
+            out.extend([u64::from(s.released), u64::from(s.completed)]);
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let chips: Vec<Json> = self
+            .per_chip
+            .iter()
+            .map(|c| {
+                Json::Arr(vec![
+                    Json::Num(c.busy_ticks as f64),
+                    Json::Num(c.queue_ticks as f64),
+                    Json::Num(c.dispatched as f64),
+                ])
+            })
+            .collect();
+        let streams: Vec<Json> = self
+            .per_stream
+            .iter()
+            .map(|s| {
+                Json::Arr(vec![
+                    Json::Num(f64::from(s.released)),
+                    Json::Num(f64::from(s.completed)),
+                ])
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("window", Json::Num(self.window as f64))
+            .set("ticks", Json::Num(self.ticks as f64))
+            .set("saturated_ticks", Json::Num(self.saturated_ticks as f64))
+            .set("demand_bytes", Json::Num(self.demand_bytes as f64))
+            .set("granted_bytes", Json::Num(self.granted_bytes as f64))
+            .set("released", Json::Num(self.released as f64))
+            .set("completed", Json::Num(self.completed as f64))
+            .set("missed", Json::Num(self.missed as f64))
+            .set("shed", Json::Num(self.shed as f64))
+            .set("arrivals", Json::Num(self.arrivals as f64))
+            .set("departures", Json::Num(self.departures as f64))
+            .set("refusals", Json::Num(self.refusals as f64))
+            .set("dispatched", Json::Num(self.dispatched as f64))
+            .set("per_chip", Json::Arr(chips))
+            .set("per_stream", Json::Arr(streams));
+        o
+    }
+}
+
+/// Why a frame was shed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ShedCause {
+    /// The frame's deadline passed while it waited in the ready queue.
+    Expired,
+    /// The bounded central ready queue overflowed (shed order: lowest
+    /// QoS, least urgent first).
+    Overflow,
+    /// No chip in the pool can ever serve the frame's resolution
+    /// (admitted under [`super::AdmissionPolicy::AdmitAll`]).
+    Unservable,
+}
+
+impl ShedCause {
+    /// Stable name (`expired` / `overflow` / `unservable`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedCause::Expired => "expired",
+            ShedCause::Overflow => "overflow",
+            ShedCause::Unservable => "unservable",
+        }
+    }
+
+    fn code(self) -> u64 {
+        match self {
+            ShedCause::Expired => 0,
+            ShedCause::Overflow => 1,
+            ShedCause::Unservable => 2,
+        }
+    }
+}
+
+/// What happened in one [`TelemetryEvent`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TelemetryEventKind {
+    /// A stream arrived and was admitted.
+    Arrival {
+        /// Stream id.
+        stream: usize,
+    },
+    /// A stream departed.
+    Departure {
+        /// Stream id.
+        stream: usize,
+    },
+    /// A stream was refused at admission.
+    Refusal {
+        /// Stream id.
+        stream: usize,
+    },
+    /// A frame was shed.
+    Shed {
+        /// Stream id.
+        stream: usize,
+        /// Frame sequence number within the stream.
+        seq: u64,
+        /// Why it was shed.
+        cause: ShedCause,
+    },
+    /// A frame was dispatched onto a chip.
+    Dispatch {
+        /// Stream id.
+        stream: usize,
+        /// Frame sequence number within the stream.
+        seq: u64,
+        /// Global chip index.
+        chip: usize,
+    },
+    /// A frame completed (scored against its deadline).
+    Complete {
+        /// Stream id.
+        stream: usize,
+        /// Frame sequence number within the stream.
+        seq: u64,
+        /// Global chip index.
+        chip: usize,
+        /// Whether the completion missed its deadline.
+        missed: bool,
+    },
+    /// The saturation detector entered a saturated episode (the tick is
+    /// the first tick of the entering window).
+    SaturationStart {
+        /// Window where the episode started.
+        window: u64,
+    },
+    /// The saturation detector left a saturated episode.
+    SaturationEnd {
+        /// First window past the episode.
+        window: u64,
+    },
+}
+
+/// One entry of the fleet event log.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TelemetryEvent {
+    /// Virtual tick the event happened on.
+    pub tick: u64,
+    /// What happened.
+    pub kind: TelemetryEventKind,
+}
+
+impl TelemetryEvent {
+    fn digest_words(&self, out: &mut Vec<u64>) {
+        let (code, a, b, c) = match self.kind {
+            TelemetryEventKind::Arrival { stream } => (1, stream as u64, 0, 0),
+            TelemetryEventKind::Departure { stream } => (2, stream as u64, 0, 0),
+            TelemetryEventKind::Refusal { stream } => (3, stream as u64, 0, 0),
+            TelemetryEventKind::Shed { stream, seq, cause } => {
+                (4, stream as u64, seq, cause.code())
+            }
+            TelemetryEventKind::Dispatch { stream, seq, chip } => {
+                (5, stream as u64, seq, chip as u64)
+            }
+            TelemetryEventKind::Complete { stream, seq, chip, missed } => {
+                (6, stream as u64, seq, ((chip as u64) << 1) | u64::from(missed))
+            }
+            TelemetryEventKind::SaturationStart { window } => (7, window, 0, 0),
+            TelemetryEventKind::SaturationEnd { window } => (8, window, 0, 0),
+        };
+        out.extend([self.tick, code, a, b, c]);
+    }
+}
+
+/// The incident classes the detector reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IncidentKind {
+    /// The bus entered saturation after warmup and stayed there for at
+    /// least [`SAT_MIN_WINDOWS`] windows (an *onset* — chronically
+    /// saturated runs report none).
+    SustainedSaturation,
+    /// A run of windows whose deadline-miss fraction cleared both the
+    /// absolute floor ([`MISS_SPIKE_MIN`]) and
+    /// [`MISS_SPIKE_FACTOR`] x the run average.
+    MissRateSpike,
+    /// A stream that kept releasing frames but completed none for
+    /// [`STARVE_WINDOWS`] consecutive windows.
+    StarvingStream,
+}
+
+impl IncidentKind {
+    /// Stable kebab-case name.
+    pub fn name(self) -> &'static str {
+        match self {
+            IncidentKind::SustainedSaturation => "sustained-saturation",
+            IncidentKind::MissRateSpike => "miss-rate-spike",
+            IncidentKind::StarvingStream => "starving-stream",
+        }
+    }
+
+    fn code(self) -> u64 {
+        match self {
+            IncidentKind::SustainedSaturation => 1,
+            IncidentKind::MissRateSpike => 2,
+            IncidentKind::StarvingStream => 3,
+        }
+    }
+}
+
+/// One detected incident: a typed, window-ranged condition worth a
+/// policy's (or an operator's) attention.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Incident {
+    /// Incident class.
+    pub kind: IncidentKind,
+    /// First window of the episode.
+    pub first_window: u64,
+    /// Last window of the episode (inclusive).
+    pub last_window: u64,
+    /// The affected stream, for per-stream incidents.
+    pub stream: Option<usize>,
+    /// Magnitude in parts-per-million: peak saturated-tick fraction
+    /// (saturation), peak miss fraction (spike); for starving streams,
+    /// the raw count of frames released while starving.
+    pub magnitude_ppm: u64,
+}
+
+impl std::fmt::Display for Incident {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} windows {}..{}", self.kind.name(), self.first_window, self.last_window)?;
+        if let Some(s) = self.stream {
+            write!(f, " stream {s}")?;
+        }
+        match self.kind {
+            IncidentKind::StarvingStream => write!(f, " released {}", self.magnitude_ppm),
+            _ => write!(f, " peak {:.1}%", self.magnitude_ppm as f64 / 1e4),
+        }
+    }
+}
+
+impl Incident {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("kind", Json::Str(self.kind.name().into()))
+            .set("first_window", Json::Num(self.first_window as f64))
+            .set("last_window", Json::Num(self.last_window as f64))
+            .set(
+                "stream",
+                match self.stream {
+                    Some(s) => Json::Num(s as f64),
+                    None => Json::Null,
+                },
+            )
+            .set("magnitude_ppm", Json::Num(self.magnitude_ppm as f64));
+        o
+    }
+}
+
+/// Fold a run's windows into typed incidents, plus the saturation
+/// crossing events observed after warmup (`ticks_per_window` converts
+/// window indices to ticks). Pure, deterministic, integer-only — both
+/// engines hand it identical windows, so the incident lists are
+/// identical too.
+pub fn detect_incidents(
+    windows: &[WindowSample],
+    ticks_per_window: u64,
+) -> (Vec<Incident>, Vec<TelemetryEvent>) {
+    let mut incidents = Vec::new();
+    let mut crossings = Vec::new();
+
+    // Sustained saturation: hysteresis onsets after warmup. The initial
+    // state is saturated if any warmup window already sits above the
+    // *exit* threshold, so a chronically loaded pool never reports an
+    // onset it did not have.
+    let warm = WARMUP_WINDOWS.min(windows.len());
+    let mut state = windows[..warm].iter().any(|w| w.sat_frac_ge(1, 4));
+    let mut start: Option<usize> = None;
+    let mut peak = 0u64;
+    for (i, w) in windows.iter().enumerate().skip(warm) {
+        let frac_ppm = if w.ticks > 0 { w.saturated_ticks * 1_000_000 / w.ticks } else { 0 };
+        if !state && w.sat_frac_ge(1, 2) {
+            state = true;
+            start = Some(i);
+            peak = frac_ppm;
+            crossings.push(TelemetryEvent {
+                tick: i as u64 * ticks_per_window,
+                kind: TelemetryEventKind::SaturationStart { window: i as u64 },
+            });
+        } else if state && !w.sat_frac_ge(1, 4) {
+            state = false;
+            if start.is_some() {
+                crossings.push(TelemetryEvent {
+                    tick: i as u64 * ticks_per_window,
+                    kind: TelemetryEventKind::SaturationEnd { window: i as u64 },
+                });
+            }
+            if let Some(s) = start.take() {
+                if i - s >= SAT_MIN_WINDOWS {
+                    incidents.push(Incident {
+                        kind: IncidentKind::SustainedSaturation,
+                        first_window: s as u64,
+                        last_window: (i - 1) as u64,
+                        stream: None,
+                        magnitude_ppm: peak,
+                    });
+                }
+            }
+        } else if state {
+            peak = peak.max(frac_ppm);
+        }
+    }
+    if let Some(s) = start {
+        if windows.len() - s >= SAT_MIN_WINDOWS {
+            incidents.push(Incident {
+                kind: IncidentKind::SustainedSaturation,
+                first_window: s as u64,
+                last_window: (windows.len() - 1) as u64,
+                stream: None,
+                magnitude_ppm: peak,
+            });
+        }
+    }
+
+    // Miss-rate spike: absolute floor AND >= 1/4 of the window's
+    // completions AND strictly above MISS_SPIKE_FACTOR x the run-average
+    // miss fraction (cross-multiplied, so chronic missing never spikes).
+    let tot_done: u64 = windows.iter().map(|w| w.completed).sum();
+    let tot_missed: u64 = windows.iter().map(|w| w.missed).sum();
+    let qualifies = |w: &WindowSample| {
+        w.missed >= MISS_SPIKE_MIN
+            && w.missed * 4 >= w.completed
+            && w.missed * tot_done > MISS_SPIKE_FACTOR * tot_missed * w.completed
+    };
+    let mut i = 0;
+    while i < windows.len() {
+        if qualifies(&windows[i]) {
+            let s = i;
+            let mut peak = 0u64;
+            while i < windows.len() && qualifies(&windows[i]) {
+                if windows[i].completed > 0 {
+                    peak = peak.max(windows[i].missed * 1_000_000 / windows[i].completed);
+                }
+                i += 1;
+            }
+            incidents.push(Incident {
+                kind: IncidentKind::MissRateSpike,
+                first_window: s as u64,
+                last_window: (i - 1) as u64,
+                stream: None,
+                magnitude_ppm: peak,
+            });
+        } else {
+            i += 1;
+        }
+    }
+
+    // Starving streams: released but completed nothing, long enough.
+    let streams = windows.first().map_or(0, |w| w.per_stream.len());
+    for s in 0..streams {
+        let mut run = 0usize;
+        let mut released = 0u64;
+        for (i, w) in windows.iter().enumerate() {
+            let ps = w.per_stream[s];
+            if ps.released >= 1 && ps.completed == 0 {
+                run += 1;
+                released += u64::from(ps.released);
+            } else {
+                if run >= STARVE_WINDOWS {
+                    incidents.push(Incident {
+                        kind: IncidentKind::StarvingStream,
+                        first_window: (i - run) as u64,
+                        last_window: (i - 1) as u64,
+                        stream: Some(s),
+                        magnitude_ppm: released,
+                    });
+                }
+                run = 0;
+                released = 0;
+            }
+        }
+        if run >= STARVE_WINDOWS {
+            incidents.push(Incident {
+                kind: IncidentKind::StarvingStream,
+                first_window: (windows.len() - run) as u64,
+                last_window: (windows.len() - 1) as u64,
+                stream: Some(s),
+                magnitude_ppm: released,
+            });
+        }
+    }
+
+    incidents.sort_by_key(|inc| (inc.first_window, inc.kind.code(), inc.stream));
+    (incidents, crossings)
+}
+
+/// The finished telemetry of one fleet run: the windowed series, the
+/// event log, detected incidents and the [`MetricsHub`] snapshot.
+/// Carried by [`super::FleetReport::telemetry`] and folded into its
+/// digest, so CI pins every bit of it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetryReport {
+    /// Window length in virtual milliseconds (as configured).
+    pub window_ms: f64,
+    /// Virtual tick in milliseconds.
+    pub tick_ms: f64,
+    /// Ticks per full window.
+    pub ticks_per_window: u64,
+    /// Bus budget per tick, truncated to whole bytes.
+    pub budget_bytes_per_tick: u64,
+    /// Chips in the pool.
+    pub chips: usize,
+    /// Streams in the scenario.
+    pub streams: usize,
+    /// Total ticks recorded.
+    pub total_ticks: u64,
+    /// The windowed time series.
+    pub windows: Vec<WindowSample>,
+    /// The event log, in tick order (canonical phase order within a
+    /// tick; saturation crossings sort after other same-tick events).
+    pub events: Vec<TelemetryEvent>,
+    /// Detected incidents, ordered by first window.
+    pub incidents: Vec<Incident>,
+    /// The metrics registry snapshot (counters, gauges, histograms).
+    pub hub: MetricsHub,
+}
+
+impl TelemetryReport {
+    /// Incidents of one kind.
+    pub fn incidents_of(&self, kind: IncidentKind) -> impl Iterator<Item = &Incident> {
+        self.incidents.iter().filter(move |i| i.kind == kind)
+    }
+
+    /// Every observable bit of the telemetry as digest words, appended
+    /// to the fleet digest when telemetry is on.
+    pub fn digest_words(&self) -> Vec<u64> {
+        let mut w = vec![
+            0x7e1e_3e7_0000_0001,
+            self.window_ms.to_bits(),
+            self.tick_ms.to_bits(),
+            self.ticks_per_window,
+            self.budget_bytes_per_tick,
+            self.chips as u64,
+            self.streams as u64,
+            self.total_ticks,
+            self.windows.len() as u64,
+        ];
+        for win in &self.windows {
+            win.digest_words(&mut w);
+        }
+        w.push(self.events.len() as u64);
+        for e in &self.events {
+            e.digest_words(&mut w);
+        }
+        w.push(self.incidents.len() as u64);
+        for inc in &self.incidents {
+            w.extend([
+                inc.kind.code(),
+                inc.first_window,
+                inc.last_window,
+                inc.stream.map_or(u64::MAX, |s| s as u64),
+                inc.magnitude_ppm,
+            ]);
+        }
+        w.extend(self.hub.digest_words());
+        w
+    }
+
+    /// Deterministic JSON: header, windowed series, incidents and the
+    /// metrics registry. The full event log is exported only through
+    /// [`Self::to_chrome_json`]; here its length pins the count (the
+    /// digest pins the content).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("window_ms", Json::Num(self.window_ms))
+            .set("tick_ms", Json::Num(self.tick_ms))
+            .set("ticks_per_window", Json::Num(self.ticks_per_window as f64))
+            .set("budget_bytes_per_tick", Json::Num(self.budget_bytes_per_tick as f64))
+            .set("chips", Json::Num(self.chips as f64))
+            .set("streams", Json::Num(self.streams as f64))
+            .set("total_ticks", Json::Num(self.total_ticks as f64))
+            .set("windows", Json::Arr(self.windows.iter().map(WindowSample::to_json).collect()))
+            .set("events", Json::Num(self.events.len() as f64))
+            .set("incidents", Json::Arr(self.incidents.iter().map(Incident::to_json).collect()))
+            .set("metrics", self.hub.to_json());
+        o
+    }
+
+    /// The run as a Chrome trace-event document (open in
+    /// `chrome://tracing` or Perfetto): track 0 is the bus — saturated
+    /// windows as spans, per-window byte counters, instant events for
+    /// churn, refusals and sheds — and track `1 + c` is chip `c`, with
+    /// one span per completed frame (dispatch tick to completion tick).
+    /// The document also carries the windowed series, incidents and
+    /// metrics as top-level keys, so one file holds the whole run.
+    pub fn to_chrome_json(&self, scenario: &str) -> Json {
+        let us_per_tick = self.tick_ms * 1e3;
+        let mut events: Vec<Json> = Vec::new();
+
+        let mut meta = |tid: usize, label: String, out: &mut Vec<Json>| {
+            let mut args = Json::obj();
+            args.set("name", Json::Str(label));
+            let mut e = Json::obj();
+            e.set("ph", Json::Str("M".into()))
+                .set("pid", Json::Num(0.0))
+                .set("tid", Json::Num(tid as f64))
+                .set("name", Json::Str("thread_name".into()))
+                .set("args", args);
+            out.push(e);
+        };
+        meta(0, "bus".into(), &mut events);
+        for c in 0..self.chips {
+            meta(1 + c, format!("chip{c}"), &mut events);
+        }
+
+        // Bus track: per-window counters and saturated spans.
+        for w in &self.windows {
+            let ts = w.window as f64 * self.ticks_per_window as f64 * us_per_tick;
+            let mut args = Json::obj();
+            args.set("demand_bytes", Json::Num(w.demand_bytes as f64))
+                .set("granted_bytes", Json::Num(w.granted_bytes as f64));
+            let mut e = Json::obj();
+            e.set("ph", Json::Str("C".into()))
+                .set("pid", Json::Num(0.0))
+                .set("tid", Json::Num(0.0))
+                .set("name", Json::Str("bus_bytes".into()))
+                .set("ts", Json::Num(ts))
+                .set("args", args);
+            events.push(e);
+            if w.sat_frac_ge(1, 2) {
+                let mut args = Json::obj();
+                args.set("saturated_ticks", Json::Num(w.saturated_ticks as f64))
+                    .set("ticks", Json::Num(w.ticks as f64));
+                let mut e = Json::obj();
+                e.set("ph", Json::Str("X".into()))
+                    .set("pid", Json::Num(0.0))
+                    .set("tid", Json::Num(0.0))
+                    .set("name", Json::Str("saturated".into()))
+                    .set("ts", Json::Num(ts))
+                    .set("dur", Json::Num(w.ticks as f64 * us_per_tick))
+                    .set("args", args);
+                events.push(e);
+            }
+        }
+
+        // Event log: instants on the bus track, frame spans on the chip
+        // tracks (dispatch tick -> completion tick).
+        let mut dispatched_at: HashMap<(usize, u64), u64> = HashMap::new();
+        for ev in &self.events {
+            let ts = ev.tick as f64 * us_per_tick;
+            match ev.kind {
+                TelemetryEventKind::Dispatch { stream, seq, .. } => {
+                    dispatched_at.insert((stream, seq), ev.tick);
+                }
+                TelemetryEventKind::Complete { stream, seq, chip, missed } => {
+                    let from = dispatched_at.remove(&(stream, seq)).unwrap_or(ev.tick);
+                    let mut args = Json::obj();
+                    args.set("stream", Json::Num(stream as f64))
+                        .set("seq", Json::Num(seq as f64))
+                        .set("missed", Json::Bool(missed));
+                    let mut e = Json::obj();
+                    e.set("ph", Json::Str("X".into()))
+                        .set("pid", Json::Num(0.0))
+                        .set("tid", Json::Num((1 + chip) as f64))
+                        .set("name", Json::Str(format!("s{stream}#{seq}")))
+                        .set("ts", Json::Num(from as f64 * us_per_tick))
+                        .set("dur", Json::Num((ev.tick + 1 - from) as f64 * us_per_tick))
+                        .set("args", args);
+                    events.push(e);
+                }
+                _ => {
+                    let (name, stream) = match ev.kind {
+                        TelemetryEventKind::Arrival { stream } => ("arrival", Some(stream)),
+                        TelemetryEventKind::Departure { stream } => ("departure", Some(stream)),
+                        TelemetryEventKind::Refusal { stream } => ("refusal", Some(stream)),
+                        TelemetryEventKind::Shed { stream, .. } => ("shed", Some(stream)),
+                        TelemetryEventKind::SaturationStart { .. } => ("saturation_start", None),
+                        TelemetryEventKind::SaturationEnd { .. } => ("saturation_end", None),
+                        _ => unreachable!("dispatch/complete handled above"),
+                    };
+                    let mut args = Json::obj();
+                    if let Some(s) = stream {
+                        args.set("stream", Json::Num(s as f64));
+                    }
+                    if let TelemetryEventKind::Shed { seq, cause, .. } = ev.kind {
+                        args.set("seq", Json::Num(seq as f64))
+                            .set("cause", Json::Str(cause.name().into()));
+                    }
+                    let mut e = Json::obj();
+                    e.set("ph", Json::Str("i".into()))
+                        .set("s", Json::Str("g".into()))
+                        .set("pid", Json::Num(0.0))
+                        .set("tid", Json::Num(0.0))
+                        .set("name", Json::Str(name.into()))
+                        .set("ts", Json::Num(ts))
+                        .set("args", args);
+                    events.push(e);
+                }
+            }
+        }
+
+        let mut other = Json::obj();
+        other
+            .set("schema", Json::Str("rcnet-dla/telemetry/v1".into()))
+            .set("scenario", Json::Str(scenario.into()))
+            .set("window_ms", Json::Num(self.window_ms))
+            .set("tick_ms", Json::Num(self.tick_ms))
+            .set("chips", Json::Num(self.chips as f64))
+            .set("total_ticks", Json::Num(self.total_ticks as f64));
+        let mut doc = Json::obj();
+        doc.set("displayTimeUnit", Json::Str("ms".into()))
+            .set("otherData", other)
+            .set("traceEvents", Json::Arr(events))
+            .set("series", Json::Arr(self.windows.iter().map(WindowSample::to_json).collect()))
+            .set(
+                "incidents",
+                Json::Arr(self.incidents.iter().map(Incident::to_json).collect()),
+            )
+            .set("metrics", self.hub.to_json());
+        doc
+    }
+
+    /// The windowed series as CSV (header + one row per window; per-chip
+    /// columns are summed over the pool).
+    pub fn series_csv(&self) -> String {
+        let mut out = String::from(
+            "window,start_ms,ticks,saturated_ticks,demand_bytes,granted_bytes,released,\
+             completed,missed,shed,arrivals,departures,refusals,dispatched,busy_ticks,\
+             queue_ticks\n",
+        );
+        for w in &self.windows {
+            let start_ms = w.window as f64 * self.ticks_per_window as f64 * self.tick_ms;
+            let busy: u64 = w.per_chip.iter().map(|c| c.busy_ticks).sum();
+            let queue: u64 = w.per_chip.iter().map(|c| c.queue_ticks).sum();
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                w.window,
+                start_ms,
+                w.ticks,
+                w.saturated_ticks,
+                w.demand_bytes,
+                w.granted_bytes,
+                w.released,
+                w.completed,
+                w.missed,
+                w.shed,
+                w.arrivals,
+                w.departures,
+                w.refusals,
+                w.dispatched,
+                busy,
+                queue,
+            ));
+        }
+        out
+    }
+
+    /// The windowed series, incidents and metric catalog as an aligned
+    /// human-readable table (the `obs` CLI subcommand's default output).
+    pub fn series_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "telemetry: {} windows x {:.0} ms  ({} ticks, {} chips, {} streams)\n",
+            self.windows.len(),
+            self.window_ms,
+            self.total_ticks,
+            self.chips,
+            self.streams
+        ));
+        out.push_str(
+            "window  start_ms  sat%  demand_mb  grant_mb   rel  done  miss  shed  busy%  queue\n",
+        );
+        for w in &self.windows {
+            let start_ms = w.window as f64 * self.ticks_per_window as f64 * self.tick_ms;
+            let busy: u64 = w.per_chip.iter().map(|c| c.busy_ticks).sum();
+            let queue: u64 = w.per_chip.iter().map(|c| c.queue_ticks).sum();
+            let denom = (w.ticks * self.chips as u64).max(1);
+            out.push_str(&format!(
+                "{:>6}  {:>8.0}  {:>4}  {:>9.2}  {:>8.2}  {:>4}  {:>4}  {:>4}  {:>4}  \
+                 {:>5}  {:>5}\n",
+                w.window,
+                start_ms,
+                100 * w.saturated_ticks / w.ticks.max(1),
+                w.demand_bytes as f64 / 1e6,
+                w.granted_bytes as f64 / 1e6,
+                w.released,
+                w.completed,
+                w.missed,
+                w.shed,
+                100 * busy / denom,
+                queue,
+            ));
+        }
+        if self.incidents.is_empty() {
+            out.push_str("incidents: none\n");
+        } else {
+            out.push_str(&format!("incidents: {}\n", self.incidents.len()));
+            for inc in &self.incidents {
+                out.push_str(&format!("  {inc}\n"));
+            }
+        }
+        out.push_str(&format!("metrics: {}\n", self.hub.len()));
+        for (name, m) in self.hub.iter() {
+            match m {
+                crate::obs::MetricValue::Counter(c) => {
+                    out.push_str(&format!("  {name} = {c}\n"));
+                }
+                crate::obs::MetricValue::Gauge(v) => {
+                    out.push_str(&format!("  {name} = {v} (gauge)\n"));
+                }
+                crate::obs::MetricValue::Histogram(h) => {
+                    out.push_str(&format!(
+                        "  {name}: n={} max={} mean={}\n",
+                        h.count(),
+                        h.max(),
+                        h.sum() / h.count().max(1)
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The in-run recorder both engines drive from their main thread. All
+/// hooks observe values the engines already hold (the same values, in
+/// the same order, in both engines), so recording never perturbs the
+/// simulation — a run with telemetry off is bit-identical to one with
+/// it on, minus the report's telemetry section.
+#[derive(Debug)]
+pub(crate) struct Telemetry {
+    window_ms: f64,
+    tick_ms: f64,
+    ticks_per_window: u64,
+    budget_bytes_per_tick: f64,
+    chips: usize,
+    streams: usize,
+    total_ticks: u64,
+    cur: WindowSample,
+    windows: Vec<WindowSample>,
+    events: Vec<TelemetryEvent>,
+    // Per-tick buffers, flushed in canonical phase order by `end_tick`
+    // (the engines visit the same shed set in different intra-tick
+    // orders, so sheds are canonicalized by (cause, stream, seq)).
+    tick_admission: Vec<TelemetryEvent>,
+    tick_sheds: Vec<(ShedCause, usize, u64)>,
+    tick_dispatch: Vec<TelemetryEvent>,
+    tick_complete: Vec<TelemetryEvent>,
+    live_streams: u64,
+    hub: MetricsHub,
+}
+
+impl Telemetry {
+    pub(crate) fn new(
+        cfg: &TelemetryConfig,
+        tick_ms: f64,
+        streams: usize,
+        chips: usize,
+        budget_bytes_per_tick: f64,
+        plan_hits: u64,
+        plan_misses: u64,
+    ) -> Telemetry {
+        let ticks_per_window = (cfg.window_ms / tick_ms).round().max(1.0) as u64;
+        let mut hub = MetricsHub::new();
+        hub.inc("plan_cache.hits", plan_hits);
+        hub.inc("plan_cache.misses", plan_misses);
+        Telemetry {
+            window_ms: cfg.window_ms,
+            tick_ms,
+            ticks_per_window,
+            budget_bytes_per_tick,
+            chips,
+            streams,
+            total_ticks: 0,
+            cur: WindowSample::new(0, chips, streams),
+            windows: Vec::new(),
+            events: Vec::new(),
+            tick_admission: Vec::new(),
+            tick_sheds: Vec::new(),
+            tick_dispatch: Vec::new(),
+            tick_complete: Vec::new(),
+            live_streams: 0,
+            hub,
+        }
+    }
+
+    /// Phase 1: timeline toggles `(stream, live)` in event order, plus
+    /// the streams refused at admission this tick.
+    pub(crate) fn on_admission(&mut self, tick: u64, toggles: &[(usize, bool)], refused: &[usize]) {
+        for &(stream, live) in toggles {
+            if live {
+                self.cur.arrivals += 1;
+                self.live_streams += 1;
+                self.tick_admission
+                    .push(TelemetryEvent { tick, kind: TelemetryEventKind::Arrival { stream } });
+            } else {
+                self.cur.departures += 1;
+                self.live_streams = self.live_streams.saturating_sub(1);
+                self.tick_admission
+                    .push(TelemetryEvent { tick, kind: TelemetryEventKind::Departure { stream } });
+            }
+        }
+        for &stream in refused {
+            self.cur.refusals += 1;
+            self.tick_admission
+                .push(TelemetryEvent { tick, kind: TelemetryEventKind::Refusal { stream } });
+        }
+    }
+
+    /// Phase 2: one frame released into the ready queue.
+    pub(crate) fn on_release(&mut self, stream: usize) {
+        self.cur.released += 1;
+        self.cur.per_stream[stream].released += 1;
+    }
+
+    /// Phases 3/4: one frame shed (expiry, overflow or unservable).
+    pub(crate) fn on_shed(&mut self, stream: usize, seq: u64, cause: ShedCause) {
+        self.cur.shed += 1;
+        self.tick_sheds.push((cause, stream, seq));
+    }
+
+    /// Phase 4: one frame dispatched onto chip `chip`.
+    pub(crate) fn on_dispatch(&mut self, tick: u64, stream: usize, seq: u64, chip: usize) {
+        self.cur.dispatched += 1;
+        self.cur.per_chip[chip].dispatched += 1;
+        let kind = TelemetryEventKind::Dispatch { stream, seq, chip };
+        self.tick_dispatch.push(TelemetryEvent { tick, kind });
+    }
+
+    /// Phase 6: one frame completed; `missed` must be the same predicate
+    /// the stats use (latency above the deadline budget).
+    pub(crate) fn on_complete(
+        &mut self,
+        tick: u64,
+        stream: usize,
+        seq: u64,
+        chip: usize,
+        latency_ms: f64,
+        missed: bool,
+    ) {
+        self.cur.completed += 1;
+        self.cur.per_stream[stream].completed += 1;
+        if missed {
+            self.cur.missed += 1;
+        }
+        self.hub.observe("frame.latency_us", (latency_ms * 1e3).round() as u64);
+        self.tick_complete.push(TelemetryEvent {
+            tick,
+            kind: TelemetryEventKind::Complete { stream, seq, chip, missed },
+        });
+    }
+
+    /// End of tick: bus accounting (same saturation predicate as the
+    /// arbiter), per-chip occupancy sampled post-refill, event-buffer
+    /// flush in canonical phase order, and window rollover.
+    pub(crate) fn end_tick(
+        &mut self,
+        tick: u64,
+        demands: &[f64],
+        grants: &[f64],
+        chip_states: &[(bool, u32)],
+    ) {
+        let offered: f64 = demands.iter().sum();
+        let granted: f64 = grants.iter().sum();
+        self.cur.ticks += 1;
+        self.cur.demand_bytes += offered as u64;
+        self.cur.granted_bytes += granted as u64;
+        if offered > self.budget_bytes_per_tick + 1e-9 {
+            self.cur.saturated_ticks += 1;
+        }
+        for (c, &(busy, queued)) in chip_states.iter().enumerate() {
+            if busy {
+                self.cur.per_chip[c].busy_ticks += 1;
+            }
+            self.cur.per_chip[c].queue_ticks += u64::from(queued);
+        }
+        self.hub.observe("bus.tick_offered_kb", offered as u64 / 1024);
+        self.hub.set("fleet.live_streams", self.live_streams);
+
+        self.events.append(&mut self.tick_admission);
+        self.tick_sheds.sort_by_key(|&(cause, stream, seq)| (cause.code(), stream, seq));
+        for (cause, stream, seq) in self.tick_sheds.drain(..) {
+            let kind = TelemetryEventKind::Shed { stream, seq, cause };
+            self.events.push(TelemetryEvent { tick, kind });
+        }
+        self.events.append(&mut self.tick_dispatch);
+        self.events.append(&mut self.tick_complete);
+
+        self.total_ticks += 1;
+        if self.total_ticks % self.ticks_per_window == 0 {
+            let next = WindowSample::new(self.cur.window + 1, self.chips, self.streams);
+            self.windows.push(std::mem::replace(&mut self.cur, next));
+        }
+    }
+
+    /// Close the run: flush the partial window, run the incident
+    /// detector, merge the saturation crossings into the log, and fold
+    /// the run totals into the hub.
+    pub(crate) fn finish(mut self) -> TelemetryReport {
+        if self.cur.ticks > 0 {
+            self.windows.push(self.cur);
+        } else if self.windows.is_empty() {
+            self.windows.push(self.cur); // zero-tick run: keep one empty window
+        }
+        let (incidents, crossings) = detect_incidents(&self.windows, self.ticks_per_window);
+        self.events.extend(crossings);
+        self.events.sort_by_key(|e| e.tick); // stable: same-tick order preserved
+
+        let released: u64 = self.windows.iter().map(|w| w.released).sum();
+        let completed: u64 = self.windows.iter().map(|w| w.completed).sum();
+        let missed: u64 = self.windows.iter().map(|w| w.missed).sum();
+        let shed: u64 = self.windows.iter().map(|w| w.shed).sum();
+        let arrivals: u64 = self.windows.iter().map(|w| w.arrivals).sum();
+        let departures: u64 = self.windows.iter().map(|w| w.departures).sum();
+        let refusals: u64 = self.windows.iter().map(|w| w.refusals).sum();
+        let dispatched: u64 = self.windows.iter().map(|w| w.dispatched).sum();
+        self.hub.inc("fleet.released", released);
+        self.hub.inc("fleet.completed", completed);
+        self.hub.inc("fleet.missed", missed);
+        self.hub.inc("fleet.shed", shed);
+        self.hub.inc("fleet.arrivals", arrivals);
+        self.hub.inc("fleet.departures", departures);
+        self.hub.inc("fleet.refusals", refusals);
+        self.hub.inc("fleet.dispatched", dispatched);
+
+        TelemetryReport {
+            window_ms: self.window_ms,
+            tick_ms: self.tick_ms,
+            ticks_per_window: self.ticks_per_window,
+            budget_bytes_per_tick: self.budget_bytes_per_tick as u64,
+            chips: self.chips,
+            streams: self.streams,
+            total_ticks: self.total_ticks,
+            windows: self.windows,
+            events: self.events,
+            incidents,
+            hub: self.hub,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic window with `sat` of `ticks` saturated ticks.
+    fn win(i: u64, sat: u64, ticks: u64) -> WindowSample {
+        WindowSample {
+            window: i,
+            ticks,
+            saturated_ticks: sat,
+            per_stream: vec![StreamWindow::default(); 2],
+            ..WindowSample::default()
+        }
+    }
+
+    #[test]
+    fn chronic_saturation_is_not_an_onset() {
+        let windows: Vec<WindowSample> = (0..20).map(|i| win(i, 95, 100)).collect();
+        let (incidents, crossings) = detect_incidents(&windows, 100);
+        assert!(
+            incidents.iter().all(|i| i.kind != IncidentKind::SustainedSaturation),
+            "saturated from window 0 must not report an onset: {incidents:?}"
+        );
+        assert!(crossings.is_empty());
+    }
+
+    #[test]
+    fn clean_saturation_arc_is_one_incident() {
+        // Quiet warmup, quiet start, a 6-window saturated plateau, quiet
+        // tail: exactly one onset, with both crossings logged.
+        let mut windows: Vec<WindowSample> = (0..5).map(|i| win(i, 5, 100)).collect();
+        windows.extend((5..11).map(|i| win(i, 90, 100)));
+        windows.extend((11..15).map(|i| win(i, 3, 100)));
+        let (incidents, crossings) = detect_incidents(&windows, 100);
+        let sat: Vec<&Incident> =
+            incidents.iter().filter(|i| i.kind == IncidentKind::SustainedSaturation).collect();
+        assert_eq!(sat.len(), 1, "{incidents:?}");
+        assert_eq!((sat[0].first_window, sat[0].last_window), (5, 10));
+        assert_eq!(sat[0].magnitude_ppm, 900_000);
+        assert_eq!(crossings.len(), 2);
+        assert_eq!(crossings[0].tick, 500);
+    }
+
+    #[test]
+    fn short_blip_crosses_but_is_not_an_incident() {
+        let mut windows: Vec<WindowSample> = (0..6).map(|i| win(i, 0, 100)).collect();
+        windows.extend((6..8).map(|i| win(i, 80, 100)));
+        windows.extend((8..12).map(|i| win(i, 0, 100)));
+        let (incidents, crossings) = detect_incidents(&windows, 100);
+        assert!(incidents.iter().all(|i| i.kind != IncidentKind::SustainedSaturation));
+        assert_eq!(crossings.len(), 2, "the crossings are still logged");
+    }
+
+    #[test]
+    fn hysteresis_rides_through_a_mid_episode_dip() {
+        // One window at 30% (above the 25% exit) must not split the
+        // episode.
+        let mut windows: Vec<WindowSample> = (0..4).map(|i| win(i, 0, 100)).collect();
+        windows.extend((4..7).map(|i| win(i, 90, 100)));
+        windows.push(win(7, 30, 100));
+        windows.extend((8..10).map(|i| win(i, 90, 100)));
+        windows.extend((10..13).map(|i| win(i, 0, 100)));
+        let (incidents, _) = detect_incidents(&windows, 100);
+        let sat: Vec<&Incident> =
+            incidents.iter().filter(|i| i.kind == IncidentKind::SustainedSaturation).collect();
+        assert_eq!(sat.len(), 1);
+        assert_eq!((sat[0].first_window, sat[0].last_window), (4, 9));
+    }
+
+    #[test]
+    fn miss_spike_needs_floor_fraction_and_run_relative_excess() {
+        let mut windows: Vec<WindowSample> = (0..10)
+            .map(|i| WindowSample { missed: 1, completed: 100, ..win(i, 0, 100) })
+            .collect();
+        // Window 5: 40 of 100 missed — way over 2x the run average.
+        windows[5].missed = 40;
+        let (incidents, _) = detect_incidents(&windows, 100);
+        let spikes: Vec<&Incident> =
+            incidents.iter().filter(|i| i.kind == IncidentKind::MissRateSpike).collect();
+        assert_eq!(spikes.len(), 1, "{incidents:?}");
+        assert_eq!((spikes[0].first_window, spikes[0].last_window), (5, 5));
+        assert_eq!(spikes[0].magnitude_ppm, 400_000);
+
+        // Chronic missing at a uniform rate is not a spike.
+        let chronic: Vec<WindowSample> = (0..10)
+            .map(|i| WindowSample { missed: 40, completed: 100, ..win(i, 0, 100) })
+            .collect();
+        let (incidents, _) = detect_incidents(&chronic, 100);
+        assert!(incidents.iter().all(|i| i.kind != IncidentKind::MissRateSpike));
+    }
+
+    #[test]
+    fn starving_stream_needs_a_long_enough_run() {
+        let mut windows: Vec<WindowSample> = (0..10).map(|i| win(i, 0, 100)).collect();
+        for w in &mut windows {
+            w.per_stream[0] = StreamWindow { released: 3, completed: 1 };
+        }
+        // Stream 1 releases without completing in windows 2..=7 (6 >= 5).
+        for w in &mut windows[2..8] {
+            w.per_stream[1] = StreamWindow { released: 2, completed: 0 };
+        }
+        let (incidents, _) = detect_incidents(&windows, 100);
+        let starve: Vec<&Incident> =
+            incidents.iter().filter(|i| i.kind == IncidentKind::StarvingStream).collect();
+        assert_eq!(starve.len(), 1, "{incidents:?}");
+        assert_eq!(starve[0].stream, Some(1));
+        assert_eq!((starve[0].first_window, starve[0].last_window), (2, 7));
+        assert_eq!(starve[0].magnitude_ppm, 12, "released frames while starving");
+
+        // A 4-window run is below the floor.
+        let mut short: Vec<WindowSample> = (0..10).map(|i| win(i, 0, 100)).collect();
+        for w in &mut short[2..6] {
+            w.per_stream[1] = StreamWindow { released: 2, completed: 0 };
+        }
+        let (incidents, _) = detect_incidents(&short, 100);
+        assert!(incidents.iter().all(|i| i.kind != IncidentKind::StarvingStream));
+    }
+
+    #[test]
+    fn recorder_windows_events_and_report_shape() {
+        let cfg = TelemetryConfig { enabled: true, window_ms: 2.0 };
+        let mut t = Telemetry::new(&cfg, 1.0, 2, 1, 100.0, 3, 4);
+        // Tick 0: stream 0 arrives, releases, dispatches.
+        t.on_admission(0, &[(0, true)], &[1]);
+        t.on_release(0);
+        t.on_dispatch(0, 0, 0, 0);
+        t.end_tick(0, &[150.0], &[100.0], &[(true, 0)]);
+        // Tick 1: completion (on time), a shed, window closes.
+        t.on_shed(0, 1, ShedCause::Expired);
+        t.on_complete(1, 0, 0, 0, 3.5, false);
+        t.end_tick(1, &[50.0], &[50.0], &[(false, 0)]);
+        // Tick 2: idle, partial window.
+        t.end_tick(2, &[0.0], &[0.0], &[(false, 0)]);
+        let r = t.finish();
+
+        assert_eq!(r.ticks_per_window, 2);
+        assert_eq!(r.total_ticks, 3);
+        assert_eq!(r.windows.len(), 2);
+        assert_eq!(r.windows[0].ticks, 2);
+        assert_eq!(r.windows[0].saturated_ticks, 1, "150 > 100 on tick 0 only");
+        assert_eq!(r.windows[0].demand_bytes, 200);
+        assert_eq!(r.windows[0].granted_bytes, 150);
+        assert_eq!(r.windows[0].released, 1);
+        assert_eq!(r.windows[0].completed, 1);
+        assert_eq!(r.windows[0].shed, 1);
+        assert_eq!(r.windows[0].arrivals, 1);
+        assert_eq!(r.windows[0].refusals, 1);
+        assert_eq!(r.windows[0].per_chip[0].busy_ticks, 1);
+        assert_eq!(r.windows[1].ticks, 1);
+        // Log: arrival, refusal, dispatch (tick 0), shed, complete (1).
+        assert_eq!(r.events.len(), 5);
+        assert!(matches!(r.events[0].kind, TelemetryEventKind::Arrival { stream: 0 }));
+        let shed_kind = r.events[3].kind;
+        assert!(matches!(shed_kind, TelemetryEventKind::Shed { cause: ShedCause::Expired, .. }));
+        assert_eq!(r.hub.counter("plan_cache.hits"), 3);
+        assert_eq!(r.hub.counter("fleet.released"), 1);
+        assert_eq!(r.hub.histogram("frame.latency_us").unwrap().count(), 1);
+
+        // Digest, JSON and Chrome doc are deterministic and well formed.
+        assert_eq!(r.digest_words(), r.digest_words());
+        let doc = r.to_chrome_json("unit");
+        let parsed = Json::parse(&doc.to_string()).expect("valid chrome JSON");
+        let tev = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        assert!(tev.len() >= 2 + r.windows.len(), "metas + counters at minimum");
+        assert_eq!(
+            parsed.get("otherData").and_then(|o| o.get("scenario")).and_then(Json::as_str),
+            Some("unit")
+        );
+        let rt = Json::parse(&r.to_json().to_string()).expect("valid telemetry JSON");
+        assert_eq!(rt.get("windows").and_then(Json::as_arr).map(Vec::len), Some(2));
+        assert!(r.series_csv().lines().count() == 1 + r.windows.len());
+        assert!(r.series_table().contains("incidents:"));
+    }
+
+    #[test]
+    fn shed_order_is_canonical_within_a_tick() {
+        let cfg = TelemetryConfig { enabled: true, window_ms: 10.0 };
+        let mut t = Telemetry::new(&cfg, 1.0, 3, 1, 1e9, 0, 0);
+        // Recorded in one order...
+        t.on_shed(2, 7, ShedCause::Overflow);
+        t.on_shed(0, 3, ShedCause::Expired);
+        t.on_shed(1, 1, ShedCause::Expired);
+        t.end_tick(0, &[0.0], &[0.0], &[(false, 0)]);
+        let a = t.finish();
+        // ...and in another: the log must come out identical.
+        let mut t = Telemetry::new(&cfg, 1.0, 3, 1, 1e9, 0, 0);
+        t.on_shed(1, 1, ShedCause::Expired);
+        t.on_shed(2, 7, ShedCause::Overflow);
+        t.on_shed(0, 3, ShedCause::Expired);
+        t.end_tick(0, &[0.0], &[0.0], &[(false, 0)]);
+        let b = t.finish();
+        assert_eq!(a.events, b.events);
+        assert!(matches!(a.events[0].kind, TelemetryEventKind::Shed { stream: 0, seq: 3, .. }));
+    }
+}

@@ -18,7 +18,10 @@ pub fn fnv1a(words: impl IntoIterator<Item = u64>) -> u64 {
     h
 }
 
-/// Arithmetic mean; 0 for empty input.
+/// Arithmetic mean.
+///
+/// Empty input returns 0.0, never NaN — the crate-wide "zero-not-NaN"
+/// convention every report aggregate relies on (pinned in tests).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -26,7 +29,10 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
-/// Population standard deviation; 0 for < 2 samples.
+/// Population standard deviation.
+///
+/// Fewer than 2 samples return 0.0 (a single observation has no spread;
+/// empty input follows the same zero-not-NaN convention as [`mean`]).
 pub fn stddev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;
@@ -36,13 +42,18 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// p-th percentile (0..=100) by nearest-rank on a sorted copy.
+///
+/// Pinned edge behavior: the input need not be sorted (a copy is sorted
+/// internally with a total order, so NaN-free inputs can never panic);
+/// a single sample is every percentile of itself; empty input returns
+/// 0.0; `p` outside 0..=100 clamps to the extreme ranks.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v.sort_by(f64::total_cmp);
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round().max(0.0) as usize;
     v[rank.min(v.len() - 1)]
 }
 
@@ -67,5 +78,31 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    /// Satellite pin: the documented edge cases hold — unsorted input,
+    /// single samples, empty slices and out-of-range `p`.
+    #[test]
+    fn percentile_edges_are_pinned() {
+        // Unsorted input gives the same answer as sorted input.
+        assert_eq!(percentile(&[9.0, 1.0, 5.0], 50.0), 5.0);
+        assert_eq!(percentile(&[1.0, 5.0, 9.0], 50.0), 5.0);
+        // A single sample is every percentile of itself.
+        for p in [0.0, 37.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[42.0], p), 42.0);
+        }
+        // Empty input is 0.0, not NaN or a panic.
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        // Out-of-range p clamps to the extreme ranks.
+        assert_eq!(percentile(&[1.0, 2.0, 3.0], -10.0), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0], 250.0), 3.0);
+    }
+
+    /// Satellite pin: empty-input aggregates are 0.0, never NaN.
+    #[test]
+    fn empty_aggregates_are_zero_not_nan() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[]), 0.0);
+        assert_eq!(stddev(&[7.5]), 0.0);
     }
 }

@@ -1,0 +1,156 @@
+//! Telemetry acceptance pins: for every bundled preset the telemetry
+//! document — Chrome trace JSON, window series, and incident list — is
+//! byte-identical across repeated runs and across serial vs parallel
+//! engines at every thread count; rush-hour raises a sustained bus
+//! saturation incident at the default span while steady-hd raises none;
+//! and disabling the hub (`--no-telemetry`) leaves the fleet books and
+//! stats digest exactly where they were before telemetry existed.
+
+use rcnet_dla::serve::{
+    run_fleet, FleetConfig, IncidentKind, Scenario, TelemetryConfig, PRESET_NAMES,
+};
+use rcnet_dla::util::json::Json;
+
+fn preset_cfg(name: &str, seed: u64, threads: usize) -> FleetConfig {
+    // 2 s spans rush-hour's whole churn window (same choice as
+    // tests/scenario_fleet.rs) while keeping the full matrix cheap.
+    FleetConfig {
+        seconds: 2.0,
+        seed,
+        threads,
+        ..FleetConfig::new(Scenario::preset(name).expect("bundled preset"))
+    }
+}
+
+/// The headline determinism pin: every bundled preset, two seeds, two
+/// parallel thread counts vs the serial reference, plus a repeated
+/// serial run — the exported Chrome trace document and the incident
+/// list are byte-for-byte identical in all of them.
+#[test]
+fn every_preset_telemetry_is_byte_identical_across_seeds_and_thread_counts() {
+    for name in PRESET_NAMES {
+        for seed in [1u64, 7] {
+            let serial = run_fleet(&preset_cfg(name, seed, 1)).expect("serial run");
+            let tel = serial.telemetry.as_ref().expect("telemetry on by default");
+            let doc = tel.to_chrome_json(name).to_string();
+            assert!(!tel.windows.is_empty(), "{name} seed {seed}: no windows sampled");
+
+            // Run-to-run: a second serial run reproduces the bytes.
+            let again = run_fleet(&preset_cfg(name, seed, 1)).expect("serial rerun");
+            let tel2 = again.telemetry.as_ref().expect("telemetry on rerun");
+            assert_eq!(doc, tel2.to_chrome_json(name).to_string(), "{name} seed {seed}: rerun");
+
+            // Serial vs parallel at several thread counts.
+            for threads in [2usize, 8] {
+                let parallel = run_fleet(&preset_cfg(name, seed, threads)).expect("parallel run");
+                let ptel = parallel.telemetry.as_ref().expect("telemetry on in parallel");
+                assert_eq!(
+                    serial.stats_digest(),
+                    parallel.stats_digest(),
+                    "{name} seed {seed} x{threads}: digest diverged"
+                );
+                assert_eq!(
+                    tel.incidents, ptel.incidents,
+                    "{name} seed {seed} x{threads}: incident lists diverged"
+                );
+                assert_eq!(
+                    doc,
+                    ptel.to_chrome_json(name).to_string(),
+                    "{name} seed {seed} x{threads}: chrome trace diverged"
+                );
+            }
+        }
+    }
+}
+
+/// The incident acceptance pin at the *default* configuration (the
+/// exact run `fleet --scenario rush-hour --telemetry out.json` does):
+/// rush-hour's burst overloads the shared bus long enough to raise at
+/// least one sustained-saturation incident, while steady-hd — chronic
+/// but stable load — raises none.
+#[test]
+fn rush_hour_saturates_and_steady_hd_does_not() {
+    let rush = run_fleet(&FleetConfig::new(Scenario::preset("rush-hour").expect("preset")))
+        .expect("rush-hour run");
+    let rtel = rush.telemetry.as_ref().expect("telemetry on by default");
+    assert!(
+        rtel.incidents_of(IncidentKind::SustainedSaturation).count() >= 1,
+        "rush-hour burst must raise a sustained-saturation incident; got {:?}",
+        rtel.incidents
+    );
+
+    let steady = run_fleet(&FleetConfig::new(Scenario::preset("steady-hd").expect("preset")))
+        .expect("steady-hd run");
+    let stel = steady.telemetry.as_ref().expect("telemetry on by default");
+    assert_eq!(
+        stel.incidents_of(IncidentKind::SustainedSaturation).count(),
+        0,
+        "steady-hd load is chronic, not an onset: {:?}",
+        stel.incidents
+    );
+}
+
+/// The `--no-telemetry` fast-path pin: a hub-off run carries no
+/// telemetry report, and its stats digest equals the hub-on run with
+/// the telemetry section stripped — the hub observes the fleet without
+/// perturbing it, and hub-off digests still match pre-telemetry pins.
+#[test]
+fn disabling_telemetry_leaves_the_fleet_books_untouched() {
+    for name in PRESET_NAMES {
+        let on = run_fleet(&preset_cfg(name, 1, 1)).expect("hub-on run");
+        let off = run_fleet(&FleetConfig {
+            telemetry: TelemetryConfig::off(),
+            ..preset_cfg(name, 1, 1)
+        })
+        .expect("hub-off run");
+        assert!(off.telemetry.is_none(), "{name}: hub-off run must carry no telemetry");
+        assert!(on.telemetry.is_some(), "{name}: default run must carry telemetry");
+        assert_ne!(
+            on.stats_digest(),
+            off.stats_digest(),
+            "{name}: telemetry must be folded into the digest when present"
+        );
+        let mut stripped = on.clone();
+        stripped.telemetry = None;
+        assert_eq!(
+            stripped.stats_digest(),
+            off.stats_digest(),
+            "{name}: hub must not perturb the fleet books"
+        );
+    }
+}
+
+/// The exported document is a well-formed Chrome trace-event file: it
+/// parses, carries `traceEvents` + `displayTimeUnit`, names the
+/// scenario in `otherData`, and embeds the window series, incident
+/// list, and metrics snapshot alongside.
+#[test]
+fn chrome_trace_document_is_well_formed() {
+    let report = run_fleet(&preset_cfg("rush-hour", 1, 1)).expect("rush-hour run");
+    let tel = report.telemetry.as_ref().expect("telemetry on by default");
+    let doc = Json::parse(&tel.to_chrome_json("rush-hour").to_string()).expect("doc parses");
+
+    assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(!events.is_empty(), "trace must carry events");
+    for ev in events {
+        let ph = ev.get("ph").and_then(Json::as_str).expect("event phase");
+        assert!(
+            matches!(ph, "M" | "C" | "X" | "i"),
+            "unexpected trace event phase {ph:?}"
+        );
+    }
+
+    let other = doc.get("otherData").expect("otherData");
+    assert_eq!(other.get("scenario").and_then(Json::as_str), Some("rush-hour"));
+    assert_eq!(
+        other.get("schema").and_then(Json::as_str),
+        Some("rcnet-dla/telemetry/v1")
+    );
+    assert!(other.get("total_ticks").and_then(Json::as_u64).is_some_and(|t| t > 0));
+
+    let series = doc.get("series").and_then(Json::as_arr).expect("series array");
+    assert_eq!(series.len(), tel.windows.len(), "one series row per window");
+    assert!(doc.get("incidents").and_then(Json::as_arr).is_some(), "incidents array");
+    assert!(doc.get("metrics").is_some(), "metrics snapshot");
+}
