@@ -5,11 +5,13 @@
 //! runs standardized workloads — fleet scaling over the parallel engine,
 //! planner DP-vs-greedy across the model zoo, fused vs layer-by-layer
 //! schedule simulation, phase-level trace construction, the bundled
-//! scenario presets (churn, multi-model, heterogeneous pools), and the
-//! telemetry hub on-vs-off overhead — and emits one JSON report per
-//! family (`BENCH_fleet.json`, `BENCH_planner.json`, `BENCH_trace.json`,
-//! `BENCH_serve_scenario.json`, `BENCH_telemetry.json`) that CI uploads
-//! and gates against the committed baselines at the repository root.
+//! scenario presets (churn, multi-model, heterogeneous pools), the
+//! fault-and-degradation presets (autoscaling, QoS downshift, chip
+//! failures), and the telemetry hub on-vs-off overhead — and emits one
+//! JSON report per family (`BENCH_fleet.json`, `BENCH_planner.json`,
+//! `BENCH_trace.json`, `BENCH_serve_scenario.json`, `BENCH_fault.json`,
+//! `BENCH_telemetry.json`) that CI uploads and gates against the
+//! committed baselines at the repository root.
 //!
 //! Every measurement separates two kinds of numbers:
 //!
@@ -33,7 +35,8 @@ mod workloads;
 
 pub use compare::{compare_reports, CompareOutcome, Regression};
 pub use workloads::{
-    fleet_report, planner_report, scenario_report, telemetry_report, trace_report, BenchProfile,
+    fault_report, fleet_report, planner_report, scenario_report, telemetry_report, trace_report,
+    BenchProfile,
 };
 
 use std::path::Path;
@@ -116,7 +119,7 @@ impl Measurement {
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchReport {
     /// Report family (`"fleet"`, `"planner"`, `"trace"`,
-    /// `"serve_scenario"` or `"telemetry"`).
+    /// `"serve_scenario"`, `"fault"` or `"telemetry"`).
     pub kind: String,
     /// True when produced by the reduced `--quick` CI profile.
     pub quick: bool,

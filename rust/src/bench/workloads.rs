@@ -28,6 +28,12 @@
 //!   the scenario timeline machinery (online admission, capability
 //!   dispatch, per-model plan pricing) and every bench run doubles as a
 //!   churn determinism check.
+//! * **fault** ([`fault_report`]) — the fault-and-degradation presets
+//!   (diurnal autoscaling, flash-crowd QoS downshift, scripted chip
+//!   failures) on both engines, digest-cross-checked per point, so the
+//!   perf gate covers the adaptive layer (fault timeline replay,
+//!   in-flight requeue, the windowed downshift controller) and pins the
+//!   degraded-seconds bill each preset runs up.
 //! * **telemetry** ([`telemetry_report`]) — each profiled preset on the
 //!   serial engine with the metrics hub on vs off (the `--no-telemetry`
 //!   fast path), so the perf gate bounds the observability overhead and
@@ -135,6 +141,22 @@ impl BenchProfile {
     fn scenario_seconds(self) -> f64 {
         match self {
             // Long enough that rush-hour's departures actually fire.
+            BenchProfile::Quick => 2.0,
+            BenchProfile::Full => 3.5,
+        }
+    }
+
+    fn fault_names(self) -> &'static [&'static str] {
+        // All three fault presets in both profiles: each exercises a
+        // different adaptive axis (autoscaling, QoS downshift, scripted
+        // chip faults) and all are cheap at the fault seconds below.
+        &["diurnal-load", "flash-crowd", "chip-failure"]
+    }
+
+    fn fault_seconds(self) -> f64 {
+        match self {
+            // chip-failure's last restore lands at 1.4 s; keep the whole
+            // fault script (and the recovery tail) under the quick gate.
             BenchProfile::Quick => 2.0,
             BenchProfile::Full => 3.5,
         }
@@ -530,6 +552,85 @@ pub fn scenario_report(profile: BenchProfile) -> Result<BenchReport> {
             });
             rep.measurements.push(Measurement {
                 id: format!("serve-scenario-setup/{point}/threads={engine}"),
+                wall_ms: setup_ms,
+                fingerprint: String::new(),
+                metrics: Vec::new(),
+            });
+        }
+    }
+    Ok(rep)
+}
+
+/// Run the fault workload family (see the module docs).
+pub fn fault_report(profile: BenchProfile) -> Result<BenchReport> {
+    let mut rep = BenchReport::new("fault", profile == BenchProfile::Quick);
+    let seconds = profile.fault_seconds();
+    for &name in profile.fault_names() {
+        // Hub off, like the other fleet families: the gate prices the
+        // adaptive layer itself, not the observability of it.
+        let base = FleetConfig {
+            seconds,
+            telemetry: TelemetryConfig::off(),
+            ..FleetConfig::new(Scenario::preset(name)?)
+        };
+        let serial_cfg = FleetConfig { threads: 1, ..base.clone() };
+        let auto_cfg = FleetConfig { threads: 0, ..base };
+
+        let (sim, setup_serial_ms) = time_ms(|| FleetSim::new(&serial_cfg));
+        let sim = sim?;
+        let (psim, setup_auto_ms) = time_ms(|| FleetSim::new(&auto_cfg));
+        let psim = psim?;
+
+        let (serial, serial_ms) = time_ms(|| {
+            let mut s = sim;
+            s.run()
+        });
+        let workers = resolve_threads(0);
+        let (parallel, parallel_ms) = time_ms(|| psim.run_parallel(workers));
+
+        // Faults and downshifts must not cost determinism: requeued
+        // in-flight frames and one-window-latency verdicts land the
+        // same way on both engines.
+        if serial.stats_digest() != parallel.stats_digest() {
+            crate::bail!("parallel fleet diverged from serial on fault preset {name}");
+        }
+
+        let point = format!("scenario={name}/sec={seconds}");
+        let fingerprint = fingerprint_hex([
+            fnv1a(name.bytes().map(u64::from)),
+            seconds.to_bits(),
+            serial.stats_digest(),
+        ]);
+        for (engine, wall_ms, setup_ms, r) in [
+            ("1", serial_ms, setup_serial_ms, &serial),
+            ("auto", parallel_ms, setup_auto_ms, &parallel),
+        ] {
+            let mut metrics = fleet_metrics(r, seconds);
+            metrics.push(Metric {
+                name: "degraded_s".into(),
+                value: r.degraded_s(),
+                better: Direction::Info,
+            });
+            metrics.push(Metric {
+                name: "degraded_windows".into(),
+                value: r.degraded_windows() as f64,
+                better: Direction::Info,
+            });
+            if engine == "auto" {
+                metrics.push(Metric {
+                    name: "workers".into(),
+                    value: workers as f64,
+                    better: Direction::Info,
+                });
+            }
+            rep.measurements.push(Measurement {
+                id: format!("fault/{point}/threads={engine}"),
+                wall_ms,
+                fingerprint: fingerprint.clone(),
+                metrics,
+            });
+            rep.measurements.push(Measurement {
+                id: format!("fault-setup/{point}/threads={engine}"),
                 wall_ms: setup_ms,
                 fingerprint: String::new(),
                 metrics: Vec::new(),

@@ -73,20 +73,29 @@
 //! statistics window over each stream's actual lifetime. Deterministic
 //! from the config — virtual time only. Setting `threads: 0` shards the
 //! engine across one worker per core ([`serve::parallel`]) with
-//! byte-identical output, churn included.
+//! byte-identical output, churn included. The timeline also scripts
+//! chip faults ([`serve::FaultEvent`]: outages, DRAM-link throttles,
+//! thermal derates) that both engines replay at event boundaries —
+//! in-flight frames are requeued, never dropped — while the
+//! [`serve::qos`] controller downshifts non-gold streams along
+//! pre-priced ladders of cheaper operating points under sustained bus
+//! pressure, restores them when it clears, and autoscales chips from
+//! the scenario's standby set.
 //!
 //! Every fleet run also carries a deterministic observability layer
 //! ([`serve::telemetry`] over the [`obs`] metrics registry): windowed
 //! bus/chip/stream time series, a virtual-time event log exported as
 //! Chrome trace-event JSON (`fleet --telemetry out.json`), and typed
-//! incidents (sustained saturation, miss-rate spikes, starving streams)
+//! incidents (sustained saturation, miss-rate spikes, starving streams,
+//! sustained QoS degradation, chip outages)
 //! — byte-identical across engines, rendered by the `obs` subcommand,
 //! catalogued in `docs/OBSERVABILITY.md`.
 //!
 //! ```no_run
 //! use rcnet_dla::serve::{run_fleet, FleetConfig, Scenario};
 //!
-//! // Bundled presets: steady-hd, rush-hour, mixed-zoo, hetero-pool.
+//! // Bundled presets: steady-hd, rush-hour, mixed-zoo, hetero-pool,
+//! // diurnal-load, flash-crowd, chip-failure.
 //! let cfg = FleetConfig {
 //!     threads: 0,
 //!     ..FleetConfig::new(Scenario::preset("rush-hour").unwrap())
@@ -110,7 +119,8 @@
 //! [`bench`] packages all of the above into deterministic, regression-
 //! gated performance workloads: `rcnet-dla bench --quick` emits
 //! `BENCH_fleet.json` / `BENCH_planner.json` / `BENCH_trace.json` /
-//! `BENCH_serve_scenario.json` / `BENCH_telemetry.json`, and `bench --against` exits nonzero
+//! `BENCH_serve_scenario.json` / `BENCH_fault.json` /
+//! `BENCH_telemetry.json`, and `bench --against` exits nonzero
 //! when a gated value regresses past tolerance (the CI perf-smoke job).
 //! See `docs/BENCHMARKS.md`.
 

@@ -23,7 +23,8 @@
 //! * `bench`      — standardized performance workloads
 //!   ([`crate::bench`]): emits `BENCH_fleet.json` / `BENCH_planner.json`
 //!   / `BENCH_trace.json` / `BENCH_serve_scenario.json` /
-//!   `BENCH_telemetry.json` and optionally gates against a baseline
+//!   `BENCH_fault.json` / `BENCH_telemetry.json` and optionally gates
+//!   against a baseline
 //!   (nonzero exit on regression)
 //! * `serve`      — run the detection pipeline on synthetic frames
 //!   (requires `make artifacts` and the `pjrt` feature)
@@ -82,13 +83,15 @@ USAGE:
   rcnet-dla simulate  [--res 416|hd|fullhd|ivs] [--spec PATH]
   rcnet-dla trace     [--res 416|hd|fullhd|ivs] [--spec PATH]
                       [--schedule fused|layer-by-layer] [--out PATH]
-  rcnet-dla fleet     [--scenario steady-hd|rush-hour|mixed-zoo|hetero-pool]
+  rcnet-dla fleet     [--scenario steady-hd|rush-hour|mixed-zoo|hetero-pool|
+                       diurnal-load|flash-crowd|chip-failure]
                       [--streams N] [--chips N] [--bus-mbps MB] [--seconds S]
                       [--seed K] [--oversub F | --admit-all]
                       [--planner greedy|optimal-dp] [--threads N]
                       [--json] [--out PATH]
                       [--telemetry PATH | --no-telemetry] [--window-ms W]
-  rcnet-dla obs       [--scenario steady-hd|rush-hour|mixed-zoo|hetero-pool]
+  rcnet-dla obs       [--scenario steady-hd|rush-hour|mixed-zoo|hetero-pool|
+                       diurnal-load|flash-crowd|chip-failure]
                       [--seconds S] [--seed K] [--threads N] [--window-ms W]
                       [--csv] [--out PATH]
   rcnet-dla bench     [--quick] [--out-dir DIR] [--against PATH]
@@ -100,8 +103,9 @@ USAGE:
 --out or stdout; the output is a pure function of its inputs, so two
 runs are byte-identical (CI checks exactly that).
 `fleet --scenario` runs a bundled preset (stream churn, per-stream
-models, heterogeneous chip pools — see docs/SCENARIOS.md); without it a
-seeded uniform workload of --streams on --chips paper chips runs.
+models, heterogeneous chip pools, scripted chip faults and QoS
+degradation under load — see docs/SCENARIOS.md); without it a seeded
+uniform workload of --streams on --chips paper chips runs.
 `fleet --threads`: 1 = serial reference engine (default), 0 = one worker
 per core, N = N workers; output is byte-identical across engines.
 `fleet --json` prints the deterministic report document (stats digest
@@ -551,8 +555,8 @@ fn load_baseline(against: &str, kind: &str) -> Result<Option<crate::bench::Bench
 
 fn bench(flags: &HashMap<String, String>) -> Result<()> {
     use crate::bench::{
-        compare_reports, fleet_report, planner_report, scenario_report, telemetry_report,
-        trace_report, BenchProfile,
+        compare_reports, fault_report, fleet_report, planner_report, scenario_report,
+        telemetry_report, trace_report, BenchProfile,
     };
 
     let profile =
@@ -569,6 +573,8 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     let trace = trace_report(profile)?;
     eprintln!("bench: running the {} scenario workloads...", profile.name());
     let scenario = scenario_report(profile)?;
+    eprintln!("bench: running the {} fault workloads...", profile.name());
+    let fault = fault_report(profile)?;
     eprintln!("bench: running the {} telemetry workloads...", profile.name());
     let telemetry = telemetry_report(profile)?;
 
@@ -577,7 +583,7 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
         profile.name()
     ))
     .header(&["workload", "wall (ms)"]);
-    for rep in [&fleet, &planner, &trace, &scenario, &telemetry] {
+    for rep in [&fleet, &planner, &trace, &scenario, &fault, &telemetry] {
         for m in &rep.measurements {
             t.row(vec![m.id.clone(), format!("{:.3}", m.wall_ms)]);
         }
@@ -592,7 +598,7 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     let mut broken_baselines = Vec::new();
     let mut matched_baselines = 0usize;
     if let Some(against) = flags.get("against") {
-        for rep in [&fleet, &planner, &trace, &scenario, &telemetry] {
+        for rep in [&fleet, &planner, &trace, &scenario, &fault, &telemetry] {
             match load_baseline(against, &rep.kind) {
                 Ok(Some(base)) => {
                     matched_baselines += 1;
@@ -618,13 +624,15 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     planner.write(&out_dir.join("BENCH_planner.json"))?;
     trace.write(&out_dir.join("BENCH_trace.json"))?;
     scenario.write(&out_dir.join("BENCH_serve_scenario.json"))?;
+    fault.write(&out_dir.join("BENCH_fault.json"))?;
     telemetry.write(&out_dir.join("BENCH_telemetry.json"))?;
     eprintln!(
-        "bench: wrote {}, {}, {}, {} and {}",
+        "bench: wrote {}, {}, {}, {}, {} and {}",
         out_dir.join("BENCH_fleet.json").display(),
         out_dir.join("BENCH_planner.json").display(),
         out_dir.join("BENCH_trace.json").display(),
         out_dir.join("BENCH_serve_scenario.json").display(),
+        out_dir.join("BENCH_fault.json").display(),
         out_dir.join("BENCH_telemetry.json").display()
     );
 

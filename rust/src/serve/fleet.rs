@@ -36,6 +36,41 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use super::scenario::ChipSpec;
 use super::stream::FrameTask;
 
+/// One availability/derate change applied to a chip at a tick boundary —
+/// the common currency of the scripted fault timeline and the
+/// autoscaler. Both engines apply the same directives on the same tick
+/// (the parallel engine ships them to the owning shard), so chip state
+/// stays byte-identical.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChipDirective {
+    /// Bring the chip up (fault cleared, or standby activated).
+    Up,
+    /// Take the chip down; whatever it held is drained and requeued.
+    Down,
+    /// Derate the clock to this fraction of spec (thermal event).
+    ClockDerate(f64),
+    /// Restore the spec clock.
+    ClockRestore,
+    /// Derate the DRAM link to this fraction of spec (link throttle).
+    LinkDerate(f64),
+    /// Restore the spec link rate.
+    LinkRestore,
+}
+
+impl ChipDirective {
+    /// Stable numeric code, used by the telemetry event digest.
+    pub fn code(self) -> u8 {
+        match self {
+            ChipDirective::Up => 0,
+            ChipDirective::Down => 1,
+            ChipDirective::ClockDerate(_) => 2,
+            ChipDirective::ClockRestore => 3,
+            ChipDirective::LinkDerate(_) => 4,
+            ChipDirective::LinkRestore => 5,
+        }
+    }
+}
+
 /// A frame being executed by a chip.
 #[derive(Debug)]
 pub struct InFlight {
@@ -82,6 +117,20 @@ pub struct ChipWorker {
     pub busy_ticks: u64,
     /// Frames finished so far.
     pub completed: u64,
+    /// Whether the chip is unavailable (scripted `ChipDown`, or a
+    /// standby chip the autoscaler has not activated). Down chips take
+    /// no dispatches and hold no work.
+    pub down: bool,
+    /// Whether this worker came from the scenario's standby set (it
+    /// starts down and is only brought up by the autoscaler).
+    pub standby: bool,
+    /// Current clock derate in `(0, 1]` (1.0 = spec clock). Applies to
+    /// frames *entering* execution; in-flight frames keep their admitted
+    /// tick count.
+    pub clock_factor: f64,
+    /// Current DRAM-link derate in `(0, 1]` (1.0 = spec link rate).
+    /// Caps the chip's per-tick bus demand immediately.
+    pub link_factor: f64,
 }
 
 impl ChipWorker {
@@ -100,7 +149,17 @@ impl ChipWorker {
             active: None,
             busy_ticks: 0,
             completed: 0,
+            down: false,
+            standby: false,
+            clock_factor: 1.0,
+            link_factor: 1.0,
         }
+    }
+
+    /// A standby worker: identical, but starting down until the
+    /// autoscaler activates it.
+    pub fn new_standby(spec: ChipSpec, queue_depth: usize, tick_ms: f64) -> Self {
+        ChipWorker { down: true, standby: true, ..Self::new(spec, queue_depth, tick_ms) }
     }
 
     /// Idle and nothing queued: a dispatched frame starts this tick.
@@ -111,6 +170,54 @@ impl ChipWorker {
     /// Room left in the dispatch queue.
     pub fn has_room(&self) -> bool {
         self.queued < self.depth
+    }
+
+    /// Apply one availability/derate directive at a tick boundary.
+    /// Returns the frames the chip held if the directive took it down —
+    /// active frame first, then the queue in dispatch order — so the
+    /// engine can requeue them (never silently drop them).
+    pub fn apply(&mut self, directive: ChipDirective) -> Vec<FrameTask> {
+        match directive {
+            ChipDirective::Up => {
+                self.down = false;
+                Vec::new()
+            }
+            ChipDirective::Down => {
+                self.down = true;
+                self.drain()
+            }
+            ChipDirective::ClockDerate(f) => {
+                self.clock_factor = f;
+                Vec::new()
+            }
+            ChipDirective::ClockRestore => {
+                self.clock_factor = 1.0;
+                Vec::new()
+            }
+            ChipDirective::LinkDerate(f) => {
+                self.link_factor = f;
+                Vec::new()
+            }
+            ChipDirective::LinkRestore => {
+                self.link_factor = 1.0;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Take back everything the chip holds: the active frame (its
+    /// progress is forfeit — a requeued frame restarts from scratch),
+    /// then the dispatch queue in order.
+    pub fn drain(&mut self) -> Vec<FrameTask> {
+        let mut out = Vec::new();
+        if let Some(j) = self.active.take() {
+            out.push(j.task);
+        }
+        while let Ok(t) = self.rx.try_recv() {
+            out.push(t);
+        }
+        self.queued = 0;
+        out
     }
 
     /// Whether this chip's capability bound covers a frame of `pixels`.
@@ -131,16 +238,18 @@ impl ChipWorker {
     }
 
     /// Pull the next queued frame if the chip is free. The frame's tick
-    /// count comes from this chip's own clock, so the same frame takes
-    /// longer on a slower design point.
+    /// count comes from this chip's own clock *at its current derate*,
+    /// so the same frame takes longer on a slower (or thermally derated)
+    /// design point.
     pub fn refill(&mut self) {
-        if self.active.is_some() {
+        if self.active.is_some() || self.down {
             return;
         }
         if let Ok(task) = self.rx.try_recv() {
             self.queued -= 1;
+            let cycles_per_tick = self.cycles_per_tick * self.clock_factor;
             let ticks =
-                ((task.cost.compute_cycles as f64 / self.cycles_per_tick).ceil() as u64).max(1);
+                ((task.cost.compute_cycles as f64 / cycles_per_tick).ceil() as u64).max(1);
             self.active = Some(InFlight {
                 task,
                 total_compute_ticks: ticks,
@@ -152,14 +261,14 @@ impl ChipWorker {
 
     /// DRAM bytes this chip wants this tick: the *eligible* bytes of the
     /// active frame (per its burst profile) not yet transferred, capped
-    /// by the chip's own link rate.
+    /// by the chip's own link rate at its current derate.
     pub fn bus_demand(&self) -> f64 {
         self.active.as_ref().map_or(0.0, |j| {
             let transferred = j.task.cost.dram_bytes as f64 - j.remaining_bytes;
             (j.eligible_bytes() - transferred)
                 .min(j.remaining_bytes)
                 .max(0.0)
-                .min(self.link_bytes_per_tick)
+                .min(self.link_bytes_per_tick * self.link_factor)
         })
     }
 
@@ -180,42 +289,55 @@ impl ChipWorker {
     }
 }
 
-/// The chip pool.
+/// The chip pool: the scenario's base chips followed by its standby
+/// chips (standby workers start down; global chip ids cover both).
 #[derive(Debug)]
 pub struct Fleet {
-    /// The workers, indexed by chip id (scenario pool order).
+    /// The workers, indexed by chip id (base pool order, then standby).
     pub workers: Vec<ChipWorker>,
+    /// How many of `workers` are base-pool chips (the rest are standby).
+    pub base_chips: usize,
 }
 
 impl Fleet {
-    /// A pool over `chips` design points at a `tick_ms` virtual tick.
-    pub fn new(chips: &[ChipSpec], queue_depth: usize, tick_ms: f64) -> Self {
-        Fleet {
-            workers: chips.iter().map(|&c| ChipWorker::new(c, queue_depth, tick_ms)).collect(),
-        }
+    /// A pool over `chips` design points plus `standby` chips (starting
+    /// down) at a `tick_ms` virtual tick.
+    pub fn new(chips: &[ChipSpec], standby: &[ChipSpec], queue_depth: usize, tick_ms: f64) -> Self {
+        let mut workers: Vec<ChipWorker> =
+            chips.iter().map(|&c| ChipWorker::new(c, queue_depth, tick_ms)).collect();
+        workers.extend(standby.iter().map(|&c| ChipWorker::new_standby(c, queue_depth, tick_ms)));
+        Fleet { workers, base_chips: chips.len() }
     }
 
-    /// First worker able to accept a frame of `pixels` input pixels:
-    /// capable idle chips first (the frame starts this tick), then any
-    /// capable chip with queue room. `None` means every capable queue is
-    /// full — backpressure to the central queue.
+    /// First *available* worker able to accept a frame of `pixels` input
+    /// pixels: capable idle chips first (the frame starts this tick),
+    /// then any capable chip with queue room. Down chips (faulted or
+    /// unactivated standby) are never offered work. `None` means every
+    /// available capable queue is full — backpressure to the central
+    /// queue.
     pub fn pick_worker(&self, pixels: u64) -> Option<usize> {
         self.workers
             .iter()
-            .position(|w| w.can_serve(pixels) && w.is_idle())
-            .or_else(|| self.workers.iter().position(|w| w.can_serve(pixels) && w.has_room()))
+            .position(|w| !w.down && w.can_serve(pixels) && w.is_idle())
+            .or_else(|| {
+                self.workers.iter().position(|w| !w.down && w.can_serve(pixels) && w.has_room())
+            })
     }
 
-    /// Whether *any* chip in the pool may ever serve a frame of
-    /// `pixels`. Static over a run — a frame this returns `false` for
-    /// can never dispatch and must be shed, not waited on.
+    /// Whether any chip *currently up* may serve a frame of `pixels`.
+    /// No longer static over a run — a `ChipDown` fault can make the
+    /// only capable chip unavailable, and frames released meanwhile are
+    /// shed as unservable rather than waited on.
     pub fn any_can_serve(&self, pixels: u64) -> bool {
-        self.workers.iter().any(|w| w.can_serve(pixels))
+        self.workers.iter().any(|w| !w.down && w.can_serve(pixels))
     }
 
-    /// Aggregate compute capacity in cycles per second.
+    /// Aggregate compute capacity of the *base* pool in cycles per
+    /// second — the capacity admission prices against. Standby chips
+    /// never count: admission stays a pure function of the scenario,
+    /// independent of what the autoscaler later does.
     pub fn compute_cycles_per_s(&self) -> f64 {
-        self.workers.iter().map(|w| w.spec.chip.clock_hz).sum()
+        self.workers[..self.base_chips].iter().map(|w| w.spec.chip.clock_hz).sum()
     }
 }
 
@@ -240,7 +362,7 @@ mod tests {
     fn fleet1() -> Fleet {
         // 1 paper chip, depth-2 queue, 1 ms tick at 300 MHz
         // => 300k cycles/tick, so the test frame needs 2 compute ticks.
-        Fleet::new(&[ChipSpec::paper()], 2, 1.0)
+        Fleet::new(&[ChipSpec::paper()], &[], 2, 1.0)
     }
 
     #[test]
@@ -287,7 +409,7 @@ mod tests {
 
     #[test]
     fn pick_prefers_idle_workers() {
-        let mut f = Fleet::new(&[ChipSpec::paper(), ChipSpec::paper()], 2, 1.0);
+        let mut f = Fleet::new(&[ChipSpec::paper(), ChipSpec::paper()], &[], 2, 1.0);
         f.workers[0].try_dispatch(task(0)).unwrap();
         f.workers[0].refill();
         assert_eq!(f.pick_worker(task(1).pixels), Some(1));
@@ -297,18 +419,18 @@ mod tests {
     fn capability_bound_excludes_small_chips() {
         // Edge chip (capped at 720p) first in pool order: a 1080p frame
         // must skip it even though it is idle.
-        let f = Fleet::new(&[ChipSpec::edge(), ChipSpec::paper()], 2, 1.0);
+        let f = Fleet::new(&[ChipSpec::edge(), ChipSpec::paper()], &[], 2, 1.0);
         assert_eq!(f.pick_worker(1920 * 1080), Some(1));
         assert_eq!(f.pick_worker(1280 * 720), Some(0));
         // A pool of only capped chips cannot take the frame at all.
-        let capped = Fleet::new(&[ChipSpec::edge()], 2, 1.0);
+        let capped = Fleet::new(&[ChipSpec::edge()], &[], 2, 1.0);
         assert_eq!(capped.pick_worker(1920 * 1080), None);
     }
 
     #[test]
     fn slower_clock_takes_more_ticks() {
         // Same frame, half the clock: twice the compute ticks.
-        let mut f = Fleet::new(&[ChipSpec::edge()], 2, 1.0);
+        let mut f = Fleet::new(&[ChipSpec::edge()], &[], 2, 1.0);
         let w = &mut f.workers[0];
         w.try_dispatch(task(0)).unwrap();
         w.refill();

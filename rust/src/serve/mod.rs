@@ -18,8 +18,19 @@
 //! * [`scenario`] — the run description: [`ModelId`] (any zoo network,
 //!   not just the deployed RC-YOLOv2), [`ChipSpec`] design points
 //!   (paper / edge / datacenter: per-chip clock, DRAM link rate and
-//!   capability bound), scripted stream windows, and the bundled
-//!   presets (`steady-hd`, `rush-hour`, `mixed-zoo`, `hetero-pool`).
+//!   capability bound), scripted stream windows, scripted chip faults
+//!   ([`FaultEvent`]: outages, DRAM-link throttles, thermal derates)
+//!   over the pool plus a standby chip set, and the bundled presets
+//!   (`steady-hd`, `rush-hour`, `mixed-zoo`, `hetero-pool`,
+//!   `diurnal-load`, `flash-crowd`, `chip-failure`).
+//! * [`qos`] — the load-adaptive policy layer: a windowed
+//!   integer-hysteresis pressure controller that downshifts non-gold
+//!   streams along pre-priced ladders of cheaper operating points
+//!   (lower resolution, then a cheaper zoo model through the
+//!   [`crate::plan::PlanCache`]) while the shared bus stays saturated,
+//!   restores them when pressure clears, and autoscales chips from the
+//!   scenario's standby set — identically in both engines, with or
+//!   without telemetry.
 //! * [`stream`] — QoS classes, stream operating points, per-frame cost
 //!   derived from the stream's own model at its own resolution
 //!   ([`crate::trace`]), and the seeded frame source gated on the
@@ -54,7 +65,8 @@
 //!   miss/shed/churn rates), a virtual-time fleet event log exported as
 //!   Chrome trace-event JSON (`fleet --telemetry`), a [`crate::obs`]
 //!   metrics registry snapshot, and an incident detector (sustained
-//!   saturation, miss-rate spikes, starving streams). Byte-identical
+//!   saturation, miss-rate spikes, starving streams, sustained QoS
+//!   degradation, chip outages). Byte-identical
 //!   across engines and folded into the stats digest when enabled;
 //!   `--no-telemetry` ([`TelemetryConfig::off`]) skips it all.
 //!
@@ -74,6 +86,7 @@
 pub mod arbiter;
 pub mod fleet;
 pub mod parallel;
+pub mod qos;
 pub mod scenario;
 pub mod scheduler;
 pub mod stats;
@@ -81,13 +94,15 @@ pub mod stream;
 pub mod telemetry;
 
 pub use arbiter::BusArbiter;
-pub use fleet::{ChipWorker, Fleet, InFlight};
+pub use fleet::{ChipDirective, ChipWorker, Fleet, InFlight};
 pub use parallel::resolve_threads;
-pub use scenario::{ChipSpec, ModelId, Scenario, StreamScript, PRESET_NAMES};
+pub use qos::{QosController, QosVerdict};
+pub use scenario::{ChipSpec, FaultEvent, FaultKind, ModelId, Scenario, StreamScript, PRESET_NAMES};
 pub use scheduler::{run_fleet, run_fleet_with, AdmissionPolicy, FleetConfig, FleetSim};
 pub use stats::{CostProvenance, FleetReport, StreamStats};
 pub use stream::{FrameCost, FrameTask, QosClass, Stream, StreamSpec};
 pub use telemetry::{
-    detect_incidents, Incident, IncidentKind, ShedCause, TelemetryConfig, TelemetryEvent,
-    TelemetryEventKind, TelemetryReport, WindowSample,
+    detect_incidents, ChipWindow, Incident, IncidentKind, ShedCause, StreamWindow,
+    TelemetryConfig, TelemetryEvent, TelemetryEventKind, TelemetryReport, WindowSample,
+    SAT_MIN_WINDOWS, STARVE_WINDOWS, WARMUP_WINDOWS,
 };

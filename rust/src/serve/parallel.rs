@@ -25,6 +25,16 @@
 //!   transitions ship to the owning worker *in event order* inside the
 //!   release command, so a stream arriving and departing in one tick
 //!   lands inactive in both engines.
+//! * **Faults and adaptation** — the fault timeline, the QoS pressure
+//!   controller and the autoscaler ([`super::scheduler`]'s
+//!   `AdaptiveState`) run on the main thread, off the same per-tick
+//!   saturation bit the serial engine folds. Chip directives and rung
+//!   swaps decided at a window boundary ship to the owning shards with
+//!   the *next* tick's release command — the same one-tick latency the
+//!   serial engine deliberately applies — and a downed or retired chip's
+//!   drained frames come back with the release response, merging into
+//!   the central heap exactly where the serial engine requeues them
+//!   (identical multisets + total orders ⇒ identical scheduling).
 //! * **Releases** — workers release their stream shards concurrently;
 //!   the main thread merges the per-shard lists in shard order. Shards
 //!   are contiguous in stream id, so the merged sequence equals the
@@ -58,10 +68,10 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::sync::mpsc;
 
-use super::fleet::ChipWorker;
+use super::fleet::{ChipDirective, ChipWorker};
 use super::scheduler::{edf_order, shed_order, FleetSim};
 use super::stats::FleetReport;
-use super::stream::{FrameTask, Stream};
+use super::stream::{FrameCost, FrameTask, Stream, StreamSpec};
 use super::telemetry::{ShedCause, Telemetry};
 
 /// Resolve a [`super::FleetConfig::threads`] request to a worker count:
@@ -108,6 +118,7 @@ struct ChipMirror {
     depth: usize,
     queued: usize,
     active: bool,
+    down: bool,
     max_pixels: Option<u64>,
 }
 
@@ -124,16 +135,34 @@ impl ChipMirror {
             None => true,
         }
     }
+    /// The serial `pick_worker` availability predicate: down chips
+    /// (faulted, or standby not yet raised) never take dispatches.
+    fn up_and_serves(&self, pixels: u64) -> bool {
+        !self.down && self.can_serve(pixels)
+    }
+    /// Replay a phase-0 directive's mirror-visible transition: `Down`
+    /// drains the remote chip, so its mirrored occupancy zeroes with it.
+    fn apply(&mut self, directive: ChipDirective) {
+        match directive {
+            ChipDirective::Up => self.down = false,
+            ChipDirective::Down => {
+                self.down = true;
+                self.queued = 0;
+                self.active = false;
+            }
+            _ => {} // derates change rate, not occupancy or availability
+        }
+    }
 }
 
 /// The serial `Fleet::pick_worker` scan, replayed over the mirror: first
-/// capable idle chip (frame starts this tick), else first capable chip
-/// with queue room.
+/// capable *up* idle chip (frame starts this tick), else first capable
+/// up chip with queue room.
 fn pick_mirror(mirror: &[ChipMirror], pixels: u64) -> Option<usize> {
     mirror
         .iter()
-        .position(|m| m.can_serve(pixels) && m.is_idle())
-        .or_else(|| mirror.iter().position(|m| m.can_serve(pixels) && m.has_room()))
+        .position(|m| m.up_and_serves(pixels) && m.is_idle())
+        .or_else(|| mirror.iter().position(|m| m.up_and_serves(pixels) && m.has_room()))
 }
 
 /// One worker's owned state: contiguous stream and chip shards.
@@ -144,9 +173,17 @@ struct Shard {
 
 /// Per-tick commands, each answered by exactly one [`Rsp`].
 enum Cmd {
-    /// Apply the tick's liveness transitions (local stream index, live)
-    /// in order, then release due frames from this worker's streams.
-    Release { now_ms: f64, toggles: Vec<(usize, bool)> },
+    /// Phase 0 + 1 + 2, in serial phase order: apply due chip directives
+    /// (local chip index — a `Down` drains the chip back to the caller),
+    /// swap streams onto new operating points (local stream index), then
+    /// the tick's liveness transitions (local stream index, live) in
+    /// order, then release due frames from this worker's streams.
+    Release {
+        now_ms: f64,
+        directives: Vec<(usize, ChipDirective)>,
+        points: Vec<(usize, StreamSpec, FrameCost)>,
+        toggles: Vec<(usize, bool)>,
+    },
     /// Apply EDF dispatch decisions (local chip index, frame), then
     /// refill and report per-chip bus demands.
     Dispatch { tasks: Vec<(usize, FrameTask)> },
@@ -158,8 +195,11 @@ enum Cmd {
 
 /// Worker responses, in 1:1 correspondence with [`Cmd`].
 enum Rsp {
-    /// Released frames, in stream-id-then-seq order within the shard.
-    Released(Vec<FrameTask>),
+    /// `drained`: frames handed back by downed/retired chips (requeued,
+    /// never dropped — already counted released when first released).
+    /// `released`: new frames, in stream-id-then-seq order within the
+    /// shard.
+    Released { drained: Vec<FrameTask>, released: Vec<FrameTask> },
     /// Per-chip outstanding DRAM demand, in local chip order.
     Demands(Vec<f64>),
     /// Completed frames as (local chip index, frame), in chip order.
@@ -171,15 +211,22 @@ enum Rsp {
 fn worker_loop(mut shard: Shard, rx: mpsc::Receiver<Cmd>, tx: mpsc::Sender<Rsp>) {
     while let Ok(cmd) = rx.recv() {
         let rsp = match cmd {
-            Cmd::Release { now_ms, toggles } => {
+            Cmd::Release { now_ms, directives, points, toggles } => {
+                let mut drained = Vec::new();
+                for (li, d) in directives {
+                    drained.extend(shard.chips[li].apply(d));
+                }
+                for (li, spec, cost) in points {
+                    shard.streams[li].apply_point(spec, cost);
+                }
                 for (li, live) in toggles {
                     shard.streams[li].active = live;
                 }
-                let mut out = Vec::new();
+                let mut released = Vec::new();
                 for s in &mut shard.streams {
-                    out.extend(s.release_due(now_ms));
+                    released.extend(s.release_due(now_ms));
                 }
-                Rsp::Released(out)
+                Rsp::Released { drained, released }
             }
             Cmd::Dispatch { tasks } => {
                 for (i, t) in tasks {
@@ -229,13 +276,16 @@ impl FleetSim {
         debug_assert!(self.ready.is_empty(), "run_parallel on a started sim");
 
         let cfg = self.cfg;
-        let chip_caps: Vec<Option<u64>> =
-            self.fleet.workers.iter().map(|w| w.spec.max_pixels).collect();
+        // Capability bound + initial availability (standby chips start
+        // down) per chip, in global order, for the mirror.
+        let chip_init: Vec<(Option<u64>, bool)> =
+            self.fleet.workers.iter().map(|w| (w.spec.max_pixels, w.down)).collect();
         let chips = self.fleet.workers.len();
         let total_streams = self.streams.len();
         let mut stats = self.stats;
         let mut arbiter = self.arbiter;
         let mut admission = self.admission;
+        let mut adaptive = self.adaptive;
         // Telemetry records on the main thread only: every hook below
         // observes the same values, in the same order, as the serial
         // engine's — which is what keeps the telemetry byte-identical.
@@ -283,20 +333,54 @@ impl FleetSim {
             }
 
             let mut heap: BinaryHeap<EdfTask> = BinaryHeap::new();
-            let mut mirror: Vec<ChipMirror> = chip_caps
+            let mut mirror: Vec<ChipMirror> = chip_init
                 .iter()
-                .map(|&max_pixels| ChipMirror { depth, queued: 0, active: false, max_pixels })
+                .map(|&(max_pixels, down)| ChipMirror {
+                    depth,
+                    queued: 0,
+                    active: false,
+                    down,
+                    max_pixels,
+                })
                 .collect();
 
             for k in 0..ticks {
                 let now_ms = k as f64 * cfg.tick_ms;
 
+                // 0. Due fault directives and the adaptive layer's
+                // window-boundary decisions, routed to the owning shards
+                // (applied by the workers inside the release command, in
+                // the same order the serial engine applies them). The
+                // mirror replays each directive's occupancy transition
+                // now, so this tick's dispatch never targets a downed
+                // chip.
+                let mut directives: Vec<Vec<(usize, ChipDirective)>> =
+                    vec![Vec::new(); shard_count];
+                for (g, d) in adaptive.due_directives(now_ms) {
+                    mirror[g].apply(d);
+                    if let Some(tel) = telemetry.as_mut() {
+                        tel.on_chip_directive(k, g, d.code());
+                    }
+                    let (wi, li) = chip_owner[g];
+                    directives[wi].push((li, d));
+                }
+                let mut points: Vec<Vec<(usize, StreamSpec, FrameCost)>> =
+                    vec![Vec::new(); shard_count];
+                for (i, rung) in adaptive.take_rungs() {
+                    let (spec, cost) = adaptive.ladders[i][usize::from(rung)];
+                    if let Some(tel) = telemetry.as_mut() {
+                        tel.on_rung_change(k, i, rung);
+                    }
+                    points[i / stream_chunk].push((i % stream_chunk, spec, cost));
+                }
+
                 // 1+2. Timeline events on the main thread, then
                 // releases: each worker gets its shard's liveness
                 // transitions (in event order) with the release command;
-                // the released lists merge in stream-id order.
+                // the drained and released lists merge in shard order.
                 let refused_base = admission.refused_ids.len();
                 let global_toggles = admission.step(now_ms, &mut stats);
+                adaptive.apply_toggles(&global_toggles);
                 if let Some(tel) = telemetry.as_mut() {
                     tel.on_admission(k, &global_toggles, &admission.refused_ids[refused_base..]);
                 }
@@ -304,13 +388,18 @@ impl FleetSim {
                 for (g, live) in global_toggles {
                     toggles[g / stream_chunk].push((g % stream_chunk, live));
                 }
-                for (tx, t) in cmd_tx.iter().zip(toggles) {
-                    tx.send(Cmd::Release { now_ms, toggles: t }).expect("fleet worker hung up");
+                let cmds = directives.into_iter().zip(points).zip(toggles);
+                for (tx, ((d, p), t)) in cmd_tx.iter().zip(cmds) {
+                    tx.send(Cmd::Release { now_ms, directives: d, points: p, toggles: t })
+                        .expect("fleet worker hung up");
                 }
                 for rx in &rsp_rx {
                     match rx.recv().expect("fleet worker hung up") {
-                        Rsp::Released(v) => {
-                            for t in v {
+                        Rsp::Released { drained, released } => {
+                            for t in drained {
+                                heap.push(EdfTask(t)); // requeued, already counted
+                            }
+                            for t in released {
                                 stats[t.stream].released += 1;
                                 if let Some(tel) = telemetry.as_mut() {
                                     tel.on_release(t.stream);
@@ -360,7 +449,7 @@ impl FleetSim {
                 let mut dispatches: Vec<Vec<(usize, FrameTask)>> = vec![Vec::new(); shard_count];
                 while let Some(front) = heap.peek() {
                     let pixels = front.0.pixels;
-                    if !mirror.iter().any(|m| m.can_serve(pixels)) {
+                    if !mirror.iter().any(|m| m.up_and_serves(pixels)) {
                         let t = heap.pop().expect("peeked entry").0;
                         stats[t.stream].shed += 1;
                         if let Some(tel) = telemetry.as_mut() {
@@ -384,15 +473,15 @@ impl FleetSim {
                     tx.send(Cmd::Dispatch { tasks }).expect("fleet worker hung up");
                 }
                 for m in &mut mirror {
-                    if !m.active && m.queued > 0 {
+                    if !m.down && !m.active && m.queued > 0 {
                         m.queued -= 1;
                         m.active = true;
                     }
                 }
                 // Post-refill mirror state is exactly the serial engine's
                 // post-refill worker state: same occupancy sample.
-                let chip_states: Vec<(bool, u32)> = if telemetry.is_some() {
-                    mirror.iter().map(|m| (m.active, m.queued as u32)).collect()
+                let chip_states: Vec<(bool, u32, bool)> = if telemetry.is_some() {
+                    mirror.iter().map(|m| (m.active, m.queued as u32, m.down)).collect()
                 } else {
                     Vec::new()
                 };
@@ -433,8 +522,16 @@ impl FleetSim {
                     base += n;
                 }
                 if let Some(tel) = telemetry.as_mut() {
-                    tel.end_tick(k, &demands, &grants, &chip_states);
+                    let degraded: Vec<bool> =
+                        (0..total_streams).map(|i| adaptive.degraded(i)).collect();
+                    tel.end_tick(k, &demands, &grants, &chip_states, &degraded);
                 }
+
+                // 7. Fold the tick's bus-saturation bit into the
+                // adaptive controller — same bit, same state, same
+                // window-boundary decisions as the serial engine.
+                let offered: f64 = demands.iter().sum();
+                adaptive.on_tick(offered > arbiter.budget_bytes_per_tick + 1e-9, &mut stats);
             }
 
             for tx in &cmd_tx {
@@ -465,6 +562,7 @@ impl FleetSim {
             bus_saturation: arbiter.saturation(),
             bus_peak_demand: arbiter.peak_demand_ratio(),
             chip_utilization: busy as f64 / (ticks as f64 * chips.max(1) as f64),
+            qos_window_ms: adaptive.window_ms(cfg.tick_ms),
             wall_s: cfg.seconds,
             telemetry: telemetry.map(Telemetry::finish),
         }
@@ -503,8 +601,8 @@ mod tests {
     #[test]
     fn mirror_replays_pick_worker() {
         let mut m = vec![
-            ChipMirror { depth: 2, queued: 1, active: true, max_pixels: None },
-            ChipMirror { depth: 2, queued: 0, active: false, max_pixels: None },
+            ChipMirror { depth: 2, queued: 1, active: true, down: false, max_pixels: None },
+            ChipMirror { depth: 2, queued: 0, active: false, down: false, max_pixels: None },
         ];
         let px = 1280 * 720;
         assert_eq!(pick_mirror(&m, px), Some(1), "idle chip preferred");
@@ -519,12 +617,30 @@ mod tests {
     #[test]
     fn mirror_respects_capability_bounds() {
         let m = vec![
-            ChipMirror { depth: 2, queued: 0, active: false, max_pixels: Some(1280 * 720) },
-            ChipMirror { depth: 2, queued: 1, active: true, max_pixels: None },
+            ChipMirror { depth: 2, queued: 0, active: false, down: false, max_pixels: Some(1280 * 720) },
+            ChipMirror { depth: 2, queued: 1, active: true, down: false, max_pixels: None },
         ];
         // The capped chip is idle, but a 1080p frame must skip it.
         assert_eq!(pick_mirror(&m, 1920 * 1080), Some(1));
         assert_eq!(pick_mirror(&m, 1280 * 720), Some(0));
+    }
+
+    #[test]
+    fn mirror_skips_down_chips() {
+        let mut m = vec![
+            ChipMirror { depth: 2, queued: 0, active: false, down: true, max_pixels: None },
+            ChipMirror { depth: 2, queued: 1, active: true, down: false, max_pixels: None },
+        ];
+        let px = 1280 * 720;
+        assert_eq!(pick_mirror(&m, px), Some(1), "idle-but-down chip skipped");
+        m[1].queued = 2;
+        assert_eq!(pick_mirror(&m, px), None, "only the down chip has room");
+        m[0].apply(ChipDirective::Up);
+        assert_eq!(pick_mirror(&m, px), Some(0));
+        m[0].queued = 1;
+        m[0].active = true;
+        m[0].apply(ChipDirective::Down);
+        assert!(m[0].is_idle() && m[0].down, "down zeroes the mirrored occupancy");
     }
 
     #[test]

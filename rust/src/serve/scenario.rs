@@ -20,9 +20,16 @@
 //! configurations (see `PAPERS.md`); a fleet model that can only express
 //! "N copies of the paper chip, all streams at t=0" cannot ask any of
 //! the interesting capacity questions. The bundled presets
-//! ([`Scenario::preset`]) cover the four axes: steady state
-//! (`steady-hd`), churn bursts (`rush-hour`), per-stream models
-//! (`mixed-zoo`) and mixed design points (`hetero-pool`).
+//! ([`Scenario::preset`]) cover the axes: steady state (`steady-hd`),
+//! churn bursts (`rush-hour`), per-stream models (`mixed-zoo`), mixed
+//! design points (`hetero-pool`), pool autoscaling (`diurnal-load`),
+//! load-adaptive QoS downshift (`flash-crowd`) and scripted fault
+//! injection (`chip-failure`).
+//!
+//! A scenario may additionally script *faults* ([`FaultEvent`]:
+//! `ChipDown`, `DramThrottle`, `ThermalDerate`) against the base pool
+//! and stage *standby* chips the autoscaler can bring up under
+//! sustained pressure; see `docs/SCENARIOS.md` for the grammar.
 //!
 //! Pricing discipline: frame costs are derived from execution traces on
 //! the pool's *reference buffer geometry* ([`Scenario::reference_chip`]),
@@ -204,8 +211,76 @@ impl StreamScript {
     }
 }
 
+/// What a scripted [`FaultEvent`] does to its chip for the interval.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The chip is down: it accepts no dispatches, and whatever it held
+    /// (active frame + queue) is requeued into the ready pool at the
+    /// event boundary. Requeued frames restart execution from scratch.
+    ChipDown,
+    /// The chip's DRAM link is derated to `factor` (`0 < factor <= 1`)
+    /// of its spec rate — the bandwidth half of a thermal/power event.
+    DramThrottle {
+        /// Fraction of the spec link rate left available.
+        factor: f64,
+    },
+    /// The chip's clock is derated to `factor` (`0 < factor <= 1`) of
+    /// its spec rate; frames *entering* execution after the boundary run
+    /// at the derated clock (in-flight frames finish at their admitted
+    /// rate — the engines never re-time a running frame).
+    ThermalDerate {
+        /// Fraction of the spec clock left available.
+        factor: f64,
+    },
+}
+
+impl FaultKind {
+    /// Stable kebab-case name (`chip-down` / `dram-throttle` /
+    /// `thermal-derate`).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::ChipDown => "chip-down",
+            FaultKind::DramThrottle { .. } => "dram-throttle",
+            FaultKind::ThermalDerate { .. } => "thermal-derate",
+        }
+    }
+
+    fn class(self) -> u8 {
+        match self {
+            FaultKind::ChipDown => 0,
+            FaultKind::DramThrottle { .. } => 1,
+            FaultKind::ThermalDerate { .. } => 2,
+        }
+    }
+}
+
+/// One scripted fault: `kind` applies to chip `chip` over
+/// `[start_ms, end_ms)` of virtual time and reverts at the end boundary.
+/// Faults target the base pool only (standby chips are policy-managed),
+/// and two faults of the same kind on one chip must not overlap
+/// ([`Scenario::validate`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Index of the affected chip in [`Scenario::chips`].
+    pub chip: usize,
+    /// Virtual time (ms) the fault takes effect.
+    pub start_ms: f64,
+    /// Virtual time (ms) the fault clears (exclusive).
+    pub end_ms: f64,
+    /// What happens to the chip.
+    pub kind: FaultKind,
+}
+
 /// Names of the bundled scenario presets, in [`Scenario::preset`] order.
-pub const PRESET_NAMES: [&str; 4] = ["steady-hd", "rush-hour", "mixed-zoo", "hetero-pool"];
+pub const PRESET_NAMES: [&str; 7] = [
+    "steady-hd",
+    "rush-hour",
+    "mixed-zoo",
+    "hetero-pool",
+    "diurnal-load",
+    "flash-crowd",
+    "chip-failure",
+];
 
 /// A deterministic fleet-run description: a heterogeneous chip pool plus
 /// a timeline of scripted streams. See the module docs for the design
@@ -219,6 +294,14 @@ pub struct Scenario {
     /// The scripted streams; a stream's index in this list is its stable
     /// stream id everywhere (stats, digests, shard ownership).
     pub streams: Vec<StreamScript>,
+    /// Scripted faults on the base pool, applied at event boundaries by
+    /// both engines (empty for fault-free scenarios).
+    pub faults: Vec<FaultEvent>,
+    /// Standby chips the autoscaler may activate under sustained
+    /// pressure and retire when it clears. Standby capacity never counts
+    /// toward admission (admission stays a pure function of the scenario)
+    /// and must share the pool's buffer geometry.
+    pub standby: Vec<ChipSpec>,
 }
 
 impl Scenario {
@@ -232,6 +315,8 @@ impl Scenario {
                 .iter()
                 .map(|&spec| StreamScript::steady(spec, ModelId::Deployed))
                 .collect(),
+            faults: Vec::new(),
+            standby: Vec::new(),
         }
     }
 
@@ -246,6 +331,8 @@ impl Scenario {
             streams: (0..streams)
                 .map(|_| StreamScript::steady(StreamSpec::sample(&mut rng), ModelId::Deployed))
                 .collect(),
+            faults: Vec::new(),
+            standby: Vec::new(),
         }
     }
 
@@ -257,12 +344,18 @@ impl Scenario {
     /// | `rush-hour` | 8x paper | 10 steady + 16-stream churn burst | online admission |
     /// | `mixed-zoo` | 12x paper | 16 streams across 4 networks | per-model pricing |
     /// | `hetero-pool` | 3 paper + 3 edge + 2 datacenter | 16 incl. 1080p | capability dispatch |
+    /// | `diurnal-load` | 6x paper + 2 standby | 5 steady + 10-stream wave | pool autoscaling |
+    /// | `flash-crowd` | 4x paper | 2 steady + 14 at 0.5 s | QoS downshift |
+    /// | `chip-failure` | 3x paper | 7 steady + 3 scripted faults | fault injection |
     pub fn preset(name: &str) -> Result<Scenario> {
         match name {
             "steady-hd" => Ok(Self::steady_hd()),
             "rush-hour" => Ok(Self::rush_hour()),
             "mixed-zoo" => Ok(Self::mixed_zoo()),
             "hetero-pool" => Ok(Self::hetero_pool()),
+            "diurnal-load" => Ok(Self::diurnal_load()),
+            "flash-crowd" => Ok(Self::flash_crowd()),
+            "chip-failure" => Ok(Self::chip_failure()),
             other => crate::bail!(
                 "unknown scenario preset {other:?} (expected one of {})",
                 PRESET_NAMES.join(", ")
@@ -306,6 +399,8 @@ impl Scenario {
                     )
                 })
                 .collect(),
+            faults: Vec::new(),
+            standby: Vec::new(),
         }
     }
 
@@ -330,7 +425,13 @@ impl Scenario {
                 departure_ms: Some(arrival_ms + stay_ms),
             });
         }
-        Scenario { name: "rush-hour".into(), chips: vec![ChipSpec::paper(); 8], streams }
+        Scenario {
+            name: "rush-hour".into(),
+            chips: vec![ChipSpec::paper(); 8],
+            streams,
+            faults: Vec::new(),
+            standby: Vec::new(),
+        }
     }
 
     /// `mixed-zoo`: 16 streams across four networks — the deployed
@@ -370,7 +471,13 @@ impl Scenario {
                 departure_ms: if i == 2 { Some(3200.0) } else { None },
             });
         }
-        Scenario { name: "mixed-zoo".into(), chips: vec![ChipSpec::paper(); 12], streams }
+        Scenario {
+            name: "mixed-zoo".into(),
+            chips: vec![ChipSpec::paper(); 12],
+            streams,
+            faults: Vec::new(),
+            standby: Vec::new(),
+        }
     }
 
     /// `hetero-pool`: 3 paper + 3 edge + 2 datacenter chips serving a mix
@@ -422,7 +529,124 @@ impl Scenario {
                 departure_ms: None,
             });
         }
-        Scenario { name: "hetero-pool".into(), chips, streams }
+        Scenario {
+            name: "hetero-pool".into(),
+            chips,
+            streams,
+            faults: Vec::new(),
+            standby: Vec::new(),
+        }
+    }
+
+    /// `diurnal-load`: a light steady base on 6 paper chips with 2 paper
+    /// chips on standby, plus a 10-stream midday wave arriving between
+    /// 0.6 s and 1.1 s and departing between 1.6 s and 2.1 s. The wave
+    /// drives sustained bus pressure, so the autoscaler brings the
+    /// standby chips up and retires them once the wave passes.
+    fn diurnal_load() -> Scenario {
+        let mut streams: Vec<StreamScript> = (0..5)
+            .map(|i| {
+                StreamScript::steady(
+                    StreamSpec { hw: (720, 1280), target_fps: 30.0, qos: Self::qos_cycle(i) },
+                    ModelId::Deployed,
+                )
+            })
+            .collect();
+        for i in 0..10u32 {
+            let arrival_ms = 600.0 + 50.0 * f64::from(i);
+            streams.push(StreamScript {
+                spec: StreamSpec {
+                    hw: (720, 1280),
+                    target_fps: 30.0,
+                    qos: Self::qos_cycle(i as usize + 1),
+                },
+                model: ModelId::Deployed,
+                arrival_ms,
+                departure_ms: Some(arrival_ms + 1000.0),
+            });
+        }
+        Scenario {
+            name: "diurnal-load".into(),
+            chips: vec![ChipSpec::paper(); 6],
+            streams,
+            faults: Vec::new(),
+            standby: vec![ChipSpec::paper(); 2],
+        }
+    }
+
+    /// `flash-crowd`: 2 steady streams on 4 paper chips — a quiet warmup
+    /// — then 14 silver/bronze streams land together at 0.5 s and stay.
+    /// The pool saturates for good, so the QoS controller downshifts the
+    /// non-gold streams (720p -> 416x416 through the plan cache) and the
+    /// report's degraded-quality seconds go nonzero.
+    fn flash_crowd() -> Scenario {
+        let mut streams = vec![
+            StreamScript::steady(
+                StreamSpec { hw: (720, 1280), target_fps: 30.0, qos: QosClass::Gold },
+                ModelId::Deployed,
+            ),
+            StreamScript::steady(
+                StreamSpec { hw: (720, 1280), target_fps: 30.0, qos: QosClass::Silver },
+                ModelId::Deployed,
+            ),
+        ];
+        for i in 0..14u32 {
+            streams.push(StreamScript {
+                spec: StreamSpec {
+                    hw: (720, 1280),
+                    target_fps: 30.0,
+                    qos: if i % 2 == 0 { QosClass::Silver } else { QosClass::Bronze },
+                },
+                model: ModelId::Deployed,
+                arrival_ms: 500.0 + 10.0 * f64::from(i),
+                departure_ms: None,
+            });
+        }
+        Scenario {
+            name: "flash-crowd".into(),
+            chips: vec![ChipSpec::paper(); 4],
+            streams,
+            faults: Vec::new(),
+            standby: Vec::new(),
+        }
+    }
+
+    /// `chip-failure`: 7 steady streams on 3 paper chips, then the pool
+    /// degrades mid-run — chip 0 thermally derates to 75% clock at
+    /// 0.5 s, chip 1 dies outright from 0.6 s to 1.4 s (its in-flight
+    /// frames requeue, never drop), and chip 2's DRAM link throttles to
+    /// half rate from 0.8 s to 1.2 s. All three fault kinds in one
+    /// timeline, all reverting before the run ends.
+    fn chip_failure() -> Scenario {
+        let streams = (0..7)
+            .map(|i| {
+                StreamScript::steady(
+                    StreamSpec { hw: (720, 1280), target_fps: 30.0, qos: Self::qos_cycle(i) },
+                    ModelId::Deployed,
+                )
+            })
+            .collect();
+        Scenario {
+            name: "chip-failure".into(),
+            chips: vec![ChipSpec::paper(); 3],
+            streams,
+            faults: vec![
+                FaultEvent {
+                    chip: 0,
+                    start_ms: 500.0,
+                    end_ms: 900.0,
+                    kind: FaultKind::ThermalDerate { factor: 0.75 },
+                },
+                FaultEvent { chip: 1, start_ms: 600.0, end_ms: 1400.0, kind: FaultKind::ChipDown },
+                FaultEvent {
+                    chip: 2,
+                    start_ms: 800.0,
+                    end_ms: 1200.0,
+                    kind: FaultKind::DramThrottle { factor: 0.5 },
+                },
+            ],
+            standby: Vec::new(),
+        }
     }
 
     /// The buffer geometry frame costs are priced on: the first chip's
@@ -497,6 +721,61 @@ impl Scenario {
                     "stream {i}: departure {} ms does not follow arrival {} ms",
                     d,
                     s.arrival_ms
+                );
+            }
+        }
+        for (i, c) in self.standby.iter().enumerate() {
+            crate::ensure!(
+                c.chip.clock_hz.is_finite() && c.chip.clock_hz > 0.0,
+                "standby chip {i}: clock {} Hz is not positive and finite",
+                c.chip.clock_hz
+            );
+            crate::ensure!(
+                c.link_bytes_per_s.is_finite() && c.link_bytes_per_s > 0.0,
+                "standby chip {i}: link rate {} B/s is not positive and finite",
+                c.link_bytes_per_s
+            );
+            crate::ensure!(
+                c.same_geometry(&reference),
+                "standby chip {i} differs from the pool's reference buffer geometry"
+            );
+        }
+        for (i, f) in self.faults.iter().enumerate() {
+            crate::ensure!(
+                f.chip < self.chips.len(),
+                "fault {i}: chip {} is not in the base pool of {} chips \
+                 (standby chips cannot be faulted)",
+                f.chip,
+                self.chips.len()
+            );
+            crate::ensure!(
+                f.start_ms.is_finite() && f.start_ms >= 0.0,
+                "fault {i}: start {} ms is not non-negative and finite",
+                f.start_ms
+            );
+            crate::ensure!(
+                f.end_ms.is_finite() && f.end_ms > f.start_ms,
+                "fault {i}: end {} ms does not follow start {} ms",
+                f.end_ms,
+                f.start_ms
+            );
+            match f.kind {
+                FaultKind::ChipDown => {}
+                FaultKind::DramThrottle { factor } | FaultKind::ThermalDerate { factor } => {
+                    crate::ensure!(
+                        factor.is_finite() && factor > 0.0 && factor <= 1.0,
+                        "fault {i}: derate factor {factor} is outside (0, 1] \
+                         (a factor of zero is a chip-down, not a derate)"
+                    );
+                }
+            }
+            for (j, g) in self.faults.iter().enumerate().take(i) {
+                let overlaps = f.start_ms < g.end_ms && g.start_ms < f.end_ms;
+                crate::ensure!(
+                    !(f.chip == g.chip && f.kind.class() == g.kind.class() && overlaps),
+                    "faults {j} and {i}: overlapping {} intervals on chip {}",
+                    f.kind.name(),
+                    f.chip
                 );
             }
         }
@@ -606,5 +885,58 @@ mod tests {
         let mut bad_link = good;
         bad_link.chips[0].link_bytes_per_s = 0.0;
         assert!(bad_link.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_faults() {
+        let good = Scenario::preset("chip-failure").unwrap();
+        good.validate().expect("the bundled fault preset validates");
+
+        let mut unknown_chip = good.clone();
+        unknown_chip.faults[0].chip = unknown_chip.chips.len();
+        assert!(unknown_chip.validate().is_err(), "fault on a chip outside the pool");
+
+        let mut zero_factor = good.clone();
+        zero_factor.faults[0].kind = FaultKind::ThermalDerate { factor: 0.0 };
+        assert!(zero_factor.validate().is_err(), "derate factor of zero");
+
+        let mut inverted = good.clone();
+        inverted.faults[1].end_ms = inverted.faults[1].start_ms;
+        assert!(inverted.validate().is_err(), "empty fault interval");
+
+        let mut overlap = good.clone();
+        let f = overlap.faults[1];
+        overlap.faults.push(FaultEvent { start_ms: f.end_ms - 50.0, end_ms: f.end_ms + 50.0, ..f });
+        assert!(overlap.validate().is_err(), "overlapping chip-down intervals on one chip");
+
+        // Back-to-back intervals ([s, e) semantics) are fine, as are
+        // overlapping faults of *different* kinds on one chip.
+        let mut adjacent = good.clone();
+        let f = adjacent.faults[1];
+        adjacent.faults.push(FaultEvent { start_ms: f.end_ms, end_ms: f.end_ms + 100.0, ..f });
+        adjacent.validate().expect("adjacent same-kind intervals do not overlap");
+
+        let mut bad_standby = good;
+        bad_standby.standby.push(ChipSpec {
+            chip: ChipConfig::paper_chip().with_weight_buffer(1 << 20),
+            ..ChipSpec::paper()
+        });
+        assert!(bad_standby.validate().is_err(), "standby chip off the reference geometry");
+    }
+
+    #[test]
+    fn fault_presets_script_what_they_claim() {
+        let cf = Scenario::preset("chip-failure").unwrap();
+        let classes: Vec<u8> = cf.faults.iter().map(|f| f.kind.class()).collect();
+        assert_eq!(classes.len(), 3, "all three fault kinds scripted");
+        assert!(cf.faults.iter().any(|f| f.kind == FaultKind::ChipDown));
+
+        let dl = Scenario::preset("diurnal-load").unwrap();
+        assert_eq!(dl.standby.len(), 2, "diurnal-load stages standby chips");
+        assert!(dl.streams.iter().any(|s| s.departure_ms.is_some()), "the wave departs");
+
+        let fc = Scenario::preset("flash-crowd").unwrap();
+        assert!(fc.faults.is_empty() && fc.standby.is_empty());
+        assert!(fc.streams.iter().filter(|s| s.arrival_ms > 0.0).count() >= 14);
     }
 }

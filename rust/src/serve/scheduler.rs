@@ -25,10 +25,28 @@
 //! what keeps the serial and parallel engines byte-identical under
 //! churn.
 //!
+//! **Faults and load adaptation.** A scenario may script chip faults
+//! ([`super::scenario::FaultEvent`]): outages, DRAM-link throttles and
+//! thermal clock derates, applied at their event boundaries at the top
+//! of the tick in both engines; a downed chip's queue is drained back
+//! into the central ready queue (requeued, never dropped). On top of
+//! that sits the load-adaptive layer ([`super::qos`]): a windowed
+//! integer-hysteresis controller that downshifts non-gold streams along
+//! pre-priced ladders of cheaper operating points when the bus stays
+//! saturated — and restores them when pressure clears — plus a pool
+//! autoscaler that raises chips from the scenario's standby set under
+//! sustained pressure. Neither feeds back into admission: admission
+//! demands are priced from each stream's *original* operating point
+//! against the base pool, so the decision sequence stays a pure
+//! function of the scenario.
+//!
 //! Virtual time advances in fixed ticks (default 1 ms), so a run is a
 //! pure function of its seed — no wall clock anywhere.
 //!
 //! Per tick:
+//! 0. due fault directives and the adaptive controller's window-boundary
+//!    decisions (rung swaps, standby activation/retirement) apply;
+//!    drained chip queues requeue centrally,
 //! 1. timeline events fire: departures deactivate streams and free
 //!    capacity, arrivals are admitted (activating the stream) or
 //!    refused,
@@ -54,8 +72,9 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use super::arbiter::BusArbiter;
-use super::fleet::Fleet;
-use super::scenario::{ModelId, Scenario};
+use super::fleet::{ChipDirective, Fleet};
+use super::qos::{self, QosController};
+use super::scenario::{FaultKind, ModelId, Scenario};
 use super::stats::{CostProvenance, FleetReport, StreamStats};
 use super::stream::{FrameCost, FrameTask, Stream, StreamSpec};
 use super::telemetry::{ShedCause, Telemetry, TelemetryConfig};
@@ -504,6 +523,192 @@ impl AdmissionState {
     }
 }
 
+/// One scripted chip-state transition, compiled from the scenario's
+/// [`FaultEvent`](super::scenario::FaultEvent) list.
+#[derive(Debug, Clone, Copy)]
+struct DirectiveEvent {
+    at_ms: f64,
+    /// 0 = restore, 1 = apply — restores sort first at equal timestamps,
+    /// so adjacent same-kind fault intervals hand over cleanly.
+    order: u8,
+    chip: usize,
+    directive: ChipDirective,
+}
+
+/// The run's fault-and-degradation state, owned by the engines and
+/// driven identically by both: the compiled fault timeline, the QoS
+/// pressure controller with each stream's pre-priced degrade ladder, and
+/// the standby-pool autoscaler. Window-boundary decisions are *queued*
+/// here and applied at the top of the next tick (phase 0), which is
+/// exactly when the parallel engine ships them to the owning shards —
+/// so the serial engine follows the same one-tick decision latency.
+///
+/// Like [`AdmissionState`], none of this reads the optional telemetry
+/// hub: a run with telemetry off degrades byte-identically to one with
+/// it on.
+#[derive(Debug)]
+pub(crate) struct AdaptiveState {
+    pub(crate) controller: QosController,
+    /// Per-stream degrade ladder; rung 0 is the stream's original
+    /// operating point, deeper rungs are strictly cheaper. Length is
+    /// already clamped to the stream's QoS cap
+    /// ([`qos::max_level`]), so gold ladders have exactly one rung.
+    pub(crate) ladders: Vec<Vec<(StreamSpec, FrameCost)>>,
+    /// Current rung per stream (index into its ladder).
+    pub(crate) rungs: Vec<u8>,
+    /// Liveness mirror, updated from the admission toggles both engines
+    /// already route through their main thread.
+    live: Vec<bool>,
+    /// Rung changes decided at the last window boundary, to apply at the
+    /// top of the next tick.
+    pending_rungs: Vec<(usize, u8)>,
+    timeline: Vec<DirectiveEvent>,
+    next_event: usize,
+    /// Autoscale directives decided at the last window boundary.
+    pending_chips: Vec<(usize, ChipDirective)>,
+    base_chips: usize,
+    total_chips: usize,
+    /// Standby chips currently raised; standby slot `k` is fleet worker
+    /// `base_chips + k`. Activation walks up in index order, retirement
+    /// walks back down, so the raised set is always a prefix.
+    standby_up: usize,
+}
+
+impl AdaptiveState {
+    pub(crate) fn new(
+        scenario: &Scenario,
+        ladders: Vec<Vec<(StreamSpec, FrameCost)>>,
+        tick_ms: f64,
+    ) -> Self {
+        let mut timeline = Vec::with_capacity(2 * scenario.faults.len());
+        for f in &scenario.faults {
+            let (apply, restore) = match f.kind {
+                FaultKind::ChipDown => (ChipDirective::Down, ChipDirective::Up),
+                FaultKind::DramThrottle { factor } => {
+                    (ChipDirective::LinkDerate(factor), ChipDirective::LinkRestore)
+                }
+                FaultKind::ThermalDerate { factor } => {
+                    (ChipDirective::ClockDerate(factor), ChipDirective::ClockRestore)
+                }
+            };
+            timeline.push(DirectiveEvent {
+                at_ms: f.start_ms,
+                order: 1,
+                chip: f.chip,
+                directive: apply,
+            });
+            timeline.push(DirectiveEvent {
+                at_ms: f.end_ms,
+                order: 0,
+                chip: f.chip,
+                directive: restore,
+            });
+        }
+        timeline.sort_by(|a, b| {
+            a.at_ms.total_cmp(&b.at_ms).then(a.order.cmp(&b.order)).then(a.chip.cmp(&b.chip))
+        });
+        let streams = ladders.len();
+        AdaptiveState {
+            controller: QosController::new(tick_ms),
+            ladders,
+            rungs: vec![0; streams],
+            live: vec![false; streams],
+            pending_rungs: Vec::new(),
+            timeline,
+            next_event: 0,
+            pending_chips: Vec::new(),
+            base_chips: scenario.chips.len(),
+            total_chips: scenario.chips.len() + scenario.standby.len(),
+            standby_up: 0,
+        }
+    }
+
+    /// Controller window length in virtual milliseconds — the unit one
+    /// `degraded_windows` count converts to seconds with, exactly.
+    pub(crate) fn window_ms(&self, tick_ms: f64) -> f64 {
+        self.controller.ticks_per_window as f64 * tick_ms
+    }
+
+    /// Chip directives to apply at the top of this tick: scripted fault
+    /// transitions due at `now_ms` (restores before applies), then the
+    /// autoscaler's decisions from the window boundary just closed.
+    pub(crate) fn due_directives(&mut self, now_ms: f64) -> Vec<(usize, ChipDirective)> {
+        let due = self
+            .timeline
+            .iter()
+            .skip(self.next_event)
+            .take_while(|e| e.at_ms <= now_ms)
+            .count();
+        if due == 0 && self.pending_chips.is_empty() {
+            return Vec::new();
+        }
+        let mut out: Vec<(usize, ChipDirective)> = self.timeline
+            [self.next_event..self.next_event + due]
+            .iter()
+            .map(|e| (e.chip, e.directive))
+            .collect();
+        self.next_event += due;
+        out.append(&mut self.pending_chips);
+        out
+    }
+
+    /// QoS rung changes decided at the last window boundary, applied at
+    /// the top of this tick. Updates the rung book.
+    pub(crate) fn take_rungs(&mut self) -> Vec<(usize, u8)> {
+        let out = std::mem::take(&mut self.pending_rungs);
+        for &(i, r) in &out {
+            self.rungs[i] = r;
+        }
+        out
+    }
+
+    /// Mirror the admission toggles (both engines route them through
+    /// their main thread in event order).
+    pub(crate) fn apply_toggles(&mut self, toggles: &[(usize, bool)]) {
+        for &(i, l) in toggles {
+            self.live[i] = l;
+        }
+    }
+
+    /// Whether `stream` spends this tick live *and* below its original
+    /// operating point (the telemetry series' per-tick degraded bit).
+    pub(crate) fn degraded(&self, stream: usize) -> bool {
+        self.live[stream] && self.rungs[stream] > 0
+    }
+
+    /// Fold one tick's bus-saturation bit. At a window boundary: charge
+    /// the closing window to every live degraded stream (pure integer
+    /// accounting — `degraded_windows` counts windows, nothing else),
+    /// then queue next-window rung targets and autoscale directives for
+    /// the top of the next tick.
+    pub(crate) fn on_tick(&mut self, saturated: bool, stats: &mut [StreamStats]) {
+        let Some(v) = self.controller.on_tick(saturated) else { return };
+        for i in 0..self.rungs.len() {
+            if self.degraded(i) {
+                stats[i].degraded_windows += 1;
+            }
+        }
+        for (i, ladder) in self.ladders.iter().enumerate() {
+            let target = (usize::from(v.level)).min(ladder.len() - 1) as u8;
+            if target != self.rungs[i] {
+                self.pending_rungs.push((i, target));
+            }
+        }
+        // The autoscaler moves one chip per window: raise the next
+        // standby chip under sustained pressure, retire the most recent
+        // once pressure fully clears (retirement drains its queue back
+        // to the central queue through the same requeue path faults
+        // use).
+        if v.scale_up && self.base_chips + self.standby_up < self.total_chips {
+            self.pending_chips.push((self.base_chips + self.standby_up, ChipDirective::Up));
+            self.standby_up += 1;
+        } else if v.scale_down && self.standby_up > 0 {
+            self.standby_up -= 1;
+            self.pending_chips.push((self.base_chips + self.standby_up, ChipDirective::Down));
+        }
+    }
+}
+
 /// The discrete-tick fleet simulator.
 ///
 /// Fields are crate-visible so [`super::parallel`] can take the prepared
@@ -518,6 +723,10 @@ pub struct FleetSim {
     pub(crate) arbiter: BusArbiter,
     pub(crate) stats: Vec<StreamStats>,
     pub(crate) admission: AdmissionState,
+    /// Fault timeline, QoS downshift controller and standby autoscaler —
+    /// engine state (never telemetry), driven identically by both
+    /// engines ([`AdaptiveState`]).
+    pub(crate) adaptive: AdaptiveState,
     /// The telemetry recorder, `Some` when `cfg.telemetry.enabled`.
     /// Purely observational: both engines drive it from their main
     /// thread at the same phase points, and no simulation arithmetic
@@ -535,8 +744,40 @@ impl FleetSim {
         cfg.validate()?;
         let scenario = &cfg.scenario;
         let mut costs = CostModel::new(scenario.reference_chip(), cfg.planner);
-        costs.prime(&scenario.operating_points(), super::parallel::resolve_threads(cfg.threads))?;
-        let fleet = Fleet::new(&scenario.chips, cfg.queue_depth, cfg.tick_ms);
+
+        // Candidate degrade rungs per stream, beyond the original point:
+        // lower ladder resolutions at the stream's own model, then —
+        // only at the ladder floor — the cheaper swap model. Priced
+        // upfront alongside the scripted points so the PlanCache is
+        // complete before the run starts, whether or not pressure ever
+        // reaches a downshift.
+        let mut points = scenario.operating_points();
+        let mut rung_points: Vec<Vec<(ModelId, (u32, u32))>> =
+            Vec::with_capacity(scenario.streams.len());
+        for script in &scenario.streams {
+            let cap = usize::from(qos::max_level(script.spec.qos));
+            let mut rungs: Vec<(ModelId, (u32, u32))> = Vec::new();
+            if cap > 0 {
+                for hw in qos::ladder_below(script.spec.hw) {
+                    rungs.push((script.model, hw));
+                }
+                if rungs.is_empty()
+                    && script.spec.hw == (416, 416)
+                    && script.model != qos::SWAP_MODEL
+                {
+                    rungs.push((qos::SWAP_MODEL, script.spec.hw));
+                }
+                rungs.truncate(cap);
+            }
+            for &p in &rungs {
+                if !points.contains(&p) {
+                    points.push(p);
+                }
+            }
+            rung_points.push(rungs);
+        }
+        costs.prime(&points, super::parallel::resolve_threads(cfg.threads))?;
+        let fleet = Fleet::new(&scenario.chips, &scenario.standby, cfg.queue_depth, cfg.tick_ms);
 
         // Seeded release phases, drawn in script order for every stream
         // (admitted or not) so the sequence is timeline-independent.
@@ -544,6 +785,7 @@ impl FleetSim {
         let mut streams = Vec::with_capacity(scenario.streams.len());
         let mut stats = Vec::with_capacity(scenario.streams.len());
         let mut demands = Vec::with_capacity(scenario.streams.len());
+        let mut ladders = Vec::with_capacity(scenario.streams.len());
         for (id, script) in scenario.streams.iter().enumerate() {
             let (cost, provenance) = costs.cost(script.model, script.spec.hw)?;
             streams.push(Stream::new(id, script.spec, cost, script.arrival_ms, &mut rng));
@@ -554,11 +796,25 @@ impl FleetSim {
                 script.arrival_ms,
                 script.departure_ms,
             ));
+            // Admission demands are always priced from the stream's
+            // ORIGINAL operating point: downshift never feeds back into
+            // admission.
             demands.push((
                 cost.bus_demand_bytes_per_s(script.spec.target_fps),
                 cost.compute_demand_cycles_per_s(script.spec.target_fps),
                 scenario.any_chip_can_serve(script.spec.pixels()),
             ));
+            let mut ladder = vec![(script.spec, cost)];
+            for &(model, hw) in &rung_points[id] {
+                let (c, _) = costs.cost(model, hw)?;
+                // A model-swap rung must actually be cheaper on the bus
+                // to count as a degradation worth taking.
+                if model != script.model && c.dram_bytes >= cost.dram_bytes {
+                    continue;
+                }
+                ladder.push((StreamSpec { hw, ..script.spec }, c));
+            }
+            ladders.push(ladder);
         }
         let admission = AdmissionState::new(
             scenario,
@@ -580,6 +836,8 @@ impl FleetSim {
             )
         });
 
+        let adaptive = AdaptiveState::new(scenario, ladders, cfg.tick_ms);
+
         Ok(FleetSim {
             cfg: cfg.clone(),
             streams,
@@ -588,11 +846,34 @@ impl FleetSim {
             arbiter,
             stats,
             admission,
+            adaptive,
             telemetry,
         })
     }
 
     fn step(&mut self, tick: u64, now_ms: f64) {
+        // 0. Due fault directives and the adaptive layer's decisions
+        //    from the last window boundary. A downed (or retired) chip's
+        //    queue drains back into the central ready queue — requeued,
+        //    never dropped: the frames re-dispatch EDF-order this same
+        //    tick, or shed as Expired if the outage already cost their
+        //    deadline. Rung swaps change only future releases (frames
+        //    already released keep the cost they were released with).
+        for (c, d) in self.adaptive.due_directives(now_ms) {
+            let drained = self.fleet.workers[c].apply(d);
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.on_chip_directive(tick, c, d.code());
+            }
+            self.ready.extend(drained);
+        }
+        for (i, rung) in self.adaptive.take_rungs() {
+            let (spec, cost) = self.adaptive.ladders[i][usize::from(rung)];
+            self.streams[i].apply_point(spec, cost);
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.on_rung_change(tick, i, rung);
+            }
+        }
+
         // 1. Timeline events: departures free capacity first, then
         //    arrivals are admitted against current demand. Transitions
         //    apply in event order.
@@ -601,6 +882,7 @@ impl FleetSim {
         for &(i, live) in &toggles {
             self.streams[i].active = live;
         }
+        self.adaptive.apply_toggles(&toggles);
         if let Some(tel) = self.telemetry.as_mut() {
             tel.on_admission(tick, &toggles, &self.admission.refused_ids[refused_base..]);
         }
@@ -678,8 +960,12 @@ impl FleetSim {
         }
         // Telemetry samples occupancy post-refill (busy == will burn
         // this tick), exactly what the parallel engine's mirror holds.
-        let chip_states: Vec<(bool, u32)> = if self.telemetry.is_some() {
-            self.fleet.workers.iter().map(|w| (w.active.is_some(), w.queued as u32)).collect()
+        let chip_states: Vec<(bool, u32, bool)> = if self.telemetry.is_some() {
+            self.fleet
+                .workers
+                .iter()
+                .map(|w| (w.active.is_some(), w.queued as u32, w.down))
+                .collect()
         } else {
             Vec::new()
         };
@@ -699,8 +985,17 @@ impl FleetSim {
             }
         }
         if let Some(tel) = self.telemetry.as_mut() {
-            tel.end_tick(tick, &demands, &grants, &chip_states);
+            let degraded: Vec<bool> =
+                (0..self.streams.len()).map(|i| self.adaptive.degraded(i)).collect();
+            tel.end_tick(tick, &demands, &grants, &chip_states, &degraded);
         }
+
+        // 7. The adaptive controller folds this tick's bus-saturation
+        //    bit — engine state, never telemetry — and queues rung and
+        //    autoscale decisions at window boundaries.
+        let offered: f64 = demands.iter().sum();
+        self.adaptive
+            .on_tick(offered > self.arbiter.budget_bytes_per_tick + 1e-9, &mut self.stats);
     }
 
     /// Run the configured span and produce the report.
@@ -726,6 +1021,7 @@ impl FleetSim {
             bus_saturation: self.arbiter.saturation(),
             bus_peak_demand: self.arbiter.peak_demand_ratio(),
             chip_utilization: busy as f64 / (ticks as f64 * chips.max(1) as f64),
+            qos_window_ms: self.adaptive.window_ms(self.cfg.tick_ms),
             wall_s: self.cfg.seconds,
             telemetry: self.telemetry.take().map(Telemetry::finish),
         }
@@ -900,6 +1196,8 @@ mod tests {
                     departure_ms: None,
                 },
             ],
+            faults: Vec::new(),
+            standby: Vec::new(),
         };
         // Demands sized so exactly one stream fits at a time.
         let demands = vec![(10.0, 10.0, true); 2];
@@ -957,6 +1255,8 @@ mod tests {
                     departure_ms: None,
                 },
             ],
+            faults: Vec::new(),
+            standby: Vec::new(),
         };
         let demands = vec![(10.0, 10.0, true); 2];
         let mut st = AdmissionState::new(
@@ -983,5 +1283,54 @@ mod tests {
         assert!(st.step(200.0, &mut stats).is_empty());
         assert_eq!(st.rejected, 1);
         assert!(!stats[1].admitted);
+    }
+
+    /// The downshift round trip, end to end: a saturating mid-run burst
+    /// drives the controller to degrade streams (whole windows land in
+    /// the degraded bill), and once the burst departs and pressure
+    /// clears, every stream is restored to its original operating point
+    /// — rung 0, original spec and cost.
+    #[test]
+    fn downshift_recovers_the_original_operating_point_after_pressure_clears() {
+        use crate::serve::scenario::{ChipSpec, Scenario, StreamScript};
+        let spec = StreamSpec { hw: (720, 1280), target_fps: 30.0, qos: QosClass::Silver };
+        // One steady Silver stream at about half the 2-chip bus budget
+        // (warmup stays clean), plus a Bronze burst that pushes offered
+        // traffic far past it from 250 ms to 850 ms.
+        let mut streams = vec![StreamScript::steady(spec, ModelId::Deployed)];
+        for _ in 0..4 {
+            streams.push(StreamScript {
+                spec: StreamSpec { qos: QosClass::Bronze, ..spec },
+                model: ModelId::Deployed,
+                arrival_ms: 250.0,
+                departure_ms: Some(850.0),
+            });
+        }
+        let scenario = Scenario {
+            name: "burst-recover".into(),
+            chips: vec![ChipSpec::paper(); 2],
+            streams,
+            faults: Vec::new(),
+            standby: Vec::new(),
+        };
+        let cfg = FleetConfig {
+            seconds: 2.0,
+            admission: AdmissionPolicy::AdmitAll,
+            ..FleetConfig::new(scenario)
+        };
+        let mut sim = FleetSim::new(&cfg).expect("sim builds");
+        let original = sim.streams[0].spec;
+        let ladder_base = sim.adaptive.ladders[0][0];
+        let r = sim.run();
+
+        assert!(r.degraded_windows() > 0, "the burst must force at least one downshift");
+        // Degraded time is billed in whole controller windows.
+        assert_eq!(r.degraded_s(), r.degraded_windows() as f64 * r.qos_window_ms / 1e3);
+        // 1.15 s of fault-free tail is far beyond the hysteresis decay:
+        // every rung is back at 0 and the live spec is the original one.
+        assert!(sim.adaptive.rungs.iter().all(|&x| x == 0), "all rungs recover to 0");
+        assert_eq!(sim.streams[0].spec, original, "original resolution restored");
+        assert_eq!(ladder_base.0, original, "rung 0 is the original operating point");
+        assert_eq!(sim.streams[0].cost, ladder_base.1, "original frame cost restored");
     }
 }

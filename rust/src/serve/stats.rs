@@ -107,6 +107,12 @@ pub struct StreamStats {
     pub released: u64,
     /// Frames dropped without execution (expired or queue overflow).
     pub shed: u64,
+    /// Controller windows this stream spent live *below* its original
+    /// operating point (downshifted by the QoS controller,
+    /// [`crate::serve::qos`]). A pure integer count — degraded-quality
+    /// seconds are exactly `degraded_windows x window_ms / 1e3`
+    /// ([`FleetReport::qos_window_ms`]), no float accumulation anywhere.
+    pub degraded_windows: u64,
 }
 
 impl StreamStats {
@@ -130,7 +136,14 @@ impl StreamStats {
             metrics: Metrics::default(),
             released: 0,
             shed: 0,
+            degraded_windows: 0,
         }
+    }
+
+    /// Degraded-quality seconds: the exact integer window count scaled
+    /// by the controller window (`qos_window_ms`).
+    pub fn degraded_s(&self, qos_window_ms: f64) -> f64 {
+        self.degraded_windows as f64 * qos_window_ms / 1e3
     }
 
     /// Record a completed frame; `deadline_ms` is the relative deadline.
@@ -230,6 +243,9 @@ pub struct FleetReport {
     pub bus_peak_demand: f64,
     /// Mean fraction of ticks chips held a frame (compute or bus stall).
     pub chip_utilization: f64,
+    /// The QoS controller's window length in virtual milliseconds — the
+    /// unit [`StreamStats::degraded_windows`] converts to seconds with.
+    pub qos_window_ms: f64,
     /// Simulated span in seconds.
     pub wall_s: f64,
     /// Windowed time series, event log, incidents and metrics registry —
@@ -264,6 +280,19 @@ impl FleetReport {
     /// Frames shed (dropped unexecuted) across all streams.
     pub fn shed(&self) -> u64 {
         self.per_stream.iter().map(|s| s.shed).sum()
+    }
+
+    /// Controller windows spent degraded, summed across streams (a
+    /// stream-window unit: two streams degraded for one window count 2).
+    pub fn degraded_windows(&self) -> u64 {
+        self.per_stream.iter().map(|s| s.degraded_windows).sum()
+    }
+
+    /// Fleet-wide degraded-quality seconds (stream-seconds spent below
+    /// the original operating point) — exact integer window counts
+    /// scaled once by the controller window.
+    pub fn degraded_s(&self) -> f64 {
+        self.degraded_windows() as f64 * self.qos_window_ms / 1e3
     }
 
     /// Fleet-wide deadline misses over released frames.
@@ -326,6 +355,7 @@ impl FleetReport {
             words.push(s.lifetime_s.to_bits());
             words.push(s.released);
             words.push(s.shed);
+            words.push(s.degraded_windows);
             words.push(s.metrics.frames as u64);
             words.push(s.metrics.deadline_misses as u64);
             words.extend(s.metrics.latency_ms.iter().map(|l| l.to_bits()));
@@ -334,6 +364,7 @@ impl FleetReport {
         words.push(self.bus_saturation.to_bits());
         words.push(self.bus_peak_demand.to_bits());
         words.push(self.chip_utilization.to_bits());
+        words.push(self.qos_window_ms.to_bits());
         // Telemetry folds in only when the hub ran: hub-off reports keep
         // the exact digests pinned before the telemetry subsystem landed.
         if let Some(t) = &self.telemetry {
@@ -364,6 +395,9 @@ impl FleetReport {
             .set("bus_saturation", Json::Str(format!("{:.6}", self.bus_saturation)))
             .set("bus_peak_demand", Json::Str(format!("{:.6}", self.bus_peak_demand)))
             .set("chip_utilization", Json::Num(self.chip_utilization))
+            .set("qos_window_ms", Json::Num(self.qos_window_ms))
+            .set("degraded_windows", Json::Num(self.degraded_windows() as f64))
+            .set("degraded_s", Json::Num(self.degraded_s()))
             .set("p99_ms", Json::Num(self.aggregate_p99_ms()))
             .set("stats_digest", Json::Str(format!("{:#018x}", self.stats_digest())));
         let streams = self
@@ -392,6 +426,8 @@ impl FleetReport {
                     .set("completed", Json::Num(s.completed() as f64))
                     .set("missed", Json::Num(s.missed() as f64))
                     .set("shed", Json::Num(s.shed as f64))
+                    .set("degraded_windows", Json::Num(s.degraded_windows as f64))
+                    .set("degraded_s", Json::Num(s.degraded_s(self.qos_window_ms)))
                     .set("p50_ms", Json::Num(s.p50_ms()))
                     .set("p99_ms", Json::Num(s.p99_ms()));
                 so
@@ -422,13 +458,13 @@ impl fmt::Display for FleetReport {
         writeln!(
             f,
             "  id  model                resolution   fps  qos     window      released  done  \
-             p50 ms   p99 ms  miss%  shed%"
+             p50 ms   p99 ms  miss%  shed%  deg s"
         )?;
         for (i, s) in self.per_stream.iter().enumerate() {
             writeln!(
                 f,
                 "{:>4}  {:<19} {:>4}x{:<4}  {:>4.0}  {:<7} {:<11} {:>7} {:>6}  {:>6.1}  \
-                 {:>7.1}  {:>5.1}  {:>5.1}",
+                 {:>7.1}  {:>5.1}  {:>5.1}  {:>5.1}",
                 i,
                 s.provenance.model.name(),
                 s.spec.hw.1,
@@ -441,20 +477,22 @@ impl fmt::Display for FleetReport {
                 s.p50_ms(),
                 s.p99_ms(),
                 100.0 * s.miss_rate(),
-                100.0 * s.shed_rate()
+                100.0 * s.shed_rate(),
+                s.degraded_s(self.qos_window_ms)
             )?;
         }
         write!(
             f,
             "aggregate: bus util {:.2}  sat {:.2}  peak {:.1}x  chip util {:.2}  miss {:.1}%  \
-             shed {:.1}%  p99 {:.1} ms",
+             shed {:.1}%  p99 {:.1} ms  degraded {:.1} s",
             self.bus_utilization,
             self.bus_saturation,
             self.bus_peak_demand,
             self.chip_utilization,
             100.0 * self.miss_rate(),
             100.0 * self.shed_rate(),
-            self.aggregate_p99_ms()
+            self.aggregate_p99_ms(),
+            self.degraded_s()
         )?;
         if let Some(t) = &self.telemetry {
             if t.incidents.is_empty() {
@@ -515,6 +553,7 @@ mod tests {
             bus_saturation: 0.0,
             bus_peak_demand: 0.0,
             chip_utilization: 0.0,
+            qos_window_ms: 100.0,
             wall_s: 1.0,
             telemetry: None,
         };
@@ -612,6 +651,7 @@ mod tests {
             bus_saturation: 0.1,
             bus_peak_demand: 1.4,
             chip_utilization: 0.25,
+            qos_window_ms: 100.0,
             wall_s: 1.0,
             telemetry: None,
         };
@@ -642,6 +682,7 @@ mod tests {
             bus_saturation: 0.0,
             bus_peak_demand: 0.8,
             chip_utilization: 0.25,
+            qos_window_ms: 100.0,
             wall_s: 1.0,
             telemetry: None,
         };
@@ -667,6 +708,7 @@ mod tests {
             bus_saturation: 1.0 / 3.0,
             bus_peak_demand: 2.0 / 3.0,
             chip_utilization: 0.25,
+            qos_window_ms: 100.0,
             wall_s: 1.0,
             telemetry: None,
         };
@@ -688,6 +730,7 @@ mod tests {
             bus_saturation: 0.0,
             bus_peak_demand: 0.0,
             chip_utilization: 0.0,
+            qos_window_ms: 100.0,
             wall_s: 1.0,
             telemetry: None,
         };

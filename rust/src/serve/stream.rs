@@ -156,6 +156,21 @@ impl Stream {
         }
     }
 
+    /// Swap the stream's operating point to a degraded (or restored)
+    /// rung of its QoS ladder: resolution and per-frame cost change;
+    /// frame rate and QoS tier — and with them the release cadence and
+    /// deadline math — do not, so a downshift never perturbs the release
+    /// timeline. Frames already released keep the cost they were
+    /// released with.
+    pub fn apply_point(&mut self, spec: StreamSpec, cost: FrameCost) {
+        debug_assert!(
+            spec.target_fps == self.spec.target_fps && spec.qos == self.spec.qos,
+            "a QoS rung changes resolution and cost only"
+        );
+        self.spec = spec;
+        self.cost = cost;
+    }
+
     /// Release every frame due at or before `now_ms`. An inactive stream
     /// (not yet arrived, refused admission, or departed) releases
     /// nothing and does not advance.

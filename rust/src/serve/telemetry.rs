@@ -15,21 +15,27 @@
 //!   per-stream progress — so digests need no float tolerance.
 //! * **Events.** A [`TelemetryEvent`] log records
 //!   arrival/departure/refusal, shed (with [`ShedCause`]),
-//!   dispatch, completion and saturation-crossing events. The engines
-//!   never preempt a dispatched frame, so there is no preemption event.
+//!   dispatch, completion, chip-directive (faults and autoscaling),
+//!   downshift and saturation-crossing events. The engines never
+//!   preempt a dispatched frame, so there is no preemption event.
 //!   Within one tick events are logged in canonical phase order
-//!   (admission, sheds, dispatches, completions — sheds sorted by
-//!   `(cause, stream, seq)`), because the two engines visit the same
-//!   shed *set* in different intra-tick orders.
+//!   (chip directives and downshifts, admission, sheds, dispatches,
+//!   completions — sheds sorted by `(cause, stream, seq)`), because the
+//!   two engines visit the same shed *set* in different intra-tick
+//!   orders.
 //! * **Incidents.** [`detect_incidents`] folds the windows into typed
 //!   [`Incident`]s: sustained saturation *onsets* (hysteresis: enter at
 //!   ≥ 1/2 saturated ticks per window, exit below 1/4, minimum
 //!   [`SAT_MIN_WINDOWS`] windows, after [`WARMUP_WINDOWS`]), miss-rate
-//!   spikes (absolute floor + 2x the run average), and starving streams
+//!   spikes (absolute floor + 2x the run average), starving streams
 //!   (released but nothing completed for [`STARVE_WINDOWS`] consecutive
-//!   windows). A pool that is *chronically* saturated from the first
-//!   window never produces a saturation onset — the signal is reserved
-//!   for load changes a policy could react to.
+//!   windows), sustained degrades (the QoS controller held at least one
+//!   stream below its original operating point for
+//!   [`SAT_MIN_WINDOWS`]+ windows) and chip outages (a previously-up
+//!   chip fully down for whole windows). A pool that is *chronically*
+//!   saturated from the first window never produces a saturation onset,
+//!   and a chip down from its first window never produces an outage —
+//!   the signals are reserved for changes a policy could react to.
 //! * **Export.** [`TelemetryReport::to_chrome_json`] renders the run as
 //!   a Chrome trace-event document (`chrome://tracing`, Perfetto): one
 //!   track for the bus (saturated spans, per-window byte counters,
@@ -108,6 +114,9 @@ pub struct ChipWindow {
     pub queue_ticks: u64,
     /// Frames dispatched to this chip during the window.
     pub dispatched: u64,
+    /// Ticks this chip spent down — scripted outage, or a standby chip
+    /// not (yet) raised by the autoscaler.
+    pub down_ticks: u64,
 }
 
 /// Per-stream slice of one window.
@@ -117,6 +126,9 @@ pub struct StreamWindow {
     pub released: u32,
     /// Frames of the stream completed this window.
     pub completed: u32,
+    /// Ticks the stream spent live below its original operating point
+    /// (downshifted by the QoS controller, [`crate::serve::qos`]).
+    pub degraded_ticks: u32,
 }
 
 /// One fixed-length window of the fleet time series. Integer
@@ -189,10 +201,14 @@ impl WindowSample {
             self.dispatched,
         ]);
         for c in &self.per_chip {
-            out.extend([c.busy_ticks, c.queue_ticks, c.dispatched]);
+            out.extend([c.busy_ticks, c.queue_ticks, c.dispatched, c.down_ticks]);
         }
         for s in &self.per_stream {
-            out.extend([u64::from(s.released), u64::from(s.completed)]);
+            out.extend([
+                u64::from(s.released),
+                u64::from(s.completed),
+                u64::from(s.degraded_ticks),
+            ]);
         }
     }
 
@@ -205,6 +221,7 @@ impl WindowSample {
                     Json::Num(c.busy_ticks as f64),
                     Json::Num(c.queue_ticks as f64),
                     Json::Num(c.dispatched as f64),
+                    Json::Num(c.down_ticks as f64),
                 ])
             })
             .collect();
@@ -215,6 +232,7 @@ impl WindowSample {
                 Json::Arr(vec![
                     Json::Num(f64::from(s.released)),
                     Json::Num(f64::from(s.completed)),
+                    Json::Num(f64::from(s.degraded_ticks)),
                 ])
             })
             .collect();
@@ -328,6 +346,24 @@ pub enum TelemetryEventKind {
         /// First window past the episode.
         window: u64,
     },
+    /// A fault-timeline or autoscaler directive was applied to a chip at
+    /// the top of the tick ([`super::ChipDirective`]).
+    ChipEvent {
+        /// Global chip index.
+        chip: usize,
+        /// Directive code ([`super::ChipDirective::code`]): 0 up, 1
+        /// down, 2 clock-derate, 3 clock-restore, 4 link-derate, 5
+        /// link-restore.
+        directive: u8,
+    },
+    /// The QoS controller moved a stream to ladder rung `rung` (0 =
+    /// restored to its original operating point).
+    Downshift {
+        /// Stream id.
+        stream: usize,
+        /// The rung the stream now runs at.
+        rung: u8,
+    },
 }
 
 /// One entry of the fleet event log.
@@ -356,6 +392,12 @@ impl TelemetryEvent {
             }
             TelemetryEventKind::SaturationStart { window } => (7, window, 0, 0),
             TelemetryEventKind::SaturationEnd { window } => (8, window, 0, 0),
+            TelemetryEventKind::ChipEvent { chip, directive } => {
+                (9, chip as u64, u64::from(directive), 0)
+            }
+            TelemetryEventKind::Downshift { stream, rung } => {
+                (10, stream as u64, u64::from(rung), 0)
+            }
         };
         out.extend([self.tick, code, a, b, c]);
     }
@@ -375,6 +417,14 @@ pub enum IncidentKind {
     /// A stream that kept releasing frames but completed none for
     /// [`STARVE_WINDOWS`] consecutive windows.
     StarvingStream,
+    /// At least one stream ran below its original operating point for a
+    /// run of at least [`SAT_MIN_WINDOWS`] windows — the QoS controller
+    /// was actively trading quality for throughput.
+    SustainedDegrade,
+    /// A chip that had been up went fully down for a run of whole
+    /// windows (an *onset*, like saturation: a chip down from the first
+    /// window — e.g. an unraised standby chip — reports nothing).
+    ChipOutage,
 }
 
 impl IncidentKind {
@@ -384,6 +434,8 @@ impl IncidentKind {
             IncidentKind::SustainedSaturation => "sustained-saturation",
             IncidentKind::MissRateSpike => "miss-rate-spike",
             IncidentKind::StarvingStream => "starving-stream",
+            IncidentKind::SustainedDegrade => "sustained-degrade",
+            IncidentKind::ChipOutage => "chip-outage",
         }
     }
 
@@ -392,6 +444,8 @@ impl IncidentKind {
             IncidentKind::SustainedSaturation => 1,
             IncidentKind::MissRateSpike => 2,
             IncidentKind::StarvingStream => 3,
+            IncidentKind::SustainedDegrade => 4,
+            IncidentKind::ChipOutage => 5,
         }
     }
 }
@@ -408,9 +462,13 @@ pub struct Incident {
     pub last_window: u64,
     /// The affected stream, for per-stream incidents.
     pub stream: Option<usize>,
+    /// The affected chip, for per-chip incidents ([`IncidentKind::ChipOutage`]).
+    pub chip: Option<usize>,
     /// Magnitude in parts-per-million: peak saturated-tick fraction
     /// (saturation), peak miss fraction (spike); for starving streams,
-    /// the raw count of frames released while starving.
+    /// the raw count of frames released while starving; for sustained
+    /// degrades, the peak count of simultaneously degraded streams; for
+    /// chip outages, the total down ticks of the episode.
     pub magnitude_ppm: u64,
 }
 
@@ -420,8 +478,13 @@ impl std::fmt::Display for Incident {
         if let Some(s) = self.stream {
             write!(f, " stream {s}")?;
         }
+        if let Some(c) = self.chip {
+            write!(f, " chip {c}")?;
+        }
         match self.kind {
             IncidentKind::StarvingStream => write!(f, " released {}", self.magnitude_ppm),
+            IncidentKind::SustainedDegrade => write!(f, " peak {} streams", self.magnitude_ppm),
+            IncidentKind::ChipOutage => write!(f, " down {} ticks", self.magnitude_ppm),
             _ => write!(f, " peak {:.1}%", self.magnitude_ppm as f64 / 1e4),
         }
     }
@@ -437,6 +500,13 @@ impl Incident {
                 "stream",
                 match self.stream {
                     Some(s) => Json::Num(s as f64),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "chip",
+                match self.chip {
+                    Some(c) => Json::Num(c as f64),
                     None => Json::Null,
                 },
             )
@@ -490,6 +560,7 @@ pub fn detect_incidents(
                         first_window: s as u64,
                         last_window: (i - 1) as u64,
                         stream: None,
+                        chip: None,
                         magnitude_ppm: peak,
                     });
                 }
@@ -505,6 +576,7 @@ pub fn detect_incidents(
                 first_window: s as u64,
                 last_window: (windows.len() - 1) as u64,
                 stream: None,
+                chip: None,
                 magnitude_ppm: peak,
             });
         }
@@ -536,6 +608,7 @@ pub fn detect_incidents(
                 first_window: s as u64,
                 last_window: (i - 1) as u64,
                 stream: None,
+                chip: None,
                 magnitude_ppm: peak,
             });
         } else {
@@ -560,6 +633,7 @@ pub fn detect_incidents(
                         first_window: (i - run) as u64,
                         last_window: (i - 1) as u64,
                         stream: Some(s),
+                        chip: None,
                         magnitude_ppm: released,
                     });
                 }
@@ -573,12 +647,95 @@ pub fn detect_incidents(
                 first_window: (windows.len() - run) as u64,
                 last_window: (windows.len() - 1) as u64,
                 stream: Some(s),
+                chip: None,
                 magnitude_ppm: released,
             });
         }
     }
 
-    incidents.sort_by_key(|inc| (inc.first_window, inc.kind.code(), inc.stream));
+    // Sustained degrade: runs of windows where at least one stream spent
+    // ticks below its original operating point. Magnitude is the peak
+    // count of simultaneously degraded streams, raw (not ppm).
+    let mut run = 0usize;
+    let mut peak_streams = 0u64;
+    for (i, w) in windows.iter().enumerate() {
+        let degraded = w.per_stream.iter().filter(|ps| ps.degraded_ticks > 0).count() as u64;
+        if degraded > 0 {
+            run += 1;
+            peak_streams = peak_streams.max(degraded);
+        } else {
+            if run >= SAT_MIN_WINDOWS {
+                incidents.push(Incident {
+                    kind: IncidentKind::SustainedDegrade,
+                    first_window: (i - run) as u64,
+                    last_window: (i - 1) as u64,
+                    stream: None,
+                    chip: None,
+                    magnitude_ppm: peak_streams,
+                });
+            }
+            run = 0;
+            peak_streams = 0;
+        }
+    }
+    if run >= SAT_MIN_WINDOWS {
+        incidents.push(Incident {
+            kind: IncidentKind::SustainedDegrade,
+            first_window: (windows.len() - run) as u64,
+            last_window: (windows.len() - 1) as u64,
+            stream: None,
+            chip: None,
+            magnitude_ppm: peak_streams,
+        });
+    }
+
+    // Chip outage: a chip that had been up goes fully down for a run of
+    // whole windows. Like saturation this reports *onsets* only — a chip
+    // down from its first window (an unraised standby chip, or an outage
+    // spanning the whole run) is a steady state, not an incident.
+    let chips = windows.first().map_or(0, |w| w.per_chip.len());
+    for c in 0..chips {
+        let mut seen_up = false;
+        let mut run = 0usize;
+        let mut down = 0u64;
+        for (i, w) in windows.iter().enumerate() {
+            let pc = w.per_chip[c];
+            if w.ticks > 0 && pc.down_ticks == w.ticks {
+                if seen_up {
+                    run += 1;
+                    down += pc.down_ticks;
+                }
+            } else {
+                if pc.down_ticks < w.ticks {
+                    seen_up = true;
+                }
+                if run >= 1 {
+                    incidents.push(Incident {
+                        kind: IncidentKind::ChipOutage,
+                        first_window: (i - run) as u64,
+                        last_window: (i - 1) as u64,
+                        stream: None,
+                        chip: Some(c),
+                        magnitude_ppm: down,
+                    });
+                }
+                run = 0;
+                down = 0;
+            }
+        }
+        if run >= 1 {
+            incidents.push(Incident {
+                kind: IncidentKind::ChipOutage,
+                first_window: (windows.len() - run) as u64,
+                last_window: (windows.len() - 1) as u64,
+                stream: None,
+                chip: Some(c),
+                magnitude_ppm: down,
+            });
+        }
+    }
+
+    incidents.sort_by_key(|inc| (inc.first_window, inc.kind.code(), inc.stream, inc.chip));
     (incidents, crossings)
 }
 
@@ -764,6 +921,10 @@ impl TelemetryReport {
                         TelemetryEventKind::Shed { stream, .. } => ("shed", Some(stream)),
                         TelemetryEventKind::SaturationStart { .. } => ("saturation_start", None),
                         TelemetryEventKind::SaturationEnd { .. } => ("saturation_end", None),
+                        TelemetryEventKind::ChipEvent { .. } => ("chip_event", None),
+                        TelemetryEventKind::Downshift { stream, .. } => {
+                            ("downshift", Some(stream))
+                        }
                         _ => unreachable!("dispatch/complete handled above"),
                     };
                     let mut args = Json::obj();
@@ -773,6 +934,13 @@ impl TelemetryReport {
                     if let TelemetryEventKind::Shed { seq, cause, .. } = ev.kind {
                         args.set("seq", Json::Num(seq as f64))
                             .set("cause", Json::Str(cause.name().into()));
+                    }
+                    if let TelemetryEventKind::ChipEvent { chip, directive } = ev.kind {
+                        args.set("chip", Json::Num(chip as f64))
+                            .set("directive", Json::Num(f64::from(directive)));
+                    }
+                    if let TelemetryEventKind::Downshift { rung, .. } = ev.kind {
+                        args.set("rung", Json::Num(f64::from(rung)));
                     }
                     let mut e = Json::obj();
                     e.set("ph", Json::Str("i".into()))
@@ -930,10 +1098,13 @@ pub(crate) struct Telemetry {
     // Per-tick buffers, flushed in canonical phase order by `end_tick`
     // (the engines visit the same shed set in different intra-tick
     // orders, so sheds are canonicalized by (cause, stream, seq)).
+    tick_adapt: Vec<TelemetryEvent>,
     tick_admission: Vec<TelemetryEvent>,
     tick_sheds: Vec<(ShedCause, usize, u64)>,
     tick_dispatch: Vec<TelemetryEvent>,
     tick_complete: Vec<TelemetryEvent>,
+    chip_directives: u64,
+    downshifts: u64,
     live_streams: u64,
     hub: MetricsHub,
 }
@@ -963,13 +1134,32 @@ impl Telemetry {
             cur: WindowSample::new(0, chips, streams),
             windows: Vec::new(),
             events: Vec::new(),
+            tick_adapt: Vec::new(),
             tick_admission: Vec::new(),
             tick_sheds: Vec::new(),
             tick_dispatch: Vec::new(),
             tick_complete: Vec::new(),
+            chip_directives: 0,
+            downshifts: 0,
             live_streams: 0,
             hub,
         }
+    }
+
+    /// Phase 0: a fault/autoscale directive applied to chip `chip`
+    /// (`directive` is [`super::ChipDirective::code`]).
+    pub(crate) fn on_chip_directive(&mut self, tick: u64, chip: usize, directive: u8) {
+        self.chip_directives += 1;
+        self.tick_adapt
+            .push(TelemetryEvent { tick, kind: TelemetryEventKind::ChipEvent { chip, directive } });
+    }
+
+    /// Phase 0: stream `stream` swapped to ladder rung `rung` (0 = its
+    /// original operating point) by the QoS controller.
+    pub(crate) fn on_rung_change(&mut self, tick: u64, stream: usize, rung: u8) {
+        self.downshifts += 1;
+        self.tick_adapt
+            .push(TelemetryEvent { tick, kind: TelemetryEventKind::Downshift { stream, rung } });
     }
 
     /// Phase 1: timeline toggles `(stream, live)` in event order, plus
@@ -1040,13 +1230,15 @@ impl Telemetry {
 
     /// End of tick: bus accounting (same saturation predicate as the
     /// arbiter), per-chip occupancy sampled post-refill, event-buffer
-    /// flush in canonical phase order, and window rollover.
+    /// flush in canonical phase order, and window rollover. `degraded`
+    /// marks streams live below their original operating point.
     pub(crate) fn end_tick(
         &mut self,
         tick: u64,
         demands: &[f64],
         grants: &[f64],
-        chip_states: &[(bool, u32)],
+        chip_states: &[(bool, u32, bool)],
+        degraded: &[bool],
     ) {
         let offered: f64 = demands.iter().sum();
         let granted: f64 = grants.iter().sum();
@@ -1056,15 +1248,24 @@ impl Telemetry {
         if offered > self.budget_bytes_per_tick + 1e-9 {
             self.cur.saturated_ticks += 1;
         }
-        for (c, &(busy, queued)) in chip_states.iter().enumerate() {
+        for (c, &(busy, queued, down)) in chip_states.iter().enumerate() {
             if busy {
                 self.cur.per_chip[c].busy_ticks += 1;
             }
             self.cur.per_chip[c].queue_ticks += u64::from(queued);
+            if down {
+                self.cur.per_chip[c].down_ticks += 1;
+            }
+        }
+        for (s, &deg) in degraded.iter().enumerate() {
+            if deg {
+                self.cur.per_stream[s].degraded_ticks += 1;
+            }
         }
         self.hub.observe("bus.tick_offered_kb", offered as u64 / 1024);
         self.hub.set("fleet.live_streams", self.live_streams);
 
+        self.events.append(&mut self.tick_adapt);
         self.events.append(&mut self.tick_admission);
         self.tick_sheds.sort_by_key(|&(cause, stream, seq)| (cause.code(), stream, seq));
         for (cause, stream, seq) in self.tick_sheds.drain(..) {
@@ -1110,6 +1311,8 @@ impl Telemetry {
         self.hub.inc("fleet.departures", departures);
         self.hub.inc("fleet.refusals", refusals);
         self.hub.inc("fleet.dispatched", dispatched);
+        self.hub.inc("fleet.chip_directives", self.chip_directives);
+        self.hub.inc("fleet.downshifts", self.downshifts);
 
         TelemetryReport {
             window_ms: self.window_ms,
@@ -1245,6 +1448,72 @@ mod tests {
         assert!(incidents.iter().all(|i| i.kind != IncidentKind::StarvingStream));
     }
 
+    /// A window where stream 0 of 2 spent `deg` ticks degraded.
+    fn deg_win(i: u64, deg: u32) -> WindowSample {
+        let mut w = win(i, 0, 100);
+        w.per_stream[0].degraded_ticks = deg;
+        w
+    }
+
+    /// A window where chip 0 of 2 spent `down` of 100 ticks down.
+    fn down_win(i: u64, down: u64) -> WindowSample {
+        let mut w = win(i, 0, 100);
+        w.per_chip = vec![ChipWindow::default(); 2];
+        w.per_chip[0].down_ticks = down;
+        w
+    }
+
+    #[test]
+    fn sustained_degrade_needs_min_windows() {
+        // Two degraded windows: below the floor, no incident.
+        let mut windows: Vec<WindowSample> = (0..3).map(|i| deg_win(i, 0)).collect();
+        windows.extend((3..5).map(|i| deg_win(i, 40)));
+        windows.push(deg_win(5, 0));
+        let (incidents, _) = detect_incidents(&windows, 100);
+        assert!(incidents.iter().all(|i| i.kind != IncidentKind::SustainedDegrade));
+
+        // Three in a row: one incident, magnitude = peak degraded streams.
+        let mut windows: Vec<WindowSample> = (0..3).map(|i| deg_win(i, 0)).collect();
+        windows.extend((3..6).map(|i| deg_win(i, 40)));
+        windows[4].per_stream[1].degraded_ticks = 7;
+        windows.push(deg_win(6, 0));
+        let (incidents, _) = detect_incidents(&windows, 100);
+        let deg: Vec<&Incident> =
+            incidents.iter().filter(|i| i.kind == IncidentKind::SustainedDegrade).collect();
+        assert_eq!(deg.len(), 1, "{incidents:?}");
+        assert_eq!((deg[0].first_window, deg[0].last_window), (3, 5));
+        assert_eq!(deg[0].magnitude_ppm, 2, "peak simultaneously degraded streams");
+        assert_eq!(deg[0].stream, None);
+    }
+
+    #[test]
+    fn chip_outage_reports_onsets_only() {
+        // Chip 0 up, then fully down for two windows, then back up.
+        let mut windows: Vec<WindowSample> = vec![down_win(0, 0), down_win(1, 0)];
+        windows.push(down_win(2, 100));
+        windows.push(down_win(3, 100));
+        windows.push(down_win(4, 0));
+        let (incidents, _) = detect_incidents(&windows, 100);
+        let out: Vec<&Incident> =
+            incidents.iter().filter(|i| i.kind == IncidentKind::ChipOutage).collect();
+        assert_eq!(out.len(), 1, "{incidents:?}");
+        assert_eq!((out[0].first_window, out[0].last_window), (2, 3));
+        assert_eq!(out[0].chip, Some(0));
+        assert_eq!(out[0].magnitude_ppm, 200, "total down ticks");
+
+        // Down from the first window for the whole run: a steady state
+        // (e.g. an unraised standby chip), not an incident.
+        let windows: Vec<WindowSample> = (0..6).map(|i| down_win(i, 100)).collect();
+        let (incidents, _) = detect_incidents(&windows, 100);
+        assert!(incidents.iter().all(|i| i.kind != IncidentKind::ChipOutage), "{incidents:?}");
+
+        // A partially-down window (derate, not outage) breaks the run.
+        let windows: Vec<WindowSample> =
+            vec![down_win(0, 0), down_win(1, 60), down_win(2, 0)];
+        let (incidents, _) = detect_incidents(&windows, 100);
+        assert!(incidents.iter().all(|i| i.kind != IncidentKind::ChipOutage));
+    }
+
     #[test]
     fn recorder_windows_events_and_report_shape() {
         let cfg = TelemetryConfig { enabled: true, window_ms: 2.0 };
@@ -1253,13 +1522,13 @@ mod tests {
         t.on_admission(0, &[(0, true)], &[1]);
         t.on_release(0);
         t.on_dispatch(0, 0, 0, 0);
-        t.end_tick(0, &[150.0], &[100.0], &[(true, 0)]);
+        t.end_tick(0, &[150.0], &[100.0], &[(true, 0, false)], &[true, false]);
         // Tick 1: completion (on time), a shed, window closes.
         t.on_shed(0, 1, ShedCause::Expired);
         t.on_complete(1, 0, 0, 0, 3.5, false);
-        t.end_tick(1, &[50.0], &[50.0], &[(false, 0)]);
+        t.end_tick(1, &[50.0], &[50.0], &[(false, 0, false)], &[true, false]);
         // Tick 2: idle, partial window.
-        t.end_tick(2, &[0.0], &[0.0], &[(false, 0)]);
+        t.end_tick(2, &[0.0], &[0.0], &[(false, 0, true)], &[false, false]);
         let r = t.finish();
 
         assert_eq!(r.ticks_per_window, 2);
@@ -1275,7 +1544,9 @@ mod tests {
         assert_eq!(r.windows[0].arrivals, 1);
         assert_eq!(r.windows[0].refusals, 1);
         assert_eq!(r.windows[0].per_chip[0].busy_ticks, 1);
+        assert_eq!(r.windows[0].per_stream[0].degraded_ticks, 2);
         assert_eq!(r.windows[1].ticks, 1);
+        assert_eq!(r.windows[1].per_chip[0].down_ticks, 1);
         // Log: arrival, refusal, dispatch (tick 0), shed, complete (1).
         assert_eq!(r.events.len(), 5);
         assert!(matches!(r.events[0].kind, TelemetryEventKind::Arrival { stream: 0 }));
@@ -1309,14 +1580,14 @@ mod tests {
         t.on_shed(2, 7, ShedCause::Overflow);
         t.on_shed(0, 3, ShedCause::Expired);
         t.on_shed(1, 1, ShedCause::Expired);
-        t.end_tick(0, &[0.0], &[0.0], &[(false, 0)]);
+        t.end_tick(0, &[0.0], &[0.0], &[(false, 0, false)], &[false; 3]);
         let a = t.finish();
         // ...and in another: the log must come out identical.
         let mut t = Telemetry::new(&cfg, 1.0, 3, 1, 1e9, 0, 0);
         t.on_shed(1, 1, ShedCause::Expired);
         t.on_shed(2, 7, ShedCause::Overflow);
         t.on_shed(0, 3, ShedCause::Expired);
-        t.end_tick(0, &[0.0], &[0.0], &[(false, 0)]);
+        t.end_tick(0, &[0.0], &[0.0], &[(false, 0, false)], &[false; 3]);
         let b = t.finish();
         assert_eq!(a.events, b.events);
         assert!(matches!(a.events[0].kind, TelemetryEventKind::Shed { stream: 0, seq: 3, .. }));

@@ -4,8 +4,8 @@
 //! sheds / misses).
 
 use rcnet_dla::serve::{
-    run_fleet, run_fleet_with, AdmissionPolicy, FleetConfig, FleetReport, QosClass, Scenario,
-    StreamSpec,
+    run_fleet, run_fleet_with, AdmissionPolicy, FaultEvent, FaultKind, FleetConfig, FleetReport,
+    QosClass, Scenario, StreamSpec,
 };
 
 fn hd15(qos: QosClass) -> StreamSpec {
@@ -168,4 +168,68 @@ fn run_fleet_validates_its_config() {
     // The same guard covers explicit stream lists with bad specs.
     let bad_spec = StreamSpec { hw: (720, 1280), target_fps: 0.0, qos: QosClass::Gold };
     assert!(run_fleet_with(&good, &[bad_spec]).is_err(), "fps 0 must be rejected");
+}
+
+/// Satellite pin: malformed fault scripts come back as crate errors from
+/// `run_fleet` — a fault on a chip outside the base pool, overlapping
+/// same-kind intervals on one chip, a zero derate factor, and an
+/// inverted interval are all rejected before the engines start.
+#[test]
+fn run_fleet_validates_fault_scripts() {
+    let good = FleetConfig { seconds: 0.5, ..FleetConfig::sampled(2, 2, 1) };
+    let with_faults = |faults: Vec<FaultEvent>| FleetConfig {
+        scenario: Scenario { faults, ..good.scenario.clone() },
+        ..good.clone()
+    };
+    let down = |chip: usize, start_ms: f64, end_ms: f64| FaultEvent {
+        chip,
+        start_ms,
+        end_ms,
+        kind: FaultKind::ChipDown,
+    };
+
+    // A well-formed script runs: adjacent (non-overlapping) same-kind
+    // intervals and different kinds overlapping on one chip are legal.
+    assert!(run_fleet(&with_faults(vec![down(0, 100.0, 200.0), down(0, 200.0, 300.0)]))
+        .is_ok());
+    assert!(run_fleet(&with_faults(vec![
+        down(1, 100.0, 300.0),
+        FaultEvent {
+            chip: 0,
+            start_ms: 150.0,
+            end_ms: 250.0,
+            kind: FaultKind::ThermalDerate { factor: 0.5 },
+        },
+    ]))
+    .is_ok());
+
+    for (what, faults) in [
+        ("chip out of the base pool", vec![down(2, 100.0, 200.0)]),
+        (
+            "overlapping same-kind intervals on one chip",
+            vec![down(0, 100.0, 300.0), down(0, 250.0, 400.0)],
+        ),
+        (
+            "zero derate factor",
+            vec![FaultEvent {
+                chip: 0,
+                start_ms: 100.0,
+                end_ms: 200.0,
+                kind: FaultKind::DramThrottle { factor: 0.0 },
+            }],
+        ),
+        (
+            "derate factor above 1",
+            vec![FaultEvent {
+                chip: 0,
+                start_ms: 100.0,
+                end_ms: 200.0,
+                kind: FaultKind::ThermalDerate { factor: 1.5 },
+            }],
+        ),
+        ("inverted interval", vec![down(0, 300.0, 100.0)]),
+        ("negative start", vec![down(0, -1.0, 100.0)]),
+    ] {
+        assert!(run_fleet(&with_faults(faults)).is_err(), "{what} must be rejected");
+    }
 }

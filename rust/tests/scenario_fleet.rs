@@ -1,9 +1,12 @@
 //! Scenario acceptance pins: for every bundled preset — stream churn,
-//! per-stream models, heterogeneous chip pools — the serial and
-//! parallel engines produce byte-identical reports across seeds and
-//! thread counts; mixed-model scenarios price every stream from its own
-//! network's optimal-DP plan (witnessed by per-stream cost provenance);
-//! and churned streams' statistics window over their actual lifetimes.
+//! per-stream models, heterogeneous chip pools, scripted chip faults
+//! and QoS degradation under load — the serial and parallel engines
+//! produce byte-identical reports across seeds and thread counts;
+//! mixed-model scenarios price every stream from its own network's
+//! optimal-DP plan (witnessed by per-stream cost provenance); churned
+//! streams' statistics window over their actual lifetimes; and the
+//! fault presets keep the frame books balanced (requeued, never lost)
+//! while billing degraded time only where load actually forces it.
 
 use rcnet_dla::config::ChipConfig;
 use rcnet_dla::plan::Planner;
@@ -181,6 +184,8 @@ fn capability_gap_rejects_unservable_streams() {
                 ModelId::Deployed,
             ),
         ],
+        faults: Vec::new(),
+        standby: Vec::new(),
     };
     let cfg = FleetConfig { seconds: 1.0, ..FleetConfig::new(scenario) };
     let r = run_fleet(&cfg).expect("edge-only run");
@@ -208,8 +213,13 @@ fn admit_all_sheds_unservable_frames_without_starving_the_pool() {
             ModelId::Deployed,
         ));
     }
-    let scenario =
-        Scenario { name: "edge-admit-all".into(), chips: vec![ChipSpec::edge(); 4], streams };
+    let scenario = Scenario {
+        name: "edge-admit-all".into(),
+        chips: vec![ChipSpec::edge(); 4],
+        streams,
+        faults: Vec::new(),
+        standby: Vec::new(),
+    };
     let cfg = FleetConfig {
         seconds: 1.0,
         admission: AdmissionPolicy::AdmitAll,
@@ -267,6 +277,8 @@ fn short_lived_streams_have_clean_empty_stats() {
                 departure_ms: Some(101.0),
             },
         ],
+        faults: Vec::new(),
+        standby: Vec::new(),
     };
     let cfg = FleetConfig { seconds: 1.0, ..FleetConfig::new(scenario) };
     let serial = run_fleet(&FleetConfig { threads: 1, ..cfg.clone() }).expect("serial");
@@ -284,6 +296,113 @@ fn short_lived_streams_have_clean_empty_stats() {
         assert!(s.lifetime_s >= 0.0 && s.lifetime_s < 0.01);
     }
     assert!(serial.per_stream[0].completed() > 0, "the steady stream does real work");
+}
+
+/// The fault differential harness: the three fault presets — diurnal
+/// autoscaling, flash-crowd downshift, scripted chip failures — are
+/// byte-identical serial vs parallel for 2 seeds x {2, 3, 8} threads
+/// (also covered by the all-preset matrix above, pinned here by name so
+/// a preset-list regression cannot silently drop them), and a rerun of
+/// the same config reproduces the JSON document byte for byte.
+#[test]
+fn fault_presets_are_byte_identical_and_rerun_stable() {
+    for name in ["diurnal-load", "flash-crowd", "chip-failure"] {
+        for seed in [1u64, 7] {
+            let serial = run_fleet(&preset_cfg(name, seed, 1)).expect("serial run");
+            assert!(serial.released() > 0, "{name} seed {seed} released nothing");
+            let again = run_fleet(&preset_cfg(name, seed, 1)).expect("serial rerun");
+            assert_eq!(
+                serial.to_json().to_string(),
+                again.to_json().to_string(),
+                "{name} seed {seed}: serial rerun json diverged"
+            );
+            for threads in [2usize, 3, 8] {
+                let parallel =
+                    run_fleet(&preset_cfg(name, seed, threads)).expect("parallel run");
+                assert_identical(
+                    &serial,
+                    &parallel,
+                    &format!("{name}, seed {seed}, {threads} threads"),
+                );
+            }
+        }
+    }
+}
+
+/// Chip-failure requeue accounting: faults requeue in-flight frames,
+/// they never drop them. Every stream's books balance (completions plus
+/// sheds never exceed releases; the remainder is work still in the
+/// queues at the end), the release schedule is *identical* to the same
+/// scenario with the fault script stripped (faults perturb service, not
+/// releases), and real work still completes through the outage window.
+#[test]
+fn chip_failure_requeues_frames_without_losing_any() {
+    let faulted = run_fleet(&preset_cfg("chip-failure", 1, 1)).expect("faulted run");
+
+    let mut clean_scenario = Scenario::preset("chip-failure").expect("bundled preset");
+    clean_scenario.faults.clear();
+    let clean_cfg = FleetConfig {
+        seconds: 2.0,
+        seed: 1,
+        threads: 1,
+        ..FleetConfig::new(clean_scenario)
+    };
+    let clean = run_fleet(&clean_cfg).expect("fault-free run");
+
+    assert!(faulted.completed() > 0, "the pool keeps serving around the faults");
+    assert_eq!(faulted.per_stream.len(), clean.per_stream.len());
+    for (f, c) in faulted.per_stream.iter().zip(&clean.per_stream) {
+        assert!(
+            f.completed() + f.shed <= f.released,
+            "stream books overdrawn: {} completed + {} shed > {} released",
+            f.completed(),
+            f.shed,
+            f.released
+        );
+        assert_eq!(
+            f.released, c.released,
+            "faults must not change the release schedule, only its service"
+        );
+    }
+    // The fault script visibly bites: the faulted run completes no more
+    // than the clean one fleet-wide, and strictly loses ground or sheds
+    // more somewhere (a 1.4 s outage window on a 3-chip pool is not free).
+    assert!(faulted.completed() <= clean.completed());
+    let shed = |r: &FleetReport| r.per_stream.iter().map(|s| s.shed).sum::<u64>();
+    assert!(
+        faulted.completed() < clean.completed() || shed(&faulted) > shed(&clean),
+        "the scripted faults must observably perturb service"
+    );
+}
+
+/// The degraded-seconds acceptance pins: flash-crowd's overload drives
+/// the QoS controller to downshift (a nonzero, whole-window degraded
+/// bill), steady-hd never degrades, and diurnal-load's pressure raises
+/// standby capacity (chip directives fire) — observable straight from
+/// the report and its telemetry.
+#[test]
+fn degraded_seconds_bill_matches_the_load_shape() {
+    let flash = run_fleet(&preset_cfg("flash-crowd", 1, 1)).expect("flash-crowd run");
+    assert!(flash.degraded_windows() > 0, "flash-crowd must force downshifts");
+    assert!(flash.degraded_s() > 0.0);
+    assert_eq!(
+        flash.degraded_s(),
+        flash.degraded_windows() as f64 * flash.qos_window_ms / 1e3,
+        "degraded time is billed in whole controller windows"
+    );
+    let tel = flash.telemetry.as_ref().expect("telemetry on by default");
+    assert!(tel.hub.counter("fleet.downshifts") > 0, "downshift events are recorded");
+
+    let steady = run_fleet(&preset_cfg("steady-hd", 1, 1)).expect("steady-hd run");
+    assert_eq!(steady.degraded_windows(), 0, "steady-hd never degrades");
+    assert_eq!(steady.degraded_s(), 0.0);
+
+    let diurnal = run_fleet(&preset_cfg("diurnal-load", 1, 1)).expect("diurnal-load run");
+    let dtel = diurnal.telemetry.as_ref().expect("telemetry on by default");
+    assert!(
+        dtel.hub.counter("fleet.chip_directives") > 0,
+        "diurnal-load's waves must drive the autoscaler"
+    );
 }
 
 /// The JSON document is deterministic and carries the digest — the CI

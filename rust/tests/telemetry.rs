@@ -7,7 +7,9 @@
 //! stats digest exactly where they were before telemetry existed.
 
 use rcnet_dla::serve::{
-    run_fleet, FleetConfig, IncidentKind, Scenario, TelemetryConfig, PRESET_NAMES,
+    detect_incidents, run_fleet, ChipSpec, FaultEvent, FaultKind, FleetConfig, IncidentKind,
+    ModelId, QosClass, Scenario, StreamScript, StreamSpec, TelemetryConfig, WindowSample,
+    PRESET_NAMES, SAT_MIN_WINDOWS, STARVE_WINDOWS, WARMUP_WINDOWS,
 };
 use rcnet_dla::util::json::Json;
 
@@ -153,4 +155,159 @@ fn chrome_trace_document_is_well_formed() {
     assert_eq!(series.len(), tel.windows.len(), "one series row per window");
     assert!(doc.get("incidents").and_then(Json::as_arr).is_some(), "incidents array");
     assert!(doc.get("metrics").is_some(), "metrics snapshot");
+}
+
+/// A synthetic window with `sat` of 100 ticks saturated — the unit for
+/// driving `detect_incidents` straight at its integer thresholds.
+fn sat_win(i: u64, sat: u64) -> WindowSample {
+    WindowSample { window: i, ticks: 100, saturated_ticks: sat, ..WindowSample::default() }
+}
+
+/// Satellite pin: the saturation detector's thresholds are exact in
+/// integers. Entering takes *exactly* half the ticks (49/100 does not),
+/// a window at exactly the 1/4 exit threshold does NOT end an episode
+/// (exit is strictly below), and one tick fewer does.
+#[test]
+fn saturation_enter_and_exit_thresholds_are_exact() {
+    let sustained = |ws: &[WindowSample]| {
+        let (inc, _) = detect_incidents(ws, 100);
+        inc.iter().filter(|i| i.kind == IncidentKind::SustainedSaturation).count()
+    };
+    let quiet_warmup: Vec<WindowSample> =
+        (0..WARMUP_WINDOWS as u64).map(|i| sat_win(i, 0)).collect();
+
+    // Exactly 1/2 enters: SAT_MIN_WINDOWS windows at 50/100 sustain.
+    let mut ws = quiet_warmup.clone();
+    for k in 0..SAT_MIN_WINDOWS as u64 {
+        ws.push(sat_win(WARMUP_WINDOWS as u64 + k, 50));
+    }
+    ws.push(sat_win(ws.len() as u64, 0));
+    assert_eq!(sustained(&ws), 1, "50/100 is >= 1/2: the episode must enter");
+
+    // One tick under never enters.
+    let mut ws = quiet_warmup.clone();
+    for k in 0..SAT_MIN_WINDOWS as u64 {
+        ws.push(sat_win(WARMUP_WINDOWS as u64 + k, 49));
+    }
+    ws.push(sat_win(ws.len() as u64, 0));
+    assert_eq!(sustained(&ws), 0, "49/100 is < 1/2: the episode must not enter");
+
+    // Exactly 1/4 does NOT exit: enter at 50, hold at 25 long enough
+    // that the episode reaches the minimum length, then drop below.
+    let mut ws = quiet_warmup.clone();
+    ws.push(sat_win(WARMUP_WINDOWS as u64, 50));
+    for k in 1..SAT_MIN_WINDOWS as u64 {
+        ws.push(sat_win(WARMUP_WINDOWS as u64 + k, 25));
+    }
+    ws.push(sat_win(ws.len() as u64, 24));
+    assert_eq!(sustained(&ws), 1, "25/100 is not < 1/4: it must hold the episode open");
+
+    // One tick under the exit threshold ends it immediately — each
+    // 1-window episode is below the minimum, so nothing is reported.
+    let mut ws = quiet_warmup.clone();
+    for k in 0..SAT_MIN_WINDOWS as u64 {
+        ws.push(sat_win(WARMUP_WINDOWS as u64 + 2 * k, 50));
+        ws.push(sat_win(WARMUP_WINDOWS as u64 + 2 * k + 1, 24));
+    }
+    assert_eq!(sustained(&ws), 0, "24/100 is < 1/4: every episode exits after one window");
+}
+
+/// Satellite pin: the warmup boundary is off-by-one-exact. Saturation at
+/// the 1/4 exit threshold in the *last* warmup window marks the load
+/// chronic (no onset is ever reported); one tick below it does not, and
+/// an episode starting in the first post-warmup window is reported.
+#[test]
+fn warmup_chronic_marking_is_exact_at_the_boundary() {
+    let sustained = |ws: &[WindowSample]| {
+        let (inc, _) = detect_incidents(ws, 100);
+        inc.iter().filter(|i| i.kind == IncidentKind::SustainedSaturation).count()
+    };
+    let episode = |warm_sat: u64| {
+        let mut ws: Vec<WindowSample> = (0..WARMUP_WINDOWS as u64 - 1)
+            .map(|i| sat_win(i, 0))
+            .collect();
+        ws.push(sat_win(WARMUP_WINDOWS as u64 - 1, warm_sat));
+        for k in 0..SAT_MIN_WINDOWS as u64 {
+            ws.push(sat_win(WARMUP_WINDOWS as u64 + k, 100));
+        }
+        ws.push(sat_win(ws.len() as u64, 0));
+        ws
+    };
+    assert_eq!(
+        sustained(&episode(25)),
+        0,
+        "25/100 in the last warmup window is chronic: no onset"
+    );
+    assert_eq!(
+        sustained(&episode(24)),
+        1,
+        "24/100 in warmup is clean: the first post-warmup window starts an onset"
+    );
+}
+
+/// Satellite pin, end to end: a chip pool that is down for the whole run
+/// starves its streams — frames release and shed, nothing completes, the
+/// starving-stream incident fires — while every reported statistic stays
+/// zero, not NaN. A whole-run outage reports no chip-outage incident
+/// (onset semantics: the chip was never seen up).
+#[test]
+fn whole_run_chip_down_starves_streams_with_finite_stats() {
+    let scenario = Scenario {
+        name: "blackout".into(),
+        chips: vec![ChipSpec::paper()],
+        streams: vec![StreamScript::steady(
+            StreamSpec { hw: (720, 1280), target_fps: 30.0, qos: QosClass::Gold },
+            ModelId::Deployed,
+        )],
+        faults: vec![FaultEvent {
+            chip: 0,
+            start_ms: 0.0,
+            end_ms: 10_000.0,
+            kind: FaultKind::ChipDown,
+        }],
+        standby: Vec::new(),
+    };
+    let cfg = FleetConfig { seconds: 1.0, ..FleetConfig::new(scenario) };
+    let r = run_fleet(&cfg).expect("blackout run");
+
+    let s = &r.per_stream[0];
+    assert!(s.admitted, "admission is capability-based, not liveness-based");
+    assert!(s.released > 0, "the stream keeps releasing into the outage");
+    assert_eq!(r.completed(), 0, "a downed pool completes nothing");
+    assert_eq!(s.p50_ms(), 0.0, "zero, not NaN");
+    assert_eq!(s.p99_ms(), 0.0, "zero, not NaN");
+    assert!(s.miss_rate().is_finite() && s.miss_rate() == 0.0);
+    assert!(s.shed_rate().is_finite() && s.shed_rate() > 0.0);
+    assert!(r.miss_rate().is_finite());
+    assert!(r.loss_rate().is_finite());
+
+    let tel = r.telemetry.as_ref().expect("telemetry on by default");
+    let starving: Vec<_> = tel.incidents_of(IncidentKind::StarvingStream).collect();
+    assert!(!starving.is_empty(), "a whole-run outage starves the stream");
+    assert!(starving.iter().all(|i| i.stream == Some(0)));
+    assert!(
+        starving.iter().all(|i| (i.last_window - i.first_window) as usize + 1 >= STARVE_WINDOWS),
+        "starvation runs meet the minimum window count"
+    );
+    assert_eq!(
+        tel.incidents_of(IncidentKind::ChipOutage).count(),
+        0,
+        "a chip down from its first window is a steady state, not an outage onset"
+    );
+}
+
+/// Mid-run outages DO report: chip-failure's scripted 0.6-1.4 s death of
+/// chip 1 is exactly eight full windows down after having been seen up,
+/// and the other two (derated, not down) chips report nothing.
+#[test]
+fn chip_failure_preset_reports_the_mid_run_outage() {
+    let r = run_fleet(&preset_cfg("chip-failure", 1, 1)).expect("chip-failure run");
+    let tel = r.telemetry.as_ref().expect("telemetry on by default");
+    let outages: Vec<_> = tel.incidents_of(IncidentKind::ChipOutage).collect();
+    assert_eq!(outages.len(), 1, "exactly one chip died: {:?}", tel.incidents);
+    let o = outages[0];
+    assert_eq!(o.chip, Some(1), "chip 1 is the one scripted down");
+    assert_eq!(o.magnitude_ppm, 800, "0.6 s to 1.4 s is 800 down ticks");
+    assert_eq!(o.first_window, 6);
+    assert_eq!(o.last_window, 13);
 }
