@@ -7,11 +7,13 @@
 //! schedule simulation, phase-level trace construction, the bundled
 //! scenario presets (churn, multi-model, heterogeneous pools), the
 //! fault-and-degradation presets (autoscaling, QoS downshift, chip
-//! failures), and the telemetry hub on-vs-off overhead — and emits one
-//! JSON report per family (`BENCH_fleet.json`, `BENCH_planner.json`,
-//! `BENCH_trace.json`, `BENCH_serve_scenario.json`, `BENCH_fault.json`,
-//! `BENCH_telemetry.json`) that CI uploads and gates against the
-//! committed baselines at the repository root.
+//! failures), the telemetry hub on-vs-off overhead, and the multi-chip
+//! pipeline path (the `pipeline-giant` preset plus split planning) —
+//! and emits one JSON report per family (`BENCH_fleet.json`,
+//! `BENCH_planner.json`, `BENCH_trace.json`,
+//! `BENCH_serve_scenario.json`, `BENCH_fault.json`,
+//! `BENCH_telemetry.json`, `BENCH_pipeline.json`) that CI uploads and
+//! gates against the committed baselines at the repository root.
 //!
 //! Every measurement separates two kinds of numbers:
 //!
@@ -35,8 +37,8 @@ mod workloads;
 
 pub use compare::{compare_reports, CompareOutcome, Regression};
 pub use workloads::{
-    fault_report, fleet_report, planner_report, scenario_report, telemetry_report, trace_report,
-    BenchProfile,
+    fault_report, fleet_report, pipeline_report, planner_report, scenario_report,
+    telemetry_report, trace_report, BenchProfile,
 };
 
 use std::path::Path;

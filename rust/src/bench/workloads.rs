@@ -39,6 +39,11 @@
 //!   fast path), so the perf gate bounds the observability overhead and
 //!   every run proves the hub never perturbs the served outcome, plus
 //!   the fleet Chrome-trace serialization cost.
+//! * **pipeline** ([`pipeline_report`]) — the `pipeline-giant` preset
+//!   (an untileable DeepLabv3@1080p served across a two-chip pipeline)
+//!   on both engines, digest-cross-checked, with the inter-stage
+//!   hand-off bill reported, plus the 2-way split-planning cost
+//!   ([`crate::plan::split_pipeline`]).
 //!
 //! Workload ids never encode anything machine-dependent (the resolved
 //!   `auto` worker count is recorded as an `info` metric instead), so
@@ -49,7 +54,7 @@ use crate::config::ChipConfig;
 use crate::dla::{simulate_fused, simulate_layer_by_layer, trace_fused, trace_layer_by_layer};
 use crate::fusion::FusionConfig;
 use crate::model::zoo::{plan_fixtures, yolov2_converted, PAPER_RESOLUTIONS};
-use crate::plan::{PlanCache, Planner};
+use crate::plan::{split_pipeline, PlanCache, Planner};
 use crate::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
 use crate::serve::{
     resolve_threads, AdmissionPolicy, FleetConfig, FleetReport, FleetSim, Scenario,
@@ -159,6 +164,15 @@ impl BenchProfile {
             // fault script (and the recovery tail) under the quick gate.
             BenchProfile::Quick => 2.0,
             BenchProfile::Full => 3.5,
+        }
+    }
+
+    fn pipeline_seconds(self) -> f64 {
+        match self {
+            // One ~2 s two-stage giant frame plus tail: the pipeline
+            // completes at least one frame even under the quick gate.
+            BenchProfile::Quick => 3.0,
+            BenchProfile::Full => 6.0,
         }
     }
 }
@@ -732,6 +746,130 @@ pub fn telemetry_report(profile: BenchProfile) -> Result<BenchReport> {
             }],
         });
     }
+    Ok(rep)
+}
+
+/// Run the pipeline workload family (see the module docs): the
+/// `pipeline-giant` preset on both engines, digest-cross-checked, with
+/// the hand-off bill reported, plus the 2-way split-planning cost of
+/// the untileable DeepLabv3@1080p.
+pub fn pipeline_report(profile: BenchProfile) -> Result<BenchReport> {
+    let mut rep = BenchReport::new("pipeline", profile == BenchProfile::Quick);
+    let seconds = profile.pipeline_seconds();
+    let name = "pipeline-giant";
+    // Hub off, like the other fleet families: the gate prices the
+    // pipeline machinery itself, not the observability of it.
+    let base = FleetConfig {
+        seconds,
+        telemetry: TelemetryConfig::off(),
+        ..FleetConfig::new(Scenario::preset(name)?)
+    };
+    let serial_cfg = FleetConfig { threads: 1, ..base.clone() };
+    let auto_cfg = FleetConfig { threads: 0, ..base };
+
+    let (sim, setup_serial_ms) = time_ms(|| FleetSim::new(&serial_cfg));
+    let sim = sim?;
+    let (psim, setup_auto_ms) = time_ms(|| FleetSim::new(&auto_cfg));
+    let psim = psim?;
+
+    let (serial, serial_ms) = time_ms(|| {
+        let mut s = sim;
+        s.run()
+    });
+    let workers = resolve_threads(0);
+    let (parallel, parallel_ms) = time_ms(|| psim.run_parallel(workers));
+
+    // Stage hand-offs must not cost determinism either.
+    if serial.stats_digest() != parallel.stats_digest() {
+        crate::bail!("parallel fleet diverged from serial on scenario {name}");
+    }
+
+    // The giant's hand-off bill, straight off the report.
+    let (handoffs, handoff_bytes) = serial
+        .per_stream
+        .iter()
+        .filter_map(|s| s.pipeline.as_ref())
+        .fold((0u64, 0u64), |(n, b), p| {
+            (n + p.handoffs, b + p.handoffs * p.handoff_bytes_per_frame)
+        });
+
+    let point = format!("scenario={name}/sec={seconds}");
+    let fingerprint = fingerprint_hex([
+        fnv1a(name.bytes().map(u64::from)),
+        seconds.to_bits(),
+        serial.stats_digest(),
+    ]);
+    for (engine, wall_ms, setup_ms, r) in [
+        ("1", serial_ms, setup_serial_ms, &serial),
+        ("auto", parallel_ms, setup_auto_ms, &parallel),
+    ] {
+        let mut metrics = fleet_metrics(r, seconds);
+        metrics.push(Metric {
+            name: "handoffs".into(),
+            value: handoffs as f64,
+            better: Direction::Info,
+        });
+        metrics.push(Metric {
+            name: "handoff_mb".into(),
+            value: handoff_bytes as f64 / 1e6,
+            better: Direction::Info,
+        });
+        if engine == "auto" {
+            metrics.push(Metric {
+                name: "workers".into(),
+                value: workers as f64,
+                better: Direction::Info,
+            });
+        }
+        rep.measurements.push(Measurement {
+            id: format!("pipeline/{point}/threads={engine}"),
+            wall_ms,
+            fingerprint: fingerprint.clone(),
+            metrics,
+        });
+        rep.measurements.push(Measurement {
+            id: format!("pipeline-setup/{point}/threads={engine}"),
+            wall_ms: setup_ms,
+            fingerprint: String::new(),
+            metrics: Vec::new(),
+        });
+    }
+
+    // Split-planning cost: the 2-way cut of the untileable giant, on
+    // the preset's own (datacenter) chip design point.
+    let iters = profile.plan_iters();
+    let chip = Scenario::preset(name)?.reference_chip();
+    let fx = plan_fixtures()
+        .into_iter()
+        .find(|f| f.name == "deeplabv3")
+        .ok_or_else(|| crate::err!("deeplabv3 fixture missing from the zoo"))?;
+    let net = (fx.build)();
+    let hw = (1080, 1920);
+    let cfg = FusionConfig::paper_default();
+    let groups = Planner::OptimalDp.plan(&net, &cfg, &chip, hw).groups;
+    let (split, split_ms) = best_of_ms(iters, || split_pipeline(&net, &groups, hw, &chip, 2));
+    let split = split.ok_or_else(|| crate::err!("deeplabv3@1080p must 2-way split"))?;
+    rep.measurements.push(Measurement {
+        id: "pipeline-split/net=deeplabv3/res=1920x1080/stages=2".into(),
+        wall_ms: split_ms,
+        fingerprint: fingerprint_hex([
+            net.structural_hash(),
+            split.bottleneck_cycles(),
+            split.handoff_bytes,
+        ]),
+        metrics: vec![
+            Metric {
+                name: "bottleneck_mcycles".into(),
+                value: split.bottleneck_cycles() as f64 / 1e6,
+                better: Direction::Lower,
+            },
+            Metric {
+                name: "handoff_mb_frame".into(),
+                value: split.handoff_bytes as f64 / 1e6,
+                better: Direction::Lower,
+            },
+        ],
+    });
     Ok(rep)
 }
 

@@ -22,8 +22,8 @@ pub mod schedule;
 pub use buffer::UnifiedBufferHalf;
 pub use pe::{layer_compute_cycles, layer_sram_bytes, LayerPeStats};
 pub use schedule::{
-    simulate_fused, simulate_layer_by_layer, trace_fused, trace_layer_by_layer, FrameSim,
-    GroupSim, LayerSim,
+    simulate_fused, simulate_layer_by_layer, trace_fused, trace_hybrid, trace_layer_by_layer,
+    FrameSim, GroupSim, LayerSim,
 };
 
 /// DDR3 peak bandwidth the paper assumes available (12.8 GB/s).

@@ -307,6 +307,127 @@ pub fn trace_fused(
     Ok((b.finish(), tilings))
 }
 
+/// Hybrid schedule as a trace: every group that tiles executes fused
+/// exactly as in [`trace_fused`]; a group whose tiling overflows the
+/// unified buffer ([`plan_group`] fails — DeepLabv3's 2048-channel OS16
+/// rows at 1080p) falls back to layer-by-layer streaming for just that
+/// group's layers, so the builder is **infallible**. Fallback steps carry
+/// the group index too, which is what lets [`crate::plan::segment`]
+/// reduce per-group cycle and DRAM costs for pipeline stages over
+/// networks no single chip can serve fused.
+///
+/// Byte accounting: tileable groups use the fused [`TrafficModel`] rows,
+/// fallback groups the layer-by-layer rows (each fallback layer streams
+/// its full input from DRAM, so cross-group skip re-reads into it are
+/// already covered). Weights move once per frame either way.
+pub fn trace_hybrid(
+    net: &Network,
+    groups: &[FusionGroup],
+    hw: (u32, u32),
+    chip: &ChipConfig,
+) -> ExecutionTrace {
+    let shapes = net.shapes(hw);
+    let tm = TrafficModel::new(*chip);
+    let fused_traffic = tm.fused(net, groups, hw);
+    let lbl_traffic = tm.layer_by_layer(net, hw);
+    let mut b = TraceBuilder::new(ScheduleKind::GroupFused, chip.clock_hz, layer_names(net));
+
+    for (gi, g) in groups.iter().enumerate() {
+        let Ok(tiling) = plan_group(net, g, hw, chip) else {
+            // Fallback: the group streams layer by layer, attributed to
+            // the group so per-group reductions still cover it.
+            for i in g.layer_range() {
+                let l = &net.layers[i];
+                let pe = layer_compute_cycles(l, &shapes[i], chip);
+                let sram = layer_sram_bytes(l, &shapes[i], chip);
+                let (r, w, wb) = layer_sram_components(l, &shapes[i], chip);
+                let t = &lbl_traffic.per_layer[i];
+                let sram_cycles = sram_port_cycles(r, chip)
+                    .max(sram_port_cycles(w, chip))
+                    .max(sram_port_cycles(wb, chip));
+                let dma_cycles = dram_cycles(t.total(), chip);
+                let cycles = pe.compute_cycles.max(sram_cycles).max(dma_cycles)
+                    + if l.is_epilogue() { 0 } else { STEP_OVERHEAD_CYCLES };
+                let (step, t0) = b.begin_step(Some(i), Some(gi), cycles);
+                if pe.compute_cycles > 0 || pe.macs > 0 {
+                    b.phase(
+                        PhaseKind::Compute,
+                        step,
+                        i,
+                        Some(gi),
+                        t0,
+                        pe.compute_cycles,
+                        0,
+                        0,
+                        pe.macs,
+                    );
+                }
+                if sram > 0 {
+                    b.phase(PhaseKind::SramStream, step, i, Some(gi), t0, sram_cycles, 0, sram, 0);
+                }
+                b.dma_burst(
+                    step,
+                    Some(gi),
+                    t0,
+                    dma_cycles,
+                    &[
+                        (PhaseKind::WeightDma, i, t.weight_bytes),
+                        (PhaseKind::IfmapLoad, i, t.feat_in_bytes),
+                        (PhaseKind::Writeback, i, t.feat_out_bytes),
+                    ],
+                );
+            }
+            continue;
+        };
+        let tiles = tiling.tiles as u64;
+
+        let w_bytes: u64 = g.weight_bytes(net, chip.precision);
+        let w_cycles = dram_cycles(w_bytes, chip);
+        let (step, t0) = b.begin_step(None, Some(gi), w_cycles);
+        if w_bytes > 0 {
+            b.phase(PhaseKind::WeightDma, step, g.start, Some(gi), t0, w_cycles, w_bytes, 0, 0);
+        }
+
+        for i in g.layer_range() {
+            let l = &net.layers[i];
+            let s = shapes[i];
+            let f_out = (shapes[g.start].h_in.max(1) / s.h_out.max(1)).max(1);
+            let tile_rows_out = (tiling.tile_h.div_ceil(f_out)).min(s.h_out).max(1);
+            let pe_tile = super::pe::tile_compute_cycles(l, tile_rows_out, s.w_out, chip);
+            let sram_full = layer_sram_bytes(l, &s, chip);
+            let (r, w, wb) = layer_sram_components(l, &s, chip);
+            let t = &fused_traffic.per_layer[i];
+            let dram_l = t.feat_in_bytes + t.feat_out_bytes;
+            let compute_all_tiles = pe_tile * tiles;
+            let sram_cycles = sram_port_cycles(r, chip)
+                .max(sram_port_cycles(w, chip))
+                .max(sram_port_cycles(wb, chip));
+            let dma_cycles = dram_cycles(dram_l, chip);
+            let cycles = compute_all_tiles.max(sram_cycles).max(dma_cycles)
+                + if l.is_epilogue() { 0 } else { STEP_OVERHEAD_CYCLES * tiles };
+            let macs = l.macs_per_out_px() * s.out_px();
+            let (step, t0) = b.begin_step(Some(i), Some(gi), cycles);
+            if compute_all_tiles > 0 || macs > 0 {
+                b.phase(PhaseKind::Compute, step, i, Some(gi), t0, compute_all_tiles, 0, 0, macs);
+            }
+            if sram_full > 0 {
+                b.phase(PhaseKind::SramStream, step, i, Some(gi), t0, sram_cycles, 0, sram_full, 0);
+            }
+            b.dma_burst(
+                step,
+                Some(gi),
+                t0,
+                dma_cycles,
+                &[
+                    (PhaseKind::IfmapLoad, i, t.feat_in_bytes),
+                    (PhaseKind::Writeback, i, t.feat_out_bytes),
+                ],
+            );
+        }
+    }
+    b.finish()
+}
+
 /// Group-fused schedule, reduced to per-layer and per-group aggregates.
 pub fn simulate_fused(
     net: &Network,
@@ -477,6 +598,42 @@ mod tests {
         // Group records partition the trace totals.
         assert_eq!(gsims.iter().map(|g| g.cycles).sum::<u64>(), trace.total_cycles());
         assert_eq!(gsims.iter().map(|g| g.dram_bytes).sum::<u64>(), trace.dram_bytes());
+    }
+
+    #[test]
+    fn hybrid_matches_fused_when_every_group_tiles() {
+        let (net, groups) = rc_yolo();
+        let chip = ChipConfig::paper_chip();
+        let (fus, _) = trace_fused(&net, &groups, (720, 1280), &chip).unwrap();
+        let hyb = trace_hybrid(&net, &groups, (720, 1280), &chip);
+        assert_eq!(hyb.steps.len(), fus.steps.len());
+        assert_eq!(hyb.total_cycles(), fus.total_cycles());
+        assert_eq!(hyb.dram_bytes(), fus.dram_bytes());
+        assert_eq!(hyb.sram_bytes(), fus.sram_bytes());
+        assert_eq!(hyb.macs(), fus.macs());
+    }
+
+    #[test]
+    fn hybrid_serves_the_untileable_giant() {
+        // DeepLabv3's 2048-channel OS16 rows overflow the unified-buffer
+        // half at 1080p under any partition (the pinned negative result) —
+        // trace_fused fails, the hybrid builder must not.
+        let net = crate::model::zoo::deeplabv3(21);
+        let chip = ChipConfig::paper_chip();
+        let cfg = FusionConfig::paper_default();
+        let hw = (1080, 1920);
+        let groups = crate::plan::optimal_partition(&net, &cfg, &chip, hw);
+        assert!(trace_fused(&net, &groups, hw, &chip).is_err(), "giant unexpectedly tiles");
+        let hyb = trace_hybrid(&net, &groups, hw, &chip);
+        assert_eq!(hyb.validate(), Vec::<String>::new());
+        assert!(hyb.total_cycles() > 0);
+        assert_eq!(hyb.macs(), net.macs(hw));
+        // Every step is attributed to a group, fallback steps included.
+        assert!(hyb.steps.iter().all(|s| s.group.is_some()));
+        // Fallback traffic sits between pure-fused (impossible here) and
+        // pure layer-by-layer.
+        let lbl = trace_layer_by_layer(&net, hw, &chip);
+        assert!(hyb.dram_bytes() < lbl.dram_bytes());
     }
 
     #[test]

@@ -91,15 +91,25 @@
 //! — byte-identical across engines, rendered by the `obs` subcommand,
 //! catalogued in `docs/OBSERVABILITY.md`.
 //!
+//! Operating points no single chip can serve — DeepLabv3@1080p keeps
+//! feature rows too large for any tile to fit the unified buffer — are
+//! admitted onto an *ordered set* of chips instead
+//! ([`serve::placement`]): [`plan::split_pipeline`] cuts the
+//! fusion-group sequence into contiguous pipeline stages, the feature
+//! hand-off at each cut is priced by
+//! [`traffic::TrafficModel::handoff_bytes`] and billed as shared-bus
+//! DRAM demand, and the report carries per-stream
+//! [`serve::PipelineStats`] (see `docs/PIPELINE.md`).
+//!
 //! ```no_run
-//! use rcnet_dla::serve::{run_fleet, FleetConfig, Scenario};
+//! use rcnet_dla::serve::prelude::*;
 //!
 //! // Bundled presets: steady-hd, rush-hour, mixed-zoo, hetero-pool,
-//! // diurnal-load, flash-crowd, chip-failure.
-//! let cfg = FleetConfig {
-//!     threads: 0,
-//!     ..FleetConfig::new(Scenario::preset("rush-hour").unwrap())
-//! };
+//! // diurnal-load, flash-crowd, chip-failure, pipeline-giant.
+//! let cfg = FleetConfigBuilder::new(Scenario::preset("rush-hour").unwrap())
+//!     .threads(0)
+//!     .build()
+//!     .unwrap();
 //! let report = run_fleet(&cfg).unwrap();
 //! println!("{report}"); // per-stream model, window, p50/p99, miss/shed
 //! ```
@@ -120,7 +130,7 @@
 //! gated performance workloads: `rcnet-dla bench --quick` emits
 //! `BENCH_fleet.json` / `BENCH_planner.json` / `BENCH_trace.json` /
 //! `BENCH_serve_scenario.json` / `BENCH_fault.json` /
-//! `BENCH_telemetry.json`, and `bench --against` exits nonzero
+//! `BENCH_telemetry.json` / `BENCH_pipeline.json`, and `bench --against` exits nonzero
 //! when a gated value regresses past tolerance (the CI perf-smoke job).
 //! See `docs/BENCHMARKS.md`.
 

@@ -1,0 +1,125 @@
+//! The one Chrome trace-event serialization path.
+//!
+//! Two subsystems render Chrome trace documents (`chrome://tracing`,
+//! Perfetto): the single-frame schedule trace
+//! ([`ExecutionTrace::to_chrome_json`](crate::trace::ExecutionTrace::to_chrome_json))
+//! and the fleet telemetry export
+//! ([`TelemetryReport::to_chrome_json`](crate::serve::TelemetryReport::to_chrome_json)).
+//! They used to build the same `"M"`/`"X"`/`"i"`/`"C"` event objects and
+//! the same document envelope independently; this module is the single
+//! construction path both now share, so the event shapes — and the one
+//! string-escaping/serialization path under them
+//! ([`crate::util::json::Json`]) — can never drift apart.
+//!
+//! Byte stability: [`Json`] objects are sorted maps, so an event built
+//! here serializes identically to one built field-by-field at the call
+//! site — the refactor is pinned byte-identical to the pre-unification
+//! writers by the trace and telemetry round-trip tests.
+
+use crate::util::json::Json;
+
+/// An `"M"` thread-name metadata event: names track `tid` (pid is always
+/// 0 — one process, tracks are engines or chips).
+pub fn thread_meta(tid: usize, label: &str) -> Json {
+    let mut args = Json::obj();
+    args.set("name", Json::Str(label.into()));
+    let mut e = Json::obj();
+    e.set("ph", Json::Str("M".into()))
+        .set("pid", Json::Num(0.0))
+        .set("tid", Json::Num(tid as f64))
+        .set("name", Json::Str("thread_name".into()))
+        .set("args", args);
+    e
+}
+
+/// An `"X"` complete event: a span of `dur_us` microseconds starting at
+/// `ts_us` on track `tid`, carrying `args`.
+pub fn span(tid: usize, name: String, ts_us: f64, dur_us: f64, args: Json) -> Json {
+    let mut e = Json::obj();
+    e.set("ph", Json::Str("X".into()))
+        .set("pid", Json::Num(0.0))
+        .set("tid", Json::Num(tid as f64))
+        .set("name", Json::Str(name))
+        .set("ts", Json::Num(ts_us))
+        .set("dur", Json::Num(dur_us))
+        .set("args", args);
+    e
+}
+
+/// An `"i"` instant event (global scope) at `ts_us` on track `tid`.
+pub fn instant(tid: usize, name: &str, ts_us: f64, args: Json) -> Json {
+    let mut e = Json::obj();
+    e.set("ph", Json::Str("i".into()))
+        .set("s", Json::Str("g".into()))
+        .set("pid", Json::Num(0.0))
+        .set("tid", Json::Num(tid as f64))
+        .set("name", Json::Str(name.into()))
+        .set("ts", Json::Num(ts_us))
+        .set("args", args);
+    e
+}
+
+/// A `"C"` counter event at `ts_us` on track `tid`; each key of `args`
+/// renders as one counter series.
+pub fn counter(tid: usize, name: &str, ts_us: f64, args: Json) -> Json {
+    let mut e = Json::obj();
+    e.set("ph", Json::Str("C".into()))
+        .set("pid", Json::Num(0.0))
+        .set("tid", Json::Num(tid as f64))
+        .set("name", Json::Str(name.into()))
+        .set("ts", Json::Num(ts_us))
+        .set("args", args);
+    e
+}
+
+/// The document envelope: `displayTimeUnit: "ms"`, the caller's
+/// `otherData` header and the event list. Callers may `set` further
+/// top-level keys (the telemetry export adds its windowed series,
+/// incidents and metrics) — [`Json`] objects are sorted, so extension
+/// never perturbs the shared keys.
+pub fn document(other_data: Json, events: Vec<Json>) -> Json {
+    let mut doc = Json::obj();
+    doc.set("displayTimeUnit", Json::Str("ms".into()))
+        .set("otherData", other_data)
+        .set("traceEvents", Json::Arr(events));
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The event shapes, pinned byte-for-byte: these strings are exactly
+    /// what the pre-unification writers emitted.
+    #[test]
+    fn event_shapes_are_pinned() {
+        assert_eq!(
+            thread_meta(2, "chip1").to_string(),
+            r#"{"args":{"name":"chip1"},"name":"thread_name","ph":"M","pid":0,"tid":2}"#
+        );
+        let mut args = Json::obj();
+        args.set("seq", Json::Num(4.0));
+        assert_eq!(
+            span(1, "s0#4".into(), 100.0, 50.0, args).to_string(),
+            r#"{"args":{"seq":4},"dur":50,"name":"s0#4","ph":"X","pid":0,"tid":1,"ts":100}"#
+        );
+        assert_eq!(
+            instant(0, "arrival", 7.0, Json::obj()).to_string(),
+            r#"{"args":{},"name":"arrival","ph":"i","pid":0,"s":"g","tid":0,"ts":7}"#
+        );
+        assert_eq!(
+            counter(0, "bus_bytes", 0.0, Json::obj()).to_string(),
+            r#"{"args":{},"name":"bus_bytes","ph":"C","pid":0,"tid":0,"ts":0}"#
+        );
+    }
+
+    #[test]
+    fn document_envelope_is_extensible() {
+        let mut doc = document(Json::obj(), vec![thread_meta(0, "bus")]);
+        doc.set("series", Json::Arr(Vec::new()));
+        let s = doc.to_string();
+        assert!(s.starts_with(r#"{"displayTimeUnit":"ms","#), "got {s}");
+        assert!(s.contains(r#""series":[]"#));
+        assert!(s.contains(r#""traceEvents":["#));
+    }
+}

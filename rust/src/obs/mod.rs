@@ -14,6 +14,12 @@
 //! The bucket layout is fixed at compile time ([`HIST_BUCKETS`] edges at
 //! `0, 1, 2, 4, 8, ...`): histograms from different runs are always
 //! bucket-compatible, which is what lets CI diff and gate them.
+//!
+//! The [`chrome`] submodule is the companion export layer: the single
+//! construction path for Chrome trace-event JSON shared by the schedule
+//! trace and the fleet telemetry exporters.
+
+pub mod chrome;
 
 use std::collections::BTreeMap;
 

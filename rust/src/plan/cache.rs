@@ -32,6 +32,7 @@ use crate::model::Network;
 use crate::trace::FrameCost;
 use crate::util::fnv1a;
 
+use super::segment::{split_pipeline, PipelinePlan};
 use super::{Plan, Planner};
 
 /// Number of lock shards. Small power of two: the working set is a
@@ -98,6 +99,10 @@ pub struct PlanCache {
     /// the plan's execution trace), cached alongside the plans under the
     /// same keys and locking discipline.
     costs: [RwLock<HashMap<PlanKey, FrameCost>>; SHARDS],
+    /// Pipeline splits ([`split_pipeline`]) keyed by (plan key, stage
+    /// count). `None` records that the point does not split (fewer
+    /// groups than stages), so the negative answer is memoized too.
+    pipelines: [RwLock<HashMap<(PlanKey, usize), Option<Arc<PipelinePlan>>>>; SHARDS],
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -107,6 +112,7 @@ impl Default for PlanCache {
         PlanCache {
             shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
             costs: std::array::from_fn(|_| RwLock::new(HashMap::new())),
+            pipelines: std::array::from_fn(|_| RwLock::new(HashMap::new())),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
@@ -163,6 +169,33 @@ impl PlanCache {
             .expect("plan cost shard poisoned")
             .entry(key)
             .or_insert(cost)
+    }
+
+    /// The pipeline split of (`net`, `cfg`, `chip`, `hw`, `planner`) into
+    /// `stages` stages, planned through [`Self::plan`] and memoized under
+    /// the same key plus the stage count. Returns `None` when the point
+    /// does not admit the split (memoized as well); racing splitters of
+    /// one key deduplicate first-writer-wins like plans do.
+    pub fn pipeline(
+        &self,
+        net: &Network,
+        cfg: &FusionConfig,
+        chip: &ChipConfig,
+        hw: (u32, u32),
+        planner: Planner,
+        stages: usize,
+    ) -> Option<Arc<PipelinePlan>> {
+        let key = PlanKey::new(net, cfg, chip, hw, planner);
+        let shard = &self.pipelines[key.shard()];
+        if let Some(p) = shard.read().expect("pipeline cache shard poisoned").get(&(key, stages)) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return p.clone();
+        }
+        let plan = self.plan(net, cfg, chip, hw, planner);
+        let fresh = split_pipeline(net, &plan.groups, hw, chip, stages).map(Arc::new);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = shard.write().expect("pipeline cache shard poisoned");
+        map.entry((key, stages)).or_insert(fresh).clone()
     }
 
     /// Number of distinct plans held.
@@ -248,6 +281,23 @@ mod tests {
         let b = cache.insert_frame_cost(key, FrameCost::flat(99, 99));
         assert_eq!(a, b);
         assert_eq!(cache.frame_cost(&key), Some(FrameCost::flat(10, 20)));
+    }
+
+    #[test]
+    fn pipeline_splits_memoize_by_stage_count() {
+        let net = yolov2_converted(3, 5);
+        let cfg = FusionConfig::paper_default();
+        let chip = ChipConfig::paper_chip();
+        let cache = PlanCache::new();
+        let a = cache.pipeline(&net, &cfg, &chip, (720, 1280), Planner::OptimalDp, 2);
+        let b = cache.pipeline(&net, &cfg, &chip, (720, 1280), Planner::OptimalDp, 2);
+        let a = a.expect("yolo splits 2-way");
+        assert_eq!(*a, *b.expect("memoized"));
+        assert_eq!(a.stages.len(), 2);
+        // A stage count the plan cannot satisfy memoizes the negative.
+        let groups = a.stages.last().expect("stages").group_end + 1;
+        let over = cache.pipeline(&net, &cfg, &chip, (720, 1280), Planner::OptimalDp, groups + 1);
+        assert!(over.is_none());
     }
 
     #[test]

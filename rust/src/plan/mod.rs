@@ -20,6 +20,13 @@
 //!   resolution, chip + fusion config, planner), so the fleet simulator
 //!   prices each stream's admission and per-frame cost from the optimal
 //!   plan for *its* resolution without replanning per stream.
+//! * [`segment`] — pipeline segmentation: [`split_pipeline`] carves a
+//!   plan's group sequence into contiguous per-chip stages (priced from
+//!   the hybrid trace, hand-off bytes pinned to the
+//!   [`TrafficModel`](crate::traffic::TrafficModel)), which is how
+//!   networks no single chip can serve fused — DeepLabv3 at 1080p — are
+//!   placed onto a chip *set* by [`crate::serve`]. Splits memoize in the
+//!   [`PlanCache`] alongside single-chip plans.
 //!
 //! ```
 //! use rcnet_dla::config::ChipConfig;
@@ -37,9 +44,11 @@
 
 mod cache;
 mod dp;
+pub mod segment;
 
 pub use cache::{PlanCache, PlanKey};
 pub use dp::{optimal_partition, partition_feat_bytes};
+pub use segment::{split_pipeline, PipelinePlan, PipelineStage};
 
 use crate::config::ChipConfig;
 use crate::fusion::{partition, FusionConfig, FusionGroup};

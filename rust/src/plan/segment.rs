@@ -1,0 +1,325 @@
+//! Pipeline segmentation: split one network's fusion-group sequence into
+//! contiguous per-chip stages.
+//!
+//! Some networks cannot execute fused on any single chip — DeepLabv3's
+//! 2048-channel OS16 rows overflow the unified-buffer half at 1080p under
+//! *every* partition, the negative result the tile planner has pinned
+//! since the fused schedule landed. Pipelining is the standard way out
+//! (Suleiman/Sze's 1080p DPM detector spreads scales across parallel
+//! engines; GnetDet scales by replicating accelerator chips): run groups
+//! `0..c` on one chip and `c..` on the next, handing the boundary feature
+//! map off through DRAM.
+//!
+//! [`split_pipeline`] prices that split from the hybrid execution trace
+//! ([`crate::dla::trace_hybrid`] — fused where a group tiles,
+//! layer-streamed where it cannot), choosing the cut set that minimizes
+//! the maximum per-stage cycle cost (the pipeline's throughput bound) and
+//! breaks ties toward the smallest total inter-chip hand-off traffic.
+//! Hand-off bytes are priced by [`TrafficModel::handoff_bytes`] — the
+//! same accounting the fused schedule already charges for cross-boundary
+//! reads — so the pipeline's bus demand is an attribution of bytes the
+//! stages' [`FrameCost`]s already contain, never new traffic.
+
+use crate::config::ChipConfig;
+use crate::dla::trace_hybrid;
+use crate::fusion::FusionGroup;
+use crate::model::Network;
+use crate::trace::{BurstProfile, ExecutionTrace, FrameCost, BURST_BUCKETS};
+use crate::traffic::TrafficModel;
+
+/// One contiguous run of fusion groups executing on one pipeline stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PipelineStage {
+    /// First fusion-group index of the stage (inclusive).
+    pub group_start: usize,
+    /// Last fusion-group index of the stage (inclusive).
+    pub group_end: usize,
+    /// The stage's per-frame execution cost: its groups' cycles, DRAM
+    /// bytes and burst shape, carved from the hybrid trace.
+    pub cost: FrameCost,
+    /// DRAM bytes this stage reads from its predecessor's boundary map
+    /// (0 for stage 0). An *attribution* of reads already counted in
+    /// `cost.dram_bytes`, pinned to [`TrafficModel::handoff_bytes`].
+    pub handoff_in_bytes: u64,
+}
+
+/// A network split into two or more contiguous pipeline stages at one
+/// (resolution, chip) operating point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelinePlan {
+    /// Input resolution (height, width) the split was priced for.
+    pub hw: (u32, u32),
+    /// The stages, in execution order; group ranges tile the group list.
+    pub stages: Vec<PipelineStage>,
+    /// Total inter-chip hand-off bytes per frame, summed over the
+    /// interior cuts.
+    pub handoff_bytes: u64,
+}
+
+impl PipelinePlan {
+    /// The interior cut points: for each stage after the first, the group
+    /// index it starts at.
+    pub fn cuts(&self) -> Vec<usize> {
+        self.stages.iter().skip(1).map(|s| s.group_start).collect()
+    }
+
+    /// Sum of per-stage frame cycles (the frame's end-to-end compute
+    /// latency, excluding hand-off queueing).
+    pub fn total_cycles(&self) -> u64 {
+        self.stages.iter().map(|s| s.cost.compute_cycles).sum()
+    }
+
+    /// Sum of per-stage DRAM bytes (hand-off reads included — they are
+    /// part of the downstream stages' own traffic).
+    pub fn total_dram_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.cost.dram_bytes).sum()
+    }
+
+    /// The throughput bound: the slowest stage's cycle cost.
+    pub fn bottleneck_cycles(&self) -> u64 {
+        self.stages.iter().map(|s| s.cost.compute_cycles).max().unwrap_or(0)
+    }
+}
+
+/// Bucket one stage's DRAM phases over its own cycle window, mirroring
+/// [`ExecutionTrace::dram_histogram`]'s exact cumulative split so the
+/// histogram sums to the stage's bytes byte-for-byte.
+fn stage_histogram(
+    trace: &ExecutionTrace,
+    lo: usize,
+    hi: usize,
+    w0: u64,
+    w1: u64,
+) -> [u64; BURST_BUCKETS] {
+    let mut out = [0u64; BURST_BUCKETS];
+    let total = (w1 - w0) as u128;
+    if total == 0 {
+        return out;
+    }
+    let n = BURST_BUCKETS as u128;
+    for p in &trace.phases {
+        if p.dram_bytes == 0 || !p.group.is_some_and(|g| g >= lo && g <= hi) {
+            continue;
+        }
+        let (s, e) = ((p.start_cycle - w0) as u128, (p.end_cycle - w0) as u128);
+        let bytes = p.dram_bytes as u128;
+        if e <= s {
+            let b = (s * n / total).min(n - 1) as usize;
+            out[b] += p.dram_bytes;
+            continue;
+        }
+        let alloc = |c: u128| bytes * (c - s) / (e - s);
+        let first = (s * n / total) as usize;
+        let last = ((e - 1) * n / total).min(n - 1) as usize;
+        for (b, slot) in out.iter_mut().enumerate().take(last + 1).skip(first) {
+            let lo_c = (total * b as u128).div_ceil(n).max(s);
+            let hi_c = (total * (b as u128 + 1)).div_ceil(n).min(e);
+            if hi_c > lo_c {
+                *slot += (alloc(hi_c) - alloc(lo_c)) as u64;
+            }
+        }
+    }
+    out
+}
+
+/// Split `groups` into exactly `stages` contiguous pipeline stages at
+/// resolution `hw` on `chip`, minimizing the maximum per-stage cycle cost
+/// and breaking ties toward minimal total hand-off bytes (then the
+/// earliest cut set, so the result is deterministic).
+///
+/// Costs come from the hybrid trace, so the split is defined even for
+/// networks no single chip can serve fused. Returns `None` when the
+/// split is impossible: fewer groups than stages, or `stages < 2`.
+pub fn split_pipeline(
+    net: &Network,
+    groups: &[FusionGroup],
+    hw: (u32, u32),
+    chip: &ChipConfig,
+    stages: usize,
+) -> Option<PipelinePlan> {
+    let n = groups.len();
+    if stages < 2 || stages > n {
+        return None;
+    }
+    let trace = trace_hybrid(net, groups, hw, chip);
+
+    // Per-group cycle costs and their prefix sums: hybrid steps carry a
+    // group index and are laid in group order, so group `g` occupies the
+    // contiguous cycle window [prefix[g], prefix[g + 1]).
+    let mut group_cycles = vec![0u64; n];
+    for s in &trace.steps {
+        if let Some(g) = s.group {
+            group_cycles[g] += s.cycles();
+        }
+    }
+    let mut prefix = vec![0u64; n + 1];
+    for (g, &c) in group_cycles.iter().enumerate() {
+        prefix[g + 1] = prefix[g] + c;
+    }
+
+    let tm = TrafficModel::new(*chip);
+    let mut handoff = vec![0u64; n];
+    for (c, h) in handoff.iter_mut().enumerate().skip(1) {
+        *h = tm.handoff_bytes(net, groups, c, hw);
+    }
+
+    // DP over (stage count, groups consumed): cost = (max stage cycles,
+    // total hand-off bytes), compared lexicographically. Iterating cut
+    // candidates in ascending order with a strict improvement test keeps
+    // the earliest minimizing cut set.
+    const INF: (u64, u64) = (u64::MAX, u64::MAX);
+    let mut best = vec![vec![INF; n + 1]; stages + 1];
+    let mut parent = vec![vec![0usize; n + 1]; stages + 1];
+    best[0][0] = (0, 0);
+    for s in 1..=stages {
+        for j in s..=n {
+            for i in (s - 1)..j {
+                let prev = best[s - 1][i];
+                if prev == INF {
+                    continue;
+                }
+                let seg = prefix[j] - prefix[i];
+                let hand = if i == 0 { 0 } else { handoff[i] };
+                let cand = (prev.0.max(seg), prev.1 + hand);
+                if cand < best[s][j] {
+                    best[s][j] = cand;
+                    parent[s][j] = i;
+                }
+            }
+        }
+    }
+    if best[stages][n] == INF {
+        return None;
+    }
+
+    // Reconstruct stage bounds, then carve each stage's FrameCost out of
+    // the trace: cycles from the prefix sums, bytes and burst shape from
+    // a windowed histogram over the stage's own cycle span.
+    let mut bounds = Vec::with_capacity(stages);
+    let mut j = n;
+    for s in (1..=stages).rev() {
+        let i = parent[s][j];
+        bounds.push((i, j));
+        j = i;
+    }
+    bounds.reverse();
+
+    let mut total_handoff = 0u64;
+    let built: Vec<PipelineStage> = bounds
+        .into_iter()
+        .map(|(i, j)| {
+            let hist = stage_histogram(&trace, i, j - 1, prefix[i], prefix[j]);
+            let dram: u64 = hist.iter().sum();
+            let handoff_in = if i == 0 { 0 } else { handoff[i] };
+            total_handoff += handoff_in;
+            PipelineStage {
+                group_start: i,
+                group_end: j - 1,
+                cost: FrameCost {
+                    compute_cycles: prefix[j] - prefix[i],
+                    dram_bytes: dram,
+                    profile: BurstProfile::from_histogram(&hist),
+                },
+                handoff_in_bytes: handoff_in,
+            }
+        })
+        .collect();
+
+    Some(PipelinePlan { hw, stages: built, handoff_bytes: total_handoff })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::FusionConfig;
+    use crate::model::zoo::{deeplabv3, yolov2_converted};
+    use crate::plan::optimal_partition;
+
+    fn yolo_point() -> (Network, Vec<FusionGroup>, ChipConfig) {
+        let net = yolov2_converted(3, 5);
+        let chip = ChipConfig::paper_chip();
+        let groups = optimal_partition(&net, &FusionConfig::paper_default(), &chip, (720, 1280));
+        (net, groups, chip)
+    }
+
+    #[test]
+    fn two_way_split_partitions_the_trace() {
+        let (net, groups, chip) = yolo_point();
+        let hw = (720, 1280);
+        let plan = split_pipeline(&net, &groups, hw, &chip, 2).expect("splittable");
+        assert_eq!(plan.stages.len(), 2);
+        assert_eq!(plan.stages[0].group_start, 0);
+        assert_eq!(plan.stages[1].group_end, groups.len() - 1);
+        assert_eq!(plan.stages[0].group_end + 1, plan.stages[1].group_start);
+        let trace = trace_hybrid(&net, &groups, hw, &chip);
+        assert_eq!(plan.total_cycles(), trace.total_cycles());
+        assert_eq!(plan.total_dram_bytes(), trace.dram_bytes());
+    }
+
+    #[test]
+    fn cut_minimizes_the_bottleneck_stage() {
+        let (net, groups, chip) = yolo_point();
+        let hw = (720, 1280);
+        let plan = split_pipeline(&net, &groups, hw, &chip, 2).expect("splittable");
+        let trace = trace_hybrid(&net, &groups, hw, &chip);
+        let mut per_group = vec![0u64; groups.len()];
+        for s in &trace.steps {
+            per_group[s.group.expect("hybrid steps carry groups")] += s.cycles();
+        }
+        // Brute force every 2-way cut: none may beat the DP's bottleneck.
+        for cut in 1..groups.len() {
+            let head: u64 = per_group[..cut].iter().sum();
+            let tail: u64 = per_group[cut..].iter().sum();
+            assert!(
+                plan.bottleneck_cycles() <= head.max(tail),
+                "cut {cut} beats the planner: {} < {}",
+                head.max(tail),
+                plan.bottleneck_cycles()
+            );
+        }
+    }
+
+    #[test]
+    fn handoff_is_pinned_to_the_traffic_model() {
+        let (net, groups, chip) = yolo_point();
+        let hw = (720, 1280);
+        let tm = TrafficModel::new(chip);
+        for k in 2..=3.min(groups.len()) {
+            let plan = split_pipeline(&net, &groups, hw, &chip, k).expect("splittable");
+            let mut total = 0;
+            assert_eq!(plan.stages[0].handoff_in_bytes, 0);
+            for stage in &plan.stages[1..] {
+                let pinned = tm.handoff_bytes(&net, &groups, stage.group_start, hw);
+                assert_eq!(stage.handoff_in_bytes, pinned);
+                total += pinned;
+            }
+            assert_eq!(plan.handoff_bytes, total);
+            assert_eq!(plan.cuts().len(), k - 1);
+        }
+    }
+
+    #[test]
+    fn splits_the_untileable_giant() {
+        let net = deeplabv3(21);
+        let chip = ChipConfig::paper_chip();
+        let hw = (1080, 1920);
+        let groups = optimal_partition(&net, &FusionConfig::paper_default(), &chip, hw);
+        assert!(crate::tile::plan_network(&net, &groups, hw, &chip).iter().any(|t| t.is_err()));
+        let plan = split_pipeline(&net, &groups, hw, &chip, 2).expect("giant must split");
+        assert!(plan.bottleneck_cycles() > 0);
+        assert!(plan.handoff_bytes > 0);
+        // The bottleneck stage is at most the whole frame, at least half.
+        assert!(plan.bottleneck_cycles() < plan.total_cycles());
+        assert!(plan.bottleneck_cycles() * 2 >= plan.total_cycles());
+    }
+
+    #[test]
+    fn degenerate_stage_counts_are_rejected() {
+        let (net, groups, chip) = yolo_point();
+        assert!(split_pipeline(&net, &groups, (720, 1280), &chip, 1).is_none());
+        assert!(split_pipeline(&net, &groups, (720, 1280), &chip, groups.len() + 1).is_none());
+        // A stage per group is the finest legal split.
+        let fine = split_pipeline(&net, &groups, (720, 1280), &chip, groups.len());
+        assert_eq!(fine.expect("one group per stage").stages.len(), groups.len());
+    }
+}

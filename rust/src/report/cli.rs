@@ -23,8 +23,8 @@
 //! * `bench`      — standardized performance workloads
 //!   ([`crate::bench`]): emits `BENCH_fleet.json` / `BENCH_planner.json`
 //!   / `BENCH_trace.json` / `BENCH_serve_scenario.json` /
-//!   `BENCH_fault.json` / `BENCH_telemetry.json` and optionally gates
-//!   against a baseline
+//!   `BENCH_fault.json` / `BENCH_telemetry.json` /
+//!   `BENCH_pipeline.json` and optionally gates against a baseline
 //!   (nonzero exit on regression)
 //! * `serve`      — run the detection pipeline on synthetic frames
 //!   (requires `make artifacts` and the `pjrt` feature)
@@ -36,7 +36,7 @@ use crate::config::ChipConfig;
 use crate::dla::{simulate_fused, simulate_layer_by_layer, trace_fused, trace_layer_by_layer};
 use crate::energy::dram_energy_mj;
 use crate::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
-use crate::serve::{run_fleet, AdmissionPolicy, FleetConfig, Scenario, TelemetryConfig};
+use crate::serve::{run_fleet, AdmissionPolicy, FleetConfigBuilder, Scenario, TelemetryConfig};
 use crate::traffic::TrafficModel;
 use crate::util::json::Json;
 use crate::Result;
@@ -84,14 +84,14 @@ USAGE:
   rcnet-dla trace     [--res 416|hd|fullhd|ivs] [--spec PATH]
                       [--schedule fused|layer-by-layer] [--out PATH]
   rcnet-dla fleet     [--scenario steady-hd|rush-hour|mixed-zoo|hetero-pool|
-                       diurnal-load|flash-crowd|chip-failure]
+                       diurnal-load|flash-crowd|chip-failure|pipeline-giant]
                       [--streams N] [--chips N] [--bus-mbps MB] [--seconds S]
                       [--seed K] [--oversub F | --admit-all]
                       [--planner greedy|optimal-dp] [--threads N]
                       [--json] [--out PATH]
                       [--telemetry PATH | --no-telemetry] [--window-ms W]
   rcnet-dla obs       [--scenario steady-hd|rush-hour|mixed-zoo|hetero-pool|
-                       diurnal-load|flash-crowd|chip-failure]
+                       diurnal-load|flash-crowd|chip-failure|pipeline-giant]
                       [--seconds S] [--seed K] [--threads N] [--window-ms W]
                       [--csv] [--out PATH]
   rcnet-dla bench     [--quick] [--out-dir DIR] [--against PATH]
@@ -416,36 +416,38 @@ fn fleet(flags: &HashMap<String, String>) -> Result<()> {
             Scenario::sampled(streams, chips, seed)
         }
     };
-    let mut cfg = FleetConfig::new(scenario);
-    cfg.seed = seed;
+    let mut b = FleetConfigBuilder::new(scenario).seed(seed);
     if let Some(v) = flags.get("bus-mbps").and_then(|s| s.parse().ok()) {
-        cfg.bus_mbps = v;
+        b = b.bus_mbps(v);
     }
     if let Some(v) = flags.get("seconds").and_then(|s| s.parse().ok()) {
-        cfg.seconds = v;
+        b = b.seconds(v);
     }
     if let Some(v) = flags.get("threads").and_then(|s| s.parse().ok()) {
-        cfg.threads = v;
+        b = b.threads(v);
     }
     if flags.contains_key("admit-all") {
-        cfg.admission = AdmissionPolicy::AdmitAll;
+        b = b.admission(AdmissionPolicy::AdmitAll);
     } else if let Some(oversub) = flags.get("oversub").and_then(|s| s.parse().ok()) {
-        cfg.admission = AdmissionPolicy::DemandLimit { oversub };
+        b = b.admission(AdmissionPolicy::DemandLimit { oversub });
     }
     if let Some(s) = flags.get("planner") {
-        cfg.planner = crate::plan::Planner::parse(s)
+        let planner = crate::plan::Planner::parse(s)
             .ok_or_else(|| crate::err!("unknown --planner {s} (greedy|optimal-dp)"))?;
+        b = b.planner(planner);
     }
     let trace_out = flags.get("telemetry").cloned();
+    let mut tel = TelemetryConfig::default();
     if flags.contains_key("no-telemetry") {
         if trace_out.is_some() {
             crate::bail!("--telemetry conflicts with --no-telemetry");
         }
-        cfg.telemetry = TelemetryConfig::off();
+        tel = TelemetryConfig::off();
     }
     if let Some(v) = flags.get("window-ms").and_then(|s| s.parse().ok()) {
-        cfg.telemetry.window_ms = v;
+        tel.window_ms = v;
     }
+    let cfg = b.telemetry(tel).build()?;
     let report = run_fleet(&cfg)?;
     if let Some(path) = trace_out {
         let tel = report
@@ -498,19 +500,20 @@ fn fleet(flags: &HashMap<String, String>) -> Result<()> {
 /// Chrome document, as an aligned table (default) or CSV (`--csv`).
 fn obs(flags: &HashMap<String, String>) -> Result<()> {
     let name = flags.get("scenario").map(String::as_str).unwrap_or("steady-hd");
-    let mut cfg = FleetConfig::new(Scenario::preset(name)?);
+    let mut b = FleetConfigBuilder::new(Scenario::preset(name)?);
     if let Some(v) = flags.get("seed").and_then(|s| s.parse().ok()) {
-        cfg.seed = v;
+        b = b.seed(v);
     }
     if let Some(v) = flags.get("seconds").and_then(|s| s.parse().ok()) {
-        cfg.seconds = v;
+        b = b.seconds(v);
     }
     if let Some(v) = flags.get("threads").and_then(|s| s.parse().ok()) {
-        cfg.threads = v;
+        b = b.threads(v);
     }
     if let Some(v) = flags.get("window-ms").and_then(|s| s.parse().ok()) {
-        cfg.telemetry.window_ms = v;
+        b = b.telemetry(TelemetryConfig { window_ms: v, ..TelemetryConfig::default() });
     }
+    let cfg = b.build()?;
     let report = run_fleet(&cfg)?;
     let tel = report
         .telemetry
@@ -555,8 +558,8 @@ fn load_baseline(against: &str, kind: &str) -> Result<Option<crate::bench::Bench
 
 fn bench(flags: &HashMap<String, String>) -> Result<()> {
     use crate::bench::{
-        compare_reports, fault_report, fleet_report, planner_report, scenario_report,
-        telemetry_report, trace_report, BenchProfile,
+        compare_reports, fault_report, fleet_report, pipeline_report, planner_report,
+        scenario_report, telemetry_report, trace_report, BenchProfile,
     };
 
     let profile =
@@ -577,13 +580,15 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     let fault = fault_report(profile)?;
     eprintln!("bench: running the {} telemetry workloads...", profile.name());
     let telemetry = telemetry_report(profile)?;
+    eprintln!("bench: running the {} pipeline workloads...", profile.name());
+    let pipeline = pipeline_report(profile)?;
 
     let mut t = crate::report::tables::TableBuilder::new(&format!(
         "bench ({} profile) — wall times; deterministic metrics in the JSON",
         profile.name()
     ))
     .header(&["workload", "wall (ms)"]);
-    for rep in [&fleet, &planner, &trace, &scenario, &fault, &telemetry] {
+    for rep in [&fleet, &planner, &trace, &scenario, &fault, &telemetry, &pipeline] {
         for m in &rep.measurements {
             t.row(vec![m.id.clone(), format!("{:.3}", m.wall_ms)]);
         }
@@ -598,7 +603,7 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     let mut broken_baselines = Vec::new();
     let mut matched_baselines = 0usize;
     if let Some(against) = flags.get("against") {
-        for rep in [&fleet, &planner, &trace, &scenario, &fault, &telemetry] {
+        for rep in [&fleet, &planner, &trace, &scenario, &fault, &telemetry, &pipeline] {
             match load_baseline(against, &rep.kind) {
                 Ok(Some(base)) => {
                     matched_baselines += 1;
@@ -626,14 +631,16 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     scenario.write(&out_dir.join("BENCH_serve_scenario.json"))?;
     fault.write(&out_dir.join("BENCH_fault.json"))?;
     telemetry.write(&out_dir.join("BENCH_telemetry.json"))?;
+    pipeline.write(&out_dir.join("BENCH_pipeline.json"))?;
     eprintln!(
-        "bench: wrote {}, {}, {}, {}, {} and {}",
+        "bench: wrote {}, {}, {}, {}, {}, {} and {}",
         out_dir.join("BENCH_fleet.json").display(),
         out_dir.join("BENCH_planner.json").display(),
         out_dir.join("BENCH_trace.json").display(),
         out_dir.join("BENCH_serve_scenario.json").display(),
         out_dir.join("BENCH_fault.json").display(),
-        out_dir.join("BENCH_telemetry.json").display()
+        out_dir.join("BENCH_telemetry.json").display(),
+        out_dir.join("BENCH_pipeline.json").display()
     );
 
     if !broken_baselines.is_empty() {

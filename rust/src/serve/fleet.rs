@@ -356,6 +356,7 @@ mod tests {
             pixels: 1280 * 720,
             cost: FrameCost::flat(600_000, 4000),
             qos: QosClass::Silver,
+            stage: 0,
         }
     }
 

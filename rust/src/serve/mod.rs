@@ -22,7 +22,14 @@
 //!   ([`FaultEvent`]: outages, DRAM-link throttles, thermal derates)
 //!   over the pool plus a standby chip set, and the bundled presets
 //!   (`steady-hd`, `rush-hour`, `mixed-zoo`, `hetero-pool`,
-//!   `diurnal-load`, `flash-crowd`, `chip-failure`).
+//!   `diurnal-load`, `flash-crowd`, `chip-failure`, `pipeline-giant`).
+//! * [`placement`] — where a stream runs: a [`Placement`] is one chip
+//!   ([`Placement::Single`] — every stream that fits, priced and
+//!   dispatched exactly as before) or an ordered [`ChipSet`] of pipeline
+//!   stages for the untileable giants, split by
+//!   [`crate::plan::split_pipeline`] with inter-stage feature hand-off
+//!   priced as DRAM bus traffic
+//!   ([`crate::traffic::TrafficModel::handoff_bytes`]).
 //! * [`qos`] — the load-adaptive policy layer: a windowed
 //!   integer-hysteresis pressure controller that downshifts non-gold
 //!   streams along pre-priced ladders of cheaper operating points
@@ -71,14 +78,14 @@
 //!   `--no-telemetry` ([`TelemetryConfig::off`]) skips it all.
 //!
 //! ```no_run
-//! use rcnet_dla::serve::{run_fleet, FleetConfig, Scenario};
+//! use rcnet_dla::serve::{run_fleet, FleetConfigBuilder, Scenario};
 //!
 //! // A bundled preset; threads: 0 = one worker per core. The report is
 //! // byte-identical to the serial (threads: 1) engine either way.
-//! let cfg = FleetConfig {
-//!     threads: 0,
-//!     ..FleetConfig::new(Scenario::preset("mixed-zoo").unwrap())
-//! };
+//! let cfg = FleetConfigBuilder::new(Scenario::preset("mixed-zoo").unwrap())
+//!     .threads(0)
+//!     .build()
+//!     .unwrap();
 //! let report = run_fleet(&cfg).unwrap();
 //! println!("{report}");
 //! ```
@@ -86,6 +93,7 @@
 pub mod arbiter;
 pub mod fleet;
 pub mod parallel;
+pub mod placement;
 pub mod qos;
 pub mod scenario;
 pub mod scheduler;
@@ -96,13 +104,43 @@ pub mod telemetry;
 pub use arbiter::BusArbiter;
 pub use fleet::{ChipDirective, ChipWorker, Fleet, InFlight};
 pub use parallel::resolve_threads;
+pub use placement::{ChipSet, Placement};
 pub use qos::{QosController, QosVerdict};
 pub use scenario::{ChipSpec, FaultEvent, FaultKind, ModelId, Scenario, StreamScript, PRESET_NAMES};
-pub use scheduler::{run_fleet, run_fleet_with, AdmissionPolicy, FleetConfig, FleetSim};
-pub use stats::{CostProvenance, FleetReport, StreamStats};
+pub use scheduler::{
+    run_fleet, run_fleet_with, AdmissionPolicy, FleetConfig, FleetConfigBuilder, FleetSim,
+};
+pub use stats::{CostProvenance, FleetReport, PipelineStats, StreamStats};
 pub use stream::{FrameCost, FrameTask, QosClass, Stream, StreamSpec};
 pub use telemetry::{
     detect_incidents, ChipWindow, Incident, IncidentKind, ShedCause, StreamWindow,
     TelemetryConfig, TelemetryEvent, TelemetryEventKind, TelemetryReport, WindowSample,
     SAT_MIN_WINDOWS, STARVE_WINDOWS, WARMUP_WINDOWS,
 };
+
+/// The serving API in one import: scenarios and presets, the typed
+/// config builder, placements, the engines and the report types.
+///
+/// Everything here is also re-exported flat under [`crate::serve`]; the
+/// prelude is the *curated* subset — what a caller building and running
+/// fleet scenarios actually touches, nothing else.
+///
+/// ```
+/// use rcnet_dla::serve::prelude::*;
+///
+/// let cfg = FleetConfigBuilder::new(Scenario::preset("pipeline-giant").unwrap())
+///     .threads(2)
+///     .build()
+///     .unwrap();
+/// assert_eq!(cfg.threads, 2);
+/// ```
+pub mod prelude {
+    pub use super::placement::{ChipSet, Placement};
+    pub use super::scenario::{ChipSpec, ModelId, Scenario, StreamScript, PRESET_NAMES};
+    pub use super::scheduler::{
+        run_fleet, run_fleet_with, AdmissionPolicy, FleetConfig, FleetConfigBuilder, FleetSim,
+    };
+    pub use super::stats::{CostProvenance, FleetReport, PipelineStats, StreamStats};
+    pub use super::stream::{FrameCost, QosClass, StreamSpec};
+    pub use super::telemetry::{TelemetryConfig, TelemetryReport};
+}

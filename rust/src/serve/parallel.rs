@@ -47,6 +47,13 @@
 //!   choice runs against an occupancy mirror that replays the serial
 //!   `pick_worker` scan exactly — including each chip's capability
 //!   bound, so a 1080p frame skips capped edge chips in both engines.
+//! * **Pipeline placements** — a pipeline-placed stream's frames are
+//!   *pinned*: stage `s` dispatches only to its route's stage-`s` chip
+//!   ([`super::Placement`]), in both engines, so chip choice needs no
+//!   coordination at all. A finished non-final stage hands off inside
+//!   the completion merge — which already runs in global chip order — so
+//!   successor-stage tasks enter the central heap in exactly the order
+//!   the serial engine pushes them into its ready list.
 //! * **Bus** — per-chip demands (each already capped by its chip's own
 //!   link rate) are concatenated in global chip order and water-filled
 //!   by the unchanged [`super::BusArbiter`] on the main thread: same
@@ -290,6 +297,9 @@ impl FleetSim {
         // observes the same values, in the same order, as the serial
         // engine's — which is what keeps the telemetry byte-identical.
         let mut telemetry = self.telemetry;
+        // Pipeline routes are read-only dispatch state (placement + per-
+        // stage costs), owned by the main thread like the stats.
+        let routes = self.routes;
 
         // Contiguous shards: worker order == global stream/chip order.
         let chip_chunk = chips.div_ceil(shard_count).max(1);
@@ -449,6 +459,36 @@ impl FleetSim {
                 let mut dispatches: Vec<Vec<(usize, FrameTask)>> = vec![Vec::new(); shard_count];
                 while let Some(front) = heap.peek() {
                     let pixels = front.0.pixels;
+                    if let Some(route) = &routes[front.0.stream] {
+                        // Pipeline frames are pinned to their route's
+                        // stage chip: shed if the placement is missing
+                        // or the pinned chip is down/incapable, hold the
+                        // head of the line if it is merely full — the
+                        // serial scan's phase-4 rules exactly.
+                        let stage = usize::from(front.0.stage);
+                        let pinned = route.placement.as_ref().map(|p| p.chip_for_stage(stage));
+                        let usable = pinned.is_some_and(|c| mirror[c].up_and_serves(pixels));
+                        if !usable {
+                            let t = heap.pop().expect("peeked entry").0;
+                            stats[t.stream].shed += 1;
+                            if let Some(tel) = telemetry.as_mut() {
+                                tel.on_shed(t.stream, t.seq, ShedCause::Unservable);
+                            }
+                            continue;
+                        }
+                        let g = pinned.expect("usable implies a pinned chip");
+                        if !mirror[g].has_room() {
+                            break;
+                        }
+                        let t = heap.pop().expect("peeked entry").0;
+                        mirror[g].queued += 1;
+                        if let Some(tel) = telemetry.as_mut() {
+                            tel.on_dispatch(k, t.stream, t.seq, g);
+                        }
+                        let (wi, li) = chip_owner[g];
+                        dispatches[wi].push((li, t));
+                        continue;
+                    }
                     if !mirror.iter().any(|m| m.up_and_serves(pixels)) {
                         let t = heap.pop().expect("peeked entry").0;
                         stats[t.stream].shed += 1;
@@ -507,12 +547,36 @@ impl FleetSim {
                         Rsp::Completions(done) => {
                             for (li, t) in done {
                                 mirror[base + li].active = false;
+                                let chip = base + li;
+                                // A finished non-final pipeline stage
+                                // hands off instead of completing: the
+                                // successor-stage task enters the heap
+                                // here, in global chip order — exactly
+                                // where the serial engine pushes it.
+                                let next_stage = usize::from(t.stage) + 1;
+                                let route = routes[t.stream]
+                                    .as_ref()
+                                    .filter(|r| next_stage < r.stage_costs.len());
+                                if let Some(r) = route {
+                                    if let Some(p) = stats[t.stream].pipeline.as_mut() {
+                                        p.handoffs += 1;
+                                    }
+                                    if let Some(tel) = telemetry.as_mut() {
+                                        let b = r.handoff_bytes;
+                                        tel.on_handoff(k, t.stream, t.seq, chip, b);
+                                    }
+                                    heap.push(EdfTask(FrameTask {
+                                        stage: next_stage as u8,
+                                        cost: r.stage_costs[next_stage],
+                                        ..t
+                                    }));
+                                    continue;
+                                }
                                 let latency_ms = now_ms + cfg.tick_ms - t.release_ms;
                                 let budget_ms = t.deadline_ms - t.release_ms;
                                 stats[t.stream].record_completion(latency_ms, budget_ms);
                                 if let Some(tel) = telemetry.as_mut() {
                                     let missed = latency_ms > budget_ms;
-                                    let chip = base + li;
                                     tel.on_complete(k, t.stream, t.seq, chip, latency_ms, missed);
                                 }
                             }
@@ -583,6 +647,7 @@ mod tests {
             pixels: 416 * 416,
             cost: crate::serve::stream::FrameCost::flat(1, 1),
             qos,
+            stage: 0,
         }
     }
 

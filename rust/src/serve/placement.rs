@@ -1,0 +1,151 @@
+//! Stream placement: which chip — or ordered chip *set* — runs a stream.
+//!
+//! The scalar chip-index assumption baked into early versions of the
+//! scheduler breaks for the untileable giants: DeepLabv3 at 1080p has
+//! layers whose single activation row overflows one 192 KB unified-buffer
+//! half, so no single chip can serve it fused. The placement layer makes
+//! "where does this stream run" a first-class value: a [`Placement`] is
+//! either one chip ([`Placement::Single`]) — every pre-pipeline stream,
+//! priced and dispatched exactly as before — or an ordered [`ChipSet`] of
+//! pipeline stages ([`Placement::Pipeline`]), produced from a
+//! [`PipelinePlan`](crate::plan::PipelinePlan) split by
+//! [`crate::plan::split_pipeline`] and priced per stage, with inter-stage
+//! feature hand-off billed to the DRAM bus by
+//! [`TrafficModel::handoff_bytes`](crate::traffic::TrafficModel::handoff_bytes).
+//!
+//! Placements are decided once at admission and never migrate: frame
+//! `seq` of a pipeline stream executes stage `s` on `chips[s]`, handing
+//! off to `chips[s + 1]` at stage completion. Keeping the set *ordered*
+//! is what keeps both engines byte-identical — the hand-off successor is
+//! a pure function of (placement, stage), never of runtime load.
+
+/// An ordered set of chips serving one stream as pipeline stages.
+///
+/// `chips[s]` is the pool index of the chip executing stage `s`; the
+/// order is the stage order, so hand-off always flows `chips[s]` →
+/// `chips[s + 1]`. Indices are distinct by construction (a chip cannot
+/// be two stages of the same stream).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChipSet {
+    chips: Vec<usize>,
+}
+
+impl ChipSet {
+    /// Build a stage-ordered chip set. Returns `None` unless `chips`
+    /// names at least two distinct chips (a one-chip "pipeline" is a
+    /// [`Placement::Single`], not a degenerate set).
+    pub fn new(chips: Vec<usize>) -> Option<Self> {
+        if chips.len() < 2 {
+            return None;
+        }
+        for (i, c) in chips.iter().enumerate() {
+            if chips[..i].contains(c) {
+                return None;
+            }
+        }
+        Some(ChipSet { chips })
+    }
+
+    /// Number of pipeline stages (= chips), always ≥ 2.
+    pub fn stages(&self) -> usize {
+        self.chips.len()
+    }
+
+    /// Pool index of the chip executing stage `stage`.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `stage >= self.stages()`.
+    pub fn chip_for_stage(&self, stage: usize) -> usize {
+        self.chips[stage]
+    }
+
+    /// The stage-ordered chip indices.
+    pub fn chips(&self) -> &[usize] {
+        &self.chips
+    }
+}
+
+/// Where a stream's frames execute: one chip, or an ordered pipeline of
+/// chips.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Placement {
+    /// The whole frame runs on one chip — the pre-pipeline behaviour,
+    /// byte-identical for every stream that fits a single chip.
+    Single(usize),
+    /// The frame runs as contiguous stages across an ordered chip set,
+    /// with inter-stage feature hand-off priced as DRAM bus traffic.
+    Pipeline(ChipSet),
+}
+
+impl Placement {
+    /// Number of pipeline stages: 1 for [`Placement::Single`].
+    pub fn stages(&self) -> usize {
+        match self {
+            Placement::Single(_) => 1,
+            Placement::Pipeline(set) => set.stages(),
+        }
+    }
+
+    /// Pool index of the chip executing stage `stage`.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `stage >= self.stages()`.
+    pub fn chip_for_stage(&self, stage: usize) -> usize {
+        match self {
+            Placement::Single(c) => {
+                assert_eq!(stage, 0, "single placement has only stage 0");
+                *c
+            }
+            Placement::Pipeline(set) => set.chip_for_stage(stage),
+        }
+    }
+
+    /// Whether this placement is a multi-chip pipeline.
+    pub fn is_pipeline(&self) -> bool {
+        matches!(self, Placement::Pipeline(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chip_set_rejects_degenerates() {
+        assert_eq!(ChipSet::new(vec![]), None);
+        assert_eq!(ChipSet::new(vec![3]), None);
+        assert_eq!(ChipSet::new(vec![1, 1]), None, "stages must be distinct chips");
+        assert!(ChipSet::new(vec![1, 0]).is_some(), "order is free, distinctness is not");
+    }
+
+    #[test]
+    fn stage_order_is_hand_off_order() {
+        let set = ChipSet::new(vec![2, 0, 1]).unwrap();
+        assert_eq!(set.stages(), 3);
+        assert_eq!(set.chip_for_stage(0), 2);
+        assert_eq!(set.chip_for_stage(1), 0);
+        assert_eq!(set.chip_for_stage(2), 1);
+        assert_eq!(set.chips(), &[2, 0, 1]);
+    }
+
+    #[test]
+    fn placement_stage_math() {
+        let single = Placement::Single(4);
+        assert_eq!(single.stages(), 1);
+        assert_eq!(single.chip_for_stage(0), 4);
+        assert!(!single.is_pipeline());
+
+        let pipe = Placement::Pipeline(ChipSet::new(vec![0, 1]).unwrap());
+        assert_eq!(pipe.stages(), 2);
+        assert_eq!(pipe.chip_for_stage(1), 1);
+        assert!(pipe.is_pipeline());
+    }
+
+    #[test]
+    #[should_panic(expected = "only stage 0")]
+    fn single_placement_rejects_later_stages() {
+        Placement::Single(0).chip_for_stage(1);
+    }
+}

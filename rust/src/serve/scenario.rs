@@ -272,7 +272,7 @@ pub struct FaultEvent {
 }
 
 /// Names of the bundled scenario presets, in [`Scenario::preset`] order.
-pub const PRESET_NAMES: [&str; 7] = [
+pub const PRESET_NAMES: [&str; 8] = [
     "steady-hd",
     "rush-hour",
     "mixed-zoo",
@@ -280,6 +280,7 @@ pub const PRESET_NAMES: [&str; 7] = [
     "diurnal-load",
     "flash-crowd",
     "chip-failure",
+    "pipeline-giant",
 ];
 
 /// A deterministic fleet-run description: a heterogeneous chip pool plus
@@ -347,6 +348,7 @@ impl Scenario {
     /// | `diurnal-load` | 6x paper + 2 standby | 5 steady + 10-stream wave | pool autoscaling |
     /// | `flash-crowd` | 4x paper | 2 steady + 14 at 0.5 s | QoS downshift |
     /// | `chip-failure` | 3x paper | 7 steady + 3 scripted faults | fault injection |
+    /// | `pipeline-giant` | 2x datacenter | DeepLabv3@1080p + a 416 sidecar | pipeline placement |
     pub fn preset(name: &str) -> Result<Scenario> {
         match name {
             "steady-hd" => Ok(Self::steady_hd()),
@@ -356,6 +358,7 @@ impl Scenario {
             "diurnal-load" => Ok(Self::diurnal_load()),
             "flash-crowd" => Ok(Self::flash_crowd()),
             "chip-failure" => Ok(Self::chip_failure()),
+            "pipeline-giant" => Ok(Self::pipeline_giant()),
             other => crate::bail!(
                 "unknown scenario preset {other:?} (expected one of {})",
                 PRESET_NAMES.join(", ")
@@ -649,6 +652,33 @@ impl Scenario {
         }
     }
 
+    /// `pipeline-giant`: the untileable giant. Full DeepLabv3 at 1080p
+    /// has single activation *rows* that overflow one 192 KB unified
+    /// buffer half, so no single chip — of any clock — can serve it
+    /// fused; a pair of datacenter chips takes it as a 2-stage pipeline
+    /// ([`crate::plan::split_pipeline`]), inter-stage hand-off billed to
+    /// the shared bus. A low-rate converted sidecar stream shares the
+    /// pool on a classic single-chip placement, pinning that the two
+    /// placement kinds coexist.
+    fn pipeline_giant() -> Scenario {
+        Scenario {
+            name: "pipeline-giant".into(),
+            chips: vec![ChipSpec::datacenter(); 2],
+            streams: vec![
+                StreamScript::steady(
+                    StreamSpec { hw: (1080, 1920), target_fps: 1.0, qos: QosClass::Gold },
+                    ModelId::Zoo("deeplabv3"),
+                ),
+                StreamScript::steady(
+                    StreamSpec { hw: (416, 416), target_fps: 10.0, qos: QosClass::Bronze },
+                    ModelId::Zoo("deeplabv3-converted"),
+                ),
+            ],
+            faults: Vec::new(),
+            standby: Vec::new(),
+        }
+    }
+
     /// The buffer geometry frame costs are priced on: the first chip's
     /// config. [`Scenario::validate`] guarantees every chip shares it.
     pub fn reference_chip(&self) -> ChipConfig {
@@ -922,6 +952,16 @@ mod tests {
             ..ChipSpec::paper()
         });
         assert!(bad_standby.validate().is_err(), "standby chip off the reference geometry");
+    }
+
+    #[test]
+    fn pipeline_giant_scripts_the_untileable_point() {
+        let s = Scenario::preset("pipeline-giant").unwrap();
+        assert_eq!(s.chips.len(), 2, "a datacenter pair");
+        assert!(s.chips.iter().all(|c| c.max_pixels.is_none()), "both chips uncapped");
+        assert_eq!(s.streams[0].spec.hw, (1080, 1920));
+        assert_eq!(s.streams[0].model.name(), "deeplabv3", "the full backbone, not converted");
+        assert!(s.faults.is_empty() && s.standby.is_empty());
     }
 
     #[test]

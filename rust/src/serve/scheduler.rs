@@ -60,10 +60,10 @@
 //! 6. chips advance; completions are scored against their deadlines.
 
 use crate::config::ChipConfig;
-use crate::dla::trace_fused;
+use crate::dla::{trace_fused, trace_hybrid};
 use crate::fusion::FusionConfig;
 use crate::model::Network;
-use crate::plan::{Plan, PlanCache, PlanKey, Planner};
+use crate::plan::{Plan, PipelinePlan, PlanCache, PlanKey, Planner};
 use crate::util::Rng;
 use crate::Result;
 
@@ -73,11 +73,19 @@ use std::sync::Arc;
 
 use super::arbiter::BusArbiter;
 use super::fleet::{ChipDirective, Fleet};
+use super::placement::ChipSet;
 use super::qos::{self, QosController};
 use super::scenario::{FaultKind, ModelId, Scenario};
-use super::stats::{CostProvenance, FleetReport, StreamStats};
+use super::stats::{CostProvenance, FleetReport, PipelineStats, StreamStats};
 use super::stream::{FrameCost, FrameTask, Stream, StreamSpec};
 use super::telemetry::{ShedCause, Telemetry, TelemetryConfig};
+
+/// Pipeline depth attempted for operating points no single chip can
+/// serve fused: the plan splits into this many contiguous stages across
+/// as many distinct capable chips. Two is the pool's natural unit and
+/// already admits every zoo giant; deeper splits remain reachable
+/// through [`crate::plan::PlanCache::pipeline`].
+pub(crate) const PIPELINE_STAGES: usize = 2;
 
 /// How arrival events are admitted while the run replays its scenario
 /// timeline.
@@ -142,29 +150,18 @@ pub struct FleetConfig {
 
 impl FleetConfig {
     /// A config over `scenario` with default engine knobs and the bus
-    /// budget scaled to the pool (the paper's 585 MB/s per chip).
+    /// budget scaled to the pool (the paper's 585 MB/s per chip). Thin
+    /// wrapper over [`FleetConfigBuilder`], skipping its validation —
+    /// [`run_fleet`] validates at run time either way.
     pub fn new(scenario: Scenario) -> Self {
-        let bus_mbps = 585.0 * scenario.chips.len().max(1) as f64;
-        FleetConfig {
-            scenario,
-            bus_mbps,
-            seconds: 5.0,
-            seed: 1,
-            tick_ms: 1.0,
-            queue_depth: 2,
-            max_ready_per_stream: 4,
-            admission: AdmissionPolicy::DemandLimit { oversub: 2.0 },
-            planner: Planner::OptimalDp,
-            threads: 1,
-            telemetry: TelemetryConfig::default(),
-        }
+        FleetConfigBuilder::new(scenario).cfg
     }
 
     /// The legacy seeded workload: `streams` sampled mixed-resolution
     /// streams on `chips` paper chips, with `seed` driving both the mix
-    /// and the release phases.
+    /// and the release phases. Thin wrapper over [`FleetConfigBuilder`].
     pub fn sampled(streams: usize, chips: usize, seed: u64) -> Self {
-        FleetConfig { seed, ..Self::new(Scenario::sampled(streams, chips, seed)) }
+        FleetConfigBuilder::new(Scenario::sampled(streams, chips, seed)).seed(seed).cfg
     }
 
     /// Reject configurations that would NaN or hang the engines: zero or
@@ -210,6 +207,121 @@ impl FleetConfig {
 impl Default for FleetConfig {
     fn default() -> Self {
         Self::sampled(16, 8, 1)
+    }
+}
+
+/// Typed builder for [`FleetConfig`] — the one construction path every
+/// constructor routes through. Defaults match [`FleetConfig::new`]: a
+/// 5 s span at 1 ms ticks, seed 1, depth-2 chip queues, 2x demand-limit
+/// admission, [`Planner::OptimalDp`] pricing, the serial engine and
+/// telemetry on; the bus budget scales with the pool (585 MB/s per
+/// chip) unless overridden. Unlike struct updates on a bare
+/// [`FleetConfig`], [`FleetConfigBuilder::build`] validates
+/// ([`FleetConfig::validate`]), so a config that builds also runs.
+///
+/// ```
+/// use rcnet_dla::serve::{FleetConfigBuilder, Scenario};
+///
+/// let cfg = FleetConfigBuilder::new(Scenario::preset("steady-hd").unwrap())
+///     .seconds(2.0)
+///     .threads(4)
+///     .build()
+///     .unwrap();
+/// assert_eq!(cfg.threads, 4);
+/// ```
+#[derive(Debug, Clone)]
+pub struct FleetConfigBuilder {
+    cfg: FleetConfig,
+}
+
+impl FleetConfigBuilder {
+    /// Start from `scenario` with the default engine knobs and the bus
+    /// budget scaled to its pool.
+    pub fn new(scenario: Scenario) -> Self {
+        let bus_mbps = 585.0 * scenario.chips.len().max(1) as f64;
+        FleetConfigBuilder {
+            cfg: FleetConfig {
+                scenario,
+                bus_mbps,
+                seconds: 5.0,
+                seed: 1,
+                tick_ms: 1.0,
+                queue_depth: 2,
+                max_ready_per_stream: 4,
+                admission: AdmissionPolicy::DemandLimit { oversub: 2.0 },
+                planner: Planner::OptimalDp,
+                threads: 1,
+                telemetry: TelemetryConfig::default(),
+            },
+        }
+    }
+
+    /// Override the shared DRAM-bus budget in MB/s.
+    pub fn bus_mbps(mut self, v: f64) -> Self {
+        self.cfg.bus_mbps = v;
+        self
+    }
+
+    /// Override the simulated span in seconds.
+    pub fn seconds(mut self, v: f64) -> Self {
+        self.cfg.seconds = v;
+        self
+    }
+
+    /// Override the release-phase seed.
+    pub fn seed(mut self, v: u64) -> Self {
+        self.cfg.seed = v;
+        self
+    }
+
+    /// Override the virtual tick in milliseconds.
+    pub fn tick_ms(mut self, v: f64) -> Self {
+        self.cfg.tick_ms = v;
+        self
+    }
+
+    /// Override the per-chip dispatch queue depth.
+    pub fn queue_depth(mut self, v: usize) -> Self {
+        self.cfg.queue_depth = v;
+        self
+    }
+
+    /// Override the central ready-queue bound (frames per stream).
+    pub fn max_ready_per_stream(mut self, v: usize) -> Self {
+        self.cfg.max_ready_per_stream = v;
+        self
+    }
+
+    /// Override the admission policy.
+    pub fn admission(mut self, v: AdmissionPolicy) -> Self {
+        self.cfg.admission = v;
+        self
+    }
+
+    /// Override the fusion-planning strategy frame costs are priced by.
+    pub fn planner(mut self, v: Planner) -> Self {
+        self.cfg.planner = v;
+        self
+    }
+
+    /// Override the engine worker-thread count (1 = serial reference,
+    /// 0 = one per core).
+    pub fn threads(mut self, v: usize) -> Self {
+        self.cfg.threads = v;
+        self
+    }
+
+    /// Override the telemetry configuration.
+    pub fn telemetry(mut self, v: TelemetryConfig) -> Self {
+        self.cfg.telemetry = v;
+        self
+    }
+
+    /// Validate and produce the config: everything [`run_fleet`] would
+    /// reject is rejected here, at construction.
+    pub fn build(self) -> Result<FleetConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
     }
 }
 
@@ -297,6 +409,65 @@ impl CostModel {
         ))
     }
 
+    /// Price an operating point no single chip can serve fused: split
+    /// its plan into [`PIPELINE_STAGES`] contiguous stages
+    /// ([`crate::plan::split_pipeline`], memoized in the same
+    /// [`PlanCache`]) and price the whole frame from the hybrid trace
+    /// the stage costs were carved from. Errors when the point admits
+    /// no split either (fewer groups than stages).
+    fn pipeline(
+        &self,
+        model: ModelId,
+        hw: (u32, u32),
+    ) -> Result<(Arc<PipelinePlan>, FrameCost, CostProvenance)> {
+        let (net, cfg) = self
+            .nets
+            .get(&model)
+            .ok_or_else(|| crate::err!("model {} was not primed", model.name()))?;
+        let plan = self.plans.plan(net, cfg, &self.chip, hw, self.planner);
+        let pipe = self
+            .plans
+            .pipeline(net, cfg, &self.chip, hw, self.planner, PIPELINE_STAGES)
+            .ok_or_else(|| {
+                crate::err!(
+                    "{} at {hw:?} fits no single chip and admits no {PIPELINE_STAGES}-stage split",
+                    net.name
+                )
+            })?;
+        let whole = trace_hybrid(net, &plan.groups, hw, &self.chip).frame_cost();
+        Ok((
+            pipe,
+            whole,
+            CostProvenance {
+                model,
+                net_hash: net.structural_hash(),
+                planner: self.planner,
+                groups: plan.groups.len() as u64,
+                feat_bytes: plan.feat_bytes,
+            },
+        ))
+    }
+
+    /// Price a stream's operating point, falling back to a pipeline
+    /// split when no single chip can serve it fused. The single-chip
+    /// path is byte-identical to the pre-pipeline pricing; the fallback
+    /// only ever runs where that path *errors*, so existing scenarios
+    /// never reach it. On a double failure the single-chip error is
+    /// returned (it names the overflowing layer).
+    fn price_stream(
+        &self,
+        model: ModelId,
+        hw: (u32, u32),
+    ) -> Result<(FrameCost, CostProvenance, Option<Arc<PipelinePlan>>)> {
+        match self.cost(model, hw) {
+            Ok((cost, prov)) => Ok((cost, prov, None)),
+            Err(single) => match self.pipeline(model, hw) {
+                Ok((pipe, whole, prov)) => Ok((whole, prov, Some(pipe))),
+                Err(_) => Err(single),
+            },
+        }
+    }
+
     /// Pre-plan every distinct (model, resolution) point in `points`,
     /// fanning the planning work (the DP + tiling at each operating
     /// point — the expensive part of fleet setup) across `threads`
@@ -313,7 +484,7 @@ impl CostModel {
         }
         if threads <= 1 || todo.len() <= 1 {
             for (model, hw) in todo {
-                self.cost(model, hw)?;
+                self.price_stream(model, hw)?;
             }
             return Ok(());
         }
@@ -337,8 +508,14 @@ impl CostModel {
                     .map(|h| h.join().expect("cost-priming thread panicked"))
                     .collect()
             });
-            for r in results {
-                r?;
+            // Points that fail the single-chip price fall back to a
+            // pipeline split, serially (only the rare giants take it).
+            for (r, &(model, hw)) in results.into_iter().zip(batch) {
+                if let Err(e) = r {
+                    if self.pipeline(model, hw).is_err() {
+                        return Err(e);
+                    }
+                }
             }
         }
         Ok(())
@@ -709,6 +886,26 @@ impl AdaptiveState {
     }
 }
 
+/// The runtime routing record of one pipeline-placed stream, decided at
+/// [`FleetSim::new`] and static for the run (placements never migrate).
+/// Both engines keep it on their main thread: per-stage tasks carry
+/// their own stage's cost, so shards never need the route.
+#[derive(Debug, Clone)]
+pub(crate) struct PipelineRoute {
+    /// The ordered stage-to-chip placement over the base pool, or `None`
+    /// when the pool cannot field enough distinct capable chips — every
+    /// frame of the stream then sheds as unservable, exactly like a
+    /// single-chip stream no chip can serve.
+    pub(crate) placement: Option<ChipSet>,
+    /// Per-stage frame cost; stage `s` of every frame costs the same.
+    pub(crate) stage_costs: Vec<FrameCost>,
+    /// Inter-stage feature hand-off bytes per frame, as priced by
+    /// [`crate::traffic::TrafficModel::handoff_bytes`] — attribution of
+    /// traffic already inside the stage costs, surfaced per stream in
+    /// [`PipelineStats`].
+    pub(crate) handoff_bytes: u64,
+}
+
 /// The discrete-tick fleet simulator.
 ///
 /// Fields are crate-visible so [`super::parallel`] can take the prepared
@@ -718,6 +915,10 @@ impl AdaptiveState {
 pub struct FleetSim {
     pub(crate) cfg: FleetConfig,
     pub(crate) streams: Vec<Stream>,
+    /// Per-stream pipeline route: `None` for single-chip placements
+    /// (dispatch picks any capable chip — the pre-pipeline behaviour,
+    /// byte-identical), `Some` for streams priced as a pipeline.
+    pub(crate) routes: Vec<Option<PipelineRoute>>,
     pub(crate) ready: Vec<FrameTask>,
     pub(crate) fleet: Fleet,
     pub(crate) arbiter: BusArbiter,
@@ -786,35 +987,83 @@ impl FleetSim {
         let mut stats = Vec::with_capacity(scenario.streams.len());
         let mut demands = Vec::with_capacity(scenario.streams.len());
         let mut ladders = Vec::with_capacity(scenario.streams.len());
+        let mut routes = Vec::with_capacity(scenario.streams.len());
         for (id, script) in scenario.streams.iter().enumerate() {
-            let (cost, provenance) = costs.cost(script.model, script.spec.hw)?;
-            streams.push(Stream::new(id, script.spec, cost, script.arrival_ms, &mut rng));
-            stats.push(StreamStats::new(
+            let (cost, provenance, pipe) = costs.price_stream(script.model, script.spec.hw)?;
+            // A pipeline-priced stream is placed once, here: its stages
+            // map onto the first capable base-pool chips in pool order,
+            // statically for the whole run. Standby chips never take a
+            // stage (placement, like admission, is a pure function of
+            // the scenario).
+            let route = pipe.map(|p| {
+                let pixels = script.spec.pixels();
+                let chips: Vec<usize> = scenario
+                    .chips
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, c)| c.can_serve(pixels))
+                    .map(|(i, _)| i)
+                    .take(p.stages.len())
+                    .collect();
+                PipelineRoute {
+                    placement: (chips.len() == p.stages.len())
+                        .then(|| ChipSet::new(chips))
+                        .flatten(),
+                    stage_costs: p.stages.iter().map(|s| s.cost).collect(),
+                    handoff_bytes: p.handoff_bytes,
+                }
+            });
+            // A pipeline stream releases stage-0 tasks; the whole-frame
+            // cost stays in its stats and its admission demand.
+            let release_cost = route.as_ref().map_or(cost, |r| r.stage_costs[0]);
+            streams.push(Stream::new(id, script.spec, release_cost, script.arrival_ms, &mut rng));
+            let mut stream_stats = StreamStats::new(
                 script.spec,
                 cost,
                 provenance,
                 script.arrival_ms,
                 script.departure_ms,
-            ));
+            );
+            if let Some(r) = &route {
+                stream_stats.pipeline = Some(PipelineStats {
+                    stages: r.stage_costs.len() as u32,
+                    chips: r.placement.as_ref().map_or_else(Vec::new, |p| p.chips().to_vec()),
+                    handoff_bytes_per_frame: r.handoff_bytes,
+                    handoffs: 0,
+                });
+            }
+            stats.push(stream_stats);
             // Admission demands are always priced from the stream's
             // ORIGINAL operating point: downshift never feeds back into
-            // admission.
+            // admission. A pipeline stream is servable only when its
+            // placement formed (enough distinct capable chips).
             demands.push((
                 cost.bus_demand_bytes_per_s(script.spec.target_fps),
                 cost.compute_demand_cycles_per_s(script.spec.target_fps),
-                scenario.any_chip_can_serve(script.spec.pixels()),
+                match &route {
+                    Some(r) => r.placement.is_some(),
+                    None => scenario.any_chip_can_serve(script.spec.pixels()),
+                },
             ));
-            let mut ladder = vec![(script.spec, cost)];
-            for &(model, hw) in &rung_points[id] {
-                let (c, _) = costs.cost(model, hw)?;
-                // A model-swap rung must actually be cheaper on the bus
-                // to count as a degradation worth taking.
-                if model != script.model && c.dram_bytes >= cost.dram_bytes {
-                    continue;
+            let ladder = if route.is_some() {
+                // A pipeline placement is its own operating point: the
+                // route is static, so there are no downshift rungs.
+                vec![(script.spec, release_cost)]
+            } else {
+                let mut ladder = vec![(script.spec, cost)];
+                for &(model, hw) in &rung_points[id] {
+                    let (c, _) = costs.cost(model, hw)?;
+                    // A model-swap rung must actually be cheaper on the
+                    // bus to count as a degradation worth taking.
+                    if model != script.model && c.dram_bytes >= cost.dram_bytes {
+                        continue;
+                    }
+                    ladder.push((StreamSpec { hw, ..script.spec }, c));
                 }
-                ladder.push((StreamSpec { hw, ..script.spec }, c));
-            }
+                ladder
+            };
             ladders.push(ladder);
+            routes.push(route);
         }
         let admission = AdmissionState::new(
             scenario,
@@ -841,6 +1090,7 @@ impl FleetSim {
         Ok(FleetSim {
             cfg: cfg.clone(),
             streams,
+            routes,
             ready: Vec::new(),
             fleet,
             arbiter,
@@ -933,6 +1183,42 @@ impl FleetSim {
         //    frame behind it for its whole deadline window.
         while !self.ready.is_empty() {
             let i = edf_min(&self.ready);
+            if let Some(route) = &self.routes[self.ready[i].stream] {
+                // Pipeline-placed frames are pinned: stage `s` runs on
+                // the route's stage-s chip, never anywhere else. A
+                // missing placement or a downed/incapable pinned chip
+                // sheds the frame (waiting could outlive its deadline);
+                // a *full* pinned chip is backpressure, holding the head
+                // of the line exactly as the single-chip path does.
+                let t = &self.ready[i];
+                let pinned = route
+                    .placement
+                    .as_ref()
+                    .map(|p| p.chip_for_stage(usize::from(t.stage)));
+                let usable = pinned.is_some_and(|c| {
+                    let w = &self.fleet.workers[c];
+                    !w.down && w.can_serve(t.pixels)
+                });
+                if !usable {
+                    let t = self.ready.swap_remove(i);
+                    self.stats[t.stream].shed += 1;
+                    if let Some(tel) = self.telemetry.as_mut() {
+                        tel.on_shed(t.stream, t.seq, ShedCause::Unservable);
+                    }
+                    continue;
+                }
+                let c = pinned.expect("usable implies a pinned chip");
+                let task = self.ready.swap_remove(i);
+                let (t_stream, t_seq) = (task.stream, task.seq);
+                if let Err(back) = self.fleet.workers[c].try_dispatch(task) {
+                    self.ready.push(back);
+                    break;
+                }
+                if let Some(tel) = self.telemetry.as_mut() {
+                    tel.on_dispatch(tick, t_stream, t_seq, c);
+                }
+                continue;
+            }
             if !self.fleet.any_can_serve(self.ready[i].pixels) {
                 let t = self.ready.swap_remove(i);
                 self.stats[t.stream].shed += 1;
@@ -972,16 +1258,37 @@ impl FleetSim {
         let demands: Vec<f64> = self.fleet.workers.iter().map(|w| w.bus_demand()).collect();
         let grants = self.arbiter.arbitrate(&demands);
 
-        // 6. Execution progress and completion scoring.
+        // 6. Execution progress and completion scoring. A finished
+        //    non-final pipeline stage does not complete the frame: it
+        //    hands off — a new task for the route's successor chip
+        //    enters the central queue now and dispatches next tick (the
+        //    one-tick hand-off latency standing in for the DRAM round
+        //    trip of the boundary feature map). Only the final stage
+        //    scores against the frame's deadline.
         for (c, (w, g)) in self.fleet.workers.iter_mut().zip(&grants).enumerate() {
-            if let Some(done) = w.advance(*g) {
-                let latency_ms = now_ms + self.cfg.tick_ms - done.release_ms;
-                let budget_ms = done.deadline_ms - done.release_ms;
-                self.stats[done.stream].record_completion(latency_ms, budget_ms);
-                if let Some(tel) = self.telemetry.as_mut() {
-                    let missed = latency_ms > budget_ms;
-                    tel.on_complete(tick, done.stream, done.seq, c, latency_ms, missed);
+            let Some(done) = w.advance(*g) else { continue };
+            let next_stage = usize::from(done.stage) + 1;
+            let route = self.routes[done.stream].as_ref();
+            if let Some(r) = route.filter(|r| next_stage < r.stage_costs.len()) {
+                if let Some(p) = self.stats[done.stream].pipeline.as_mut() {
+                    p.handoffs += 1;
                 }
+                if let Some(tel) = self.telemetry.as_mut() {
+                    tel.on_handoff(tick, done.stream, done.seq, c, r.handoff_bytes);
+                }
+                self.ready.push(FrameTask {
+                    stage: next_stage as u8,
+                    cost: r.stage_costs[next_stage],
+                    ..done
+                });
+                continue;
+            }
+            let latency_ms = now_ms + self.cfg.tick_ms - done.release_ms;
+            let budget_ms = done.deadline_ms - done.release_ms;
+            self.stats[done.stream].record_completion(latency_ms, budget_ms);
+            if let Some(tel) = self.telemetry.as_mut() {
+                let missed = latency_ms > budget_ms;
+                tel.on_complete(tick, done.stream, done.seq, c, latency_ms, missed);
             }
         }
         if let Some(tel) = self.telemetry.as_mut() {
@@ -1067,6 +1374,7 @@ mod tests {
             pixels: 416 * 416,
             cost: FrameCost::flat(1, 1),
             qos,
+            stage: 0,
         }
     }
 
@@ -1170,6 +1478,75 @@ mod tests {
             assert!(bad.validate().is_err(), "{bad:?} should not validate");
         }
         good.validate().expect("the default config validates");
+    }
+
+    /// The legacy constructors are thin wrappers over the builder — the
+    /// single construction path — and the builder validates at build().
+    #[test]
+    fn builder_is_the_single_construction_path() {
+        let a = FleetConfig::new(Scenario::preset("steady-hd").unwrap());
+        let b = FleetConfigBuilder::new(Scenario::preset("steady-hd").unwrap())
+            .build()
+            .expect("preset config validates");
+        assert_eq!(a, b, "FleetConfig::new routes through the builder");
+
+        let s = FleetConfig::sampled(8, 4, 9);
+        let t = FleetConfigBuilder::new(Scenario::sampled(8, 4, 9))
+            .seed(9)
+            .build()
+            .expect("sampled config validates");
+        assert_eq!(s, t, "FleetConfig::sampled routes through the builder");
+
+        let rejected = FleetConfigBuilder::new(Scenario::preset("steady-hd").unwrap())
+            .tick_ms(0.0)
+            .build();
+        assert!(rejected.is_err(), "the builder validates at build()");
+    }
+
+    #[test]
+    fn builder_setters_cover_every_knob() {
+        let cfg = FleetConfigBuilder::new(Scenario::preset("steady-hd").unwrap())
+            .bus_mbps(1000.0)
+            .seconds(1.0)
+            .seed(7)
+            .tick_ms(2.0)
+            .queue_depth(3)
+            .max_ready_per_stream(6)
+            .admission(AdmissionPolicy::AdmitAll)
+            .planner(Planner::PaperGreedy)
+            .threads(2)
+            .telemetry(TelemetryConfig::off())
+            .build()
+            .expect("a fully-overridden config validates");
+        assert_eq!(cfg.bus_mbps, 1000.0);
+        assert_eq!(cfg.seconds, 1.0);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.tick_ms, 2.0);
+        assert_eq!(cfg.queue_depth, 3);
+        assert_eq!(cfg.max_ready_per_stream, 6);
+        assert_eq!(cfg.admission, AdmissionPolicy::AdmitAll);
+        assert_eq!(cfg.planner, Planner::PaperGreedy);
+        assert_eq!(cfg.threads, 2);
+        assert!(!cfg.telemetry.enabled);
+    }
+
+    /// Every existing preset keeps single-chip placements: the pipeline
+    /// path only ever activates where single-chip pricing *fails*, so
+    /// the pre-pipeline engines' reports are untouched.
+    #[test]
+    fn existing_presets_place_every_stream_on_a_single_chip() {
+        for name in ["steady-hd", "hetero-pool", "mixed-zoo"] {
+            let cfg = FleetConfig::new(Scenario::preset(name).unwrap());
+            let sim = FleetSim::new(&cfg).expect("sim builds");
+            assert!(
+                sim.routes.iter().all(Option::is_none),
+                "{name}: no stream should be pipeline-placed"
+            );
+            assert!(
+                sim.stats.iter().all(|s| s.pipeline.is_none()),
+                "{name}: no stream stats should carry pipeline provenance"
+            );
+        }
     }
 
     /// Online admission accounting: a departure hands capacity back, so

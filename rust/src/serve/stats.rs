@@ -77,6 +77,34 @@ impl CostProvenance {
     }
 }
 
+/// Pipeline-placement record for a stream served across multiple chips
+/// (the untileable giants). `None` on [`StreamStats::pipeline`] for every
+/// single-chip stream, which keeps pre-pipeline digests bit-identical.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PipelineStats {
+    /// Number of pipeline stages the frame is split into (≥ 2).
+    pub stages: u32,
+    /// Stage-ordered pool indices of the chips serving the stream; empty
+    /// when the scenario's pool could not seat the split (stream refused).
+    pub chips: Vec<usize>,
+    /// Inter-stage feature hand-off bytes per frame, priced by
+    /// [`TrafficModel::handoff_bytes`](crate::traffic::TrafficModel::handoff_bytes).
+    pub handoff_bytes_per_frame: u64,
+    /// Stage hand-offs that actually occurred during the run.
+    pub handoffs: u64,
+}
+
+impl PipelineStats {
+    /// The record as digest words (for the fleet stats digest).
+    pub fn digest_words(&self) -> Vec<u64> {
+        let mut words = vec![u64::from(self.stages), self.chips.len() as u64];
+        words.extend(self.chips.iter().map(|&c| c as u64));
+        words.push(self.handoff_bytes_per_frame);
+        words.push(self.handoffs);
+        words
+    }
+}
+
 /// Serving statistics for one scripted stream (admitted or not).
 #[derive(Debug, Clone)]
 pub struct StreamStats {
@@ -113,6 +141,10 @@ pub struct StreamStats {
     /// seconds are exactly `degraded_windows x window_ms / 1e3`
     /// ([`FleetReport::qos_window_ms`]), no float accumulation anywhere.
     pub degraded_windows: u64,
+    /// Pipeline placement record — `Some` only for a stream served as
+    /// multi-chip pipeline stages; `None` keeps single-chip digests
+    /// bit-identical to the pre-pipeline pins.
+    pub pipeline: Option<PipelineStats>,
 }
 
 impl StreamStats {
@@ -137,6 +169,7 @@ impl StreamStats {
             released: 0,
             shed: 0,
             degraded_windows: 0,
+            pipeline: None,
         }
     }
 
@@ -359,6 +392,11 @@ impl FleetReport {
             words.push(s.metrics.frames as u64);
             words.push(s.metrics.deadline_misses as u64);
             words.extend(s.metrics.latency_ms.iter().map(|l| l.to_bits()));
+            // Pipeline words fold in only for pipeline-placed streams, so
+            // single-chip reports keep their pre-pipeline digests.
+            if let Some(p) = &s.pipeline {
+                words.extend(p.digest_words());
+            }
         }
         words.push(self.bus_utilization.to_bits());
         words.push(self.bus_saturation.to_bits());
@@ -430,6 +468,20 @@ impl FleetReport {
                     .set("degraded_s", Json::Num(s.degraded_s(self.qos_window_ms)))
                     .set("p50_ms", Json::Num(s.p50_ms()))
                     .set("p99_ms", Json::Num(s.p99_ms()));
+                if let Some(p) = &s.pipeline {
+                    let mut po = Json::obj();
+                    po.set("stages", Json::Num(f64::from(p.stages)))
+                        .set(
+                            "chips",
+                            Json::Arr(p.chips.iter().map(|&c| Json::Num(c as f64)).collect()),
+                        )
+                        .set(
+                            "handoff_bytes_per_frame",
+                            Json::Num(p.handoff_bytes_per_frame as f64),
+                        )
+                        .set("handoffs", Json::Num(p.handoffs as f64));
+                    so.set("pipeline", po);
+                }
                 so
             })
             .collect();
@@ -715,6 +767,52 @@ mod tests {
         let x = r.to_json().to_string();
         assert!(x.contains("\"bus_saturation\":\"0.333333\""), "got {x}");
         assert!(x.contains("\"bus_peak_demand\":\"0.666667\""), "got {x}");
+    }
+
+    /// Tentpole pin: the pipeline record folds into digest and JSON only
+    /// when present — a `None` stream digests exactly as before the
+    /// pipeline subsystem existed, and a `Some` stream is distinguishable
+    /// by stage count, chip set, hand-off pricing and hand-off count.
+    #[test]
+    fn pipeline_record_folds_in_only_when_present() {
+        let r = |s: StreamStats| FleetReport {
+            scenario: "t".into(),
+            per_stream: vec![s],
+            rejected: 0,
+            chips: 2,
+            bus_mbps: 1170.0,
+            bus_utilization: 0.0,
+            bus_saturation: 0.0,
+            bus_peak_demand: 0.0,
+            chip_utilization: 0.0,
+            qos_window_ms: 100.0,
+            wall_s: 1.0,
+            telemetry: None,
+        };
+        let single = stats();
+        assert!(single.pipeline.is_none(), "::new starts single-chip");
+        let d_single = r(single.clone()).stats_digest();
+        assert!(!r(single).to_json().to_string().contains("\"pipeline\""));
+
+        let mut piped = stats();
+        piped.pipeline = Some(PipelineStats {
+            stages: 2,
+            chips: vec![0, 1],
+            handoff_bytes_per_frame: 245_760,
+            handoffs: 3,
+        });
+        let d_piped = r(piped.clone()).stats_digest();
+        assert_ne!(d_single, d_piped);
+        let json = r(piped.clone()).to_json().to_string();
+        assert!(json.contains("\"pipeline\""), "got {json}");
+        assert!(json.contains("\"handoff_bytes_per_frame\":245760"), "got {json}");
+
+        let mut more_handoffs = piped.clone();
+        more_handoffs.pipeline.as_mut().unwrap().handoffs = 4;
+        assert_ne!(d_piped, r(more_handoffs).stats_digest());
+        let mut other_chips = piped;
+        other_chips.pipeline.as_mut().unwrap().chips = vec![1, 0];
+        assert_ne!(d_piped, r(other_chips).stats_digest());
     }
 
     #[test]

@@ -108,10 +108,16 @@ pub struct FrameTask {
     /// Input pixels — dispatch only offers the frame to chips whose
     /// capability bound covers it.
     pub pixels: u64,
-    /// Per-frame execution cost.
+    /// Per-frame execution cost. For a pipeline-placed stream this is
+    /// the cost of *this stage only*; single-chip streams carry the
+    /// whole-frame cost with `stage == 0`.
     pub cost: FrameCost,
     /// QoS tier inherited from the stream.
     pub qos: QosClass,
+    /// Pipeline stage this task executes (0 for single-chip placements).
+    /// A non-final stage's completion spawns the next stage's task on
+    /// the placement's successor chip.
+    pub stage: u8,
 }
 
 /// Live per-stream state inside the simulator.
@@ -188,6 +194,7 @@ impl Stream {
                 pixels: self.spec.pixels(),
                 cost: self.cost,
                 qos: self.spec.qos,
+                stage: 0,
             });
             self.frames_released += 1;
             self.next_release_ms += self.spec.period_ms();

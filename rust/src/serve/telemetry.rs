@@ -15,7 +15,8 @@
 //!   per-stream progress — so digests need no float tolerance.
 //! * **Events.** A [`TelemetryEvent`] log records
 //!   arrival/departure/refusal, shed (with [`ShedCause`]),
-//!   dispatch, completion, chip-directive (faults and autoscaling),
+//!   dispatch, completion, pipeline stage hand-off (with the hand-off
+//!   bytes billed to the bus), chip-directive (faults and autoscaling),
 //!   downshift and saturation-crossing events. The engines never
 //!   preempt a dispatched frame, so there is no preemption event.
 //!   Within one tick events are logged in canonical phase order
@@ -40,9 +41,11 @@
 //!   a Chrome trace-event document (`chrome://tracing`, Perfetto): one
 //!   track for the bus (saturated spans, per-window byte counters,
 //!   instant events for churn and sheds) and one per chip (one span per
-//!   completed frame). [`TelemetryReport::series_csv`] and
-//!   [`TelemetryReport::series_table`] render the windowed series for
-//!   the `obs` CLI subcommand.
+//!   completed frame, or one per pipeline stage hand-off). Events are
+//!   built through [`crate::obs::chrome`], the construction path shared
+//!   with the schedule-trace exporter. [`TelemetryReport::series_csv`]
+//!   and [`TelemetryReport::series_table`] render the windowed series
+//!   for the `obs` CLI subcommand.
 //!
 //! Both engines drive the recorder from their main thread at the same
 //! six phase points, observing identical values in identical order, so
@@ -52,6 +55,7 @@
 
 use std::collections::HashMap;
 
+use crate::obs::chrome;
 use crate::obs::MetricsHub;
 use crate::util::json::Json;
 
@@ -324,6 +328,20 @@ pub enum TelemetryEventKind {
         /// Global chip index.
         chip: usize,
     },
+    /// A non-final pipeline stage completed and handed its features to
+    /// the next stage's chip over the DRAM bus
+    /// ([`crate::serve::Placement::Pipeline`]).
+    Handoff {
+        /// Stream id.
+        stream: usize,
+        /// Frame sequence number within the stream.
+        seq: u64,
+        /// Global chip index the finishing stage ran on.
+        chip: usize,
+        /// Feature bytes handed to the next stage, as priced by
+        /// [`TrafficModel::handoff_bytes`](crate::traffic::TrafficModel::handoff_bytes).
+        bytes: u64,
+    },
     /// A frame completed (scored against its deadline).
     Complete {
         /// Stream id.
@@ -397,6 +415,11 @@ impl TelemetryEvent {
             }
             TelemetryEventKind::Downshift { stream, rung } => {
                 (10, stream as u64, u64::from(rung), 0)
+            }
+            // Chip and bytes pack into one word: hand-off bytes are far
+            // below 2^48 (a full 1080p 2048-channel row is ~246 KB).
+            TelemetryEventKind::Handoff { stream, seq, chip, bytes } => {
+                (11, stream as u64, seq, ((chip as u64) << 48) | bytes)
             }
         };
         out.extend([self.tick, code, a, b, c]);
@@ -842,20 +865,9 @@ impl TelemetryReport {
         let us_per_tick = self.tick_ms * 1e3;
         let mut events: Vec<Json> = Vec::new();
 
-        let mut meta = |tid: usize, label: String, out: &mut Vec<Json>| {
-            let mut args = Json::obj();
-            args.set("name", Json::Str(label));
-            let mut e = Json::obj();
-            e.set("ph", Json::Str("M".into()))
-                .set("pid", Json::Num(0.0))
-                .set("tid", Json::Num(tid as f64))
-                .set("name", Json::Str("thread_name".into()))
-                .set("args", args);
-            out.push(e);
-        };
-        meta(0, "bus".into(), &mut events);
+        events.push(chrome::thread_meta(0, "bus"));
         for c in 0..self.chips {
-            meta(1 + c, format!("chip{c}"), &mut events);
+            events.push(chrome::thread_meta(1 + c, &format!("chip{c}")));
         }
 
         // Bus track: per-window counters and saturated spans.
@@ -864,27 +876,13 @@ impl TelemetryReport {
             let mut args = Json::obj();
             args.set("demand_bytes", Json::Num(w.demand_bytes as f64))
                 .set("granted_bytes", Json::Num(w.granted_bytes as f64));
-            let mut e = Json::obj();
-            e.set("ph", Json::Str("C".into()))
-                .set("pid", Json::Num(0.0))
-                .set("tid", Json::Num(0.0))
-                .set("name", Json::Str("bus_bytes".into()))
-                .set("ts", Json::Num(ts))
-                .set("args", args);
-            events.push(e);
+            events.push(chrome::counter(0, "bus_bytes", ts, args));
             if w.sat_frac_ge(1, 2) {
                 let mut args = Json::obj();
                 args.set("saturated_ticks", Json::Num(w.saturated_ticks as f64))
                     .set("ticks", Json::Num(w.ticks as f64));
-                let mut e = Json::obj();
-                e.set("ph", Json::Str("X".into()))
-                    .set("pid", Json::Num(0.0))
-                    .set("tid", Json::Num(0.0))
-                    .set("name", Json::Str("saturated".into()))
-                    .set("ts", Json::Num(ts))
-                    .set("dur", Json::Num(w.ticks as f64 * us_per_tick))
-                    .set("args", args);
-                events.push(e);
+                let dur = w.ticks as f64 * us_per_tick;
+                events.push(chrome::span(0, "saturated".into(), ts, dur, args));
             }
         }
 
@@ -897,21 +895,37 @@ impl TelemetryReport {
                 TelemetryEventKind::Dispatch { stream, seq, .. } => {
                     dispatched_at.insert((stream, seq), ev.tick);
                 }
+                // A hand-off closes the finishing stage's span on its
+                // chip track (the successor stage opens its own span at
+                // its dispatch), so a pipeline frame renders as one span
+                // per stage.
+                TelemetryEventKind::Handoff { stream, seq, chip, bytes } => {
+                    let from = dispatched_at.remove(&(stream, seq)).unwrap_or(ev.tick);
+                    let mut args = Json::obj();
+                    args.set("stream", Json::Num(stream as f64))
+                        .set("seq", Json::Num(seq as f64))
+                        .set("handoff_bytes", Json::Num(bytes as f64));
+                    events.push(chrome::span(
+                        1 + chip,
+                        format!("s{stream}#{seq}"),
+                        from as f64 * us_per_tick,
+                        (ev.tick + 1 - from) as f64 * us_per_tick,
+                        args,
+                    ));
+                }
                 TelemetryEventKind::Complete { stream, seq, chip, missed } => {
                     let from = dispatched_at.remove(&(stream, seq)).unwrap_or(ev.tick);
                     let mut args = Json::obj();
                     args.set("stream", Json::Num(stream as f64))
                         .set("seq", Json::Num(seq as f64))
                         .set("missed", Json::Bool(missed));
-                    let mut e = Json::obj();
-                    e.set("ph", Json::Str("X".into()))
-                        .set("pid", Json::Num(0.0))
-                        .set("tid", Json::Num((1 + chip) as f64))
-                        .set("name", Json::Str(format!("s{stream}#{seq}")))
-                        .set("ts", Json::Num(from as f64 * us_per_tick))
-                        .set("dur", Json::Num((ev.tick + 1 - from) as f64 * us_per_tick))
-                        .set("args", args);
-                    events.push(e);
+                    events.push(chrome::span(
+                        1 + chip,
+                        format!("s{stream}#{seq}"),
+                        from as f64 * us_per_tick,
+                        (ev.tick + 1 - from) as f64 * us_per_tick,
+                        args,
+                    ));
                 }
                 _ => {
                     let (name, stream) = match ev.kind {
@@ -925,7 +939,7 @@ impl TelemetryReport {
                         TelemetryEventKind::Downshift { stream, .. } => {
                             ("downshift", Some(stream))
                         }
-                        _ => unreachable!("dispatch/complete handled above"),
+                        _ => unreachable!("dispatch/handoff/complete handled above"),
                     };
                     let mut args = Json::obj();
                     if let Some(s) = stream {
@@ -942,15 +956,7 @@ impl TelemetryReport {
                     if let TelemetryEventKind::Downshift { rung, .. } = ev.kind {
                         args.set("rung", Json::Num(f64::from(rung)));
                     }
-                    let mut e = Json::obj();
-                    e.set("ph", Json::Str("i".into()))
-                        .set("s", Json::Str("g".into()))
-                        .set("pid", Json::Num(0.0))
-                        .set("tid", Json::Num(0.0))
-                        .set("name", Json::Str(name.into()))
-                        .set("ts", Json::Num(ts))
-                        .set("args", args);
-                    events.push(e);
+                    events.push(chrome::instant(0, name, ts, args));
                 }
             }
         }
@@ -963,11 +969,8 @@ impl TelemetryReport {
             .set("tick_ms", Json::Num(self.tick_ms))
             .set("chips", Json::Num(self.chips as f64))
             .set("total_ticks", Json::Num(self.total_ticks as f64));
-        let mut doc = Json::obj();
-        doc.set("displayTimeUnit", Json::Str("ms".into()))
-            .set("otherData", other)
-            .set("traceEvents", Json::Arr(events))
-            .set("series", Json::Arr(self.windows.iter().map(WindowSample::to_json).collect()))
+        let mut doc = chrome::document(other, events);
+        doc.set("series", Json::Arr(self.windows.iter().map(WindowSample::to_json).collect()))
             .set(
                 "incidents",
                 Json::Arr(self.incidents.iter().map(Incident::to_json).collect()),
@@ -1106,6 +1109,8 @@ pub(crate) struct Telemetry {
     chip_directives: u64,
     downshifts: u64,
     live_streams: u64,
+    handoffs: u64,
+    handoff_bytes: u64,
     hub: MetricsHub,
 }
 
@@ -1142,6 +1147,8 @@ impl Telemetry {
             chip_directives: 0,
             downshifts: 0,
             live_streams: 0,
+            handoffs: 0,
+            handoff_bytes: 0,
             hub,
         }
     }
@@ -1203,6 +1210,27 @@ impl Telemetry {
         self.cur.per_chip[chip].dispatched += 1;
         let kind = TelemetryEventKind::Dispatch { stream, seq, chip };
         self.tick_dispatch.push(TelemetryEvent { tick, kind });
+    }
+
+    /// Phase 6: a non-final pipeline stage finished on chip `chip` and
+    /// handed `bytes` of features to the next stage's chip — the bytes
+    /// [`TrafficModel::handoff_bytes`](crate::traffic::TrafficModel::handoff_bytes)
+    /// priced at admission. Rides in the completion buffer so the log
+    /// keeps canonical phase order within a tick.
+    pub(crate) fn on_handoff(
+        &mut self,
+        tick: u64,
+        stream: usize,
+        seq: u64,
+        chip: usize,
+        bytes: u64,
+    ) {
+        self.handoffs += 1;
+        self.handoff_bytes += bytes;
+        self.tick_complete.push(TelemetryEvent {
+            tick,
+            kind: TelemetryEventKind::Handoff { stream, seq, chip, bytes },
+        });
     }
 
     /// Phase 6: one frame completed; `missed` must be the same predicate
@@ -1313,6 +1341,12 @@ impl Telemetry {
         self.hub.inc("fleet.dispatched", dispatched);
         self.hub.inc("fleet.chip_directives", self.chip_directives);
         self.hub.inc("fleet.downshifts", self.downshifts);
+        // Registered lazily: a pipeline-free run's hub (and with it every
+        // pre-pipeline preset digest) stays bit-identical.
+        if self.handoffs > 0 {
+            self.hub.inc("fleet.handoffs", self.handoffs);
+            self.hub.inc("fleet.handoff_bytes", self.handoff_bytes);
+        }
 
         TelemetryReport {
             window_ms: self.window_ms,
@@ -1570,6 +1604,54 @@ mod tests {
         assert_eq!(rt.get("windows").and_then(Json::as_arr).map(Vec::len), Some(2));
         assert!(r.series_csv().lines().count() == 1 + r.windows.len());
         assert!(r.series_table().contains("incidents:"));
+    }
+
+    /// Tentpole pin: hand-offs log as events, count into the hub only
+    /// when any occurred, and render per-stage spans in the Chrome doc.
+    #[test]
+    fn handoffs_record_lazily_and_render_stage_spans() {
+        let cfg = TelemetryConfig { enabled: true, window_ms: 10.0 };
+        // No hand-offs: the hub must not even register the counters.
+        let mut quiet = Telemetry::new(&cfg, 1.0, 1, 2, 1e9, 0, 0);
+        quiet.end_tick(0, &[0.0, 0.0], &[0.0, 0.0], &[(false, 0, false); 2], &[false]);
+        assert_eq!(quiet.finish().hub.counter("fleet.handoffs"), 0);
+
+        // A 2-stage frame: dispatch on chip 0, hand off, dispatch on
+        // chip 1, complete.
+        let mut t = Telemetry::new(&cfg, 1.0, 1, 2, 1e9, 0, 0);
+        t.on_dispatch(0, 0, 0, 0);
+        t.end_tick(0, &[0.0, 0.0], &[0.0, 0.0], &[(true, 0, false); 2], &[false]);
+        t.on_handoff(3, 0, 0, 0, 245_760);
+        t.end_tick(3, &[0.0, 0.0], &[0.0, 0.0], &[(true, 0, false); 2], &[false]);
+        t.on_dispatch(4, 0, 0, 1);
+        t.end_tick(4, &[0.0, 0.0], &[0.0, 0.0], &[(true, 0, false); 2], &[false]);
+        t.on_complete(7, 0, 0, 1, 7.0, false);
+        t.end_tick(7, &[0.0, 0.0], &[0.0, 0.0], &[(true, 0, false); 2], &[false]);
+        let r = t.finish();
+        assert_eq!(r.hub.counter("fleet.handoffs"), 1);
+        assert_eq!(r.hub.counter("fleet.handoff_bytes"), 245_760);
+        assert_eq!(r.events.len(), 4);
+        let hk = r.events[1].kind;
+        assert!(matches!(hk, TelemetryEventKind::Handoff { chip: 0, bytes: 245_760, .. }));
+        // Two spans in the Chrome doc: stage 0 on chip 0 (ticks 0..=3),
+        // stage 1 on chip 1 (ticks 4..=7).
+        let doc = r.to_chrome_json("unit").to_string();
+        let parsed = Json::parse(&doc).expect("valid chrome JSON");
+        let tev = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        let spans: Vec<&Json> = tev
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("s0#0"))
+            .collect();
+        assert_eq!(spans.len(), 2, "one span per pipeline stage");
+        assert_eq!(spans[0].get("tid").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(spans[1].get("tid").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(spans[0].get("dur").and_then(Json::as_f64), Some(4000.0));
+
+        // Digest code 11 distinguishes hand-offs from completions.
+        let mut w = Vec::new();
+        r.events[1].digest_words(&mut w);
+        assert_eq!(w[1], 11);
+        assert_eq!(w[4], 245_760, "chip 0 packs to zero high bits");
     }
 
     #[test]

@@ -37,6 +37,7 @@ mod profile;
 
 pub use profile::{BurstProfile, FrameCost, BURST_BUCKETS};
 
+use crate::obs::chrome;
 use crate::util::json::Json;
 
 /// Which frame schedule produced a trace.
@@ -350,15 +351,7 @@ impl ExecutionTrace {
         let us_per_cycle = if self.clock_hz > 0.0 { 1e6 / self.clock_hz } else { 0.0 };
         let mut events: Vec<Json> = Vec::with_capacity(self.phases.len() + Engine::ALL.len());
         for (tid, engine) in Engine::ALL.iter().enumerate() {
-            let mut meta = Json::obj();
-            let mut args = Json::obj();
-            args.set("name", Json::Str(engine.name().into()));
-            meta.set("ph", Json::Str("M".into()))
-                .set("pid", Json::Num(0.0))
-                .set("tid", Json::Num(tid as f64))
-                .set("name", Json::Str("thread_name".into()))
-                .set("args", args);
-            events.push(meta);
+            events.push(chrome::thread_meta(tid, engine.name()));
         }
         for p in &self.phases {
             let tid = Engine::ALL.iter().position(|&e| e == p.kind.engine()).expect("known engine");
@@ -371,15 +364,13 @@ impl ExecutionTrace {
             if let Some(g) = p.group {
                 args.set("group", Json::Num(g as f64));
             }
-            let mut ev = Json::obj();
-            ev.set("ph", Json::Str("X".into()))
-                .set("pid", Json::Num(0.0))
-                .set("tid", Json::Num(tid as f64))
-                .set("name", Json::Str(format!("{} {}", p.kind.name(), self.layer_names[p.layer])))
-                .set("ts", Json::Num(p.start_cycle as f64 * us_per_cycle))
-                .set("dur", Json::Num(p.cycles() as f64 * us_per_cycle))
-                .set("args", args);
-            events.push(ev);
+            events.push(chrome::span(
+                tid,
+                format!("{} {}", p.kind.name(), self.layer_names[p.layer]),
+                p.start_cycle as f64 * us_per_cycle,
+                p.cycles() as f64 * us_per_cycle,
+                args,
+            ));
         }
         let mut other = Json::obj();
         other
@@ -390,11 +381,7 @@ impl ExecutionTrace {
             .set("sram_bytes", Json::Num(self.sram_bytes() as f64))
             .set("macs", Json::Num(self.macs() as f64))
             .set("latency_ms", Json::Num(self.latency_ms()));
-        let mut doc = Json::obj();
-        doc.set("displayTimeUnit", Json::Str("ms".into()))
-            .set("otherData", other)
-            .set("traceEvents", Json::Arr(events));
-        doc
+        chrome::document(other, events)
     }
 }
 

@@ -128,6 +128,62 @@ impl TrafficModel {
         TrafficReport { per_layer, schedule: "group-fused".into() }
     }
 
+    /// DRAM bytes that cross a pipeline cut placed *before* group
+    /// `groups[cut]` — the inter-chip feature hand-off when groups
+    /// `0..cut` run on one chip and `cut..` on the next
+    /// ([`crate::plan::segment`]).
+    ///
+    /// The hand-off is an *attribution*, not new traffic: under the
+    /// fused schedule the downstream side already reads the boundary
+    /// map (the first downstream group's input) and every skip-edge
+    /// re-read whose source lies upstream of the cut — all of which
+    /// [`TrafficModel::fused`] charges to the destination layers. This
+    /// method sums exactly those charges, so pipeline hand-off bytes
+    /// are pinned byte-for-byte to the same accounting the bus
+    /// arbiter already prices (`tests/pipeline.rs`).
+    ///
+    /// # Panics
+    ///
+    /// Panics when `cut` is not an interior cut (`1..groups.len()`).
+    pub fn handoff_bytes(
+        &self,
+        net: &Network,
+        groups: &[FusionGroup],
+        cut: usize,
+        hw: (u32, u32),
+    ) -> u64 {
+        assert!(
+            cut > 0 && cut < groups.len(),
+            "cut {cut} is not interior to {} groups",
+            groups.len()
+        );
+        let shapes = net.shapes(hw);
+        let act = self.chip.precision.act_bytes;
+        let group_of = |i: usize| groups.iter().position(|g| g.contains(i)).unwrap_or(usize::MAX);
+
+        // The boundary map: the downstream side's first group input.
+        let first = groups[cut].start;
+        let mut total = shapes[first].in_px() * net.layers[first].c_in as u64 * act;
+
+        // Skip edges whose source group is upstream of the cut and whose
+        // destination group is downstream re-read the source map across
+        // the chip boundary (same per-edge bytes as `fused`).
+        for sp in &net.spans {
+            let bytes = match sp.kind {
+                SpanKind::Concat => {
+                    shapes[sp.start].out_px() * net.layers[sp.start].c_out as u64 * act
+                }
+                SpanKind::Residual => {
+                    shapes[sp.start].in_px() * net.layers[sp.start].c_in as u64 * act
+                }
+            };
+            if group_of(sp.start) < cut && group_of(sp.end) >= cut {
+                total += bytes;
+            }
+        }
+        total
+    }
+
     /// Traffic for one frame under both schedules (convenience).
     pub fn compare(
         &self,
@@ -219,6 +275,45 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn handoff_never_exceeds_fused_features() {
+        // Every byte the hand-off attributes to a cut is a read the
+        // fused schedule already charges downstream, so no cut can
+        // price more than the whole fused feature traffic.
+        let (net, groups) = rc_yolo();
+        let tm = TrafficModel::paper_chip();
+        let feat = tm.fused(&net, &groups, (720, 1280)).feat_bytes();
+        for cut in 1..groups.len() {
+            let h = tm.handoff_bytes(&net, &groups, cut, (720, 1280));
+            assert!(h > 0, "cut {cut} prices zero bytes");
+            assert!(h <= feat, "cut {cut}: handoff {h} > fused features {feat}");
+        }
+    }
+
+    #[test]
+    fn handoff_includes_cut_crossing_concat() {
+        // YOLOv2's passthrough concat crosses groups under the naive
+        // partition; a cut between its source and destination groups
+        // must price strictly more than the boundary map alone.
+        let net = yolov2(20, 5);
+        let groups = crate::fusion::naive_partition(&net, &FusionConfig::paper_default());
+        let tm = TrafficModel::paper_chip();
+        let hw = (416, 416);
+        let shapes = net.shapes(hw);
+        let act = tm.chip.precision.act_bytes;
+        let group_of = |i: usize| groups.iter().position(|g| g.contains(i)).unwrap();
+        let sp = net
+            .spans
+            .iter()
+            .find(|sp| group_of(sp.start) != group_of(sp.end))
+            .expect("naive partition has a cross-group span");
+        let cut = group_of(sp.end);
+        let boundary =
+            shapes[groups[cut].start].in_px() * net.layers[groups[cut].start].c_in as u64 * act;
+        let h = tm.handoff_bytes(&net, &groups, cut, hw);
+        assert!(h > boundary, "handoff {h} !> boundary map {boundary}");
     }
 
     #[test]

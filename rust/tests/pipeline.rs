@@ -1,0 +1,186 @@
+//! Multi-chip pipeline acceptance pins: the `pipeline-giant` preset
+//! admits the untileable DeepLabv3@1080p onto a two-chip datacenter
+//! pair and completes frames, byte-identical across engines, seeds and
+//! thread counts; every zoo model that admits a 2-way split prices its
+//! inter-chip hand-off byte-for-byte to [`TrafficModel::handoff_bytes`];
+//! single-chip placements leave the existing presets' reports
+//! structurally pipeline-free; and the typed [`FleetConfigBuilder`]
+//! reproduces the legacy constructors exactly while rejecting configs
+//! the engines would reject at run time.
+
+use rcnet_dla::config::ChipConfig;
+use rcnet_dla::fusion::FusionConfig;
+use rcnet_dla::model::zoo::{plan_fixtures, PAPER_RESOLUTIONS};
+use rcnet_dla::plan::{split_pipeline, Planner};
+use rcnet_dla::serve::prelude::*;
+use rcnet_dla::traffic::TrafficModel;
+
+/// The giant's frames take ~2 virtual seconds end to end across the two
+/// stages; 6 s completes several and keeps the companion stream busy.
+fn giant_cfg(seed: u64, threads: usize) -> FleetConfig {
+    FleetConfigBuilder::new(Scenario::preset("pipeline-giant").expect("bundled preset"))
+        .seconds(6.0)
+        .seed(seed)
+        .threads(threads)
+        .build()
+        .expect("valid config")
+}
+
+/// Every zoo model that admits a 2-way split prices the hand-off
+/// byte-for-byte to the analytic traffic model — the same accounting the
+/// fused schedule charges for cross-boundary reads.
+#[test]
+fn zoo_two_way_splits_pin_handoff_to_the_traffic_model() {
+    let chip = ChipConfig::paper_chip();
+    let tm = TrafficModel::new(chip);
+    let cfg = FusionConfig::paper_default();
+    let mut splits = 0usize;
+    for fx in plan_fixtures() {
+        let net = (fx.build)();
+        for &hw in &PAPER_RESOLUTIONS {
+            let groups = Planner::OptimalDp.plan(&net, &cfg, &chip, hw).groups;
+            let Some(plan) = split_pipeline(&net, &groups, hw, &chip, 2) else {
+                continue;
+            };
+            splits += 1;
+            assert_eq!(plan.stages.len(), 2, "{} at {hw:?}", fx.name);
+            assert_eq!(plan.stages[0].handoff_in_bytes, 0);
+            let cut = plan.stages[1].group_start;
+            assert_eq!(
+                plan.handoff_bytes,
+                tm.handoff_bytes(&net, &groups, cut, hw),
+                "{} at {hw:?}: hand-off bytes must match the traffic model",
+                fx.name
+            );
+            assert_eq!(plan.stages[1].handoff_in_bytes, plan.handoff_bytes);
+        }
+    }
+    assert!(splits >= 6, "every zoo model splits somewhere; saw only {splits}");
+}
+
+/// The headline acceptance pin: the untileable giant is admitted onto
+/// an ordered two-chip placement, completes frames end to end, and its
+/// per-frame hand-off bill in the report equals the split plan's price.
+#[test]
+fn pipeline_giant_serves_the_untileable_giant_end_to_end() {
+    let r = run_fleet(&giant_cfg(1, 1)).expect("pipeline-giant run");
+
+    let giant = &r.per_stream[0];
+    assert!(giant.admitted, "the giant is admitted via the 2-chip placement");
+    let p = giant.pipeline.as_ref().expect("the giant is pipeline-served");
+    assert_eq!(p.stages, 2);
+    assert_eq!(p.chips.len(), 2, "an ordered chip set of two stages");
+    assert_ne!(p.chips[0], p.chips[1], "stages land on distinct chips");
+    assert!(giant.completed() > 0, "the giant completes frames end to end");
+    assert!(
+        p.handoffs >= giant.completed(),
+        "every completed frame crossed the cut: {} hand-offs, {} completions",
+        p.handoffs,
+        giant.completed()
+    );
+
+    // The report's per-frame hand-off bill is the split plan's price,
+    // recomputed from scratch at the preset's own operating point.
+    let scenario = Scenario::preset("pipeline-giant").expect("bundled preset");
+    let chip = scenario.reference_chip();
+    let (net, fusion_cfg) = ModelId::Zoo("deeplabv3").build().expect("giant builds");
+    let groups = Planner::OptimalDp.plan(&net, &fusion_cfg, &chip, (1080, 1920)).groups;
+    let plan =
+        split_pipeline(&net, &groups, (1080, 1920), &chip, 2).expect("the giant 2-way splits");
+    assert_eq!(p.handoff_bytes_per_frame, plan.handoff_bytes);
+    assert!(plan.handoff_bytes > 0);
+
+    // The 416p companion rides a single chip, exactly as before.
+    let small = &r.per_stream[1];
+    assert!(small.admitted && small.pipeline.is_none());
+    assert!(small.completed() > 0, "the companion stream is served normally");
+
+    // Telemetry: hand-offs are counted and the stage spans carry the
+    // hand-off bytes in the Chrome export.
+    let tel = r.telemetry.as_ref().expect("telemetry on by default");
+    let handoffs: u64 =
+        r.per_stream.iter().filter_map(|s| s.pipeline.as_ref()).map(|q| q.handoffs).sum();
+    assert!(handoffs > 0);
+    assert_eq!(tel.hub.counter("fleet.handoffs"), handoffs);
+    assert_eq!(
+        tel.hub.counter("fleet.handoff_bytes"),
+        handoffs * p.handoff_bytes_per_frame
+    );
+    let doc = tel.to_chrome_json("pipeline-giant").to_string();
+    assert!(doc.contains("\"handoff_bytes\""), "stage spans carry the hand-off bytes");
+}
+
+/// Serial and parallel engines agree byte-for-byte on the pipeline
+/// preset across seeds and thread counts — with frames actually
+/// completing (the 2 s all-preset matrix in `scenario_fleet.rs` is too
+/// short for the giant to finish).
+#[test]
+fn pipeline_giant_is_byte_identical_across_seeds_and_thread_counts() {
+    for seed in [1u64, 7] {
+        let serial = run_fleet(&giant_cfg(seed, 1)).expect("serial run");
+        assert!(serial.completed() > 0, "seed {seed}: frames complete");
+        for threads in [2usize, 3, 8] {
+            let parallel = run_fleet(&giant_cfg(seed, threads)).expect("parallel run");
+            assert_eq!(
+                serial.stats_digest(),
+                parallel.stats_digest(),
+                "stats digest diverged: seed {seed}, {threads} threads"
+            );
+            assert_eq!(
+                serial.to_json().to_string(),
+                parallel.to_json().to_string(),
+                "json document diverged: seed {seed}, {threads} threads"
+            );
+        }
+    }
+}
+
+/// Single-chip placements leave the pre-pipeline presets untouched:
+/// no stream carries a pipeline record, the report JSON has no
+/// `pipeline` key, and the hand-off counters stay unregistered (the
+/// lazy-registration pin that keeps their stats digests at the
+/// pre-pipeline values).
+#[test]
+fn single_chip_presets_stay_pipeline_free() {
+    for &name in PRESET_NAMES.iter().filter(|&&n| n != "pipeline-giant") {
+        let cfg = FleetConfigBuilder::new(Scenario::preset(name).expect("bundled preset"))
+            .seconds(1.0)
+            .build()
+            .expect("valid config");
+        let r = run_fleet(&cfg).expect("preset run");
+        for s in &r.per_stream {
+            assert!(s.pipeline.is_none(), "{name}: single-chip streams carry no pipeline");
+        }
+        let doc = r.to_json().to_string();
+        assert!(!doc.contains("\"pipeline\""), "{name}: report JSON stays pipeline-free");
+        let tel = r.telemetry.as_ref().expect("telemetry on by default");
+        assert_eq!(tel.hub.counter("fleet.handoffs"), 0);
+        assert!(
+            tel.hub.iter().all(|(n, _)| !n.contains("handoff")),
+            "{name}: hand-off counters register lazily, never on single-chip runs"
+        );
+    }
+}
+
+/// The typed builder is the one construction path: the legacy
+/// constructors reproduce it field-for-field, and `build()` rejects
+/// everything `run_fleet` would reject.
+#[test]
+fn builder_matches_legacy_constructors_and_validates() {
+    let s = Scenario::preset("steady-hd").expect("bundled preset");
+    assert_eq!(
+        FleetConfig::new(s.clone()),
+        FleetConfigBuilder::new(s.clone()).build().expect("defaults validate")
+    );
+    assert_eq!(
+        FleetConfig::sampled(8, 4, 9),
+        FleetConfigBuilder::new(Scenario::sampled(8, 4, 9))
+            .seed(9)
+            .build()
+            .expect("sampled validates")
+    );
+    assert!(FleetConfigBuilder::new(s.clone()).seconds(0.0).build().is_err());
+    assert!(FleetConfigBuilder::new(s.clone()).tick_ms(f64::NAN).build().is_err());
+    assert!(FleetConfigBuilder::new(s.clone()).queue_depth(0).build().is_err());
+    assert!(FleetConfigBuilder::new(s).bus_mbps(-1.0).build().is_err());
+}
