@@ -2,12 +2,24 @@
 //! (the paper's 585 MB/s HD30 figure). Admission is disabled so the
 //! sweep shows the raw bandwidth wall: as streams grow past what the bus
 //! carries, p99 climbs toward the deadline and shed/miss rates take over.
+//!
+//! A second sweep scales the *scripted population* instead of the load:
+//! 1k / 10k / 100k streams replayed by the per-tick engine and by the
+//! discrete-event engine ([`rcnet_dla::serve::event`]). Both must land
+//! on the same stats digest (the byte-identity contract); the point of
+//! the table is the wall-clock ratio, which grows with population
+//! because the tick engine scans every scripted stream every tick while
+//! the wheel touches only the due ones.
 
 #[path = "common.rs"]
 mod common;
 
+use std::time::Instant;
+
 use rcnet_dla::report::tables::TableBuilder;
-use rcnet_dla::serve::{run_fleet, AdmissionPolicy, FleetConfig};
+use rcnet_dla::serve::{
+    run_fleet, AdmissionPolicy, Engine, FleetConfig, Scenario, TelemetryConfig,
+};
 
 fn cfg(streams: usize) -> FleetConfig {
     FleetConfig {
@@ -48,4 +60,62 @@ fn main() {
     common::time_it("64-stream, 3 s fleet simulation", 3, || {
         let _ = run_fleet(&cfg(64));
     });
+
+    // Population scaling: tick vs event engine at 1k / 10k sampled
+    // streams and the 100k+ metro preset, telemetry off so the table
+    // times the bare engines. Spans shrink as the population grows to
+    // keep the tick reference affordable; the digest assert holds the
+    // identity contract on every point.
+    let mut t = TableBuilder::new("event-wheel scaling — tick vs event engine, digest-identical")
+        .header(&["point", "streams", "sec", "released", "tick (s)", "event (s)", "speedup"]);
+    let points: Vec<(String, FleetConfig)> = vec![
+        (
+            "sampled-1k".into(),
+            FleetConfig {
+                seconds: 1.0,
+                telemetry: TelemetryConfig::off(),
+                ..FleetConfig::sampled(1_000, 16, 1)
+            },
+        ),
+        (
+            "sampled-10k".into(),
+            FleetConfig {
+                seconds: 1.0,
+                telemetry: TelemetryConfig::off(),
+                ..FleetConfig::sampled(10_000, 64, 1)
+            },
+        ),
+        (
+            "metro-100k".into(),
+            FleetConfig {
+                seconds: 0.5,
+                telemetry: TelemetryConfig::off(),
+                ..FleetConfig::new(Scenario::preset("metro").expect("metro preset"))
+            },
+        ),
+    ];
+    for (name, base) in points {
+        let t0 = Instant::now();
+        let tick = run_fleet(&base).expect("tick run");
+        let tick_s = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let event =
+            run_fleet(&FleetConfig { engine: Engine::Event, ..base.clone() }).expect("event run");
+        let event_s = t1.elapsed().as_secs_f64();
+        assert_eq!(
+            tick.stats_digest(),
+            event.stats_digest(),
+            "{name}: event engine diverged from the tick oracle"
+        );
+        t.row(vec![
+            name,
+            format!("{}", base.scenario.streams.len()),
+            format!("{:.1}", base.seconds),
+            format!("{}", tick.released()),
+            format!("{tick_s:.2}"),
+            format!("{event_s:.2}"),
+            format!("x{:.1}", tick_s / event_s.max(1e-9)),
+        ]);
+    }
+    println!("{}", t.render());
 }

@@ -8,12 +8,15 @@
 //! scenario presets (churn, multi-model, heterogeneous pools), the
 //! fault-and-degradation presets (autoscaling, QoS downshift, chip
 //! failures), the telemetry hub on-vs-off overhead, and the multi-chip
-//! pipeline path (the `pipeline-giant` preset plus split planning) —
-//! and emits one JSON report per family (`BENCH_fleet.json`,
+//! pipeline path (the `pipeline-giant` preset plus split planning),
+//! and the metro-scale discrete-event engine point (the 112k-stream
+//! `metro` preset, event engine only after a both-engine identity
+//! slice) — and emits one JSON report per family (`BENCH_fleet.json`,
 //! `BENCH_planner.json`, `BENCH_trace.json`,
 //! `BENCH_serve_scenario.json`, `BENCH_fault.json`,
-//! `BENCH_telemetry.json`, `BENCH_pipeline.json`) that CI uploads and
-//! gates against the committed baselines at the repository root.
+//! `BENCH_telemetry.json`, `BENCH_pipeline.json`, `BENCH_metro.json`)
+//! that CI uploads and gates against the committed baselines at the
+//! repository root.
 //!
 //! Every measurement separates two kinds of numbers:
 //!
@@ -37,7 +40,7 @@ mod workloads;
 
 pub use compare::{compare_reports, CompareOutcome, Regression};
 pub use workloads::{
-    fault_report, fleet_report, pipeline_report, planner_report, scenario_report,
+    fault_report, fleet_report, metro_report, pipeline_report, planner_report, scenario_report,
     telemetry_report, trace_report, BenchProfile,
 };
 

@@ -44,6 +44,13 @@
 //!   on both engines, digest-cross-checked, with the inter-stage
 //!   hand-off bill reported, plus the 2-way split-planning cost
 //!   ([`crate::plan::split_pipeline`]).
+//! * **metro** ([`metro_report`]) — the 112k-stream `metro` preset on
+//!   the discrete-event engine ([`crate::serve::Engine::Event`]): a
+//!   short identity slice first runs on *both* engines and
+//!   digest-cross-checks (the identity oracle at metro scale), then
+//!   the full span runs event-only — a per-tick engine pays
+//!   O(scripted streams) every tick and would blow the quick gate by
+//!   orders of magnitude — pinning the engine's events/sec.
 //!
 //! Workload ids never encode anything machine-dependent (the resolved
 //!   `auto` worker count is recorded as an `info` metric instead), so
@@ -57,7 +64,7 @@ use crate::model::zoo::{plan_fixtures, yolov2_converted, PAPER_RESOLUTIONS};
 use crate::plan::{split_pipeline, PlanCache, Planner};
 use crate::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
 use crate::serve::{
-    resolve_threads, AdmissionPolicy, FleetConfig, FleetReport, FleetSim, Scenario,
+    resolve_threads, AdmissionPolicy, Engine, FleetConfig, FleetReport, FleetSim, Scenario,
     TelemetryConfig, PRESET_NAMES,
 };
 use crate::util::fnv1a;
@@ -173,6 +180,15 @@ impl BenchProfile {
             // completes at least one frame even under the quick gate.
             BenchProfile::Quick => 3.0,
             BenchProfile::Full => 6.0,
+        }
+    }
+
+    fn metro_seconds(self) -> f64 {
+        match self {
+            // Enough span that churn turns over the admitted set a few
+            // times; full covers most of the 4.5 s arrival ramp.
+            BenchProfile::Quick => 1.5,
+            BenchProfile::Full => 4.0,
         }
     }
 }
@@ -873,6 +889,103 @@ pub fn pipeline_report(profile: BenchProfile) -> Result<BenchReport> {
     Ok(rep)
 }
 
+/// Run the metro workload family (see the module docs).
+pub fn metro_report(profile: BenchProfile) -> Result<BenchReport> {
+    let mut rep = BenchReport::new("metro", profile == BenchProfile::Quick);
+    // Hub off like every engine-throughput family; metro-scale
+    // telemetry identity is CI's telemetry-determinism loop.
+    let base = FleetConfig {
+        threads: 1,
+        telemetry: TelemetryConfig::off(),
+        ..FleetConfig::new(Scenario::preset("metro")?)
+    };
+
+    // Identity slice: a span short enough that the per-tick serial
+    // engine's O(scripted streams)-per-tick scan still finishes, run on
+    // both engines. The digests must agree — every metro bench run
+    // re-proves the identity oracle at full scenario scale.
+    let mini_seconds = 0.25;
+    let mini_tick = FleetConfig { seconds: mini_seconds, ..base.clone() };
+    let mini_event = FleetConfig { engine: Engine::Event, ..mini_tick.clone() };
+    let sim = FleetSim::new(&mini_tick)?;
+    let (tick_rep, tick_wall_ms) = time_ms(|| {
+        let mut s = sim;
+        s.run()
+    });
+    let esim = FleetSim::new(&mini_event)?;
+    let (event_rep, event_wall_ms) = time_ms(|| esim.run_event());
+    if tick_rep.stats_digest() != event_rep.stats_digest() {
+        crate::bail!("event engine diverged from serial on the metro identity slice");
+    }
+    let mini_point = format!("scenario=metro/sec={mini_seconds}");
+    let mini_fingerprint = fingerprint_hex([
+        fnv1a("metro".bytes().map(u64::from)),
+        mini_seconds.to_bits(),
+        tick_rep.stats_digest(),
+    ]);
+    for (engine, wall_ms, r) in
+        [("tick", tick_wall_ms, &tick_rep), ("event", event_wall_ms, &event_rep)]
+    {
+        let mut metrics = fleet_metrics(r, mini_seconds);
+        if engine == "event" {
+            // Context only (machine-dependent quotient): the gated
+            // channel for engine performance is each row's own wall_ms.
+            metrics.push(Metric {
+                name: "speedup_vs_tick".into(),
+                value: tick_wall_ms / event_wall_ms.max(1e-9),
+                better: Direction::Info,
+            });
+        }
+        rep.measurements.push(Measurement {
+            id: format!("metro-identity/{mini_point}/engine={engine}"),
+            wall_ms,
+            fingerprint: mini_fingerprint.clone(),
+            metrics,
+        });
+    }
+
+    // The full span, event engine only: the headline metro point.
+    let seconds = profile.metro_seconds();
+    let full = FleetConfig { seconds, engine: Engine::Event, ..base };
+    let (sim, setup_ms) = time_ms(|| FleetSim::new(&full));
+    let sim = sim?;
+    let (r, wall_ms) = time_ms(|| sim.run_event());
+    // The engine's unit of work: every release and every completion it
+    // processed (deterministic); events/sec divides by this machine's
+    // wall time and is context, like every wall-derived quotient.
+    let events = r.released() + r.completed();
+    let point = format!("scenario=metro/sec={seconds}");
+    let mut metrics = fleet_metrics(&r, seconds);
+    metrics.push(Metric { name: "events".into(), value: events as f64, better: Direction::Info });
+    metrics.push(Metric {
+        name: "events_per_s".into(),
+        value: events as f64 / (wall_ms.max(1e-9) / 1e3),
+        better: Direction::Info,
+    });
+    metrics.push(Metric {
+        name: "streams_scripted".into(),
+        value: r.per_stream.len() as f64,
+        better: Direction::Info,
+    });
+    rep.measurements.push(Measurement {
+        id: format!("metro/{point}/engine=event"),
+        wall_ms,
+        fingerprint: fingerprint_hex([
+            fnv1a("metro".bytes().map(u64::from)),
+            seconds.to_bits(),
+            r.stats_digest(),
+        ]),
+        metrics,
+    });
+    rep.measurements.push(Measurement {
+        id: format!("metro-setup/{point}/engine=event"),
+        wall_ms: setup_ms,
+        fingerprint: String::new(),
+        metrics: Vec::new(),
+    });
+    Ok(rep)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -889,6 +1002,7 @@ mod tests {
         assert!(BenchProfile::Quick.scenario_names().contains(&"rush-hour"));
         assert!(BenchProfile::Quick.scenario_names().contains(&"mixed-zoo"));
         assert_eq!(BenchProfile::Full.scenario_names(), &PRESET_NAMES[..]);
+        assert!(BenchProfile::Quick.metro_seconds() < BenchProfile::Full.metro_seconds());
         for n in BenchProfile::Full.scenario_names() {
             assert!(Scenario::preset(n).is_ok(), "profiled preset {n} must build");
         }

@@ -73,7 +73,12 @@
 //! statistics window over each stream's actual lifetime. Deterministic
 //! from the config — virtual time only. Setting `threads: 0` shards the
 //! engine across one worker per core ([`serve::parallel`]) with
-//! byte-identical output, churn included. The timeline also scripts
+//! byte-identical output, churn included; selecting
+//! [`serve::Engine::Event`] instead replays the run on the
+//! discrete-event engine ([`serve::event`]) — frame releases on a
+//! hierarchical event wheel, provably-inert tick spans jumped in one
+//! step, still byte-identical — built for metro-scale scenarios like
+//! the 112k-stream `metro` preset. The timeline also scripts
 //! chip faults ([`serve::FaultEvent`]: outages, DRAM-link throttles,
 //! thermal derates) that both engines replay at event boundaries —
 //! in-flight frames are requeued, never dropped — while the
@@ -105,7 +110,8 @@
 //! use rcnet_dla::serve::prelude::*;
 //!
 //! // Bundled presets: steady-hd, rush-hour, mixed-zoo, hetero-pool,
-//! // diurnal-load, flash-crowd, chip-failure, pipeline-giant.
+//! // diurnal-load, flash-crowd, chip-failure, pipeline-giant — plus
+//! // the metro-scale `metro` stress preset (see docs/EVENT_ENGINE.md).
 //! let cfg = FleetConfigBuilder::new(Scenario::preset("rush-hour").unwrap())
 //!     .threads(0)
 //!     .build()
@@ -130,7 +136,8 @@
 //! gated performance workloads: `rcnet-dla bench --quick` emits
 //! `BENCH_fleet.json` / `BENCH_planner.json` / `BENCH_trace.json` /
 //! `BENCH_serve_scenario.json` / `BENCH_fault.json` /
-//! `BENCH_telemetry.json` / `BENCH_pipeline.json`, and `bench --against` exits nonzero
+//! `BENCH_telemetry.json` / `BENCH_pipeline.json` / `BENCH_metro.json`,
+//! and `bench --against` exits nonzero
 //! when a gated value regresses past tolerance (the CI perf-smoke job).
 //! See `docs/BENCHMARKS.md`.
 

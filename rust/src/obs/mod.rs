@@ -80,6 +80,20 @@ impl Histogram {
         self.max = self.max.max(v);
     }
 
+    /// Record the same sample `n` times — exactly equivalent to calling
+    /// [`Histogram::record`] `n` times (integer state throughout), which
+    /// is what lets the event-driven fleet engine fold an idle span into
+    /// one call without perturbing the digest.
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.counts[bucket_of(v)] += n;
+        self.count += n;
+        self.sum = self.sum.saturating_add(v.saturating_mul(n));
+        self.max = self.max.max(v);
+    }
+
     /// Total samples recorded.
     pub fn count(&self) -> u64 {
         self.count
@@ -187,6 +201,22 @@ impl MetricsHub {
             _ => {
                 let mut h = Histogram::new();
                 h.record(v);
+                self.metrics.insert(name.to_string(), MetricValue::Histogram(h));
+            }
+        }
+    }
+
+    /// Record `v` into the histogram `name` `n` times — equivalent to
+    /// `n` [`MetricsHub::observe`] calls (see [`Histogram::record_n`]).
+    pub fn observe_n(&mut self, name: &str, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        match self.metrics.get_mut(name) {
+            Some(MetricValue::Histogram(h)) => h.record_n(v, n),
+            _ => {
+                let mut h = Histogram::new();
+                h.record_n(v, n);
                 self.metrics.insert(name.to_string(), MetricValue::Histogram(h));
             }
         }
@@ -305,6 +335,28 @@ mod tests {
         assert_eq!(h.bucket_counts()[1], 2);
         assert_eq!(h.bucket_counts()[2], 1);
         assert_eq!(h.bucket_counts()[bucket_of(1000)], 1);
+    }
+
+    #[test]
+    fn record_n_equals_n_records() {
+        let mut one = Histogram::new();
+        let mut batch = Histogram::new();
+        for v in [0u64, 0, 0, 7, 7, 1024] {
+            one.record(v);
+        }
+        batch.record_n(0, 3);
+        batch.record_n(7, 2);
+        batch.record_n(1024, 1);
+        batch.record_n(99, 0); // n = 0 is a no-op
+        assert_eq!(one, batch);
+
+        let mut a = MetricsHub::new();
+        let mut b = MetricsHub::new();
+        for _ in 0..5 {
+            a.observe("h", 0);
+        }
+        b.observe_n("h", 0, 5);
+        assert_eq!(a.digest_words(), b.digest_words());
     }
 
     #[test]

@@ -13,8 +13,9 @@
 //! * `fleet`      — scenario-driven fleet serving over a chip pool with
 //!   a shared DRAM-bus budget (deterministic from its config;
 //!   `--scenario` picks a bundled preset — churn, multi-model,
-//!   heterogeneous pool — `--threads` selects the serial or
-//!   sharded-parallel engine, `--json` emits the deterministic report
+//!   heterogeneous pool, the metro-scale `metro` — `--threads` selects
+//!   the serial or sharded-parallel tick engine, `--engine event` the
+//!   discrete-event engine, `--json` emits the deterministic report
 //!   document CI byte-diffs, `--telemetry PATH` writes the run's
 //!   fleet-level Chrome trace + windowed series + incidents, and
 //!   `--no-telemetry` skips the hub entirely)
@@ -24,8 +25,8 @@
 //!   ([`crate::bench`]): emits `BENCH_fleet.json` / `BENCH_planner.json`
 //!   / `BENCH_trace.json` / `BENCH_serve_scenario.json` /
 //!   `BENCH_fault.json` / `BENCH_telemetry.json` /
-//!   `BENCH_pipeline.json` and optionally gates against a baseline
-//!   (nonzero exit on regression)
+//!   `BENCH_pipeline.json` / `BENCH_metro.json` and optionally gates
+//!   against a baseline (nonzero exit on regression)
 //! * `serve`      — run the detection pipeline on synthetic frames
 //!   (requires `make artifacts` and the `pjrt` feature)
 
@@ -36,7 +37,9 @@ use crate::config::ChipConfig;
 use crate::dla::{simulate_fused, simulate_layer_by_layer, trace_fused, trace_layer_by_layer};
 use crate::energy::dram_energy_mj;
 use crate::report::spec::{build_deployment_spec, spec_to_network, PipelineProfile};
-use crate::serve::{run_fleet, AdmissionPolicy, FleetConfigBuilder, Scenario, TelemetryConfig};
+use crate::serve::{
+    run_fleet, AdmissionPolicy, Engine, FleetConfigBuilder, Scenario, TelemetryConfig,
+};
 use crate::traffic::TrafficModel;
 use crate::util::json::Json;
 use crate::Result;
@@ -84,11 +87,12 @@ USAGE:
   rcnet-dla trace     [--res 416|hd|fullhd|ivs] [--spec PATH]
                       [--schedule fused|layer-by-layer] [--out PATH]
   rcnet-dla fleet     [--scenario steady-hd|rush-hour|mixed-zoo|hetero-pool|
-                       diurnal-load|flash-crowd|chip-failure|pipeline-giant]
+                       diurnal-load|flash-crowd|chip-failure|pipeline-giant|
+                       metro]
                       [--streams N] [--chips N] [--bus-mbps MB] [--seconds S]
                       [--seed K] [--oversub F | --admit-all]
                       [--planner greedy|optimal-dp] [--threads N]
-                      [--json] [--out PATH]
+                      [--engine tick|event] [--json] [--out PATH]
                       [--telemetry PATH | --no-telemetry] [--window-ms W]
   rcnet-dla obs       [--scenario steady-hd|rush-hour|mixed-zoo|hetero-pool|
                        diurnal-load|flash-crowd|chip-failure|pipeline-giant]
@@ -108,6 +112,10 @@ degradation under load — see docs/SCENARIOS.md); without it a seeded
 uniform workload of --streams on --chips paper chips runs.
 `fleet --threads`: 1 = serial reference engine (default), 0 = one worker
 per core, N = N workers; output is byte-identical across engines.
+`fleet --engine`: tick (default) replays every tick; event runs the
+discrete-event engine — same report, byte for byte, but metro-scale
+scenarios (100k+ scripted streams) finish in tolerable time. The event
+engine is single-threaded, so --engine event ignores --threads.
 `fleet --json` prints the deterministic report document (stats digest
 included) to stdout or --out (--out implies --json); CI byte-diffs two
 such runs. Preset scenarios fix their own pool, so --scenario rejects
@@ -426,6 +434,11 @@ fn fleet(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(v) = flags.get("threads").and_then(|s| s.parse().ok()) {
         b = b.threads(v);
     }
+    if let Some(s) = flags.get("engine") {
+        let engine = Engine::parse(s)
+            .ok_or_else(|| crate::err!("unknown --engine {s} (tick|event)"))?;
+        b = b.engine(engine);
+    }
     if flags.contains_key("admit-all") {
         b = b.admission(AdmissionPolicy::AdmitAll);
     } else if let Some(oversub) = flags.get("oversub").and_then(|s| s.parse().ok()) {
@@ -558,8 +571,8 @@ fn load_baseline(against: &str, kind: &str) -> Result<Option<crate::bench::Bench
 
 fn bench(flags: &HashMap<String, String>) -> Result<()> {
     use crate::bench::{
-        compare_reports, fault_report, fleet_report, pipeline_report, planner_report,
-        scenario_report, telemetry_report, trace_report, BenchProfile,
+        compare_reports, fault_report, fleet_report, metro_report, pipeline_report,
+        planner_report, scenario_report, telemetry_report, trace_report, BenchProfile,
     };
 
     let profile =
@@ -582,13 +595,15 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     let telemetry = telemetry_report(profile)?;
     eprintln!("bench: running the {} pipeline workloads...", profile.name());
     let pipeline = pipeline_report(profile)?;
+    eprintln!("bench: running the {} metro workloads...", profile.name());
+    let metro = metro_report(profile)?;
 
     let mut t = crate::report::tables::TableBuilder::new(&format!(
         "bench ({} profile) — wall times; deterministic metrics in the JSON",
         profile.name()
     ))
     .header(&["workload", "wall (ms)"]);
-    for rep in [&fleet, &planner, &trace, &scenario, &fault, &telemetry, &pipeline] {
+    for rep in [&fleet, &planner, &trace, &scenario, &fault, &telemetry, &pipeline, &metro] {
         for m in &rep.measurements {
             t.row(vec![m.id.clone(), format!("{:.3}", m.wall_ms)]);
         }
@@ -603,7 +618,7 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     let mut broken_baselines = Vec::new();
     let mut matched_baselines = 0usize;
     if let Some(against) = flags.get("against") {
-        for rep in [&fleet, &planner, &trace, &scenario, &fault, &telemetry, &pipeline] {
+        for rep in [&fleet, &planner, &trace, &scenario, &fault, &telemetry, &pipeline, &metro] {
             match load_baseline(against, &rep.kind) {
                 Ok(Some(base)) => {
                     matched_baselines += 1;
@@ -632,15 +647,17 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     fault.write(&out_dir.join("BENCH_fault.json"))?;
     telemetry.write(&out_dir.join("BENCH_telemetry.json"))?;
     pipeline.write(&out_dir.join("BENCH_pipeline.json"))?;
+    metro.write(&out_dir.join("BENCH_metro.json"))?;
     eprintln!(
-        "bench: wrote {}, {}, {}, {}, {}, {} and {}",
+        "bench: wrote {}, {}, {}, {}, {}, {}, {} and {}",
         out_dir.join("BENCH_fleet.json").display(),
         out_dir.join("BENCH_planner.json").display(),
         out_dir.join("BENCH_trace.json").display(),
         out_dir.join("BENCH_serve_scenario.json").display(),
         out_dir.join("BENCH_fault.json").display(),
         out_dir.join("BENCH_telemetry.json").display(),
-        out_dir.join("BENCH_pipeline.json").display()
+        out_dir.join("BENCH_pipeline.json").display(),
+        out_dir.join("BENCH_metro.json").display()
     );
 
     if !broken_baselines.is_empty() {

@@ -23,6 +23,10 @@ pub struct BusArbiter {
     offered_ticks: u64,
     peak_demand_bytes: f64,
     saturated_ticks: u64,
+    /// Water-filling scratch (requester index lists), reused across
+    /// ticks so steady-state arbitration allocates nothing.
+    hungry: Vec<usize>,
+    still_hungry: Vec<usize>,
 }
 
 impl BusArbiter {
@@ -34,6 +38,8 @@ impl BusArbiter {
             offered_ticks: 0,
             peak_demand_bytes: 0.0,
             saturated_ticks: 0,
+            hungry: Vec::new(),
+            still_hungry: Vec::new(),
         }
     }
 
@@ -41,15 +47,28 @@ impl BusArbiter {
     /// requester) by equal-share water-filling. Returns the per-requester
     /// grants; their sum never exceeds the budget.
     pub fn arbitrate(&mut self, demands: &[f64]) -> Vec<f64> {
+        let mut grant = Vec::new();
+        self.arbitrate_into(demands, &mut grant);
+        grant
+    }
+
+    /// [`BusArbiter::arbitrate`] into a caller-owned grant buffer — the
+    /// same f64 operation sequence, with the output (and the internal
+    /// index lists) reusing capacity across ticks.
+    pub fn arbitrate_into(&mut self, demands: &[f64], grant: &mut Vec<f64>) {
         self.offered_ticks += 1;
         let offered: f64 = demands.iter().sum();
         self.peak_demand_bytes = self.peak_demand_bytes.max(offered);
         if offered > self.budget_bytes_per_tick + 1e-9 {
             self.saturated_ticks += 1;
         }
-        let mut grant = vec![0.0; demands.len()];
+        grant.clear();
+        grant.resize(demands.len(), 0.0);
         let mut remaining = self.budget_bytes_per_tick;
-        let mut hungry: Vec<usize> = (0..demands.len()).filter(|&i| demands[i] > 0.0).collect();
+        let mut hungry = std::mem::take(&mut self.hungry);
+        let mut still_hungry = std::mem::take(&mut self.still_hungry);
+        hungry.clear();
+        hungry.extend((0..demands.len()).filter(|&i| demands[i] > 0.0));
         // Each pass either exhausts the budget or fully satisfies at
         // least one requester, so `len + 1` passes always suffice.
         for _ in 0..=demands.len() {
@@ -57,7 +76,7 @@ impl BusArbiter {
                 break;
             }
             let share = remaining / hungry.len() as f64;
-            let mut still_hungry = Vec::with_capacity(hungry.len());
+            still_hungry.clear();
             for &i in &hungry {
                 let want = demands[i] - grant[i];
                 let g = want.min(share);
@@ -67,10 +86,21 @@ impl BusArbiter {
                     still_hungry.push(i);
                 }
             }
-            hungry = still_hungry;
+            std::mem::swap(&mut hungry, &mut still_hungry);
         }
         self.granted_bytes += grant.iter().sum::<f64>();
-        grant
+        self.hungry = hungry;
+        self.still_hungry = still_hungry;
+    }
+
+    /// Account `n` all-idle ticks in one step. Exactly equivalent to `n`
+    /// [`BusArbiter::arbitrate`] calls with all-zero demands: those only
+    /// bump the offered-tick count (zero offered bytes never raise the
+    /// peak, trip the saturation predicate, or change the granted-byte
+    /// sum), which is what lets the event engine jump idle spans without
+    /// perturbing utilization, saturation or peak-demand accounting.
+    pub fn idle_ticks(&mut self, n: u64) {
+        self.offered_ticks += n;
     }
 
     /// Fraction of the offered bus capacity actually granted so far.
@@ -168,6 +198,40 @@ mod tests {
         a.arbitrate(&[1000.0]); // exactly the budget: not saturated
         assert!((a.saturation() - 1.0 / 3.0).abs() < 1e-9);
         assert!((a.peak_demand_ratio() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_ticks_match_zero_demand_arbitration() {
+        let mut stepped = arb();
+        let mut jumped = arb();
+        stepped.arbitrate(&[400.0, 900.0]);
+        jumped.arbitrate(&[400.0, 900.0]);
+        for _ in 0..7 {
+            stepped.arbitrate(&[0.0, 0.0]);
+        }
+        jumped.idle_ticks(7);
+        stepped.arbitrate(&[800.0, 700.0]);
+        jumped.arbitrate(&[800.0, 700.0]);
+        assert_eq!(stepped.utilization().to_bits(), jumped.utilization().to_bits());
+        assert_eq!(stepped.saturation().to_bits(), jumped.saturation().to_bits());
+        assert_eq!(stepped.peak_demand_ratio().to_bits(), jumped.peak_demand_ratio().to_bits());
+    }
+
+    #[test]
+    fn arbitrate_into_reuses_the_grant_buffer() {
+        let mut a = arb();
+        let mut b = arb();
+        let mut grant = Vec::new();
+        for round in 0..4 {
+            let demands = [200.0 * round as f64, 900.0, 50.0];
+            a.arbitrate_into(&demands, &mut grant);
+            let fresh = b.arbitrate(&demands);
+            assert_eq!(grant.len(), fresh.len());
+            for (x, y) in grant.iter().zip(&fresh) {
+                assert_eq!(x.to_bits(), y.to_bits(), "round {round}");
+            }
+        }
+        assert_eq!(a.utilization().to_bits(), b.utilization().to_bits());
     }
 
     #[test]

@@ -1,0 +1,621 @@
+//! The discrete-event fleet engine.
+//!
+//! The serial reference engine ([`super::scheduler::FleetSim::run`])
+//! polls: every virtual tick it scans *every* scripted stream for due
+//! releases and replays the full phase sequence, busy or not. At
+//! metro scale — hundreds of thousands of scripted streams, most of
+//! them refused at admission — that scan is almost entirely wasted
+//! work: a 5 s span at 1 ms ticks over 100k streams is half a billion
+//! release probes for a few hundred thousand actual releases.
+//!
+//! This engine inverts the loop around *events*:
+//!
+//! * **Frame releases** live on a hierarchical event wheel
+//!   ([`ReleaseWheel`]): a 256-slot ring of single-tick buckets over
+//!   the near window plus a `BTreeMap` calendar for everything beyond
+//!   it. Each stream keeps at most one entry — the tick of its next
+//!   release — so a hot tick touches only the streams actually due,
+//!   and a stream that is refused admission (or departs) drops off the
+//!   wheel for good the first time its entry fires while it is
+//!   inactive.
+//! * **Everything else due at a tick boundary** — scenario
+//!   arrivals/departures, scripted fault transitions, QoS window
+//!   edges, telemetry window edges — is looked ahead from the state
+//!   the engines already keep sorted, so the next interesting tick is
+//!   a five-way `min`, not a scan.
+//!
+//! ## Idle-span jumping and its lookahead bound
+//!
+//! After a hot tick the engine asks whether the *next* tick can do
+//! anything: frames queued centrally, any chip busy (an in-flight
+//! frame or a non-empty dispatch queue), or an adaptive decision
+//! pending. If so, the next tick is executed in full — a busy tick is
+//! **replayed, never summarized**, because completion times depend on
+//! the bus arbiter's per-tick water-filling (each chip's demand capped
+//! by its own DRAM link each tick); predicting them in closed form
+//! would re-associate the f64 arithmetic and break byte identity. The
+//! per-chip link cap is therefore the engine's lookahead bound: jumps
+//! only ever cross spans where *nothing* is in flight.
+//!
+//! Across such provably-inert spans the engine advances in one step
+//! using batch primitives that are exactly equivalent to `n` idle
+//! per-tick calls: [`super::arbiter::BusArbiter::idle_ticks`] (offered
+//! ticks only), [`super::qos::QosController::advance_idle`] (window
+//! position only, never across a boundary) and
+//! [`super::telemetry::Telemetry::idle_ticks`] (batched counters,
+//! never across a window edge). Window-edge ticks are always jump
+//! *targets*, so a rollover is always executed, never folded.
+//!
+//! ## The identity contract
+//!
+//! For one [`super::FleetConfig`] this engine's [`FleetReport`] — and
+//! its telemetry document, down to the Chrome-trace export — is
+//! **byte-identical** to the serial reference engine's (pinned across
+//! every preset and multiple seeds by `tests/event_fleet.rs`). The
+//! argument mirrors [`super::parallel`]'s:
+//!
+//! * The wheel fires releases in ascending (tick, stream id) order —
+//!   the serial phase-2 scan's order — and [`tick_for`] reproduces the
+//!   serial `at_ms <= now_ms` firing boundary exactly.
+//! * The ready queue is a binary heap over the same *total* orders
+//!   (`edf_order` / `shed_order`, unique `(stream, seq)` tie-break)
+//!   the serial linear scan minimizes, so both select identical frame
+//!   sequences from identical multisets.
+//! * Hot ticks drive the *same* [`super::fleet::ChipWorker`]s, the
+//!   same [`super::arbiter::BusArbiter`] and the same admission /
+//!   adaptive / telemetry state through the serial phase order — no
+//!   mirrored or re-derived state anywhere.
+//! * Idle jumps only replace per-tick calls whose effects are provably
+//!   independent of being batched (see the primitives above).
+//!
+//! The engine is selected with
+//! [`super::FleetConfigBuilder::engine`]`(`[`Engine::Event`](super::Engine)`)`
+//! or `fleet --engine event`; it is single-threaded and ignores the
+//! `threads` knob.
+
+use std::collections::{BTreeMap, BinaryHeap};
+
+use super::parallel::EdfTask;
+use super::scheduler::{shed_order, FleetSim};
+use super::stats::FleetReport;
+use super::stream::FrameTask;
+use super::telemetry::ShedCause;
+
+/// Slots in the wheel's near ring. The ring covers exactly this many
+/// consecutive ticks (`[horizon, horizon + 256)`), so a tick maps to
+/// one slot and a slot holds one tick's entries — no per-entry tick
+/// tags or in-slot sorting needed. 256 ticks is a quarter second at
+/// the default 1 ms tick: several frame periods at every supported
+/// rate, so steady-state reschedules stay in the ring and the far
+/// calendar only sees cold starts and long-phase stragglers.
+const WHEEL_SLOTS: usize = 256;
+
+/// Hierarchical release wheel: the calendar queue holding each
+/// stream's next-release tick.
+///
+/// Invariants:
+/// * every entry's tick is `>= horizon`;
+/// * a stream has at most one entry (scheduled at construction,
+///   re-scheduled only when its entry fires while the stream is live);
+/// * ring slot `t % 256` holds entries for virtual tick `t` only,
+///   for `t` in `[horizon, horizon + 256)`; later ticks live in `far`.
+struct ReleaseWheel {
+    /// The near ring: one bucket per tick in the current window.
+    slots: Vec<Vec<usize>>,
+    /// First tick the ring covers; advanced by [`ReleaseWheel::take_due`].
+    horizon: u64,
+    /// Entries currently in the ring (skips the slot scan when zero).
+    near: usize,
+    /// Far calendar: ticks at or beyond `horizon + 256`.
+    far: BTreeMap<u64, Vec<usize>>,
+}
+
+impl ReleaseWheel {
+    fn new() -> Self {
+        ReleaseWheel {
+            slots: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            horizon: 0,
+            near: 0,
+            far: BTreeMap::new(),
+        }
+    }
+
+    /// One past the last tick the ring covers.
+    fn span(&self) -> u64 {
+        self.horizon + WHEEL_SLOTS as u64
+    }
+
+    /// Schedule `stream`'s next release at absolute `tick`.
+    fn schedule(&mut self, tick: u64, stream: usize) {
+        debug_assert!(tick >= self.horizon, "release scheduled in the past");
+        if tick < self.span() {
+            self.slots[(tick % WHEEL_SLOTS as u64) as usize].push(stream);
+            self.near += 1;
+        } else {
+            self.far.entry(tick).or_default().push(stream);
+        }
+    }
+
+    /// First occupied tick at or after the horizon — the engine's
+    /// release lookahead. O(256) worst case over the ring, O(1) into
+    /// the far calendar.
+    fn next_tick(&self) -> Option<u64> {
+        if self.near > 0 {
+            for t in self.horizon..self.span() {
+                if !self.slots[(t % WHEEL_SLOTS as u64) as usize].is_empty() {
+                    return Some(t);
+                }
+            }
+            debug_assert!(false, "near count says the ring is occupied");
+        }
+        self.far.keys().next().copied()
+    }
+
+    /// Drain every stream scheduled at or before `tick` into `due`, in
+    /// ascending stream id (within one tick this is exactly the serial
+    /// engine's phase-2 scan order), and advance the horizon to
+    /// `tick + 1`. Slot capacity is kept, so steady-state draining
+    /// allocates nothing.
+    fn take_due(&mut self, tick: u64, due: &mut Vec<usize>) {
+        due.clear();
+        if tick + 1 >= self.span() {
+            // The whole ring is due: drain every slot once instead of
+            // walking the horizon tick by tick.
+            for slot in &mut self.slots {
+                self.near -= slot.len();
+                due.append(slot);
+            }
+            self.horizon = tick + 1;
+        } else {
+            while self.horizon <= tick {
+                let slot = &mut self.slots[(self.horizon % WHEEL_SLOTS as u64) as usize];
+                self.near -= slot.len();
+                due.append(slot);
+                self.horizon += 1;
+            }
+        }
+        // Far entries the window jumped past drain directly; the rest
+        // promote into the widened ring, keeping the slot bijection.
+        while let Some((&t, _)) = self.far.first_key_value() {
+            if t >= self.span() {
+                break;
+            }
+            let mut entries = self.far.remove(&t).expect("first key exists");
+            if t <= tick {
+                due.append(&mut entries);
+            } else {
+                self.near += entries.len();
+                self.slots[(t % WHEEL_SLOTS as u64) as usize].append(&mut entries);
+            }
+        }
+        due.sort_unstable();
+    }
+}
+
+/// The first tick whose virtual time reaches `at_ms`: the smallest `t`
+/// with `t as f64 * tick_ms >= at_ms`, i.e. the tick at which the
+/// engines' `at_ms <= now_ms` firing condition first holds. The ceil
+/// cast lands within one tick; the fixup loops make the boundary exact
+/// under f64 rounding (an `at_ms` that is an exact tick multiple must
+/// fire *on* that tick, not one later).
+fn tick_for(at_ms: f64, tick_ms: f64) -> u64 {
+    let mut t = (at_ms / tick_ms).ceil().max(0.0) as u64;
+    while (t as f64) * tick_ms < at_ms {
+        t += 1;
+    }
+    while t > 0 && ((t - 1) as f64) * tick_ms >= at_ms {
+        t -= 1;
+    }
+    t
+}
+
+impl FleetSim {
+    /// Run the configured span on the discrete-event engine and
+    /// produce the report — byte-identical to [`FleetSim::run`] (see
+    /// the module docs for why). Single-threaded; selected through
+    /// [`super::FleetConfig::engine`].
+    pub fn run_event(mut self) -> FleetReport {
+        let tick_ms = self.cfg.tick_ms;
+        let ticks = (self.cfg.seconds * 1e3 / tick_ms).round().max(1.0) as u64;
+
+        let mut wheel = ReleaseWheel::new();
+        for s in &self.streams {
+            wheel.schedule(tick_for(s.next_release_ms, tick_ms), s.id);
+        }
+        let mut heap: BinaryHeap<EdfTask> = BinaryHeap::new();
+        // Reusable hot-tick buffers (the bus/telemetry vectors live in
+        // `self.scratch`, shared with the serial engine's step).
+        let mut due: Vec<usize> = Vec::new();
+        let mut released: Vec<FrameTask> = Vec::new();
+        // Constant-over-the-span flag buffers for the telemetry batch.
+        let mut idle_down: Vec<bool> = Vec::new();
+        let mut idle_degraded: Vec<bool> = Vec::new();
+
+        let mut k = 0u64;
+        while k < ticks {
+            let now_ms = k as f64 * tick_ms;
+            self.step_event(k, now_ms, &mut wheel, &mut heap, &mut due, &mut released);
+
+            let next = k + 1;
+            if next >= ticks {
+                break;
+            }
+            // A tick that can do work is replayed in full: queued
+            // frames, busy chips and pending window decisions all
+            // depend on per-tick arbitration.
+            if !heap.is_empty()
+                || self.fleet.workers.iter().any(|w| !w.is_idle())
+                || self.adaptive.has_pending()
+            {
+                k = next;
+                continue;
+            }
+            // Nothing in flight: the next hot tick is the earliest of
+            // the five event sources (or the end of the run). Window
+            // edges are always jump targets, so rollovers execute.
+            let mut target = ticks;
+            if let Some(t) = wheel.next_tick() {
+                target = target.min(t);
+            }
+            if let Some(ms) = self.admission.next_event_ms() {
+                target = target.min(tick_for(ms, tick_ms));
+            }
+            if let Some(ms) = self.adaptive.next_timeline_ms() {
+                target = target.min(tick_for(ms, tick_ms));
+            }
+            target = target.min(k + self.adaptive.controller.ticks_until_boundary());
+            if let Some(tel) = self.telemetry.as_ref() {
+                target = target.min(k + tel.ticks_until_window_edge());
+            }
+            let target = target.max(next);
+            if target > next {
+                // Ticks `next .. target` are provably inert: account
+                // them in one step, exactly equivalent to replaying
+                // them (see the batch primitives' own proofs).
+                let n = target - next;
+                self.arbiter.idle_ticks(n);
+                self.adaptive.controller.advance_idle(n);
+                if self.telemetry.is_some() {
+                    idle_down.clear();
+                    idle_down.extend(self.fleet.workers.iter().map(|w| w.down));
+                    idle_degraded.clear();
+                    idle_degraded
+                        .extend((0..self.streams.len()).map(|i| self.adaptive.degraded(i)));
+                    if let Some(tel) = self.telemetry.as_mut() {
+                        tel.idle_ticks(n, &idle_down, &idle_degraded);
+                    }
+                }
+            }
+            k = target;
+        }
+        self.finish(ticks)
+    }
+
+    /// One hot tick: the serial engine's exact phase sequence, with the
+    /// wheel replacing the all-streams release scan (phase 2) and the
+    /// EDF heap replacing the linear-scan ready queue (phases 3–4).
+    /// Every state touched here is the same state [`FleetSim::step`]
+    /// touches, through the same calls in the same order.
+    fn step_event(
+        &mut self,
+        tick: u64,
+        now_ms: f64,
+        wheel: &mut ReleaseWheel,
+        heap: &mut BinaryHeap<EdfTask>,
+        due: &mut Vec<usize>,
+        released: &mut Vec<FrameTask>,
+    ) {
+        let tick_ms = self.cfg.tick_ms;
+
+        // 0. Due fault directives and the adaptive layer's decisions
+        //    from the last window boundary; a downed (or retired)
+        //    chip's queue requeues centrally.
+        for (c, d) in self.adaptive.due_directives(now_ms) {
+            let drained = self.fleet.workers[c].apply(d);
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.on_chip_directive(tick, c, d.code());
+            }
+            for t in drained {
+                heap.push(EdfTask(t));
+            }
+        }
+        for (i, rung) in self.adaptive.take_rungs() {
+            let (spec, cost) = self.adaptive.ladders[i][usize::from(rung)];
+            self.streams[i].apply_point(spec, cost);
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.on_rung_change(tick, i, rung);
+            }
+        }
+
+        // 1. Timeline events: departures free capacity first, then
+        //    arrivals are admitted. Transitions apply in event order.
+        let refused_base = self.admission.refused_ids.len();
+        let toggles = self.admission.step(now_ms, &mut self.stats);
+        for &(i, live) in &toggles {
+            self.streams[i].active = live;
+        }
+        self.adaptive.apply_toggles(&toggles);
+        if let Some(tel) = self.telemetry.as_mut() {
+            tel.on_admission(tick, &toggles, &self.admission.refused_ids[refused_base..]);
+        }
+
+        // 2. Frame releases — only the streams the wheel says are due,
+        //    in ascending stream id (the serial scan's order). A fired
+        //    entry reschedules only while its stream is live; a stream
+        //    that was refused at this tick's arrival event (or has
+        //    departed) drops off the wheel permanently — it can never
+        //    become live again, and an inactive `release_into` does not
+        //    advance the release clock.
+        wheel.take_due(tick, due);
+        for &si in due.iter() {
+            released.clear();
+            self.streams[si].release_into(now_ms, released);
+            for &t in released.iter() {
+                self.stats[t.stream].released += 1;
+                if let Some(tel) = self.telemetry.as_mut() {
+                    tel.on_release(t.stream);
+                }
+                heap.push(EdfTask(t));
+            }
+            if self.streams[si].active {
+                wheel.schedule(tick_for(self.streams[si].next_release_ms, tick_ms), si);
+            }
+        }
+
+        // 3a. Expiry shedding: expired frames (deadline is the heap's
+        //     primary key) sit at the front.
+        while let Some(front) = heap.peek() {
+            if front.0.deadline_ms > now_ms {
+                break;
+            }
+            let t = heap.pop().expect("peeked entry").0;
+            self.stats[t.stream].shed += 1;
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.on_shed(t.stream, t.seq, ShedCause::Expired);
+            }
+        }
+
+        // 3b. Bounded central queue: drop the (len - max) worst frames
+        //     in shed order — the frames the serial victim scan removes.
+        let max_ready = self.cfg.max_ready_per_stream * self.streams.len().max(1);
+        if heap.len() > max_ready {
+            let mut v: Vec<FrameTask> = std::mem::take(heap).into_iter().map(|e| e.0).collect();
+            v.sort_by(shed_order);
+            let excess = v.len() - max_ready;
+            for t in v.drain(..excess) {
+                self.stats[t.stream].shed += 1;
+                if let Some(tel) = self.telemetry.as_mut() {
+                    tel.on_shed(t.stream, t.seq, ShedCause::Overflow);
+                }
+            }
+            *heap = v.into_iter().map(EdfTask).collect();
+        }
+
+        // 4. Strict-EDF dispatch through the bounded per-chip queues —
+        //    the serial phase-4 rules verbatim, with the heap's peek
+        //    standing in for the linear-scan minimum.
+        while let Some(front) = heap.peek() {
+            let pixels = front.0.pixels;
+            if let Some(route) = &self.routes[front.0.stream] {
+                let stage = usize::from(front.0.stage);
+                let pinned = route.placement.as_ref().map(|p| p.chip_for_stage(stage));
+                let usable = pinned.is_some_and(|c| {
+                    let w = &self.fleet.workers[c];
+                    !w.down && w.can_serve(pixels)
+                });
+                if !usable {
+                    let t = heap.pop().expect("peeked entry").0;
+                    self.stats[t.stream].shed += 1;
+                    if let Some(tel) = self.telemetry.as_mut() {
+                        tel.on_shed(t.stream, t.seq, ShedCause::Unservable);
+                    }
+                    continue;
+                }
+                let c = pinned.expect("usable implies a pinned chip");
+                let task = heap.pop().expect("peeked entry").0;
+                let (t_stream, t_seq) = (task.stream, task.seq);
+                if let Err(back) = self.fleet.workers[c].try_dispatch(task) {
+                    heap.push(EdfTask(back));
+                    break;
+                }
+                if let Some(tel) = self.telemetry.as_mut() {
+                    tel.on_dispatch(tick, t_stream, t_seq, c);
+                }
+                continue;
+            }
+            if !self.fleet.any_can_serve(pixels) {
+                let t = heap.pop().expect("peeked entry").0;
+                self.stats[t.stream].shed += 1;
+                if let Some(tel) = self.telemetry.as_mut() {
+                    tel.on_shed(t.stream, t.seq, ShedCause::Unservable);
+                }
+                continue;
+            }
+            let Some(w) = self.fleet.pick_worker(pixels) else { break };
+            let task = heap.pop().expect("peeked entry").0;
+            let (t_stream, t_seq) = (task.stream, task.seq);
+            if let Err(back) = self.fleet.workers[w].try_dispatch(task) {
+                heap.push(EdfTask(back));
+                break;
+            }
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.on_dispatch(tick, t_stream, t_seq, w);
+            }
+        }
+
+        // 5. Chips pull queued work, then the bus budget is arbitrated
+        //    into the shared scratch buffers.
+        for w in &mut self.fleet.workers {
+            w.refill();
+        }
+        let mut chip_states = std::mem::take(&mut self.scratch.chip_states);
+        chip_states.clear();
+        if self.telemetry.is_some() {
+            chip_states.extend(
+                self.fleet.workers.iter().map(|w| (w.active.is_some(), w.queued as u32, w.down)),
+            );
+        }
+        let mut demands = std::mem::take(&mut self.scratch.demands);
+        demands.clear();
+        demands.extend(self.fleet.workers.iter().map(|w| w.bus_demand()));
+        let mut grants = std::mem::take(&mut self.scratch.grants);
+        self.arbiter.arbitrate_into(&demands, &mut grants);
+
+        // 6. Execution progress, hand-offs and completion scoring, in
+        //    global chip order.
+        for (c, (w, g)) in self.fleet.workers.iter_mut().zip(&grants).enumerate() {
+            let Some(done) = w.advance(*g) else { continue };
+            let next_stage = usize::from(done.stage) + 1;
+            let route = self.routes[done.stream].as_ref();
+            if let Some(r) = route.filter(|r| next_stage < r.stage_costs.len()) {
+                if let Some(p) = self.stats[done.stream].pipeline.as_mut() {
+                    p.handoffs += 1;
+                }
+                if let Some(tel) = self.telemetry.as_mut() {
+                    tel.on_handoff(tick, done.stream, done.seq, c, r.handoff_bytes);
+                }
+                heap.push(EdfTask(FrameTask {
+                    stage: next_stage as u8,
+                    cost: r.stage_costs[next_stage],
+                    ..done
+                }));
+                continue;
+            }
+            let latency_ms = now_ms + tick_ms - done.release_ms;
+            let budget_ms = done.deadline_ms - done.release_ms;
+            self.stats[done.stream].record_completion(latency_ms, budget_ms);
+            if let Some(tel) = self.telemetry.as_mut() {
+                let missed = latency_ms > budget_ms;
+                tel.on_complete(tick, done.stream, done.seq, c, latency_ms, missed);
+            }
+        }
+        if self.telemetry.is_some() {
+            let mut degraded = std::mem::take(&mut self.scratch.degraded);
+            degraded.clear();
+            degraded.extend((0..self.streams.len()).map(|i| self.adaptive.degraded(i)));
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.end_tick(tick, &demands, &grants, &chip_states, &degraded);
+            }
+            self.scratch.degraded = degraded;
+        }
+
+        // 7. Fold the tick's bus-saturation bit into the adaptive
+        //    controller.
+        let offered: f64 = demands.iter().sum();
+        self.adaptive
+            .on_tick(offered > self.arbiter.budget_bytes_per_tick + 1e-9, &mut self.stats);
+        self.scratch.demands = demands;
+        self.scratch.grants = grants;
+        self.scratch.chip_states = chip_states;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{run_fleet, Engine, FleetConfig};
+
+    #[test]
+    fn tick_for_matches_the_serial_firing_condition() {
+        for &(at, tick_ms) in &[
+            (0.0, 1.0),
+            (0.3, 1.0),
+            (1.0, 1.0),
+            (1.000_000_000_1, 1.0),
+            (32.999_999, 1.0),
+            (33.0, 1.0),
+            (1000.0, 1.0),
+            (0.0, 1.0 / 3.0),
+            (10.0 / 3.0, 1.0 / 3.0),
+            (100.0, 1.0 / 3.0),
+            (4999.9, 1.0 / 3.0),
+            (750.0, 2.5),
+        ] {
+            let t = tick_for(at, tick_ms);
+            assert!(t as f64 * tick_ms >= at, "tick {t} fires before {at} ms");
+            if t > 0 {
+                assert!(
+                    ((t - 1) as f64) * tick_ms < at,
+                    "tick {} would already have fired {at} ms",
+                    t - 1
+                );
+            }
+        }
+    }
+
+    /// Property: whatever order entries are scheduled in — near ring,
+    /// far calendar, multi-tick batches — the wheel fires them in
+    /// ascending (tick, stream id) order, which is the serial engine's
+    /// phase-2 canonical order (tick outer, stream-id scan inner).
+    #[test]
+    fn wheel_fires_in_tick_then_stream_order() {
+        let mut wheel = ReleaseWheel::new();
+        let entries: &[(u64, usize)] = &[
+            (3, 9),
+            (700, 1),
+            (3, 2),
+            (0, 5),
+            (255, 0),
+            (256, 7),
+            (700, 0),
+            (4000, 3),
+            (256, 2),
+            (0, 1),
+        ];
+        for &(t, s) in entries {
+            wheel.schedule(t, s);
+        }
+        let mut fired: Vec<(u64, usize)> = Vec::new();
+        let mut due = Vec::new();
+        while let Some(t) = wheel.next_tick() {
+            wheel.take_due(t, &mut due);
+            assert!(!due.is_empty(), "next_tick must point at an occupied tick");
+            for &s in &due {
+                fired.push((t, s));
+            }
+        }
+        let mut want = entries.to_vec();
+        want.sort_unstable();
+        assert_eq!(fired, want, "firing order is ascending (tick, stream)");
+    }
+
+    #[test]
+    fn wheel_reschedules_into_the_rotated_ring() {
+        let mut wheel = ReleaseWheel::new();
+        wheel.schedule(5, 0);
+        let mut due = Vec::new();
+        wheel.take_due(5, &mut due);
+        assert_eq!(due, vec![0]);
+        // Tick 5 + 256 shares the fired slot's residue but now lands in
+        // the rotated window, not the calendar.
+        wheel.schedule(5 + 256, 0);
+        assert_eq!(wheel.next_tick(), Some(261));
+        wheel.take_due(261, &mut due);
+        assert_eq!(due, vec![0]);
+        assert_eq!(wheel.next_tick(), None);
+    }
+
+    #[test]
+    fn wheel_jump_drains_skipped_far_entries() {
+        let mut wheel = ReleaseWheel::new();
+        wheel.schedule(10_000, 4);
+        wheel.schedule(9_000, 2);
+        wheel.schedule(40, 1);
+        let mut due = Vec::new();
+        wheel.take_due(20_000, &mut due);
+        assert_eq!(due, vec![1, 2, 4], "nothing is lost across a long jump");
+        assert_eq!(wheel.next_tick(), None);
+    }
+
+    /// The engine-level identity on a churning sampled workload; the
+    /// full preset x seed sweep lives in `tests/event_fleet.rs`.
+    #[test]
+    fn event_engine_matches_serial_digest_on_a_small_fleet() {
+        let base = FleetConfig { seconds: 1.0, ..FleetConfig::sampled(12, 4, 7) };
+        let serial = run_fleet(&base).expect("serial run");
+        let event = run_fleet(&FleetConfig { engine: Engine::Event, ..base }).expect("event run");
+        assert_eq!(serial.stats_digest(), event.stats_digest());
+        assert_eq!(serial.released(), event.released());
+        assert_eq!(serial.rejected, event.rejected);
+    }
+}

@@ -72,6 +72,13 @@ impl ChipDirective {
 }
 
 /// A frame being executed by a chip.
+///
+/// Transfer progress is kept as an *integer* byte ledger: the arbiter's
+/// f64 grants accumulate in [`InFlight::byte_credit`], and only whole
+/// bytes move off [`InFlight::remaining_bytes`]. A frame therefore
+/// completes exactly when every byte of its budget has been granted —
+/// no float epsilon anywhere — so the tick, parallel and event engines
+/// can never drift a completion across a tick boundary.
 #[derive(Debug)]
 pub struct InFlight {
     /// The frame being executed.
@@ -81,8 +88,11 @@ pub struct InFlight {
     pub total_compute_ticks: u64,
     /// Compute ticks still owed.
     pub remaining_compute_ticks: u64,
-    /// DRAM bytes still to transfer.
-    pub remaining_bytes: f64,
+    /// Whole DRAM bytes still to transfer.
+    pub remaining_bytes: u64,
+    /// Sub-byte grant credit carried between ticks (always in `[0, 1)`
+    /// after an [`ChipWorker::advance`] call settles the ledger).
+    pub byte_credit: f64,
 }
 
 impl InFlight {
@@ -254,7 +264,8 @@ impl ChipWorker {
                 task,
                 total_compute_ticks: ticks,
                 remaining_compute_ticks: ticks,
-                remaining_bytes: task.cost.dram_bytes as f64,
+                remaining_bytes: task.cost.dram_bytes,
+                byte_credit: 0.0,
             });
         }
     }
@@ -264,22 +275,28 @@ impl ChipWorker {
     /// by the chip's own link rate at its current derate.
     pub fn bus_demand(&self) -> f64 {
         self.active.as_ref().map_or(0.0, |j| {
-            let transferred = j.task.cost.dram_bytes as f64 - j.remaining_bytes;
+            let transferred = (j.task.cost.dram_bytes - j.remaining_bytes) as f64;
             (j.eligible_bytes() - transferred)
-                .min(j.remaining_bytes)
+                .min(j.remaining_bytes as f64)
                 .max(0.0)
                 .min(self.link_bytes_per_tick * self.link_factor)
         })
     }
 
     /// Advance one tick with `granted` DRAM bytes. Returns the finished
-    /// frame if both compute and transfer completed.
+    /// frame if both compute and transfer completed. The grant lands in
+    /// the frame's fractional credit; only whole bytes settle against
+    /// the integer ledger, so completion means *every* byte was granted
+    /// — there is no epsilon for event-time jumps to drift across.
     pub fn advance(&mut self, granted: f64) -> Option<FrameTask> {
         let job = self.active.as_mut()?;
         self.busy_ticks += 1;
         job.remaining_compute_ticks = job.remaining_compute_ticks.saturating_sub(1);
-        job.remaining_bytes -= granted;
-        if job.remaining_compute_ticks == 0 && job.remaining_bytes <= 1e-6 {
+        job.byte_credit += granted;
+        let moved = (job.byte_credit as u64).min(job.remaining_bytes);
+        job.remaining_bytes -= moved;
+        job.byte_credit -= moved as f64;
+        if job.remaining_compute_ticks == 0 && job.remaining_bytes == 0 {
             let done = self.active.take().map(|j| j.task);
             self.completed += 1;
             done
@@ -391,6 +408,43 @@ mod tests {
         assert_eq!(done.seq, 0);
         assert_eq!(w.busy_ticks, 2);
         assert_eq!(w.completed, 1);
+    }
+
+    #[test]
+    fn completion_requires_the_whole_byte_ledger() {
+        let mut f = fleet1();
+        let w = &mut f.workers[0];
+        w.try_dispatch(task(0)).unwrap();
+        w.refill();
+        // 3999.999999 of 4000 bytes granted: the old float epsilon
+        // (remaining <= 1e-6) would have called this complete. The
+        // integer ledger holds the last byte open.
+        assert!(w.advance(3999.999999).is_none());
+        assert!(w.advance(0.0).is_none(), "compute done, one byte still owed");
+        assert_eq!(w.active.as_ref().unwrap().remaining_bytes, 1);
+        assert!((w.bus_demand() - 1.0).abs() < 1e-9, "the last byte is still demanded");
+        // One more whole byte of credit settles the ledger exactly.
+        assert!(w.advance(1.0).is_some());
+        assert_eq!(w.completed, 1);
+    }
+
+    #[test]
+    fn fractional_grants_settle_as_whole_bytes() {
+        let mut f = fleet1();
+        let w = &mut f.workers[0];
+        w.try_dispatch(task(0)).unwrap();
+        w.refill();
+        // Exact binary fractions, so the credit bookkeeping is exact:
+        // three grants of 1000.25 move 3000 whole bytes and bank 0.75.
+        for _ in 0..3 {
+            assert!(w.advance(1000.25).is_none());
+        }
+        let job = w.active.as_ref().unwrap();
+        assert_eq!(job.remaining_bytes, 1000);
+        assert!((job.byte_credit - 0.75).abs() < 1e-12);
+        // 999.5 more brings the credit to 1000.25: the frame completes
+        // with every one of its 4000 bytes accounted for.
+        assert!(w.advance(999.5).is_some());
     }
 
     #[test]

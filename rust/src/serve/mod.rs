@@ -22,7 +22,8 @@
 //!   ([`FaultEvent`]: outages, DRAM-link throttles, thermal derates)
 //!   over the pool plus a standby chip set, and the bundled presets
 //!   (`steady-hd`, `rush-hour`, `mixed-zoo`, `hetero-pool`,
-//!   `diurnal-load`, `flash-crowd`, `chip-failure`, `pipeline-giant`).
+//!   `diurnal-load`, `flash-crowd`, `chip-failure`, `pipeline-giant`,
+//!   plus the metro-scale `metro` stress scenario).
 //! * [`placement`] — where a stream runs: a [`Placement`] is one chip
 //!   ([`Placement::Single`] — every stream that fits, priced and
 //!   dispatched exactly as before) or an ordered [`ChipSet`] of pipeline
@@ -59,6 +60,12 @@
 //!   and chip shards with a deterministic merge at each arbiter epoch,
 //!   byte-identical to the serial engine ([`FleetConfig::threads`]) —
 //!   churn included.
+//! * [`event`] — the discrete-event engine ([`Engine::Event`]): frame
+//!   releases on a hierarchical event wheel, arrivals/faults/window
+//!   edges looked ahead from engine state, and provably-inert tick
+//!   spans advanced in one step — byte-identical to the serial engine,
+//!   telemetry included, and the only engine that finishes the
+//!   metro-scale (100k+ stream) preset in bench-tolerable time.
 //! * [`fleet`] — the chip pool; bounded mpsc dispatch queues whose
 //!   `try_send` failures are the backpressure signal; capability-aware
 //!   worker choice for heterogeneous pools.
@@ -91,6 +98,7 @@
 //! ```
 
 pub mod arbiter;
+pub mod event;
 pub mod fleet;
 pub mod parallel;
 pub mod placement;
@@ -108,7 +116,7 @@ pub use placement::{ChipSet, Placement};
 pub use qos::{QosController, QosVerdict};
 pub use scenario::{ChipSpec, FaultEvent, FaultKind, ModelId, Scenario, StreamScript, PRESET_NAMES};
 pub use scheduler::{
-    run_fleet, run_fleet_with, AdmissionPolicy, FleetConfig, FleetConfigBuilder, FleetSim,
+    run_fleet, run_fleet_with, AdmissionPolicy, Engine, FleetConfig, FleetConfigBuilder, FleetSim,
 };
 pub use stats::{CostProvenance, FleetReport, PipelineStats, StreamStats};
 pub use stream::{FrameCost, FrameTask, QosClass, Stream, StreamSpec};
@@ -138,7 +146,8 @@ pub mod prelude {
     pub use super::placement::{ChipSet, Placement};
     pub use super::scenario::{ChipSpec, ModelId, Scenario, StreamScript, PRESET_NAMES};
     pub use super::scheduler::{
-        run_fleet, run_fleet_with, AdmissionPolicy, FleetConfig, FleetConfigBuilder, FleetSim,
+        run_fleet, run_fleet_with, AdmissionPolicy, Engine, FleetConfig, FleetConfigBuilder,
+        FleetSim,
     };
     pub use super::stats::{CostProvenance, FleetReport, PipelineStats, StreamStats};
     pub use super::stream::{FrameCost, QosClass, StreamSpec};

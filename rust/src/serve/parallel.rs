@@ -95,7 +95,9 @@ pub fn resolve_threads(requested: usize) -> usize {
 /// Ready-queue entry ordered so a max-[`BinaryHeap`] pops the EDF-next
 /// frame ([`edf_order`] reversed). The order is total, so the heap's pop
 /// sequence equals the serial engine's repeated linear-scan minimum.
-struct EdfTask(FrameTask);
+/// Shared with the discrete-event engine ([`super::event`]), whose ready
+/// heap must pop the very same sequence.
+pub(crate) struct EdfTask(pub(crate) FrameTask);
 
 impl PartialEq for EdfTask {
     fn eq(&self, other: &Self) -> bool {
@@ -231,7 +233,7 @@ fn worker_loop(mut shard: Shard, rx: mpsc::Receiver<Cmd>, tx: mpsc::Sender<Rsp>)
                 }
                 let mut released = Vec::new();
                 for s in &mut shard.streams {
-                    released.extend(s.release_due(now_ms));
+                    s.release_into(now_ms, &mut released);
                 }
                 Rsp::Released { drained, released }
             }
@@ -353,6 +355,13 @@ impl FleetSim {
                     max_pixels,
                 })
                 .collect();
+            // Per-tick buffers, reused across the whole run so the
+            // steady-state loop allocates nothing beyond the
+            // channel-moved command payloads.
+            let mut demands: Vec<f64> = Vec::with_capacity(chips);
+            let mut grants: Vec<f64> = Vec::with_capacity(chips);
+            let mut chip_states: Vec<(bool, u32, bool)> = Vec::with_capacity(chips);
+            let mut degraded: Vec<bool> = Vec::with_capacity(total_streams);
 
             for k in 0..ticks {
                 let now_ms = k as f64 * cfg.tick_ms;
@@ -520,19 +529,18 @@ impl FleetSim {
                 }
                 // Post-refill mirror state is exactly the serial engine's
                 // post-refill worker state: same occupancy sample.
-                let chip_states: Vec<(bool, u32, bool)> = if telemetry.is_some() {
-                    mirror.iter().map(|m| (m.active, m.queued as u32, m.down)).collect()
-                } else {
-                    Vec::new()
-                };
-                let mut demands: Vec<f64> = Vec::with_capacity(chips);
+                chip_states.clear();
+                if telemetry.is_some() {
+                    chip_states.extend(mirror.iter().map(|m| (m.active, m.queued as u32, m.down)));
+                }
+                demands.clear();
                 for rx in &rsp_rx {
                     match rx.recv().expect("fleet worker hung up") {
                         Rsp::Demands(d) => demands.extend(d),
                         _ => unreachable!("protocol: expected Demands"),
                     }
                 }
-                let grants = arbiter.arbitrate(&demands);
+                arbiter.arbitrate_into(&demands, &mut grants);
 
                 // 6. Advance; merge completions in global chip order.
                 let mut off = 0usize;
@@ -586,8 +594,8 @@ impl FleetSim {
                     base += n;
                 }
                 if let Some(tel) = telemetry.as_mut() {
-                    let degraded: Vec<bool> =
-                        (0..total_streams).map(|i| adaptive.degraded(i)).collect();
+                    degraded.clear();
+                    degraded.extend((0..total_streams).map(|i| adaptive.degraded(i)));
                     tel.end_tick(k, &demands, &grants, &chip_states, &degraded);
                 }
 

@@ -156,6 +156,27 @@ impl QosController {
         self.pressure
     }
 
+    /// How many more [`QosController::on_tick`] folds until a window
+    /// closes (always >= 1): the event engine's lookahead bound for the
+    /// next QoS window edge.
+    pub fn ticks_until_boundary(&self) -> u64 {
+        self.ticks_per_window - self.tick_in_window
+    }
+
+    /// Fold `n` unsaturated ticks that provably stay inside the current
+    /// window. Exactly equivalent to `n` `on_tick(false)` calls when no
+    /// boundary is crossed: each such call only advances the in-window
+    /// tick count. The event engine uses this to jump idle spans; spans
+    /// are always cut at window edges ([`QosController::ticks_until_boundary`]),
+    /// which the debug assertion enforces.
+    pub fn advance_idle(&mut self, n: u64) {
+        debug_assert!(
+            self.tick_in_window + n < self.ticks_per_window,
+            "idle span may not cross a QoS window boundary"
+        );
+        self.tick_in_window += n;
+    }
+
     /// Fold one tick's bus-saturation bit. Returns `Some(verdict)` only
     /// on the tick that closes a window; every verdict is a pure
     /// function of the window history, identical in both engines.
@@ -283,6 +304,32 @@ mod tests {
         assert!(v.last().unwrap().scale_down);
         // Hysteresis: the level held at 2 until pressure fully cleared.
         assert!(v.iter().all(|x| x.level == 2 || x.level == 0), "never parked mid-ladder");
+    }
+
+    #[test]
+    fn advance_idle_matches_per_tick_folding() {
+        let mut stepped = QosController::new(1.0);
+        let mut jumped = QosController::new(1.0);
+        drive(&mut stepped, 2, 0);
+        drive(&mut jumped, 2, 0);
+        drive(&mut stepped, 3, 10);
+        drive(&mut jumped, 3, 10);
+        // Jump 40 idle ticks inside the window on one controller, fold
+        // them one at a time on the other, then close the window on both.
+        assert_eq!(jumped.ticks_until_boundary(), jumped.ticks_per_window);
+        for _ in 0..40 {
+            assert!(stepped.on_tick(false).is_none());
+        }
+        jumped.advance_idle(40);
+        assert_eq!(stepped.ticks_until_boundary(), jumped.ticks_until_boundary());
+        let w = stepped.ticks_per_window;
+        for t in 0..(w - 40) {
+            let a = stepped.on_tick(false);
+            let b = jumped.on_tick(false);
+            assert_eq!(a, b, "tick {t}");
+        }
+        assert_eq!(stepped.pressure(), jumped.pressure());
+        assert_eq!(stepped.level(), jumped.level());
     }
 
     #[test]

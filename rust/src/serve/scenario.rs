@@ -349,6 +349,14 @@ impl Scenario {
     /// | `flash-crowd` | 4x paper | 2 steady + 14 at 0.5 s | QoS downshift |
     /// | `chip-failure` | 3x paper | 7 steady + 3 scripted faults | fault injection |
     /// | `pipeline-giant` | 2x datacenter | DeepLabv3@1080p + a 416 sidecar | pipeline placement |
+    /// | `metro` | 192 paper + 48 edge + 16 datacenter | 112k churning | metro-scale serving |
+    ///
+    /// `metro` is deliberately *not* in [`PRESET_NAMES`]: the byte-identity
+    /// sweeps replay every listed preset on every engine, and the serial
+    /// scan over 112k scripted streams per tick is exactly the cost the
+    /// discrete-event engine ([`super::Engine::Event`]) exists to avoid.
+    /// It is reachable by name here, in `fleet --scenario metro`, and in
+    /// the `metro` bench family.
     pub fn preset(name: &str) -> Result<Scenario> {
         match name {
             "steady-hd" => Ok(Self::steady_hd()),
@@ -359,8 +367,9 @@ impl Scenario {
             "flash-crowd" => Ok(Self::flash_crowd()),
             "chip-failure" => Ok(Self::chip_failure()),
             "pipeline-giant" => Ok(Self::pipeline_giant()),
+            "metro" => Ok(Self::metro()),
             other => crate::bail!(
-                "unknown scenario preset {other:?} (expected one of {})",
+                "unknown scenario preset {other:?} (expected one of {}, metro)",
                 PRESET_NAMES.join(", ")
             ),
         }
@@ -679,6 +688,53 @@ impl Scenario {
         }
     }
 
+    /// One metro stream's operating point: 50% 416x416, 45% 720p, 5%
+    /// 1080p (the uncapped chips' share), 15/30 FPS evenly, QoS on the
+    /// standard cycle. All deployed-model, so metro prices exactly three
+    /// operating points no matter how many streams it scripts.
+    fn metro_spec(rng: &mut Rng, i: usize) -> StreamSpec {
+        let hw = match rng.range(0, 20) {
+            0..=9 => (416, 416),
+            10..=18 => (720, 1280),
+            _ => (1080, 1920),
+        };
+        let target_fps = if rng.f64() < 0.5 { 15.0 } else { 30.0 };
+        StreamSpec { hw, target_fps, qos: Self::qos_cycle(i) }
+    }
+
+    /// `metro`: the metro-scale stress scenario — a city's camera
+    /// estate against one rack. 2k steady anchor streams plus 110k
+    /// short-lived churners (arrivals spread over the first 4.5 s,
+    /// stays of 0.25-1.5 s) over 256 heterogeneous chips. Admission is
+    /// expected to refuse most of the script — the point is the
+    /// *scripted* population: a per-tick engine pays O(112k) every
+    /// tick just discovering that, while the event engine's wheel
+    /// drops refused streams permanently the first time their entry
+    /// fires. Deterministic like every preset (seeded sampling).
+    fn metro() -> Scenario {
+        const STEADY: usize = 2_000;
+        const CHURN: usize = 110_000;
+        let mut rng = Rng::new(0x3E7_2026);
+        let mut chips = vec![ChipSpec::paper(); 192];
+        chips.extend(std::iter::repeat(ChipSpec::edge()).take(48));
+        chips.extend(std::iter::repeat(ChipSpec::datacenter()).take(16));
+        let mut streams = Vec::with_capacity(STEADY + CHURN);
+        for i in 0..STEADY {
+            streams.push(StreamScript::steady(Self::metro_spec(&mut rng, i), ModelId::Deployed));
+        }
+        for i in 0..CHURN {
+            let arrival_ms = 4_500.0 * i as f64 / CHURN as f64;
+            let stay_ms = 250.0 + 1_250.0 * rng.f64();
+            streams.push(StreamScript {
+                spec: Self::metro_spec(&mut rng, i),
+                model: ModelId::Deployed,
+                arrival_ms,
+                departure_ms: Some(arrival_ms + stay_ms),
+            });
+        }
+        Scenario { name: "metro".into(), chips, streams, faults: Vec::new(), standby: Vec::new() }
+    }
+
     /// The buffer geometry frame costs are priced on: the first chip's
     /// config. [`Scenario::validate`] guarantees every chip shares it.
     pub fn reference_chip(&self) -> ChipConfig {
@@ -952,6 +1008,23 @@ mod tests {
             ..ChipSpec::paper()
         });
         assert!(bad_standby.validate().is_err(), "standby chip off the reference geometry");
+    }
+
+    #[test]
+    fn metro_is_metro_scale_and_outside_the_identity_sweep() {
+        let s = Scenario::preset("metro").unwrap();
+        assert!(s.streams.len() >= 100_000, "metro scripts 100k+ streams");
+        assert!(s.chips.len() >= 256, "a rack-scale heterogeneous pool");
+        let churners = s.streams.iter().filter(|x| x.departure_ms.is_some()).count();
+        assert!(churners >= 100_000, "almost everything churns: {churners}");
+        assert!(
+            s.operating_points().len() <= 3,
+            "metro stays cheap to price: {:?}",
+            s.operating_points()
+        );
+        assert!(!PRESET_NAMES.contains(&"metro"), "metro rides outside PRESET_NAMES");
+        s.validate().expect("metro validates");
+        assert_eq!(Scenario::preset("metro").unwrap(), s, "seeded, so deterministic");
     }
 
     #[test]

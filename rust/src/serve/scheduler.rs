@@ -107,6 +107,47 @@ pub enum AdmissionPolicy {
     },
 }
 
+/// Which fleet engine executes a run. Every engine is an observer of
+/// the *same* simulation: for one config they produce byte-identical
+/// [`FleetReport`]s (and byte-identical telemetry documents), so this
+/// knob only trades wall-clock time — see [`super::event`] for the
+/// identity contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// The per-tick engines: every virtual tick is executed, busy or
+    /// not. `threads == 1` (the default) runs the serial reference
+    /// engine; other values run the sharded parallel engine
+    /// ([`super::parallel`]).
+    #[default]
+    Tick,
+    /// The discrete-event engine ([`super::event`]): frame releases are
+    /// scheduled on a hierarchical event wheel and provably-inert tick
+    /// spans are jumped in one step instead of being replayed.
+    /// Single-threaded; the `threads` knob is ignored. Built for
+    /// metro-scale scenarios where most ticks touch only a sliver of
+    /// the scripted stream population.
+    Event,
+}
+
+impl Engine {
+    /// Parse a CLI engine name (`tick` | `event`).
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s {
+            "tick" => Some(Engine::Tick),
+            "event" => Some(Engine::Event),
+            _ => None,
+        }
+    }
+
+    /// The CLI name this engine parses back from.
+    pub fn name(self) -> &'static str {
+        match self {
+            Engine::Tick => "tick",
+            Engine::Event => "event",
+        }
+    }
+}
+
 /// Knobs of one fleet run: the [`Scenario`] being served (the pool and
 /// the stream timeline) plus engine parameters.
 #[derive(Debug, Clone, PartialEq)]
@@ -146,6 +187,10 @@ pub struct FleetConfig {
     /// never reads it), and [`TelemetryConfig::off`] skips every hook
     /// for the bare-engine fast path.
     pub telemetry: TelemetryConfig,
+    /// Which engine executes the run ([`Engine`]): the per-tick
+    /// reference engines (default) or the discrete-event engine. Both
+    /// produce byte-identical reports.
+    pub engine: Engine,
 }
 
 impl FleetConfig {
@@ -252,6 +297,7 @@ impl FleetConfigBuilder {
                 planner: Planner::OptimalDp,
                 threads: 1,
                 telemetry: TelemetryConfig::default(),
+                engine: Engine::Tick,
             },
         }
     }
@@ -314,6 +360,13 @@ impl FleetConfigBuilder {
     /// Override the telemetry configuration.
     pub fn telemetry(mut self, v: TelemetryConfig) -> Self {
         self.cfg.telemetry = v;
+        self
+    }
+
+    /// Override the executing engine (per-tick reference vs
+    /// discrete-event; reports are byte-identical either way).
+    pub fn engine(mut self, v: Engine) -> Self {
+        self.cfg.engine = v;
         self
     }
 
@@ -698,6 +751,14 @@ impl AdmissionState {
     pub(crate) fn outcome(&self, stream: usize) -> Option<bool> {
         self.admitted[stream]
     }
+
+    /// Virtual time of the next unfired timeline event, if any — the
+    /// event engine's admission lookahead. In-tick firing order is
+    /// untouched: the engine only uses this to prove a span of ticks
+    /// has no event due inside it.
+    pub(crate) fn next_event_ms(&self) -> Option<f64> {
+        self.events.get(self.next).map(|e| e.at_ms)
+    }
 }
 
 /// One scripted chip-state transition, compiled from the scenario's
@@ -839,6 +900,20 @@ impl AdaptiveState {
         out
     }
 
+    /// Virtual time of the next unfired scripted fault transition, if
+    /// any — the event engine's fault lookahead.
+    pub(crate) fn next_timeline_ms(&self) -> Option<f64> {
+        self.timeline.get(self.next_event).map(|e| e.at_ms)
+    }
+
+    /// Whether any window-boundary decision (rung swap or autoscale
+    /// directive) is queued for the top of the next tick. A tick with
+    /// pending decisions is never inert, so the event engine must
+    /// execute it in full.
+    pub(crate) fn has_pending(&self) -> bool {
+        !self.pending_rungs.is_empty() || !self.pending_chips.is_empty()
+    }
+
     /// Mirror the admission toggles (both engines route them through
     /// their main thread in event order).
     pub(crate) fn apply_toggles(&mut self, toggles: &[(usize, bool)]) {
@@ -906,6 +981,19 @@ pub(crate) struct PipelineRoute {
     pub(crate) handoff_bytes: u64,
 }
 
+/// Reusable per-tick buffers, so the steady-state tick loop allocates
+/// nothing: the bus demand/grant vectors and the telemetry sampling
+/// vectors. Owned by [`FleetSim`] and shared by the serial and event
+/// engines (the parallel engine keeps its own per-shard buffers).
+#[derive(Debug, Default)]
+pub(crate) struct TickScratch {
+    pub(crate) demands: Vec<f64>,
+    pub(crate) grants: Vec<f64>,
+    pub(crate) chip_states: Vec<(bool, u32, bool)>,
+    pub(crate) degraded: Vec<bool>,
+    pub(crate) released: Vec<FrameTask>,
+}
+
 /// The discrete-tick fleet simulator.
 ///
 /// Fields are crate-visible so [`super::parallel`] can take the prepared
@@ -933,6 +1021,9 @@ pub struct FleetSim {
     /// thread at the same phase points, and no simulation arithmetic
     /// ever reads it back.
     pub(crate) telemetry: Option<Telemetry>,
+    /// Reusable per-tick buffers ([`TickScratch`]); pure capacity, no
+    /// cross-tick state.
+    pub(crate) scratch: TickScratch,
 }
 
 impl FleetSim {
@@ -1098,6 +1189,7 @@ impl FleetSim {
             admission,
             adaptive,
             telemetry,
+            scratch: TickScratch::default(),
         })
     }
 
@@ -1137,9 +1229,13 @@ impl FleetSim {
             tel.on_admission(tick, &toggles, &self.admission.refused_ids[refused_base..]);
         }
 
-        // 2. Frame releases from live streams.
-        for s in &mut self.streams {
-            for t in s.release_due(now_ms) {
+        // 2. Frame releases from live streams, through the reusable
+        //    release buffer (same frames, same order, no allocation).
+        let mut released = std::mem::take(&mut self.scratch.released);
+        for si in 0..self.streams.len() {
+            released.clear();
+            self.streams[si].release_into(now_ms, &mut released);
+            for &t in &released {
                 self.stats[t.stream].released += 1;
                 if let Some(tel) = self.telemetry.as_mut() {
                     tel.on_release(t.stream);
@@ -1147,6 +1243,7 @@ impl FleetSim {
                 self.ready.push(t);
             }
         }
+        self.scratch.released = released;
 
         // 3a. Shed frames that can no longer make their deadline.
         let stats = &mut self.stats;
@@ -1246,17 +1343,21 @@ impl FleetSim {
         }
         // Telemetry samples occupancy post-refill (busy == will burn
         // this tick), exactly what the parallel engine's mirror holds.
-        let chip_states: Vec<(bool, u32, bool)> = if self.telemetry.is_some() {
-            self.fleet
-                .workers
-                .iter()
-                .map(|w| (w.active.is_some(), w.queued as u32, w.down))
-                .collect()
-        } else {
-            Vec::new()
-        };
-        let demands: Vec<f64> = self.fleet.workers.iter().map(|w| w.bus_demand()).collect();
-        let grants = self.arbiter.arbitrate(&demands);
+        // All four per-tick vectors live in `self.scratch`, taken for
+        // the tick and handed back below, so the steady-state loop
+        // allocates nothing.
+        let mut chip_states = std::mem::take(&mut self.scratch.chip_states);
+        chip_states.clear();
+        if self.telemetry.is_some() {
+            chip_states.extend(
+                self.fleet.workers.iter().map(|w| (w.active.is_some(), w.queued as u32, w.down)),
+            );
+        }
+        let mut demands = std::mem::take(&mut self.scratch.demands);
+        demands.clear();
+        demands.extend(self.fleet.workers.iter().map(|w| w.bus_demand()));
+        let mut grants = std::mem::take(&mut self.scratch.grants);
+        self.arbiter.arbitrate_into(&demands, &mut grants);
 
         // 6. Execution progress and completion scoring. A finished
         //    non-final pipeline stage does not complete the frame: it
@@ -1291,10 +1392,14 @@ impl FleetSim {
                 tel.on_complete(tick, done.stream, done.seq, c, latency_ms, missed);
             }
         }
-        if let Some(tel) = self.telemetry.as_mut() {
-            let degraded: Vec<bool> =
-                (0..self.streams.len()).map(|i| self.adaptive.degraded(i)).collect();
-            tel.end_tick(tick, &demands, &grants, &chip_states, &degraded);
+        if self.telemetry.is_some() {
+            let mut degraded = std::mem::take(&mut self.scratch.degraded);
+            degraded.clear();
+            degraded.extend((0..self.streams.len()).map(|i| self.adaptive.degraded(i)));
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.end_tick(tick, &demands, &grants, &chip_states, &degraded);
+            }
+            self.scratch.degraded = degraded;
         }
 
         // 7. The adaptive controller folds this tick's bus-saturation
@@ -1303,6 +1408,9 @@ impl FleetSim {
         let offered: f64 = demands.iter().sum();
         self.adaptive
             .on_tick(offered > self.arbiter.budget_bytes_per_tick + 1e-9, &mut self.stats);
+        self.scratch.demands = demands;
+        self.scratch.grants = grants;
+        self.scratch.chip_states = chip_states;
     }
 
     /// Run the configured span and produce the report.
@@ -1311,6 +1419,14 @@ impl FleetSim {
         for k in 0..ticks {
             self.step(k, k as f64 * self.cfg.tick_ms);
         }
+        self.finish(ticks)
+    }
+
+    /// Close the run after `ticks` executed ticks: final per-stream
+    /// bookkeeping and report assembly. One code path shared by the
+    /// serial tick engine and the event engine ([`super::event`]), so
+    /// their reports are assembled identically by construction.
+    pub(crate) fn finish(&mut self, ticks: u64) -> FleetReport {
         let end_ms = self.cfg.seconds * 1e3;
         for (i, s) in self.stats.iter_mut().enumerate() {
             s.refused = self.admission.outcome(i) == Some(false);
@@ -1336,11 +1452,15 @@ impl FleetSim {
 }
 
 /// Run the configured scenario. Validates the config, prices every
-/// operating point, then dispatches on `cfg.threads`: the serial
-/// reference engine at 1, the sharded parallel engine otherwise — with
-/// byte-identical output.
+/// operating point, then dispatches on `cfg.engine` and `cfg.threads`:
+/// the discrete-event engine when `cfg.engine` is [`Engine::Event`],
+/// else the serial reference engine at `threads == 1` or the sharded
+/// parallel engine otherwise — all with byte-identical output.
 pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
     let sim = FleetSim::new(cfg)?;
+    if cfg.engine == Engine::Event {
+        return Ok(sim.run_event());
+    }
     let threads = super::parallel::resolve_threads(cfg.threads);
     if threads <= 1 {
         let mut sim = sim;
@@ -1516,6 +1636,7 @@ mod tests {
             .planner(Planner::PaperGreedy)
             .threads(2)
             .telemetry(TelemetryConfig::off())
+            .engine(Engine::Event)
             .build()
             .expect("a fully-overridden config validates");
         assert_eq!(cfg.bus_mbps, 1000.0);
@@ -1528,6 +1649,16 @@ mod tests {
         assert_eq!(cfg.planner, Planner::PaperGreedy);
         assert_eq!(cfg.threads, 2);
         assert!(!cfg.telemetry.enabled);
+        assert_eq!(cfg.engine, Engine::Event);
+    }
+
+    #[test]
+    fn engine_names_round_trip() {
+        assert_eq!(Engine::default(), Engine::Tick);
+        for e in [Engine::Tick, Engine::Event] {
+            assert_eq!(Engine::parse(e.name()), Some(e));
+        }
+        assert_eq!(Engine::parse("warp"), None);
     }
 
     /// Every existing preset keeps single-chip placements: the pipeline

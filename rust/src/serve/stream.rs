@@ -177,13 +177,14 @@ impl Stream {
         self.cost = cost;
     }
 
-    /// Release every frame due at or before `now_ms`. An inactive stream
-    /// (not yet arrived, refused admission, or departed) releases
-    /// nothing and does not advance.
-    pub fn release_due(&mut self, now_ms: f64) -> Vec<FrameTask> {
-        let mut out = Vec::new();
+    /// Release every frame due at or before `now_ms`, appending to
+    /// `out`. An inactive stream (not yet arrived, refused admission, or
+    /// departed) releases nothing and does not advance. The engines'
+    /// steady-state path: the caller's buffer is reused across ticks, so
+    /// releasing allocates nothing.
+    pub fn release_into(&mut self, now_ms: f64, out: &mut Vec<FrameTask>) {
         if !self.active {
-            return out;
+            return;
         }
         while self.next_release_ms <= now_ms {
             out.push(FrameTask {
@@ -199,6 +200,12 @@ impl Stream {
             self.frames_released += 1;
             self.next_release_ms += self.spec.period_ms();
         }
+    }
+
+    /// Allocating wrapper over [`Stream::release_into`].
+    pub fn release_due(&mut self, now_ms: f64) -> Vec<FrameTask> {
+        let mut out = Vec::new();
+        self.release_into(now_ms, &mut out);
         out
     }
 

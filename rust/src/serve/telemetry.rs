@@ -1310,6 +1310,55 @@ impl Telemetry {
         }
     }
 
+    /// How many more ticks may end before the current window rolls over
+    /// (always >= 1): the event engine's lookahead bound for the next
+    /// telemetry window edge.
+    pub(crate) fn ticks_until_window_edge(&self) -> u64 {
+        self.ticks_per_window - (self.total_ticks % self.ticks_per_window)
+    }
+
+    /// Fold `n` all-idle ticks in one step. Exactly equivalent to `n`
+    /// [`Telemetry::end_tick`] calls with zero demands and grants, no
+    /// busy or queued chips, and empty per-tick event buffers: each such
+    /// call adds one tick to the window, one `down_ticks` per down chip,
+    /// one `degraded_ticks` per degraded stream, a zero sample to the
+    /// offered-bytes histogram, and re-sets the live-streams gauge (a
+    /// last-value gauge, so `n` sets collapse to one). Idle spans are
+    /// always cut at window edges ([`Telemetry::ticks_until_window_edge`]),
+    /// so no rollover can hide inside the batch — the debug assertions
+    /// enforce both invariants.
+    pub(crate) fn idle_ticks(&mut self, n: u64, down: &[bool], degraded: &[bool]) {
+        if n == 0 {
+            return;
+        }
+        debug_assert!(
+            (self.total_ticks % self.ticks_per_window) + n < self.ticks_per_window,
+            "idle span may not cross a telemetry window edge"
+        );
+        debug_assert!(
+            self.tick_adapt.is_empty()
+                && self.tick_admission.is_empty()
+                && self.tick_sheds.is_empty()
+                && self.tick_dispatch.is_empty()
+                && self.tick_complete.is_empty(),
+            "idle ticks carry no events"
+        );
+        self.cur.ticks += n;
+        for (c, &d) in down.iter().enumerate() {
+            if d {
+                self.cur.per_chip[c].down_ticks += n;
+            }
+        }
+        for (s, &deg) in degraded.iter().enumerate() {
+            if deg {
+                self.cur.per_stream[s].degraded_ticks += n;
+            }
+        }
+        self.hub.observe_n("bus.tick_offered_kb", 0, n);
+        self.hub.set("fleet.live_streams", self.live_streams);
+        self.total_ticks += n;
+    }
+
     /// Close the run: flush the partial window, run the incident
     /// detector, merge the saturation crossings into the log, and fold
     /// the run totals into the hub.

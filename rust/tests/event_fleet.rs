@@ -1,0 +1,236 @@
+//! Event-engine acceptance pins: the discrete-event fleet engine
+//! (`FleetSim::run_event`, selected with `Engine::Event`) must be a
+//! byte-identical replacement for the serial per-tick oracle — stats
+//! digest, report text, JSON document and exported Chrome trace — on
+//! every bundled preset across seeds, on sampled fleets spanning
+//! under- and over-load, on churn-heavy custom scenarios whose idle
+//! gaps force far-calendar scheduling and multi-tick jumps, and on a
+//! reduced slice of the metro-scale preset the event engine exists to
+//! serve. Reruns of the event engine itself must also be stable.
+
+use rcnet_dla::serve::{
+    run_fleet, AdmissionPolicy, ChipSpec, Engine, FleetConfig, FleetReport, ModelId, QosClass,
+    Scenario, StreamScript, StreamSpec, PRESET_NAMES,
+};
+
+fn preset_cfg(name: &str, seed: u64, engine: Engine) -> FleetConfig {
+    // 2 s spans rush-hour's whole churn window (same choice as
+    // tests/scenario_fleet.rs), so arrivals, departures, faults and
+    // QoS downshifts all fire mid-run under both engines.
+    FleetConfig {
+        seconds: 2.0,
+        seed,
+        engine,
+        ..FleetConfig::new(Scenario::preset(name).expect("bundled preset"))
+    }
+}
+
+/// Byte-identity oracle shared with `tests/scenario_fleet.rs`: digest
+/// plus both human-facing documents.
+fn assert_identical(a: &FleetReport, b: &FleetReport, what: &str) {
+    assert_eq!(a.stats_digest(), b.stats_digest(), "stats digest diverged: {what}");
+    assert_eq!(a.to_string(), b.to_string(), "report text diverged: {what}");
+    assert_eq!(
+        a.to_json().to_string(),
+        b.to_json().to_string(),
+        "json document diverged: {what}"
+    );
+}
+
+/// The headline pin: every bundled preset, two seeds — the event
+/// engine's report AND its exported Chrome trace byte-match the serial
+/// reference, and an event-engine rerun reproduces its own bytes.
+#[test]
+fn every_preset_is_byte_identical_event_vs_serial() {
+    for name in PRESET_NAMES {
+        for seed in [1u64, 7] {
+            let serial = run_fleet(&preset_cfg(name, seed, Engine::Tick)).expect("serial run");
+            assert!(serial.released() > 0, "{name} seed {seed} released nothing");
+            let event = run_fleet(&preset_cfg(name, seed, Engine::Event)).expect("event run");
+            assert_identical(&serial, &event, &format!("{name}, seed {seed}, event engine"));
+
+            let stel = serial.telemetry.as_ref().expect("telemetry on by default");
+            let etel = event.telemetry.as_ref().expect("telemetry on in event engine");
+            assert_eq!(
+                stel.incidents, etel.incidents,
+                "{name} seed {seed}: incident lists diverged"
+            );
+            assert_eq!(
+                stel.to_chrome_json(name).to_string(),
+                etel.to_chrome_json(name).to_string(),
+                "{name} seed {seed}: chrome trace diverged"
+            );
+
+            let again = run_fleet(&preset_cfg(name, seed, Engine::Event)).expect("event rerun");
+            assert_eq!(
+                event.to_json().to_string(),
+                again.to_json().to_string(),
+                "{name} seed {seed}: event rerun json diverged"
+            );
+        }
+    }
+}
+
+/// Property sweep over sampled fleets: stream counts from trivially
+/// idle to heavily oversubscribed, several seeds, and both admission
+/// policies. Overload engages expiry, overflow shedding and dispatch
+/// backpressure — the phases where the event engine's heap order must
+/// reproduce the serial ready-queue scan exactly.
+#[test]
+fn sampled_fleets_are_identical_across_load_levels() {
+    for &(streams, chips) in &[(1usize, 1usize), (6, 2), (24, 4), (64, 8)] {
+        for seed in [1u64, 5, 11] {
+            for policy in [
+                AdmissionPolicy::AdmitAll,
+                AdmissionPolicy::DemandLimit { oversub: 2.0 },
+            ] {
+                let base = FleetConfig {
+                    seconds: 1.0,
+                    admission: policy,
+                    ..FleetConfig::sampled(streams, chips, seed)
+                };
+                let serial = run_fleet(&base).expect("serial run");
+                let event = run_fleet(&FleetConfig { engine: Engine::Event, ..base.clone() })
+                    .expect("event run");
+                assert_identical(
+                    &serial,
+                    &event,
+                    &format!("sampled {streams}x{chips} seed {seed} {policy:?}"),
+                );
+            }
+        }
+    }
+}
+
+/// Far-calendar and jump coverage: streams whose release periods are
+/// far longer than the 256-slot near ring (1-4 fps at a 1 ms tick),
+/// plus churn that arrives and departs deep inside the run. Between
+/// releases the fleet is provably inert, so the event engine jumps
+/// hundreds of ticks at a time — and must still land on the serial
+/// bytes, QoS-window and telemetry-window edges included.
+#[test]
+fn sparse_streams_with_far_gaps_match_through_idle_jumps() {
+    let spec = |fps: f64| StreamSpec {
+        hw: (416, 416),
+        target_fps: fps,
+        qos: QosClass::Silver,
+    };
+    let scenario = Scenario {
+        name: "sparse-far".into(),
+        chips: vec![ChipSpec::paper(); 2],
+        streams: vec![
+            StreamScript::steady(spec(1.0), ModelId::Deployed),
+            StreamScript::steady(spec(2.0), ModelId::Deployed),
+            // Arrives late and leaves: both edges land mid-jump range.
+            StreamScript {
+                spec: spec(4.0),
+                model: ModelId::Deployed,
+                arrival_ms: 777.0,
+                departure_ms: Some(2_111.0),
+            },
+            // Arrives 1 ms before the end of a 3 s run: the wheel entry
+            // seeds but the run ends before anything completes.
+            StreamScript {
+                spec: spec(1.0),
+                model: ModelId::Deployed,
+                arrival_ms: 2_999.0,
+                departure_ms: None,
+            },
+        ],
+        faults: Vec::new(),
+        standby: Vec::new(),
+    };
+    let base = FleetConfig { seconds: 3.0, ..FleetConfig::new(scenario) };
+    let serial = run_fleet(&base).expect("serial run");
+    let event =
+        run_fleet(&FleetConfig { engine: Engine::Event, ..base }).expect("event run");
+    assert_identical(&serial, &event, "sparse far-gap scenario");
+    assert!(serial.released() > 0, "the sparse streams still release frames");
+}
+
+/// Contention identity: a pool too small for its gold-heavy demand, so
+/// every tick mixes dispatch backpressure, deadline expiry and
+/// overflow shedding. There are no idle spans to jump — this pins the
+/// hot-path replay alone.
+#[test]
+fn saturated_pool_is_identical_with_no_idle_spans() {
+    let mut streams = Vec::new();
+    for i in 0..12 {
+        streams.push(StreamScript::steady(
+            StreamSpec {
+                hw: if i % 3 == 0 { (720, 1280) } else { (416, 416) },
+                target_fps: 30.0,
+                qos: if i % 2 == 0 { QosClass::Gold } else { QosClass::Bronze },
+            },
+            ModelId::Deployed,
+        ));
+    }
+    let scenario = Scenario {
+        name: "saturated".into(),
+        chips: vec![ChipSpec::edge(); 2],
+        streams,
+        faults: Vec::new(),
+        standby: Vec::new(),
+    };
+    let base = FleetConfig {
+        seconds: 1.0,
+        admission: AdmissionPolicy::AdmitAll,
+        ..FleetConfig::new(scenario)
+    };
+    let serial = run_fleet(&base).expect("serial run");
+    let event =
+        run_fleet(&FleetConfig { engine: Engine::Event, ..base }).expect("event run");
+    assert_identical(&serial, &event, "saturated pool");
+    let shed: u64 = serial.per_stream.iter().map(|s| s.shed).sum();
+    assert!(shed > 0, "the scenario must actually shed to exercise those phases");
+}
+
+/// The metro slice: a reduced span of the 100k-stream preset the event
+/// engine was built for. The full-span run lives in the bench family
+/// (`BENCH_metro.json`); here a 0.3 s slice pins digest, books and the
+/// Chrome trace against the serial oracle inside the test suite.
+#[test]
+fn metro_slice_matches_the_serial_oracle() {
+    let base = FleetConfig {
+        seconds: 0.3,
+        ..FleetConfig::new(Scenario::preset("metro").expect("metro preset"))
+    };
+    let serial = run_fleet(&base).expect("serial metro slice");
+    let event = run_fleet(&FleetConfig { engine: Engine::Event, ..base })
+        .expect("event metro slice");
+    assert_eq!(
+        serial.stats_digest(),
+        event.stats_digest(),
+        "metro slice: digest diverged"
+    );
+    assert_eq!(serial.released(), event.released(), "metro slice: releases diverged");
+    assert_eq!(serial.rejected, event.rejected, "metro slice: admission diverged");
+    let stel = serial.telemetry.as_ref().expect("telemetry on by default");
+    let etel = event.telemetry.as_ref().expect("telemetry on in event engine");
+    assert_eq!(
+        stel.to_chrome_json("metro").to_string(),
+        etel.to_chrome_json("metro").to_string(),
+        "metro slice: chrome trace diverged"
+    );
+    assert!(serial.released() > 0, "the slice does real work");
+    assert!(
+        serial.per_stream.len() > 100_000,
+        "metro really is metro-scale ({} streams)",
+        serial.per_stream.len()
+    );
+}
+
+/// The engine knob round-trips through the builder and `Engine::parse`
+/// exactly as the CLI uses it.
+#[test]
+fn engine_knob_round_trips() {
+    assert_eq!(Engine::parse("tick"), Some(Engine::Tick));
+    assert_eq!(Engine::parse("event"), Some(Engine::Event));
+    assert_eq!(Engine::parse("warp"), None);
+    assert_eq!(Engine::Event.name(), "event");
+    let cfg = rcnet_dla::serve::FleetConfigBuilder::new(Scenario::sampled(4, 2, 1))
+        .engine(Engine::Event)
+        .build()
+        .expect("builder accepts the engine knob");
+    assert_eq!(cfg.engine, Engine::Event);
+}
