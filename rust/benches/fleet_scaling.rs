@@ -4,12 +4,15 @@
 //! carries, p99 climbs toward the deadline and shed/miss rates take over.
 //!
 //! A second sweep scales the *scripted population* instead of the load:
-//! 1k / 10k / 100k streams replayed by the per-tick engine and by the
-//! discrete-event engine ([`rcnet_dla::serve::event`]). Both must land
-//! on the same stats digest (the byte-identity contract); the point of
-//! the table is the wall-clock ratio, which grows with population
-//! because the tick engine scans every scripted stream every tick while
-//! the wheel touches only the due ones.
+//! 1k / 10k / 100k streams replayed by the per-tick engine, by the
+//! discrete-event engine ([`rcnet_dla::serve::event`]) and by the
+//! sharded discrete-event engine ([`rcnet_dla::serve::event_sharded`],
+//! one release wheel per worker). All three must land on the same stats
+//! digest (the byte-identity contract); the point of the table is the
+//! wall-clock ratios, which grow with population because the tick
+//! engine scans every scripted stream every tick while the wheels touch
+//! only the due ones — and the sharded wheels split that work across
+//! cores.
 
 #[path = "common.rs"]
 mod common;
@@ -61,13 +64,25 @@ fn main() {
         let _ = run_fleet(&cfg(64));
     });
 
-    // Population scaling: tick vs event engine at 1k / 10k sampled
-    // streams and the 100k+ metro preset, telemetry off so the table
-    // times the bare engines. Spans shrink as the population grows to
-    // keep the tick reference affordable; the digest assert holds the
-    // identity contract on every point.
-    let mut t = TableBuilder::new("event-wheel scaling — tick vs event engine, digest-identical")
-        .header(&["point", "streams", "sec", "released", "tick (s)", "event (s)", "speedup"]);
+    // Population scaling: tick vs event vs sharded-event engine at
+    // 1k / 10k sampled streams and the 100k+ metro preset, telemetry
+    // off so the table times the bare engines. Spans shrink as the
+    // population grows to keep the tick reference affordable; the
+    // digest asserts hold the identity contract on every point.
+    let mut t = TableBuilder::new(
+        "event-wheel scaling — tick vs event vs sharded engine, digest-identical",
+    )
+    .header(&[
+        "point",
+        "streams",
+        "sec",
+        "released",
+        "tick (s)",
+        "event (s)",
+        "sharded (s)",
+        "speedup",
+        "shard spd",
+    ]);
     let points: Vec<(String, FleetConfig)> = vec![
         (
             "sampled-1k".into(),
@@ -102,10 +117,23 @@ fn main() {
         let event =
             run_fleet(&FleetConfig { engine: Engine::Event, ..base.clone() }).expect("event run");
         let event_s = t1.elapsed().as_secs_f64();
+        let t2 = Instant::now();
+        let sharded = run_fleet(&FleetConfig {
+            engine: Engine::EventSharded,
+            threads: 0, // one worker per core
+            ..base.clone()
+        })
+        .expect("sharded event run");
+        let sharded_s = t2.elapsed().as_secs_f64();
         assert_eq!(
             tick.stats_digest(),
             event.stats_digest(),
             "{name}: event engine diverged from the tick oracle"
+        );
+        assert_eq!(
+            tick.stats_digest(),
+            sharded.stats_digest(),
+            "{name}: sharded event engine diverged from the tick oracle"
         );
         t.row(vec![
             name,
@@ -114,7 +142,9 @@ fn main() {
             format!("{}", tick.released()),
             format!("{tick_s:.2}"),
             format!("{event_s:.2}"),
+            format!("{sharded_s:.2}"),
             format!("x{:.1}", tick_s / event_s.max(1e-9)),
+            format!("x{:.1}", event_s / sharded_s.max(1e-9)),
         ]);
     }
     println!("{}", t.render());

@@ -983,6 +983,54 @@ pub fn metro_report(profile: BenchProfile) -> Result<BenchReport> {
         fingerprint: String::new(),
         metrics: Vec::new(),
     });
+
+    // The same full span through the sharded wheels (one release wheel
+    // per core): the headline scaling point for `Engine::EventSharded`.
+    // Identity is enforced here too — the sharded digest must byte-match
+    // the single-wheel run above or the whole family bails. The
+    // events/sec and speedup quotients are wall-derived and therefore
+    // context (Info), like every machine-dependent number; the gated
+    // channel stays each row's own wall_ms.
+    let workers = resolve_threads(0);
+    let sharded_cfg =
+        FleetConfig { engine: Engine::EventSharded, threads: 0, ..full.clone() };
+    let ssim = FleetSim::new(&sharded_cfg)?;
+    let (sr, sharded_wall_ms) = time_ms(|| ssim.run_event_sharded(workers));
+    if sr.stats_digest() != r.stats_digest() {
+        crate::bail!("sharded event engine diverged from the single wheel on the metro span");
+    }
+    let sharded_events = sr.released() + sr.completed();
+    let mut metrics = fleet_metrics(&sr, seconds);
+    metrics.push(Metric {
+        name: "events".into(),
+        value: sharded_events as f64,
+        better: Direction::Info,
+    });
+    metrics.push(Metric {
+        name: "events_per_s".into(),
+        value: sharded_events as f64 / (sharded_wall_ms.max(1e-9) / 1e3),
+        better: Direction::Info,
+    });
+    metrics.push(Metric {
+        name: "workers".into(),
+        value: workers as f64,
+        better: Direction::Info,
+    });
+    metrics.push(Metric {
+        name: "speedup_vs_event".into(),
+        value: wall_ms / sharded_wall_ms.max(1e-9),
+        better: Direction::Info,
+    });
+    rep.measurements.push(Measurement {
+        id: format!("metro/{point}/engine=event-sharded"),
+        wall_ms: sharded_wall_ms,
+        fingerprint: fingerprint_hex([
+            fnv1a("metro".bytes().map(u64::from)),
+            seconds.to_bits(),
+            sr.stats_digest(),
+        ]),
+        metrics,
+    });
     Ok(rep)
 }
 

@@ -78,9 +78,13 @@
 //! discrete-event engine ([`serve::event`]) — frame releases on a
 //! hierarchical event wheel, provably-inert tick spans jumped in one
 //! step, still byte-identical — built for metro-scale scenarios like
-//! the 112k-stream `metro` preset. The timeline also scripts
+//! the 112k-stream `metro` preset; and
+//! [`serve::Engine::EventSharded`] ([`serve::event_sharded`]) runs one
+//! wheel per worker over contiguous shards, hot ticks barrier-merged
+//! on the main thread, byte-identical for any worker count. The
+//! timeline also scripts
 //! chip faults ([`serve::FaultEvent`]: outages, DRAM-link throttles,
-//! thermal derates) that both engines replay at event boundaries —
+//! thermal derates) that every engine replays at event boundaries —
 //! in-flight frames are requeued, never dropped — while the
 //! [`serve::qos`] controller downshifts non-gold streams along
 //! pre-priced ladders of cheaper operating points under sustained bus

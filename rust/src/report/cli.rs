@@ -15,7 +15,9 @@
 //!   `--scenario` picks a bundled preset — churn, multi-model,
 //!   heterogeneous pool, the metro-scale `metro` — `--threads` selects
 //!   the serial or sharded-parallel tick engine, `--engine event` the
-//!   discrete-event engine, `--json` emits the deterministic report
+//!   discrete-event engine, `--engine event-sharded` its multi-worker
+//!   sibling (one release wheel per worker, `--threads` workers),
+//!   `--json` emits the deterministic report
 //!   document CI byte-diffs, `--telemetry PATH` writes the run's
 //!   fleet-level Chrome trace + windowed series + incidents, and
 //!   `--no-telemetry` skips the hub entirely)
@@ -26,7 +28,9 @@
 //!   / `BENCH_trace.json` / `BENCH_serve_scenario.json` /
 //!   `BENCH_fault.json` / `BENCH_telemetry.json` /
 //!   `BENCH_pipeline.json` / `BENCH_metro.json` and optionally gates
-//!   against a baseline (nonzero exit on regression)
+//!   against a baseline (nonzero exit on regression);
+//!   `--emit-baseline` refreshes the committed baselines in one
+//!   ungated command (docs/BENCHMARKS.md, "Baseline lifecycle")
 //! * `serve`      — run the detection pipeline on synthetic frames
 //!   (requires `make artifacts` and the `pjrt` feature)
 
@@ -92,14 +96,14 @@ USAGE:
                       [--streams N] [--chips N] [--bus-mbps MB] [--seconds S]
                       [--seed K] [--oversub F | --admit-all]
                       [--planner greedy|optimal-dp] [--threads N]
-                      [--engine tick|event] [--json] [--out PATH]
+                      [--engine tick|event|event-sharded] [--json] [--out PATH]
                       [--telemetry PATH | --no-telemetry] [--window-ms W]
   rcnet-dla obs       [--scenario steady-hd|rush-hour|mixed-zoo|hetero-pool|
                        diurnal-load|flash-crowd|chip-failure|pipeline-giant]
                       [--seconds S] [--seed K] [--threads N] [--window-ms W]
                       [--csv] [--out PATH]
   rcnet-dla bench     [--quick] [--out-dir DIR] [--against PATH]
-                      [--tolerance F]
+                      [--tolerance F] [--emit-baseline]
   rcnet-dla serve     [--manifest artifacts/manifest.json] [--frames N]
   rcnet-dla ablation  [--net yolov2|deeplabv3|vgg16]
 
@@ -115,7 +119,10 @@ per core, N = N workers; output is byte-identical across engines.
 `fleet --engine`: tick (default) replays every tick; event runs the
 discrete-event engine — same report, byte for byte, but metro-scale
 scenarios (100k+ scripted streams) finish in tolerable time. The event
-engine is single-threaded, so --engine event ignores --threads.
+engine is single-threaded, so --engine event ignores --threads;
+event-sharded runs one release wheel per worker (--threads workers,
+0 = one per core; 1 is rejected — use event) with hot ticks barrier-
+merged on the main thread, still byte-identical.
 `fleet --json` prints the deterministic report document (stats digest
 included) to stdout or --out (--out implies --json); CI byte-diffs two
 such runs. Preset scenarios fix their own pool, so --scenario rejects
@@ -129,7 +136,10 @@ engines and repeated runs. `--no-telemetry` disables the metrics hub
 aligned table, or CSV under --csv.
 `bench --against` accepts a report file (BENCH_fleet.json) or a
 directory holding the committed baselines; exits nonzero on regression
-past --tolerance (default 0.15).
+past --tolerance (default 0.15). `bench --emit-baseline` runs the suite
+and writes fresh committed baselines in one ungated command (conflicts
+with --against; run it from the reference runner class — see
+docs/BENCHMARKS.md, \"Baseline lifecycle\").
 ";
 
 /// Entry point used by `main.rs`.
@@ -436,7 +446,7 @@ fn fleet(flags: &HashMap<String, String>) -> Result<()> {
     }
     if let Some(s) = flags.get("engine") {
         let engine = Engine::parse(s)
-            .ok_or_else(|| crate::err!("unknown --engine {s} (tick|event)"))?;
+            .ok_or_else(|| crate::err!("unknown --engine {s} (tick|event|event-sharded)"))?;
         b = b.engine(engine);
     }
     if flags.contains_key("admit-all") {
@@ -580,6 +590,17 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
     let tolerance: f64 =
         flags.get("tolerance").and_then(|s| s.parse().ok()).unwrap_or(0.15);
     let out_dir = flags.get("out-dir").map_or_else(default_bench_dir, PathBuf::from);
+    // --emit-baseline: refresh the committed baselines in one command.
+    // A fresh baseline is by definition not gated, so combining it with
+    // --against would either no-op the gate or gate a run against the
+    // files it is about to replace — reject the combination outright.
+    let emit_baseline = flags.contains_key("emit-baseline");
+    if emit_baseline && flags.contains_key("against") {
+        crate::bail!(
+            "--emit-baseline conflicts with --against: a baseline refresh is \
+             ungated (drop --against, or gate first and refresh after)"
+        );
+    }
 
     eprintln!("bench: running the {} fleet workloads...", profile.name());
     let fleet = fleet_report(profile)?;
@@ -659,6 +680,15 @@ fn bench(flags: &HashMap<String, String>) -> Result<()> {
         out_dir.join("BENCH_pipeline.json").display(),
         out_dir.join("BENCH_metro.json").display()
     );
+    if emit_baseline {
+        eprintln!(
+            "bench: baselines refreshed under {} — review the diff and commit the \
+             BENCH_*.json files so the CI perf-smoke gate compares against this \
+             machine's numbers (wall-time gates only make sense when CI runs on \
+             the same runner class; see docs/BENCHMARKS.md, \"Baseline lifecycle\")",
+            out_dir.display()
+        );
+    }
 
     if !broken_baselines.is_empty() {
         crate::bail!(

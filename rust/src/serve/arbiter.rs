@@ -97,8 +97,9 @@ impl BusArbiter {
     /// [`BusArbiter::arbitrate`] calls with all-zero demands: those only
     /// bump the offered-tick count (zero offered bytes never raise the
     /// peak, trip the saturation predicate, or change the granted-byte
-    /// sum), which is what lets the event engine jump idle spans without
-    /// perturbing utilization, saturation or peak-demand accounting.
+    /// sum), which is what lets the event engines — single-wheel and
+    /// sharded — jump idle spans without perturbing utilization,
+    /// saturation or peak-demand accounting.
     pub fn idle_ticks(&mut self, n: u64) {
         self.offered_ticks += n;
     }

@@ -88,7 +88,7 @@ use super::telemetry::ShedCause;
 /// the default 1 ms tick: several frame periods at every supported
 /// rate, so steady-state reschedules stay in the ring and the far
 /// calendar only sees cold starts and long-phase stragglers.
-const WHEEL_SLOTS: usize = 256;
+pub(crate) const WHEEL_SLOTS: usize = 256;
 
 /// Hierarchical release wheel: the calendar queue holding each
 /// stream's next-release tick.
@@ -99,7 +99,13 @@ const WHEEL_SLOTS: usize = 256;
 ///   re-scheduled only when its entry fires while the stream is live);
 /// * ring slot `t % 256` holds entries for virtual tick `t` only,
 ///   for `t` in `[horizon, horizon + 256)`; later ticks live in `far`.
-struct ReleaseWheel {
+///
+/// Shared with the sharded event engine ([`super::event_sharded`]),
+/// where each worker owns one wheel over its *local* stream indices —
+/// contiguous shards make local ascending order equal global ascending
+/// order, so the per-shard firing order composes back into this
+/// engine's canonical (tick, stream id) order.
+pub(crate) struct ReleaseWheel {
     /// The near ring: one bucket per tick in the current window.
     slots: Vec<Vec<usize>>,
     /// First tick the ring covers; advanced by [`ReleaseWheel::take_due`].
@@ -111,7 +117,7 @@ struct ReleaseWheel {
 }
 
 impl ReleaseWheel {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         ReleaseWheel {
             slots: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
             horizon: 0,
@@ -126,7 +132,7 @@ impl ReleaseWheel {
     }
 
     /// Schedule `stream`'s next release at absolute `tick`.
-    fn schedule(&mut self, tick: u64, stream: usize) {
+    pub(crate) fn schedule(&mut self, tick: u64, stream: usize) {
         debug_assert!(tick >= self.horizon, "release scheduled in the past");
         if tick < self.span() {
             self.slots[(tick % WHEEL_SLOTS as u64) as usize].push(stream);
@@ -139,7 +145,7 @@ impl ReleaseWheel {
     /// First occupied tick at or after the horizon — the engine's
     /// release lookahead. O(256) worst case over the ring, O(1) into
     /// the far calendar.
-    fn next_tick(&self) -> Option<u64> {
+    pub(crate) fn next_tick(&self) -> Option<u64> {
         if self.near > 0 {
             for t in self.horizon..self.span() {
                 if !self.slots[(t % WHEEL_SLOTS as u64) as usize].is_empty() {
@@ -156,7 +162,7 @@ impl ReleaseWheel {
     /// engine's phase-2 scan order), and advance the horizon to
     /// `tick + 1`. Slot capacity is kept, so steady-state draining
     /// allocates nothing.
-    fn take_due(&mut self, tick: u64, due: &mut Vec<usize>) {
+    pub(crate) fn take_due(&mut self, tick: u64, due: &mut Vec<usize>) {
         due.clear();
         if tick + 1 >= self.span() {
             // The whole ring is due: drain every slot once instead of
@@ -198,7 +204,7 @@ impl ReleaseWheel {
 /// cast lands within one tick; the fixup loops make the boundary exact
 /// under f64 rounding (an `at_ms` that is an exact tick multiple must
 /// fire *on* that tick, not one later).
-fn tick_for(at_ms: f64, tick_ms: f64) -> u64 {
+pub(crate) fn tick_for(at_ms: f64, tick_ms: f64) -> u64 {
     let mut t = (at_ms / tick_ms).ceil().max(0.0) as u64;
     while (t as f64) * tick_ms < at_ms {
         t += 1;
@@ -605,6 +611,136 @@ mod tests {
         wheel.take_due(20_000, &mut due);
         assert_eq!(due, vec![1, 2, 4], "nothing is lost across a long jump");
         assert_eq!(wheel.next_tick(), None);
+    }
+
+    /// Satellite pin (lookahead soundness): the idle-jump horizon never
+    /// crosses a tick at which the shared-bus grant, the QoS verdict,
+    /// or the admission state changes. Instead of batching a computed
+    /// jump, this replica of the engine loop *executes* every folded
+    /// tick and asserts it is observably inert — zero bus demand and
+    /// grant, no release/shed/completion, no admission transition, no
+    /// pending QoS decision — then cross-checks the final report
+    /// against the serial oracle byte for byte (a folded tick that the
+    /// batch primitives mis-summarized would diverge here).
+    #[test]
+    fn jump_horizons_never_cross_observable_changes() {
+        use crate::serve::Scenario;
+
+        // Random sampled scenarios (seeded mixes) plus two presets with
+        // scripted churn and faults, so all five event sources bound at
+        // least one jump somewhere.
+        let mut cases: Vec<FleetConfig> = (1..=3)
+            .map(|seed| FleetConfig { seconds: 1.0, ..FleetConfig::sampled(24, 4, seed) })
+            .collect();
+        for name in ["rush-hour", "chip-failure"] {
+            let scenario = Scenario::preset(name).expect("bundled preset");
+            cases.push(FleetConfig { seconds: 1.0, ..FleetConfig::new(scenario) });
+        }
+
+        let mut multi_tick_jumps = 0u64;
+        for cfg in cases {
+            let serial = run_fleet(&cfg).expect("serial oracle");
+
+            let mut sim = FleetSim::new(&cfg).expect("event sim");
+            let tick_ms = cfg.tick_ms;
+            let ticks = (cfg.seconds * 1e3 / tick_ms).round().max(1.0) as u64;
+            let mut wheel = ReleaseWheel::new();
+            for s in &sim.streams {
+                wheel.schedule(tick_for(s.next_release_ms, tick_ms), s.id);
+            }
+            let mut heap: BinaryHeap<EdfTask> = BinaryHeap::new();
+            let mut due: Vec<usize> = Vec::new();
+            let mut released: Vec<FrameTask> = Vec::new();
+
+            let mut k = 0u64;
+            while k < ticks {
+                sim.step_event(k, k as f64 * tick_ms, &mut wheel, &mut heap, &mut due, &mut released);
+                let next = k + 1;
+                if next >= ticks {
+                    break;
+                }
+                if !heap.is_empty()
+                    || sim.fleet.workers.iter().any(|w| !w.is_idle())
+                    || sim.adaptive.has_pending()
+                {
+                    k = next;
+                    continue;
+                }
+                // The engine's own jump target: the five-way min.
+                let mut target = ticks;
+                if let Some(t) = wheel.next_tick() {
+                    target = target.min(t);
+                }
+                if let Some(ms) = sim.admission.next_event_ms() {
+                    target = target.min(tick_for(ms, tick_ms));
+                }
+                if let Some(ms) = sim.adaptive.next_timeline_ms() {
+                    target = target.min(tick_for(ms, tick_ms));
+                }
+                target = target.min(k + sim.adaptive.controller.ticks_until_boundary());
+                if let Some(tel) = sim.telemetry.as_ref() {
+                    target = target.min(k + tel.ticks_until_window_edge());
+                }
+                let target = target.max(next);
+                if target > next {
+                    multi_tick_jumps += 1;
+                }
+                // Execute the span the engine would fold; every tick in
+                // it must be observably inert.
+                for j in next..target {
+                    let released_before: u64 = sim.stats.iter().map(|s| s.released).sum();
+                    let shed_before: u64 = sim.stats.iter().map(|s| s.shed).sum();
+                    let done_before: u64 = sim.stats.iter().map(|s| s.completed()).sum();
+                    let refused_before = sim.admission.refused_ids.len();
+                    let rejected_before = sim.admission.rejected;
+                    let live_before = sim.streams.iter().filter(|s| s.active).count();
+                    sim.step_event(
+                        j,
+                        j as f64 * tick_ms,
+                        &mut wheel,
+                        &mut heap,
+                        &mut due,
+                        &mut released,
+                    );
+                    let released_after: u64 = sim.stats.iter().map(|s| s.released).sum();
+                    let shed_after: u64 = sim.stats.iter().map(|s| s.shed).sum();
+                    let done_after: u64 = sim.stats.iter().map(|s| s.completed()).sum();
+                    assert_eq!(released_before, released_after, "release inside a jump at {j}");
+                    assert_eq!(shed_before, shed_after, "shed inside a jump at {j}");
+                    assert_eq!(done_before, done_after, "completion inside a jump at {j}");
+                    assert!(heap.is_empty(), "frame queued inside a jump at {j}");
+                    assert!(
+                        sim.fleet.workers.iter().all(|w| w.is_idle()),
+                        "chip went busy inside a jump at {j}"
+                    );
+                    assert!(
+                        sim.scratch.demands.iter().all(|&d| d == 0.0)
+                            && sim.scratch.grants.iter().all(|&g| g == 0.0),
+                        "shared-bus grant changed inside a jump at {j}"
+                    );
+                    assert_eq!(
+                        (refused_before, rejected_before),
+                        (sim.admission.refused_ids.len(), sim.admission.rejected),
+                        "admission state changed inside a jump at {j}"
+                    );
+                    assert_eq!(
+                        live_before,
+                        sim.streams.iter().filter(|s| s.active).count(),
+                        "stream liveness changed inside a jump at {j}"
+                    );
+                    assert!(
+                        !sim.adaptive.has_pending(),
+                        "QoS verdict fired inside a jump at {j}"
+                    );
+                }
+                k = target;
+            }
+            let replayed = sim.finish(ticks);
+            assert_eq!(replayed.stats_digest(), serial.stats_digest(), "{}", cfg.scenario.name);
+            assert_eq!(replayed.to_json().to_string(), serial.to_json().to_string());
+            assert_eq!(replayed.to_string(), serial.to_string());
+        }
+        assert!(multi_tick_jumps > 0, "vacuous property: no multi-tick horizon was ever chosen");
     }
 
     /// The engine-level identity on a churning sampled workload; the

@@ -1,0 +1,521 @@
+//! The sharded discrete-event fleet engine.
+//!
+//! [`super::event`] removed the per-tick release scan but still replays
+//! every hot tick on one core; [`super::parallel`] shards the per-tick
+//! work across threads but replays every tick, busy or not. This engine
+//! composes the two: each worker owns a contiguous stream+chip shard
+//! *and* its own [`ReleaseWheel`] (256-slot near ring + far calendar)
+//! over the shard's local stream indices, hot ticks run the parallel
+//! engine's three fork/join barrier rounds, and provably-inert tick
+//! spans are jumped in one step on the main thread.
+//!
+//! ## Shard layout
+//!
+//! Shards are contiguous in global stream/chip id ([`Shard`], the
+//! parallel engine's construction), so each worker's wheel firing order
+//! — ascending local index within a tick — composes back into the
+//! single-wheel engine's canonical (tick, stream id) order when the
+//! main thread merges release responses in shard order. Each worker
+//! seeds its own wheel on startup, so metro-scale wheel population
+//! parallelizes with everything else.
+//!
+//! ## The lookahead horizon
+//!
+//! How far can a shard run ahead before another shard's state can
+//! change its outcome? The coupling is the shared DRAM bus: every tick
+//! with work in flight water-fills the pool-wide budget across chips,
+//! each chip's demand first capped by its own per-chip link rate — so
+//! any tick where *any* chip is busy can change *every* chip's grant.
+//! The conservative horizon is therefore exactly the bound the
+//! single-wheel engine's idle-jump logic already uses:
+//!
+//! * a tick with work in flight (frames queued centrally, any chip
+//!   busy, an adaptive decision pending) is a **one-tick horizon** —
+//!   it is replayed in full, with a fork/join barrier at each of the
+//!   three rounds (release → dispatch+demand → advance) so the
+//!   water-filling arbiter, the QoS controller and the telemetry flush
+//!   run on the main thread in canonical order;
+//! * a span where nothing is in flight is **inert for every shard at
+//!   once** — the main thread jumps it with the same batch primitives
+//!   the single-wheel engine uses ([`super::arbiter::BusArbiter::idle_ticks`],
+//!   [`super::qos::QosController::advance_idle`],
+//!   [`super::telemetry::Telemetry::idle_ticks`]), without waking the
+//!   workers at all. The wheels hold absolute ticks, so the next
+//!   release command's `take_due` drains across the jump unchanged.
+//!
+//! The jump target is the same five-way `min` as the single-wheel
+//! engine's, with one difference: the wheel lookahead is the `min` over
+//! the per-worker wheels' next occupied ticks, each piggybacked on the
+//! worker's release response ([`Rsp::Released`]). A shard's wheel only
+//! mutates inside its release command, so the piggybacked value stays
+//! exact until the next hot tick — no extra message round, and
+//! per-worker bus demands already batch into one message per barrier
+//! ([`Rsp::Demands`]).
+//!
+//! ## The identity contract
+//!
+//! For one [`super::FleetConfig`] this engine's [`FleetReport`] — stats
+//! digest, report text/JSON, telemetry down to the Chrome-trace export
+//! — is **byte-identical** to the serial tick oracle's, for any worker
+//! count (pinned across every preset × seeds × {2, 3, 8} workers by
+//! `tests/sharded_event_fleet.rs`). The argument is the conjunction of
+//! the two parent proofs: hot ticks are exactly [`super::parallel`]'s
+//! barrier-merged ticks (identical multisets + total orders + main-
+//! thread arbitration in global chip order), idle jumps are exactly
+//! [`super::event`]'s batch-primitive spans (only ticks whose effects
+//! are provably independent of being batched), and the wheel firing
+//! order composes shard-locally as above.
+//!
+//! The engine is selected with `engine = event-sharded` and `threads`
+//! workers (`0` = one per core; `1` is rejected at validation — a
+//! single shard is just [`super::event`], which the engine also falls
+//! back to when the pool or population leaves nothing to shard).
+
+use std::collections::BinaryHeap;
+use std::sync::mpsc;
+
+use super::event::{tick_for, ReleaseWheel};
+use super::fleet::ChipDirective;
+use super::parallel::{pick_mirror, worker_loop, ChipMirror, Cmd, EdfTask, Rsp, Shard};
+use super::scheduler::{assemble_report, shed_order, FleetSim};
+use super::stats::FleetReport;
+use super::stream::{FrameCost, FrameTask, StreamSpec};
+use super::telemetry::ShedCause;
+
+impl FleetSim {
+    /// Run the configured span on `threads` workers, each owning a
+    /// stream+chip shard with its own release wheel, and produce the
+    /// report — byte-identical to [`FleetSim::run`] (see the module
+    /// docs for why). Falls back to the single-wheel event engine when
+    /// one worker (or an empty pool) leaves nothing to shard.
+    pub fn run_event_sharded(self, threads: usize) -> FleetReport {
+        let shard_count = threads.min(self.fleet.workers.len().max(self.streams.len())).max(1);
+        if shard_count <= 1 {
+            return self.run_event();
+        }
+        debug_assert!(self.ready.is_empty(), "run_event_sharded on a started sim");
+
+        let cfg = self.cfg;
+        // Capability bound + initial availability (standby chips start
+        // down) per chip, in global order, for the mirror.
+        let chip_init: Vec<(Option<u64>, bool)> =
+            self.fleet.workers.iter().map(|w| (w.spec.max_pixels, w.down)).collect();
+        let chips = self.fleet.workers.len();
+        let total_streams = self.streams.len();
+        let mut stats = self.stats;
+        let mut arbiter = self.arbiter;
+        let mut admission = self.admission;
+        let mut adaptive = self.adaptive;
+        // Telemetry records on the main thread only, in the serial
+        // engine's hook order — what keeps it byte-identical.
+        let mut telemetry = self.telemetry;
+        let routes = self.routes;
+
+        // Contiguous shards: worker order == global stream/chip order.
+        // Each shard gets an empty wheel; the worker thread seeds it
+        // from its own streams before the first command.
+        let chip_chunk = chips.div_ceil(shard_count).max(1);
+        let stream_chunk = total_streams.div_ceil(shard_count).max(1);
+        let mut shards: Vec<Shard> = Vec::with_capacity(shard_count);
+        {
+            let mut chips_left = self.fleet.workers;
+            let mut streams_left = self.streams;
+            for _ in 0..shard_count {
+                let take_c = chip_chunk.min(chips_left.len());
+                let take_s = stream_chunk.min(streams_left.len());
+                shards.push(Shard {
+                    streams: streams_left.drain(..take_s).collect(),
+                    chips: chips_left.drain(..take_c).collect(),
+                    wheel: Some(ReleaseWheel::new()),
+                    tick_ms: cfg.tick_ms,
+                });
+            }
+            debug_assert!(chips_left.is_empty() && streams_left.is_empty());
+        }
+        let shard_chips: Vec<usize> = shards.iter().map(|s| s.chips.len()).collect();
+        // Global chip index -> (worker, local index).
+        let mut chip_owner: Vec<(usize, usize)> = Vec::with_capacity(chips);
+        for (wi, &n) in shard_chips.iter().enumerate() {
+            for li in 0..n {
+                chip_owner.push((wi, li));
+            }
+        }
+
+        let depth = cfg.queue_depth.max(1);
+        let ticks = (cfg.seconds * 1e3 / cfg.tick_ms).round().max(1.0) as u64;
+        let max_ready = cfg.max_ready_per_stream * total_streams.max(1);
+
+        let busy: u64 = std::thread::scope(|scope| {
+            let mut cmd_tx: Vec<mpsc::Sender<Cmd>> = Vec::with_capacity(shard_count);
+            let mut rsp_rx: Vec<mpsc::Receiver<Rsp>> = Vec::with_capacity(shard_count);
+            for shard in shards {
+                let (ctx, crx) = mpsc::channel();
+                let (rtx, rrx) = mpsc::channel();
+                scope.spawn(move || worker_loop(shard, crx, rtx));
+                cmd_tx.push(ctx);
+                rsp_rx.push(rrx);
+            }
+
+            let mut heap: BinaryHeap<EdfTask> = BinaryHeap::new();
+            let mut mirror: Vec<ChipMirror> = chip_init
+                .iter()
+                .map(|&(max_pixels, down)| ChipMirror {
+                    depth,
+                    queued: 0,
+                    active: false,
+                    down,
+                    max_pixels,
+                })
+                .collect();
+            // Reusable hot-tick buffers, plus the per-worker wheel
+            // lookaheads (refreshed at every release barrier) and the
+            // constant-over-the-span flag buffers for telemetry jumps.
+            let mut demands: Vec<f64> = Vec::with_capacity(chips);
+            let mut grants: Vec<f64> = Vec::with_capacity(chips);
+            let mut chip_states: Vec<(bool, u32, bool)> = Vec::with_capacity(chips);
+            let mut degraded: Vec<bool> = Vec::with_capacity(total_streams);
+            let mut lookaheads: Vec<Option<u64>> = vec![None; shard_count];
+            let mut idle_down: Vec<bool> = Vec::new();
+            let mut idle_degraded: Vec<bool> = Vec::new();
+
+            let mut k = 0u64;
+            while k < ticks {
+                let now_ms = k as f64 * cfg.tick_ms;
+
+                // ---- Hot tick: the parallel engine's barrier rounds. ----
+
+                // 0. Due fault directives and the adaptive layer's
+                // window-boundary decisions, routed to the owning shards
+                // and replayed onto the mirror now.
+                let mut directives: Vec<Vec<(usize, ChipDirective)>> =
+                    vec![Vec::new(); shard_count];
+                for (g, d) in adaptive.due_directives(now_ms) {
+                    mirror[g].apply(d);
+                    if let Some(tel) = telemetry.as_mut() {
+                        tel.on_chip_directive(k, g, d.code());
+                    }
+                    let (wi, li) = chip_owner[g];
+                    directives[wi].push((li, d));
+                }
+                let mut points: Vec<Vec<(usize, StreamSpec, FrameCost)>> =
+                    vec![Vec::new(); shard_count];
+                for (i, rung) in adaptive.take_rungs() {
+                    let (spec, cost) = adaptive.ladders[i][usize::from(rung)];
+                    if let Some(tel) = telemetry.as_mut() {
+                        tel.on_rung_change(k, i, rung);
+                    }
+                    points[i / stream_chunk].push((i % stream_chunk, spec, cost));
+                }
+
+                // 1+2. Timeline events on the main thread, then wheel
+                // releases on the workers: each shard fires only its due
+                // streams and reports its wheel's next occupied tick.
+                let refused_base = admission.refused_ids.len();
+                let global_toggles = admission.step(now_ms, &mut stats);
+                adaptive.apply_toggles(&global_toggles);
+                if let Some(tel) = telemetry.as_mut() {
+                    tel.on_admission(k, &global_toggles, &admission.refused_ids[refused_base..]);
+                }
+                let mut toggles: Vec<Vec<(usize, bool)>> = vec![Vec::new(); shard_count];
+                for (g, live) in global_toggles {
+                    toggles[g / stream_chunk].push((g % stream_chunk, live));
+                }
+                let cmds = directives.into_iter().zip(points).zip(toggles);
+                for (tx, ((d, p), t)) in cmd_tx.iter().zip(cmds) {
+                    tx.send(Cmd::Release { tick: k, now_ms, directives: d, points: p, toggles: t })
+                        .expect("fleet worker hung up");
+                }
+                for (wi, rx) in rsp_rx.iter().enumerate() {
+                    match rx.recv().expect("fleet worker hung up") {
+                        Rsp::Released { drained, released, lookahead } => {
+                            lookaheads[wi] = lookahead;
+                            for t in drained {
+                                heap.push(EdfTask(t)); // requeued, already counted
+                            }
+                            for t in released {
+                                stats[t.stream].released += 1;
+                                if let Some(tel) = telemetry.as_mut() {
+                                    tel.on_release(t.stream);
+                                }
+                                heap.push(EdfTask(t));
+                            }
+                        }
+                        _ => unreachable!("protocol: expected Released"),
+                    }
+                }
+
+                // 3a. Expiry shedding: expired frames sit at the front.
+                while let Some(front) = heap.peek() {
+                    if front.0.deadline_ms > now_ms {
+                        break;
+                    }
+                    let t = heap.pop().expect("peeked entry").0;
+                    stats[t.stream].shed += 1;
+                    if let Some(tel) = telemetry.as_mut() {
+                        tel.on_shed(t.stream, t.seq, ShedCause::Expired);
+                    }
+                }
+
+                // 3b. Bounded central queue: drop the worst in shed order.
+                if heap.len() > max_ready {
+                    let mut v: Vec<FrameTask> =
+                        std::mem::take(&mut heap).into_iter().map(|e| e.0).collect();
+                    v.sort_by(shed_order);
+                    let excess = v.len() - max_ready;
+                    for t in v.drain(..excess) {
+                        stats[t.stream].shed += 1;
+                        if let Some(tel) = telemetry.as_mut() {
+                            tel.on_shed(t.stream, t.seq, ShedCause::Overflow);
+                        }
+                    }
+                    heap = v.into_iter().map(EdfTask).collect();
+                }
+
+                // 4. Strict-EDF dispatch against the capability-aware
+                // occupancy mirror — the parallel engine's phase 4
+                // verbatim, pipeline pinning included.
+                let mut dispatches: Vec<Vec<(usize, FrameTask)>> = vec![Vec::new(); shard_count];
+                while let Some(front) = heap.peek() {
+                    let pixels = front.0.pixels;
+                    if let Some(route) = &routes[front.0.stream] {
+                        let stage = usize::from(front.0.stage);
+                        let pinned = route.placement.as_ref().map(|p| p.chip_for_stage(stage));
+                        let usable = pinned.is_some_and(|c| mirror[c].up_and_serves(pixels));
+                        if !usable {
+                            let t = heap.pop().expect("peeked entry").0;
+                            stats[t.stream].shed += 1;
+                            if let Some(tel) = telemetry.as_mut() {
+                                tel.on_shed(t.stream, t.seq, ShedCause::Unservable);
+                            }
+                            continue;
+                        }
+                        let g = pinned.expect("usable implies a pinned chip");
+                        if !mirror[g].has_room() {
+                            break;
+                        }
+                        let t = heap.pop().expect("peeked entry").0;
+                        mirror[g].queued += 1;
+                        if let Some(tel) = telemetry.as_mut() {
+                            tel.on_dispatch(k, t.stream, t.seq, g);
+                        }
+                        let (wi, li) = chip_owner[g];
+                        dispatches[wi].push((li, t));
+                        continue;
+                    }
+                    if !mirror.iter().any(|m| m.up_and_serves(pixels)) {
+                        let t = heap.pop().expect("peeked entry").0;
+                        stats[t.stream].shed += 1;
+                        if let Some(tel) = telemetry.as_mut() {
+                            tel.on_shed(t.stream, t.seq, ShedCause::Unservable);
+                        }
+                        continue;
+                    }
+                    let Some(g) = pick_mirror(&mirror, pixels) else { break };
+                    let t = heap.pop().expect("peeked entry").0;
+                    mirror[g].queued += 1;
+                    if let Some(tel) = telemetry.as_mut() {
+                        tel.on_dispatch(k, t.stream, t.seq, g);
+                    }
+                    let (wi, li) = chip_owner[g];
+                    dispatches[wi].push((li, t));
+                }
+
+                // 5. Apply dispatches, refill, collect the batched
+                // per-worker demand vectors, water-fill centrally.
+                for (tx, tasks) in cmd_tx.iter().zip(dispatches) {
+                    tx.send(Cmd::Dispatch { tasks }).expect("fleet worker hung up");
+                }
+                for m in &mut mirror {
+                    if !m.down && !m.active && m.queued > 0 {
+                        m.queued -= 1;
+                        m.active = true;
+                    }
+                }
+                chip_states.clear();
+                if telemetry.is_some() {
+                    chip_states.extend(mirror.iter().map(|m| (m.active, m.queued as u32, m.down)));
+                }
+                demands.clear();
+                for rx in &rsp_rx {
+                    match rx.recv().expect("fleet worker hung up") {
+                        Rsp::Demands(d) => demands.extend(d),
+                        _ => unreachable!("protocol: expected Demands"),
+                    }
+                }
+                arbiter.arbitrate_into(&demands, &mut grants);
+
+                // 6. Advance; merge completions in global chip order,
+                // pipeline hand-offs re-entering the heap in place.
+                let mut off = 0usize;
+                for (tx, &n) in cmd_tx.iter().zip(&shard_chips) {
+                    tx.send(Cmd::Advance { grants: grants[off..off + n].to_vec() })
+                        .expect("fleet worker hung up");
+                    off += n;
+                }
+                let mut base = 0usize;
+                for (rx, &n) in rsp_rx.iter().zip(&shard_chips) {
+                    match rx.recv().expect("fleet worker hung up") {
+                        Rsp::Completions(done) => {
+                            for (li, t) in done {
+                                mirror[base + li].active = false;
+                                let chip = base + li;
+                                let next_stage = usize::from(t.stage) + 1;
+                                let route = routes[t.stream]
+                                    .as_ref()
+                                    .filter(|r| next_stage < r.stage_costs.len());
+                                if let Some(r) = route {
+                                    if let Some(p) = stats[t.stream].pipeline.as_mut() {
+                                        p.handoffs += 1;
+                                    }
+                                    if let Some(tel) = telemetry.as_mut() {
+                                        let b = r.handoff_bytes;
+                                        tel.on_handoff(k, t.stream, t.seq, chip, b);
+                                    }
+                                    heap.push(EdfTask(FrameTask {
+                                        stage: next_stage as u8,
+                                        cost: r.stage_costs[next_stage],
+                                        ..t
+                                    }));
+                                    continue;
+                                }
+                                let latency_ms = now_ms + cfg.tick_ms - t.release_ms;
+                                let budget_ms = t.deadline_ms - t.release_ms;
+                                stats[t.stream].record_completion(latency_ms, budget_ms);
+                                if let Some(tel) = telemetry.as_mut() {
+                                    let missed = latency_ms > budget_ms;
+                                    tel.on_complete(k, t.stream, t.seq, chip, latency_ms, missed);
+                                }
+                            }
+                        }
+                        _ => unreachable!("protocol: expected Completions"),
+                    }
+                    base += n;
+                }
+                if let Some(tel) = telemetry.as_mut() {
+                    degraded.clear();
+                    degraded.extend((0..total_streams).map(|i| adaptive.degraded(i)));
+                    tel.end_tick(k, &demands, &grants, &chip_states, &degraded);
+                }
+
+                // 7. Fold the tick's bus-saturation bit.
+                let offered: f64 = demands.iter().sum();
+                adaptive.on_tick(offered > arbiter.budget_bytes_per_tick + 1e-9, &mut stats);
+
+                // ---- Idle-span jump: the event engine's lookahead. ----
+
+                let next = k + 1;
+                if next >= ticks {
+                    break;
+                }
+                // A tick that can do work is replayed in full: queued
+                // frames, busy chips and pending window decisions all
+                // depend on per-tick arbitration (the mirror's occupancy
+                // replays the chips' exactly, so this predicate equals
+                // the single-wheel engine's worker scan).
+                if !heap.is_empty()
+                    || mirror.iter().any(|m| !m.is_idle())
+                    || adaptive.has_pending()
+                {
+                    k = next;
+                    continue;
+                }
+                // Nothing in flight anywhere: the next hot tick is the
+                // earliest of the five event sources (or the end of the
+                // run), with the wheel lookahead now a min over the
+                // per-worker values piggybacked on the release barrier.
+                let mut target = ticks;
+                for la in lookaheads.iter().flatten() {
+                    target = target.min(*la);
+                }
+                if let Some(ms) = admission.next_event_ms() {
+                    target = target.min(tick_for(ms, cfg.tick_ms));
+                }
+                if let Some(ms) = adaptive.next_timeline_ms() {
+                    target = target.min(tick_for(ms, cfg.tick_ms));
+                }
+                target = target.min(k + adaptive.controller.ticks_until_boundary());
+                if let Some(tel) = telemetry.as_ref() {
+                    target = target.min(k + tel.ticks_until_window_edge());
+                }
+                let target = target.max(next);
+                if target > next {
+                    // Ticks `next .. target` are provably inert for
+                    // every shard at once: account them in one step on
+                    // the main thread, workers left blocked on their
+                    // channels. The batch primitives are exactly
+                    // equivalent to replaying the span (their proofs
+                    // live with the single-wheel engine).
+                    let n = target - next;
+                    arbiter.idle_ticks(n);
+                    adaptive.controller.advance_idle(n);
+                    if telemetry.is_some() {
+                        idle_down.clear();
+                        idle_down.extend(mirror.iter().map(|m| m.down));
+                        idle_degraded.clear();
+                        idle_degraded.extend((0..total_streams).map(|i| adaptive.degraded(i)));
+                        if let Some(tel) = telemetry.as_mut() {
+                            tel.idle_ticks(n, &idle_down, &idle_degraded);
+                        }
+                    }
+                }
+                k = target;
+            }
+
+            for tx in &cmd_tx {
+                tx.send(Cmd::Finish).expect("fleet worker hung up");
+            }
+            let mut busy = 0u64;
+            for rx in &rsp_rx {
+                match rx.recv().expect("fleet worker hung up") {
+                    Rsp::Done { busy_ticks } => busy += busy_ticks,
+                    _ => unreachable!("protocol: expected Done"),
+                }
+            }
+            busy
+        });
+
+        assemble_report(&cfg, stats, &admission, &arbiter, &adaptive, telemetry, busy, ticks, chips)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::serve::{run_fleet, Engine, FleetConfig};
+
+    /// The engine-level identity on a churning sampled workload across
+    /// worker counts; the full preset x seed x workers sweep lives in
+    /// `tests/sharded_event_fleet.rs`.
+    #[test]
+    fn sharded_event_engine_matches_serial_digest_on_a_small_fleet() {
+        let base = FleetConfig { seconds: 1.0, ..FleetConfig::sampled(12, 4, 7) };
+        let serial = run_fleet(&base).expect("serial run");
+        for workers in [2, 3, 8] {
+            let sharded = run_fleet(&FleetConfig {
+                engine: Engine::EventSharded,
+                threads: workers,
+                ..base.clone()
+            })
+            .expect("sharded event run");
+            assert_eq!(serial.stats_digest(), sharded.stats_digest(), "{workers} workers");
+            assert_eq!(serial.released(), sharded.released());
+            assert_eq!(serial.rejected, sharded.rejected);
+        }
+    }
+
+    /// One worker leaves nothing to shard: the engine must fall back to
+    /// the single-wheel event engine rather than spin up a degenerate
+    /// barrier loop. (threads = 1 is rejected at validation; a
+    /// one-chip, one-stream pool with threads = 8 still shards to 1.)
+    #[test]
+    fn degenerate_pools_fall_back_to_the_single_wheel() {
+        let base = FleetConfig { seconds: 0.5, ..FleetConfig::sampled(1, 1, 3) };
+        let serial = run_fleet(&base).expect("serial run");
+        let sharded = run_fleet(&FleetConfig {
+            engine: Engine::EventSharded,
+            threads: 8,
+            ..base
+        })
+        .expect("sharded event run");
+        assert_eq!(serial.stats_digest(), sharded.stats_digest());
+    }
+}

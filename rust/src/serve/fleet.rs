@@ -173,6 +173,9 @@ impl ChipWorker {
     }
 
     /// Idle and nothing queued: a dispatched frame starts this tick.
+    /// Also half the event engines' idle-jump predicate — a span is
+    /// only jumpable while every chip reports idle (the sharded engine
+    /// reads the same predicate off its main-thread chip mirrors).
     pub fn is_idle(&self) -> bool {
         self.active.is_none() && self.queued == 0
     }

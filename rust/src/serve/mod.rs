@@ -64,8 +64,16 @@
 //!   releases on a hierarchical event wheel, arrivals/faults/window
 //!   edges looked ahead from engine state, and provably-inert tick
 //!   spans advanced in one step — byte-identical to the serial engine,
-//!   telemetry included, and the only engine that finishes the
-//!   metro-scale (100k+ stream) preset in bench-tolerable time.
+//!   telemetry included, and (with [`event_sharded`]) the engines that
+//!   finish the metro-scale (100k+ stream) preset in bench-tolerable
+//!   time.
+//! * [`event_sharded`] — the sharded discrete-event engine
+//!   ([`Engine::EventSharded`]): one release wheel per worker over its
+//!   contiguous stream+chip shard, hot ticks barrier-merged through the
+//!   parallel engine's protocol (arbitration, QoS and telemetry on the
+//!   main thread in canonical order), inert spans jumped without waking
+//!   the workers — byte-identical to the serial tick oracle for any
+//!   worker count.
 //! * [`fleet`] — the chip pool; bounded mpsc dispatch queues whose
 //!   `try_send` failures are the backpressure signal; capability-aware
 //!   worker choice for heterogeneous pools.
@@ -99,6 +107,7 @@
 
 pub mod arbiter;
 pub mod event;
+pub mod event_sharded;
 pub mod fleet;
 pub mod parallel;
 pub mod placement;

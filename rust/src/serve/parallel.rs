@@ -75,11 +75,12 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::sync::mpsc;
 
+use super::event::{tick_for, ReleaseWheel};
 use super::fleet::{ChipDirective, ChipWorker};
 use super::scheduler::{edf_order, shed_order, FleetSim};
 use super::stats::FleetReport;
 use super::stream::{FrameCost, FrameTask, Stream, StreamSpec};
-use super::telemetry::{ShedCause, Telemetry};
+use super::telemetry::ShedCause;
 
 /// Resolve a [`super::FleetConfig::threads`] request to a worker count:
 /// `0` means one worker per available core; anything else is taken
@@ -122,20 +123,23 @@ impl Ord for EdfTask {
 /// replaying the three deterministic transitions — dispatch
 /// (`queued += 1`), the once-per-tick refill (`queued -= 1`, busy), and
 /// completion (idle) — so dispatch decisions never need to ask the
-/// worker threads anything.
-struct ChipMirror {
-    depth: usize,
-    queued: usize,
-    active: bool,
-    down: bool,
-    max_pixels: Option<u64>,
+/// worker threads anything. Shared with the sharded event engine
+/// ([`super::event_sharded`]), whose idle-jump predicate additionally
+/// reads [`ChipMirror::is_idle`] in place of the serial engine's
+/// `ChipWorker::is_idle` scan.
+pub(crate) struct ChipMirror {
+    pub(crate) depth: usize,
+    pub(crate) queued: usize,
+    pub(crate) active: bool,
+    pub(crate) down: bool,
+    pub(crate) max_pixels: Option<u64>,
 }
 
 impl ChipMirror {
-    fn is_idle(&self) -> bool {
+    pub(crate) fn is_idle(&self) -> bool {
         !self.active && self.queued == 0
     }
-    fn has_room(&self) -> bool {
+    pub(crate) fn has_room(&self) -> bool {
         self.queued < self.depth
     }
     fn can_serve(&self, pixels: u64) -> bool {
@@ -146,12 +150,12 @@ impl ChipMirror {
     }
     /// The serial `pick_worker` availability predicate: down chips
     /// (faulted, or standby not yet raised) never take dispatches.
-    fn up_and_serves(&self, pixels: u64) -> bool {
+    pub(crate) fn up_and_serves(&self, pixels: u64) -> bool {
         !self.down && self.can_serve(pixels)
     }
     /// Replay a phase-0 directive's mirror-visible transition: `Down`
     /// drains the remote chip, so its mirrored occupancy zeroes with it.
-    fn apply(&mut self, directive: ChipDirective) {
+    pub(crate) fn apply(&mut self, directive: ChipDirective) {
         match directive {
             ChipDirective::Up => self.down = false,
             ChipDirective::Down => {
@@ -167,27 +171,52 @@ impl ChipMirror {
 /// The serial `Fleet::pick_worker` scan, replayed over the mirror: first
 /// capable *up* idle chip (frame starts this tick), else first capable
 /// up chip with queue room.
-fn pick_mirror(mirror: &[ChipMirror], pixels: u64) -> Option<usize> {
+pub(crate) fn pick_mirror(mirror: &[ChipMirror], pixels: u64) -> Option<usize> {
     mirror
         .iter()
         .position(|m| m.up_and_serves(pixels) && m.is_idle())
         .or_else(|| mirror.iter().position(|m| m.up_and_serves(pixels) && m.has_room()))
 }
 
-/// One worker's owned state: contiguous stream and chip shards.
-struct Shard {
-    streams: Vec<Stream>,
-    chips: Vec<ChipWorker>,
+/// One worker's owned state: contiguous stream and chip shards, plus —
+/// for the sharded event engine ([`super::event_sharded`]) — a private
+/// [`ReleaseWheel`] over the stream shard's *local* indices. The tick
+/// engine leaves the wheel `None` and scans its whole shard every
+/// release command (every tick is replayed anyway); the event engine
+/// touches only the due streams.
+pub(crate) struct Shard {
+    pub(crate) streams: Vec<Stream>,
+    pub(crate) chips: Vec<ChipWorker>,
+    /// `Some`: wheel-based release (sharded event engine). Entries hold
+    /// local stream indices; built by the worker thread itself on
+    /// startup, so metro-scale wheel population parallelizes too.
+    pub(crate) wheel: Option<ReleaseWheel>,
+    /// Virtual tick length, for rescheduling fired wheel entries.
+    pub(crate) tick_ms: f64,
 }
 
-/// Per-tick commands, each answered by exactly one [`Rsp`].
-enum Cmd {
+impl Shard {
+    /// A scan-release shard (the tick engine's worker state).
+    pub(crate) fn scanned(streams: Vec<Stream>, chips: Vec<ChipWorker>) -> Self {
+        Shard { streams, chips, wheel: None, tick_ms: 0.0 }
+    }
+}
+
+/// Per-tick commands, each answered by exactly one [`Rsp`]. Shared by
+/// the sharded tick engine (this module) and the sharded event engine
+/// ([`super::event_sharded`]); the latter sends one command triple per
+/// *executed* tick only, with jumped inert spans folded on the main
+/// thread between them.
+pub(crate) enum Cmd {
     /// Phase 0 + 1 + 2, in serial phase order: apply due chip directives
     /// (local chip index — a `Down` drains the chip back to the caller),
     /// swap streams onto new operating points (local stream index), then
     /// the tick's liveness transitions (local stream index, live) in
     /// order, then release due frames from this worker's streams.
     Release {
+        /// Absolute virtual tick (drives wheel-based shards; scan-based
+        /// shards release on `now_ms` alone).
+        tick: u64,
         now_ms: f64,
         directives: Vec<(usize, ChipDirective)>,
         points: Vec<(usize, StreamSpec, FrameCost)>,
@@ -203,13 +232,20 @@ enum Cmd {
 }
 
 /// Worker responses, in 1:1 correspondence with [`Cmd`].
-enum Rsp {
+pub(crate) enum Rsp {
     /// `drained`: frames handed back by downed/retired chips (requeued,
     /// never dropped — already counted released when first released).
     /// `released`: new frames, in stream-id-then-seq order within the
-    /// shard.
-    Released { drained: Vec<FrameTask>, released: Vec<FrameTask> },
-    /// Per-chip outstanding DRAM demand, in local chip order.
+    /// shard. `lookahead`: the shard wheel's first occupied tick after
+    /// this release round (`None` for scan shards, and for wheel shards
+    /// whose wheel has emptied for good) — piggybacked here so the
+    /// sharded event engine's idle-jump target needs no extra message
+    /// round: the wheel only ever changes inside a release command, so
+    /// the value stays exact until the next one.
+    Released { drained: Vec<FrameTask>, released: Vec<FrameTask>, lookahead: Option<u64> },
+    /// Per-chip outstanding DRAM demand, in local chip order — one
+    /// batched message per worker per arbitration round, never
+    /// per-frame sends.
     Demands(Vec<f64>),
     /// Completed frames as (local chip index, frame), in chip order.
     Completions(Vec<(usize, FrameTask)>),
@@ -217,10 +253,19 @@ enum Rsp {
     Done { busy_ticks: u64 },
 }
 
-fn worker_loop(mut shard: Shard, rx: mpsc::Receiver<Cmd>, tx: mpsc::Sender<Rsp>) {
+pub(crate) fn worker_loop(mut shard: Shard, rx: mpsc::Receiver<Cmd>, tx: mpsc::Sender<Rsp>) {
+    // Wheel shards self-schedule on startup: local index order, one
+    // entry per stream at its first release tick — exactly how the
+    // single-wheel engine seeds its global wheel.
+    if let Some(wheel) = shard.wheel.as_mut() {
+        for (li, s) in shard.streams.iter().enumerate() {
+            wheel.schedule(tick_for(s.next_release_ms, shard.tick_ms), li);
+        }
+    }
+    let mut due: Vec<usize> = Vec::new();
     while let Ok(cmd) = rx.recv() {
         let rsp = match cmd {
-            Cmd::Release { now_ms, directives, points, toggles } => {
+            Cmd::Release { tick, now_ms, directives, points, toggles } => {
                 let mut drained = Vec::new();
                 for (li, d) in directives {
                     drained.extend(shard.chips[li].apply(d));
@@ -232,10 +277,31 @@ fn worker_loop(mut shard: Shard, rx: mpsc::Receiver<Cmd>, tx: mpsc::Sender<Rsp>)
                     shard.streams[li].active = live;
                 }
                 let mut released = Vec::new();
-                for s in &mut shard.streams {
-                    s.release_into(now_ms, &mut released);
-                }
-                Rsp::Released { drained, released }
+                let lookahead = match shard.wheel.as_mut() {
+                    Some(wheel) => {
+                        // Only the due streams, in ascending local (==
+                        // shard-relative global) order; a fired entry
+                        // reschedules only while its stream is live, so
+                        // refused/departed streams drop off the wheel —
+                        // the single-wheel engine's rules verbatim.
+                        wheel.take_due(tick, &mut due);
+                        for &li in due.iter() {
+                            shard.streams[li].release_into(now_ms, &mut released);
+                            if shard.streams[li].active {
+                                let at = shard.streams[li].next_release_ms;
+                                wheel.schedule(tick_for(at, shard.tick_ms), li);
+                            }
+                        }
+                        wheel.next_tick()
+                    }
+                    None => {
+                        for s in &mut shard.streams {
+                            s.release_into(now_ms, &mut released);
+                        }
+                        None
+                    }
+                };
+                Rsp::Released { drained, released, lookahead }
             }
             Cmd::Dispatch { tasks } => {
                 for (i, t) in tasks {
@@ -313,10 +379,10 @@ impl FleetSim {
             for _ in 0..shard_count {
                 let take_c = chip_chunk.min(chips_left.len());
                 let take_s = stream_chunk.min(streams_left.len());
-                shards.push(Shard {
-                    chips: chips_left.drain(..take_c).collect(),
-                    streams: streams_left.drain(..take_s).collect(),
-                });
+                shards.push(Shard::scanned(
+                    streams_left.drain(..take_s).collect(),
+                    chips_left.drain(..take_c).collect(),
+                ));
             }
             debug_assert!(chips_left.is_empty() && streams_left.is_empty());
         }
@@ -409,12 +475,12 @@ impl FleetSim {
                 }
                 let cmds = directives.into_iter().zip(points).zip(toggles);
                 for (tx, ((d, p), t)) in cmd_tx.iter().zip(cmds) {
-                    tx.send(Cmd::Release { now_ms, directives: d, points: p, toggles: t })
+                    tx.send(Cmd::Release { tick: k, now_ms, directives: d, points: p, toggles: t })
                         .expect("fleet worker hung up");
                 }
                 for rx in &rsp_rx {
                     match rx.recv().expect("fleet worker hung up") {
-                        Rsp::Released { drained, released } => {
+                        Rsp::Released { drained, released, lookahead: _ } => {
                             for t in drained {
                                 heap.push(EdfTask(t)); // requeued, already counted
                             }
@@ -619,25 +685,9 @@ impl FleetSim {
             busy
         });
 
-        let end_ms = cfg.seconds * 1e3;
-        for (i, s) in stats.iter_mut().enumerate() {
-            s.refused = admission.outcome(i) == Some(false);
-            s.close(end_ms);
-        }
-        FleetReport {
-            scenario: cfg.scenario.name.clone(),
-            per_stream: stats,
-            rejected: admission.rejected,
-            chips,
-            bus_mbps: cfg.bus_mbps,
-            bus_utilization: arbiter.utilization(),
-            bus_saturation: arbiter.saturation(),
-            bus_peak_demand: arbiter.peak_demand_ratio(),
-            chip_utilization: busy as f64 / (ticks as f64 * chips.max(1) as f64),
-            qos_window_ms: adaptive.window_ms(cfg.tick_ms),
-            wall_s: cfg.seconds,
-            telemetry: telemetry.map(Telemetry::finish),
-        }
+        super::scheduler::assemble_report(
+            &cfg, stats, &admission, &arbiter, &adaptive, telemetry, busy, ticks, chips,
+        )
     }
 }
 

@@ -157,8 +157,9 @@ impl QosController {
     }
 
     /// How many more [`QosController::on_tick`] folds until a window
-    /// closes (always >= 1): the event engine's lookahead bound for the
-    /// next QoS window edge.
+    /// closes (always >= 1): the event engines' lookahead bound for the
+    /// next QoS window edge (the sharded engine takes the same bound on
+    /// its main thread).
     pub fn ticks_until_boundary(&self) -> u64 {
         self.ticks_per_window - self.tick_in_window
     }
@@ -166,7 +167,7 @@ impl QosController {
     /// Fold `n` unsaturated ticks that provably stay inside the current
     /// window. Exactly equivalent to `n` `on_tick(false)` calls when no
     /// boundary is crossed: each such call only advances the in-window
-    /// tick count. The event engine uses this to jump idle spans; spans
+    /// tick count. The event engines use this to jump idle spans; spans
     /// are always cut at window edges ([`QosController::ticks_until_boundary`]),
     /// which the debug assertion enforces.
     pub fn advance_idle(&mut self, n: u64) {

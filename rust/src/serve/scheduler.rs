@@ -127,14 +127,22 @@ pub enum Engine {
     /// metro-scale scenarios where most ticks touch only a sliver of
     /// the scripted stream population.
     Event,
+    /// The sharded discrete-event engine ([`super::event_sharded`]):
+    /// event-wheel releases and idle-span jumps like [`Engine::Event`],
+    /// but each worker thread owns a stream+chip shard with its own
+    /// wheel and the `threads` knob sets the worker count (`0` = one
+    /// per core; `1` is rejected by [`FleetConfig::validate`] — use
+    /// `event` for a single wheel).
+    EventSharded,
 }
 
 impl Engine {
-    /// Parse a CLI engine name (`tick` | `event`).
+    /// Parse a CLI engine name (`tick` | `event` | `event-sharded`).
     pub fn parse(s: &str) -> Option<Engine> {
         match s {
             "tick" => Some(Engine::Tick),
             "event" => Some(Engine::Event),
+            "event-sharded" => Some(Engine::EventSharded),
             _ => None,
         }
     }
@@ -144,6 +152,7 @@ impl Engine {
         match self {
             Engine::Tick => "tick",
             Engine::Event => "event",
+            Engine::EventSharded => "event-sharded",
         }
     }
 }
@@ -244,6 +253,11 @@ impl FleetConfig {
             self.telemetry.window_ms.is_finite() && self.telemetry.window_ms > 0.0,
             "telemetry window {} ms is not positive and finite",
             self.telemetry.window_ms
+        );
+        crate::ensure!(
+            !(self.engine == Engine::EventSharded && self.threads == 1),
+            "engine=event-sharded needs threads != 1 (0 = one worker per core); \
+             use engine=event for a single wheel"
         );
         self.scenario.validate()
     }
@@ -1451,22 +1465,67 @@ impl FleetSim {
     }
 }
 
+/// Assemble the final [`FleetReport`] from engine state the sharded
+/// engines ([`super::parallel`], [`super::event_sharded`]) move out of
+/// the sim before spawning workers: the same arithmetic, in the same
+/// order, as [`FleetSim::finish`], so every engine's report is
+/// assembled identically by construction.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn assemble_report(
+    cfg: &FleetConfig,
+    mut stats: Vec<StreamStats>,
+    admission: &AdmissionState,
+    arbiter: &BusArbiter,
+    adaptive: &AdaptiveState,
+    telemetry: Option<Telemetry>,
+    busy_ticks: u64,
+    ticks: u64,
+    chips: usize,
+) -> FleetReport {
+    let end_ms = cfg.seconds * 1e3;
+    for (i, s) in stats.iter_mut().enumerate() {
+        s.refused = admission.outcome(i) == Some(false);
+        s.close(end_ms);
+    }
+    FleetReport {
+        scenario: cfg.scenario.name.clone(),
+        per_stream: stats,
+        rejected: admission.rejected,
+        chips,
+        bus_mbps: cfg.bus_mbps,
+        bus_utilization: arbiter.utilization(),
+        bus_saturation: arbiter.saturation(),
+        bus_peak_demand: arbiter.peak_demand_ratio(),
+        chip_utilization: busy_ticks as f64 / (ticks as f64 * chips.max(1) as f64),
+        qos_window_ms: adaptive.window_ms(cfg.tick_ms),
+        wall_s: cfg.seconds,
+        telemetry: telemetry.map(Telemetry::finish),
+    }
+}
+
 /// Run the configured scenario. Validates the config, prices every
 /// operating point, then dispatches on `cfg.engine` and `cfg.threads`:
-/// the discrete-event engine when `cfg.engine` is [`Engine::Event`],
-/// else the serial reference engine at `threads == 1` or the sharded
-/// parallel engine otherwise — all with byte-identical output.
+/// the discrete-event engines when `cfg.engine` is [`Engine::Event`]
+/// (single wheel) or [`Engine::EventSharded`] (one wheel per worker,
+/// `threads` workers), else the serial reference engine at
+/// `threads == 1` or the sharded parallel tick engine otherwise — all
+/// with byte-identical output.
 pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
     let sim = FleetSim::new(cfg)?;
-    if cfg.engine == Engine::Event {
-        return Ok(sim.run_event());
-    }
-    let threads = super::parallel::resolve_threads(cfg.threads);
-    if threads <= 1 {
-        let mut sim = sim;
-        Ok(sim.run())
-    } else {
-        Ok(sim.run_parallel(threads))
+    match cfg.engine {
+        Engine::Event => Ok(sim.run_event()),
+        Engine::EventSharded => {
+            Ok(sim.run_event_sharded(super::parallel::resolve_threads(cfg.threads)))
+        }
+        Engine::Tick => {
+            let threads = super::parallel::resolve_threads(cfg.threads);
+            if threads <= 1 {
+                let mut sim = sim;
+                Ok(sim.run())
+            } else {
+                Ok(sim.run_parallel(threads))
+            }
+        }
     }
 }
 

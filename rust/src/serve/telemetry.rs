@@ -1311,8 +1311,9 @@ impl Telemetry {
     }
 
     /// How many more ticks may end before the current window rolls over
-    /// (always >= 1): the event engine's lookahead bound for the next
-    /// telemetry window edge.
+    /// (always >= 1): the event engines' lookahead bound for the next
+    /// telemetry window edge — the sharded engine folds it into the
+    /// same five-way min on its main thread.
     pub(crate) fn ticks_until_window_edge(&self) -> u64 {
         self.ticks_per_window - (self.total_ticks % self.ticks_per_window)
     }

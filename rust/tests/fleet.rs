@@ -4,8 +4,8 @@
 //! sheds / misses).
 
 use rcnet_dla::serve::{
-    run_fleet, run_fleet_with, AdmissionPolicy, FaultEvent, FaultKind, FleetConfig, FleetReport,
-    QosClass, Scenario, StreamSpec,
+    run_fleet, run_fleet_with, AdmissionPolicy, Engine, FaultEvent, FaultKind, FleetConfig,
+    FleetConfigBuilder, FleetReport, QosClass, Scenario, StreamSpec,
 };
 
 fn hd15(qos: QosClass) -> StreamSpec {
@@ -168,6 +168,52 @@ fn run_fleet_validates_its_config() {
     // The same guard covers explicit stream lists with bad specs.
     let bad_spec = StreamSpec { hw: (720, 1280), target_fps: 0.0, qos: QosClass::Gold };
     assert!(run_fleet_with(&good, &[bad_spec]).is_err(), "fps 0 must be rejected");
+}
+
+/// Satellite pin: the `--engine` knob's three names round-trip through
+/// `Engine::parse`/`Engine::name`, and anything else parses to `None`
+/// (the CLI turns that into an error listing the valid values).
+#[test]
+fn engine_knob_parses_all_three_engines() {
+    for (name, engine) in [
+        ("tick", Engine::Tick),
+        ("event", Engine::Event),
+        ("event-sharded", Engine::EventSharded),
+    ] {
+        assert_eq!(Engine::parse(name), Some(engine));
+        assert_eq!(engine.name(), name);
+    }
+    for bad in ["warp", "event_sharded", "sharded", "EVENT", ""] {
+        assert_eq!(Engine::parse(bad), None, "{bad:?} must not parse");
+    }
+}
+
+/// Satellite pin: `engine=event-sharded` with `threads=1` is a config
+/// error (a single shard is just the `event` engine — the validator
+/// says so instead of silently running the wrong engine), while
+/// `threads=0` (auto) and explicit multi-worker counts build and run.
+#[test]
+fn validate_rejects_event_sharded_on_one_thread() {
+    let base = FleetConfig { seconds: 0.5, ..FleetConfig::sampled(4, 2, 1) };
+
+    let bad = FleetConfig { engine: Engine::EventSharded, threads: 1, ..base.clone() };
+    assert!(bad.validate().is_err());
+    let err = run_fleet(&bad).expect_err("threads=1 must be rejected");
+    assert!(
+        err.to_string().contains("event-sharded"),
+        "the error must name the offending engine: {err}"
+    );
+
+    for threads in [0, 2, 8] {
+        let cfg = FleetConfigBuilder::new(base.scenario.clone())
+            .seconds(0.5)
+            .engine(Engine::EventSharded)
+            .threads(threads)
+            .build()
+            .unwrap_or_else(|e| panic!("threads={threads} must build: {e}"));
+        assert_eq!(cfg.engine, Engine::EventSharded);
+        run_fleet(&cfg).unwrap_or_else(|e| panic!("threads={threads} must run: {e}"));
+    }
 }
 
 /// Satellite pin: malformed fault scripts come back as crate errors from

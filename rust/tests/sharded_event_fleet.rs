@@ -1,0 +1,155 @@
+//! Sharded-event-engine acceptance pins: the sharded discrete-event
+//! fleet engine (`FleetSim::run_event_sharded`, selected with
+//! `Engine::EventSharded`) must be a byte-identical replacement for the
+//! serial per-tick oracle — stats digest, report text, JSON document
+//! and exported Chrome trace — on every bundled preset across seeds
+//! AND across worker counts {2, 3, 8} (shard boundaries land in
+//! different places each time), plus a reduced slice of the
+//! metro-scale preset. Reruns of the sharded engine must also be
+//! stable against themselves.
+
+use rcnet_dla::serve::{
+    run_fleet, AdmissionPolicy, Engine, FleetConfig, FleetReport, Scenario, PRESET_NAMES,
+};
+
+fn preset_cfg(name: &str, seed: u64, engine: Engine, threads: usize) -> FleetConfig {
+    // 2 s spans rush-hour's whole churn window (same choice as
+    // tests/event_fleet.rs), so arrivals, departures, faults and QoS
+    // downshifts all fire mid-run under every worker count.
+    FleetConfig {
+        seconds: 2.0,
+        seed,
+        engine,
+        threads,
+        ..FleetConfig::new(Scenario::preset(name).expect("bundled preset"))
+    }
+}
+
+/// Byte-identity oracle shared with `tests/event_fleet.rs`: digest plus
+/// both human-facing documents plus the exported Chrome trace.
+fn assert_identical(a: &FleetReport, b: &FleetReport, scenario: &str, what: &str) {
+    assert_eq!(a.stats_digest(), b.stats_digest(), "stats digest diverged: {what}");
+    assert_eq!(a.to_string(), b.to_string(), "report text diverged: {what}");
+    assert_eq!(
+        a.to_json().to_string(),
+        b.to_json().to_string(),
+        "json document diverged: {what}"
+    );
+    let at = a.telemetry.as_ref().expect("telemetry on by default");
+    let bt = b.telemetry.as_ref().expect("telemetry on in the sharded engine");
+    assert_eq!(at.incidents, bt.incidents, "incident lists diverged: {what}");
+    assert_eq!(
+        at.to_chrome_json(scenario).to_string(),
+        bt.to_chrome_json(scenario).to_string(),
+        "chrome trace diverged: {what}"
+    );
+}
+
+/// The headline pin: every bundled preset, two seeds, three worker
+/// counts — the sharded event engine's report AND its exported Chrome
+/// trace byte-match the serial reference. The serial oracle runs once
+/// per (preset, seed); each worker count is compared against it, and a
+/// rerun of one sharded count reproduces its own bytes.
+#[test]
+fn every_preset_is_byte_identical_sharded_vs_serial() {
+    for name in PRESET_NAMES {
+        for seed in [1u64, 7] {
+            let serial =
+                run_fleet(&preset_cfg(name, seed, Engine::Tick, 1)).expect("serial run");
+            assert!(serial.released() > 0, "{name} seed {seed} released nothing");
+            for workers in [2usize, 3, 8] {
+                let sharded =
+                    run_fleet(&preset_cfg(name, seed, Engine::EventSharded, workers))
+                        .expect("sharded event run");
+                assert_identical(
+                    &serial,
+                    &sharded,
+                    name,
+                    &format!("{name}, seed {seed}, {workers} workers"),
+                );
+            }
+            let again = run_fleet(&preset_cfg(name, seed, Engine::EventSharded, 3))
+                .expect("sharded event rerun");
+            assert_eq!(
+                serial.to_json().to_string(),
+                again.to_json().to_string(),
+                "{name} seed {seed}: sharded rerun json diverged"
+            );
+        }
+    }
+}
+
+/// Load-level sweep with more workers than chips and more chips than
+/// workers: shard shapes where some workers own zero chips (streams
+/// only) and where one worker owns several. Overload engages expiry,
+/// overflow shedding and dispatch backpressure — the phases where the
+/// central heap's order must reproduce the serial scan exactly.
+#[test]
+fn sampled_fleets_are_identical_across_shard_shapes() {
+    for &(streams, chips) in &[(6usize, 2usize), (24, 4), (64, 8)] {
+        for seed in [1u64, 11] {
+            for policy in [
+                AdmissionPolicy::AdmitAll,
+                AdmissionPolicy::DemandLimit { oversub: 2.0 },
+            ] {
+                let base = FleetConfig {
+                    seconds: 1.0,
+                    admission: policy,
+                    ..FleetConfig::sampled(streams, chips, seed)
+                };
+                let serial = run_fleet(&base).expect("serial run");
+                for workers in [2usize, 3, 8] {
+                    let sharded = run_fleet(&FleetConfig {
+                        engine: Engine::EventSharded,
+                        threads: workers,
+                        ..base.clone()
+                    })
+                    .expect("sharded event run");
+                    assert_identical(
+                        &serial,
+                        &sharded,
+                        &base.scenario.name,
+                        &format!(
+                            "sampled {streams}x{chips} seed {seed} {policy:?} \
+                             {workers} workers"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The metro slice: a reduced span of the 100k-stream preset, sharded.
+/// Two workers keeps the debug-mode cost bounded; the full-span sharded
+/// series lives in the bench family (`BENCH_metro.json`).
+#[test]
+fn metro_slice_matches_the_serial_oracle_sharded() {
+    let base = FleetConfig {
+        seconds: 0.3,
+        ..FleetConfig::new(Scenario::preset("metro").expect("metro preset"))
+    };
+    let serial = run_fleet(&base).expect("serial metro slice");
+    let sharded = run_fleet(&FleetConfig {
+        engine: Engine::EventSharded,
+        threads: 2,
+        ..base
+    })
+    .expect("sharded metro slice");
+    assert_eq!(serial.stats_digest(), sharded.stats_digest(), "metro slice: digest diverged");
+    assert_eq!(serial.released(), sharded.released(), "metro slice: releases diverged");
+    assert_eq!(serial.rejected, sharded.rejected, "metro slice: admission diverged");
+    let stel = serial.telemetry.as_ref().expect("telemetry on by default");
+    let etel = sharded.telemetry.as_ref().expect("telemetry on in the sharded engine");
+    assert_eq!(
+        stel.to_chrome_json("metro").to_string(),
+        etel.to_chrome_json("metro").to_string(),
+        "metro slice: chrome trace diverged"
+    );
+    assert!(serial.released() > 0, "the slice does real work");
+    assert!(
+        serial.per_stream.len() > 100_000,
+        "metro really is metro-scale ({} streams)",
+        serial.per_stream.len()
+    );
+}
